@@ -1,0 +1,66 @@
+//! Table-2 style distributed run: partition the stripe set over many
+//! simulated chips, time each in isolation, and compare the observed
+//! per-chip/aggregated split against the device models.
+//!
+//! ```bash
+//! cargo run --release --example distributed_chips [n_samples] [chips]
+//! ```
+
+use unifrac::coordinator::{run, BackendSpec, RunOptions};
+use unifrac::devicemodel::{predict_seconds, stage_workload, Dtype, V100, XEON_E5_2680V4};
+use unifrac::matrix::total_stripes;
+use unifrac::synth::SynthSpec;
+use unifrac::unifrac::{EngineKind, Metric};
+
+fn main() -> unifrac::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let chips: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let (tree, table) = SynthSpec::emp_like(n, 99).generate();
+    println!(
+        "workload: {} samples, {} tree nodes, {} chips",
+        table.n_samples(),
+        tree.n_nodes(),
+        chips
+    );
+
+    // sequential mode = isolated per-chip timing (the paper's Table 2 rows)
+    let opts = RunOptions {
+        metric: Metric::WeightedNormalized,
+        backend: BackendSpec::cpu_tiled(),
+        chips,
+        parallel: false,
+        artifacts_dir: None,
+        ..Default::default()
+    };
+    let seq = run::<f64>(&tree, &table, &opts)?;
+    println!("\nsequential (isolated chips):");
+    let per: &[f64] = &seq.metrics.per_chip_seconds;
+    let mean = per.iter().sum::<f64>() / per.len() as f64;
+    let max = seq.metrics.max_chip_seconds();
+    println!("  per-chip mean {:.3}s  max {:.3}s", mean, max);
+    println!("  aggregated    {:.3}s (the paper's chip-hours analogue)", seq.metrics.aggregate_chip_seconds());
+    let imbalance = max / mean;
+    println!("  load imbalance (max/mean) = {imbalance:.3}");
+
+    // parallel mode: actual wall-clock speedup on this host
+    let par = run::<f64>(&tree, &table, &RunOptions { parallel: true, ..opts.clone() })?;
+    println!("\nparallel (threaded chips):");
+    println!("  wall {:.3}s  vs sequential aggregate {:.3}s  => speedup {:.2}x",
+        par.metrics.seconds_total,
+        seq.metrics.aggregate_chip_seconds(),
+        seq.metrics.aggregate_chip_seconds() / par.metrics.seconds_total
+    );
+    assert!(par.dm.max_abs_diff(&seq.dm) < 1e-12, "parallel/sequential mismatch");
+
+    // device-model view of the same partitioning at paper scale
+    println!("\ndevice-model projection (113,721 samples, per the paper's Table 2):");
+    let (big_n, big_t) = (unifrac::devicemodel::BIG_N_SAMPLES, unifrac::devicemodel::BIG_TREE_NODES);
+    let w = stage_workload(EngineKind::Tiled, big_n, total_stripes(big_n), big_t, 64, Dtype::F64);
+    let cpu_h = predict_seconds(&XEON_E5_2680V4, &w, Dtype::F64) / 3600.0;
+    let gpu_h = predict_seconds(&V100, &w, Dtype::F64) / 3600.0;
+    println!("  128x E5-2680v4: per-chip {:.2}h aggregated {:.0}h (paper 6.9 / 890 — original code)", cpu_h / 128.0, cpu_h);
+    println!("  4x V100:        per-chip {:.2}h aggregated {:.1}h (paper 0.34 / 1.9)", gpu_h / 4.0, gpu_h);
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! End-to-end driver: the full three-layer stack on an EMP-shaped
+//! workload (DESIGN.md: the mandated e2e validation run).
+//!
+//! Pipeline exercised, in order:
+//!   1. synthetic EMP-like dataset (substitute for the EMP release);
+//!   2. Layer-3 embedding producer (postorder DP over the phylogeny);
+//!   3. the AOT Pallas stripe kernel (Layer 1) inside the jax stripe
+//!      graph (Layer 2), loaded from `artifacts/` and executed via PJRT
+//!      with device-resident accumulators;
+//!   4. stripe assembly -> condensed matrix;
+//!   5. cross-validation against the independent CPU engine and the
+//!      naive oracle;
+//!   6. downstream analysis (PCoA + PERMANOVA), the end product a
+//!      microbiome study actually consumes.
+//!
+//! Results of this run are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example emp_endtoend
+//! ```
+
+use unifrac::coordinator::{run, BackendSpec, RunOptions};
+use unifrac::stats::{mantel, pcoa, permanova};
+use unifrac::synth::SynthSpec;
+use unifrac::unifrac::{compute_unifrac, compute_unifrac_naive, ComputeOptions, Metric};
+
+fn main() -> unifrac::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("UNIFRAC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // EMP-shaped workload at the PJRT production chunk width (N=256).
+    let n = 250; // deliberately not a power of two: exercises padding
+    let (tree, table) = SynthSpec::emp_like(n, 2026).generate();
+    println!(
+        "== workload: {} samples x {} features (density {:.4}), {} tree nodes",
+        table.n_samples(),
+        table.n_features(),
+        table.density(),
+        tree.n_nodes()
+    );
+
+    let metric = Metric::WeightedNormalized;
+
+    // --- full stack through PJRT (pallas kernel artifact, resident) ---
+    let t0 = std::time::Instant::now();
+    let out = run::<f64>(
+        &tree,
+        &table,
+        &RunOptions {
+            metric,
+            backend: BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: true },
+            artifacts_dir: Some(artifacts.clone()),
+            ..Default::default()
+        },
+    )?;
+    let pjrt_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "== PJRT/pallas run: {:.2}s wall, artifact {}, {} embeddings in {} batches, {:.3e} updates/s",
+        pjrt_secs,
+        out.metrics.artifact.as_deref().unwrap_or("?"),
+        out.metrics.embeddings,
+        out.metrics.batches,
+        out.metrics.updates_per_second()
+    );
+
+    // --- the jnp-engine artifact (same L2 graph, no pallas) ---
+    let t1 = std::time::Instant::now();
+    let out_jnp = run::<f64>(
+        &tree,
+        &table,
+        &RunOptions {
+            metric,
+            backend: BackendSpec::Pjrt { engine: "jnp".into(), resident: true },
+            artifacts_dir: Some(artifacts),
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "== PJRT/jnp run:    {:.2}s wall (same HLO interface, XLA-fused formulation)",
+        t1.elapsed().as_secs_f64()
+    );
+
+    // --- independent CPU engine + naive oracle cross-checks ---
+    let cpu = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { metric, threads: 0, ..Default::default() },
+    )?;
+    let naive = compute_unifrac_naive(&tree, &table, metric)?;
+    let d_pjrt_cpu = out.dm.max_abs_diff(&cpu);
+    let d_pjrt_jnp = out.dm.max_abs_diff(&out_jnp.dm);
+    let d_cpu_naive = cpu.max_abs_diff(&naive);
+    println!("== correctness:");
+    println!("   |pallas-PJRT - CPU tiled|   = {d_pjrt_cpu:.3e}");
+    println!("   |pallas-PJRT - jnp-PJRT|    = {d_pjrt_jnp:.3e}");
+    println!("   |CPU tiled   - naive oracle| = {d_cpu_naive:.3e}");
+    assert!(d_pjrt_cpu < 1e-9 && d_pjrt_jnp < 1e-9 && d_cpu_naive < 1e-9);
+
+    // --- downstream: ordination + a grouping test, like an EMP analysis ---
+    let ord = pcoa(&out.dm, 3, 1);
+    println!(
+        "== PCoA: leading 3 axes explain {:.1}% / {:.1}% / {:.1}%",
+        ord.proportion_explained.first().copied().unwrap_or(0.0) * 100.0,
+        ord.proportion_explained.get(1).copied().unwrap_or(0.0) * 100.0,
+        ord.proportion_explained.get(2).copied().unwrap_or(0.0) * 100.0,
+    );
+    // split samples along PCoA axis 1 into two "environments" and verify
+    // PERMANOVA finds the (by construction) real structure
+    let axis = &ord.coordinates[0];
+    let median = {
+        let mut v = axis.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let groups: Vec<usize> = axis.iter().map(|&x| usize::from(x > median)).collect();
+    let perm = permanova(&out.dm, &groups, 199, 3);
+    println!(
+        "== PERMANOVA on PCoA-axis-1 split: pseudo-F = {:.2}, p = {:.3}",
+        perm.pseudo_f, perm.p_value
+    );
+
+    // --- sanity: PJRT and CPU matrices are statistically identical ---
+    let mr = mantel(&out.dm, &cpu, 99, 5);
+    println!("== Mantel(PJRT, CPU) R^2 = {:.6}", mr.r2);
+    assert!(mr.r2 > 0.999999);
+
+    println!("== end-to-end OK");
+    Ok(())
+}

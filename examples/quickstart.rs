@@ -1,0 +1,54 @@
+//! Quickstart: compute UniFrac on a small synthetic microbiome workload.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use unifrac::stats::pcoa;
+use unifrac::synth::SynthSpec;
+use unifrac::unifrac::{compute_unifrac, ComputeOptions, Metric};
+
+fn main() -> unifrac::Result<()> {
+    // 1. A synthetic workload: 64 samples, EMP-like sparsity. Real data
+    //    loads the same way via `table::read_table_tsv` + `tree::parse_newick`.
+    let (tree, table) = SynthSpec::emp_like(64, 42).generate();
+    println!(
+        "workload: {} samples x {} features (density {:.3}), tree of {} nodes",
+        table.n_samples(),
+        table.n_features(),
+        table.density(),
+        tree.n_nodes()
+    );
+
+    // 2. Compute three UniFrac variants with the optimized CPU engine.
+    for metric in [
+        Metric::Unweighted,
+        Metric::WeightedNormalized,
+        Metric::Generalized(0.5),
+    ] {
+        let opts = ComputeOptions { metric, threads: 0, ..Default::default() };
+        let dm = compute_unifrac::<f64>(&tree, &table, &opts)?;
+        println!(
+            "{metric}: d(0,1) = {:.4}, d(0,2) = {:.4}, mean = {:.4}",
+            dm.get(0, 1),
+            dm.get(0, 2),
+            dm.condensed().iter().sum::<f64>() / dm.condensed().len() as f64
+        );
+    }
+
+    // 3. Downstream ordination (what EMP-style studies do with UniFrac).
+    let opts = ComputeOptions { metric: Metric::WeightedNormalized, ..Default::default() };
+    let dm = compute_unifrac::<f64>(&tree, &table, &opts)?;
+    let ord = pcoa(&dm, 3, 1);
+    println!(
+        "PCoA: {} axes, leading axis explains {:.1}% of inertia",
+        ord.eigenvalues.len(),
+        ord.proportion_explained.first().copied().unwrap_or(0.0) * 100.0
+    );
+
+    // 4. Persist the matrix in the standard square-TSV layout.
+    let out = std::env::temp_dir().join("quickstart_unifrac.tsv");
+    dm.write_tsv(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

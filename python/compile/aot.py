@@ -1,0 +1,145 @@
+"""AOT lowering driver: jax -> HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``). Each artifact is one
+(engine, metric, dtype, tile-config) combination of the Layer-2 stripe
+update, written as **HLO text** — NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+The manifest records, per artifact, everything the rust runtime needs to
+pick and drive it: shapes, dtype, metric/alpha, engine, tiling and the
+estimated VMEM working set of one kernel program (DESIGN.md §Perf).
+
+Usage: ``python -m compile.aot --out ../artifacts [--quick] [--force]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # fp64 artifacts (paper §4)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels.unifrac_stripes import StripeKernelConfig  # noqa: E402
+from .model import lower_update  # noqa: E402
+
+#: Production chunk geometry: sample-chunk width N, stripe-block S, Figure-2
+#: embedding batch E, Figure-3 step_size K_B. Rust pads/partitions every
+#: problem onto these tiles (coordinator::partition).
+PROD = dict(n_samples=256, n_stripes=128, emb_batch=32, block_k=64)
+#: Small geometry for fast integration tests.
+TEST = dict(n_samples=64, n_stripes=32, emb_batch=8, block_k=16)
+#: Wide chunk for larger PJRT runs (jnp engine; the [E,S,N] gather stays
+#: fused, so E is kept small to bound the working set).
+LARGE = dict(n_samples=1024, n_stripes=512, emb_batch=16, block_k=128)
+
+METRICS = ("unweighted", "weighted_normalized", "weighted_unnormalized", "generalized")
+DTYPES = ("float32", "float64")  # the paper's §4 fp32-vs-fp64 axis
+
+
+def artifact_plan(quick: bool):
+    """Yield (name, StripeKernelConfig, engine) for every artifact to build."""
+    plan = []
+
+    def add(engine, geom, **kw):
+        cfg = StripeKernelConfig(**geom, **kw)
+        short = {"float32": "f32", "float64": "f64"}[cfg.dtype]
+        name = (
+            f"stripes_{cfg.metric}_{engine}_{short}"
+            f"_n{cfg.n_samples}_s{cfg.n_stripes}_e{cfg.emb_batch}_k{cfg.block_k}"
+        )
+        plan.append((name, cfg, engine))
+
+    # Test geometry: both run-time engines, two representative metrics.
+    for engine in ("jnp", "pallas_tiled"):
+        for metric in ("unweighted", "weighted_normalized"):
+            add(engine, TEST, metric=metric, dtype="float64")
+    if quick:
+        return plan
+
+    # Production geometry: full metric x dtype grid for both engines.
+    for engine in ("jnp", "pallas_tiled"):
+        for metric in METRICS:
+            for dtype in DTYPES:
+                alpha = 0.5 if metric == "generalized" else 1.0
+                add(engine, PROD, metric=metric, dtype=dtype, alpha=alpha)
+    # Kernel-stage ablation artifacts (Figures 1->3 story at L1).
+    for engine in ("pallas_batched", "pallas_unbatched"):
+        add(engine, PROD, metric="weighted_normalized", dtype="float64")
+    # Large chunk geometry (jnp engine only: the XLA-fused formulation
+    # scales to wider chunks without interpret-mode kernel overhead).
+    for dtype in DTYPES:
+        for metric in ("unweighted", "weighted_normalized"):
+            add("jnp", LARGE, metric=metric, dtype=dtype)
+    return plan
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, quick: bool = False, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    entries = []
+    plan = artifact_plan(quick)
+    for i, (name, cfg, engine) in enumerate(plan):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if force or not os.path.exists(path):
+            text = to_hlo_text(lower_update(cfg, engine))
+            with open(path, "w") as f:
+                f.write(text)
+            status = "built"
+        else:
+            status = "cached"
+        digest = hashlib.sha256(open(path, "rb").read()).hexdigest()[:16]
+        entries.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "engine": engine,
+                "metric": cfg.metric,
+                "alpha": cfg.alpha,
+                "dtype": cfg.dtype,
+                "n_samples": cfg.n_samples,
+                "n_stripes": cfg.n_stripes,
+                "emb_batch": cfg.emb_batch,
+                "block_k": cfg.block_k,
+                "vmem_bytes": cfg.vmem_bytes(),
+                "sha256_16": digest,
+            }
+        )
+        print(f"[{i + 1}/{len(plan)}] {status} {name}", flush=True)
+    manifest = {"version": 1, "artifacts": entries}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(entries)} artifacts)")
+    return manifest
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--quick", action="store_true", help="test geometry only")
+    p.add_argument("--force", action="store_true", help="rebuild even if cached")
+    a = p.parse_args(argv)
+    build(a.out, quick=a.quick, force=a.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

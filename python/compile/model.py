@@ -1,0 +1,75 @@
+"""Layer-2 JAX compute graph: the stripe-batch update step.
+
+The Layer-3 rust coordinator drives Striped UniFrac as a sequence of
+*stripe-batch updates*: for each batch of E node embeddings it invokes one
+compiled update over a (stripe-block x sample-chunk) accumulator pair.
+This module builds the jax function for one such update — either routed
+through the Layer-1 Pallas kernel (``pallas_*`` engines) or through the
+fully-vectorized jnp formulation (``jnp`` engine, which XLA fuses into a
+single gather + FMA pipeline) — so both lower into the same AOT artifact
+shape and are interchangeable at run time.
+
+Signature of every engine (shapes static per artifact):
+
+    (start i32[1], emb dt[E, 2N], lengths dt[E], num dt[S, N], den dt[S, N])
+        -> (num' dt[S, N], den' dt[S, N])
+
+Python is build-time only: ``aot.py`` lowers these functions to HLO text
+once; rust loads and executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import stripe_update_ref
+from .kernels.unifrac_stripes import (
+    KERNEL_STAGES,
+    StripeKernelConfig,
+    make_stripe_kernel,
+)
+
+#: All run-time engines an artifact can embody.
+ENGINES = ("jnp",) + KERNEL_STAGES
+
+
+def make_update_fn(cfg: StripeKernelConfig, engine: str = "pallas_tiled"):
+    """Return the stripe-batch update callable for ``cfg`` and ``engine``."""
+    if engine == "jnp":
+        dt = cfg.jdtype
+
+        def fn(start, emb, lengths, num, den):
+            start = jnp.asarray(start, jnp.int32).reshape((1,))[0]
+            return stripe_update_ref(
+                emb.astype(dt),
+                lengths.astype(dt),
+                start,
+                num,
+                den,
+                metric=cfg.metric,
+                alpha=cfg.alpha,
+            )
+
+        return fn
+    if engine in KERNEL_STAGES:
+        return make_stripe_kernel(cfg, engine)
+    raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
+
+
+def example_args(cfg: StripeKernelConfig):
+    """Abstract arguments for AOT lowering of one artifact."""
+    dt = cfg.jdtype
+    return (
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.emb_batch, 2 * cfg.n_samples), dt),
+        jax.ShapeDtypeStruct((cfg.emb_batch,), dt),
+        jax.ShapeDtypeStruct((cfg.n_stripes, cfg.n_samples), dt),
+        jax.ShapeDtypeStruct((cfg.n_stripes, cfg.n_samples), dt),
+    )
+
+
+def lower_update(cfg: StripeKernelConfig, engine: str):
+    """jit + lower one artifact; returns the jax Lowered object."""
+    fn = make_update_fn(cfg, engine)
+    return jax.jit(fn).lower(*example_args(cfg))

@@ -1,0 +1,189 @@
+"""Layer-1 correctness: Pallas stripe kernels vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: every kernel
+stage, metric, dtype and a hypothesis-driven sweep of shapes must agree
+with ``ref.stripe_update_ref`` to float tolerance.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import METRICS, metric_terms, stripe_update_ref
+from compile.kernels.unifrac_stripes import (
+    KERNEL_STAGES,
+    StripeKernelConfig,
+    make_stripe_kernel,
+)
+
+RNG = np.random.default_rng(0xDEAD)
+
+
+def random_problem(cfg: StripeKernelConfig, rng=RNG, presence=None):
+    """Build (emb, lengths, num, den) matching cfg; emb rows duplicated."""
+    e, n, s = cfg.emb_batch, cfg.n_samples, cfg.n_stripes
+    half = rng.random((e, n))
+    if presence or (presence is None and cfg.metric == "unweighted"):
+        half = (half < 0.3).astype(np.float64)
+    emb = np.concatenate([half, half], axis=1)
+    lengths = rng.random(e)
+    num = rng.random((s, n))
+    den = rng.random((s, n))
+    dt = cfg.jdtype
+    return (
+        jnp.asarray(emb, dt),
+        jnp.asarray(lengths, dt),
+        jnp.asarray(num, dt),
+        jnp.asarray(den, dt),
+    )
+
+
+def tol(cfg):
+    return dict(rtol=1e-10, atol=1e-12) if cfg.dtype == "float64" else dict(rtol=2e-5, atol=1e-6)
+
+
+def check(cfg: StripeKernelConfig, stage: str, start: int = 0):
+    emb, lengths, num, den = random_problem(cfg)
+    fn = make_stripe_kernel(cfg, stage)
+    got_n, got_d = fn(start, emb, lengths, num, den)
+    ref_n, ref_d = stripe_update_ref(
+        emb, lengths, start, num, den, metric=cfg.metric, alpha=cfg.alpha
+    )
+    np.testing.assert_allclose(got_n, ref_n, **tol(cfg))
+    np.testing.assert_allclose(got_d, ref_d, **tol(cfg))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("stage", KERNEL_STAGES)
+def test_stage_metric_f64(metric, stage):
+    cfg = StripeKernelConfig(
+        n_samples=64, n_stripes=32, emb_batch=8, block_k=16, metric=metric, alpha=0.5
+    )
+    check(cfg, stage)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_tiled_f32(metric):
+    cfg = StripeKernelConfig(
+        n_samples=64,
+        n_stripes=32,
+        emb_batch=8,
+        block_k=16,
+        metric=metric,
+        alpha=0.5,
+        dtype="float32",
+    )
+    check(cfg, "pallas_tiled")
+
+
+@pytest.mark.parametrize("start", [0, 1, 5, 31])
+def test_stripe_block_offsets(start):
+    """`start` shifts the v columns; stripes up to start+S-1 must stay in
+    the duplicated row, mirroring how the rust coordinator blocks stripes."""
+    cfg = StripeKernelConfig(n_samples=128, n_stripes=32, emb_batch=4, block_k=32)
+    check(cfg, "pallas_tiled", start=start)
+
+
+def test_zero_lengths_are_identity():
+    cfg = StripeKernelConfig(n_samples=64, n_stripes=32, emb_batch=8, block_k=16)
+    emb, _, num, den = random_problem(cfg)
+    fn = make_stripe_kernel(cfg, "pallas_tiled")
+    got_n, got_d = fn(0, emb, jnp.zeros((cfg.emb_batch,), cfg.jdtype), num, den)
+    np.testing.assert_array_equal(got_n, num)
+    np.testing.assert_array_equal(got_d, den)
+
+
+def test_identical_samples_zero_numerator():
+    """If every sample has the same profile, u == v and num is unchanged."""
+    cfg = StripeKernelConfig(n_samples=64, n_stripes=32, emb_batch=8, block_k=16)
+    row = np.tile(RNG.random((cfg.emb_batch, 1)), (1, 2 * cfg.n_samples))
+    emb = jnp.asarray(row, cfg.jdtype)
+    lengths = jnp.asarray(RNG.random(cfg.emb_batch), cfg.jdtype)
+    num = jnp.zeros((cfg.n_stripes, cfg.n_samples), cfg.jdtype)
+    den = jnp.zeros_like(num)
+    got_n, got_d = make_stripe_kernel(cfg, "pallas_tiled")(0, emb, lengths, num, den)
+    np.testing.assert_allclose(got_n, 0, atol=1e-14)
+    assert float(jnp.max(got_d)) > 0
+
+
+def test_generalized_alpha1_equals_weighted_normalized():
+    base = dict(n_samples=64, n_stripes=32, emb_batch=8, block_k=16)
+    cfg_g = StripeKernelConfig(**base, metric="generalized", alpha=1.0)
+    cfg_w = StripeKernelConfig(**base, metric="weighted_normalized")
+    emb, lengths, num, den = random_problem(cfg_w)
+    g = make_stripe_kernel(cfg_g, "pallas_tiled")(0, emb, lengths, num, den)
+    w = make_stripe_kernel(cfg_w, "pallas_tiled")(0, emb, lengths, num, den)
+    np.testing.assert_allclose(g[0], w[0], rtol=1e-10)
+    np.testing.assert_allclose(g[1], w[1], rtol=1e-10)
+
+
+def test_unweighted_terms_are_xor_or():
+    u = jnp.asarray([0.0, 0.0, 1.0, 1.0])
+    v = jnp.asarray([0.0, 1.0, 0.0, 1.0])
+    f_num, f_den = metric_terms("unweighted", u, v, 1.0)
+    np.testing.assert_array_equal(f_num, [0, 1, 1, 0])  # XOR
+    np.testing.assert_array_equal(f_den, [0, 1, 1, 1])  # OR
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([16, 32, 64]),  # n_samples
+    st.integers(1, 4),  # stripe blocks of 8
+    st.sampled_from([1, 2, 5, 8]),  # emb batch
+    st.sampled_from([8, 16]),  # block_k
+    st.sampled_from(list(METRICS)),
+    st.sampled_from(["float32", "float64"]),
+    st.integers(0, 7),  # start
+    st.integers(0, 2**31 - 1),  # seed
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy)
+def test_hypothesis_shapes_and_dtypes(params):
+    """Property sweep: kernel == oracle across shapes/dtypes/starts."""
+    n, sb, e, kb, metric, dtype, start, seed = params
+    s = sb * 8
+    if s + start > n or kb > n:
+        return
+    cfg = StripeKernelConfig(
+        n_samples=n,
+        n_stripes=s,
+        emb_batch=e,
+        block_k=kb,
+        metric=metric,
+        alpha=0.5,
+        dtype=dtype,
+    )
+    rng = np.random.default_rng(seed)
+    emb, lengths, num, den = random_problem(cfg, rng=rng)
+    got_n, got_d = make_stripe_kernel(cfg, "pallas_tiled")(start, emb, lengths, num, den)
+    ref_n, ref_d = stripe_update_ref(
+        emb, lengths, start, num, den, metric=metric, alpha=0.5
+    )
+    np.testing.assert_allclose(got_n, ref_n, **tol(cfg))
+    np.testing.assert_allclose(got_d, ref_d, **tol(cfg))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        StripeKernelConfig(n_samples=60, block_k=16)  # K_B must divide N
+    with pytest.raises(ValueError):
+        StripeKernelConfig(metric="nope")
+    with pytest.raises(ValueError):
+        StripeKernelConfig(n_samples=32, n_stripes=64)
+    with pytest.raises(ValueError):
+        make_stripe_kernel(StripeKernelConfig(), "pallas_mystery")
+
+
+def test_vmem_estimate_monotone():
+    small = StripeKernelConfig(n_samples=64, n_stripes=32, emb_batch=8, block_k=16)
+    big = StripeKernelConfig(n_samples=256, n_stripes=128, emb_batch=32, block_k=64)
+    assert small.vmem_bytes() < big.vmem_bytes()
+    # production tile must fit a 16 MiB VMEM with double-buffer headroom
+    assert big.vmem_bytes() * 2 < 16 * 2**20

@@ -1,0 +1,94 @@
+"""Layer-2 + AOT path tests: engines agree, lowering round-trips, manifest
+is complete and self-consistent."""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels.ref import stripe_update_ref
+from compile.kernels.unifrac_stripes import StripeKernelConfig
+from compile.model import ENGINES, example_args, lower_update, make_update_fn
+
+CFG = StripeKernelConfig(n_samples=64, n_stripes=32, emb_batch=8, block_k=16)
+
+
+def problem(cfg=CFG, seed=7):
+    rng = np.random.default_rng(seed)
+    half = rng.random((cfg.emb_batch, cfg.n_samples))
+    emb = jnp.asarray(np.concatenate([half, half], axis=1), cfg.jdtype)
+    lengths = jnp.asarray(rng.random(cfg.emb_batch), cfg.jdtype)
+    num = jnp.zeros((cfg.n_stripes, cfg.n_samples), cfg.jdtype)
+    return emb, lengths, num, jnp.zeros_like(num)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engines_agree(engine):
+    emb, lengths, num, den = problem()
+    got = make_update_fn(CFG, engine)(2, emb, lengths, num, den)
+    ref = stripe_update_ref(emb, lengths, 2, num, den, metric=CFG.metric)
+    np.testing.assert_allclose(got[0], ref[0], rtol=1e-10)
+    np.testing.assert_allclose(got[1], ref[1], rtol=1e-10)
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        make_update_fn(CFG, "cuda")
+
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas_tiled"])
+def test_lowered_hlo_text_parses(engine):
+    """The HLO text must contain an entry computation with the artifact's
+    parameter signature — the contract the rust loader relies on."""
+    text = aot.to_hlo_text(lower_update(CFG, engine))
+    assert "ENTRY" in text
+    assert "f64[8,128]" in text  # emb [E, 2N]
+    assert "f64[32,64]" in text  # accumulators [S, N]
+    assert "s32[1]" in text  # start scalar
+
+
+def test_example_args_match_config():
+    args = example_args(CFG)
+    assert args[1].shape == (CFG.emb_batch, 2 * CFG.n_samples)
+    assert args[3].shape == (CFG.n_stripes, CFG.n_samples)
+    assert args[0].dtype == jnp.int32
+
+
+def test_artifact_plan_quick_and_full():
+    quick = aot.artifact_plan(quick=True)
+    full = aot.artifact_plan(quick=False)
+    names = [n for n, _, _ in full]
+    assert len(set(names)) == len(names), "artifact names must be unique"
+    assert len(quick) == 4
+    assert all(any(m in n for n, _, _ in full) for m in aot.METRICS)
+    # the full plan retains the quick/test geometry artifacts
+    assert {n for n, _, _ in quick} <= set(names)
+    # fp32 and fp64 variants both present (paper §4)
+    assert any("_f32_" in n for n in names) and any("_f64_" in n for n in names)
+    # kernel-stage ablation artifacts present
+    assert any("pallas_batched" in n for n in names)
+    assert any("pallas_unbatched" in n for n in names)
+
+
+def test_manifest_on_disk_if_built():
+    """If `make artifacts` already ran, validate the manifest contents."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built yet")
+    man = json.load(open(path))
+    assert man["version"] == 1
+    by_name = {e["name"]: e for e in man["artifacts"]}
+    assert len(by_name) == len(man["artifacts"])
+    for e in man["artifacts"]:
+        f = os.path.join(os.path.dirname(path), e["file"])
+        assert os.path.exists(f), f
+        assert e["n_samples"] % e["block_k"] == 0
+        assert e["vmem_bytes"] > 0
+        assert e["engine"] in ENGINES

@@ -1,0 +1,13 @@
+//! Bench: Figure-2 embedding batch-size sweep.
+
+fn scale() -> unifrac::report::Scale {
+    let n = std::env::var("UNIFRAC_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(1024);
+    unifrac::report::Scale { n_samples: n, seed: 42 }
+}
+fn threads() -> usize {
+    std::env::var("UNIFRAC_BENCH_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn main() {
+    unifrac::report::batch_ablation::<f64>(scale(), threads()).expect("batch f64").print();
+}

@@ -1,0 +1,15 @@
+//! Bench: the Figures 1-3 optimization-stage ablation — measured CPU
+//! time per engine stage plus the V100-model EMP projection.
+
+fn scale() -> unifrac::report::Scale {
+    let n = std::env::var("UNIFRAC_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(1024);
+    unifrac::report::Scale { n_samples: n, seed: 42 }
+}
+fn threads() -> usize {
+    std::env::var("UNIFRAC_BENCH_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn main() {
+    let t = unifrac::report::stages_ablation(scale(), threads()).expect("stages");
+    t.print();
+}

@@ -1,0 +1,15 @@
+//! Bench: tiled-engine step_size (block_k) sweep — the paper's §3
+//! "grouping parameters ... drastically affect the observed run time".
+
+fn scale() -> unifrac::report::Scale {
+    let n = std::env::var("UNIFRAC_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(1024);
+    unifrac::report::Scale { n_samples: n, seed: 42 }
+}
+fn threads() -> usize {
+    std::env::var("UNIFRAC_BENCH_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn main() {
+    unifrac::report::tiles_ablation::<f64>(scale(), threads()).expect("tiles f64").print();
+    unifrac::report::tiles_ablation::<f32>(scale(), threads()).expect("tiles f32").print();
+}

@@ -1,0 +1,65 @@
+//! Bench: L3 PJRT dispatch overhead — one-shot literal round-trips vs
+//! device-resident accumulators (the coordinator-level Figure-2
+//! optimization), and pallas-kernel vs jnp-fused artifacts.
+//!
+//! This is the bench behind EXPERIMENTS.md §Perf (L3).
+
+use unifrac::coordinator::{run, BackendSpec, RunOptions};
+use unifrac::synth::SynthSpec;
+use unifrac::unifrac::{compute_unifrac_report, ComputeOptions, Metric};
+
+fn main() {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let n: usize = std::env::var("UNIFRAC_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(250);
+    let (tree, table) = SynthSpec::emp_like(n, 42).generate();
+    println!(
+        "## PJRT dispatch overhead (n={n}, {} tree nodes)",
+        tree.n_nodes()
+    );
+    println!("{:<28} {:>9} {:>14}", "configuration", "seconds", "updates/s");
+    println!("{}", "-".repeat(55));
+
+    for (label, engine, resident) in [
+        ("pallas_tiled one-shot", "pallas_tiled", false),
+        ("pallas_tiled resident", "pallas_tiled", true),
+        ("jnp one-shot", "jnp", false),
+        ("jnp resident", "jnp", true),
+    ] {
+        let opts = RunOptions {
+            metric: Metric::WeightedNormalized,
+            backend: BackendSpec::Pjrt { engine: engine.into(), resident },
+            artifacts_dir: Some(artifacts.clone()),
+            ..Default::default()
+        };
+        // warm-up compiles, then measure
+        let _ = run::<f64>(&tree, &table, &opts).expect("warmup");
+        let t0 = std::time::Instant::now();
+        let out = run::<f64>(&tree, &table, &opts).expect("run");
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "{label:<28} {secs:>9.3} {:>14.3e}",
+            out.metrics.updates_per_second()
+        );
+    }
+
+    // CPU reference at the same padded width
+    let (_, rep) = compute_unifrac_report::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { threads: 1, ..Default::default() },
+    )
+    .expect("cpu");
+    println!(
+        "{:<28} {:>9.3} {:>14.3e}",
+        "cpu tiled (1 thread)",
+        rep.seconds_stripes,
+        rep.updates() as f64 / rep.seconds_stripes.max(1e-9)
+    );
+}

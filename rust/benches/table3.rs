@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Table 3 (see DESIGN.md §5).
+//! CPU cells measured on this host at UNIFRAC_BENCH_N samples
+//! (default 1024), GPU cells from the device models.
+
+fn scale() -> unifrac::report::Scale {
+    let n = std::env::var("UNIFRAC_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(1024);
+    unifrac::report::Scale { n_samples: n, seed: 42 }
+}
+fn threads() -> usize {
+    std::env::var("UNIFRAC_BENCH_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn main() {
+    let t = unifrac::report::table3(scale(), threads()).expect("table3");
+    t.print();
+}

@@ -1,0 +1,143 @@
+//! Tiny argv parser: `subcommand --key value --flag` style.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding the program name).
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(Error::Cli(format!("unexpected positional argument {a:?}")));
+            };
+            if key.is_empty() {
+                return Err(Error::Cli("bare `--` not supported".into()));
+            }
+            // --key=value or --key value or boolean flag
+            if let Some((k, v)) = key.split_once('=') {
+                out.values.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.values.insert(key.to_string(), it.next().unwrap());
+            } else {
+                out.flags.push(key.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn subcommand(&self) -> Option<String> {
+        self.subcommand.clone()
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&mut self, name: &str) -> Option<String> {
+        self.consumed.insert(name.to_string());
+        self.values.get(name).cloned()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, name: &str) -> Result<Option<T>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Cli(format!("invalid value for --{name}: {s:?}"))),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&mut self, name: &str) -> Result<String> {
+        self.opt(name)
+            .ok_or_else(|| Error::Cli(format!("missing required flag --{name}")))
+    }
+
+    /// Error on unknown flags (typo safety); call at the end of a command.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.values.keys() {
+            if !self.consumed.contains(k) {
+                return Err(Error::Cli(format!("unknown flag --{k}")));
+            }
+        }
+        for k in &self.flags {
+            if !self.consumed.contains(k) {
+                return Err(Error::Cli(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_values() {
+        let mut a = parse("compute --samples 32 --metric unweighted --sequential");
+        assert_eq!(a.subcommand().as_deref(), Some("compute"));
+        assert_eq!(a.get_or("samples", 0usize).unwrap(), 32);
+        assert_eq!(a.opt("metric").as_deref(), Some("unweighted"));
+        assert!(a.flag("sequential"));
+        assert!(!a.flag("parallel"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let mut a = parse("synth --samples=64 --density=0.01");
+        assert_eq!(a.get_or("samples", 0usize).unwrap(), 64);
+        assert_eq!(a.get_or("density", 0.0f64).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = parse("synth --nope 3");
+        let _ = a.opt("samples");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let mut a = parse("compute");
+        assert!(a.require("table").is_err());
+    }
+
+    #[test]
+    fn invalid_parse_value() {
+        let mut a = parse("synth --samples abc");
+        assert!(a.get_or("samples", 0usize).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,385 @@
+//! Subcommand implementations.
+
+use super::args::Args;
+use crate::config::RunConfig;
+use crate::coordinator::{run, RunOptions};
+use crate::devicemodel::{device_by_name, paper_gpus, XEON_E5_2680V4};
+use crate::error::{Error, Result};
+use crate::matrix::CondensedMatrix;
+use crate::report::{self, Scale};
+use crate::stats::{mantel, pcoa, permanova};
+use crate::synth::SynthSpec;
+use crate::table::{read_table_bin, read_table_tsv, write_table_bin, write_table_tsv, FeatureTable};
+use crate::tree::{parse_newick, write_newick, Phylogeny};
+use crate::unifrac::{compute_unifrac, compute_unifrac_naive, ComputeOptions, EngineKind, Metric};
+use std::path::PathBuf;
+
+/// Resolve a RunConfig from `--config` plus flag overrides.
+fn resolve_config(args: &mut Args) -> Result<RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.opt("metric") {
+        cfg.metric = v;
+    }
+    cfg.alpha = args.get_or("alpha", cfg.alpha)?;
+    if let Some(v) = args.opt("backend") {
+        cfg.backend = v;
+    }
+    if let Some(v) = args.opt("engine") {
+        cfg.engine = v;
+    }
+    if let Some(v) = args.opt("dtype") {
+        cfg.dtype = v;
+    }
+    cfg.chips = args.get_or("chips", cfg.chips)?;
+    if args.flag("sequential") {
+        cfg.parallel = false;
+    }
+    cfg.batch = args.get_or("batch", cfg.batch)?;
+    cfg.block_k = args.get_or("block-k", cfg.block_k)?;
+    if let Some(v) = args.opt("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(v);
+    }
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    if let Some(v) = args.opt("output") {
+        cfg.output = Some(PathBuf::from(v));
+    }
+    Ok(cfg)
+}
+
+/// Load (tree, table) from files, or synthesize when `--samples` given.
+fn load_problem(args: &mut Args, seed: u64) -> Result<(Phylogeny, FeatureTable)> {
+    if let Some(n) = args.opt_parse::<usize>("samples")? {
+        let features = args.get_or("features", (n * 8).max(512))?;
+        let density = args.get_or("density", 0.005f64)?;
+        let spec = SynthSpec { n_samples: n, n_features: features, density, seed, ..Default::default() };
+        return Ok(spec.generate());
+    }
+    let table_path = args.require("table")?;
+    let tree_path = args.require("tree")?;
+    let table = if table_path.ends_with(".bin") {
+        read_table_bin(&table_path)?
+    } else {
+        read_table_tsv(&table_path)?
+    };
+    let tree = parse_newick(&std::fs::read_to_string(&tree_path)?)?;
+    Ok((tree, table))
+}
+
+pub fn synth(args: &mut Args) -> Result<()> {
+    let n = args.get_or("samples", 256usize)?;
+    let features = args.get_or("features", (n * 8).max(512))?;
+    let density = args.get_or("density", 0.005f64)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let out_table = args.opt("out-table").unwrap_or_else(|| "synth_table.tsv".into());
+    let out_tree = args.opt("out-tree").unwrap_or_else(|| "synth_tree.nwk".into());
+    args.finish()?;
+    let spec = SynthSpec { n_samples: n, n_features: features, density, seed, ..Default::default() };
+    let (tree, table) = spec.generate();
+    if out_table.ends_with(".bin") {
+        write_table_bin(&table, &out_table)?;
+    } else {
+        write_table_tsv(&table, &out_table)?;
+    }
+    std::fs::write(&out_tree, write_newick(&tree))?;
+    println!(
+        "wrote {out_table} ({} samples x {} features, density {:.4}) and {out_tree} ({} nodes)",
+        table.n_samples(),
+        table.n_features(),
+        table.density(),
+        tree.n_nodes()
+    );
+    Ok(())
+}
+
+fn run_with_config(
+    cfg: &RunConfig,
+    tree: &Phylogeny,
+    table: &FeatureTable,
+) -> Result<(CondensedMatrix, crate::coordinator::RunMetrics)> {
+    let opts: RunOptions = cfg.to_run_options()?;
+    if cfg.is_f32()? {
+        let out = run::<f32>(tree, table, &opts)?;
+        Ok((out.dm, out.metrics))
+    } else {
+        let out = run::<f64>(tree, table, &opts)?;
+        Ok((out.dm, out.metrics))
+    }
+}
+
+pub fn compute(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let report_path = args.opt("report");
+    let rarefy_depth = args.opt_parse::<usize>("rarefy")?;
+    let (tree, mut table) = load_problem(args, cfg.seed)?;
+    args.finish()?;
+    if let Some(depth) = rarefy_depth {
+        let before = table.n_samples();
+        table = crate::table::rarefy(&table, depth, cfg.seed)?;
+        println!(
+            "rarefied to depth {depth}: kept {}/{} samples",
+            table.n_samples(),
+            before
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let (dm, metrics) = run_with_config(&cfg, &tree, &table)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "computed {} over {} samples ({} stripes, {} embeddings, backend {}) in {:.3}s",
+        cfg.metric,
+        table.n_samples(),
+        metrics.n_stripes,
+        metrics.embeddings,
+        metrics.backend,
+        secs
+    );
+    println!("  throughput: {:.3e} updates/s", metrics.updates_per_second());
+    if let Some(out) = &cfg.output {
+        dm.write_tsv(out)?;
+        println!("  wrote {}", out.display());
+    }
+    if let Some(path) = report_path {
+        std::fs::write(&path, metrics.to_json().dump())?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+pub fn partition(args: &mut Args) -> Result<()> {
+    let mut cfg = resolve_config(args)?;
+    cfg.parallel = false; // per-chip timing requires isolation
+    let (tree, table) = load_problem(args, cfg.seed)?;
+    args.finish()?;
+    let (_, metrics) = run_with_config(&cfg, &tree, &table)?;
+    println!(
+        "partitioned {} samples over {} chips (backend {}):",
+        table.n_samples(),
+        metrics.per_chip_seconds.len(),
+        metrics.backend
+    );
+    for (i, t) in metrics.per_chip_seconds.iter().enumerate() {
+        println!("  chip {i:>3}: {t:.3}s");
+    }
+    println!(
+        "  per-chip max {:.3}s | aggregated {:.3}s | assembly {:.3}s",
+        metrics.max_chip_seconds(),
+        metrics.aggregate_chip_seconds(),
+        metrics.seconds_assemble,
+    );
+    Ok(())
+}
+
+pub fn validate_fp32(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let permutations = args.get_or("permutations", 999usize)?;
+    let (tree, table) = load_problem(args, cfg.seed)?;
+    args.finish()?;
+    let mut cfg64 = cfg.clone();
+    cfg64.dtype = "f64".into();
+    let mut cfg32 = cfg;
+    cfg32.dtype = "f32".into();
+    let (dm64, _) = run_with_config(&cfg64, &tree, &table)?;
+    let (dm32, _) = run_with_config(&cfg32, &tree, &table)?;
+    let res = mantel(&dm64, &dm32, permutations, 7);
+    let max_diff = dm64.max_abs_diff(&dm32);
+    println!("fp32-vs-fp64 validation over {} samples:", table.n_samples());
+    println!("  Mantel R^2 = {:.6} (paper: 0.99999)", res.r2);
+    println!("  p-value    = {:.4} (paper: < 0.001; {} permutations)", res.p_value, permutations);
+    println!("  max |d64 - d32| = {max_diff:.3e}");
+    // downstream check: leading PCoA axes must agree (paper §4 discussion)
+    let p64 = pcoa(&dm64, 2, 1);
+    let p32 = pcoa(&dm32, 2, 1);
+    if !p64.coordinates.is_empty() && !p32.coordinates.is_empty() {
+        let r = crate::util::pearson(&p64.coordinates[0], &p32.coordinates[0]).abs();
+        println!("  |r| of PCoA axis 1 between precisions = {r:.6}");
+    }
+    if res.r2 < 0.9999 {
+        return Err(Error::invalid(format!("fp32 validation failed: R^2 = {}", res.r2)));
+    }
+    Ok(())
+}
+
+pub fn tables(args: &mut Args) -> Result<()> {
+    let which = args.opt("which").unwrap_or_else(|| "1,2,3,4,stages".into());
+    let scale = Scale {
+        n_samples: args.get_or("scale", 512usize)?,
+        seed: args.get_or("seed", 42u64)?,
+    };
+    let threads = args.get_or("threads", 1usize)?;
+    args.finish()?;
+    for item in which.split(',') {
+        let table = match item.trim() {
+            "1" => report::table1(scale, threads)?,
+            "2" => report::table2(scale, threads)?,
+            "3" => report::table3(scale, threads)?,
+            "4" => report::table4(scale, threads)?,
+            "stages" => report::stages_ablation(scale, threads)?,
+            "tiles" => report::tiles_ablation::<f64>(scale, threads)?,
+            "batch" => report::batch_ablation::<f64>(scale, threads)?,
+            other => return Err(Error::Cli(format!("unknown table {other:?}"))),
+        };
+        table.print();
+        println!();
+    }
+    Ok(())
+}
+
+/// `unifrac pcoa --matrix dm.tsv [--axes 3] [--output coords.tsv]`
+pub fn pcoa_cmd(args: &mut Args) -> Result<()> {
+    let matrix = args.require("matrix")?;
+    let axes = args.get_or("axes", 3usize)?;
+    let seed = args.get_or("seed", 1u64)?;
+    let output = args.opt("output");
+    args.finish()?;
+    let dm = CondensedMatrix::read_tsv(&matrix)?;
+    let res = pcoa(&dm, axes, seed);
+    println!("PCoA of {matrix} ({} samples):", dm.n_samples());
+    for (i, (ev, pe)) in res.eigenvalues.iter().zip(&res.proportion_explained).enumerate() {
+        println!("  axis {}: eigenvalue {:.6}, {:.2}% explained", i + 1, ev, pe * 100.0);
+    }
+    if let Some(path) = output {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        write!(w, "sample")?;
+        for i in 0..res.coordinates.len() {
+            write!(w, "\tPC{}", i + 1)?;
+        }
+        writeln!(w)?;
+        let ids = dm.ids();
+        for s in 0..dm.n_samples() {
+            let id = ids.get(s).cloned().unwrap_or_else(|| format!("S{s}"));
+            write!(w, "{id}")?;
+            for axis in &res.coordinates {
+                write!(w, "\t{:.8}", axis[s])?;
+            }
+            writeln!(w)?;
+        }
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+/// `unifrac permanova --matrix dm.tsv --groups groups.tsv`
+///
+/// The groups file has one `sample_id<TAB>group_label` line per sample.
+pub fn permanova_cmd(args: &mut Args) -> Result<()> {
+    let matrix = args.require("matrix")?;
+    let groups_path = args.require("groups")?;
+    let permutations = args.get_or("permutations", 999usize)?;
+    let seed = args.get_or("seed", 1u64)?;
+    args.finish()?;
+    let dm = CondensedMatrix::read_tsv(&matrix)?;
+    // parse the grouping file into dense group indices matching dm order
+    let mut by_id = std::collections::HashMap::new();
+    for (lineno, line) in std::fs::read_to_string(&groups_path)?.lines().enumerate() {
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (id, label) = line.split_once('\t').ok_or_else(|| {
+            Error::Cli(format!("{groups_path}:{}: expected id<TAB>group", lineno + 1))
+        })?;
+        by_id.insert(id.trim().to_string(), label.trim().to_string());
+    }
+    let mut label_ids = std::collections::HashMap::new();
+    let mut groups = Vec::with_capacity(dm.n_samples());
+    for (s, id) in dm.ids().iter().enumerate() {
+        let label = by_id
+            .get(id)
+            .ok_or_else(|| Error::Cli(format!("sample {id:?} (#{s}) missing from {groups_path}")))?;
+        let next = label_ids.len();
+        groups.push(*label_ids.entry(label.clone()).or_insert(next));
+    }
+    let res = permanova(&dm, &groups, permutations, seed);
+    println!("PERMANOVA of {matrix} ({} samples, {} groups):", dm.n_samples(), res.n_groups);
+    println!("  pseudo-F = {:.4}", res.pseudo_f);
+    println!("  p-value  = {:.4} ({} permutations)", res.p_value, res.permutations);
+    Ok(())
+}
+
+pub fn devices(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    println!(
+        "{:<16} {:>10} {:>12} {:>12} {:>10}",
+        "device", "BW GB/s", "fp32 TF/s", "fp64 TF/s", "launch us"
+    );
+    for d in paper_gpus().into_iter().chain([&XEON_E5_2680V4]) {
+        println!(
+            "{:<16} {:>10.0} {:>12.2} {:>12.3} {:>10.1}",
+            d.name, d.mem_bw_gbs, d.fp32_tflops, d.fp64_tflops, d.launch_overhead_us
+        );
+    }
+    debug_assert!(device_by_name("v100").is_some());
+    Ok(())
+}
+
+pub fn info(args: &mut Args) -> Result<()> {
+    let dir = args.opt("artifacts").unwrap_or_else(|| "artifacts".into());
+    args.finish()?;
+    let manifest = crate::runtime::Manifest::load(PathBuf::from(&dir).join("manifest.json"))?;
+    println!("{} artifacts in {dir}:", manifest.artifacts().len());
+    for a in manifest.artifacts() {
+        println!(
+            "  {:<60} {:>9} N={:<5} S={:<5} E={:<3} K={:<4} VMEM={}KiB",
+            a.name,
+            a.dtype,
+            a.n_samples,
+            a.n_stripes,
+            a.emb_batch,
+            a.block_k,
+            a.vmem_bytes / 1024
+        );
+    }
+    Ok(())
+}
+
+pub fn selftest(args: &mut Args) -> Result<()> {
+    let artifacts = args.opt("artifacts").unwrap_or_else(|| "artifacts".into());
+    args.finish()?;
+    let (tree, table) =
+        SynthSpec { n_samples: 20, n_features: 128, density: 0.1, ..Default::default() }.generate();
+    let mut failures = 0;
+    for metric in Metric::all(0.5) {
+        let oracle = compute_unifrac_naive(&tree, &table, metric)?;
+        for engine in EngineKind::all() {
+            let opts = ComputeOptions { metric, engine, ..Default::default() };
+            let dm = compute_unifrac::<f64>(&tree, &table, &opts)?;
+            let diff = dm.max_abs_diff(&oracle);
+            let ok = diff < 1e-10;
+            println!(
+                "  {} {:<22} {:<9} max|diff| = {:.2e} {}",
+                if ok { "PASS" } else { "FAIL" },
+                metric.to_string(),
+                engine.name(),
+                diff,
+                if ok { "" } else { "<-- MISMATCH" }
+            );
+            failures += usize::from(!ok);
+        }
+    }
+    let manifest_path = PathBuf::from(&artifacts).join("manifest.json");
+    if manifest_path.exists() {
+        let mut cfg = RunConfig { backend: "pjrt".into(), ..Default::default() };
+        cfg.engine = "pallas_tiled".into();
+        cfg.artifacts_dir = PathBuf::from(&artifacts);
+        let (dm_pjrt, _) = run_with_config(&cfg, &tree, &table)?;
+        let oracle = compute_unifrac_naive(&tree, &table, Metric::WeightedNormalized)?;
+        let diff = dm_pjrt.max_abs_diff(&oracle);
+        let ok = diff < 1e-9;
+        println!(
+            "  {} weighted_normalized    pjrt      max|diff| = {:.2e}",
+            if ok { "PASS" } else { "FAIL" },
+            diff
+        );
+        failures += usize::from(!ok);
+    } else {
+        println!("  SKIP pjrt (no artifacts at {artifacts}; run `make artifacts`)");
+    }
+    if failures > 0 {
+        return Err(Error::invalid(format!("{failures} selftest failure(s)")));
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Command-line interface: a small flag parser plus subcommand dispatch.
+//!
+//! ```text
+//! unifrac synth     --samples 256 --features 2048 --out-table t.tsv --out-tree t.nwk
+//! unifrac compute   --table t.tsv --tree t.nwk --metric weighted_normalized \
+//!                   --backend pjrt --engine pallas_tiled --dtype f64 --output dm.tsv
+//! unifrac partition --samples 512 --chips 8         # Table-2 style chip study
+//! unifrac validate-fp32 --samples 128               # paper §4 reproduction
+//! unifrac tables --which 1,3 --scale 512            # regenerate paper tables
+//! unifrac devices                                   # device model inventory
+//! unifrac info                                      # artifact manifest
+//! unifrac selftest                                  # quick end-to-end check
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+use crate::error::{Error, Result};
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run_cli(argv: Vec<String>) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::parse(argv)?;
+    let cmd = args.subcommand().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "synth" => commands::synth(&mut args),
+        "compute" => commands::compute(&mut args),
+        "partition" => commands::partition(&mut args),
+        "validate-fp32" => commands::validate_fp32(&mut args),
+        "tables" => commands::tables(&mut args),
+        "pcoa" => commands::pcoa_cmd(&mut args),
+        "permanova" => commands::permanova_cmd(&mut args),
+        "devices" => commands::devices(&mut args),
+        "info" => commands::info(&mut args),
+        "selftest" => commands::selftest(&mut args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::Cli(format!("unknown subcommand {other:?}; try `unifrac help`"))),
+    }
+}
+
+pub(crate) const HELP: &str = "\
+unifrac — Striped UniFrac on a rust+JAX+Pallas stack (PEARC'20 reproduction)
+
+USAGE: unifrac <subcommand> [flags]
+
+SUBCOMMANDS
+  synth          generate a synthetic (tree, table) workload
+  compute        compute a UniFrac distance matrix
+  partition      Table-2 style multi-chip run with per-chip timing
+  validate-fp32  fp32-vs-fp64 Mantel comparison (paper §4)
+  tables         regenerate the paper's tables (1-4) at a chosen scale
+  pcoa           principal coordinates of a distance matrix TSV
+  permanova      PERMANOVA over a distance matrix TSV + grouping file
+  devices        list the GPU/CPU device performance models
+  info           show the AOT artifact manifest
+  selftest       quick end-to-end consistency check
+  help           this text
+
+COMMON FLAGS
+  --config FILE       load [run] settings from a TOML file
+  --metric NAME       unweighted | weighted_normalized | weighted_unnormalized | generalized
+  --alpha X           generalized UniFrac exponent (default 1.0)
+  --backend B         cpu | pjrt
+  --engine E          cpu: original|unified|batched|tiled ; pjrt: pallas_tiled|jnp|...
+  --dtype D           f64 | f32
+  --chips N           simulated chips (stripe partitions)
+  --sequential        time chips one-by-one instead of running in parallel
+  --batch N           embedding rows per batch (Figure 2 batch size)
+  --block-k N         tiled engine step_size (Figure 3)
+  --artifacts DIR     AOT artifacts directory (default: artifacts)
+  --samples N         synthetic workload: sample count
+  --features N        synthetic workload: feature count
+  --seed N            synthetic workload seed
+  --rarefy N          subsample each sample to depth N first (drops shallow ones)
+  --table FILE        input feature table (.tsv or .bin)
+  --tree FILE         input Newick tree
+  --output FILE       write the distance matrix (TSV)
+  --report FILE       write run metrics (JSON)
+";

@@ -1,0 +1,220 @@
+//! Run configuration: a TOML-subset parser + the typed `RunConfig`.
+//!
+//! No `serde`/`toml` offline (DESIGN.md §3), so this module owns a small
+//! TOML parser covering the subset real deployment configs use:
+//! `[section]` headers, `key = value` with strings, integers, floats,
+//! booleans and flat arrays, `#` comments.
+
+mod toml_lite;
+
+pub use toml_lite::{TomlDoc, TomlValue};
+
+use crate::coordinator::{BackendSpec, RunOptions};
+use crate::error::{Error, Result};
+use crate::unifrac::{EngineKind, Metric};
+use std::path::PathBuf;
+
+/// Fully resolved run configuration (CLI flags override file values).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub metric: String,
+    pub alpha: f64,
+    pub backend: String,
+    pub engine: String,
+    pub resident: bool,
+    pub dtype: String,
+    pub chips: usize,
+    pub parallel: bool,
+    pub batch: usize,
+    pub block_k: usize,
+    pub queue_depth: usize,
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+    pub output: Option<PathBuf>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            metric: "weighted_normalized".into(),
+            alpha: 1.0,
+            backend: "cpu".into(),
+            engine: "tiled".into(),
+            resident: true,
+            dtype: "f64".into(),
+            chips: 1,
+            parallel: true,
+            batch: 32,
+            block_k: 64,
+            queue_depth: 4,
+            artifacts_dir: PathBuf::from("artifacts"),
+            seed: 42,
+            output: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file (section `[run]`, all keys optional).
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = TomlDoc::parse(&text).map_err(Error::Config)?;
+        let mut cfg = Self::default();
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        let get = |k: &str| doc.get("run", k);
+        if let Some(v) = get("metric") {
+            self.metric = v.as_str().ok_or_else(|| bad("metric"))?.to_string();
+        }
+        if let Some(v) = get("alpha") {
+            self.alpha = v.as_f64().ok_or_else(|| bad("alpha"))?;
+        }
+        if let Some(v) = get("backend") {
+            self.backend = v.as_str().ok_or_else(|| bad("backend"))?.to_string();
+        }
+        if let Some(v) = get("engine") {
+            self.engine = v.as_str().ok_or_else(|| bad("engine"))?.to_string();
+        }
+        if let Some(v) = get("resident") {
+            self.resident = v.as_bool().ok_or_else(|| bad("resident"))?;
+        }
+        if let Some(v) = get("dtype") {
+            self.dtype = v.as_str().ok_or_else(|| bad("dtype"))?.to_string();
+        }
+        if let Some(v) = get("chips") {
+            self.chips = v.as_usize().ok_or_else(|| bad("chips"))?;
+        }
+        if let Some(v) = get("parallel") {
+            self.parallel = v.as_bool().ok_or_else(|| bad("parallel"))?;
+        }
+        if let Some(v) = get("batch") {
+            self.batch = v.as_usize().ok_or_else(|| bad("batch"))?;
+        }
+        if let Some(v) = get("block_k") {
+            self.block_k = v.as_usize().ok_or_else(|| bad("block_k"))?;
+        }
+        if let Some(v) = get("queue_depth") {
+            self.queue_depth = v.as_usize().ok_or_else(|| bad("queue_depth"))?;
+        }
+        if let Some(v) = get("artifacts_dir") {
+            self.artifacts_dir = PathBuf::from(v.as_str().ok_or_else(|| bad("artifacts_dir"))?);
+        }
+        if let Some(v) = get("seed") {
+            self.seed = v.as_usize().ok_or_else(|| bad("seed"))? as u64;
+        }
+        if let Some(v) = get("output") {
+            self.output = Some(PathBuf::from(v.as_str().ok_or_else(|| bad("output"))?));
+        }
+        Ok(())
+    }
+
+    pub fn metric_enum(&self) -> Result<Metric> {
+        Metric::parse(&self.metric, self.alpha)
+            .ok_or_else(|| Error::Config(format!("unknown metric {:?}", self.metric)))
+    }
+
+    /// Resolve to coordinator [`RunOptions`].
+    pub fn to_run_options(&self) -> Result<RunOptions> {
+        let metric = self.metric_enum()?;
+        let backend = match self.backend.as_str() {
+            "cpu" => {
+                let engine = EngineKind::parse(&self.engine).ok_or_else(|| {
+                    Error::Config(format!("unknown cpu engine {:?}", self.engine))
+                })?;
+                BackendSpec::Cpu { engine, block_k: self.block_k }
+            }
+            "pjrt" => BackendSpec::Pjrt {
+                engine: if self.engine == "tiled" {
+                    // the CLI default engine name maps to the pallas kernel
+                    "pallas_tiled".to_string()
+                } else {
+                    self.engine.clone()
+                },
+                resident: self.resident,
+            },
+            other => return Err(Error::Config(format!("unknown backend {other:?}"))),
+        };
+        Ok(RunOptions {
+            metric,
+            backend,
+            chips: self.chips.max(1),
+            parallel: self.parallel,
+            batch_capacity: self.batch.max(1),
+            queue_depth: self.queue_depth.max(1),
+            artifacts_dir: Some(self.artifacts_dir.clone()),
+        })
+    }
+
+    pub fn is_f32(&self) -> Result<bool> {
+        match self.dtype.as_str() {
+            "f32" | "fp32" | "float32" => Ok(true),
+            "f64" | "fp64" | "float64" => Ok(false),
+            other => Err(Error::Config(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+fn bad(key: &str) -> Error {
+    Error::Config(format!("invalid value for {key:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_resolve() {
+        let cfg = RunConfig::default();
+        let opts = cfg.to_run_options().unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        assert!(!cfg.is_f32().unwrap());
+    }
+
+    #[test]
+    fn doc_overrides() {
+        let doc = TomlDoc::parse(
+            r#"
+# comment
+[run]
+metric = "unweighted"
+backend = "pjrt"
+engine = "jnp"
+resident = false
+dtype = "f32"
+chips = 8
+batch = 16
+"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.metric, "unweighted");
+        assert_eq!(cfg.chips, 8);
+        assert!(cfg.is_f32().unwrap());
+        let opts = cfg.to_run_options().unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Pjrt { ref engine, resident: false } if engine == "jnp"));
+    }
+
+    #[test]
+    fn pjrt_tiled_maps_to_pallas() {
+        let mut cfg = RunConfig { backend: "pjrt".into(), ..Default::default() };
+        cfg.engine = "tiled".into();
+        let opts = cfg.to_run_options().unwrap();
+        assert!(
+            matches!(opts.backend, BackendSpec::Pjrt { ref engine, .. } if engine == "pallas_tiled")
+        );
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        let cfg = RunConfig { metric: "nope".into(), ..Default::default() };
+        assert!(cfg.to_run_options().is_err());
+        let cfg = RunConfig { backend: "cuda".into(), ..Default::default() };
+        assert!(cfg.to_run_options().is_err());
+        let cfg = RunConfig { dtype: "f16".into(), ..Default::default() };
+        assert!(cfg.is_f32().is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Minimal TOML parser: sections, scalars, flat arrays, comments.
+
+use std::collections::BTreeMap;
+
+/// A TOML scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(x) if *x >= 0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live in the
+/// "" section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for item in split_top_level(trimmed) {
+                out.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(out));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body at top-level commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars_and_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+top = 1
+[a]
+s = "hi # not comment"
+i = -42
+f = 2.5
+b = true
+big = 1_000_000
+# comment
+[b]
+x = 0 # trailing comment
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("a", "s").unwrap().as_str(), Some("hi # not comment"));
+        assert_eq!(doc.get("a", "i"), Some(&TomlValue::Int(-42)));
+        assert_eq!(doc.get("a", "f").unwrap().as_f64(), Some(2.5));
+        assert_eq!(doc.get("a", "b").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("a", "big").unwrap().as_usize(), Some(1_000_000));
+        assert_eq!(doc.get("b", "x").unwrap().as_usize(), Some(0));
+        assert!(doc.get("a", "nope").is_none());
+    }
+
+    #[test]
+    fn parse_arrays() {
+        let doc = TomlDoc::parse(r#"xs = [1, 2, 3]
+ys = ["a,b", "c"]
+empty = []"#)
+            .unwrap();
+        let xs = doc.get("", "xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_usize(), Some(3));
+        let ys = doc.get("", "ys").unwrap().as_array().unwrap();
+        assert_eq!(ys[0].as_str(), Some("a,b"));
+        assert_eq!(doc.get("", "empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+    }
+
+    #[test]
+    fn negative_not_usize() {
+        let doc = TomlDoc::parse("k = -1").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_usize(), None);
+    }
+}

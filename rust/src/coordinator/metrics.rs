@@ -1,0 +1,97 @@
+//! Run accounting: what the coordinator measured, ready for reports.
+
+use crate::util::json::{obj, Json};
+
+/// Metrics of one coordinator run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub backend: String,
+    pub artifact: Option<String>,
+    pub n_samples: usize,
+    pub padded_n: usize,
+    pub n_stripes: usize,
+    pub embeddings: usize,
+    pub batches: usize,
+    /// Wall time each chip spent in the stripe phase. In sequential mode
+    /// these are true isolated per-chip measurements (the Table-2 "per
+    /// chip" row); in parallel mode they overlap.
+    pub per_chip_seconds: Vec<f64>,
+    /// Producer (embedding generation) time, seconds.
+    pub seconds_embed: f64,
+    /// End-to-end stripe phase, seconds.
+    pub seconds_total: f64,
+    pub seconds_assemble: f64,
+}
+
+impl RunMetrics {
+    /// Sum of chip times — the paper's "aggregated" row (chip-hours).
+    pub fn aggregate_chip_seconds(&self) -> f64 {
+        self.per_chip_seconds.iter().sum()
+    }
+
+    /// Slowest chip — the critical path in a perfectly parallel run.
+    pub fn max_chip_seconds(&self) -> f64 {
+        self.per_chip_seconds.iter().fold(0.0, |a, &b| a.max(b))
+    }
+
+    /// Stripe updates per second ((embedding, stripe, sample) triples).
+    pub fn updates_per_second(&self) -> f64 {
+        if self.seconds_total <= 0.0 {
+            return 0.0;
+        }
+        (self.embeddings as f64 * self.n_stripes as f64 * self.padded_n as f64)
+            / self.seconds_total
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("backend", Json::from(self.backend.as_str())),
+            (
+                "artifact",
+                self.artifact.as_deref().map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("n_samples", Json::from(self.n_samples)),
+            ("padded_n", Json::from(self.padded_n)),
+            ("n_stripes", Json::from(self.n_stripes)),
+            ("embeddings", Json::from(self.embeddings)),
+            ("batches", Json::from(self.batches)),
+            (
+                "per_chip_seconds",
+                Json::Arr(self.per_chip_seconds.iter().map(|&t| Json::Num(t)).collect()),
+            ),
+            ("seconds_embed", Json::from(self.seconds_embed)),
+            ("seconds_total", Json::from(self.seconds_total)),
+            ("seconds_assemble", Json::from(self.seconds_assemble)),
+            ("updates_per_second", Json::from(self.updates_per_second())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let m = RunMetrics {
+            per_chip_seconds: vec![1.0, 3.0, 2.0],
+            embeddings: 10,
+            n_stripes: 4,
+            padded_n: 8,
+            seconds_total: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(m.aggregate_chip_seconds(), 6.0);
+        assert_eq!(m.max_chip_seconds(), 3.0);
+        assert_eq!(m.updates_per_second(), 160.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = RunMetrics { backend: "cpu/tiled".into(), batches: 3, ..Default::default() };
+        let j = m.to_json().dump();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("batches").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("artifact").unwrap(), &Json::Null);
+    }
+}

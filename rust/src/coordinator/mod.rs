@@ -1,0 +1,166 @@
+//! The Layer-3 coordinator: chip partitioning, the streaming pipeline,
+//! and the unified run driver over CPU engines and PJRT artifacts.
+//!
+//! This is the paper's *system* layer: Striped UniFrac splits the stripe
+//! set into independent ranges ("chips" — Table 2 runs 128 CPUs / 128
+//! GPUs / 4 GPUs), each chip folds every embedding batch into its own
+//! stripe accumulators, and the leader assembles the condensed matrix.
+//!
+//! PJRT clients are thread-bound (`Rc` internally), so simulated chips
+//! are described by plain-data [`ChipSpec`]s; each worker thread
+//! constructs its own backend (its own PJRT client + compiled artifact —
+//! exactly one "device context" per chip, as on a real cluster).
+
+pub mod metrics;
+pub mod partition;
+pub mod pipeline;
+
+pub use metrics::RunMetrics;
+pub use partition::{plan_chips, ChipPlan, ChipSpec};
+pub use pipeline::{run_chips_parallel, run_chips_sequential};
+
+use crate::error::Result;
+use crate::matrix::CondensedMatrix;
+use crate::runtime::XlaReal;
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::unifrac::{EngineKind, Metric};
+use std::path::PathBuf;
+
+/// How a chip executes stripe updates.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// Pure-rust CPU engine (the paper's CPU columns).
+    Cpu { engine: EngineKind, block_k: usize },
+    /// AOT artifact via PJRT (the paper's GPU code path, CPU-executed
+    /// here; `engine` selects the artifact flavor, e.g. "pallas_tiled"
+    /// or "jnp"). `resident` keeps accumulators device-side between
+    /// batches (EXPERIMENTS.md §Perf).
+    Pjrt { engine: String, resident: bool },
+}
+
+impl BackendSpec {
+    pub fn cpu_tiled() -> Self {
+        BackendSpec::Cpu { engine: EngineKind::Tiled, block_k: 64 }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, BackendSpec::Pjrt { .. })
+    }
+}
+
+/// Options for [`run`].
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    pub metric: Metric,
+    pub backend: BackendSpec,
+    /// Number of simulated chips (stripe-range partitions).
+    pub chips: usize,
+    /// Run chips concurrently on threads (true) or one after another
+    /// while timing each (false — the Table-2 measurement mode).
+    pub parallel: bool,
+    /// Embedding rows per batch (Figure 2's `filled_embs`).
+    pub batch_capacity: usize,
+    /// Bounded queue depth per chip in parallel mode (backpressure).
+    pub queue_depth: usize,
+    /// Where the AOT artifacts live (PJRT backends).
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            metric: Metric::WeightedNormalized,
+            backend: BackendSpec::cpu_tiled(),
+            chips: 1,
+            parallel: true,
+            batch_capacity: 32,
+            queue_depth: 4,
+            artifacts_dir: Some(PathBuf::from("artifacts")),
+        }
+    }
+}
+
+/// Run output: the distance matrix plus run accounting.
+pub struct RunOutput {
+    pub dm: CondensedMatrix,
+    pub metrics: RunMetrics,
+}
+
+/// Top-level driver: plan chips, execute the pipeline, assemble.
+pub fn run<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    opts: &RunOptions,
+) -> Result<RunOutput> {
+    let plan = plan_chips::<R>(table.n_samples(), opts)?;
+    let (blocks, mut metrics) = if opts.parallel {
+        run_chips_parallel::<R>(tree, table, &plan, opts)?
+    } else {
+        run_chips_sequential::<R>(tree, table, &plan, opts)?
+    };
+    let t0 = std::time::Instant::now();
+    let metric = opts.metric;
+    let dm = CondensedMatrix::from_stripes(
+        table.n_samples(),
+        table.sample_ids().to_vec(),
+        &blocks,
+        move |num, den| metric.finalize(num, den),
+    )?;
+    metrics.seconds_assemble = t0.elapsed().as_secs_f64();
+    Ok(RunOutput { dm, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::SynthSpec;
+    use crate::unifrac::{compute_unifrac, ComputeOptions};
+
+    fn problem() -> (Phylogeny, FeatureTable) {
+        SynthSpec { n_samples: 30, n_features: 200, density: 0.05, ..Default::default() }
+            .generate()
+    }
+
+    #[test]
+    fn coordinator_matches_plain_compute_cpu() {
+        let (tree, table) = problem();
+        let reference = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { batch_capacity: 8, ..Default::default() },
+        )
+        .unwrap();
+        for chips in [1usize, 2, 5] {
+            for parallel in [false, true] {
+                let opts = RunOptions {
+                    chips,
+                    parallel,
+                    batch_capacity: 8,
+                    artifacts_dir: None,
+                    ..Default::default()
+                };
+                let out = run::<f64>(&tree, &table, &opts).unwrap();
+                let diff = out.dm.max_abs_diff(&reference);
+                assert!(diff < 1e-12, "chips={chips} parallel={parallel}: {diff}");
+                assert_eq!(out.metrics.per_chip_seconds.len(), chips.min(out.metrics.n_stripes));
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_reports_per_chip_times() {
+        let (tree, table) = problem();
+        let opts = RunOptions {
+            chips: 3,
+            parallel: false,
+            batch_capacity: 8,
+            artifacts_dir: None,
+            ..Default::default()
+        };
+        let out = run::<f64>(&tree, &table, &opts).unwrap();
+        assert_eq!(out.metrics.per_chip_seconds.len(), 3);
+        assert!(out.metrics.per_chip_seconds.iter().all(|&t| t > 0.0));
+        assert!(out.metrics.aggregate_chip_seconds() >= out.metrics.max_chip_seconds());
+    }
+}

@@ -1,0 +1,146 @@
+//! Chip planning: map the stripe set onto simulated devices.
+
+use super::{BackendSpec, RunOptions};
+use crate::embed::default_padding;
+use crate::error::{Error, Result};
+use crate::matrix::total_stripes;
+use crate::runtime::{ArtifactQuery, Manifest, XlaReal};
+use crate::unifrac::EngineKind;
+
+/// One simulated chip: a stripe range plus its backend. Plain data so it
+/// can cross threads (PJRT clients are constructed per-thread).
+#[derive(Clone, Debug)]
+pub struct ChipSpec {
+    pub chip_id: usize,
+    /// First global stripe this chip owns.
+    pub start: usize,
+    /// Stripes owned (trimmed to this count at finish).
+    pub count: usize,
+    pub backend: BackendSpec,
+}
+
+/// The full plan for one run.
+#[derive(Clone, Debug)]
+pub struct ChipPlan {
+    /// Padded sample-chunk width.
+    pub padded_n: usize,
+    /// Total stripes to cover (padded_n / 2).
+    pub n_stripes: usize,
+    /// Artifact name (PJRT backends; informational).
+    pub artifact: Option<String>,
+    /// Stripe-block height the backend computes per invocation (PJRT
+    /// artifacts have a fixed S; CPU engines use exactly `count`).
+    pub block_stripes: usize,
+    /// Embedding rows per batch: the artifact's fixed E for PJRT
+    /// backends, `opts.batch_capacity` for CPU engines.
+    pub batch_capacity: usize,
+    pub chips: Vec<ChipSpec>,
+}
+
+/// Build the chip plan for `n_samples` under `opts`.
+///
+/// CPU backends pad to the tile quantum; PJRT backends pad to the
+/// selected artifact's chunk width (and verify the problem fits — one
+/// artifact chunk is the unit of this reproduction; larger sample counts
+/// use the CPU engines, as Table 2's scale does in the benches).
+pub fn plan_chips<R: XlaReal>(n_samples: usize, opts: &RunOptions) -> Result<ChipPlan> {
+    if n_samples < 2 {
+        return Err(Error::Shape("need >= 2 samples".into()));
+    }
+    let dtype = if R::BYTES == 4 { "float32" } else { "float64" };
+    let (padded, artifact, block_stripes, batch_capacity) = match &opts.backend {
+        BackendSpec::Cpu { engine, block_k } => {
+            let quantum = if *engine == EngineKind::Tiled { (*block_k).clamp(4, 64) } else { 4 };
+            let padded = default_padding(n_samples, quantum);
+            (padded, None, 0, opts.batch_capacity.max(1))
+        }
+        BackendSpec::Pjrt { engine, .. } => {
+            let dir = opts
+                .artifacts_dir
+                .as_ref()
+                .ok_or_else(|| Error::Config("pjrt backend needs artifacts_dir".into()))?;
+            let manifest = Manifest::load(dir.join("manifest.json"))?;
+            let q = ArtifactQuery::new(opts.metric, dtype, engine, n_samples);
+            let a = manifest.select(&q)?;
+            (a.n_samples, Some(a.name.clone()), a.n_stripes, a.emb_batch)
+        }
+    };
+    let n_stripes = total_stripes(padded);
+    let chips_n = opts.chips.max(1).min(n_stripes);
+    let ranges = crate::unifrac::compute::split_ranges(n_stripes, chips_n);
+    let chips = ranges
+        .into_iter()
+        .enumerate()
+        .map(|(chip_id, (start, count))| ChipSpec {
+            chip_id,
+            start,
+            count,
+            backend: opts.backend.clone(),
+        })
+        .collect();
+    Ok(ChipPlan { padded_n: padded, n_stripes, artifact, block_stripes, batch_capacity, chips })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunOptions;
+    use crate::unifrac::Metric;
+
+    #[test]
+    fn cpu_plan_covers_all_stripes() {
+        let opts = RunOptions { chips: 4, artifacts_dir: None, ..Default::default() };
+        let plan = plan_chips::<f64>(100, &opts).unwrap();
+        assert!(plan.padded_n >= 100);
+        assert_eq!(plan.n_stripes, plan.padded_n / 2);
+        let covered: usize = plan.chips.iter().map(|c| c.count).sum();
+        assert_eq!(covered, plan.n_stripes);
+        assert_eq!(plan.chips.len(), 4);
+        assert!(plan.artifact.is_none());
+        // contiguous, ordered
+        let mut next = 0;
+        for c in &plan.chips {
+            assert_eq!(c.start, next);
+            next += c.count;
+        }
+    }
+
+    #[test]
+    fn more_chips_than_stripes_clamped() {
+        let opts = RunOptions { chips: 1000, artifacts_dir: None, ..Default::default() };
+        let plan = plan_chips::<f64>(10, &opts).unwrap();
+        assert!(plan.chips.len() <= plan.n_stripes);
+    }
+
+    #[test]
+    fn pjrt_plan_uses_artifact_geometry() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let opts = RunOptions {
+            metric: Metric::WeightedNormalized,
+            backend: BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: false },
+            artifacts_dir: Some(dir),
+            ..Default::default()
+        };
+        let plan = plan_chips::<f64>(50, &opts).unwrap();
+        assert!(plan.padded_n >= 50);
+        assert!(plan.artifact.is_some());
+        assert!(plan.block_stripes > 0);
+    }
+
+    #[test]
+    fn pjrt_plan_too_large_errors() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let opts = RunOptions {
+            backend: BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: false },
+            artifacts_dir: Some(dir),
+            ..Default::default()
+        };
+        assert!(plan_chips::<f64>(1_000_000, &opts).is_err());
+    }
+}

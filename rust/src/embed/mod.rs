@@ -1,0 +1,307 @@
+//! Node-embedding generation: the producer side of Striped UniFrac.
+//!
+//! For every non-root tree node the algorithm needs the per-sample mass
+//! under that node ("embedding" — the `emb` buffer of the paper's
+//! Figures 1-3) and the node's branch length. This module computes them
+//! by a single postorder dynamic program over the tree and groups them
+//! into fixed-size batches (the paper's Figure-2 "batch many input
+//! buffers in a single kernel invocation").
+//!
+//! Rows are emitted circularly duplicated (`[mass | mass]`, length `2N`)
+//! so the stripe kernels can read `emb[k + stripe + 1]` without modular
+//! arithmetic — the exact trick of the original C++ implementation.
+
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::util::{round_up, Real};
+use std::collections::HashMap;
+
+/// What the embedding rows contain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EmbeddingKind {
+    /// 0/1 presence of the node's subtree in each sample (unweighted).
+    Presence,
+    /// Summed relative abundance under the node (weighted/generalized).
+    Proportion,
+}
+
+/// One batch of embeddings, ready for a stripe engine or PJRT artifact.
+#[derive(Clone, Debug)]
+pub struct EmbBatch<R: Real> {
+    /// Padded sample-chunk width N (each row is `2N` long).
+    pub n_samples: usize,
+    /// Rows actually filled; rows `filled..capacity` are zero (with zero
+    /// lengths) so fixed-shape artifacts can consume partial batches.
+    pub filled: usize,
+    /// Row capacity E of this batch.
+    pub capacity: usize,
+    /// Row-major `[capacity, 2 * n_samples]`.
+    pub emb: Vec<R>,
+    /// Branch lengths `[capacity]` (zero beyond `filled`).
+    pub lengths: Vec<R>,
+}
+
+impl<R: Real> EmbBatch<R> {
+    fn new(n_samples: usize, capacity: usize) -> Self {
+        Self {
+            n_samples,
+            filled: 0,
+            capacity,
+            emb: vec![R::ZERO; capacity * 2 * n_samples],
+            lengths: vec![R::ZERO; capacity],
+        }
+    }
+
+    /// Row `e` (duplicated, length `2N`).
+    pub fn row(&self, e: usize) -> &[R] {
+        &self.emb[e * 2 * self.n_samples..(e + 1) * 2 * self.n_samples]
+    }
+
+    fn push(&mut self, mass: &[f64], length: f64) {
+        debug_assert!(self.filled < self.capacity);
+        debug_assert!(mass.len() <= self.n_samples);
+        let e = self.filled;
+        let row = &mut self.emb[e * 2 * self.n_samples..(e + 1) * 2 * self.n_samples];
+        for (k, &m) in mass.iter().enumerate() {
+            let v = R::from_f64(m);
+            row[k] = v;
+            row[self.n_samples + k] = v;
+        }
+        self.lengths[e] = R::from_f64(length);
+        self.filled += 1;
+    }
+}
+
+/// Compute all embeddings for `(tree, table)` and hand them to `sink` in
+/// batches of `batch_capacity` rows, padded to `padded_n` columns.
+///
+/// Streaming contract: each batch is passed to `sink` exactly once, in a
+/// deterministic (postorder) order, and then dropped — peak memory is
+/// O(tree depth · N + batch), never O(nodes · N).
+///
+/// Returns the number of embeddings (non-root nodes) produced.
+pub fn generate_embeddings<R: Real>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    kind: EmbeddingKind,
+    padded_n: usize,
+    batch_capacity: usize,
+    mut sink: impl FnMut(&EmbBatch<R>),
+) -> crate::Result<usize> {
+    let n = table.n_samples();
+    assert!(padded_n >= n, "padded_n < n_samples");
+    assert!(batch_capacity > 0);
+
+    let leaf_index = tree.leaf_index()?;
+    // feature id -> leaf node, then leaf node -> per-sample values
+    let cols = match kind {
+        EmbeddingKind::Presence => table.by_feature(),
+        EmbeddingKind::Proportion => table.proportions_by_feature(),
+    };
+    let mut leaf_values: HashMap<usize, &[(u32, f64)]> = HashMap::new();
+    for (f, fid) in table.feature_ids().iter().enumerate() {
+        let leaf = *leaf_index.get(fid.as_str()).ok_or_else(|| {
+            crate::Error::invalid(format!("feature {fid:?} not a tree leaf"))
+        })?;
+        leaf_values.insert(leaf, &cols[f]);
+    }
+
+    // postorder DP: keep each node's mass row until its parent consumes it
+    let mut pending: HashMap<usize, Vec<f64>> = HashMap::new();
+    let mut batch = EmbBatch::<R>::new(padded_n, batch_capacity);
+    let mut produced = 0usize;
+    let root = tree.root();
+    for &node in tree.postorder() {
+        let mut mass = if tree.is_leaf(node) {
+            let mut m = vec![0.0f64; n];
+            if let Some(col) = leaf_values.get(&node) {
+                for &(s, v) in col.iter() {
+                    m[s as usize] = match kind {
+                        EmbeddingKind::Presence => {
+                            if v > 0.0 {
+                                1.0
+                            } else {
+                                0.0
+                            }
+                        }
+                        EmbeddingKind::Proportion => v,
+                    };
+                }
+            }
+            m
+        } else {
+            // sum (or OR) of children, consuming their pending rows
+            let mut m = vec![0.0f64; n];
+            for &c in tree.children(node) {
+                let child = pending.remove(&c).expect("postorder guarantees child done");
+                for (a, b) in m.iter_mut().zip(&child) {
+                    *a += b;
+                }
+            }
+            if kind == EmbeddingKind::Presence {
+                for a in m.iter_mut() {
+                    if *a > 0.0 {
+                        *a = 1.0;
+                    }
+                }
+            }
+            m
+        };
+
+        if node == root {
+            break; // root mass (== 1 or all-presence) carries no branch
+        }
+        batch.push(&mass, tree.branch_length(node));
+        produced += 1;
+        if batch.filled == batch.capacity {
+            sink(&batch);
+            batch = EmbBatch::<R>::new(padded_n, batch_capacity);
+        }
+        // keep for the parent
+        if kind == EmbeddingKind::Presence {
+            // presence DP must keep the clamped row
+        }
+        mass.shrink_to_fit();
+        pending.insert(node, mass);
+    }
+    if batch.filled > 0 {
+        sink(&batch);
+    }
+    Ok(produced)
+}
+
+/// Convenience: materialize all batches (tests / small problems).
+pub fn collect_batches<R: Real>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    kind: EmbeddingKind,
+    padded_n: usize,
+    batch_capacity: usize,
+) -> crate::Result<Vec<EmbBatch<R>>> {
+    let mut out = Vec::new();
+    generate_embeddings(tree, table, kind, padded_n, batch_capacity, |b| {
+        out.push(b.clone())
+    })?;
+    Ok(out)
+}
+
+/// Default padded width: round up to a multiple of `quantum` (the tiled
+/// engines and AOT artifacts want aligned chunks; paper §3 notes "it is
+/// very important to properly align the memory buffers").
+pub fn default_padding(n_samples: usize, quantum: usize) -> usize {
+    round_up(n_samples.max(2), quantum.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::parse_newick;
+
+    fn tiny() -> (Phylogeny, FeatureTable) {
+        // ((A:1,B:2):0.5,C:3);  samples: s0={A:2}, s1={A:1,B:1}, s2={C:4}
+        let tree = parse_newick("((A:1,B:2):0.5,C:3);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["s0".into(), "s1".into(), "s2".into()],
+            vec!["A".into(), "B".into(), "C".into()],
+            &[vec![2.0, 0.0, 0.0], vec![1.0, 1.0, 0.0], vec![0.0, 0.0, 4.0]],
+        )
+        .unwrap();
+        (tree, table)
+    }
+
+    #[test]
+    fn proportion_embeddings_sum_and_duplicate() {
+        let (tree, table) = tiny();
+        let batches =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 4, 16).unwrap();
+        assert_eq!(batches.len(), 1);
+        let b = &batches[0];
+        assert_eq!(b.filled, 4); // A, B, AB-clade, C (root excluded)
+        // find the AB clade row: length 0.5
+        let e = (0..b.filled).find(|&e| b.lengths[e] == 0.5).unwrap();
+        let row = b.row(e);
+        // s0: A only -> 1.0 ; s1: A+B = 0.5 + 0.5 ; s2: 0
+        assert!((row[0] - 1.0).abs() < 1e-12);
+        assert!((row[1] - 1.0).abs() < 1e-12);
+        assert_eq!(row[2], 0.0);
+        assert_eq!(row[3], 0.0); // padding column
+        // circular duplication
+        assert_eq!(row[4], row[0]);
+        assert_eq!(row[5], row[1]);
+    }
+
+    #[test]
+    fn presence_embeddings_clamped() {
+        let (tree, table) = tiny();
+        let batches =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Presence, 4, 16).unwrap();
+        let b = &batches[0];
+        let e = (0..b.filled).find(|&e| b.lengths[e] == 0.5).unwrap();
+        let row = b.row(e);
+        // presence of AB clade: s0 yes, s1 yes (clamped from 2 leaves), s2 no
+        assert_eq!(&row[..3], &[1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn batching_splits_and_zero_pads() {
+        let (tree, table) = tiny();
+        let batches =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 4, 3).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].filled, 3);
+        assert_eq!(batches[1].filled, 1);
+        // unfilled rows are zero
+        let b1 = &batches[1];
+        assert!(b1.row(1).iter().all(|&x| x == 0.0));
+        assert_eq!(b1.lengths[1], 0.0);
+    }
+
+    #[test]
+    fn produced_count_is_nonroot_nodes() {
+        let (tree, table) = tiny();
+        let mut total_rows = 0usize;
+        let produced = generate_embeddings::<f64>(
+            &tree,
+            &table,
+            EmbeddingKind::Proportion,
+            4,
+            2,
+            |b| total_rows += b.filled,
+        )
+        .unwrap();
+        assert_eq!(produced, tree.n_nodes() - 1);
+        assert_eq!(total_rows, produced);
+    }
+
+    #[test]
+    fn f32_batches_cast() {
+        let (tree, table) = tiny();
+        let b64 =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 4, 16).unwrap();
+        let b32 =
+            collect_batches::<f32>(&tree, &table, EmbeddingKind::Proportion, 4, 16).unwrap();
+        for (x, y) in b64[0].emb.iter().zip(&b32[0].emb) {
+            assert!((x - *y as f64).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn missing_leaf_errors() {
+        let tree = parse_newick("(A:1,B:1);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["s".into()],
+            vec!["NOPE".into()],
+            &[vec![1.0]],
+        )
+        .unwrap();
+        let r = collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 2, 4);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn default_padding_quantum() {
+        assert_eq!(default_padding(5, 4), 8);
+        assert_eq!(default_padding(8, 4), 8);
+        assert_eq!(default_padding(1, 4), 4);
+    }
+}

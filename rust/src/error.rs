@@ -1,0 +1,57 @@
+//! Unified error type for the whole crate.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("newick parse error at byte {at}: {msg}")]
+    Newick { at: usize, msg: String },
+
+    #[error("table parse error: {0}")]
+    Table(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("no artifact matches request: {0}")]
+    NoArtifact(String),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Newick { at: 3, msg: "unexpected )".into() };
+        assert!(e.to_string().contains("byte 3"));
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

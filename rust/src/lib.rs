@@ -1,0 +1,33 @@
+//! # unifrac — Striped UniFrac on a Rust + JAX + Pallas three-layer stack
+//!
+//! A from-scratch reproduction of *"Porting and optimizing UniFrac for
+//! GPUs"* (Sfiligoi, McDonald, Knight; PEARC'20). See `DESIGN.md` for the
+//! system inventory and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Architecture (Python never on the compute path):
+//! - **Layer 1** (`python/compile/kernels/`): Pallas stripe-update kernel,
+//!   AOT-lowered at build time.
+//! - **Layer 2** (`python/compile/model.py`): JAX stripe-batch graph →
+//!   HLO text artifacts (`artifacts/`).
+//! - **Layer 3** (this crate): phylogeny/table substrates, the striped
+//!   compute engines, the chip partitioner/coordinator, the PJRT runtime
+//!   that executes the AOT artifacts, statistics, and the CLI.
+
+pub mod error;
+pub mod matrix;
+pub mod synth;
+pub mod table;
+pub mod tree;
+pub mod util;
+
+pub use error::{Error, Result};
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod devicemodel;
+pub mod embed;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod unifrac;

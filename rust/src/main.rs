@@ -1,0 +1,9 @@
+//! `unifrac` — the Layer-3 leader binary.
+//!
+//! Self-contained after `make artifacts`: loads AOT-compiled HLO
+//! artifacts via PJRT; Python is never on the compute path.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(unifrac::cli::run_cli(argv));
+}

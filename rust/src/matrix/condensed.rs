@@ -1,0 +1,364 @@
+//! Condensed (upper-triangle) pairwise distance matrix + stripe assembly.
+
+use super::stripes::{total_stripes, StripeBlock};
+use crate::error::{Error, Result};
+use crate::util::{pearson, Real};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Symmetric zero-diagonal distance matrix stored as the condensed upper
+/// triangle (scipy `squareform` layout).
+#[derive(Clone, Debug)]
+pub struct CondensedMatrix {
+    n: usize,
+    data: Vec<f64>,
+    ids: Vec<String>,
+}
+
+impl CondensedMatrix {
+    pub fn zeros(n: usize, ids: Vec<String>) -> Self {
+        assert!(n >= 2, "need at least 2 samples");
+        assert!(ids.is_empty() || ids.len() == n, "id count mismatch");
+        Self { n, data: vec![0.0; n * (n - 1) / 2], ids }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n
+    }
+
+    pub fn ids(&self) -> &[String] {
+        &self.ids
+    }
+
+    /// Condensed vector (pair order: (0,1), (0,2), ..., (n-2,n-1)).
+    pub fn condensed(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    fn index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < j && j < self.n);
+        // offset of row i in the condensed triangle
+        i * self.n - i * (i + 1) / 2 + (j - i - 1)
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        let (a, b) = (i.min(j), i.max(j));
+        self.data[self.index(a, b)]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        assert_ne!(i, j, "diagonal is fixed at 0");
+        let (a, b) = (i.min(j), i.max(j));
+        let idx = self.index(a, b);
+        self.data[idx] = v;
+    }
+
+    /// Assemble from finished stripe blocks.
+    ///
+    /// `n_real` is the true sample count; the blocks may be padded to a
+    /// wider chunk (`block.n_samples() >= n_real`) — pairs touching padded
+    /// columns are ignored (DESIGN.md §4: padding preserves real pairs).
+    /// `finalize(num, den) -> distance` applies the metric's final ratio.
+    /// Every real pair must be covered by exactly the stripes
+    /// `0..total_stripes(P)` over the padded width `P`; missing stripes
+    /// are an error.
+    pub fn from_stripes<R: Real>(
+        n_real: usize,
+        ids: Vec<String>,
+        blocks: &[StripeBlock<R>],
+        finalize: impl Fn(f64, f64) -> f64,
+    ) -> Result<Self> {
+        if n_real < 2 {
+            return Err(Error::Shape("need at least 2 samples".into()));
+        }
+        let padded = blocks
+            .first()
+            .map(|b| b.n_samples())
+            .ok_or_else(|| Error::Shape("no stripe blocks".into()))?;
+        if padded < n_real {
+            return Err(Error::Shape(format!(
+                "blocks are {padded} wide but {n_real} samples requested"
+            )));
+        }
+        let needed = total_stripes(padded);
+        let mut covered = vec![false; needed];
+        let mut m = Self::zeros(n_real, ids);
+        for block in blocks {
+            if block.n_samples() != padded {
+                return Err(Error::Shape("inconsistent block widths".into()));
+            }
+            for s_local in 0..block.n_stripes() {
+                let s = block.start() + s_local;
+                if s >= needed {
+                    continue; // harmless over-computation beyond coverage
+                }
+                if covered[s] {
+                    return Err(Error::Shape(format!("stripe {s} covered twice")));
+                }
+                covered[s] = true;
+                let num = block.num_row(s_local);
+                let den = block.den_row(s_local);
+                for k in 0..padded {
+                    let j = (k + s + 1) % padded;
+                    if k >= n_real || j >= n_real || k == j {
+                        continue; // padding or degenerate
+                    }
+                    m.set(k, j, finalize(num[k].to_f64(), den[k].to_f64()));
+                }
+            }
+        }
+        if let Some(missing) = covered.iter().position(|&c| !c) {
+            return Err(Error::Shape(format!("stripe {missing} never computed")));
+        }
+        Ok(m)
+    }
+
+    /// Dense square copy (row-major n×n).
+    pub fn to_square(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n * self.n];
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let v = self.get(i, j);
+                out[i * self.n + j] = v;
+                out[j * self.n + i] = v;
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!(self.n, other.n, "size mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Pearson correlation of the two condensed vectors (the statistic
+    /// underlying the paper's Mantel R² fp32-vs-fp64 comparison).
+    pub fn correlation(&self, other: &Self) -> f64 {
+        assert_eq!(self.n, other.n, "size mismatch");
+        pearson(&self.data, &other.data)
+    }
+
+    /// Write the standard square TSV (`qiime`-style) distance matrix.
+    pub fn write_tsv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        let id = |i: usize| -> String {
+            self.ids.get(i).cloned().unwrap_or_else(|| format!("S{i}"))
+        };
+        for i in 0..self.n {
+            write!(w, "\t{}", id(i))?;
+        }
+        writeln!(w)?;
+        for i in 0..self.n {
+            write!(w, "{}", id(i))?;
+            for j in 0..self.n {
+                write!(w, "\t{:.10}", self.get(i, j))?;
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+
+    /// Read the square TSV written by [`write_tsv`]; validates symmetry.
+    pub fn read_tsv(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let r = BufReader::new(f);
+        let mut lines = r.lines();
+        let header = lines.next().ok_or_else(|| Error::Table("empty matrix file".into()))??;
+        let ids: Vec<String> =
+            header.split('\t').skip(1).map(|s| s.to_string()).collect();
+        let n = ids.len();
+        if n < 2 {
+            return Err(Error::Table("matrix needs >= 2 samples".into()));
+        }
+        let mut m = Self::zeros(n, ids);
+        let mut rows = 0;
+        for (i, line) in lines.enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cells: Vec<&str> = line.split('\t').collect();
+            if cells.len() != n + 1 {
+                return Err(Error::Table(format!("row {i}: wrong cell count")));
+            }
+            for (j, cell) in cells[1..].iter().enumerate() {
+                let v: f64 = cell
+                    .parse()
+                    .map_err(|_| Error::Table(format!("row {i}: bad value {cell:?}")))?;
+                if i == j {
+                    if v != 0.0 {
+                        return Err(Error::Table(format!("nonzero diagonal at {i}")));
+                    }
+                } else if i < j {
+                    m.set(i, j, v);
+                } else {
+                    let existing = m.get(j, i);
+                    if (existing - v).abs() > 1e-8 * (1.0 + existing.abs()) {
+                        return Err(Error::Table(format!(
+                            "asymmetry at ({i},{j}): {existing} vs {v}"
+                        )));
+                    }
+                }
+            }
+            rows += 1;
+        }
+        if rows != n {
+            return Err(Error::Table(format!("{rows} rows for {n} ids")));
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_layout_matches_scipy_squareform() {
+        let mut m = CondensedMatrix::zeros(4, vec![]);
+        // condensed order: (0,1),(0,2),(0,3),(1,2),(1,3),(2,3)
+        let pairs = [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
+        for (rank, (i, j)) in pairs.iter().enumerate() {
+            m.set(*i, *j, rank as f64);
+        }
+        assert_eq!(m.condensed(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(m.get(3, 1), 4.0); // symmetric access
+        assert_eq!(m.get(2, 2), 0.0); // diagonal
+    }
+
+    #[test]
+    fn stripe_assembly_round_trips_known_matrix() {
+        // build stripes for a known 5-sample "distance" = i + j (i<j),
+        // using num = i+j, den = 1 so finalize(num,den) = num/den
+        let n = 5usize;
+        let s_total = total_stripes(n); // 2
+        let mut block = StripeBlock::<f64>::new(n, 0, s_total);
+        for s in 0..s_total {
+            let (num, den) = block.rows_mut(s);
+            for k in 0..n {
+                let j = (k + s + 1) % n;
+                if k != j {
+                    num[k] = (k + j) as f64;
+                    den[k] = 1.0;
+                }
+            }
+        }
+        let m = CondensedMatrix::from_stripes(
+            n,
+            vec![],
+            &[block],
+            |num, den| if den > 0.0 { num / den } else { 0.0 },
+        )
+        .unwrap();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(m.get(i, j), (i + j) as f64, "pair ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn stripe_assembly_with_padding() {
+        // 5 real samples padded to 8 columns; pad columns hold garbage
+        let n_real = 5usize;
+        let padded = 8usize;
+        let mut block = StripeBlock::<f64>::new(padded, 0, total_stripes(padded));
+        for s in 0..block.n_stripes() {
+            let (num, den) = block.rows_mut(s);
+            for k in 0..padded {
+                let j = (k + s + 1) % padded;
+                num[k] = if k < n_real && j < n_real { (k + j) as f64 } else { 999.0 };
+                den[k] = 1.0;
+            }
+        }
+        let m =
+            CondensedMatrix::from_stripes(n_real, vec![], &[block], |n, d| n / d).unwrap();
+        for i in 0..n_real {
+            for j in (i + 1)..n_real {
+                assert_eq!(m.get(i, j), (i + j) as f64, "pair ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn stripe_assembly_multi_block() {
+        let n = 8usize;
+        let s_total = total_stripes(n); // 4
+        let mk = |start: usize, count: usize| {
+            let mut b = StripeBlock::<f64>::new(n, start, count);
+            for sl in 0..count {
+                let s = start + sl;
+                let (num, den) = b.rows_mut(sl);
+                for k in 0..n {
+                    let j = (k + s + 1) % n;
+                    num[k] = (k * j) as f64;
+                    den[k] = 1.0;
+                }
+            }
+            b
+        };
+        let blocks = [mk(0, 1), mk(1, 2), mk(3, s_total - 3)];
+        let m = CondensedMatrix::from_stripes(n, vec![], &blocks, |a, b| a / b).unwrap();
+        assert_eq!(m.get(2, 5), 10.0);
+        assert_eq!(m.get(0, 7), 0.0);
+    }
+
+    #[test]
+    fn stripe_assembly_detects_gaps_and_overlap() {
+        let n = 8usize;
+        let b0 = StripeBlock::<f64>::new(n, 0, 2);
+        assert!(CondensedMatrix::from_stripes(n, vec![], &[b0.clone()], |a, _| a).is_err());
+        let b_dup = StripeBlock::<f64>::new(n, 1, 3);
+        assert!(
+            CondensedMatrix::from_stripes(n, vec![], &[b0, b_dup.clone(), b_dup], |a, _| a)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn correlation_and_diff() {
+        let mut a = CondensedMatrix::zeros(3, vec![]);
+        let mut b = CondensedMatrix::zeros(3, vec![]);
+        for (r, (i, j)) in [(0usize, 1usize), (0, 2), (1, 2)].iter().enumerate() {
+            a.set(*i, *j, r as f64);
+            b.set(*i, *j, 2.0 * r as f64 + 1.0);
+        }
+        assert!((a.correlation(&b) - 1.0).abs() < 1e-12);
+        assert!((a.max_abs_diff(&b) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let dir = std::env::temp_dir().join("unifrac_test_dm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dm.tsv");
+        let mut m = CondensedMatrix::zeros(3, vec!["a".into(), "b".into(), "c".into()]);
+        m.set(0, 1, 0.5);
+        m.set(0, 2, 0.25);
+        m.set(1, 2, 1.0);
+        m.write_tsv(&p).unwrap();
+        let back = CondensedMatrix::read_tsv(&p).unwrap();
+        assert_eq!(back.n_samples(), 3);
+        assert_eq!(back.ids(), m.ids());
+        assert!(m.max_abs_diff(&back) < 1e-9);
+    }
+
+    #[test]
+    fn to_square_symmetry() {
+        let mut m = CondensedMatrix::zeros(3, vec![]);
+        m.set(0, 2, 0.7);
+        let sq = m.to_square();
+        assert_eq!(sq[0 * 3 + 2], 0.7);
+        assert_eq!(sq[2 * 3 + 0], 0.7);
+        assert_eq!(sq[1 * 3 + 1], 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Distance-matrix substrate: stripe accumulators + condensed matrix.
+//!
+//! Striped UniFrac's central data structure is the *stripe buffer*
+//! (`dm_stripes_buf` in the paper's Figure 1): stripe `s` holds, for every
+//! sample `k`, the running numerator/denominator of the pair
+//! `(k, (k + s + 1) mod N)`. Assembly maps finished stripes into the
+//! standard condensed pairwise matrix.
+
+mod condensed;
+mod stripes;
+
+pub use condensed::CondensedMatrix;
+pub use stripes::{total_stripes, StripeBlock};

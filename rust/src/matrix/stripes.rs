@@ -1,0 +1,147 @@
+//! Stripe accumulator block — the paper's unified `dm_stripes_buf`.
+
+use crate::util::Real;
+
+/// Number of stripes needed to cover every unordered pair of `n` samples:
+/// circular pair distances run 1..=n/2, i.e. `n/2` stripes (for even `n`
+/// the last stripe visits each of its pairs twice, matching the original
+/// Striped UniFrac implementation).
+pub fn total_stripes(n: usize) -> usize {
+    n / 2
+}
+
+/// Accumulators for stripes `start .. start + n_stripes` over a chunk of
+/// `n_samples` columns, stored as one contiguous row-major `[S, N]` pair
+/// of buffers (numerator, denominator) — the paper's Figure-1 "unified
+/// memory buffer" replacing the original array-of-pointers layout.
+#[derive(Clone, Debug)]
+pub struct StripeBlock<R: Real> {
+    n_samples: usize,
+    start: usize,
+    n_stripes: usize,
+    pub num: Vec<R>,
+    pub den: Vec<R>,
+}
+
+impl<R: Real> StripeBlock<R> {
+    pub fn new(n_samples: usize, start: usize, n_stripes: usize) -> Self {
+        assert!(n_samples >= 2, "need at least two samples");
+        assert!(
+            start + n_stripes <= total_stripes(n_samples).max(start + n_stripes).min(n_samples),
+            "stripe range out of bounds"
+        );
+        Self {
+            n_samples,
+            start,
+            n_stripes,
+            num: vec![R::ZERO; n_stripes * n_samples],
+            den: vec![R::ZERO; n_stripes * n_samples],
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    pub fn n_stripes(&self) -> usize {
+        self.n_stripes
+    }
+
+    /// Global stripe ids covered by this block.
+    pub fn stripe_range(&self) -> std::ops::Range<usize> {
+        self.start..self.start + self.n_stripes
+    }
+
+    /// Numerator row of local stripe `s`.
+    pub fn num_row(&self, s: usize) -> &[R] {
+        &self.num[s * self.n_samples..(s + 1) * self.n_samples]
+    }
+
+    pub fn den_row(&self, s: usize) -> &[R] {
+        &self.den[s * self.n_samples..(s + 1) * self.n_samples]
+    }
+
+    /// Mutable (num, den) rows of local stripe `s`.
+    pub fn rows_mut(&mut self, s: usize) -> (&mut [R], &mut [R]) {
+        let (a, b) = (s * self.n_samples, (s + 1) * self.n_samples);
+        (&mut self.num[a..b], &mut self.den[a..b])
+    }
+
+    /// Replace contents from flat `[S, N]` buffers (PJRT output path).
+    pub fn load_from_flat(&mut self, num: Vec<R>, den: Vec<R>) {
+        assert_eq!(num.len(), self.n_stripes * self.n_samples);
+        assert_eq!(den.len(), self.n_stripes * self.n_samples);
+        self.num = num;
+        self.den = den;
+    }
+
+    /// Max |self - other| over both buffers (fp32-vs-fp64 validation).
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!(self.num.len(), other.num.len());
+        let mut m = 0.0f64;
+        for (a, b) in self.num.iter().zip(&other.num) {
+            m = m.max((a.to_f64() - b.to_f64()).abs());
+        }
+        for (a, b) in self.den.iter().zip(&other.den) {
+            m = m.max((a.to_f64() - b.to_f64()).abs());
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_stripes_covers_all_pairs() {
+        // brute-force: every unordered pair must appear in some stripe
+        for n in [2usize, 3, 4, 5, 8, 9, 16, 17] {
+            let s_total = total_stripes(n);
+            let mut seen = std::collections::HashSet::new();
+            for s in 0..s_total {
+                for k in 0..n {
+                    let j = (k + s + 1) % n;
+                    let (a, b) = (k.min(j), k.max(j));
+                    if a != b {
+                        seen.insert((a, b));
+                    }
+                }
+            }
+            assert_eq!(seen.len(), n * (n - 1) / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn rows_and_ranges() {
+        let mut b = StripeBlock::<f64>::new(8, 2, 2);
+        assert_eq!(b.stripe_range(), 2..4);
+        {
+            let (num, den) = b.rows_mut(1);
+            num[3] = 7.0;
+            den[3] = 9.0;
+        }
+        assert_eq!(b.num_row(1)[3], 7.0);
+        assert_eq!(b.den_row(1)[3], 9.0);
+        assert_eq!(b.num_row(0)[3], 0.0);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let mut a = StripeBlock::<f64>::new(4, 0, 2);
+        let b = StripeBlock::<f64>::new(4, 0, 2);
+        a.num[5] = 0.25;
+        assert_eq!(a.max_abs_diff(&b), 0.25);
+    }
+
+    #[test]
+    fn load_from_flat() {
+        let mut b = StripeBlock::<f32>::new(4, 0, 1);
+        b.load_from_flat(vec![1.0; 4], vec![2.0; 4]);
+        assert_eq!(b.num_row(0), &[1.0f32; 4]);
+    }
+}

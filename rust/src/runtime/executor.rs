@@ -1,0 +1,215 @@
+//! Typed stripe-update executor over one compiled artifact.
+//!
+//! Two execution modes:
+//! * [`StripeExecutor::update`] — literal in / literal out per call
+//!   (simple, used for one-shot runs and tests);
+//! * [`ResidentUpdater`] — the num/den accumulators stay **device
+//!   resident** between calls (`execute_b`), so per-batch traffic is only
+//!   the embedding upload. This is the paper's Figure-2 insight applied
+//!   at the coordinator level: do not round-trip the main buffer on every
+//!   kernel invocation (see EXPERIMENTS.md §Perf for the measured win).
+
+use super::manifest::Artifact;
+use crate::embed::EmbBatch;
+use crate::error::{Error, Result};
+use crate::matrix::StripeBlock;
+use crate::util::Real;
+use std::sync::Arc;
+
+/// Marker trait tying `Real` to the xla element types (f32/f64 only).
+pub trait XlaReal: Real + xla::NativeType + xla::ArrayElement {}
+impl XlaReal for f32 {}
+impl XlaReal for f64 {}
+
+/// A compiled stripe-update artifact, ready to execute. Cheap to clone
+/// (the executable is shared).
+#[derive(Clone)]
+pub struct StripeExecutor {
+    artifact: Artifact,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl StripeExecutor {
+    pub(super) fn new(artifact: Artifact, exe: Arc<xla::PjRtLoadedExecutable>) -> Self {
+        Self { artifact, exe }
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    fn check_shapes<R: XlaReal>(
+        &self,
+        batch: &EmbBatch<R>,
+        block: &StripeBlock<R>,
+    ) -> Result<()> {
+        let a = &self.artifact;
+        let want_dtype = if R::BYTES == 4 { "float32" } else { "float64" };
+        if a.dtype != want_dtype {
+            return Err(Error::Shape(format!(
+                "artifact {} is {}, caller is {want_dtype}",
+                a.name, a.dtype
+            )));
+        }
+        if batch.n_samples != a.n_samples || batch.capacity != a.emb_batch {
+            return Err(Error::Shape(format!(
+                "batch [{}x{}] does not match artifact [{}x{}]",
+                batch.capacity, batch.n_samples, a.emb_batch, a.n_samples
+            )));
+        }
+        if block.n_samples() != a.n_samples || block.n_stripes() != a.n_stripes {
+            return Err(Error::Shape(format!(
+                "block [{}x{}] does not match artifact [{}x{}]",
+                block.n_stripes(),
+                block.n_samples(),
+                a.n_stripes,
+                a.n_samples
+            )));
+        }
+        Ok(())
+    }
+
+    /// One-shot update: upload (start, batch, block), execute, download.
+    pub fn update<R: XlaReal>(
+        &self,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) -> Result<()> {
+        self.check_shapes(batch, block)?;
+        let a = &self.artifact;
+        let start = xla::Literal::vec1(&[block.start() as i32]);
+        let emb = xla::Literal::vec1(batch.emb.as_slice())
+            .reshape(&[a.emb_batch as i64, 2 * a.n_samples as i64])?;
+        let lengths = xla::Literal::vec1(batch.lengths.as_slice());
+        let num = xla::Literal::vec1(block.num.as_slice())
+            .reshape(&[a.n_stripes as i64, a.n_samples as i64])?;
+        let den = xla::Literal::vec1(block.den.as_slice())
+            .reshape(&[a.n_stripes as i64, a.n_samples as i64])?;
+        let outputs = self.exe.execute::<xla::Literal>(&[start, emb, lengths, num, den])?;
+        let (new_num, new_den) = untuple2::<R>(&outputs)?;
+        block.load_from_flat(new_num, new_den);
+        Ok(())
+    }
+
+    /// Begin a device-resident accumulation session seeded from `block`.
+    pub fn resident<R: XlaReal>(&self, block: &StripeBlock<R>) -> Result<ResidentUpdater<R>> {
+        let a = &self.artifact;
+        let client = self.exe.client();
+        let dims = [a.n_stripes, a.n_samples];
+        let num = client.buffer_from_host_buffer::<R>(&block.num, &dims, None)?;
+        let den = client.buffer_from_host_buffer::<R>(&block.den, &dims, None)?;
+        Ok(ResidentUpdater {
+            exec: self.clone(),
+            start: block.start(),
+            num,
+            den,
+            calls: 0,
+            _marker: std::marker::PhantomData,
+        })
+    }
+}
+
+/// Device-resident accumulation session: accumulators never leave the
+/// device between batches. Owns its executor handle so chip workers can
+/// hold it without self-referential lifetimes.
+pub struct ResidentUpdater<R: XlaReal> {
+    exec: StripeExecutor,
+    start: usize,
+    num: xla::PjRtBuffer,
+    den: xla::PjRtBuffer,
+    calls: usize,
+    _marker: std::marker::PhantomData<R>,
+}
+
+impl<R: XlaReal> ResidentUpdater<R> {
+    /// Fold one embedding batch into the resident accumulators.
+    pub fn update(&mut self, batch: &EmbBatch<R>) -> Result<()> {
+        let a = &self.exec.artifact;
+        if batch.n_samples != a.n_samples || batch.capacity != a.emb_batch {
+            return Err(Error::Shape(format!(
+                "batch [{}x{}] does not match artifact [{}x{}]",
+                batch.capacity, batch.n_samples, a.emb_batch, a.n_samples
+            )));
+        }
+        let client = self.exec.exe.client();
+        let start =
+            client.buffer_from_host_buffer::<i32>(&[self.start as i32], &[1], None)?;
+        let emb = client.buffer_from_host_buffer::<R>(
+            &batch.emb,
+            &[a.emb_batch, 2 * a.n_samples],
+            None,
+        )?;
+        let lengths =
+            client.buffer_from_host_buffer::<R>(&batch.lengths, &[a.emb_batch], None)?;
+        let outputs = self
+            .exec
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[&start, &emb, &lengths, &self.num, &self.den])?;
+        let mut replica = outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Shape("no execution output".into()))?;
+        if replica.len() == 2 {
+            // untupled outputs: keep device-resident
+            self.den = replica.pop().expect("len 2");
+            self.num = replica.pop().expect("len 2");
+        } else {
+            // tuple output: fall back through a literal round-trip
+            let lit = replica
+                .first()
+                .ok_or_else(|| Error::Shape("empty execution output".into()))?
+                .to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            if parts.len() != 2 {
+                return Err(Error::Shape(format!("expected 2 outputs, got {}", parts.len())));
+            }
+            let dims = [a.n_stripes, a.n_samples];
+            let client = self.exec.exe.client();
+            self.num = client.buffer_from_host_buffer::<R>(
+                &parts[0].to_vec::<R>()?,
+                &dims,
+                None,
+            )?;
+            self.den = client.buffer_from_host_buffer::<R>(
+                &parts[1].to_vec::<R>()?,
+                &dims,
+                None,
+            )?;
+        }
+        self.calls += 1;
+        Ok(())
+    }
+
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+
+    /// Download the accumulators back into `block`.
+    pub fn finish(self, block: &mut StripeBlock<R>) -> Result<()> {
+        let num = self.num.to_literal_sync()?.to_vec::<R>()?;
+        let den = self.den.to_literal_sync()?.to_vec::<R>()?;
+        block.load_from_flat(num, den);
+        Ok(())
+    }
+}
+
+/// Decode `[[tuple(num, den)]]` literal outputs.
+fn untuple2<R: XlaReal>(outputs: &[Vec<xla::PjRtBuffer>]) -> Result<(Vec<R>, Vec<R>)> {
+    let replica = outputs
+        .first()
+        .ok_or_else(|| Error::Shape("no execution output".into()))?;
+    if replica.len() == 2 {
+        let num = replica[0].to_literal_sync()?.to_vec::<R>()?;
+        let den = replica[1].to_literal_sync()?.to_vec::<R>()?;
+        return Ok((num, den));
+    }
+    let lit = replica
+        .first()
+        .ok_or_else(|| Error::Shape("empty execution output".into()))?
+        .to_literal_sync()?;
+    let parts = lit.to_tuple()?;
+    if parts.len() != 2 {
+        return Err(Error::Shape(format!("expected 2 outputs, got {}", parts.len())));
+    }
+    Ok((parts[0].to_vec::<R>()?, parts[1].to_vec::<R>()?))
+}

@@ -1,0 +1,235 @@
+//! `artifacts/manifest.json` parsing + artifact selection.
+
+use crate::error::{Error, Result};
+use crate::unifrac::Metric;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One AOT artifact entry (written by `python/compile/aot.py`).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    /// `jnp`, `pallas_tiled`, `pallas_batched`, `pallas_unbatched`.
+    pub engine: String,
+    pub metric: String,
+    pub alpha: f64,
+    /// `float32` | `float64`.
+    pub dtype: String,
+    pub n_samples: usize,
+    pub n_stripes: usize,
+    pub emb_batch: usize,
+    pub block_k: usize,
+    /// Estimated VMEM working set of one kernel program (bytes).
+    pub vmem_bytes: usize,
+}
+
+impl Artifact {
+    fn from_json(j: &Json) -> Result<Artifact> {
+        let err = |k: &str| Error::Manifest(format!("artifact missing/invalid {k:?}"));
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .map_err(Error::Manifest)?
+                .as_str()
+                .ok_or_else(|| err(k))?
+                .to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            j.get(k).map_err(Error::Manifest)?.as_usize().ok_or_else(|| err(k))
+        };
+        Ok(Artifact {
+            name: s("name")?,
+            file: s("file")?,
+            engine: s("engine")?,
+            metric: s("metric")?,
+            alpha: j.get("alpha").map_err(Error::Manifest)?.as_f64().ok_or_else(|| err("alpha"))?,
+            dtype: s("dtype")?,
+            n_samples: u("n_samples")?,
+            n_stripes: u("n_stripes")?,
+            emb_batch: u("emb_batch")?,
+            block_k: u("block_k")?,
+            vmem_bytes: u("vmem_bytes")?,
+        })
+    }
+
+    /// Whether this artifact computes `metric` (alpha compared for
+    /// generalized).
+    pub fn matches_metric(&self, metric: Metric) -> bool {
+        self.metric == metric.name()
+            && (self.metric != "generalized" || (self.alpha - metric.alpha()).abs() < 1e-12)
+    }
+}
+
+/// Query for artifact selection.
+#[derive(Clone, Debug)]
+pub struct ArtifactQuery {
+    pub metric: Metric,
+    /// "float32" or "float64".
+    pub dtype: &'static str,
+    /// Engine name; empty = prefer `pallas_tiled`, fall back to any.
+    pub engine: String,
+    /// Minimum chunk width needed (the coordinator pads up to the
+    /// artifact's `n_samples`).
+    pub min_samples: usize,
+}
+
+impl ArtifactQuery {
+    pub fn new(metric: Metric, dtype: &'static str, engine: &str, min_samples: usize) -> Self {
+        Self { metric, dtype, engine: engine.to_string(), min_samples }
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(Error::Manifest)?;
+        let version = j
+            .get("version")
+            .map_err(Error::Manifest)?
+            .as_usize()
+            .ok_or_else(|| Error::Manifest("bad version".into()))?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported manifest version {version}")));
+        }
+        let arts = j
+            .get("artifacts")
+            .map_err(Error::Manifest)?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("artifacts must be an array".into()))?;
+        let artifacts = arts.iter().map(Artifact::from_json).collect::<Result<Vec<_>>>()?;
+        if artifacts.is_empty() {
+            return Err(Error::Manifest("no artifacts".into()));
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    /// Pick the smallest-fitting artifact for the query: correct metric,
+    /// dtype and engine, `n_samples >= min_samples`, preferring the
+    /// tightest width (least padding waste), then the largest emb batch.
+    pub fn select(&self, q: &ArtifactQuery) -> Result<&Artifact> {
+        let mut best: Option<&Artifact> = None;
+        for a in &self.artifacts {
+            if !a.matches_metric(q.metric) || a.dtype != q.dtype {
+                continue;
+            }
+            if !q.engine.is_empty() && a.engine != q.engine {
+                continue;
+            }
+            if q.engine.is_empty() && a.engine != "pallas_tiled" {
+                continue;
+            }
+            if a.n_samples < q.min_samples.max(2) {
+                continue;
+            }
+            best = match best {
+                None => Some(a),
+                Some(b) => {
+                    if (a.n_samples, std::cmp::Reverse(a.emb_batch))
+                        < (b.n_samples, std::cmp::Reverse(b.emb_batch))
+                    {
+                        Some(a)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        best.ok_or_else(|| {
+            Error::NoArtifact(format!(
+                "metric={} dtype={} engine={:?} min_samples={}",
+                q.metric, q.dtype, q.engine, q.min_samples
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        let mk = |name: &str, engine: &str, metric: &str, dtype: &str, n: usize, e: usize| {
+            format!(
+                r#"{{"name":"{name}","file":"{name}.hlo.txt","engine":"{engine}",
+                   "metric":"{metric}","alpha":1.0,"dtype":"{dtype}","n_samples":{n},
+                   "n_stripes":{s},"emb_batch":{e},"block_k":16,"vmem_bytes":1000}}"#,
+                s = n / 2,
+            )
+        };
+        let doc = format!(
+            r#"{{"version":1,"artifacts":[{},{},{},{}]}}"#,
+            mk("a64", "pallas_tiled", "weighted_normalized", "float64", 64, 8),
+            mk("a256", "pallas_tiled", "weighted_normalized", "float64", 256, 32),
+            mk("ajnp", "jnp", "weighted_normalized", "float64", 256, 32),
+            mk("auw", "pallas_tiled", "unweighted", "float64", 64, 8),
+        );
+        Manifest::parse(&doc).unwrap()
+    }
+
+    #[test]
+    fn select_tightest_fit() {
+        let m = manifest();
+        let q = ArtifactQuery::new(Metric::WeightedNormalized, "float64", "pallas_tiled", 50);
+        assert_eq!(m.select(&q).unwrap().name, "a64");
+        let q = ArtifactQuery::new(Metric::WeightedNormalized, "float64", "pallas_tiled", 65);
+        assert_eq!(m.select(&q).unwrap().name, "a256");
+    }
+
+    #[test]
+    fn select_by_engine_and_metric() {
+        let m = manifest();
+        let q = ArtifactQuery::new(Metric::WeightedNormalized, "float64", "jnp", 10);
+        assert_eq!(m.select(&q).unwrap().name, "ajnp");
+        let q = ArtifactQuery::new(Metric::Unweighted, "float64", "pallas_tiled", 10);
+        assert_eq!(m.select(&q).unwrap().name, "auw");
+    }
+
+    #[test]
+    fn select_failures() {
+        let m = manifest();
+        assert!(m
+            .select(&ArtifactQuery::new(Metric::WeightedNormalized, "float32", "", 10))
+            .is_err());
+        assert!(m
+            .select(&ArtifactQuery::new(Metric::WeightedNormalized, "float64", "", 500))
+            .is_err());
+        assert!(m
+            .select(&ArtifactQuery::new(Metric::Generalized(0.7), "float64", "", 10))
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"version":2,"artifacts":[]}"#).is_err());
+        assert!(Manifest::parse(r#"{"version":1,"artifacts":[]}"#).is_err());
+        assert!(Manifest::parse(r#"{"version":1,"artifacts":[{"name":"x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !p.exists() {
+            return;
+        }
+        let m = Manifest::load(&p).unwrap();
+        let q = ArtifactQuery::new(Metric::WeightedNormalized, "float64", "pallas_tiled", 2);
+        let a = m.select(&q).unwrap();
+        assert!(a.n_samples >= 2);
+        assert!(a.matches_metric(Metric::WeightedNormalized));
+    }
+}

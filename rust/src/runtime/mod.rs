@@ -1,0 +1,99 @@
+//! PJRT runtime: load and execute the AOT artifacts from `artifacts/`.
+//!
+//! The compile path (`make artifacts`) lowers the Layer-2 jax graph to
+//! HLO *text* (see `python/compile/aot.py` for why text, not serialized
+//! protos); this module loads those files with
+//! `HloModuleProto::from_text_file`, compiles them once on the PJRT CPU
+//! client, and exposes a typed stripe-update executor to the
+//! coordinator. Python is never involved at run time.
+
+mod executor;
+mod manifest;
+
+pub use executor::{ResidentUpdater, StripeExecutor, XlaReal};
+pub use manifest::{Artifact, ArtifactQuery, Manifest};
+
+use crate::error::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Shared PJRT client + compiled-executable cache.
+///
+/// Compilation is the expensive step (~100ms+/artifact); executables are
+/// cached by artifact name and shared across executors/threads.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts_dir` (must contain `manifest.json`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    pub fn load(&self, artifact: &Artifact) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().expect("runtime cache poisoned");
+            if let Some(exe) = cache.get(&artifact.name) {
+                return Ok(Arc::clone(exe));
+            }
+        }
+        let path = self.dir.join(&artifact.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .expect("runtime cache poisoned")
+            .insert(artifact.name.clone(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Find the best artifact for a query and build its executor.
+    pub fn executor(&self, query: &ArtifactQuery) -> Result<StripeExecutor> {
+        let artifact = self.manifest.select(query)?.clone();
+        let exe = self.load(&artifact)?;
+        Ok(StripeExecutor::new(artifact, exe))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn open_runtime_and_list() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+        assert!(rt.manifest().artifacts().len() >= 4);
+    }
+}

@@ -1,0 +1,118 @@
+//! Mantel test: correlation between two distance matrices with a
+//! permutation-based p-value.
+//!
+//! The paper validates fp32 against fp64 with "Mantel R² 0.99999;
+//! p < 0.001, comparing pairwise distances in the two matrices" — this
+//! module reproduces exactly that statistic (examples/fp32_validation.rs
+//! and benches/table3.rs).
+
+use crate::matrix::CondensedMatrix;
+use crate::util::{pearson, Xoshiro256};
+
+#[derive(Clone, Debug)]
+pub struct MantelResult {
+    /// Pearson r between the condensed distance vectors.
+    pub r: f64,
+    /// R² (the paper reports this).
+    pub r2: f64,
+    /// Permutation p-value: P(|r_perm| >= |r_obs|), with the +1
+    /// pseudo-count convention.
+    pub p_value: f64,
+    pub permutations: usize,
+}
+
+/// Run a two-sided Mantel test with `permutations` label shuffles.
+///
+/// Permutation scheme: sample labels of `b` are permuted, which permutes
+/// the rows+columns of its square form jointly — the standard Mantel
+/// null of "no association between the two distance structures".
+pub fn mantel(
+    a: &CondensedMatrix,
+    b: &CondensedMatrix,
+    permutations: usize,
+    seed: u64,
+) -> MantelResult {
+    assert_eq!(a.n_samples(), b.n_samples(), "matrix size mismatch");
+    let n = a.n_samples();
+    let r_obs = pearson(a.condensed(), b.condensed());
+
+    let mut rng = Xoshiro256::new(seed);
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut hits = 0usize;
+    let av = a.condensed();
+    let mut bv_perm = Vec::with_capacity(av.len());
+    for _ in 0..permutations {
+        rng.shuffle(&mut perm);
+        bv_perm.clear();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                bv_perm.push(b.get(perm[i], perm[j]));
+            }
+        }
+        let r = pearson(av, &bv_perm);
+        if r.abs() >= r_obs.abs() - 1e-15 {
+            hits += 1;
+        }
+    }
+    let p = (hits + 1) as f64 / (permutations + 1) as f64;
+    MantelResult { r: r_obs, r2: r_obs * r_obs, p_value: p, permutations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_dm(n: usize, seed: u64) -> CondensedMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set(i, j, rng.f64());
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn identical_matrices_r2_one_p_small() {
+        let a = random_dm(20, 1);
+        let res = mantel(&a, &a, 199, 7);
+        assert!((res.r2 - 1.0).abs() < 1e-12);
+        assert!(res.p_value < 0.01, "p = {}", res.p_value);
+    }
+
+    #[test]
+    fn nearly_identical_matrices_like_fp32_vs_fp64() {
+        let a = random_dm(24, 2);
+        let mut b = a.clone();
+        let mut rng = Xoshiro256::new(3);
+        for i in 0..24 {
+            for j in (i + 1)..24 {
+                // ~fp32-level relative perturbation
+                let v = b.get(i, j);
+                b.set(i, j, v * (1.0 + 1e-6 * (rng.f64() - 0.5)));
+            }
+        }
+        let res = mantel(&a, &b, 199, 7);
+        assert!(res.r2 > 0.9999, "r2 = {}", res.r2);
+        assert!(res.p_value < 0.01);
+    }
+
+    #[test]
+    fn independent_matrices_not_significant() {
+        let a = random_dm(24, 40);
+        let b = random_dm(24, 50);
+        let res = mantel(&a, &b, 499, 7);
+        assert!(res.r2 < 0.5, "r2 = {}", res.r2);
+        assert!(res.p_value > 0.02, "p = {}", res.p_value);
+    }
+
+    #[test]
+    fn p_value_bounds() {
+        let a = random_dm(10, 6);
+        let res = mantel(&a, &a, 99, 1);
+        assert!(res.p_value >= 1.0 / 100.0);
+        assert!(res.p_value <= 1.0);
+        assert_eq!(res.permutations, 99);
+    }
+}

@@ -1,0 +1,10 @@
+//! Statistics for distance matrices: Mantel test (the paper's §4
+//! fp32-vs-fp64 validation statistic), PERMANOVA, and PCoA.
+
+mod mantel;
+mod pcoa;
+mod permanova;
+
+pub use mantel::{mantel, MantelResult};
+pub use pcoa::{pcoa, PcoaResult};
+pub use permanova::{permanova, PermanovaResult};

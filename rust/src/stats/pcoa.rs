@@ -1,0 +1,209 @@
+//! Principal Coordinates Analysis (classical MDS) via power iteration.
+//!
+//! The paper motivates fp32 adequacy "especially ... after dimensionality
+//! reduction" — PCoA is *the* dimensionality reduction applied to UniFrac
+//! matrices in practice (EMP analyses), so the fp32-validation example
+//! also compares leading PCoA coordinates between precisions.
+
+use crate::matrix::CondensedMatrix;
+use crate::util::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct PcoaResult {
+    /// Eigenvalues of the centered Gower matrix, descending.
+    pub eigenvalues: Vec<f64>,
+    /// Coordinates: `coords[axis][sample]`, scaled by sqrt(eigenvalue).
+    pub coordinates: Vec<Vec<f64>>,
+    /// Fraction of (positive) inertia explained per returned axis.
+    pub proportion_explained: Vec<f64>,
+}
+
+/// Classical PCoA: double-center `-0.5 * D²`, extract the top `k`
+/// eigenpairs by power iteration with deflation.
+pub fn pcoa(dm: &CondensedMatrix, k: usize, seed: u64) -> PcoaResult {
+    let n = dm.n_samples();
+    let k = k.min(n.saturating_sub(1));
+    // Gower-centered matrix B = -0.5 * J D² J with J = I - 11ᵀ/n
+    let mut b = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let d = dm.get(i, j);
+            b[i * n + j] = -0.5 * d * d;
+        }
+    }
+    center(&mut b, n);
+
+    let mut rng = Xoshiro256::new(seed);
+    let mut eigenvalues = Vec::with_capacity(k);
+    let mut coordinates = Vec::with_capacity(k);
+    let mut vectors: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (lambda, v) = power_iteration(&b, n, &vectors, &mut rng);
+        if lambda <= 1e-12 {
+            break; // remaining spectrum is non-positive; stop
+        }
+        let coord: Vec<f64> = v.iter().map(|x| x * lambda.sqrt()).collect();
+        eigenvalues.push(lambda);
+        coordinates.push(coord);
+        vectors.push(v);
+    }
+
+    // total positive inertia ~ trace of B (sum of positive eigenvalues is
+    // bounded by it; use trace as the conventional denominator)
+    let trace: f64 = (0..n).map(|i| b[i * n + i]).sum();
+    let denom = if trace > 0.0 { trace } else { eigenvalues.iter().sum::<f64>().max(1e-300) };
+    let proportion_explained = eigenvalues.iter().map(|l| l / denom).collect();
+    PcoaResult { eigenvalues, coordinates, proportion_explained }
+}
+
+fn center(b: &mut [f64], n: usize) {
+    let mut row_mean = vec![0.0; n];
+    let mut grand = 0.0;
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..n {
+            s += b[i * n + j];
+        }
+        row_mean[i] = s / n as f64;
+        grand += s;
+    }
+    grand /= (n * n) as f64;
+    for i in 0..n {
+        for j in 0..n {
+            b[i * n + j] += grand - row_mean[i] - row_mean[j];
+        }
+    }
+}
+
+/// Power iteration for the dominant eigenpair of symmetric `b`,
+/// orthogonalized against previously found `vectors` (deflation).
+fn power_iteration(
+    b: &[f64],
+    n: usize,
+    vectors: &[Vec<f64>],
+    rng: &mut Xoshiro256,
+) -> (f64, Vec<f64>) {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    orthonormalize(&mut v, vectors);
+    let mut lambda = 0.0;
+    for _ in 0..500 {
+        // w = B v
+        let mut w = vec![0.0; n];
+        for i in 0..n {
+            let row = &b[i * n..(i + 1) * n];
+            w[i] = row.iter().zip(&v).map(|(a, x)| a * x).sum();
+        }
+        orthonormalize(&mut w, vectors);
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-300 {
+            return (0.0, v);
+        }
+        for x in w.iter_mut() {
+            *x /= norm;
+        }
+        let new_lambda: f64 = {
+            // Rayleigh quotient vᵀBv
+            let mut s = 0.0;
+            for i in 0..n {
+                let row = &b[i * n..(i + 1) * n];
+                let bv: f64 = row.iter().zip(&w).map(|(a, x)| a * x).sum();
+                s += w[i] * bv;
+            }
+            s
+        };
+        let done = (new_lambda - lambda).abs() <= 1e-12 * (1.0 + new_lambda.abs());
+        v = w;
+        lambda = new_lambda;
+        if done {
+            break;
+        }
+    }
+    (lambda, v)
+}
+
+fn orthonormalize(v: &mut [f64], basis: &[Vec<f64>]) {
+    for u in basis {
+        let dot: f64 = v.iter().zip(u).map(|(a, b)| a * b).sum();
+        for (x, y) in v.iter_mut().zip(u) {
+            *x -= dot * y;
+        }
+    }
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 1e-300 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Distances of points on a line embed back onto a line.
+    #[test]
+    fn recovers_line_configuration() {
+        let pts = [0.0f64, 1.0, 2.0, 5.0, 9.0];
+        let n = pts.len();
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                dm.set(i, j, (pts[i] - pts[j]).abs());
+            }
+        }
+        let res = pcoa(&dm, 3, 1);
+        assert!(!res.eigenvalues.is_empty());
+        // first axis dominates
+        assert!(res.proportion_explained[0] > 0.99, "{:?}", res.proportion_explained);
+        // pairwise distances along axis 0 match the original distances
+        let c = &res.coordinates[0];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = (c[i] - c[j]).abs();
+                assert!((d - dm.get(i, j)).abs() < 1e-6, "pair {i},{j}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_descending_and_positive() {
+        let mut rng = Xoshiro256::new(2);
+        let n = 12;
+        // random points in 3D -> euclidean distances
+        let pts: Vec<[f64; 3]> =
+            (0..n).map(|_| [rng.f64(), rng.f64(), rng.f64()]).collect();
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = (0..3)
+                    .map(|k| (pts[i][k] - pts[j][k]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                dm.set(i, j, d);
+            }
+        }
+        let res = pcoa(&dm, 5, 3);
+        assert!(res.eigenvalues.len() >= 3);
+        for w in res.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9, "not descending: {:?}", res.eigenvalues);
+        }
+        // euclidean input: exactly 3 meaningful axes
+        if res.eigenvalues.len() > 3 {
+            assert!(res.eigenvalues[3] < res.eigenvalues[0] * 1e-6);
+        }
+    }
+
+    #[test]
+    fn coordinates_centered() {
+        let mut dm = CondensedMatrix::zeros(4, vec![]);
+        for (i, j, v) in [(0, 1, 1.0), (0, 2, 2.0), (0, 3, 1.5), (1, 2, 1.2), (1, 3, 0.8), (2, 3, 1.1)]
+        {
+            dm.set(i, j, v);
+        }
+        let res = pcoa(&dm, 2, 5);
+        for axis in &res.coordinates {
+            let mean: f64 = axis.iter().sum::<f64>() / axis.len() as f64;
+            assert!(mean.abs() < 1e-8, "axis not centered: {mean}");
+        }
+    }
+}

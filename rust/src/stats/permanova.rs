@@ -1,0 +1,126 @@
+//! PERMANOVA (Anderson 2001): pseudo-F for a grouping over a distance
+//! matrix, permutation p-value. The standard downstream test applied to
+//! UniFrac matrices (completes the "analysis" story of the paper's
+//! microbiome pipeline).
+
+use crate::matrix::CondensedMatrix;
+use crate::util::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct PermanovaResult {
+    pub pseudo_f: f64,
+    pub p_value: f64,
+    pub permutations: usize,
+    pub n_groups: usize,
+}
+
+/// `groups[i]` is the group id of sample `i` (0-based, dense).
+pub fn permanova(
+    dm: &CondensedMatrix,
+    groups: &[usize],
+    permutations: usize,
+    seed: u64,
+) -> PermanovaResult {
+    let n = dm.n_samples();
+    assert_eq!(groups.len(), n, "group label count mismatch");
+    let n_groups = groups.iter().max().map(|&g| g + 1).unwrap_or(0);
+    assert!(n_groups >= 2, "need >= 2 groups");
+
+    let f_obs = pseudo_f(dm, groups, n_groups);
+    let mut rng = Xoshiro256::new(seed);
+    let mut labels = groups.to_vec();
+    let mut hits = 0usize;
+    for _ in 0..permutations {
+        rng.shuffle(&mut labels);
+        if pseudo_f(dm, &labels, n_groups) >= f_obs - 1e-15 {
+            hits += 1;
+        }
+    }
+    PermanovaResult {
+        pseudo_f: f_obs,
+        p_value: (hits + 1) as f64 / (permutations + 1) as f64,
+        permutations,
+        n_groups,
+    }
+}
+
+/// pseudo-F = (SS_among / (a-1)) / (SS_within / (N-a)), computed from
+/// pairwise distances only (Anderson's distance-based decomposition).
+fn pseudo_f(dm: &CondensedMatrix, groups: &[usize], n_groups: usize) -> f64 {
+    let n = dm.n_samples();
+    // SS_total = (1/N) Σ_{i<j} d²ij ; SS_within = Σ_groups (1/n_g) Σ_{i<j in g} d²ij
+    let mut ss_total = 0.0;
+    let mut ss_within_per: Vec<f64> = vec![0.0; n_groups];
+    let mut sizes = vec![0usize; n_groups];
+    for &g in groups {
+        sizes[g] += 1;
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d2 = dm.get(i, j).powi(2);
+            ss_total += d2;
+            if groups[i] == groups[j] {
+                ss_within_per[groups[i]] += d2;
+            }
+        }
+    }
+    ss_total /= n as f64;
+    let ss_within: f64 = ss_within_per
+        .iter()
+        .zip(&sizes)
+        .filter(|(_, &s)| s > 0)
+        .map(|(ss, &s)| ss / s as f64)
+        .sum();
+    let ss_among = (ss_total - ss_within).max(0.0);
+    let df_among = (n_groups - 1) as f64;
+    let df_within = (n - n_groups) as f64;
+    if ss_within <= 1e-300 || df_within <= 0.0 {
+        return f64::INFINITY;
+    }
+    (ss_among / df_among) / (ss_within / df_within)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two tight clusters far apart -> huge F, significant p.
+    #[test]
+    fn separated_clusters_significant() {
+        let n = 16;
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        let groups: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = if groups[i] == groups[j] { 0.1 } else { 10.0 };
+                dm.set(i, j, d);
+            }
+        }
+        let res = permanova(&dm, &groups, 199, 1);
+        assert!(res.pseudo_f > 100.0, "F = {}", res.pseudo_f);
+        assert!(res.p_value < 0.01, "p = {}", res.p_value);
+        assert_eq!(res.n_groups, 2);
+    }
+
+    #[test]
+    fn random_labels_not_significant() {
+        let n = 20;
+        let mut rng = Xoshiro256::new(2);
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                dm.set(i, j, 0.5 + rng.f64());
+            }
+        }
+        let groups: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let res = permanova(&dm, &groups, 199, 3);
+        assert!(res.p_value > 0.01, "p = {}", res.p_value);
+    }
+
+    #[test]
+    #[should_panic(expected = "group label count")]
+    fn wrong_label_count_panics() {
+        let dm = CondensedMatrix::zeros(4, vec![]);
+        permanova(&dm, &[0, 1], 9, 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Synthetic microbiome workload generator.
+//!
+//! Substitutes the paper's proprietary-scale inputs (the EMP release and
+//! the 113,721-sample dataset; DESIGN.md §3): UniFrac's cost is fully
+//! determined by (n_samples, tree size, table sparsity), not by
+//! biological content, so seeded synthetic data with EMP-like shape
+//! preserves every runtime experiment, and a configurable abundance
+//! dynamic range exercises the paper's §4 fp32-vs-fp64 concern.
+
+mod table_gen;
+mod tree_gen;
+
+pub use table_gen::generate_table;
+pub use tree_gen::generate_tree;
+
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::util::Xoshiro256;
+
+/// Specification of one synthetic workload.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub n_samples: usize,
+    pub n_features: usize,
+    /// Expected fraction of nonzero cells (EMP-like: 0.001..0.02).
+    pub density: f64,
+    /// Log-space sigma of per-cell counts; ~2.5 gives the heavy-tailed
+    /// count distributions real tables show. Larger values stress fp32.
+    pub lognormal_sigma: f64,
+    /// Skew of feature popularity (Zipf exponent; 0 = uniform).
+    pub zipf_exponent: f64,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        Self {
+            n_samples: 256,
+            n_features: 2048,
+            density: 0.01,
+            lognormal_sigma: 2.5,
+            zipf_exponent: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+impl SynthSpec {
+    /// EMP-shaped preset scaled to `n_samples` (feature count grows with
+    /// sample count the way open-reference OTU tables do).
+    pub fn emp_like(n_samples: usize, seed: u64) -> Self {
+        Self {
+            n_samples,
+            n_features: (n_samples * 8).max(512),
+            density: 0.005,
+            lognormal_sigma: 2.5,
+            zipf_exponent: 1.2,
+            seed,
+        }
+    }
+
+    /// Generate the (tree, table) pair. The tree's leaves are exactly the
+    /// table's features, so no filtering step is needed downstream.
+    pub fn generate(&self) -> (Phylogeny, FeatureTable) {
+        let mut rng = Xoshiro256::new(self.seed);
+        let tree = generate_tree(self.n_features, &mut rng.fork(1));
+        let table = generate_table(self, &mut rng.fork(2));
+        (tree, table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_pair_consistent() {
+        let spec = SynthSpec { n_samples: 32, n_features: 128, ..Default::default() };
+        let (tree, table) = spec.generate();
+        assert_eq!(tree.n_leaves(), table.n_features());
+        assert_eq!(table.n_samples(), 32);
+        // every leaf name matches a feature id
+        let idx = tree.leaf_index().unwrap();
+        for fid in table.feature_ids() {
+            assert!(idx.contains_key(fid.as_str()), "missing leaf {fid}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = SynthSpec { n_samples: 16, n_features: 64, ..Default::default() };
+        let (t1, tb1) = spec.generate();
+        let (t2, tb2) = spec.generate();
+        assert_eq!(t1.n_nodes(), t2.n_nodes());
+        assert_eq!(tb1.nnz(), tb2.nnz());
+        assert_eq!(tb1.row(3), tb2.row(3));
+        let other = SynthSpec { seed: 7, ..spec }.generate();
+        assert_ne!(tb1.nnz(), other.1.nnz());
+    }
+
+    #[test]
+    fn emp_like_density_in_band() {
+        let spec = SynthSpec::emp_like(64, 3);
+        let (_, table) = spec.generate();
+        let d = table.density();
+        assert!(d > 0.0005 && d < 0.05, "density {d} out of band");
+    }
+}

@@ -1,0 +1,125 @@
+//! Synthetic sparse count tables with EMP-like shape.
+
+use super::SynthSpec;
+use crate::table::FeatureTable;
+use crate::util::Xoshiro256;
+
+/// Generate a sparse count table per `spec`:
+/// - feature popularity follows a Zipf-like law (a few cosmopolitan taxa,
+///   a long tail of rare ones);
+/// - each sample holds ~`density * n_features` features drawn by that
+///   popularity;
+/// - counts are log-normal (heavy-tailed), rounded up to >= 1.
+pub fn generate_table(spec: &SynthSpec, rng: &mut Xoshiro256) -> FeatureTable {
+    let n_s = spec.n_samples;
+    let n_f = spec.n_features;
+    assert!(n_s > 0 && n_f > 0, "empty table spec");
+    assert!(spec.density > 0.0 && spec.density <= 1.0, "bad density");
+
+    // cumulative Zipf weights for popularity-biased sampling
+    let mut cum = Vec::with_capacity(n_f);
+    let mut acc = 0.0f64;
+    for i in 0..n_f {
+        acc += 1.0 / ((i + 1) as f64).powf(spec.zipf_exponent);
+        cum.push(acc);
+    }
+    let total_w = acc;
+
+    let expect_per_sample = (spec.density * n_f as f64).max(1.0);
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n_s);
+    for _ in 0..n_s {
+        // per-sample richness: log-normal around the expectation, >= 1
+        let richness = (expect_per_sample * rng.lognormal(0.0, 0.6))
+            .round()
+            .clamp(1.0, n_f as f64) as usize;
+        let mut chosen = std::collections::HashSet::with_capacity(richness * 2);
+        let mut row = Vec::with_capacity(richness);
+        let mut guard = 0;
+        while row.len() < richness && guard < richness * 64 {
+            guard += 1;
+            // inverse-CDF sample of the Zipf popularity
+            let x = rng.f64() * total_w;
+            let f = cum.partition_point(|&c| c < x).min(n_f - 1);
+            if chosen.insert(f) {
+                let count = rng.lognormal(1.0, spec.lognormal_sigma).ceil().max(1.0);
+                row.push((f as u32, count));
+            }
+        }
+        rows.push(row);
+    }
+
+    let sample_ids = (0..n_s).map(|i| format!("S{i}")).collect();
+    let feature_ids = (0..n_f).map(|i| format!("OTU{i}")).collect();
+    FeatureTable::from_rows(sample_ids, feature_ids, rows)
+        .expect("generated table is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_sparsity() {
+        let spec = SynthSpec { n_samples: 64, n_features: 512, density: 0.02, ..Default::default() };
+        let t = generate_table(&spec, &mut Xoshiro256::new(1));
+        assert_eq!(t.n_samples(), 64);
+        assert_eq!(t.n_features(), 512);
+        let d = t.density();
+        assert!(d > 0.005 && d < 0.08, "density {d}");
+        // every sample non-empty
+        for s in 0..64 {
+            assert!(t.sample_sum(s) > 0.0, "sample {s} empty");
+        }
+    }
+
+    #[test]
+    fn popularity_skew() {
+        let spec = SynthSpec {
+            n_samples: 200,
+            n_features: 200,
+            density: 0.05,
+            zipf_exponent: 1.5,
+            ..Default::default()
+        };
+        let t = generate_table(&spec, &mut Xoshiro256::new(2));
+        let sums = t.feature_sums();
+        let head: f64 = sums[..20].iter().sum();
+        let tail: f64 = sums[180..].iter().sum();
+        assert!(head > tail * 3.0, "head {head} not dominant over tail {tail}");
+    }
+
+    #[test]
+    fn counts_positive_integers() {
+        let spec = SynthSpec { n_samples: 8, n_features: 64, ..Default::default() };
+        let t = generate_table(&spec, &mut Xoshiro256::new(3));
+        for s in 0..8 {
+            for &v in t.row(s).1 {
+                assert!(v >= 1.0 && v == v.trunc());
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_range_scales_with_sigma() {
+        let mk = |sigma| {
+            let spec = SynthSpec {
+                n_samples: 64,
+                n_features: 256,
+                density: 0.05,
+                lognormal_sigma: sigma,
+                ..Default::default()
+            };
+            let t = generate_table(&spec, &mut Xoshiro256::new(4));
+            let mut lo = f64::INFINITY;
+            let mut hi = 0.0f64;
+            for s in 0..t.n_samples() {
+                for &v in t.row(s).1 {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            hi / lo
+        };
+        assert!(mk(4.0) > mk(0.5) * 10.0, "sigma should widen dynamic range");
+    }
+}

@@ -1,0 +1,122 @@
+//! Random phylogeny generation (coalescent-style random joins).
+
+use crate::tree::{Phylogeny, PhylogenyBuilder, NO_PARENT};
+use crate::util::Xoshiro256;
+
+/// Generate a random rooted bifurcating tree with `n_leaves` leaves named
+/// `OTU0..OTU{n-1}`, exponential branch lengths (coalescent-flavoured:
+/// later joins get shorter branches, giving the clumped depth profile
+/// real 16S trees have).
+pub fn generate_tree(n_leaves: usize, rng: &mut Xoshiro256) -> Phylogeny {
+    assert!(n_leaves >= 1, "need at least one leaf");
+    let mut b = PhylogenyBuilder::new();
+    if n_leaves == 1 {
+        let root = b.add_node(NO_PARENT, 0.0, None);
+        b.add_node(root, rng.exponential(1.0), Some("OTU0".into()));
+        return b.build().expect("valid single-leaf tree");
+    }
+
+    // Bottom-up: start with all leaves as live lineages; repeatedly join
+    // two random lineages under a fresh internal node until one remains.
+    // Parents must have lower ids than children for the builder? No —
+    // the builder accepts any id order; we create parents after children
+    // and then re-point, which the flat-array builder supports by adding
+    // the internal node first... Simpler: build top-down instead, by
+    // splitting, is awkward for exact leaf counts. So: two-phase — record
+    // join structure, then emit nodes top-down.
+    let total = 2 * n_leaves - 1;
+    let mut parent = vec![usize::MAX; total]; // tree-local ids: 0..n_leaves = leaves
+    let mut length = vec![0.0f64; total];
+    let mut live: Vec<usize> = (0..n_leaves).collect();
+    let mut next_id = n_leaves;
+    // Kingman-ish: time between joins ~ Exp(k choose 2) with k live
+    let mut height = vec![0.0f64; total];
+    let mut t = 0.0;
+    while live.len() > 1 {
+        let k = live.len() as f64;
+        t += rng.exponential(k * (k - 1.0) / 2.0);
+        let i = rng.below(live.len());
+        let a = live.swap_remove(i);
+        let j = rng.below(live.len());
+        let c = live.swap_remove(j);
+        let p = next_id;
+        next_id += 1;
+        parent[a] = p;
+        parent[c] = p;
+        height[p] = t;
+        length[a] = t - height[a];
+        length[c] = t - height[c];
+        live.push(p);
+    }
+    debug_assert_eq!(next_id, total);
+
+    // Emit into the builder top-down (root = last created internal node).
+    let root_local = total - 1;
+    let mut builder_id = vec![usize::MAX; total];
+    let mut b = PhylogenyBuilder::new();
+    builder_id[root_local] = b.add_node(NO_PARENT, 0.0, None);
+    // children lists
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); total];
+    for (c, &p) in parent.iter().enumerate() {
+        if p != usize::MAX {
+            children[p].push(c);
+        }
+    }
+    let mut stack = vec![root_local];
+    while let Some(n) = stack.pop() {
+        for &c in &children[n] {
+            let name = if c < n_leaves { Some(format!("OTU{c}")) } else { None };
+            builder_id[c] = b.add_node(builder_id[n], length[c].max(1e-9), name);
+            stack.push(c);
+        }
+    }
+    b.build().expect("generated tree is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_names() {
+        let mut rng = Xoshiro256::new(1);
+        for n in [1usize, 2, 3, 10, 257] {
+            let t = generate_tree(n, &mut rng);
+            assert_eq!(t.n_leaves(), n, "n={n}");
+            if n > 1 {
+                assert_eq!(t.n_nodes(), 2 * n - 1, "bifurcating size for n={n}");
+            }
+            let idx = t.leaf_index().unwrap();
+            assert_eq!(idx.len(), n);
+            assert!(idx.contains_key(format!("OTU{}", n - 1).as_str()));
+        }
+    }
+
+    #[test]
+    fn positive_branch_lengths() {
+        let mut rng = Xoshiro256::new(2);
+        let t = generate_tree(100, &mut rng);
+        for &n in t.postorder() {
+            if n != t.root() {
+                assert!(t.branch_length(n) > 0.0);
+            }
+        }
+        assert!(t.total_branch_length() > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_tree(50, &mut Xoshiro256::new(9));
+        let b = generate_tree(50, &mut Xoshiro256::new(9));
+        assert!((a.total_branch_length() - b.total_branch_length()).abs() < 1e-12);
+        assert_eq!(a.depth(), b.depth());
+    }
+
+    #[test]
+    fn depth_is_logarithmic_ish() {
+        // random joins give expected depth O(log n); guard against
+        // degenerate caterpillar output
+        let t = generate_tree(1024, &mut Xoshiro256::new(3));
+        assert!(t.depth() < 64, "depth {} too large", t.depth());
+    }
+}

@@ -1,0 +1,269 @@
+//! Table IO: classic feature-table TSV (features as rows, samples as
+//! columns — the `biom convert --to-tsv` layout) and a compact binary
+//! format for large synthetic workloads.
+
+use super::sparse::FeatureTable;
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read a TSV table: first (non-`#`-comment) line is
+/// `#OTU ID<TAB>sample1<TAB>...`; each following line is a feature row.
+pub fn read_table_tsv(path: impl AsRef<Path>) -> Result<FeatureTable> {
+    let f = std::fs::File::open(path)?;
+    parse_tsv(BufReader::new(f))
+}
+
+pub fn parse_tsv<R: BufRead>(reader: R) -> Result<FeatureTable> {
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            None => return Err(Error::Table("empty file".into())),
+            Some(line) => {
+                let line = line?;
+                if line.starts_with("# ") || line.trim().is_empty() {
+                    continue; // pure comment (e.g. "# Constructed from biom file")
+                }
+                break line;
+            }
+        }
+    };
+    let mut cols = header.split('\t');
+    let first = cols.next().unwrap_or("");
+    if !first.starts_with('#') && !first.eq_ignore_ascii_case("otu id") {
+        return Err(Error::Table(format!("unexpected header start {first:?}")));
+    }
+    let sample_ids: Vec<String> = cols.map(|s| s.trim().to_string()).collect();
+    if sample_ids.is_empty() {
+        return Err(Error::Table("no sample columns".into()));
+    }
+    let n = sample_ids.len();
+
+    let mut feature_ids = Vec::new();
+    // collect feature-major, then transpose into sample rows
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut it = line.split('\t');
+        let fid = it.next().unwrap().trim().to_string();
+        let f = feature_ids.len() as u32;
+        let mut count = 0;
+        for (s, cell) in it.enumerate() {
+            count += 1;
+            if s >= n {
+                return Err(Error::Table(format!(
+                    "line {}: more cells than samples",
+                    lineno + 2
+                )));
+            }
+            let v: f64 = cell.trim().parse().map_err(|_| {
+                Error::Table(format!("line {}: bad value {cell:?}", lineno + 2))
+            })?;
+            if v != 0.0 {
+                rows[s].push((f, v));
+            }
+        }
+        if count != n {
+            return Err(Error::Table(format!(
+                "line {}: {count} cells, expected {n}",
+                lineno + 2
+            )));
+        }
+        feature_ids.push(fid);
+    }
+    FeatureTable::from_rows(sample_ids, feature_ids, rows)
+}
+
+/// Write the TSV layout read by [`read_table_tsv`].
+pub fn write_table_tsv(table: &FeatureTable, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    write!(w, "#OTU ID")?;
+    for s in table.sample_ids() {
+        write!(w, "\t{s}")?;
+    }
+    writeln!(w)?;
+    let cols = table.by_feature();
+    for (f, fid) in table.feature_ids().iter().enumerate() {
+        write!(w, "{fid}")?;
+        let mut dense = vec![0.0; table.n_samples()];
+        for &(s, v) in &cols[f] {
+            dense[s as usize] = v;
+        }
+        for v in dense {
+            if v == v.trunc() {
+                write!(w, "\t{}", v as i64)?;
+            } else {
+                write!(w, "\t{v}")?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"UFTBL\x01\x00\x00";
+
+/// Compact binary format: magic, counts, id blobs, CSR arrays (LE).
+pub fn write_table_bin(table: &FeatureTable, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    let write_u64 = |w: &mut BufWriter<std::fs::File>, x: usize| -> Result<()> {
+        w.write_all(&(x as u64).to_le_bytes())?;
+        Ok(())
+    };
+    write_u64(&mut w, table.n_samples())?;
+    write_u64(&mut w, table.n_features())?;
+    write_u64(&mut w, table.nnz())?;
+    let write_ids = |w: &mut BufWriter<std::fs::File>, ids: &[String]| -> Result<()> {
+        for id in ids {
+            let b = id.as_bytes();
+            w.write_all(&(b.len() as u32).to_le_bytes())?;
+            w.write_all(b)?;
+        }
+        Ok(())
+    };
+    write_ids(&mut w, table.sample_ids())?;
+    write_ids(&mut w, table.feature_ids())?;
+    for s in 0..table.n_samples() {
+        let (idx, val) = table.row(s);
+        write_u64(&mut w, idx.len())?;
+        for &f in idx {
+            w.write_all(&f.to_le_bytes())?;
+        }
+        for &v in val {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the binary format written by [`write_table_bin`].
+pub fn read_table_bin(path: impl AsRef<Path>) -> Result<FeatureTable> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        return Err(Error::Table("bad magic (not a UFTBL file)".into()));
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<usize> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf) as usize)
+    };
+    let n_samples = read_u64(&mut r)?;
+    let n_features = read_u64(&mut r)?;
+    let nnz = read_u64(&mut r)?;
+    if n_samples > 1 << 32 || n_features > 1 << 32 || nnz > 1 << 40 {
+        return Err(Error::Table("implausible header counts".into()));
+    }
+    let read_ids = |r: &mut BufReader<std::fs::File>, n: usize| -> Result<Vec<String>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut len = [0u8; 4];
+            r.read_exact(&mut len)?;
+            let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+            r.read_exact(&mut buf)?;
+            out.push(String::from_utf8(buf).map_err(|e| Error::Table(e.to_string()))?);
+        }
+        Ok(out)
+    };
+    let sample_ids = read_ids(&mut r, n_samples)?;
+    let feature_ids = read_ids(&mut r, n_features)?;
+    let mut rows = Vec::with_capacity(n_samples);
+    let mut total = 0usize;
+    for _ in 0..n_samples {
+        let mut u64buf = [0u8; 8];
+        r.read_exact(&mut u64buf)?;
+        let len = u64::from_le_bytes(u64buf) as usize;
+        total += len;
+        if total > nnz {
+            return Err(Error::Table("row lengths exceed nnz".into()));
+        }
+        let mut idx = vec![0u32; len];
+        for i in idx.iter_mut() {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            *i = u32::from_le_bytes(b);
+        }
+        let mut row = Vec::with_capacity(len);
+        for &f in &idx {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            row.push((f, f64::from_le_bytes(b)));
+        }
+        rows.push(row);
+    }
+    if total != nnz {
+        return Err(Error::Table(format!("nnz mismatch: header {nnz}, rows {total}")));
+    }
+    FeatureTable::from_rows(sample_ids, feature_ids, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn table() -> FeatureTable {
+        FeatureTable::from_dense(
+            vec!["S0".into(), "S1".into()],
+            vec!["F0".into(), "F1".into(), "F2".into()],
+            &[vec![1.0, 0.0, 2.5], vec![0.0, 3.0, 0.0]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let dir = std::env::temp_dir().join("unifrac_test_tsv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.tsv");
+        write_table_tsv(&table(), &p).unwrap();
+        let t = read_table_tsv(&p).unwrap();
+        assert_eq!(t.n_samples(), 2);
+        assert_eq!(t.n_features(), 3);
+        assert_eq!(t.row(0).1, &[1.0, 2.5]);
+        assert_eq!(t.sample_ids(), table().sample_ids());
+    }
+
+    #[test]
+    fn tsv_parses_comments_and_errors() {
+        let src = "# Constructed from biom file\n#OTU ID\ta\tb\nf1\t1\t0\nf2\t0\t2\n";
+        let t = parse_tsv(Cursor::new(src)).unwrap();
+        assert_eq!(t.n_samples(), 2);
+        assert_eq!(t.n_features(), 2);
+
+        assert!(parse_tsv(Cursor::new("")).is_err());
+        assert!(parse_tsv(Cursor::new("#OTU ID\ta\nf1\t1\t2\n")).is_err()); // extra cell
+        assert!(parse_tsv(Cursor::new("#OTU ID\ta\nf1\tx\n")).is_err()); // bad value
+        assert!(parse_tsv(Cursor::new("#OTU ID\ta\tb\nf1\t1\n")).is_err()); // short row
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let dir = std::env::temp_dir().join("unifrac_test_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        write_table_bin(&table(), &p).unwrap();
+        let t = read_table_bin(&p).unwrap();
+        assert_eq!(t.n_samples(), 2);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.row(0).1, &[1.0, 2.5]);
+        assert_eq!(t.feature_ids(), table().feature_ids());
+    }
+
+    #[test]
+    fn bin_rejects_garbage() {
+        let dir = std::env::temp_dir().join("unifrac_test_bin2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.bin");
+        std::fs::write(&p, b"not a table").unwrap();
+        assert!(read_table_bin(&p).is_err());
+    }
+}

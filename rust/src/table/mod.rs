@@ -1,0 +1,15 @@
+//! Feature-table substrate: sparse sample×feature counts + IO.
+//!
+//! Microbiome tables are extremely sparse (the paper's motivation for
+//! phylogenetic metrics mentions this; EMP-scale tables are <1% dense),
+//! so storage is CSR by sample. The BIOM/HDF5 format itself is out of
+//! scope offline; the TSV and binary loaders implement the same
+//! `FeatureTable` API a BIOM loader would (DESIGN.md §3).
+
+mod io;
+mod rarefy;
+mod sparse;
+
+pub use io::{read_table_bin, read_table_tsv, write_table_bin, write_table_tsv};
+pub use rarefy::rarefy;
+pub use sparse::FeatureTable;

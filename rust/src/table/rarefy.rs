@@ -1,0 +1,153 @@
+//! Rarefaction: subsample each sample's counts to an even depth.
+//!
+//! Standard preprocessing before unweighted UniFrac (the EMP analyses
+//! the paper reproduces rarefy first): unequal sequencing depth inflates
+//! presence/absence differences, so every sample is subsampled without
+//! replacement to the same total count.
+
+use super::sparse::FeatureTable;
+use crate::error::{Error, Result};
+use crate::util::Xoshiro256;
+
+/// Rarefy to `depth`: each sample is subsampled without replacement to
+/// exactly `depth` total count; samples with fewer than `depth` reads
+/// are dropped (the QIIME convention). Counts must be integral.
+pub fn rarefy(table: &FeatureTable, depth: usize, seed: u64) -> Result<FeatureTable> {
+    if depth == 0 {
+        return Err(Error::invalid("rarefaction depth must be > 0"));
+    }
+    let mut rng = Xoshiro256::new(seed);
+    let mut kept_ids = Vec::new();
+    let mut rows = Vec::new();
+    for s in 0..table.n_samples() {
+        let (idx, val) = table.row(s);
+        let mut total = 0usize;
+        for &v in val {
+            if v < 0.0 || v.fract() != 0.0 {
+                return Err(Error::invalid(format!(
+                    "sample {s}: rarefaction needs integral counts, got {v}"
+                )));
+            }
+            total += v as usize;
+        }
+        if total < depth {
+            continue; // insufficient depth: drop the sample
+        }
+        // draw `depth` reads without replacement from the multiset.
+        // Floyd-style: sample distinct positions in [0, total), then map
+        // positions to features through the cumulative counts.
+        let positions = rng.sample_indices(total, depth);
+        let mut sorted = positions;
+        sorted.sort_unstable();
+        let mut new_counts = vec![0u32; idx.len()];
+        let mut cum = 0usize;
+        let mut fi = 0usize;
+        for pos in sorted {
+            while pos >= cum + val[fi] as usize {
+                cum += val[fi] as usize;
+                fi += 1;
+            }
+            new_counts[fi] += 1;
+        }
+        let row: Vec<(u32, f64)> = idx
+            .iter()
+            .zip(&new_counts)
+            .filter(|(_, &c)| c > 0)
+            .map(|(&f, &c)| (f, c as f64))
+            .collect();
+        kept_ids.push(table.sample_ids()[s].clone());
+        rows.push(row);
+    }
+    if kept_ids.len() < 2 {
+        return Err(Error::invalid(format!(
+            "rarefaction to depth {depth} leaves {} sample(s)",
+            kept_ids.len()
+        )));
+    }
+    FeatureTable::from_rows(kept_ids, table.feature_ids().to_vec(), rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> FeatureTable {
+        FeatureTable::from_dense(
+            vec!["deep".into(), "shallow".into(), "mid".into()],
+            vec!["a".into(), "b".into(), "c".into()],
+            &[
+                vec![50.0, 30.0, 20.0], // 100 reads
+                vec![3.0, 0.0, 1.0],    // 4 reads
+                vec![10.0, 10.0, 0.0],  // 20 reads
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn even_depth_and_dropping() {
+        let r = rarefy(&table(), 20, 1).unwrap();
+        assert_eq!(r.n_samples(), 2, "shallow sample dropped");
+        assert_eq!(r.sample_ids(), &["deep".to_string(), "mid".to_string()]);
+        for s in 0..2 {
+            assert_eq!(r.sample_sum(s), 20.0, "sample {s} not at depth");
+        }
+        // subsample of a sample: counts never exceed originals
+        let (idx, val) = r.row(0);
+        for (&f, &v) in idx.iter().zip(val) {
+            let orig = [50.0, 30.0, 20.0][f as usize];
+            assert!(v <= orig);
+        }
+    }
+
+    #[test]
+    fn exact_depth_is_identity_multiset() {
+        let r = rarefy(&table(), 4, 9).unwrap();
+        // the 4-read sample survives with all its reads
+        let pos = r.sample_ids().iter().position(|s| s == "shallow").unwrap();
+        let (idx, val) = r.row(pos);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_varies() {
+        let a = rarefy(&table(), 20, 7).unwrap();
+        let b = rarefy(&table(), 20, 7).unwrap();
+        assert_eq!(a.row(0), b.row(0));
+        // with depth 20 of 100 reads, different seeds differ w.h.p.
+        let c = rarefy(&table(), 20, 8).unwrap();
+        assert!(a.row(0) != c.row(0) || a.row(1) != c.row(1));
+    }
+
+    #[test]
+    fn statistical_sanity() {
+        // expected fraction preserved: feature a holds 50% of the deep
+        // sample; over many seeds the mean rarefied count ≈ depth * 0.5
+        let t = table();
+        let mut total = 0.0;
+        let n_runs = 200;
+        for seed in 0..n_runs {
+            let r = rarefy(&t, 20, seed).unwrap();
+            let (idx, val) = r.row(0);
+            if let Some(p) = idx.iter().position(|&f| f == 0) {
+                total += val[p];
+            }
+        }
+        let mean = total / n_runs as f64;
+        assert!((mean - 10.0).abs() < 1.0, "mean {mean} not ≈ 10");
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(rarefy(&table(), 0, 1).is_err());
+        assert!(rarefy(&table(), 1000, 1).is_err()); // nothing survives
+        let frac = FeatureTable::from_dense(
+            vec!["x".into(), "y".into()],
+            vec!["f".into()],
+            &[vec![1.5], vec![2.0]],
+        )
+        .unwrap();
+        assert!(rarefy(&frac, 1, 1).is_err());
+    }
+}

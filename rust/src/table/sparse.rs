@@ -1,0 +1,302 @@
+//! Sparse sample×feature count table (CSR by sample).
+
+use crate::error::{Error, Result};
+
+/// Sparse non-negative count matrix, CSR by sample: row `s` holds the
+/// (feature, count) pairs of sample `s`, feature ids sorted ascending.
+#[derive(Clone, Debug)]
+pub struct FeatureTable {
+    n_features: usize,
+    sample_ids: Vec<String>,
+    feature_ids: Vec<String>,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl FeatureTable {
+    /// Build from per-sample (feature, value) lists. Validates bounds,
+    /// sorts each row, rejects negatives/NaN and duplicate entries.
+    pub fn from_rows(
+        sample_ids: Vec<String>,
+        feature_ids: Vec<String>,
+        rows: Vec<Vec<(u32, f64)>>,
+    ) -> Result<Self> {
+        if rows.len() != sample_ids.len() {
+            return Err(Error::Table(format!(
+                "{} rows but {} sample ids",
+                rows.len(),
+                sample_ids.len()
+            )));
+        }
+        let n_features = feature_ids.len();
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0usize);
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for (s, mut row) in rows.into_iter().enumerate() {
+            row.sort_unstable_by_key(|&(f, _)| f);
+            for w in row.windows(2) {
+                if w[0].0 == w[1].0 {
+                    return Err(Error::Table(format!(
+                        "sample {s}: duplicate feature {}",
+                        w[0].0
+                    )));
+                }
+            }
+            for (f, v) in row {
+                if f as usize >= n_features {
+                    return Err(Error::Table(format!(
+                        "sample {s}: feature index {f} out of range ({n_features})"
+                    )));
+                }
+                if !(v >= 0.0) || !v.is_finite() {
+                    return Err(Error::Table(format!("sample {s}: invalid value {v}")));
+                }
+                if v > 0.0 {
+                    indices.push(f);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(Self { n_features, sample_ids, feature_ids, indptr, indices, values })
+    }
+
+    /// Dense constructor (tests / tiny examples): `dense[s][f]`.
+    pub fn from_dense(
+        sample_ids: Vec<String>,
+        feature_ids: Vec<String>,
+        dense: &[Vec<f64>],
+    ) -> Result<Self> {
+        let rows = dense
+            .iter()
+            .map(|r| {
+                r.iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(f, &v)| (f as u32, v))
+                    .collect()
+            })
+            .collect();
+        Self::from_rows(sample_ids, feature_ids, rows)
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.sample_ids.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.n_samples() == 0 || self.n_features == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n_samples() * self.n_features) as f64
+    }
+
+    pub fn sample_ids(&self) -> &[String] {
+        &self.sample_ids
+    }
+
+    pub fn feature_ids(&self) -> &[String] {
+        &self.feature_ids
+    }
+
+    /// (feature, value) pairs of one sample, feature ids ascending.
+    pub fn row(&self, sample: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.indptr[sample], self.indptr[sample + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Total count of one sample.
+    pub fn sample_sum(&self, sample: usize) -> f64 {
+        self.row(sample).1.iter().sum()
+    }
+
+    /// Per-feature total across samples.
+    pub fn feature_sums(&self) -> Vec<f64> {
+        let mut sums = vec![0.0; self.n_features];
+        for s in 0..self.n_samples() {
+            let (idx, val) = self.row(s);
+            for (f, v) in idx.iter().zip(val) {
+                sums[*f as usize] += v;
+            }
+        }
+        sums
+    }
+
+    /// Transpose to CSC-ish: per-feature list of (sample, value) — the
+    /// layout the embedding generator wants (it walks tree leaves).
+    pub fn by_feature(&self) -> Vec<Vec<(u32, f64)>> {
+        let mut cols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); self.n_features];
+        for s in 0..self.n_samples() {
+            let (idx, val) = self.row(s);
+            for (f, v) in idx.iter().zip(val) {
+                cols[*f as usize].push((s as u32, *v));
+            }
+        }
+        cols
+    }
+
+    /// Per-feature (sample, proportion) lists: each sample's counts are
+    /// normalized to sum 1 — the "relative abundance" input of weighted
+    /// UniFrac. Samples with zero total are left all-zero.
+    pub fn proportions_by_feature(&self) -> Vec<Vec<(u32, f64)>> {
+        let totals: Vec<f64> = (0..self.n_samples()).map(|s| self.sample_sum(s)).collect();
+        let mut cols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); self.n_features];
+        for s in 0..self.n_samples() {
+            let t = totals[s];
+            if t <= 0.0 {
+                continue;
+            }
+            let (idx, val) = self.row(s);
+            for (f, v) in idx.iter().zip(val) {
+                cols[*f as usize].push((s as u32, *v / t));
+            }
+        }
+        cols
+    }
+
+    /// Keep only the listed samples (in the given order).
+    pub fn select_samples(&self, keep: &[usize]) -> Result<Self> {
+        let mut rows = Vec::with_capacity(keep.len());
+        let mut ids = Vec::with_capacity(keep.len());
+        for &s in keep {
+            if s >= self.n_samples() {
+                return Err(Error::Table(format!("sample index {s} out of range")));
+            }
+            let (idx, val) = self.row(s);
+            rows.push(idx.iter().copied().zip(val.iter().copied()).collect());
+            ids.push(self.sample_ids[s].clone());
+        }
+        Self::from_rows(ids, self.feature_ids.clone(), rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3x4() -> FeatureTable {
+        FeatureTable::from_dense(
+            vec!["S0".into(), "S1".into(), "S2".into()],
+            vec!["F0".into(), "F1".into(), "F2".into(), "F3".into()],
+            &[
+                vec![1.0, 0.0, 3.0, 0.0],
+                vec![0.0, 2.0, 0.0, 0.0],
+                vec![4.0, 4.0, 0.0, 8.0],
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_and_rows() {
+        let t = t3x4();
+        assert_eq!(t.n_samples(), 3);
+        assert_eq!(t.n_features(), 4);
+        assert_eq!(t.nnz(), 6);
+        assert!((t.density() - 0.5).abs() < 1e-12);
+        let (idx, val) = t.row(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[1.0, 3.0]);
+        assert_eq!(t.sample_sum(2), 16.0);
+    }
+
+    #[test]
+    fn by_feature_transpose() {
+        let t = t3x4();
+        let cols = t.by_feature();
+        assert_eq!(cols[0], vec![(0, 1.0), (2, 4.0)]);
+        assert_eq!(cols[3], vec![(2, 8.0)]);
+        assert!(cols[2].len() == 1);
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        let t = t3x4();
+        let cols = t.proportions_by_feature();
+        let mut per_sample = vec![0.0; 3];
+        for col in &cols {
+            for &(s, p) in col {
+                per_sample[s as usize] += p;
+            }
+        }
+        for p in per_sample {
+            assert!((p - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_sum_sample_stays_zero() {
+        let t = FeatureTable::from_dense(
+            vec!["a".into(), "b".into()],
+            vec!["f".into()],
+            &[vec![0.0], vec![5.0]],
+        )
+        .unwrap();
+        let cols = t.proportions_by_feature();
+        assert_eq!(cols[0], vec![(1, 1.0)]);
+    }
+
+    #[test]
+    fn select_samples_reorders() {
+        let t = t3x4();
+        let s = t.select_samples(&[2, 0]).unwrap();
+        assert_eq!(s.sample_ids(), &["S2".to_string(), "S0".to_string()]);
+        assert_eq!(s.sample_sum(0), 16.0);
+        assert!(t.select_samples(&[9]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        // out-of-range feature
+        assert!(FeatureTable::from_rows(
+            vec!["s".into()],
+            vec!["f".into()],
+            vec![vec![(1, 1.0)]],
+        )
+        .is_err());
+        // negative value
+        assert!(FeatureTable::from_rows(
+            vec!["s".into()],
+            vec!["f".into()],
+            vec![vec![(0, -1.0)]],
+        )
+        .is_err());
+        // duplicate feature in a row
+        assert!(FeatureTable::from_rows(
+            vec!["s".into()],
+            vec!["f".into(), "g".into()],
+            vec![vec![(0, 1.0), (0, 2.0)]],
+        )
+        .is_err());
+        // row/id count mismatch
+        assert!(FeatureTable::from_rows(vec!["s".into()], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn explicit_zeros_dropped() {
+        let t = FeatureTable::from_rows(
+            vec!["s".into()],
+            vec!["f".into(), "g".into()],
+            vec![vec![(0, 0.0), (1, 2.0)]],
+        )
+        .unwrap();
+        assert_eq!(t.nnz(), 1);
+    }
+
+    #[test]
+    fn feature_sums() {
+        let sums = t3x4().feature_sums();
+        assert_eq!(sums, vec![5.0, 6.0, 3.0, 8.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Phylogenetic tree substrate: structure, traversal, Newick IO.
+//!
+//! UniFrac integrates sample differences over tree branches; everything
+//! the embedding generator needs — postorder traversal, branch lengths,
+//! leaf indexing — lives here.
+
+mod newick;
+mod phylo;
+
+pub use newick::{parse_newick, write_newick};
+pub use phylo::{Phylogeny, PhylogenyBuilder, NO_PARENT};

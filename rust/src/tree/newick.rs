@@ -1,0 +1,279 @@
+//! Newick tree format parser and writer.
+//!
+//! Supports the common dialect used by microbiome tooling (QIIME/biom):
+//! nested parentheses, node labels (bare or single-quoted), branch
+//! lengths after `:`, internal node labels, comments in `[...]`.
+
+use super::phylo::{Phylogeny, PhylogenyBuilder, NO_PARENT};
+use crate::error::{Error, Result};
+
+/// Parse a Newick string into a [`Phylogeny`].
+pub fn parse_newick(text: &str) -> Result<Phylogeny> {
+    let mut p = NwkParser { b: text.as_bytes(), i: 0, builder: PhylogenyBuilder::new() };
+    p.skip_ws();
+    let root = p.builder.add_node(NO_PARENT, 0.0, None);
+    p.node(root)?;
+    p.skip_ws();
+    if p.peek() == Some(b';') {
+        p.i += 1;
+    }
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing characters after tree"));
+    }
+    p.builder.build()
+}
+
+struct NwkParser<'a> {
+    b: &'a [u8],
+    i: usize,
+    builder: PhylogenyBuilder,
+}
+
+impl<'a> NwkParser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Newick { at: self.i, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_whitespace() => self.i += 1,
+                Some(b'[') => {
+                    // bracketed comment
+                    while let Some(c) = self.peek() {
+                        self.i += 1;
+                        if c == b']' {
+                            break;
+                        }
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Parse the children-list/label/length of an already-created node id.
+    fn node(&mut self, id: usize) -> Result<()> {
+        self.skip_ws();
+        if self.peek() == Some(b'(') {
+            self.i += 1;
+            loop {
+                let child = self.builder.add_node(id, 0.0, None);
+                self.node(child)?;
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b')') => {
+                        self.i += 1;
+                        break;
+                    }
+                    _ => return Err(self.err("expected ',' or ')'")),
+                }
+            }
+        }
+        self.skip_ws();
+        // optional label
+        if let Some(name) = self.label()? {
+            self.builder.set_name(id, name);
+        }
+        self.skip_ws();
+        // optional :length
+        if self.peek() == Some(b':') {
+            self.i += 1;
+            self.skip_ws();
+            let len = self.number()?;
+            self.builder.set_length(id, len);
+        }
+        Ok(())
+    }
+
+    fn label(&mut self) -> Result<Option<String>> {
+        match self.peek() {
+            Some(b'\'') => {
+                self.i += 1;
+                let mut out = String::new();
+                loop {
+                    match self.peek() {
+                        None => return Err(self.err("unterminated quoted label")),
+                        Some(b'\'') => {
+                            self.i += 1;
+                            // '' is an escaped quote inside a quoted label
+                            if self.peek() == Some(b'\'') {
+                                out.push('\'');
+                                self.i += 1;
+                            } else {
+                                break;
+                            }
+                        }
+                        Some(c) => {
+                            out.push(c as char);
+                            self.i += 1;
+                        }
+                    }
+                }
+                Ok(Some(out))
+            }
+            Some(c) if !matches!(c, b':' | b',' | b'(' | b')' | b';' | b'[') => {
+                let start = self.i;
+                while let Some(c) = self.peek() {
+                    if matches!(c, b':' | b',' | b'(' | b')' | b';' | b'[')
+                        || c.is_ascii_whitespace()
+                    {
+                        break;
+                    }
+                    self.i += 1;
+                }
+                let s = std::str::from_utf8(&self.b[start..self.i])
+                    .map_err(|_| self.err("non-utf8 label"))?;
+                // Newick convention: underscores in bare labels are spaces
+                Ok(Some(s.replace('_', " ")))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'-' | b'+' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| self.err("invalid branch length"))
+    }
+}
+
+/// Serialize a [`Phylogeny`] back to Newick.
+pub fn write_newick(tree: &Phylogeny) -> String {
+    let mut out = String::new();
+    emit(tree, tree.root(), &mut out);
+    out.push(';');
+    out
+}
+
+fn emit(tree: &Phylogeny, node: usize, out: &mut String) {
+    let kids = tree.children(node);
+    if !kids.is_empty() {
+        out.push('(');
+        for (i, &c) in kids.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            emit(tree, c, out);
+        }
+        out.push(')');
+    }
+    if let Some(name) = tree.name(node) {
+        if name.chars().all(|c| c.is_ascii_alphanumeric() || c == '.' || c == '-') {
+            out.push_str(name);
+        } else {
+            out.push('\'');
+            out.push_str(&name.replace('\'', "''"));
+            out.push('\'');
+        }
+    }
+    if tree.parent(node).is_some() {
+        out.push(':');
+        let l = tree.branch_length(node);
+        if l == l.trunc() && l.abs() < 1e15 {
+            out.push_str(&format!("{}", l as i64));
+        } else {
+            out.push_str(&format!("{l}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let t = parse_newick("((A:1,B:2):0.5,C:3);").unwrap();
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(t.n_nodes(), 5);
+        assert!((t.total_branch_length() - 6.5).abs() < 1e-12);
+        let idx = t.leaf_index().unwrap();
+        assert!((t.branch_length(idx["B"]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_internal_labels_and_no_lengths() {
+        let t = parse_newick("((A,B)ab,C)root;").unwrap();
+        assert_eq!(t.n_leaves(), 3);
+        let root = t.root();
+        assert_eq!(t.name(root), Some("root"));
+        assert_eq!(t.branch_length(t.leaves()[0]), 0.0);
+    }
+
+    #[test]
+    fn parse_quoted_and_underscore_labels() {
+        let t = parse_newick("('a b':1,c_d:2);").unwrap();
+        let names: Vec<_> = t.leaves().iter().map(|&l| t.name(l).unwrap()).collect();
+        assert!(names.contains(&"a b"));
+        assert!(names.contains(&"c d"));
+        // escaped quote
+        let t = parse_newick("('it''s':1,B:2);").unwrap();
+        assert!(t.leaves().iter().any(|&l| t.name(l) == Some("it's")));
+    }
+
+    #[test]
+    fn parse_comments_and_whitespace() {
+        let t = parse_newick(" ( A:1 , [note] B:2 ) ; ").unwrap();
+        assert_eq!(t.n_leaves(), 2);
+    }
+
+    #[test]
+    fn parse_scientific_lengths() {
+        let t = parse_newick("(A:1e-3,B:2.5E2);").unwrap();
+        let idx = t.leaf_index().unwrap();
+        assert!((t.branch_length(idx["A"]) - 1e-3).abs() < 1e-15);
+        assert!((t.branch_length(idx["B"]) - 250.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_multifurcation() {
+        let t = parse_newick("(A:1,B:1,C:1,D:1);").unwrap();
+        assert_eq!(t.n_leaves(), 4);
+        assert_eq!(t.children(t.root()).len(), 4);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_newick("((A,B;").is_err());
+        assert!(parse_newick("(A:x);").is_err());
+        assert!(parse_newick("(A,B));").is_err());
+        assert!(parse_newick("('unterminated:1);").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = "((A:1,'b c':2.5):0.5,(C:3,D:0.125):1):0;";
+        let t = parse_newick(src).unwrap();
+        let out = write_newick(&t);
+        let t2 = parse_newick(&out).unwrap();
+        assert_eq!(t.n_nodes(), t2.n_nodes());
+        assert!((t.total_branch_length() - t2.total_branch_length()).abs() < 1e-12);
+        let n1: Vec<_> = t.leaves().iter().map(|&l| t.name(l).unwrap().to_string()).collect();
+        let n2: Vec<_> = t2.leaves().iter().map(|&l| t2.name(l).unwrap().to_string()).collect();
+        assert_eq!(n1, n2);
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        // degenerate but legal: a root with one leaf child
+        let t = parse_newick("(A:1);").unwrap();
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.n_nodes(), 2);
+    }
+}

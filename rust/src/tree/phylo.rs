@@ -1,0 +1,344 @@
+//! Rooted phylogeny with branch lengths.
+//!
+//! Stored as flat parallel arrays (parent / length / name / children-CSR)
+//! so traversals are allocation-free and cache-friendly — the embedding
+//! generator walks the postorder once per UniFrac run.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Sentinel parent index for the root node.
+pub const NO_PARENT: usize = usize::MAX;
+
+/// Immutable rooted tree. Build via [`PhylogenyBuilder`] or the Newick
+/// parser; node ids are dense `0..n_nodes()`.
+#[derive(Clone, Debug)]
+pub struct Phylogeny {
+    parent: Vec<usize>,
+    length: Vec<f64>,
+    name: Vec<Option<String>>,
+    /// children in CSR form
+    child_ptr: Vec<usize>,
+    child_idx: Vec<usize>,
+    root: usize,
+    postorder: Vec<usize>,
+    leaves: Vec<usize>,
+}
+
+impl Phylogeny {
+    pub fn n_nodes(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn root(&self) -> usize {
+        self.root
+    }
+
+    pub fn parent(&self, node: usize) -> Option<usize> {
+        match self.parent[node] {
+            NO_PARENT => None,
+            p => Some(p),
+        }
+    }
+
+    pub fn branch_length(&self, node: usize) -> f64 {
+        self.length[node]
+    }
+
+    pub fn name(&self, node: usize) -> Option<&str> {
+        self.name[node].as_deref()
+    }
+
+    pub fn children(&self, node: usize) -> &[usize] {
+        &self.child_idx[self.child_ptr[node]..self.child_ptr[node + 1]]
+    }
+
+    pub fn is_leaf(&self, node: usize) -> bool {
+        self.children(node).is_empty()
+    }
+
+    /// Leaf node ids in stable (builder/parse) order.
+    pub fn leaves(&self) -> &[usize] {
+        &self.leaves
+    }
+
+    /// Nodes in postorder (children before parents; root last).
+    pub fn postorder(&self) -> &[usize] {
+        &self.postorder
+    }
+
+    /// Sum of all branch lengths (root's length excluded by convention —
+    /// mass above the root is shared by every sample and cancels).
+    pub fn total_branch_length(&self) -> f64 {
+        self.postorder
+            .iter()
+            .filter(|&&n| n != self.root)
+            .map(|&n| self.length[n])
+            .sum()
+    }
+
+    /// Map leaf name -> node id. Errors on unnamed or duplicated leaves.
+    pub fn leaf_index(&self) -> Result<HashMap<&str, usize>> {
+        let mut map = HashMap::with_capacity(self.leaves.len());
+        for &leaf in &self.leaves {
+            let name = self.name(leaf).ok_or_else(|| {
+                Error::invalid(format!("leaf node {leaf} has no name"))
+            })?;
+            if map.insert(name, leaf).is_some() {
+                return Err(Error::invalid(format!("duplicate leaf name {name:?}")));
+            }
+        }
+        Ok(map)
+    }
+
+    /// Max root-to-leaf depth in edges.
+    pub fn depth(&self) -> usize {
+        let mut d = vec![0usize; self.n_nodes()];
+        let mut best = 0;
+        // preorder = reverse postorder
+        for &n in self.postorder.iter().rev() {
+            if let Some(p) = self.parent(n) {
+                d[n] = d[p] + 1;
+                best = best.max(d[n]);
+            }
+        }
+        best
+    }
+
+    /// Number of leaves under each node (root entry == n_leaves).
+    pub fn subtree_leaf_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_nodes()];
+        for &n in &self.postorder {
+            if self.is_leaf(n) {
+                c[n] = 1;
+            }
+            if let Some(p) = self.parent(n) {
+                c[p] += c[n];
+            }
+        }
+        c
+    }
+}
+
+/// Incremental tree builder used by the Newick parser and `synth`.
+#[derive(Default, Debug)]
+pub struct PhylogenyBuilder {
+    parent: Vec<usize>,
+    length: Vec<f64>,
+    name: Vec<Option<String>>,
+}
+
+impl PhylogenyBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node; `parent == NO_PARENT` for the root. Returns its id.
+    pub fn add_node(&mut self, parent: usize, length: f64, name: Option<String>) -> usize {
+        let id = self.parent.len();
+        self.parent.push(parent);
+        self.length.push(length);
+        self.name.push(name);
+        id
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn set_length(&mut self, node: usize, length: f64) {
+        self.length[node] = length;
+    }
+
+    pub fn set_name(&mut self, node: usize, name: String) {
+        self.name[node] = Some(name);
+    }
+
+    /// Validate and freeze into an immutable [`Phylogeny`].
+    pub fn build(self) -> Result<Phylogeny> {
+        let n = self.parent.len();
+        if n == 0 {
+            return Err(Error::invalid("empty tree"));
+        }
+        // exactly one root; all parents valid and acyclic (parent id may be
+        // anything, so walk-check with a visited stamp)
+        let roots: Vec<usize> =
+            (0..n).filter(|&i| self.parent[i] == NO_PARENT).collect();
+        if roots.len() != 1 {
+            return Err(Error::invalid(format!("expected 1 root, found {}", roots.len())));
+        }
+        let root = roots[0];
+        for (i, &p) in self.parent.iter().enumerate() {
+            if p != NO_PARENT && p >= n {
+                return Err(Error::invalid(format!("node {i} has invalid parent {p}")));
+            }
+            if p == i {
+                return Err(Error::invalid(format!("node {i} is its own parent")));
+            }
+        }
+        for (i, &l) in self.length.iter().enumerate() {
+            if !(l >= 0.0) || !l.is_finite() {
+                return Err(Error::invalid(format!("node {i} has invalid branch length {l}")));
+            }
+        }
+
+        // children CSR
+        let mut counts = vec![0usize; n];
+        for &p in &self.parent {
+            if p != NO_PARENT {
+                counts[p] += 1;
+            }
+        }
+        let mut child_ptr = vec![0usize; n + 1];
+        for i in 0..n {
+            child_ptr[i + 1] = child_ptr[i] + counts[i];
+        }
+        let mut fill = child_ptr.clone();
+        let mut child_idx = vec![0usize; child_ptr[n]];
+        for (i, &p) in self.parent.iter().enumerate() {
+            if p != NO_PARENT {
+                child_idx[fill[p]] = i;
+                fill[p] += 1;
+            }
+        }
+
+        // iterative postorder; also detects unreachable nodes / cycles
+        let mut postorder = Vec::with_capacity(n);
+        let mut stack = vec![(root, 0usize)];
+        while let Some((node, ci)) = stack.pop() {
+            let kids = &child_idx[child_ptr[node]..child_ptr[node + 1]];
+            if ci < kids.len() {
+                stack.push((node, ci + 1));
+                stack.push((kids[ci], 0));
+            } else {
+                postorder.push(node);
+            }
+        }
+        if postorder.len() != n {
+            return Err(Error::invalid(format!(
+                "tree has {} unreachable node(s) (cycle or forest)",
+                n - postorder.len()
+            )));
+        }
+
+        let leaves: Vec<usize> =
+            (0..n).filter(|&i| child_ptr[i] == child_ptr[i + 1]).collect();
+
+        Ok(Phylogeny {
+            parent: self.parent,
+            length: self.length,
+            name: self.name,
+            child_ptr,
+            child_idx,
+            root,
+            postorder,
+            leaves,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ((A:1,B:2):0.5,C:3):0; built by hand.
+    fn small() -> Phylogeny {
+        let mut b = PhylogenyBuilder::new();
+        let root = b.add_node(NO_PARENT, 0.0, None);
+        let ab = b.add_node(root, 0.5, None);
+        b.add_node(ab, 1.0, Some("A".into()));
+        b.add_node(ab, 2.0, Some("B".into()));
+        b.add_node(root, 3.0, Some("C".into()));
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn structure() {
+        let t = small();
+        assert_eq!(t.n_nodes(), 5);
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(t.root(), 0);
+        assert!(t.is_leaf(2));
+        assert!(!t.is_leaf(1));
+        assert_eq!(t.children(0), &[1, 4]);
+        assert_eq!(t.parent(2), Some(1));
+        assert_eq!(t.parent(0), None);
+    }
+
+    #[test]
+    fn postorder_children_before_parents() {
+        let t = small();
+        let pos: HashMap<usize, usize> =
+            t.postorder().iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for n in 0..t.n_nodes() {
+            if let Some(p) = t.parent(n) {
+                assert!(pos[&n] < pos[&p], "child {n} after parent {p}");
+            }
+        }
+        assert_eq!(*t.postorder().last().unwrap(), t.root());
+    }
+
+    #[test]
+    fn total_length_excludes_root() {
+        let t = small();
+        assert!((t.total_branch_length() - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leaf_index_and_counts() {
+        let t = small();
+        let idx = t.leaf_index().unwrap();
+        assert_eq!(idx.len(), 3);
+        assert_eq!(t.name(idx["A"]), Some("A"));
+        let counts = t.subtree_leaf_counts();
+        assert_eq!(counts[t.root()], 3);
+        assert_eq!(counts[1], 2); // the AB clade
+    }
+
+    #[test]
+    fn depth() {
+        assert_eq!(small().depth(), 2);
+    }
+
+    #[test]
+    fn rejects_two_roots() {
+        let mut b = PhylogenyBuilder::new();
+        b.add_node(NO_PARENT, 0.0, None);
+        b.add_node(NO_PARENT, 0.0, None);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let mut b = PhylogenyBuilder::new();
+        let r = b.add_node(NO_PARENT, 0.0, None);
+        let a = b.add_node(r, 1.0, None);
+        let x = b.add_node(a, 1.0, None);
+        // cycle between two non-root nodes
+        let y = b.add_node(x, 1.0, None);
+        b.parent[x] = y;
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn rejects_negative_length() {
+        let mut b = PhylogenyBuilder::new();
+        let r = b.add_node(NO_PARENT, 0.0, None);
+        b.add_node(r, -1.0, Some("A".into()));
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn rejects_empty_and_duplicate_leaf_names() {
+        assert!(PhylogenyBuilder::new().build().is_err());
+        let mut b = PhylogenyBuilder::new();
+        let r = b.add_node(NO_PARENT, 0.0, None);
+        b.add_node(r, 1.0, Some("A".into()));
+        b.add_node(r, 1.0, Some("A".into()));
+        assert!(b.build().unwrap().leaf_index().is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! High-level Striped UniFrac driver (CPU engines).
+//!
+//! Streams embedding batches from the tree/table producer into per-thread
+//! stripe blocks (the "chips" of the paper's Tables 1-2 at single-node
+//! scale), then assembles the condensed distance matrix. The PJRT-backed
+//! equivalent lives in `coordinator::` — this driver is the pure-rust hot
+//! path and the baseline for every bench.
+
+use super::engines::{make_engine, EngineKind};
+use super::metric::Metric;
+use crate::embed::{default_padding, generate_embeddings, EmbBatch};
+use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::util::Real;
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+/// Options for [`compute_unifrac`].
+#[derive(Clone, Debug)]
+pub struct ComputeOptions {
+    pub metric: Metric,
+    pub engine: EngineKind,
+    /// Tiled engine's `step_size` (paper Figure 3).
+    pub block_k: usize,
+    /// Embedding rows per batch (paper Figure 2's `filled_embs`).
+    pub batch_capacity: usize,
+    /// Worker threads (stripe-range parallelism). 0 = available cores.
+    pub threads: usize,
+    /// Pad the sample axis to a multiple of this (alignment, §3).
+    pub pad_quantum: usize,
+    /// Bounded queue depth per worker (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ComputeOptions {
+    fn default() -> Self {
+        Self {
+            metric: Metric::WeightedNormalized,
+            engine: EngineKind::Tiled,
+            block_k: 64,
+            batch_capacity: 32,
+            threads: 1,
+            pad_quantum: 4,
+            queue_depth: 4,
+        }
+    }
+}
+
+/// Workload accounting for one run — feeds the GPU device models
+/// (`devicemodel::`) and EXPERIMENTS.md.
+#[derive(Clone, Debug, Default)]
+pub struct ComputeReport {
+    pub n_samples: usize,
+    pub padded_n: usize,
+    pub n_stripes: usize,
+    pub embeddings: usize,
+    pub batches: usize,
+    pub seconds_total: f64,
+    pub seconds_embed: f64,
+    pub seconds_stripes: f64,
+    pub seconds_assemble: f64,
+}
+
+impl ComputeReport {
+    /// Pairwise-update count: one (num, den) FMA pair per
+    /// (embedding, stripe, sample) triple — the paper's flop currency.
+    pub fn updates(&self) -> u64 {
+        self.embeddings as u64 * self.n_stripes as u64 * self.padded_n as u64
+    }
+}
+
+/// Compute UniFrac over `(tree, table)`; returns the distance matrix.
+pub fn compute_unifrac<R: Real>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    opts: &ComputeOptions,
+) -> crate::Result<CondensedMatrix> {
+    compute_unifrac_report::<R>(tree, table, opts).map(|(dm, _)| dm)
+}
+
+/// As [`compute_unifrac`], also returning the [`ComputeReport`].
+pub fn compute_unifrac_report<R: Real>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    opts: &ComputeOptions,
+) -> crate::Result<(CondensedMatrix, ComputeReport)> {
+    let n = table.n_samples();
+    if n < 2 {
+        return Err(crate::Error::Shape("need >= 2 samples".into()));
+    }
+    let quantum = if opts.engine == EngineKind::Tiled {
+        opts.pad_quantum.max(opts.block_k.min(64))
+    } else {
+        opts.pad_quantum.max(4)
+    };
+    let padded = default_padding(n, quantum);
+    let s_total = total_stripes(padded);
+    let threads = if opts.threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        opts.threads
+    }
+    .min(s_total)
+    .max(1);
+
+    let t0 = std::time::Instant::now();
+    let mut report = ComputeReport {
+        n_samples: n,
+        padded_n: padded,
+        n_stripes: s_total,
+        ..Default::default()
+    };
+
+    // contiguous stripe ranges, one per worker
+    let ranges = split_ranges(s_total, threads);
+
+    let blocks: Vec<StripeBlock<R>> = if threads == 1 {
+        // streaming single-thread path: no channels, no clones
+        let engine = make_engine::<R>(opts.engine, opts.block_k);
+        let mut block = StripeBlock::<R>::new(padded, 0, s_total);
+        let mut batches = 0usize;
+        let produced = generate_embeddings::<R>(
+            tree,
+            table,
+            opts.metric.embedding_kind(),
+            padded,
+            opts.batch_capacity,
+            |batch| {
+                engine.apply(opts.metric, batch, &mut block);
+                batches += 1;
+            },
+        )?;
+        report.embeddings = produced;
+        report.batches = batches;
+        vec![block]
+    } else {
+        // producer + per-worker bounded queues (backpressure keeps peak
+        // memory at threads * queue_depth batches)
+        std::thread::scope(|scope| -> crate::Result<Vec<StripeBlock<R>>> {
+            let mut senders = Vec::with_capacity(threads);
+            let mut handles = Vec::with_capacity(threads);
+            for range in &ranges {
+                let (tx, rx) = sync_channel::<Arc<EmbBatch<R>>>(opts.queue_depth);
+                senders.push(tx);
+                let (start, count) = (range.0, range.1);
+                let metric = opts.metric;
+                let kind = opts.engine;
+                let block_k = opts.block_k;
+                handles.push(scope.spawn(move || {
+                    let engine = make_engine::<R>(kind, block_k);
+                    let mut block = StripeBlock::<R>::new(padded, start, count);
+                    while let Ok(batch) = rx.recv() {
+                        engine.apply(metric, &batch, &mut block);
+                    }
+                    block
+                }));
+            }
+            let mut batches = 0usize;
+            let produced = generate_embeddings::<R>(
+                tree,
+                table,
+                opts.metric.embedding_kind(),
+                padded,
+                opts.batch_capacity,
+                |batch| {
+                    let shared = Arc::new(batch.clone());
+                    for tx in &senders {
+                        // receiver hangup would be a worker panic; surfaced
+                        // by join below
+                        let _ = tx.send(Arc::clone(&shared));
+                    }
+                    batches += 1;
+                },
+            )?;
+            drop(senders);
+            report.embeddings = produced;
+            report.batches = batches;
+            let mut blocks = Vec::with_capacity(threads);
+            for h in handles {
+                blocks.push(h.join().map_err(|_| {
+                    crate::Error::invalid("stripe worker panicked")
+                })?);
+            }
+            Ok(blocks)
+        })?
+    };
+    report.seconds_stripes = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let metric = opts.metric;
+    let dm = CondensedMatrix::from_stripes(
+        n,
+        table.sample_ids().to_vec(),
+        &blocks,
+        move |num, den| metric.finalize(num, den),
+    )?;
+    report.seconds_assemble = t1.elapsed().as_secs_f64();
+    report.seconds_total = t0.elapsed().as_secs_f64();
+    Ok((dm, report))
+}
+
+/// Split `total` items into `parts` contiguous (start, count) ranges.
+pub fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(total.max(1));
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let count = base + usize::from(i < extra);
+        if count > 0 {
+            out.push((start, count));
+        }
+        start += count;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::SynthSpec;
+    use crate::unifrac::naive::compute_unifrac_naive;
+
+    #[test]
+    fn split_ranges_cover() {
+        for (total, parts) in [(10, 3), (4, 8), (1, 1), (7, 7), (128, 5)] {
+            let r = split_ranges(total, parts);
+            let sum: usize = r.iter().map(|(_, c)| c).sum();
+            assert_eq!(sum, total, "total={total} parts={parts}");
+            let mut next = 0;
+            for (s, c) in r {
+                assert_eq!(s, next);
+                assert!(c > 0);
+                next = s + c;
+            }
+        }
+    }
+
+    #[test]
+    fn striped_matches_naive_all_metrics() {
+        let (tree, table) =
+            SynthSpec { n_samples: 21, n_features: 128, density: 0.1, ..Default::default() }
+                .generate();
+        for metric in Metric::all(0.5) {
+            let oracle = compute_unifrac_naive(&tree, &table, metric).unwrap();
+            for engine in EngineKind::all() {
+                let opts = ComputeOptions {
+                    metric,
+                    engine,
+                    block_k: 8,
+                    batch_capacity: 5,
+                    ..Default::default()
+                };
+                let dm = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();
+                let diff = dm.max_abs_diff(&oracle);
+                assert!(diff < 1e-10, "{metric} {engine:?}: diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_matches_single() {
+        let (tree, table) =
+            SynthSpec { n_samples: 40, n_features: 256, ..Default::default() }.generate();
+        let base = ComputeOptions { batch_capacity: 8, ..Default::default() };
+        let single = compute_unifrac::<f64>(&tree, &table, &base).unwrap();
+        for threads in [2, 3, 8] {
+            let opts = ComputeOptions { threads, ..base.clone() };
+            let multi = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();
+            assert!(single.max_abs_diff(&multi) < 1e-12, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn report_counts() {
+        let (tree, table) =
+            SynthSpec { n_samples: 10, n_features: 64, ..Default::default() }.generate();
+        let (_, rep) = compute_unifrac_report::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { batch_capacity: 16, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.n_samples, 10);
+        assert!(rep.padded_n >= 10);
+        assert_eq!(rep.embeddings, tree.n_nodes() - 1);
+        assert_eq!(rep.batches, rep.embeddings.div_ceil(16));
+        assert!(rep.updates() > 0);
+        assert!(rep.seconds_total >= rep.seconds_stripes);
+    }
+
+    #[test]
+    fn fp32_close_to_fp64() {
+        let (tree, table) =
+            SynthSpec { n_samples: 24, n_features: 128, ..Default::default() }.generate();
+        let opts = ComputeOptions::default();
+        let d64 = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();
+        let d32 = compute_unifrac::<f32>(&tree, &table, &opts).unwrap();
+        assert!(d64.max_abs_diff(&d32) < 1e-4);
+        assert!(d64.correlation(&d32) > 0.999999);
+    }
+
+    #[test]
+    fn rejects_single_sample() {
+        let (tree, table) =
+            SynthSpec { n_samples: 1, n_features: 16, ..Default::default() }.generate();
+        assert!(compute_unifrac::<f64>(&tree, &table, &ComputeOptions::default()).is_err());
+    }
+
+    #[test]
+    fn odd_sample_counts_and_small_n() {
+        for n in [2usize, 3, 5, 9, 17] {
+            let (tree, table) =
+                SynthSpec { n_samples: n, n_features: 64, density: 0.2, ..Default::default() }
+                    .generate();
+            let oracle = compute_unifrac_naive(&tree, &table, Metric::Unweighted).unwrap();
+            let dm = compute_unifrac::<f64>(
+                &tree,
+                &table,
+                &ComputeOptions { metric: Metric::Unweighted, ..Default::default() },
+            )
+            .unwrap();
+            assert!(dm.max_abs_diff(&oracle) < 1e-10, "n={n}");
+        }
+    }
+}

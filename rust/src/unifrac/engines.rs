@@ -1,0 +1,464 @@
+//! The four CPU stripe engines — one per optimization stage of the paper.
+//!
+//! | Engine     | Paper artifact            | Structure                          |
+//! |------------|---------------------------|------------------------------------|
+//! | `Original` | Table 1 "Original"        | per-embedding update, manual 4-way |
+//! |            |                           | unroll, per-stripe row pointers    |
+//! | `Unified`  | Figure 1 / "OpenACC base" | unified buffer, fused plain loop,  |
+//! |            |                           | still one pass per embedding       |
+//! | `Batched`  | Figure 2                  | all embeddings folded in registers |
+//! |            |                           | before ONE write per (s, k)        |
+//! | `Tiled`    | Figure 3 / "Final"        | sample-axis blocked (`step_size`)  |
+//! |            |                           | for cache locality + SIMD          |
+//!
+//! All four compute identical results (tests enforce bit-level agreement
+//! in f64 for sums of the same association order where possible, and
+//! allclose otherwise); they differ only in traffic pattern — which is
+//! exactly what the paper's Tables 1-4 measure.
+
+use super::metric::{Metric, MetricOps};
+use crate::embed::EmbBatch;
+use crate::matrix::StripeBlock;
+use crate::util::Real;
+
+/// A stripe-update engine: folds one embedding batch into a stripe block.
+pub trait StripeEngine<R: Real>: Send + Sync {
+    fn kind(&self) -> EngineKind;
+    /// Accumulate `batch` into `block` under `metric`.
+    fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>);
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+}
+
+/// Engine selector (CLI / config / benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Original,
+    Unified,
+    Batched,
+    Tiled,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Original => "original",
+            EngineKind::Unified => "unified",
+            EngineKind::Batched => "batched",
+            EngineKind::Tiled => "tiled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "original" => Some(Self::Original),
+            "unified" => Some(Self::Unified),
+            "batched" => Some(Self::Batched),
+            "tiled" => Some(Self::Tiled),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [EngineKind; 4] {
+        [Self::Original, Self::Unified, Self::Batched, Self::Tiled]
+    }
+}
+
+/// Build an engine. `block_k` applies to `Tiled` (the paper's
+/// `step_size`; must divide nothing in particular — remainders handled).
+pub fn make_engine<R: Real>(kind: EngineKind, block_k: usize) -> Box<dyn StripeEngine<R>> {
+    match kind {
+        EngineKind::Original => Box::new(OriginalEngine),
+        EngineKind::Unified => Box::new(UnifiedEngine),
+        EngineKind::Batched => Box::new(BatchedEngine),
+        EngineKind::Tiled => Box::new(TiledEngine { block_k: block_k.max(8) }),
+    }
+}
+
+/// Stage 1 — the pre-port CPU code: one embedding at a time, per-stripe
+/// "buffer pointers" (the array-of-pointers layout the paper had to
+/// refactor away), manual 4-way unroll of the sample loop (the unroll
+/// that later *hurt* the GPU port, §3).
+pub struct OriginalEngine;
+
+impl<R: Real> StripeEngine<R> for OriginalEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Original
+    }
+
+    fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, batch, block))
+    }
+}
+
+impl OriginalEngine {
+    fn apply_ops<R: Real, M: MetricOps<R>>(
+        &self,
+        metric: M,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) {
+        let n = block.n_samples();
+        assert_eq!(batch.n_samples, n, "batch/block width mismatch");
+        let start = block.start();
+        for e in 0..batch.filled {
+            let emb = batch.row(e);
+            let len = batch.lengths[e];
+            for s_local in 0..block.n_stripes() {
+                let stripe = start + s_local;
+                // emulate `dm_stripe = dm_stripes[stripe]` row pointer
+                let (num_row, den_row) = block.rows_mut(s_local);
+                let off = stripe + 1;
+                let mut k = 0usize;
+                // manual 4-way unroll, exactly like the paper's Figure 1
+                while k + 4 <= n {
+                    let (n0, d0) = metric.terms(emb[k], emb[k + off]);
+                    let (n1, d1) = metric.terms(emb[k + 1], emb[k + 1 + off]);
+                    let (n2, d2) = metric.terms(emb[k + 2], emb[k + 2 + off]);
+                    let (n3, d3) = metric.terms(emb[k + 3], emb[k + 3 + off]);
+                    num_row[k] += n0 * len;
+                    num_row[k + 1] += n1 * len;
+                    num_row[k + 2] += n2 * len;
+                    num_row[k + 3] += n3 * len;
+                    den_row[k] += d0 * len;
+                    den_row[k + 1] += d1 * len;
+                    den_row[k + 2] += d2 * len;
+                    den_row[k + 3] += d3 * len;
+                    k += 4;
+                }
+                while k < n {
+                    let (fn_, fd) = metric.terms(emb[k], emb[k + off]);
+                    num_row[k] += fn_ * len;
+                    den_row[k] += fd * len;
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Stage 2 — the first working offload structure (Figure 1 right):
+/// unified contiguous buffer, fused (stripe, k) loop, no manual unroll;
+/// still re-reads and re-writes the accumulators once per embedding.
+pub struct UnifiedEngine;
+
+impl<R: Real> StripeEngine<R> for UnifiedEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Unified
+    }
+
+    fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, batch, block))
+    }
+}
+
+impl UnifiedEngine {
+    fn apply_ops<R: Real, M: MetricOps<R>>(
+        &self,
+        metric: M,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) {
+        let n = block.n_samples();
+        assert_eq!(batch.n_samples, n, "batch/block width mismatch");
+        let start = block.start();
+        for e in 0..batch.filled {
+            let emb = batch.row(e);
+            let len = batch.lengths[e];
+            for s_local in 0..block.n_stripes() {
+                let off = start + s_local + 1;
+                let (num_row, den_row) = block.rows_mut(s_local);
+                for k in 0..n {
+                    let (fn_, fd) = metric.terms(emb[k], emb[k + off]);
+                    num_row[k] += fn_ * len;
+                    den_row[k] += fd * len;
+                }
+            }
+        }
+    }
+}
+
+/// Stage 3 — Figure 2: process the whole embedding batch per (stripe, k)
+/// with register accumulation; the main buffer is written ONCE per batch
+/// instead of once per embedding.
+pub struct BatchedEngine;
+
+impl<R: Real> StripeEngine<R> for BatchedEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Batched
+    }
+
+    fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, batch, block))
+    }
+}
+
+impl BatchedEngine {
+    fn apply_ops<R: Real, M: MetricOps<R>>(
+        &self,
+        metric: M,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) {
+        let n = block.n_samples();
+        assert_eq!(batch.n_samples, n, "batch/block width mismatch");
+        let start = block.start();
+        let two_n = 2 * n;
+        for s_local in 0..block.n_stripes() {
+            let off = start + s_local + 1;
+            let (num_row, den_row) = block.rows_mut(s_local);
+            for k in 0..n {
+                let mut acc_n = R::ZERO;
+                let mut acc_d = R::ZERO;
+                // `#pragma acc loop seq` over embeddings
+                for e in 0..batch.filled {
+                    let emb = &batch.emb[e * two_n..(e + 1) * two_n];
+                    let (fn_, fd) = metric.terms(emb[k], emb[k + off]);
+                    let len = batch.lengths[e];
+                    acc_n += fn_ * len;
+                    acc_d += fd * len;
+                }
+                num_row[k] += acc_n;
+                den_row[k] += acc_d;
+            }
+        }
+    }
+}
+
+/// Stage 4 — Figure 3 ("Final"): the sample axis is split into
+/// `step_size` blocks (`block_k`); within one block the embedding rows
+/// are swept sequentially with contiguous, SIMD-friendly inner loops and
+/// the accumulators are written once per (stripe, block).
+pub struct TiledEngine {
+    pub block_k: usize,
+}
+
+impl<R: Real> StripeEngine<R> for TiledEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Tiled
+    }
+
+    fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, batch, block))
+    }
+}
+
+impl TiledEngine {
+    fn apply_ops<R: Real, M: MetricOps<R>>(
+        &self,
+        metric: M,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) {
+        let n = block.n_samples();
+        assert_eq!(batch.n_samples, n, "batch/block width mismatch");
+        let start = block.start();
+        let two_n = 2 * n;
+        let bk = self.block_k.min(n);
+        // local accumulator tile lives in cache/registers
+        let mut acc_n = vec![R::ZERO; bk];
+        let mut acc_d = vec![R::ZERO; bk];
+        let mut k0 = 0usize;
+        while k0 < n {
+            let width = bk.min(n - k0);
+            for s_local in 0..block.n_stripes() {
+                let off = start + s_local + 1;
+                for a in acc_n[..width].iter_mut() {
+                    *a = R::ZERO;
+                }
+                for a in acc_d[..width].iter_mut() {
+                    *a = R::ZERO;
+                }
+                for e in 0..batch.filled {
+                    let emb = &batch.emb[e * two_n..(e + 1) * two_n];
+                    let len = batch.lengths[e];
+                    let u = &emb[k0..k0 + width];
+                    let v = &emb[k0 + off..k0 + off + width];
+                    // contiguous ik loop; zipped iterators elide bounds
+                    // checks so LLVM vectorizes (§Perf L3 iteration 2)
+                    for (((an, ad), &uu), &vv) in acc_n[..width]
+                        .iter_mut()
+                        .zip(acc_d[..width].iter_mut())
+                        .zip(u)
+                        .zip(v)
+                    {
+                        let (fn_, fd) = metric.terms(uu, vv);
+                        *an += fn_ * len;
+                        *ad += fd * len;
+                    }
+                }
+                let (num_row, den_row) = block.rows_mut(s_local);
+                for (((nr, dr), &an), &ad) in num_row[k0..k0 + width]
+                    .iter_mut()
+                    .zip(den_row[k0..k0 + width].iter_mut())
+                    .zip(&acc_n[..width])
+                    .zip(&acc_d[..width])
+                {
+                    *nr += an;
+                    *dr += ad;
+                }
+            }
+            k0 += width;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_batch(n: usize, e: usize, seed: u64, presence: bool) -> EmbBatch<f64> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut b = EmbBatch {
+            n_samples: n,
+            filled: e,
+            capacity: e,
+            emb: vec![0.0; e * 2 * n],
+            lengths: vec![0.0; e],
+        };
+        for row in 0..e {
+            for k in 0..n {
+                let x = if presence {
+                    if rng.f64() < 0.3 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                } else {
+                    rng.f64()
+                };
+                b.emb[row * 2 * n + k] = x;
+                b.emb[row * 2 * n + n + k] = x;
+            }
+            b.lengths[row] = rng.f64();
+        }
+        b
+    }
+
+    fn engines() -> Vec<Box<dyn StripeEngine<f64>>> {
+        vec![
+            make_engine(EngineKind::Original, 0),
+            make_engine(EngineKind::Unified, 0),
+            make_engine(EngineKind::Batched, 0),
+            make_engine(EngineKind::Tiled, 16),
+            // non-dividing tile width exercises the remainder path
+            Box::new(TiledEngine { block_k: 13 }),
+        ]
+    }
+
+    #[test]
+    fn all_engines_agree_all_metrics() {
+        let n = 48;
+        for metric in [
+            Metric::Unweighted,
+            Metric::WeightedNormalized,
+            Metric::WeightedUnnormalized,
+            Metric::Generalized(0.5),
+        ] {
+            let presence = metric == Metric::Unweighted;
+            let batch = random_batch(n, 7, 99, presence);
+            let mut results = Vec::new();
+            for eng in engines() {
+                let mut block = StripeBlock::<f64>::new(n, 3, 9);
+                eng.apply(metric, &batch, &mut block);
+                results.push(block);
+            }
+            let base = &results[0];
+            for (i, r) in results.iter().enumerate().skip(1) {
+                assert!(
+                    base.max_abs_diff(r) < 1e-12,
+                    "engine {i} disagrees on {metric} by {}",
+                    base.max_abs_diff(r)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engines_accumulate_across_batches() {
+        // applying two batches must equal applying their concatenation
+        let n = 32;
+        let b1 = random_batch(n, 3, 1, false);
+        let b2 = random_batch(n, 4, 2, false);
+        let mut concat = EmbBatch {
+            n_samples: n,
+            filled: 7,
+            capacity: 7,
+            emb: [b1.emb.clone(), b2.emb.clone()].concat(),
+            lengths: [b1.lengths.clone(), b2.lengths.clone()].concat(),
+        };
+        concat.capacity = 7;
+        let eng = make_engine::<f64>(EngineKind::Tiled, 8);
+        let mut split = StripeBlock::<f64>::new(n, 0, 16);
+        eng.apply(Metric::WeightedNormalized, &b1, &mut split);
+        eng.apply(Metric::WeightedNormalized, &b2, &mut split);
+        let mut whole = StripeBlock::<f64>::new(n, 0, 16);
+        eng.apply(Metric::WeightedNormalized, &concat, &mut whole);
+        assert!(split.max_abs_diff(&whole) < 1e-12);
+    }
+
+    #[test]
+    fn unfilled_rows_ignored() {
+        let n = 16;
+        let mut batch = random_batch(n, 4, 5, false);
+        batch.filled = 2; // rows 2,3 must be ignored
+        let mut a = StripeBlock::<f64>::new(n, 0, 4);
+        make_engine::<f64>(EngineKind::Batched, 0).apply(
+            Metric::WeightedNormalized,
+            &batch,
+            &mut a,
+        );
+        let trimmed = EmbBatch {
+            n_samples: n,
+            filled: 2,
+            capacity: 2,
+            emb: batch.emb[..2 * 2 * n].to_vec(),
+            lengths: batch.lengths[..2].to_vec(),
+        };
+        let mut b = StripeBlock::<f64>::new(n, 0, 4);
+        make_engine::<f64>(EngineKind::Batched, 0).apply(
+            Metric::WeightedNormalized,
+            &trimmed,
+            &mut b,
+        );
+        assert!(a.max_abs_diff(&b) < 1e-15);
+    }
+
+    #[test]
+    fn f32_engine_close_to_f64() {
+        let n = 32;
+        let b64 = random_batch(n, 6, 11, false);
+        let b32 = EmbBatch::<f32> {
+            n_samples: n,
+            filled: 6,
+            capacity: 6,
+            emb: b64.emb.iter().map(|&x| x as f32).collect(),
+            lengths: b64.lengths.iter().map(|&x| x as f32).collect(),
+        };
+        let mut blk64 = StripeBlock::<f64>::new(n, 0, 8);
+        let mut blk32 = StripeBlock::<f32>::new(n, 0, 8);
+        make_engine::<f64>(EngineKind::Tiled, 8).apply(
+            Metric::WeightedNormalized,
+            &b64,
+            &mut blk64,
+        );
+        make_engine::<f32>(EngineKind::Tiled, 8).apply(
+            Metric::WeightedNormalized,
+            &b32,
+            &mut blk32,
+        );
+        for (a, b) in blk64.num.iter().zip(&blk32.num) {
+            assert!((a - *b as f64).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in EngineKind::all() {
+            assert_eq!(EngineKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EngineKind::parse("gpu"), None);
+    }
+}

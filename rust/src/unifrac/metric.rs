@@ -1,0 +1,265 @@
+//! UniFrac metric definitions.
+//!
+//! Mirrors `python/compile/kernels/ref.py::metric_terms` exactly — the
+//! cross-language agreement is tested end-to-end through the PJRT
+//! integration tests.
+
+use crate::embed::EmbeddingKind;
+use crate::util::Real;
+
+/// The UniFrac variant to compute.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Metric {
+    /// Presence/absence: num = branch XOR, den = branch OR.
+    Unweighted,
+    /// Relative abundance: num = |u-v|, den = u+v.
+    WeightedNormalized,
+    /// Relative abundance, no normalization: distance = Σ len·|u-v|.
+    WeightedUnnormalized,
+    /// Generalized UniFrac (Chen et al.) with exponent `alpha`.
+    Generalized(f64),
+}
+
+impl Metric {
+    /// Which embedding rows this metric consumes.
+    pub fn embedding_kind(&self) -> EmbeddingKind {
+        match self {
+            Metric::Unweighted => EmbeddingKind::Presence,
+            _ => EmbeddingKind::Proportion,
+        }
+    }
+
+    /// Canonical name (artifact names / CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Unweighted => "unweighted",
+            Metric::WeightedNormalized => "weighted_normalized",
+            Metric::WeightedUnnormalized => "weighted_unnormalized",
+            Metric::Generalized(_) => "generalized",
+        }
+    }
+
+    /// Parse a CLI/config name; `alpha` applies to `generalized`.
+    pub fn parse(name: &str, alpha: f64) -> Option<Metric> {
+        match name {
+            "unweighted" => Some(Metric::Unweighted),
+            "weighted_normalized" | "weighted" => Some(Metric::WeightedNormalized),
+            "weighted_unnormalized" => Some(Metric::WeightedUnnormalized),
+            "generalized" => Some(Metric::Generalized(alpha)),
+            _ => None,
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        match self {
+            Metric::Generalized(a) => *a,
+            _ => 1.0,
+        }
+    }
+
+    /// Per-branch terms `(f_num, f_den)` for one (u, v) pair.
+    /// For unweighted, u/v are 0/1 so |u-v| is XOR and max(u,v) is OR.
+    #[inline(always)]
+    pub fn terms<R: Real>(&self, u: R, v: R) -> (R, R) {
+        let d = (u - v).abs();
+        match self {
+            Metric::Unweighted => (d, u.max(v)),
+            Metric::WeightedNormalized => (d, u + v),
+            Metric::WeightedUnnormalized => (d, R::ZERO),
+            Metric::Generalized(alpha) => {
+                let s = u + v;
+                if s > R::ZERO {
+                    let a = R::from_f64(*alpha);
+                    let sa1 = s.powf(a - R::ONE);
+                    (sa1 * d, sa1 * s)
+                } else {
+                    (R::ZERO, R::ZERO)
+                }
+            }
+        }
+    }
+
+    /// Final distance from the accumulated (num, den).
+    #[inline]
+    pub fn finalize(&self, num: f64, den: f64) -> f64 {
+        match self {
+            Metric::WeightedUnnormalized => num,
+            _ => {
+                if den > 0.0 {
+                    num / den
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// All canonical variants (used by test/bench sweeps).
+    pub fn all(alpha: f64) -> [Metric; 4] {
+        [
+            Metric::Unweighted,
+            Metric::WeightedNormalized,
+            Metric::WeightedUnnormalized,
+            Metric::Generalized(alpha),
+        ]
+    }
+}
+
+/// Zero-sized (or alpha-carrying) metric ops for monomorphized hot
+/// loops: dispatching the `Metric` enum once per engine call instead of
+/// once per element lets LLVM vectorize the inner loops (EXPERIMENTS.md
+/// §Perf, L3 iteration 1).
+pub trait MetricOps<R: Real>: Copy {
+    fn terms(self, u: R, v: R) -> (R, R);
+}
+
+#[derive(Clone, Copy)]
+pub struct UnweightedOps;
+#[derive(Clone, Copy)]
+pub struct WeightedNormalizedOps;
+#[derive(Clone, Copy)]
+pub struct WeightedUnnormalizedOps;
+#[derive(Clone, Copy)]
+pub struct GeneralizedOps<R>(pub R);
+
+impl<R: Real> MetricOps<R> for UnweightedOps {
+    #[inline(always)]
+    fn terms(self, u: R, v: R) -> (R, R) {
+        ((u - v).abs(), u.max(v))
+    }
+}
+
+impl<R: Real> MetricOps<R> for WeightedNormalizedOps {
+    #[inline(always)]
+    fn terms(self, u: R, v: R) -> (R, R) {
+        ((u - v).abs(), u + v)
+    }
+}
+
+impl<R: Real> MetricOps<R> for WeightedUnnormalizedOps {
+    #[inline(always)]
+    fn terms(self, u: R, v: R) -> (R, R) {
+        ((u - v).abs(), R::ZERO)
+    }
+}
+
+impl<R: Real> MetricOps<R> for GeneralizedOps<R> {
+    #[inline(always)]
+    fn terms(self, u: R, v: R) -> (R, R) {
+        let s = u + v;
+        if s > R::ZERO {
+            let sa1 = s.powf(self.0 - R::ONE);
+            (sa1 * (u - v).abs(), sa1 * s)
+        } else {
+            (R::ZERO, R::ZERO)
+        }
+    }
+}
+
+/// Dispatch a `Metric` to a monomorphized closure exactly once.
+/// `$body` is instantiated per metric with `ops` bound to the ops value.
+#[macro_export]
+macro_rules! with_metric_ops {
+    ($metric:expr, $ops:ident, $body:expr) => {
+        match $metric {
+            $crate::unifrac::Metric::Unweighted => {
+                let $ops = $crate::unifrac::metric::UnweightedOps;
+                $body
+            }
+            $crate::unifrac::Metric::WeightedNormalized => {
+                let $ops = $crate::unifrac::metric::WeightedNormalizedOps;
+                $body
+            }
+            $crate::unifrac::Metric::WeightedUnnormalized => {
+                let $ops = $crate::unifrac::metric::WeightedUnnormalizedOps;
+                $body
+            }
+            $crate::unifrac::Metric::Generalized(alpha) => {
+                let $ops = $crate::unifrac::metric::GeneralizedOps(
+                    <_ as $crate::util::Real>::from_f64(alpha),
+                );
+                $body
+            }
+        }
+    };
+}
+
+impl std::fmt::Display for Metric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Metric::Generalized(a) => write!(f, "generalized(alpha={a})"),
+            m => write!(f, "{}", m.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unweighted_is_xor_or() {
+        let m = Metric::Unweighted;
+        assert_eq!(m.terms(0.0f64, 0.0), (0.0, 0.0));
+        assert_eq!(m.terms(1.0f64, 0.0), (1.0, 1.0));
+        assert_eq!(m.terms(0.0f64, 1.0), (1.0, 1.0));
+        assert_eq!(m.terms(1.0f64, 1.0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn weighted_terms() {
+        let (n, d) = Metric::WeightedNormalized.terms(0.25f64, 0.75);
+        assert!((n - 0.5).abs() < 1e-15);
+        assert!((d - 1.0).abs() < 1e-15);
+        let (n, d) = Metric::WeightedUnnormalized.terms(0.25f64, 0.75);
+        assert!((n - 0.5).abs() < 1e-15);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn generalized_limits() {
+        // alpha = 1 reduces to weighted_normalized
+        let g = Metric::Generalized(1.0);
+        let w = Metric::WeightedNormalized;
+        for (u, v) in [(0.1f64, 0.3), (0.0, 0.5), (0.0, 0.0)] {
+            let (gn, gd) = g.terms(u, v);
+            let (wn, wd) = w.terms(u, v);
+            assert!((gn - wn).abs() < 1e-12, "num at ({u},{v})");
+            assert!((gd - wd).abs() < 1e-12, "den at ({u},{v})");
+        }
+        // zero-mass branches contribute nothing for any alpha
+        assert_eq!(Metric::Generalized(0.5).terms(0.0f64, 0.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn finalize_rules() {
+        assert_eq!(Metric::WeightedNormalized.finalize(1.0, 2.0), 0.5);
+        assert_eq!(Metric::WeightedNormalized.finalize(1.0, 0.0), 0.0);
+        assert_eq!(Metric::WeightedUnnormalized.finalize(1.25, 0.0), 1.25);
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for m in Metric::all(0.5) {
+            assert_eq!(Metric::parse(m.name(), 0.5), Some(m));
+        }
+        assert_eq!(Metric::parse("weighted", 1.0), Some(Metric::WeightedNormalized));
+        assert_eq!(Metric::parse("nope", 1.0), None);
+    }
+
+    #[test]
+    fn embedding_kinds() {
+        assert_eq!(Metric::Unweighted.embedding_kind(), EmbeddingKind::Presence);
+        assert_eq!(
+            Metric::Generalized(0.5).embedding_kind(),
+            EmbeddingKind::Proportion
+        );
+    }
+
+    #[test]
+    fn f32_terms_match_f64_on_exact_values() {
+        let (n32, d32) = Metric::WeightedNormalized.terms(0.25f32, 0.75f32);
+        assert_eq!(n32, 0.5);
+        assert_eq!(d32, 1.0);
+    }
+}

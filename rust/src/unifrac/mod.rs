@@ -1,0 +1,13 @@
+//! The UniFrac core: metrics, the four stripe compute engines that
+//! reproduce the paper's optimization stages, the naive oracle, and the
+//! high-level driver.
+
+pub mod compute;
+pub mod engines;
+pub mod metric;
+pub mod naive;
+
+pub use compute::{compute_unifrac, compute_unifrac_report, ComputeOptions, ComputeReport};
+pub use engines::{make_engine, EngineKind, StripeEngine};
+pub use metric::Metric;
+pub use naive::compute_unifrac_naive;

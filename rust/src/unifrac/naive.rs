@@ -1,0 +1,162 @@
+//! Naive O(T·N²) UniFrac — the independent correctness oracle.
+//!
+//! Computes every pairwise distance directly from per-node masses with no
+//! striping, no batching and no padding. Quadratic and slow — use only
+//! for tests and tiny inputs; the stripe path must agree with this to
+//! float tolerance (rust/tests/correctness.rs).
+
+use super::metric::Metric;
+use crate::embed::generate_embeddings;
+use crate::matrix::CondensedMatrix;
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+
+/// Direct per-pair UniFrac over all non-root branches.
+pub fn compute_unifrac_naive(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    metric: Metric,
+) -> crate::Result<CondensedMatrix> {
+    let n = table.n_samples();
+    if n < 2 {
+        return Err(crate::Error::Shape("need >= 2 samples".into()));
+    }
+    // materialize all (mass row, length) pairs — oracle is for small n
+    let mut rows: Vec<(Vec<f64>, f64)> = Vec::new();
+    generate_embeddings::<f64>(
+        tree,
+        table,
+        metric.embedding_kind(),
+        n.max(2),
+        64,
+        |batch| {
+            for e in 0..batch.filled {
+                let row = batch.row(e)[..n].to_vec();
+                rows.push((row, batch.lengths[e]));
+            }
+        },
+    )?;
+
+    let mut dm = CondensedMatrix::zeros(n, table.sample_ids().to_vec());
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for (mass, len) in &rows {
+                let (fn_, fd) = metric.terms(mass[i], mass[j]);
+                num += fn_ * len;
+                den += fd * len;
+            }
+            dm.set(i, j, metric.finalize(num, den));
+        }
+    }
+    Ok(dm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::parse_newick;
+
+    /// Hand-computed unweighted UniFrac on the classic 2-sample example.
+    #[test]
+    fn hand_computed_unweighted() {
+        // tree: ((A:1,B:1):1,C:2);
+        // s0 = {A}, s1 = {C}
+        // branches: A(1), B(1), AB(1), C(2)
+        // s0 presence: A,AB ; s1 presence: C
+        // shared: none -> distance = (1+1+2)/(1+1+2) = 1  (B absent in both)
+        let tree = parse_newick("((A:1,B:1):1,C:2);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["s0".into(), "s1".into()],
+            vec!["A".into(), "C".into()],
+            &[vec![5.0, 0.0], vec![0.0, 3.0]],
+        )
+        .unwrap();
+        let dm = compute_unifrac_naive(&tree, &table, Metric::Unweighted).unwrap();
+        assert!((dm.get(0, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hand_computed_partial_overlap() {
+        // s0 = {A}, s1 = {A, B} equally
+        // presence rows: A: (1,1) B: (0,1) AB: (1,1) C: (0,0)
+        // num = len(B) = 1 ; den = len(A)+len(B)+len(AB) = 3 -> d = 1/3
+        let tree = parse_newick("((A:1,B:1):1,C:2);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["s0".into(), "s1".into()],
+            vec!["A".into(), "B".into()],
+            &[vec![4.0, 0.0], vec![2.0, 2.0]],
+        )
+        .unwrap();
+        let dm = compute_unifrac_naive(&tree, &table, Metric::Unweighted).unwrap();
+        assert!((dm.get(0, 1) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hand_computed_weighted_normalized() {
+        // s0 = {A}, s1 = {B}; proportions: A row (1,0), B row (0,1),
+        // AB row (1,1), C row (0,0)
+        // num = 1*1 + 1*1 + 1*0 = 2 ; den = 1 + 1 + 2 = 4... careful:
+        // den = Σ len*(u+v): A:1*(1) B:1*(1) AB:1*(2) C:0 -> 4; num:
+        // A:1, B:1, AB:0 -> 2 ; d = 0.5
+        let tree = parse_newick("((A:1,B:1):1,C:2);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["s0".into(), "s1".into()],
+            vec!["A".into(), "B".into()],
+            &[vec![7.0, 0.0], vec![0.0, 9.0]],
+        )
+        .unwrap();
+        let dm = compute_unifrac_naive(&tree, &table, Metric::WeightedNormalized).unwrap();
+        assert!((dm.get(0, 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identical_samples_distance_zero() {
+        let tree = parse_newick("((A:1,B:2):0.5,C:3);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["x".into(), "y".into()],
+            vec!["A".into(), "B".into(), "C".into()],
+            &[vec![2.0, 4.0, 6.0], vec![1.0, 2.0, 3.0]], // same proportions
+        )
+        .unwrap();
+        for m in Metric::all(0.5) {
+            let dm = compute_unifrac_naive(&tree, &table, m).unwrap();
+            assert!(dm.get(0, 1).abs() < 1e-12, "{m}");
+        }
+    }
+
+    #[test]
+    fn unnormalized_scales_with_branch_length() {
+        let t1 = parse_newick("(A:1,B:1);").unwrap();
+        let t2 = parse_newick("(A:2,B:2);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["x".into(), "y".into()],
+            vec!["A".into(), "B".into()],
+            &[vec![1.0, 0.0], vec![0.0, 1.0]],
+        )
+        .unwrap();
+        let d1 = compute_unifrac_naive(&t1, &table, Metric::WeightedUnnormalized).unwrap();
+        let d2 = compute_unifrac_naive(&t2, &table, Metric::WeightedUnnormalized).unwrap();
+        assert!((d2.get(0, 1) - 2.0 * d1.get(0, 1)).abs() < 1e-12);
+        // normalized version is scale-invariant
+        let n1 = compute_unifrac_naive(&t1, &table, Metric::WeightedNormalized).unwrap();
+        let n2 = compute_unifrac_naive(&t2, &table, Metric::WeightedNormalized).unwrap();
+        assert!((n1.get(0, 1) - n2.get(0, 1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distances_bounded() {
+        use crate::synth::SynthSpec;
+        let (tree, table) = SynthSpec { n_samples: 12, n_features: 64, ..Default::default() }.generate();
+        for m in [Metric::Unweighted, Metric::WeightedNormalized, Metric::Generalized(0.5)] {
+            let dm = compute_unifrac_naive(&tree, &table, m).unwrap();
+            for i in 0..12 {
+                for j in (i + 1)..12 {
+                    let d = dm.get(i, j);
+                    assert!((0.0..=1.0 + 1e-9).contains(&d), "{m}: d({i},{j}) = {d}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! `Real`: the float abstraction the compute engines are generic over.
+//!
+//! The paper's §4 studies fp64-vs-fp32; every CPU engine and the stripe
+//! buffers are generic over `Real` so both precisions share one code path
+//! (exactly like the paper's single templated codebase).
+
+/// Minimal float trait: what the stripe engines actually need.
+/// Implemented for `f32` and `f64` only.
+pub trait Real:
+    Copy
+    + Send
+    + Sync
+    + 'static
+    + std::fmt::Debug
+    + std::fmt::Display
+    + PartialOrd
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::AddAssign
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Short dtype tag used in artifact names and reports ("f32"/"f64").
+    const TAG: &'static str;
+    /// Bytes per element (device-model byte accounting).
+    const BYTES: usize;
+
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn powf(self, p: Self) -> Self;
+}
+
+impl Real for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TAG: &'static str = "f64";
+    const BYTES: usize = 8;
+
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline]
+    fn powf(self, p: Self) -> Self {
+        f64::powf(self, p)
+    }
+}
+
+impl Real for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TAG: &'static str = "f32";
+    const BYTES: usize = 4;
+
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline]
+    fn powf(self, p: Self) -> Self {
+        f32::powf(self, p)
+    }
+}
+
+/// Convert a f64 slice into `R` (used when feeding fp32 engines from the
+/// fp64 embedding generator, mirroring the paper's fp32 code path that
+/// keeps data preparation in full precision).
+pub fn cast_slice<R: Real>(xs: &[f64]) -> Vec<R> {
+    xs.iter().map(|&x| R::from_f64(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generic_sum<R: Real>(xs: &[f64]) -> f64 {
+        let mut acc = R::ZERO;
+        for &x in xs {
+            acc += R::from_f64(x);
+        }
+        acc.to_f64()
+    }
+
+    #[test]
+    fn f32_f64_roundtrip() {
+        assert_eq!(f32::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(f64::from_f64(1.5), 1.5);
+        assert_eq!(f32::TAG, "f32");
+        assert_eq!(f64::BYTES, 8);
+    }
+
+    #[test]
+    fn generic_code_paths_agree_on_exact_values() {
+        let xs = [1.0, 2.0, 3.5, 0.25];
+        assert_eq!(generic_sum::<f32>(&xs), generic_sum::<f64>(&xs));
+    }
+
+    #[test]
+    fn cast_slice_truncates() {
+        let v = cast_slice::<f32>(&[0.1, 0.2]);
+        assert_eq!(v.len(), 2);
+        assert!((v[0] as f64 - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ops() {
+        assert_eq!((-2.0f64).abs(), 2.0);
+        assert_eq!(1.0f32.max(2.0), 2.0);
+        assert_eq!(2.0f64.powf(3.0), 8.0);
+    }
+}

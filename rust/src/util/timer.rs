@@ -1,0 +1,102 @@
+//! Wall-clock stopwatch + lightweight stage accounting used by the
+//! coordinator metrics and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch with named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, laps: Vec::new(), last: now }
+    }
+
+    /// Record time since the previous lap (or start) under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        Instant::now() - self.start
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    /// Sum of laps recorded under `name`.
+    pub fn lap_total(&self, name: &str) -> Duration {
+        self.laps
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+}
+
+/// Measure `f`, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Robust repeated measurement: run `f` `reps` times, return the minimum
+/// wall time in seconds (the bench harness's noise-resistant statistic).
+pub fn time_min<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    assert!(reps > 0);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 3);
+        assert!(sw.lap_total("a") >= Duration::from_millis(4));
+        assert!(sw.total() >= sw.lap_total("a"));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn time_min_positive() {
+        let t = time_min(3, || (0..1000).sum::<usize>());
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! End-to-end integration: CLI-level flows, file IO round trips,
+//! fp32-vs-fp64 statistical equivalence (paper §4) at test scale.
+
+use unifrac::matrix::CondensedMatrix;
+use unifrac::stats::mantel;
+use unifrac::synth::SynthSpec;
+use unifrac::table::{read_table_tsv, write_table_tsv};
+use unifrac::tree::{parse_newick, write_newick};
+use unifrac::unifrac::{compute_unifrac, ComputeOptions, Metric};
+
+#[test]
+fn file_roundtrip_preserves_distances() {
+    let dir = std::env::temp_dir().join("unifrac_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (tree, table) =
+        SynthSpec { n_samples: 18, n_features: 96, density: 0.1, ..Default::default() }
+            .generate();
+
+    let table_path = dir.join("t.tsv");
+    let tree_path = dir.join("t.nwk");
+    write_table_tsv(&table, &table_path).unwrap();
+    std::fs::write(&tree_path, write_newick(&tree)).unwrap();
+
+    let table2 = read_table_tsv(&table_path).unwrap();
+    let tree2 = parse_newick(&std::fs::read_to_string(&tree_path).unwrap()).unwrap();
+
+    let opts = ComputeOptions::default();
+    let a = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();
+    let b = compute_unifrac::<f64>(&tree2, &table2, &opts).unwrap();
+    assert!(a.max_abs_diff(&b) < 1e-10);
+
+    // distance matrix TSV round trip
+    let dm_path = dir.join("dm.tsv");
+    a.write_tsv(&dm_path).unwrap();
+    let back = CondensedMatrix::read_tsv(&dm_path).unwrap();
+    assert!(a.max_abs_diff(&back) < 1e-8);
+    assert_eq!(back.ids(), table.sample_ids());
+}
+
+#[test]
+fn fp32_statistically_identical_high_dynamic_range() {
+    // the paper's §4 claim at test scale, with stressed dynamic range
+    let spec = SynthSpec {
+        n_samples: 64,
+        n_features: 512,
+        density: 0.02,
+        lognormal_sigma: 3.5,
+        ..Default::default()
+    };
+    let (tree, table) = spec.generate();
+    for metric in [Metric::Unweighted, Metric::WeightedNormalized] {
+        let opts = ComputeOptions { metric, ..Default::default() };
+        let d64 = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();
+        let d32 = compute_unifrac::<f32>(&tree, &table, &opts).unwrap();
+        let res = mantel(&d64, &d32, 199, 3);
+        assert!(res.r2 > 0.99999, "{metric}: R^2 = {}", res.r2);
+        assert!(res.p_value < 0.01, "{metric}: p = {}", res.p_value);
+    }
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // exercise the built binary if present (skip otherwise)
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
+    let exe = ["release", "debug"]
+        .iter()
+        .map(|d| root.join(d).join("unifrac"))
+        .find(|p| p.exists());
+    let Some(exe) = exe else {
+        eprintln!("skipping: binary not built");
+        return;
+    };
+    let out = std::process::Command::new(&exe)
+        .args(["compute", "--samples", "24", "--metric", "unweighted"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("computed unweighted"), "{stdout}");
+
+    let out = std::process::Command::new(&exe).args(["devices"]).output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Tesla V100"));
+
+    let out = std::process::Command::new(&exe).args(["help"]).output().unwrap();
+    assert!(String::from_utf8_lossy(&out.stdout).contains("SUBCOMMANDS"));
+
+    // unknown flags are rejected
+    let out = std::process::Command::new(&exe)
+        .args(["compute", "--samples", "8", "--bogus", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_ordination_flows() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
+    let exe = ["release", "debug"]
+        .iter()
+        .map(|d| root.join(d).join("unifrac"))
+        .find(|p| p.exists());
+    let Some(exe) = exe else {
+        eprintln!("skipping: binary not built");
+        return;
+    };
+    let dir = std::env::temp_dir().join("unifrac_cli_ord");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dm_path = dir.join("dm.tsv");
+
+    // produce a matrix via the compute flow
+    let out = std::process::Command::new(&exe)
+        .args([
+            "compute",
+            "--samples",
+            "24",
+            "--output",
+            dm_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // pcoa over it
+    let coords = dir.join("coords.tsv");
+    let out = std::process::Command::new(&exe)
+        .args([
+            "pcoa",
+            "--matrix",
+            dm_path.to_str().unwrap(),
+            "--axes",
+            "2",
+            "--output",
+            coords.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let coord_text = std::fs::read_to_string(&coords).unwrap();
+    assert!(coord_text.lines().count() >= 25); // header + 24 samples
+
+    // permanova with a synthetic grouping
+    let groups = dir.join("groups.tsv");
+    let mut body = String::new();
+    for i in 0..24 {
+        body.push_str(&format!("S{i}\tg{}\n", i % 2));
+    }
+    std::fs::write(&groups, body).unwrap();
+    let out = std::process::Command::new(&exe)
+        .args([
+            "permanova",
+            "--matrix",
+            dm_path.to_str().unwrap(),
+            "--groups",
+            groups.to_str().unwrap(),
+            "--permutations",
+            "99",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("pseudo-F"));
+}

@@ -1,0 +1,104 @@
+//! Integration: AOT artifacts execute on PJRT and agree with CPU engines.
+
+use unifrac::embed::{collect_batches, EmbeddingKind};
+use unifrac::matrix::StripeBlock;
+use unifrac::runtime::{ArtifactQuery, Runtime};
+use unifrac::synth::SynthSpec;
+use unifrac::unifrac::{make_engine, EngineKind, Metric};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("runtime opens"))
+}
+
+#[test]
+fn pallas_artifact_matches_cpu_engine() {
+    let Some(rt) = runtime() else { return };
+    let q = ArtifactQuery::new(Metric::WeightedNormalized, "float64", "pallas_tiled", 2);
+    let exec = rt.executor(&q).expect("executor");
+    let a = exec.artifact().clone();
+
+    let (tree, table) = SynthSpec {
+        n_samples: a.n_samples.min(48),
+        n_features: 256,
+        ..Default::default()
+    }
+    .generate();
+    let batches = collect_batches::<f64>(
+        &tree, &table, EmbeddingKind::Proportion, a.n_samples, a.emb_batch,
+    )
+    .unwrap();
+
+    let mut pjrt_block = StripeBlock::<f64>::new(a.n_samples, 0, a.n_stripes);
+    for b in &batches {
+        exec.update(b, &mut pjrt_block).expect("pjrt update");
+    }
+
+    let engine = make_engine::<f64>(EngineKind::Tiled, 16);
+    let mut cpu_block = StripeBlock::<f64>::new(a.n_samples, 0, a.n_stripes);
+    for b in &batches {
+        engine.apply(Metric::WeightedNormalized, b, &mut cpu_block);
+    }
+
+    let diff = pjrt_block.max_abs_diff(&cpu_block);
+    assert!(diff < 1e-9, "pjrt vs cpu diff {diff}");
+}
+
+#[test]
+fn coordinator_pjrt_matches_cpu_all_modes() {
+    use unifrac::coordinator::{run, BackendSpec, RunOptions};
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let (tree, table) = SynthSpec { n_samples: 40, n_features: 256, ..Default::default() }.generate();
+    let cpu = run::<f64>(
+        &tree,
+        &table,
+        &RunOptions { artifacts_dir: None, ..Default::default() },
+    )
+    .unwrap();
+    for engine in ["pallas_tiled", "jnp"] {
+        for resident in [false, true] {
+            let opts = RunOptions {
+                backend: BackendSpec::Pjrt { engine: engine.into(), resident },
+                artifacts_dir: Some(dir.clone()),
+                parallel: false,
+                ..Default::default()
+            };
+            let out = run::<f64>(&tree, &table, &opts).unwrap();
+            let diff = out.dm.max_abs_diff(&cpu.dm);
+            assert!(diff < 1e-9, "{engine} resident={resident}: diff {diff}");
+        }
+    }
+}
+
+#[test]
+fn coordinator_pjrt_multichip_parallel() {
+    use unifrac::coordinator::{run, BackendSpec, RunOptions};
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let (tree, table) = SynthSpec { n_samples: 32, n_features: 128, ..Default::default() }.generate();
+    let cpu = run::<f64>(
+        &tree,
+        &table,
+        &RunOptions { artifacts_dir: None, ..Default::default() },
+    )
+    .unwrap();
+    let opts = RunOptions {
+        backend: BackendSpec::Pjrt { engine: "jnp".into(), resident: true },
+        artifacts_dir: Some(dir),
+        chips: 2,
+        parallel: true,
+        ..Default::default()
+    };
+    let out = run::<f64>(&tree, &table, &opts).unwrap();
+    assert!(out.dm.max_abs_diff(&cpu.dm) < 1e-9);
+    assert_eq!(out.metrics.per_chip_seconds.len(), 2);
+}

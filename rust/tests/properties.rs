@@ -1,0 +1,192 @@
+//! Property-based tests: metric/algorithm invariants over randomized
+//! workloads (seeded xoshiro sweeps — the offline stand-in for proptest).
+
+use unifrac::matrix::CondensedMatrix;
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{compute_unifrac, ComputeOptions, EngineKind, Metric};
+use unifrac::util::Xoshiro256;
+
+fn workload(n: usize, seed: u64) -> (Phylogeny, FeatureTable) {
+    SynthSpec {
+        n_samples: n,
+        n_features: 128,
+        density: 0.08,
+        seed,
+        ..Default::default()
+    }
+    .generate()
+}
+
+fn compute(tree: &Phylogeny, table: &FeatureTable, metric: Metric) -> CondensedMatrix {
+    compute_unifrac::<f64>(tree, table, &ComputeOptions { metric, ..Default::default() })
+        .expect("compute")
+}
+
+/// Distances are within [0, 1] for the normalized metrics and >= 0 for
+/// all, for every random workload.
+#[test]
+fn prop_distances_bounded() {
+    for seed in 0..8u64 {
+        let (tree, table) = workload(14 + (seed as usize % 5), seed);
+        for metric in Metric::all(0.5) {
+            let dm = compute(&tree, &table, metric);
+            for &d in dm.condensed() {
+                assert!(d >= 0.0, "{metric} seed {seed}: negative {d}");
+                if metric != Metric::WeightedUnnormalized {
+                    assert!(d <= 1.0 + 1e-9, "{metric} seed {seed}: {d} > 1");
+                }
+            }
+        }
+    }
+}
+
+/// Permuting the sample order permutes the matrix consistently:
+/// d_perm(i, j) == d(p(i), p(j)).
+#[test]
+fn prop_sample_permutation_equivariance() {
+    for seed in 0..5u64 {
+        let (tree, table) = workload(12, seed);
+        let dm = compute(&tree, &table, Metric::WeightedNormalized);
+        let mut perm: Vec<usize> = (0..12).collect();
+        Xoshiro256::new(seed ^ 0xF00).shuffle(&mut perm);
+        let permuted_table = table.select_samples(&perm).expect("select");
+        let dm_p = compute(&tree, &permuted_table, Metric::WeightedNormalized);
+        for i in 0..12 {
+            for j in (i + 1)..12 {
+                let a = dm_p.get(i, j);
+                let b = dm.get(perm[i], perm[j]);
+                assert!(
+                    (a - b).abs() < 1e-10,
+                    "seed {seed}: perm({i},{j}) = {a} vs original {b}"
+                );
+            }
+        }
+    }
+}
+
+/// Scaling every count of a sample by a constant leaves all metrics
+/// unchanged (they consume relative abundances / presence).
+#[test]
+fn prop_count_scale_invariance() {
+    let (tree, table) = workload(10, 3);
+    let scaled_rows: Vec<Vec<(u32, f64)>> = (0..table.n_samples())
+        .map(|s| {
+            let (idx, val) = table.row(s);
+            let factor = (s + 1) as f64 * 7.5;
+            idx.iter().zip(val).map(|(&f, &v)| (f, v * factor)).collect()
+        })
+        .collect();
+    let scaled = FeatureTable::from_rows(
+        table.sample_ids().to_vec(),
+        table.feature_ids().to_vec(),
+        scaled_rows,
+    )
+    .unwrap();
+    for metric in Metric::all(0.5) {
+        let a = compute(&tree, &table, metric);
+        let b = compute(&tree, &scaled, metric);
+        assert!(a.max_abs_diff(&b) < 1e-10, "{metric} not scale invariant");
+    }
+}
+
+/// Scaling all branch lengths by c leaves normalized metrics unchanged
+/// and scales weighted_unnormalized exactly by c.
+#[test]
+fn prop_branch_length_scaling() {
+    use unifrac::tree::{parse_newick, write_newick};
+    let (tree, table) = workload(10, 4);
+    // scale by rewriting the newick with doubled lengths
+    let doubled = {
+        let nwk = write_newick(&tree);
+        let t = parse_newick(&nwk).unwrap();
+        // rebuild with doubled lengths via builder
+        let mut b = unifrac::tree::PhylogenyBuilder::new();
+        let mut map = std::collections::HashMap::new();
+        for &node in t.postorder().iter().rev() {
+            // preorder: parents before children
+            let parent = t
+                .parent(node)
+                .map(|p| *map.get(&p).expect("parent mapped"))
+                .unwrap_or(unifrac::tree::NO_PARENT);
+            let id = b.add_node(
+                parent,
+                t.branch_length(node) * 2.0,
+                t.name(node).map(String::from),
+            );
+            map.insert(node, id);
+        }
+        b.build().unwrap()
+    };
+    for metric in [Metric::Unweighted, Metric::WeightedNormalized, Metric::Generalized(0.5)] {
+        let a = compute(&tree, &table, metric);
+        let b = compute(&doubled, &table, metric);
+        assert!(a.max_abs_diff(&b) < 1e-10, "{metric} not length-scale invariant");
+    }
+    let a = compute(&tree, &table, Metric::WeightedUnnormalized);
+    let b = compute(&doubled, &table, Metric::WeightedUnnormalized);
+    for (x, y) in a.condensed().iter().zip(b.condensed()) {
+        assert!((y - 2.0 * x).abs() < 1e-9, "unnormalized should scale: {x} -> {y}");
+    }
+}
+
+/// Unweighted UniFrac is a proper metric: triangle inequality holds.
+#[test]
+fn prop_unweighted_triangle_inequality() {
+    for seed in 0..6u64 {
+        let (tree, table) = workload(12, seed + 100);
+        let dm = compute(&tree, &table, Metric::Unweighted);
+        let n = dm.n_samples();
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let lhs = dm.get(i, j);
+                    let rhs = dm.get(i, k) + dm.get(k, j);
+                    assert!(
+                        lhs <= rhs + 1e-9,
+                        "seed {seed}: d({i},{j})={lhs} > d({i},{k})+d({k},{j})={rhs}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Engines agree pairwise on random problems across batch sizes, thread
+/// counts and tile widths (the cross-engine consistency property).
+#[test]
+fn prop_engine_consistency_sweep() {
+    let mut rng = Xoshiro256::new(0xABCDE);
+    for round in 0..6 {
+        let n = 8 + rng.below(40);
+        let (tree, table) = workload(n, round as u64 + 50);
+        let metric = Metric::all(0.5)[rng.below(4)];
+        let base = compute(&tree, &table, metric);
+        let opts = ComputeOptions {
+            metric,
+            engine: EngineKind::all()[rng.below(4)],
+            block_k: [8, 13, 32, 64][rng.below(4)],
+            batch_capacity: 1 + rng.below(40),
+            threads: 1 + rng.below(4),
+            ..Default::default()
+        };
+        let other = compute_unifrac::<f64>(&tree, &table, &opts).expect("variant");
+        let diff = base.max_abs_diff(&other);
+        assert!(diff < 1e-10, "round {round} ({metric}, {opts:?}): diff {diff}");
+    }
+}
+
+/// Adding an empty (all-zero) feature column never changes distances.
+#[test]
+fn prop_empty_feature_irrelevant() {
+    let (tree, table) = workload(10, 9);
+    let a = compute(&tree, &table, Metric::WeightedNormalized);
+    // extend the tree with an extra leaf that no sample contains:
+    // graft "GHOST" onto the root with some length
+    let nwk = unifrac::tree::write_newick(&tree);
+    let grafted = format!("({},GHOST:3.25);", nwk.trim_end_matches(';'));
+    let tree2 = unifrac::tree::parse_newick(&grafted).unwrap();
+    let b = compute(&tree2, &table, Metric::WeightedNormalized);
+    assert!(a.max_abs_diff(&b) < 1e-10, "ghost feature changed distances");
+}

@@ -1,0 +1,88 @@
+//! Bench: streaming-core throughput — batches/sec through `exec::drive`
+//! for {static, dynamic} × {pooled, fresh-alloc} at 1 and 4 workers.
+//! Emits `BENCH_pipeline.json` so the perf trajectory accumulates
+//! across PRs (ISSUE 1 bench satellite).
+
+use unifrac::exec::SchedulerKind;
+use unifrac::synth::SynthSpec;
+use unifrac::unifrac::{compute_unifrac_report, ComputeOptions, Metric};
+use unifrac::util::json::{obj, Json};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("UNIFRAC_BENCH_N", 512);
+    let repeats = env_usize("UNIFRAC_BENCH_REPEATS", 3);
+    let (tree, table) = SynthSpec::emp_like(n, 42).generate();
+
+    let mut rows = Vec::new();
+    println!(
+        "{:<9} {:>7} {:>8} {:>9} {:>11} {:>10} {:>8}",
+        "scheduler", "threads", "pooled", "batches", "batches/s", "updates/s", "allocs"
+    );
+    for scheduler in [SchedulerKind::Static, SchedulerKind::Dynamic] {
+        for threads in [1usize, 4] {
+            for pool_depth in [8usize, 0] {
+                let opts = ComputeOptions {
+                    metric: Metric::WeightedNormalized,
+                    threads,
+                    scheduler,
+                    pool_depth,
+                    batch_capacity: 32,
+                    ..Default::default()
+                };
+                // warm-up, then best-of-N wall time
+                let _ = compute_unifrac_report::<f64>(&tree, &table, &opts).expect("warmup");
+                let mut best_secs = f64::INFINITY;
+                let mut report = None;
+                for _ in 0..repeats.max(1) {
+                    let t0 = std::time::Instant::now();
+                    let (_, rep) =
+                        compute_unifrac_report::<f64>(&tree, &table, &opts).expect("bench run");
+                    let secs = t0.elapsed().as_secs_f64();
+                    if secs < best_secs {
+                        best_secs = secs;
+                        report = Some(rep);
+                    }
+                }
+                let rep = report.expect("at least one repeat");
+                let batches_per_sec = rep.batches as f64 / best_secs.max(1e-9);
+                let updates_per_sec = rep.updates() as f64 / best_secs.max(1e-9);
+                println!(
+                    "{:<9} {:>7} {:>8} {:>9} {:>11.1} {:>10.2e} {:>8}",
+                    scheduler.name(),
+                    threads,
+                    pool_depth > 0,
+                    rep.batches,
+                    batches_per_sec,
+                    updates_per_sec,
+                    rep.pool_allocated
+                );
+                rows.push(obj(vec![
+                    ("scheduler", Json::from(scheduler.name())),
+                    ("threads", Json::from(threads)),
+                    ("pooled", Json::from(pool_depth > 0)),
+                    ("pool_depth", Json::from(pool_depth)),
+                    ("batches", Json::from(rep.batches)),
+                    ("seconds", Json::from(best_secs)),
+                    ("batches_per_sec", Json::from(batches_per_sec)),
+                    ("updates_per_sec", Json::from(updates_per_sec)),
+                    ("pool_allocated", Json::from(rep.pool_allocated)),
+                    ("pool_reused", Json::from(rep.pool_reused)),
+                ]));
+            }
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::from("pipeline_alloc")),
+        ("n_samples", Json::from(n)),
+        ("repeats", Json::from(repeats)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = "BENCH_pipeline.json";
+    std::fs::write(out, doc.dump()).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -39,6 +39,10 @@ fn resolve_config(args: &mut Args) -> Result<RunConfig> {
     }
     cfg.batch = args.get_or("batch", cfg.batch)?;
     cfg.block_k = args.get_or("block-k", cfg.block_k)?;
+    if let Some(v) = args.opt("scheduler") {
+        cfg.scheduler = v;
+    }
+    cfg.pool_depth = args.get_or("pool-depth", cfg.pool_depth)?;
     if let Some(v) = args.opt("artifacts") {
         cfg.artifacts_dir = PathBuf::from(v);
     }

@@ -81,6 +81,9 @@ COMMON FLAGS
   --sequential        time chips one-by-one instead of running in parallel
   --batch N           embedding rows per batch (Figure 2 batch size)
   --block-k N         tiled engine step_size (Figure 3)
+  --scheduler S       stripe scheduling: static (contiguous ranges) |
+                      dynamic (work-stealing of stripe chunks)
+  --pool-depth N      recycled batch buffers in the exec pool (0 = off)
   --artifacts DIR     AOT artifacts directory (default: artifacts)
   --samples N         synthetic workload: sample count
   --features N        synthetic workload: feature count

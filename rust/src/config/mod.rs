@@ -11,6 +11,7 @@ pub use toml_lite::{TomlDoc, TomlValue};
 
 use crate::coordinator::{BackendSpec, RunOptions};
 use crate::error::{Error, Result};
+use crate::exec::SchedulerKind;
 use crate::unifrac::{EngineKind, Metric};
 use std::path::PathBuf;
 
@@ -28,6 +29,10 @@ pub struct RunConfig {
     pub batch: usize,
     pub block_k: usize,
     pub queue_depth: usize,
+    /// Stripe scheduling: "static" | "dynamic".
+    pub scheduler: String,
+    /// Recycled batch buffers kept by the exec pool; 0 disables pooling.
+    pub pool_depth: usize,
     pub artifacts_dir: PathBuf,
     pub seed: u64,
     pub output: Option<PathBuf>,
@@ -47,6 +52,8 @@ impl Default for RunConfig {
             batch: 32,
             block_k: 64,
             queue_depth: 4,
+            scheduler: "static".into(),
+            pool_depth: 8,
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 42,
             output: None,
@@ -99,6 +106,12 @@ impl RunConfig {
         if let Some(v) = get("queue_depth") {
             self.queue_depth = v.as_usize().ok_or_else(|| bad("queue_depth"))?;
         }
+        if let Some(v) = get("scheduler") {
+            self.scheduler = v.as_str().ok_or_else(|| bad("scheduler"))?.to_string();
+        }
+        if let Some(v) = get("pool_depth") {
+            self.pool_depth = v.as_usize().ok_or_else(|| bad("pool_depth"))?;
+        }
         if let Some(v) = get("artifacts_dir") {
             self.artifacts_dir = PathBuf::from(v.as_str().ok_or_else(|| bad("artifacts_dir"))?);
         }
@@ -137,6 +150,12 @@ impl RunConfig {
             },
             other => return Err(Error::Config(format!("unknown backend {other:?}"))),
         };
+        let scheduler = SchedulerKind::parse(&self.scheduler).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown scheduler {:?} (use \"static\" or \"dynamic\")",
+                self.scheduler
+            ))
+        })?;
         Ok(RunOptions {
             metric,
             backend,
@@ -144,6 +163,8 @@ impl RunConfig {
             parallel: self.parallel,
             batch_capacity: self.batch.max(1),
             queue_depth: self.queue_depth.max(1),
+            scheduler,
+            pool_depth: self.pool_depth,
             artifacts_dir: Some(self.artifacts_dir.clone()),
         })
     }
@@ -186,6 +207,8 @@ resident = false
 dtype = "f32"
 chips = 8
 batch = 16
+scheduler = "dynamic"
+pool_depth = 16
 "#,
         )
         .unwrap();
@@ -196,6 +219,14 @@ batch = 16
         assert!(cfg.is_f32().unwrap());
         let opts = cfg.to_run_options().unwrap();
         assert!(matches!(opts.backend, BackendSpec::Pjrt { ref engine, resident: false } if engine == "jnp"));
+        assert_eq!(opts.scheduler, SchedulerKind::Dynamic);
+        assert_eq!(opts.pool_depth, 16);
+    }
+
+    #[test]
+    fn rejects_unknown_scheduler() {
+        let cfg = RunConfig { scheduler: "greedy".into(), ..Default::default() };
+        assert!(cfg.to_run_options().is_err());
     }
 
     #[test]

@@ -6,12 +6,20 @@ use crate::util::json::{obj, Json};
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
     pub backend: String,
+    /// Stripe scheduling strategy ("static" | "dynamic").
+    pub scheduler: String,
     pub artifact: Option<String>,
     pub n_samples: usize,
     pub padded_n: usize,
     pub n_stripes: usize,
     pub embeddings: usize,
     pub batches: usize,
+    /// Batch buffers newly allocated by the exec pool (steady-state
+    /// streaming keeps this at the in-flight window — the ISSUE-1
+    /// zero-per-batch-allocation acceptance counter).
+    pub pool_allocated: usize,
+    /// Batch acquisitions served by recycling a returned buffer.
+    pub pool_reused: usize,
     /// Wall time each chip spent in the stripe phase. In sequential mode
     /// these are true isolated per-chip measurements (the Table-2 "per
     /// chip" row); in parallel mode they overlap.
@@ -46,6 +54,7 @@ impl RunMetrics {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("backend", Json::from(self.backend.as_str())),
+            ("scheduler", Json::from(self.scheduler.as_str())),
             (
                 "artifact",
                 self.artifact.as_deref().map(Json::from).unwrap_or(Json::Null),
@@ -55,6 +64,8 @@ impl RunMetrics {
             ("n_stripes", Json::from(self.n_stripes)),
             ("embeddings", Json::from(self.embeddings)),
             ("batches", Json::from(self.batches)),
+            ("pool_allocated", Json::from(self.pool_allocated)),
+            ("pool_reused", Json::from(self.pool_reused)),
             (
                 "per_chip_seconds",
                 Json::Arr(self.per_chip_seconds.iter().map(|&t| Json::Num(t)).collect()),
@@ -88,10 +99,19 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let m = RunMetrics { backend: "cpu/tiled".into(), batches: 3, ..Default::default() };
+        let m = RunMetrics {
+            backend: "cpu/tiled".into(),
+            scheduler: "dynamic".into(),
+            batches: 3,
+            pool_allocated: 2,
+            pool_reused: 7,
+            ..Default::default()
+        };
         let j = m.to_json().dump();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("batches").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("artifact").unwrap(), &Json::Null);
+        assert_eq!(parsed.get("scheduler").unwrap().as_str(), Some("dynamic"));
+        assert_eq!(parsed.get("pool_reused").unwrap().as_usize(), Some(7));
     }
 }

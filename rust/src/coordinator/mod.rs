@@ -20,6 +20,7 @@ pub use partition::{plan_chips, ChipPlan, ChipSpec};
 pub use pipeline::{run_chips_parallel, run_chips_sequential};
 
 use crate::error::Result;
+use crate::exec::SchedulerKind;
 use crate::matrix::CondensedMatrix;
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
@@ -63,6 +64,11 @@ pub struct RunOptions {
     pub batch_capacity: usize,
     /// Bounded queue depth per chip in parallel mode (backpressure).
     pub queue_depth: usize,
+    /// Stripe scheduling: static contiguous ranges or dynamic chunk
+    /// stealing for heterogeneous chips.
+    pub scheduler: SchedulerKind,
+    /// Recycled batch buffers kept by the exec pool; 0 disables pooling.
+    pub pool_depth: usize,
     /// Where the AOT artifacts live (PJRT backends).
     pub artifacts_dir: Option<PathBuf>,
 }
@@ -76,6 +82,8 @@ impl Default for RunOptions {
             parallel: true,
             batch_capacity: 32,
             queue_depth: 4,
+            scheduler: SchedulerKind::Static,
+            pool_depth: 8,
             artifacts_dir: Some(PathBuf::from("artifacts")),
         }
     }
@@ -146,6 +154,68 @@ mod tests {
                 assert_eq!(out.metrics.per_chip_seconds.len(), chips.min(out.metrics.n_stripes));
             }
         }
+    }
+
+    #[test]
+    fn dynamic_scheduler_matches_static() {
+        let (tree, table) = problem();
+        let reference = run::<f64>(
+            &tree,
+            &table,
+            &RunOptions { chips: 3, batch_capacity: 8, artifacts_dir: None, ..Default::default() },
+        )
+        .unwrap();
+        let out = run::<f64>(
+            &tree,
+            &table,
+            &RunOptions {
+                chips: 3,
+                batch_capacity: 8,
+                scheduler: SchedulerKind::Dynamic,
+                artifacts_dir: None,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(out.dm.max_abs_diff(&reference.dm) < 1e-10);
+        assert_eq!(out.metrics.scheduler, "dynamic");
+        assert_eq!(out.metrics.per_chip_seconds.len(), 3);
+    }
+
+    #[test]
+    fn pool_counters_reported() {
+        let (tree, table) = problem();
+        let out = run::<f64>(
+            &tree,
+            &table,
+            &RunOptions { chips: 2, batch_capacity: 4, artifacts_dir: None, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            out.metrics.pool_allocated + out.metrics.pool_reused,
+            out.metrics.batches + 1
+        );
+        assert!(out.metrics.pool_reused > 0, "steady-state streaming must recycle");
+        // sequential mode reports per-chip-stream counters: the identity
+        // must hold there too (and the forced-static label is surfaced)
+        let out = run::<f64>(
+            &tree,
+            &table,
+            &RunOptions {
+                chips: 3,
+                parallel: false,
+                batch_capacity: 4,
+                scheduler: SchedulerKind::Dynamic,
+                artifacts_dir: None,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            out.metrics.pool_allocated + out.metrics.pool_reused,
+            out.metrics.batches + 1
+        );
+        assert_eq!(out.metrics.scheduler, "static");
     }
 
     #[test]

@@ -67,7 +67,7 @@ pub fn plan_chips<R: XlaReal>(n_samples: usize, opts: &RunOptions) -> Result<Chi
     };
     let n_stripes = total_stripes(padded);
     let chips_n = opts.chips.max(1).min(n_stripes);
-    let ranges = crate::unifrac::compute::split_ranges(n_stripes, chips_n);
+    let ranges = crate::exec::split_ranges(n_stripes, chips_n);
     let chips = ranges
         .into_iter()
         .enumerate()

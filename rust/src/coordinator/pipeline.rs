@@ -1,133 +1,46 @@
-//! The streaming chip pipeline: embedding producer → chip workers.
+//! The chip pipeline: thin wrappers over the unified streaming core.
 //!
 //! Two execution modes mirror how the paper runs Table 2:
 //! * **sequential** — each chip runs in isolation and is timed
 //!   individually (the paper's per-chip rows; also the only way to get
-//!   honest per-chip numbers on one host);
-//! * **parallel** — one producer broadcasts batches through bounded
-//!   queues to all chip threads (the deployment topology; backpressure
-//!   keeps peak memory at `chips · queue_depth` batches).
+//!   honest per-chip numbers on one host): one single-worker
+//!   [`exec::drive`] call per chip;
+//! * **parallel** — one producer broadcasts pooled batches to all chip
+//!   threads (the deployment topology): one multi-worker
+//!   [`exec::drive`] call.
+//!
+//! The worker construction, channel plumbing and batch pooling all live
+//! in `crate::exec`; this module only translates `ChipSpec`s into
+//! [`WorkerBuild`]s and folds the exec report into [`RunMetrics`].
 
 use super::metrics::RunMetrics;
-use super::partition::{ChipPlan, ChipSpec};
+use super::partition::ChipPlan;
 use super::{BackendSpec, RunOptions};
-use crate::embed::{generate_embeddings, EmbBatch};
 use crate::error::{Error, Result};
+use crate::exec::{self, DriveSpec, ExecReport, SchedulerKind, WorkerBuild, WorkerSpec};
 use crate::matrix::StripeBlock;
-use crate::runtime::{ArtifactQuery, ResidentUpdater, Runtime, StripeExecutor, XlaReal};
+use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
-use crate::unifrac::{make_engine, Metric, StripeEngine};
-use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
 
-/// One chip's execution state. Built *inside* the worker thread because
-/// PJRT clients are not `Send` — each chip owns its device context,
-/// exactly like a rank in the paper's distributed runs.
-enum ChipWorker<R: XlaReal> {
-    Cpu {
-        engine: Box<dyn StripeEngine<R>>,
-        metric: Metric,
-        block: StripeBlock<R>,
-    },
-    PjrtOneShot {
-        exec: StripeExecutor,
-        // runtime kept alive for the executable's client
-        _runtime: Box<Runtime>,
-        block: StripeBlock<R>,
-        count: usize,
-    },
-    PjrtResident {
-        upd: ResidentUpdater<R>,
-        _runtime: Box<Runtime>,
-        padded: usize,
-        start: usize,
-        s_artifact: usize,
-        count: usize,
-    },
-}
-
-impl<R: XlaReal> ChipWorker<R> {
-    fn build(spec: &ChipSpec, plan: &ChipPlan, opts: &RunOptions) -> Result<Self> {
-        match &spec.backend {
-            BackendSpec::Cpu { engine, block_k } => Ok(ChipWorker::Cpu {
-                engine: make_engine::<R>(*engine, *block_k),
-                metric: opts.metric,
-                block: StripeBlock::new(plan.padded_n, spec.start, spec.count),
-            }),
-            BackendSpec::Pjrt { engine, resident } => {
-                let dir = opts
-                    .artifacts_dir
-                    .as_ref()
-                    .ok_or_else(|| Error::Config("pjrt backend needs artifacts_dir".into()))?;
-                let runtime = Box::new(Runtime::open(dir)?);
-                let dtype = if R::BYTES == 4 { "float32" } else { "float64" };
-                let q = ArtifactQuery::new(opts.metric, dtype, engine, plan.padded_n);
-                let exec = runtime.executor(&q)?;
-                let s_artifact = exec.artifact().n_stripes;
-                // the artifact computes a fixed S-block from `start`;
-                // rows beyond `count` are trimmed at finish
-                let block = StripeBlock::new(plan.padded_n, spec.start, s_artifact);
-                if *resident {
-                    let upd = exec.resident(&block)?;
-                    Ok(ChipWorker::PjrtResident {
-                        upd,
-                        _runtime: runtime,
-                        padded: plan.padded_n,
-                        start: spec.start,
-                        s_artifact,
-                        count: spec.count,
-                    })
-                } else {
-                    Ok(ChipWorker::PjrtOneShot {
-                        exec,
-                        _runtime: runtime,
-                        block,
-                        count: spec.count,
-                    })
-                }
-            }
+/// Translate a chip backend into an exec worker spec.
+fn worker_spec(backend: &BackendSpec, opts: &RunOptions) -> Result<WorkerSpec> {
+    match backend {
+        BackendSpec::Cpu { engine, block_k } => {
+            Ok(WorkerSpec::Cpu { engine: *engine, block_k: *block_k })
+        }
+        BackendSpec::Pjrt { engine, resident } => {
+            let dir = opts
+                .artifacts_dir
+                .as_ref()
+                .ok_or_else(|| Error::Config("pjrt backend needs artifacts_dir".into()))?;
+            Ok(WorkerSpec::Pjrt {
+                engine: engine.clone(),
+                resident: *resident,
+                artifacts_dir: dir.clone(),
+            })
         }
     }
-
-    fn consume(&mut self, batch: &EmbBatch<R>) -> Result<()> {
-        match self {
-            ChipWorker::Cpu { engine, metric, block, .. } => {
-                engine.apply(*metric, batch, block);
-                Ok(())
-            }
-            ChipWorker::PjrtOneShot { exec, block, .. } => exec.update(batch, block),
-            ChipWorker::PjrtResident { upd, .. } => upd.update(batch),
-        }
-    }
-
-    /// Produce the chip's stripe block, trimmed to its owned range.
-    fn finish(self) -> Result<StripeBlock<R>> {
-        match self {
-            ChipWorker::Cpu { block, .. } => Ok(block),
-            ChipWorker::PjrtOneShot { block, count, .. } => Ok(trim(block, count)),
-            ChipWorker::PjrtResident { upd, padded, start, s_artifact, count, .. } => {
-                let mut block = StripeBlock::new(padded, start, s_artifact);
-                upd.finish(&mut block)?;
-                Ok(trim(block, count))
-            }
-        }
-    }
-}
-
-/// Keep only the first `count` stripes of a block (PJRT artifacts compute
-/// a fixed-height S-block; the chip owns a possibly shorter range).
-fn trim<R: XlaReal>(block: StripeBlock<R>, count: usize) -> StripeBlock<R> {
-    if count >= block.n_stripes() {
-        return block;
-    }
-    let mut out = StripeBlock::new(block.n_samples(), block.start(), count);
-    for s in 0..count {
-        let (num, den) = out.rows_mut(s);
-        num.copy_from_slice(block.num_row(s));
-        den.copy_from_slice(block.den_row(s));
-    }
-    out
 }
 
 fn base_metrics(plan: &ChipPlan, opts: &RunOptions, n_samples: usize) -> RunMetrics {
@@ -138,6 +51,7 @@ fn base_metrics(plan: &ChipPlan, opts: &RunOptions, n_samples: usize) -> RunMetr
                 format!("pjrt/{engine}{}", if *resident { "+resident" } else { "" })
             }
         },
+        scheduler: opts.scheduler.name().to_string(),
         artifact: plan.artifact.clone(),
         n_samples,
         padded_n: plan.padded_n,
@@ -146,7 +60,35 @@ fn base_metrics(plan: &ChipPlan, opts: &RunOptions, n_samples: usize) -> RunMetr
     }
 }
 
+fn drive_spec(plan: &ChipPlan, opts: &RunOptions, workers: Vec<WorkerBuild>) -> DriveSpec {
+    DriveSpec {
+        metric: opts.metric,
+        padded_n: plan.padded_n,
+        batch_capacity: plan.batch_capacity,
+        queue_depth: opts.queue_depth.max(1),
+        pool_depth: opts.pool_depth,
+        scheduler: opts.scheduler,
+        chunk_stripes: 0,
+        workers,
+    }
+}
+
+/// Fold one drive report into the run metrics. Values are per-stream:
+/// parallel mode has exactly one stream; sequential mode re-streams per
+/// chip with identical counts, so the last chip's numbers represent any
+/// of them (keeping the `pool_allocated + pool_reused == batches + 1`
+/// invariant intact either way).
+fn absorb(metrics: &mut RunMetrics, rep: &ExecReport) {
+    metrics.embeddings = rep.embeddings;
+    metrics.batches = rep.batches;
+    metrics.seconds_embed = rep.seconds_embed;
+    metrics.pool_allocated = rep.pool.allocated;
+    metrics.pool_reused = rep.pool.reused;
+}
+
 /// Sequential mode: run each chip in isolation, timing it precisely.
+/// Each chip re-streams the embeddings through its own single-worker
+/// pipeline (that isolation is the point of the measurement mode).
 pub fn run_chips_sequential<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
@@ -155,40 +97,32 @@ pub fn run_chips_sequential<R: XlaReal>(
 ) -> Result<(Vec<StripeBlock<R>>, RunMetrics)> {
     let t_all = std::time::Instant::now();
     let mut metrics = base_metrics(plan, opts, table.n_samples());
+    // isolated per-chip timing always runs fixed ranges; report what
+    // actually executed rather than the requested scheduler
+    metrics.scheduler = SchedulerKind::Static.name().to_string();
     let mut blocks = Vec::with_capacity(plan.chips.len());
     for spec in &plan.chips {
         let t0 = std::time::Instant::now();
-        let mut worker = ChipWorker::<R>::build(spec, plan, opts)?;
-        let mut err: Option<Error> = None;
-        let mut batches = 0usize;
-        let produced = generate_embeddings::<R>(
-            tree,
-            table,
-            opts.metric.embedding_kind(),
-            plan.padded_n,
-            plan.batch_capacity,
-            |batch| {
-                if err.is_none() {
-                    if let Err(e) = worker.consume(batch) {
-                        err = Some(e);
-                    }
-                    batches += 1;
-                }
-            },
-        )?;
-        if let Some(e) = err {
-            return Err(e);
-        }
-        blocks.push(worker.finish()?);
+        let workers = vec![WorkerBuild {
+            spec: worker_spec(&spec.backend, opts)?,
+            range: Some((spec.start, spec.count)),
+        }];
+        // isolated timing wants the plain fixed-range path
+        let mut dspec = drive_spec(plan, opts, workers);
+        dspec.scheduler = SchedulerKind::Static;
+        let (mut chip_blocks, rep) = exec::drive::<R>(tree, table, &dspec)?;
+        blocks.append(&mut chip_blocks);
         metrics.per_chip_seconds.push(t0.elapsed().as_secs_f64());
-        metrics.embeddings = produced;
-        metrics.batches = batches;
+        absorb(&mut metrics, &rep);
     }
     metrics.seconds_total = t_all.elapsed().as_secs_f64();
     Ok((blocks, metrics))
 }
 
-/// Parallel mode: one producer, `chips` worker threads, bounded queues.
+/// Parallel mode: one producer, all chips as workers of a single
+/// [`exec::drive`] call. Under the static scheduler each chip keeps its
+/// planned contiguous range; under the dynamic scheduler CPU chips
+/// steal stripe chunks (PJRT chips keep their fixed-height ranges).
 pub fn run_chips_parallel<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
@@ -197,54 +131,23 @@ pub fn run_chips_parallel<R: XlaReal>(
 ) -> Result<(Vec<StripeBlock<R>>, RunMetrics)> {
     let t_all = std::time::Instant::now();
     let mut metrics = base_metrics(plan, opts, table.n_samples());
-    let result: Result<Vec<(StripeBlock<R>, f64)>> = std::thread::scope(|scope| {
-        let mut senders = Vec::with_capacity(plan.chips.len());
-        let mut handles = Vec::with_capacity(plan.chips.len());
-        for spec in &plan.chips {
-            let (tx, rx) = sync_channel::<Arc<EmbBatch<R>>>(opts.queue_depth.max(1));
-            senders.push(tx);
-            handles.push(scope.spawn(move || -> Result<(StripeBlock<R>, f64)> {
-                let t0 = std::time::Instant::now();
-                let mut worker = ChipWorker::<R>::build(spec, plan, opts)?;
-                while let Ok(batch) = rx.recv() {
-                    worker.consume(&batch)?;
-                }
-                Ok((worker.finish()?, t0.elapsed().as_secs_f64()))
-            }));
-        }
-        let t_embed = std::time::Instant::now();
-        let mut batches = 0usize;
-        let produced = generate_embeddings::<R>(
-            tree,
-            table,
-            opts.metric.embedding_kind(),
-            plan.padded_n,
-            plan.batch_capacity,
-            |batch| {
-                let shared = Arc::new(batch.clone());
-                for tx in &senders {
-                    // a closed queue means the worker errored; its Err
-                    // surfaces at join
-                    let _ = tx.send(Arc::clone(&shared));
-                }
-                batches += 1;
-            },
-        )?;
-        drop(senders);
-        metrics.seconds_embed = t_embed.elapsed().as_secs_f64();
-        metrics.embeddings = produced;
-        metrics.batches = batches;
-        handles
-            .into_iter()
-            .map(|h| h.join().map_err(|_| Error::invalid("chip worker panicked"))?)
-            .collect()
-    });
-    let pairs = result?;
-    let mut blocks = Vec::with_capacity(pairs.len());
-    for (block, secs) in pairs {
-        blocks.push(block);
-        metrics.per_chip_seconds.push(secs);
-    }
+    let workers = plan
+        .chips
+        .iter()
+        .map(|spec| {
+            let wspec = worker_spec(&spec.backend, opts)?;
+            let pinned = opts.scheduler == SchedulerKind::Static
+                || matches!(wspec, WorkerSpec::Pjrt { .. });
+            Ok(WorkerBuild {
+                spec: wspec,
+                range: pinned.then_some((spec.start, spec.count)),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let dspec = drive_spec(plan, opts, workers);
+    let (blocks, rep) = exec::drive::<R>(tree, table, &dspec)?;
+    metrics.per_chip_seconds = rep.per_worker_seconds.clone();
+    absorb(&mut metrics, &rep);
     metrics.seconds_total = t_all.elapsed().as_secs_f64();
     Ok((blocks, metrics))
 }

@@ -10,6 +10,12 @@
 //! Rows are emitted circularly duplicated (`[mass | mass]`, length `2N`)
 //! so the stripe kernels can read `emb[k + stripe + 1]` without modular
 //! arithmetic — the exact trick of the original C++ implementation.
+//!
+//! The producer is **pull-based**: [`EmbeddingStream`] fills batches the
+//! caller provides, so the `exec` core can hand it pooled buffers and
+//! stream indefinitely with zero per-batch allocation. The postorder DP
+//! recycles its per-node mass rows through a scratch arena — steady
+//! state allocates nothing per node either.
 
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
@@ -42,7 +48,7 @@ pub struct EmbBatch<R: Real> {
 }
 
 impl<R: Real> EmbBatch<R> {
-    fn new(n_samples: usize, capacity: usize) -> Self {
+    pub fn new(n_samples: usize, capacity: usize) -> Self {
         Self {
             n_samples,
             filled: 0,
@@ -55,6 +61,20 @@ impl<R: Real> EmbBatch<R> {
     /// Row `e` (duplicated, length `2N`).
     pub fn row(&self, e: usize) -> &[R] {
         &self.emb[e * 2 * self.n_samples..(e + 1) * 2 * self.n_samples]
+    }
+
+    /// Clear back to an empty batch. Only rows `0..filled` are touched —
+    /// rows past `filled` are zero by construction, which keeps reset
+    /// cheap on recycled pool buffers.
+    pub fn reset(&mut self) {
+        let two_n = 2 * self.n_samples;
+        for v in &mut self.emb[..self.filled * two_n] {
+            *v = R::ZERO;
+        }
+        for l in &mut self.lengths[..self.filled] {
+            *l = R::ZERO;
+        }
+        self.filled = 0;
     }
 
     fn push(&mut self, mass: &[f64], length: f64) {
@@ -72,13 +92,134 @@ impl<R: Real> EmbBatch<R> {
     }
 }
 
+/// Incremental embedding producer: a postorder DP over the tree that
+/// fills caller-provided batches on demand.
+///
+/// Streaming contract: every non-root node is emitted exactly once, in
+/// deterministic postorder. Peak memory is O(pending DP rows · N), never
+/// O(nodes · N); consumed child rows are recycled through `free` so the
+/// steady state performs no per-node allocation.
+pub struct EmbeddingStream<'a> {
+    tree: &'a Phylogeny,
+    kind: EmbeddingKind,
+    n: usize,
+    /// Next index into `tree.postorder()`.
+    pos: usize,
+    /// Owned per-feature sample columns (presence or proportions).
+    cols: Vec<Vec<(u32, f64)>>,
+    /// Leaf node id -> index into `cols`.
+    leaf_col: HashMap<usize, usize>,
+    /// Node id -> finished mass row, kept until the parent consumes it.
+    pending: HashMap<usize, Vec<f64>>,
+    /// Scratch arena: recycled mass rows.
+    free: Vec<Vec<f64>>,
+    produced: usize,
+}
+
+impl<'a> EmbeddingStream<'a> {
+    pub fn new(
+        tree: &'a Phylogeny,
+        table: &FeatureTable,
+        kind: EmbeddingKind,
+    ) -> crate::Result<Self> {
+        let leaf_index = tree.leaf_index()?;
+        let cols = match kind {
+            EmbeddingKind::Presence => table.by_feature(),
+            EmbeddingKind::Proportion => table.proportions_by_feature(),
+        };
+        let mut leaf_col = HashMap::with_capacity(table.n_features());
+        for (f, fid) in table.feature_ids().iter().enumerate() {
+            let leaf = *leaf_index.get(fid.as_str()).ok_or_else(|| {
+                crate::Error::invalid(format!("feature {fid:?} not a tree leaf"))
+            })?;
+            leaf_col.insert(leaf, f);
+        }
+        Ok(Self {
+            tree,
+            kind,
+            n: table.n_samples(),
+            pos: 0,
+            cols,
+            leaf_col,
+            pending: HashMap::new(),
+            free: Vec::new(),
+            produced: 0,
+        })
+    }
+
+    /// Embeddings emitted so far (equals non-root node count once the
+    /// stream is exhausted).
+    pub fn produced(&self) -> usize {
+        self.produced
+    }
+
+    /// Grab a zeroed mass row from the arena (or allocate the first few).
+    fn fresh_row(&mut self) -> Vec<f64> {
+        let mut row = self.free.pop().unwrap_or_default();
+        row.clear();
+        row.resize(self.n, 0.0);
+        row
+    }
+
+    /// Fill `batch` (which must be empty) with up to `capacity` rows.
+    /// Returns the number of rows written; 0 means the stream is done.
+    pub fn fill<R: Real>(&mut self, batch: &mut EmbBatch<R>) -> usize {
+        assert!(batch.n_samples >= self.n, "batch narrower than sample count");
+        assert_eq!(batch.filled, 0, "fill expects a reset batch");
+        let root = self.tree.root();
+        let postorder = self.tree.postorder();
+        while batch.filled < batch.capacity {
+            let Some(&node) = postorder.get(self.pos) else {
+                break;
+            };
+            self.pos += 1;
+            let mut mass = self.fresh_row();
+            if self.tree.is_leaf(node) {
+                if let Some(&f) = self.leaf_col.get(&node) {
+                    for &(s, v) in &self.cols[f] {
+                        mass[s as usize] = match self.kind {
+                            EmbeddingKind::Presence => f64::from(v > 0.0),
+                            EmbeddingKind::Proportion => v,
+                        };
+                    }
+                }
+            } else {
+                // sum (or OR) of children, consuming their pending rows
+                for &c in self.tree.children(node) {
+                    let child =
+                        self.pending.remove(&c).expect("postorder guarantees child done");
+                    for (a, b) in mass.iter_mut().zip(&child) {
+                        *a += b;
+                    }
+                    self.free.push(child);
+                }
+                if self.kind == EmbeddingKind::Presence {
+                    for a in mass.iter_mut() {
+                        if *a > 0.0 {
+                            *a = 1.0;
+                        }
+                    }
+                }
+            }
+            if node == root {
+                // root mass (== 1 or all-presence) carries no branch
+                self.free.push(mass);
+                break;
+            }
+            batch.push(&mass, self.tree.branch_length(node));
+            self.produced += 1;
+            // keep for the parent (presence rows are already clamped)
+            self.pending.insert(node, mass);
+        }
+        batch.filled
+    }
+}
+
 /// Compute all embeddings for `(tree, table)` and hand them to `sink` in
 /// batches of `batch_capacity` rows, padded to `padded_n` columns.
 ///
-/// Streaming contract: each batch is passed to `sink` exactly once, in a
-/// deterministic (postorder) order, and then dropped — peak memory is
-/// O(tree depth · N + batch), never O(nodes · N).
-///
+/// Thin wrapper over [`EmbeddingStream`] that reuses a single batch
+/// buffer; `sink` borrows each batch and must copy anything it keeps.
 /// Returns the number of embeddings (non-root nodes) produced.
 pub fn generate_embeddings<R: Real>(
     tree: &Phylogeny,
@@ -88,86 +229,18 @@ pub fn generate_embeddings<R: Real>(
     batch_capacity: usize,
     mut sink: impl FnMut(&EmbBatch<R>),
 ) -> crate::Result<usize> {
-    let n = table.n_samples();
-    assert!(padded_n >= n, "padded_n < n_samples");
+    assert!(padded_n >= table.n_samples(), "padded_n < n_samples");
     assert!(batch_capacity > 0);
-
-    let leaf_index = tree.leaf_index()?;
-    // feature id -> leaf node, then leaf node -> per-sample values
-    let cols = match kind {
-        EmbeddingKind::Presence => table.by_feature(),
-        EmbeddingKind::Proportion => table.proportions_by_feature(),
-    };
-    let mut leaf_values: HashMap<usize, &[(u32, f64)]> = HashMap::new();
-    for (f, fid) in table.feature_ids().iter().enumerate() {
-        let leaf = *leaf_index.get(fid.as_str()).ok_or_else(|| {
-            crate::Error::invalid(format!("feature {fid:?} not a tree leaf"))
-        })?;
-        leaf_values.insert(leaf, &cols[f]);
-    }
-
-    // postorder DP: keep each node's mass row until its parent consumes it
-    let mut pending: HashMap<usize, Vec<f64>> = HashMap::new();
+    let mut stream = EmbeddingStream::new(tree, table, kind)?;
     let mut batch = EmbBatch::<R>::new(padded_n, batch_capacity);
-    let mut produced = 0usize;
-    let root = tree.root();
-    for &node in tree.postorder() {
-        let mut mass = if tree.is_leaf(node) {
-            let mut m = vec![0.0f64; n];
-            if let Some(col) = leaf_values.get(&node) {
-                for &(s, v) in col.iter() {
-                    m[s as usize] = match kind {
-                        EmbeddingKind::Presence => {
-                            if v > 0.0 {
-                                1.0
-                            } else {
-                                0.0
-                            }
-                        }
-                        EmbeddingKind::Proportion => v,
-                    };
-                }
-            }
-            m
-        } else {
-            // sum (or OR) of children, consuming their pending rows
-            let mut m = vec![0.0f64; n];
-            for &c in tree.children(node) {
-                let child = pending.remove(&c).expect("postorder guarantees child done");
-                for (a, b) in m.iter_mut().zip(&child) {
-                    *a += b;
-                }
-            }
-            if kind == EmbeddingKind::Presence {
-                for a in m.iter_mut() {
-                    if *a > 0.0 {
-                        *a = 1.0;
-                    }
-                }
-            }
-            m
-        };
-
-        if node == root {
-            break; // root mass (== 1 or all-presence) carries no branch
+    loop {
+        batch.reset();
+        if stream.fill(&mut batch) == 0 {
+            break;
         }
-        batch.push(&mass, tree.branch_length(node));
-        produced += 1;
-        if batch.filled == batch.capacity {
-            sink(&batch);
-            batch = EmbBatch::<R>::new(padded_n, batch_capacity);
-        }
-        // keep for the parent
-        if kind == EmbeddingKind::Presence {
-            // presence DP must keep the clamped row
-        }
-        mass.shrink_to_fit();
-        pending.insert(node, mass);
-    }
-    if batch.filled > 0 {
         sink(&batch);
     }
-    Ok(produced)
+    Ok(stream.produced())
 }
 
 /// Convenience: materialize all batches (tests / small problems).
@@ -271,6 +344,45 @@ mod tests {
         .unwrap();
         assert_eq!(produced, tree.n_nodes() - 1);
         assert_eq!(total_rows, produced);
+    }
+
+    #[test]
+    fn stream_fill_matches_wrapper_and_recycles_scratch() {
+        let (tree, table) = tiny();
+        let wrapper =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 4, 2).unwrap();
+        let mut stream =
+            EmbeddingStream::new(&tree, &table, EmbeddingKind::Proportion).unwrap();
+        let mut batch = EmbBatch::<f64>::new(4, 2);
+        let mut got = Vec::new();
+        loop {
+            batch.reset();
+            if stream.fill(&mut batch) == 0 {
+                break;
+            }
+            got.push(batch.clone());
+        }
+        assert_eq!(got.len(), wrapper.len());
+        for (a, b) in got.iter().zip(&wrapper) {
+            assert_eq!(a.filled, b.filled);
+            assert_eq!(a.emb, b.emb);
+            assert_eq!(a.lengths, b.lengths);
+        }
+        assert_eq!(stream.produced(), tree.n_nodes() - 1);
+    }
+
+    #[test]
+    fn reset_clears_filled_rows_only() {
+        let (tree, table) = tiny();
+        let mut stream =
+            EmbeddingStream::new(&tree, &table, EmbeddingKind::Proportion).unwrap();
+        let mut batch = EmbBatch::<f64>::new(4, 8);
+        assert!(stream.fill(&mut batch) > 0);
+        assert!(batch.emb.iter().any(|&x| x != 0.0));
+        batch.reset();
+        assert_eq!(batch.filled, 0);
+        assert!(batch.emb.iter().all(|&x| x == 0.0));
+        assert!(batch.lengths.iter().all(|&x| x == 0.0));
     }
 
     #[test]

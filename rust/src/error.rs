@@ -1,38 +1,59 @@
-//! Unified error type for the whole crate.
+//! Unified error type for the whole crate (hand-rolled: the offline
+//! build environment ships no `thiserror`).
 
-use thiserror::Error;
-
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("newick parse error at byte {at}: {msg}")]
+    Io(std::io::Error),
     Newick { at: usize, msg: String },
-
-    #[error("table parse error: {0}")]
     Table(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("no artifact matches request: {0}")]
     NoArtifact(String),
-
-    #[error("xla/pjrt error: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("invalid argument: {0}")]
+    Xla(xla::Error),
     Invalid(String),
-
-    #[error("cli error: {0}")]
     Cli(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Newick { at, msg } => {
+                write!(f, "newick parse error at byte {at}: {msg}")
+            }
+            Error::Table(m) => write!(f, "table parse error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::NoArtifact(m) => write!(f, "no artifact matches request: {m}"),
+            Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Cli(m) => write!(f, "cli error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -53,5 +74,11 @@ mod tests {
         assert!(e.to_string().contains("byte 3"));
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn xla_errors_convert() {
+        let e: Error = xla::Error("boom".into()).into();
+        assert!(e.to_string().contains("xla/pjrt error"));
     }
 }

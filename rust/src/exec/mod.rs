@@ -1,0 +1,448 @@
+//! The unified streaming execution core (ISSUE 1 tentpole).
+//!
+//! One pipeline serves every entry point: the single-node CPU driver
+//! (`unifrac::compute_unifrac`) and the chip coordinator
+//! (`coordinator::run`) both route through [`drive`], which owns the
+//! producer → bounded-queue → worker plumbing they used to duplicate.
+//!
+//! ```text
+//!   tree/table ──► EmbeddingStream ──► BatchPool (recycled Arc<EmbBatch>)
+//!                                          │ zero-copy Arc broadcast
+//!                          ┌───────────────┼───────────────┐
+//!                       Worker          Worker          Worker
+//!                    (CPU engine)   (PJRT one-shot)  (PJRT resident)
+//!                          └───────────────┼───────────────┘
+//!                                   StripeBlocks ──► matrix assembly
+//! ```
+//!
+//! * **Pooling** ([`pool`]): the producer writes into recycled
+//!   `Arc<EmbBatch>` buffers; workers share the `Arc` and their final
+//!   drop returns the buffer. Steady-state streaming allocates nothing
+//!   per batch (counted in [`PoolStats`], surfaced in `RunMetrics`).
+//! * **Scheduling** ([`scheduler`]): `Static` contiguous ranges, or
+//!   `Dynamic` work-stealing of stripe chunks via a per-batch atomic
+//!   cursor for heterogeneous workers.
+//! * **Workers** ([`worker`]): one enum over CPU engines and PJRT
+//!   artifact executors — the seam every future backend plugs into.
+
+pub mod pool;
+pub mod scheduler;
+pub mod worker;
+
+pub use pool::{BatchPool, PoolStats};
+pub use scheduler::{split_ranges, SchedulerKind};
+pub use worker::{Worker, WorkerSpec};
+
+use crate::embed::{EmbBatch, EmbeddingStream};
+use crate::error::{Error, Result};
+use crate::matrix::{total_stripes, StripeBlock};
+use crate::runtime::XlaReal;
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::unifrac::{make_engine, Metric, StripeEngine};
+use scheduler::Role;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One worker slot in a [`DriveSpec`].
+#[derive(Clone, Debug)]
+pub struct WorkerBuild {
+    pub spec: WorkerSpec,
+    /// Caller-pinned stripe range. `None` lets the scheduler assign
+    /// (contiguous split under `Static`, chunk stealing under
+    /// `Dynamic`). PJRT workers must be pinned under `Dynamic`.
+    pub range: Option<(usize, usize)>,
+}
+
+/// Everything [`drive`] needs besides the problem itself.
+#[derive(Clone, Debug)]
+pub struct DriveSpec {
+    pub metric: Metric,
+    /// Padded sample-chunk width (embedding row width is `2 *` this).
+    pub padded_n: usize,
+    /// Embedding rows per batch.
+    pub batch_capacity: usize,
+    /// Bounded queue depth per worker (backpressure).
+    pub queue_depth: usize,
+    /// Max recycled batch buffers; 0 disables pooling (fresh-alloc
+    /// baseline). `queue_depth + 2` or more sustains full reuse.
+    pub pool_depth: usize,
+    pub scheduler: SchedulerKind,
+    /// Dynamic steal-task granularity in stripes; 0 = auto (~4 chunks
+    /// per stealing worker).
+    pub chunk_stripes: usize,
+    pub workers: Vec<WorkerBuild>,
+}
+
+/// What one [`drive`] call measured.
+#[derive(Clone, Debug, Default)]
+pub struct ExecReport {
+    pub scheduler: SchedulerKind,
+    /// Embeddings (non-root nodes) streamed.
+    pub embeddings: usize,
+    /// Batches broadcast.
+    pub batches: usize,
+    /// Producer-loop wall time (fill + broadcast backpressure).
+    pub seconds_embed: f64,
+    /// Per-worker wall time, worker order (overlapping in parallel runs).
+    pub per_worker_seconds: Vec<f64>,
+    pub pool: PoolStats,
+}
+
+/// A broadcast work item: the shared batch plus the ring slot of its
+/// dynamic-steal cursor.
+struct Msg<R: XlaReal> {
+    batch: Arc<EmbBatch<R>>,
+    slot: usize,
+}
+
+/// Worker-thread state: either a fixed-range [`Worker`] or a dynamic
+/// stealer folding claimed chunks into lazily-created private blocks.
+enum Runner<R: XlaReal> {
+    Fixed(Worker<R>),
+    Steal {
+        engine: Box<dyn StripeEngine<R>>,
+        metric: Metric,
+        padded_n: usize,
+        chunks: Arc<Vec<(usize, usize)>>,
+        blocks: HashMap<usize, StripeBlock<R>>,
+    },
+}
+
+enum RunnerOut<R: XlaReal> {
+    Blocks(Vec<StripeBlock<R>>),
+    Chunks(HashMap<usize, StripeBlock<R>>),
+}
+
+impl<R: XlaReal> Runner<R> {
+    fn build(
+        wspec: &WorkerSpec,
+        role: Role,
+        metric: Metric,
+        padded_n: usize,
+        chunks: Arc<Vec<(usize, usize)>>,
+    ) -> Result<Self> {
+        match role {
+            Role::Fixed { start, count } => {
+                Ok(Runner::Fixed(Worker::build(wspec, metric, padded_n, start, count)?))
+            }
+            Role::Steal => match wspec {
+                WorkerSpec::Cpu { engine, block_k } => Ok(Runner::Steal {
+                    engine: make_engine::<R>(*engine, *block_k),
+                    metric,
+                    padded_n,
+                    chunks,
+                    blocks: HashMap::new(),
+                }),
+                WorkerSpec::Pjrt { .. } => Err(Error::Config(
+                    "dynamic stealing requires CPU workers (scheduler should have \
+                     rejected this)"
+                        .into(),
+                )),
+            },
+        }
+    }
+
+    /// Fold one batch. `cursor == Some` claims chunks through the shared
+    /// per-batch counter (parallel stealing); `None` folds every chunk
+    /// (single-worker inline path).
+    fn consume(&mut self, batch: &EmbBatch<R>, cursor: Option<&AtomicUsize>) -> Result<()> {
+        match self {
+            Runner::Fixed(w) => w.consume(batch),
+            Runner::Steal { engine, metric, padded_n, chunks, blocks } => {
+                let mut next_local = 0usize;
+                loop {
+                    let c = match cursor {
+                        Some(cur) => cur.fetch_add(1, Ordering::Relaxed),
+                        None => {
+                            let c = next_local;
+                            next_local += 1;
+                            c
+                        }
+                    };
+                    if c >= chunks.len() {
+                        return Ok(());
+                    }
+                    let (start, count) = chunks[c];
+                    let block = blocks
+                        .entry(c)
+                        .or_insert_with(|| StripeBlock::new(*padded_n, start, count));
+                    engine.apply(*metric, batch, block);
+                }
+            }
+        }
+    }
+
+    fn finish(self) -> Result<RunnerOut<R>> {
+        match self {
+            Runner::Fixed(w) => Ok(RunnerOut::Blocks(vec![w.finish()?])),
+            Runner::Steal { blocks, .. } => Ok(RunnerOut::Chunks(blocks)),
+        }
+    }
+}
+
+/// Run the streaming pipeline: produce embedding batches once, broadcast
+/// them to every worker, return the finished stripe blocks (disjointly
+/// covering the scheduled ranges) plus the run report.
+pub fn drive<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    spec: &DriveSpec,
+) -> Result<(Vec<StripeBlock<R>>, ExecReport)> {
+    if spec.workers.is_empty() {
+        return Err(Error::Config("exec::drive needs at least one worker".into()));
+    }
+    if spec.padded_n < table.n_samples() || spec.padded_n < 2 {
+        return Err(Error::Shape(format!(
+            "padded_n {} below sample count {}",
+            spec.padded_n,
+            table.n_samples()
+        )));
+    }
+    for w in &spec.workers {
+        worker::validate_spec(&w.spec)?;
+    }
+    let padded = spec.padded_n;
+    let n_stripes = total_stripes(padded);
+    let pairs: Vec<(WorkerSpec, Option<(usize, usize)>)> =
+        spec.workers.iter().map(|w| (w.spec.clone(), w.range)).collect();
+    let schedule = scheduler::resolve(spec.scheduler, &pairs, n_stripes, spec.chunk_stripes)?;
+    let chunks = Arc::new(schedule.chunks);
+    let queue_depth = spec.queue_depth.max(1);
+    let batch_capacity = spec.batch_capacity.max(1);
+    let mut pool = BatchPool::<R>::new(padded, batch_capacity, spec.pool_depth);
+    let mut report = ExecReport { scheduler: spec.scheduler, ..Default::default() };
+    let mut stream = EmbeddingStream::new(tree, table, spec.metric.embedding_kind())?;
+
+    let outs: Vec<RunnerOut<R>> = if spec.workers.len() == 1 {
+        // inline path: no threads, no channels, no Arc clones
+        let t0 = Instant::now();
+        let mut runner = Runner::<R>::build(
+            &spec.workers[0].spec,
+            schedule.roles[0],
+            spec.metric,
+            padded,
+            Arc::clone(&chunks),
+        )?;
+        let mut embed_seconds = 0.0f64;
+        loop {
+            let mut shared = pool.acquire();
+            let t1 = Instant::now();
+            let rows = stream
+                .fill(Arc::get_mut(&mut shared).expect("acquired batch is uniquely owned"));
+            embed_seconds += t1.elapsed().as_secs_f64();
+            if rows == 0 {
+                pool.recycle(shared);
+                break;
+            }
+            report.batches += 1;
+            runner.consume(&shared, None)?;
+            pool.recycle(shared);
+        }
+        report.seconds_embed = embed_seconds;
+        let out = runner.finish()?;
+        report.per_worker_seconds.push(t0.elapsed().as_secs_f64());
+        vec![out]
+    } else {
+        // Cursor ring for dynamic stealing: slot `b % ring` is reset
+        // right before batch `b` is broadcast. Bounded queues keep every
+        // worker within `queue_depth + 1` batches of the producer, so
+        // with `ring >= queue_depth + 2` no worker can still be claiming
+        // from a slot when it is reset (+2 extra slack here).
+        let ring = queue_depth + 4;
+        let cursors: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..ring).map(|_| AtomicUsize::new(0)).collect());
+        let dynamic = !chunks.is_empty();
+        let joined: Result<Vec<(RunnerOut<R>, f64)>> = std::thread::scope(|scope| {
+            let mut senders = Vec::with_capacity(spec.workers.len());
+            let mut handles = Vec::with_capacity(spec.workers.len());
+            for (w, &role) in spec.workers.iter().zip(&schedule.roles) {
+                let (tx, rx) = sync_channel::<Msg<R>>(queue_depth);
+                senders.push(tx);
+                let wspec = w.spec.clone();
+                let metric = spec.metric;
+                let chunks_cl = Arc::clone(&chunks);
+                let cursors_cl = Arc::clone(&cursors);
+                handles.push(scope.spawn(move || -> Result<(RunnerOut<R>, f64)> {
+                    let t0 = Instant::now();
+                    let mut runner =
+                        Runner::<R>::build(&wspec, role, metric, padded, chunks_cl)?;
+                    while let Ok(msg) = rx.recv() {
+                        runner.consume(&msg.batch, Some(&cursors_cl[msg.slot]))?;
+                    }
+                    Ok((runner.finish()?, t0.elapsed().as_secs_f64()))
+                }));
+            }
+            let t_embed = Instant::now();
+            loop {
+                let mut shared = pool.acquire();
+                let rows = stream.fill(
+                    Arc::get_mut(&mut shared).expect("acquired batch is uniquely owned"),
+                );
+                if rows == 0 {
+                    pool.recycle(shared);
+                    break;
+                }
+                let slot = report.batches % ring;
+                if dynamic {
+                    cursors[slot].store(0, Ordering::Relaxed);
+                }
+                for tx in &senders {
+                    // a closed queue means the worker errored; its Err
+                    // surfaces at join
+                    let _ = tx.send(Msg { batch: Arc::clone(&shared), slot });
+                }
+                pool.recycle(shared);
+                report.batches += 1;
+            }
+            drop(senders);
+            report.seconds_embed = t_embed.elapsed().as_secs_f64();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| Error::invalid("stripe worker panicked"))?)
+                .collect()
+        });
+        let mut outs = Vec::with_capacity(spec.workers.len());
+        for (out, seconds) in joined? {
+            report.per_worker_seconds.push(seconds);
+            outs.push(out);
+        }
+        outs
+    };
+
+    report.embeddings = stream.produced();
+    report.pool = pool.stats();
+
+    // Assemble: fixed blocks pass through; stolen chunk blocks merge
+    // additively across workers (stripe updates are additive), in
+    // worker-then-chunk order for a deterministic merge.
+    let mut blocks: Vec<StripeBlock<R>> = Vec::new();
+    let mut chunk_acc: Vec<Option<StripeBlock<R>>> = (0..chunks.len()).map(|_| None).collect();
+    let mut any_steal = false;
+    for out in outs {
+        match out {
+            RunnerOut::Blocks(mut b) => blocks.append(&mut b),
+            RunnerOut::Chunks(mut map) => {
+                any_steal = true;
+                let mut keys: Vec<usize> = map.keys().copied().collect();
+                keys.sort_unstable();
+                for k in keys {
+                    let blk = map.remove(&k).expect("key enumerated above");
+                    match &mut chunk_acc[k] {
+                        None => chunk_acc[k] = Some(blk),
+                        Some(acc) => acc.accumulate(&blk),
+                    }
+                }
+            }
+        }
+    }
+    if any_steal {
+        for (ci, slot) in chunk_acc.into_iter().enumerate() {
+            let (start, count) = chunks[ci];
+            // chunks untouched by any worker (zero batches) still owe a
+            // zero block so matrix assembly sees full coverage
+            blocks.push(slot.unwrap_or_else(|| StripeBlock::new(padded, start, count)));
+        }
+    }
+    Ok((blocks, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::SynthSpec;
+    use crate::unifrac::EngineKind;
+
+    fn cpu_workers(n: usize) -> Vec<WorkerBuild> {
+        (0..n)
+            .map(|_| WorkerBuild {
+                spec: WorkerSpec::Cpu { engine: EngineKind::Tiled, block_k: 8 },
+                range: None,
+            })
+            .collect()
+    }
+
+    fn spec(workers: Vec<WorkerBuild>, scheduler: SchedulerKind, pool_depth: usize) -> DriveSpec {
+        DriveSpec {
+            metric: Metric::WeightedNormalized,
+            padded_n: 24,
+            batch_capacity: 4,
+            queue_depth: 2,
+            pool_depth,
+            scheduler,
+            chunk_stripes: 0,
+            workers,
+        }
+    }
+
+    #[test]
+    fn inline_single_worker_covers_all_stripes() {
+        let (tree, table) =
+            SynthSpec { n_samples: 24, n_features: 96, ..Default::default() }.generate();
+        let (blocks, rep) =
+            drive::<f64>(&tree, &table, &spec(cpu_workers(1), SchedulerKind::Static, 8))
+                .unwrap();
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].stripe_range(), 0..total_stripes(24));
+        assert_eq!(rep.embeddings, tree.n_nodes() - 1);
+        assert!(rep.batches > 0);
+        assert_eq!(rep.per_worker_seconds.len(), 1);
+        // inline pooled streaming: exactly one buffer ever allocated
+        assert_eq!(rep.pool.allocated, 1);
+        assert_eq!(rep.pool.reused, rep.batches);
+    }
+
+    #[test]
+    fn static_and_dynamic_agree_with_inline() {
+        let (tree, table) =
+            SynthSpec { n_samples: 24, n_features: 128, density: 0.1, ..Default::default() }
+                .generate();
+        let assemble = |blocks: &[StripeBlock<f64>]| {
+            crate::matrix::CondensedMatrix::from_stripes(
+                24,
+                table.sample_ids().to_vec(),
+                blocks,
+                |n, d| if d > 0.0 { n / d } else { 0.0 },
+            )
+            .unwrap()
+        };
+        let (b0, _) =
+            drive::<f64>(&tree, &table, &spec(cpu_workers(1), SchedulerKind::Static, 8))
+                .unwrap();
+        let reference = assemble(&b0);
+        for scheduler in [SchedulerKind::Static, SchedulerKind::Dynamic] {
+            for threads in [2usize, 3] {
+                let (b, rep) =
+                    drive::<f64>(&tree, &table, &spec(cpu_workers(threads), scheduler, 8))
+                        .unwrap();
+                let dm = assemble(&b);
+                assert!(
+                    dm.max_abs_diff(&reference) < 1e-12,
+                    "{scheduler:?} threads={threads}"
+                );
+                assert_eq!(rep.per_worker_seconds.len(), threads);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_disabled_allocates_per_batch() {
+        let (tree, table) =
+            SynthSpec { n_samples: 24, n_features: 96, ..Default::default() }.generate();
+        let (_, rep) =
+            drive::<f64>(&tree, &table, &spec(cpu_workers(1), SchedulerKind::Static, 0))
+                .unwrap();
+        assert_eq!(rep.pool.reused, 0);
+        assert_eq!(rep.pool.allocated, rep.batches + 1);
+    }
+
+    #[test]
+    fn rejects_empty_worker_set() {
+        let (tree, table) =
+            SynthSpec { n_samples: 8, n_features: 32, ..Default::default() }.generate();
+        assert!(drive::<f64>(&tree, &table, &spec(vec![], SchedulerKind::Static, 8)).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Stripe scheduling: how the stripe space maps onto workers.
+//!
+//! Two strategies (ISSUE 1 tentpole):
+//! * [`SchedulerKind::Static`] — contiguous `split_ranges` partitions,
+//!   one fixed range per worker. Deterministic and cache-friendly; the
+//!   right default when workers are homogeneous.
+//! * [`SchedulerKind::Dynamic`] — the uncovered stripe space is cut
+//!   into small chunk tasks and workers *steal* `(batch, chunk)` work
+//!   items from a shared per-batch cursor. Fast workers fold more
+//!   chunks per batch, so heterogeneous fleets (PJRT fixed-height
+//!   artifacts next to CPU engines, or unevenly loaded cores) stay
+//!   busy. Workers with a fixed range (PJRT) keep it and do not steal.
+
+use crate::error::{Error, Result};
+use crate::exec::worker::WorkerSpec;
+
+/// Scheduler selector (CLI `--scheduler`, config `scheduler`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    #[default]
+    Static,
+    Dynamic,
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Static => "static",
+            SchedulerKind::Dynamic => "dynamic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "static" => Some(Self::Static),
+            "dynamic" => Some(Self::Dynamic),
+            _ => None,
+        }
+    }
+}
+
+/// Split `total` items into `parts` contiguous (start, count) ranges.
+pub fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(total.max(1));
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let count = base + usize::from(i < extra);
+        if count > 0 {
+            out.push((start, count));
+        }
+        start += count;
+    }
+    out
+}
+
+/// How one worker participates in a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Role {
+    /// Folds every batch into a fixed contiguous stripe range.
+    Fixed { start: usize, count: usize },
+    /// Pulls stripe-chunk tasks from the shared per-batch cursor.
+    Steal,
+}
+
+/// Resolved schedule: per-worker roles plus the dynamic chunk table
+/// (global (start, count) stripe sub-ranges; empty when nothing steals).
+pub(crate) struct Schedule {
+    pub roles: Vec<Role>,
+    pub chunks: Vec<(usize, usize)>,
+}
+
+/// Resolve worker roles over `n_stripes` total stripes.
+///
+/// `explicit[i]` is worker `i`'s caller-pinned range, if any (the
+/// coordinator pins chip ranges; `compute_unifrac` pins none).
+/// `chunk_stripes == 0` picks ~4 chunks per stealing worker.
+pub(crate) fn resolve(
+    kind: SchedulerKind,
+    workers: &[(WorkerSpec, Option<(usize, usize)>)],
+    n_stripes: usize,
+    chunk_stripes: usize,
+) -> Result<Schedule> {
+    for (_, range) in workers {
+        if let Some((start, count)) = range {
+            if start + count > n_stripes {
+                return Err(Error::Config(format!(
+                    "worker stripe range {start}+{count} exceeds the {n_stripes}-stripe space"
+                )));
+            }
+        }
+    }
+    let unpinned = workers.iter().filter(|(_, r)| r.is_none()).count();
+    match kind {
+        SchedulerKind::Static => {
+            if unpinned == 0 {
+                let roles = workers
+                    .iter()
+                    .map(|(_, r)| {
+                        let (start, count) = r.expect("all pinned");
+                        Role::Fixed { start, count }
+                    })
+                    .collect();
+                return Ok(Schedule { roles, chunks: Vec::new() });
+            }
+            if unpinned != workers.len() {
+                return Err(Error::Config(
+                    "static scheduler: pin stripe ranges on all workers or on none".into(),
+                ));
+            }
+            let ranges = split_ranges(n_stripes, workers.len());
+            let roles = (0..workers.len())
+                .map(|i| {
+                    // more workers than stripes: surplus workers idle on
+                    // an empty range
+                    let (start, count) = ranges.get(i).copied().unwrap_or((0, 0));
+                    Role::Fixed { start, count }
+                })
+                .collect();
+            Ok(Schedule { roles, chunks: Vec::new() })
+        }
+        SchedulerKind::Dynamic => {
+            let mut roles = Vec::with_capacity(workers.len());
+            for (spec, range) in workers {
+                match range {
+                    Some((start, count)) => {
+                        roles.push(Role::Fixed { start: *start, count: *count })
+                    }
+                    None => {
+                        if matches!(spec, WorkerSpec::Pjrt { .. }) {
+                            return Err(Error::Config(
+                                "dynamic scheduler: PJRT workers compute a fixed-height \
+                                 S-block and cannot steal; pin their stripe range"
+                                    .into(),
+                            ));
+                        }
+                        roles.push(Role::Steal);
+                    }
+                }
+            }
+            let chunks = if unpinned > 0 {
+                chunk_uncovered(workers, n_stripes, chunk_stripes, unpinned)
+            } else {
+                Vec::new()
+            };
+            Ok(Schedule { roles, chunks })
+        }
+    }
+}
+
+/// Chunk the stripe space not covered by pinned ranges into steal tasks.
+fn chunk_uncovered(
+    workers: &[(WorkerSpec, Option<(usize, usize)>)],
+    n_stripes: usize,
+    chunk_stripes: usize,
+    stealers: usize,
+) -> Vec<(usize, usize)> {
+    let mut pinned: Vec<(usize, usize)> =
+        workers.iter().filter_map(|(_, r)| *r).filter(|(_, c)| *c > 0).collect();
+    pinned.sort_unstable();
+    let mut segments = Vec::new();
+    let mut pos = 0usize;
+    for (start, count) in pinned {
+        if start > pos {
+            segments.push((pos, start - pos));
+        }
+        pos = pos.max(start + count);
+    }
+    if pos < n_stripes {
+        segments.push((pos, n_stripes - pos));
+    }
+    let uncovered: usize = segments.iter().map(|(_, c)| c).sum();
+    if uncovered == 0 {
+        return Vec::new();
+    }
+    // ~4 tasks per stealer balances stealing overhead vs. granularity
+    let width = if chunk_stripes > 0 {
+        chunk_stripes
+    } else {
+        uncovered.div_ceil(stealers.max(1) * 4).max(1)
+    };
+    let mut chunks = Vec::new();
+    for (start, count) in segments {
+        let mut off = 0usize;
+        while off < count {
+            let w = width.min(count - off);
+            chunks.push((start + off, w));
+            off += w;
+        }
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::unifrac::EngineKind;
+
+    fn cpu() -> WorkerSpec {
+        WorkerSpec::Cpu { engine: EngineKind::Tiled, block_k: 16 }
+    }
+
+    #[test]
+    fn split_ranges_cover() {
+        for (total, parts) in [(10, 3), (4, 8), (1, 1), (7, 7), (128, 5)] {
+            let r = split_ranges(total, parts);
+            let sum: usize = r.iter().map(|(_, c)| c).sum();
+            assert_eq!(sum, total, "total={total} parts={parts}");
+            let mut next = 0;
+            for (s, c) in r {
+                assert_eq!(s, next);
+                assert!(c > 0);
+                next = s + c;
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [SchedulerKind::Static, SchedulerKind::Dynamic] {
+            assert_eq!(SchedulerKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SchedulerKind::parse("greedy"), None);
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Static);
+    }
+
+    #[test]
+    fn static_unpinned_splits_contiguously() {
+        let workers = vec![(cpu(), None), (cpu(), None), (cpu(), None)];
+        let s = resolve(SchedulerKind::Static, &workers, 10, 0).unwrap();
+        assert!(s.chunks.is_empty());
+        assert_eq!(
+            s.roles,
+            vec![
+                Role::Fixed { start: 0, count: 4 },
+                Role::Fixed { start: 4, count: 3 },
+                Role::Fixed { start: 7, count: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn static_pinned_kept_verbatim() {
+        let workers = vec![(cpu(), Some((2, 3)))];
+        let s = resolve(SchedulerKind::Static, &workers, 10, 0).unwrap();
+        assert_eq!(s.roles, vec![Role::Fixed { start: 2, count: 3 }]);
+    }
+
+    #[test]
+    fn static_mixed_pinning_rejected() {
+        let workers = vec![(cpu(), Some((0, 5))), (cpu(), None)];
+        assert!(resolve(SchedulerKind::Static, &workers, 10, 0).is_err());
+    }
+
+    #[test]
+    fn out_of_space_range_rejected() {
+        let workers = vec![(cpu(), Some((8, 4)))];
+        assert!(resolve(SchedulerKind::Static, &workers, 10, 0).is_err());
+    }
+
+    #[test]
+    fn dynamic_chunks_cover_uncovered_space() {
+        let workers = vec![(cpu(), Some((0, 4))), (cpu(), None), (cpu(), None)];
+        let s = resolve(SchedulerKind::Dynamic, &workers, 16, 3).unwrap();
+        assert_eq!(s.roles[0], Role::Fixed { start: 0, count: 4 });
+        assert_eq!(s.roles[1], Role::Steal);
+        // chunks tile stripes 4..16 in width-3 pieces
+        assert_eq!(s.chunks, vec![(4, 3), (7, 3), (10, 3), (13, 3)]);
+    }
+
+    #[test]
+    fn dynamic_auto_chunk_width() {
+        let workers = vec![(cpu(), None), (cpu(), None)];
+        let s = resolve(SchedulerKind::Dynamic, &workers, 64, 0).unwrap();
+        // 64 stripes / (2 stealers * 4) = 8-wide chunks
+        assert_eq!(s.chunks.len(), 8);
+        let covered: usize = s.chunks.iter().map(|(_, c)| c).sum();
+        assert_eq!(covered, 64);
+    }
+
+    #[test]
+    fn dynamic_unpinned_pjrt_rejected() {
+        let pjrt = WorkerSpec::Pjrt {
+            engine: "pallas_tiled".into(),
+            resident: false,
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+        };
+        let workers = vec![(pjrt, None)];
+        assert!(resolve(SchedulerKind::Dynamic, &workers, 8, 0).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! The unified stripe worker: one enum over every backend the streaming
+//! core can drive (CPU engines, PJRT one-shot, PJRT device-resident).
+//!
+//! Absorbed from the coordinator's former `ChipWorker` so that both
+//! `unifrac::compute_unifrac` and `coordinator::run` share a single
+//! worker implementation. Built *inside* the worker thread because PJRT
+//! clients are not `Send` — each worker owns its device context,
+//! exactly like a rank in the paper's distributed runs.
+
+use crate::embed::EmbBatch;
+use crate::error::{Error, Result};
+use crate::matrix::StripeBlock;
+use crate::runtime::{ArtifactQuery, ResidentUpdater, Runtime, StripeExecutor, XlaReal};
+use crate::unifrac::{make_engine, EngineKind, Metric, StripeEngine};
+use std::path::PathBuf;
+
+/// Plain-data description of a worker's backend (crosses threads; the
+/// device context itself is constructed on the worker thread).
+#[derive(Clone, Debug)]
+pub enum WorkerSpec {
+    /// Pure-rust CPU stripe engine.
+    Cpu { engine: EngineKind, block_k: usize },
+    /// AOT artifact via PJRT; `engine` selects the artifact flavor
+    /// (e.g. "pallas_tiled", "jnp"), `resident` keeps accumulators
+    /// device-side between batches.
+    Pjrt { engine: String, resident: bool, artifacts_dir: PathBuf },
+}
+
+/// One worker's execution state over a fixed stripe range.
+pub enum Worker<R: XlaReal> {
+    Cpu {
+        engine: Box<dyn StripeEngine<R>>,
+        metric: Metric,
+        block: StripeBlock<R>,
+    },
+    PjrtOneShot {
+        exec: StripeExecutor,
+        // runtime kept alive for the executable's client
+        _runtime: Box<Runtime>,
+        block: StripeBlock<R>,
+        count: usize,
+    },
+    PjrtResident {
+        upd: ResidentUpdater<R>,
+        _runtime: Box<Runtime>,
+        padded: usize,
+        start: usize,
+        s_artifact: usize,
+        count: usize,
+    },
+}
+
+impl<R: XlaReal> Worker<R> {
+    /// Build a worker owning stripes `start .. start + count` over a
+    /// `padded_n`-wide sample chunk.
+    pub fn build(
+        spec: &WorkerSpec,
+        metric: Metric,
+        padded_n: usize,
+        start: usize,
+        count: usize,
+    ) -> Result<Self> {
+        match spec {
+            WorkerSpec::Cpu { engine, block_k } => Ok(Worker::Cpu {
+                engine: make_engine::<R>(*engine, *block_k),
+                metric,
+                block: StripeBlock::new(padded_n, start, count),
+            }),
+            WorkerSpec::Pjrt { engine, resident, artifacts_dir } => {
+                let runtime = Box::new(Runtime::open(artifacts_dir)?);
+                let dtype = if R::BYTES == 4 { "float32" } else { "float64" };
+                let q = ArtifactQuery::new(metric, dtype, engine, padded_n);
+                let exec = runtime.executor(&q)?;
+                let s_artifact = exec.artifact().n_stripes;
+                // the artifact computes a fixed S-block from `start`;
+                // rows beyond `count` are trimmed at finish
+                let block = StripeBlock::new_wrapping(padded_n, start, s_artifact);
+                if *resident {
+                    let upd = exec.resident(&block)?;
+                    Ok(Worker::PjrtResident {
+                        upd,
+                        _runtime: runtime,
+                        padded: padded_n,
+                        start,
+                        s_artifact,
+                        count,
+                    })
+                } else {
+                    Ok(Worker::PjrtOneShot { exec, _runtime: runtime, block, count })
+                }
+            }
+        }
+    }
+
+    /// Fold one embedding batch into the worker's accumulators.
+    pub fn consume(&mut self, batch: &EmbBatch<R>) -> Result<()> {
+        match self {
+            Worker::Cpu { engine, metric, block } => {
+                engine.apply(*metric, batch, block);
+                Ok(())
+            }
+            Worker::PjrtOneShot { exec, block, .. } => exec.update(batch, block),
+            Worker::PjrtResident { upd, .. } => upd.update(batch),
+        }
+    }
+
+    /// Produce the worker's stripe block, trimmed to its owned range.
+    pub fn finish(self) -> Result<StripeBlock<R>> {
+        match self {
+            Worker::Cpu { block, .. } => Ok(block),
+            Worker::PjrtOneShot { block, count, .. } => Ok(trim(block, count)),
+            Worker::PjrtResident { upd, padded, start, s_artifact, count, .. } => {
+                let mut block = StripeBlock::new_wrapping(padded, start, s_artifact);
+                upd.finish(&mut block)?;
+                Ok(trim(block, count))
+            }
+        }
+    }
+}
+
+/// Keep only the first `count` stripes of a block (PJRT artifacts compute
+/// a fixed-height S-block; the worker owns a possibly shorter range).
+fn trim<R: XlaReal>(block: StripeBlock<R>, count: usize) -> StripeBlock<R> {
+    if count >= block.n_stripes() {
+        return block;
+    }
+    let mut out = StripeBlock::new(block.n_samples(), block.start(), count);
+    for s in 0..count {
+        let (num, den) = out.rows_mut(s);
+        num.copy_from_slice(block.num_row(s));
+        den.copy_from_slice(block.den_row(s));
+    }
+    out
+}
+
+/// Validate a worker spec without building it (cheap pre-flight for
+/// schedules; PJRT construction is deferred to the worker thread).
+pub fn validate_spec(spec: &WorkerSpec) -> Result<()> {
+    match spec {
+        WorkerSpec::Cpu { .. } => Ok(()),
+        WorkerSpec::Pjrt { artifacts_dir, .. } => {
+            if artifacts_dir.as_os_str().is_empty() {
+                Err(Error::Config("pjrt worker needs a non-empty artifacts_dir".into()))
+            } else {
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::{collect_batches, EmbeddingKind};
+    use crate::synth::SynthSpec;
+
+    #[test]
+    fn cpu_worker_matches_direct_engine() {
+        let (tree, table) =
+            SynthSpec { n_samples: 12, n_features: 64, ..Default::default() }.generate();
+        let batches =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 12, 8).unwrap();
+        let spec = WorkerSpec::Cpu { engine: EngineKind::Batched, block_k: 0 };
+        let mut worker =
+            Worker::<f64>::build(&spec, Metric::WeightedNormalized, 12, 1, 3).unwrap();
+        let engine = make_engine::<f64>(EngineKind::Batched, 0);
+        let mut direct = StripeBlock::<f64>::new(12, 1, 3);
+        for b in &batches {
+            worker.consume(b).unwrap();
+            engine.apply(Metric::WeightedNormalized, b, &mut direct);
+        }
+        let block = worker.finish().unwrap();
+        assert_eq!(block.stripe_range(), 1..4);
+        assert!(block.max_abs_diff(&direct) < 1e-15);
+    }
+
+    #[test]
+    fn trim_keeps_prefix_rows() {
+        let mut b = StripeBlock::<f64>::new(8, 0, 4);
+        for s in 0..4 {
+            let (num, _) = b.rows_mut(s);
+            num[0] = s as f64 + 1.0;
+        }
+        let t = trim(b, 2);
+        assert_eq!(t.n_stripes(), 2);
+        assert_eq!(t.num_row(0)[0], 1.0);
+        assert_eq!(t.num_row(1)[0], 2.0);
+    }
+
+    #[test]
+    fn pjrt_spec_without_artifacts_dir_rejected() {
+        let spec = WorkerSpec::Pjrt {
+            engine: "jnp".into(),
+            resident: false,
+            artifacts_dir: PathBuf::new(),
+        };
+        assert!(validate_spec(&spec).is_err());
+    }
+}

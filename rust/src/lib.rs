@@ -10,8 +10,11 @@
 //! - **Layer 2** (`python/compile/model.py`): JAX stripe-batch graph →
 //!   HLO text artifacts (`artifacts/`).
 //! - **Layer 3** (this crate): phylogeny/table substrates, the striped
-//!   compute engines, the chip partitioner/coordinator, the PJRT runtime
-//!   that executes the AOT artifacts, statistics, and the CLI.
+//!   compute engines, the unified streaming execution core (`exec`:
+//!   batch pool + stripe scheduler + workers), the chip
+//!   partitioner/coordinator, the PJRT runtime that executes the AOT
+//!   artifacts, statistics, and the CLI. See `ARCHITECTURE.md` for the
+//!   layer diagram.
 
 pub mod error;
 pub mod matrix;
@@ -27,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod devicemodel;
 pub mod embed;
+pub mod exec;
 pub mod report;
 pub mod runtime;
 pub mod stats;

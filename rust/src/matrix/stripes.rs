@@ -25,11 +25,31 @@ pub struct StripeBlock<R: Real> {
 
 impl<R: Real> StripeBlock<R> {
     pub fn new(n_samples: usize, start: usize, n_stripes: usize) -> Self {
-        assert!(n_samples >= 2, "need at least two samples");
         assert!(
-            start + n_stripes <= total_stripes(n_samples).max(start + n_stripes).min(n_samples),
-            "stripe range out of bounds"
+            start + n_stripes <= total_stripes(n_samples),
+            "stripe range out of bounds: {start}+{n_stripes} > {} for n={n_samples}",
+            total_stripes(n_samples)
         );
+        Self::new_unchecked(n_samples, start, n_stripes)
+    }
+
+    /// As [`StripeBlock::new`] but allows stripes past
+    /// `total_stripes(n_samples)` up to the hard addressing limit
+    /// `start + n_stripes <= n_samples` (stripe `s` reads
+    /// `emb[k + s + 1]` from the duplicated `2N` row). PJRT artifacts
+    /// compute a fixed-height S-block regardless of the chip's owned
+    /// range; the surplus rows recompute wrapped pairs and are trimmed
+    /// before assembly.
+    pub fn new_wrapping(n_samples: usize, start: usize, n_stripes: usize) -> Self {
+        assert!(
+            start + n_stripes <= n_samples,
+            "wrapping stripe range unaddressable: {start}+{n_stripes} > {n_samples}"
+        );
+        Self::new_unchecked(n_samples, start, n_stripes)
+    }
+
+    fn new_unchecked(n_samples: usize, start: usize, n_stripes: usize) -> Self {
+        assert!(n_samples >= 2, "need at least two samples");
         Self {
             n_samples,
             start,
@@ -77,6 +97,21 @@ impl<R: Real> StripeBlock<R> {
         assert_eq!(den.len(), self.n_stripes * self.n_samples);
         self.num = num;
         self.den = den;
+    }
+
+    /// Element-wise add another block covering the same stripe range
+    /// (merging per-worker partial accumulators under the dynamic
+    /// scheduler — stripe updates are additive over embedding batches).
+    pub fn accumulate(&mut self, other: &Self) {
+        assert_eq!(self.n_samples, other.n_samples, "accumulate: width mismatch");
+        assert_eq!(self.start, other.start, "accumulate: start mismatch");
+        assert_eq!(self.n_stripes, other.n_stripes, "accumulate: height mismatch");
+        for (a, b) in self.num.iter_mut().zip(&other.num) {
+            *a += *b;
+        }
+        for (a, b) in self.den.iter_mut().zip(&other.den) {
+            *a += *b;
+        }
     }
 
     /// Max |self - other| over both buffers (fp32-vs-fp64 validation).
@@ -128,6 +163,41 @@ mod tests {
         assert_eq!(b.num_row(1)[3], 7.0);
         assert_eq!(b.den_row(1)[3], 9.0);
         assert_eq!(b.num_row(0)[3], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stripe range out of bounds")]
+    fn out_of_range_block_panics() {
+        // total_stripes(8) == 4; the seed's tautological assertion let
+        // 3 + 2 = 5 > 4 through (regression for ISSUE 1 satellite).
+        let _ = StripeBlock::<f64>::new(8, 3, 2);
+    }
+
+    #[test]
+    fn wrapping_block_allows_artifact_overhang_only_up_to_n() {
+        // fixed-height artifact scratch: start 3, height 4 over n=8 is
+        // past total_stripes but addressable (3 + 4 <= 8)
+        let b = StripeBlock::<f64>::new_wrapping(8, 3, 4);
+        assert_eq!(b.stripe_range(), 3..7);
+    }
+
+    #[test]
+    #[should_panic(expected = "unaddressable")]
+    fn wrapping_block_rejects_unaddressable_range() {
+        let _ = StripeBlock::<f64>::new_wrapping(8, 6, 3);
+    }
+
+    #[test]
+    fn accumulate_adds_elementwise() {
+        let mut a = StripeBlock::<f64>::new(4, 0, 2);
+        let mut b = StripeBlock::<f64>::new(4, 0, 2);
+        a.num[1] = 1.5;
+        a.den[6] = 2.0;
+        b.num[1] = 0.5;
+        b.den[6] = 3.0;
+        a.accumulate(&b);
+        assert_eq!(a.num[1], 2.0);
+        assert_eq!(a.den[6], 5.0);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::synth::SynthSpec;
 use crate::unifrac::{
     compute_unifrac_report, ComputeOptions, ComputeReport, EngineKind, Metric,
 };
-use crate::util::Real;
+use crate::runtime::XlaReal;
 
 /// A printable table.
 #[derive(Clone, Debug)]
@@ -102,7 +102,7 @@ pub struct Measured {
 }
 
 /// Measure one CPU engine on an EMP-shaped synthetic workload.
-pub fn measure_engine<R: Real>(
+pub fn measure_engine<R: XlaReal>(
     kind: EngineKind,
     metric: Metric,
     scale: Scale,
@@ -357,7 +357,7 @@ pub fn table4(scale: Scale, threads: usize) -> Result<Table> {
 
 /// Tile-size sensitivity (paper §3: grouping parameters "drastically
 /// affect the observed run time").
-pub fn tiles_ablation<R: Real>(scale: Scale, threads: usize) -> Result<Table> {
+pub fn tiles_ablation<R: XlaReal>(scale: Scale, threads: usize) -> Result<Table> {
     let (tree, table) = SynthSpec::emp_like(scale.n_samples, scale.seed).generate();
     let mut rows = Vec::new();
     for block_k in [8usize, 16, 32, 64, 128, 256] {
@@ -386,7 +386,7 @@ pub fn tiles_ablation<R: Real>(scale: Scale, threads: usize) -> Result<Table> {
 }
 
 /// Batch-size sensitivity (Figure 2 parameter).
-pub fn batch_ablation<R: Real>(scale: Scale, threads: usize) -> Result<Table> {
+pub fn batch_ablation<R: XlaReal>(scale: Scale, threads: usize) -> Result<Table> {
     let (tree, table) = SynthSpec::emp_like(scale.n_samples, scale.seed).generate();
     let mut rows = Vec::new();
     for batch in [1usize, 4, 16, 32, 64, 128] {

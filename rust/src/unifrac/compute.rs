@@ -1,20 +1,21 @@
 //! High-level Striped UniFrac driver (CPU engines).
 //!
-//! Streams embedding batches from the tree/table producer into per-thread
-//! stripe blocks (the "chips" of the paper's Tables 1-2 at single-node
-//! scale), then assembles the condensed distance matrix. The PJRT-backed
-//! equivalent lives in `coordinator::` — this driver is the pure-rust hot
-//! path and the baseline for every bench.
+//! A thin wrapper over the unified streaming core (`crate::exec`): it
+//! sizes the padded chunk, declares one CPU worker per thread, calls
+//! [`crate::exec::drive`], and assembles the condensed matrix. The
+//! PJRT-capable equivalent lives in `coordinator::` — both share the
+//! same producer/pool/scheduler/worker plumbing.
 
-use super::engines::{make_engine, EngineKind};
+use super::engines::EngineKind;
 use super::metric::Metric;
-use crate::embed::{default_padding, generate_embeddings, EmbBatch};
+use crate::embed::default_padding;
+use crate::exec::{self, DriveSpec, SchedulerKind, WorkerBuild, WorkerSpec};
 use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
+use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
-use crate::util::Real;
-use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
+
+pub use crate::exec::split_ranges;
 
 /// Options for [`compute_unifrac`].
 #[derive(Clone, Debug)]
@@ -31,6 +32,12 @@ pub struct ComputeOptions {
     pub pad_quantum: usize,
     /// Bounded queue depth per worker (backpressure).
     pub queue_depth: usize,
+    /// Stripe scheduling strategy (static ranges / dynamic stealing).
+    pub scheduler: SchedulerKind,
+    /// Recycled batch buffers kept by the pool; 0 disables pooling.
+    pub pool_depth: usize,
+    /// Dynamic steal-task granularity in stripes; 0 = auto.
+    pub chunk_stripes: usize,
 }
 
 impl Default for ComputeOptions {
@@ -43,6 +50,9 @@ impl Default for ComputeOptions {
             threads: 1,
             pad_quantum: 4,
             queue_depth: 4,
+            scheduler: SchedulerKind::Static,
+            pool_depth: 8,
+            chunk_stripes: 0,
         }
     }
 }
@@ -56,6 +66,11 @@ pub struct ComputeReport {
     pub n_stripes: usize,
     pub embeddings: usize,
     pub batches: usize,
+    /// Batch buffers newly allocated by the pool (steady-state streaming
+    /// keeps this at the in-flight window, independent of batch count).
+    pub pool_allocated: usize,
+    /// Batch buffers served by recycling.
+    pub pool_reused: usize,
     pub seconds_total: f64,
     pub seconds_embed: f64,
     pub seconds_stripes: f64,
@@ -71,7 +86,7 @@ impl ComputeReport {
 }
 
 /// Compute UniFrac over `(tree, table)`; returns the distance matrix.
-pub fn compute_unifrac<R: Real>(
+pub fn compute_unifrac<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     opts: &ComputeOptions,
@@ -80,7 +95,7 @@ pub fn compute_unifrac<R: Real>(
 }
 
 /// As [`compute_unifrac`], also returning the [`ComputeReport`].
-pub fn compute_unifrac_report<R: Real>(
+pub fn compute_unifrac_report<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     opts: &ComputeOptions,
@@ -105,85 +120,32 @@ pub fn compute_unifrac_report<R: Real>(
     .max(1);
 
     let t0 = std::time::Instant::now();
+    let spec = DriveSpec {
+        metric: opts.metric,
+        padded_n: padded,
+        batch_capacity: opts.batch_capacity,
+        queue_depth: opts.queue_depth,
+        pool_depth: opts.pool_depth,
+        scheduler: opts.scheduler,
+        chunk_stripes: opts.chunk_stripes,
+        workers: (0..threads)
+            .map(|_| WorkerBuild {
+                spec: WorkerSpec::Cpu { engine: opts.engine, block_k: opts.block_k },
+                range: None,
+            })
+            .collect(),
+    };
+    let (blocks, xrep): (Vec<StripeBlock<R>>, _) = exec::drive::<R>(tree, table, &spec)?;
     let mut report = ComputeReport {
         n_samples: n,
         padded_n: padded,
         n_stripes: s_total,
+        embeddings: xrep.embeddings,
+        batches: xrep.batches,
+        pool_allocated: xrep.pool.allocated,
+        pool_reused: xrep.pool.reused,
+        seconds_embed: xrep.seconds_embed,
         ..Default::default()
-    };
-
-    // contiguous stripe ranges, one per worker
-    let ranges = split_ranges(s_total, threads);
-
-    let blocks: Vec<StripeBlock<R>> = if threads == 1 {
-        // streaming single-thread path: no channels, no clones
-        let engine = make_engine::<R>(opts.engine, opts.block_k);
-        let mut block = StripeBlock::<R>::new(padded, 0, s_total);
-        let mut batches = 0usize;
-        let produced = generate_embeddings::<R>(
-            tree,
-            table,
-            opts.metric.embedding_kind(),
-            padded,
-            opts.batch_capacity,
-            |batch| {
-                engine.apply(opts.metric, batch, &mut block);
-                batches += 1;
-            },
-        )?;
-        report.embeddings = produced;
-        report.batches = batches;
-        vec![block]
-    } else {
-        // producer + per-worker bounded queues (backpressure keeps peak
-        // memory at threads * queue_depth batches)
-        std::thread::scope(|scope| -> crate::Result<Vec<StripeBlock<R>>> {
-            let mut senders = Vec::with_capacity(threads);
-            let mut handles = Vec::with_capacity(threads);
-            for range in &ranges {
-                let (tx, rx) = sync_channel::<Arc<EmbBatch<R>>>(opts.queue_depth);
-                senders.push(tx);
-                let (start, count) = (range.0, range.1);
-                let metric = opts.metric;
-                let kind = opts.engine;
-                let block_k = opts.block_k;
-                handles.push(scope.spawn(move || {
-                    let engine = make_engine::<R>(kind, block_k);
-                    let mut block = StripeBlock::<R>::new(padded, start, count);
-                    while let Ok(batch) = rx.recv() {
-                        engine.apply(metric, &batch, &mut block);
-                    }
-                    block
-                }));
-            }
-            let mut batches = 0usize;
-            let produced = generate_embeddings::<R>(
-                tree,
-                table,
-                opts.metric.embedding_kind(),
-                padded,
-                opts.batch_capacity,
-                |batch| {
-                    let shared = Arc::new(batch.clone());
-                    for tx in &senders {
-                        // receiver hangup would be a worker panic; surfaced
-                        // by join below
-                        let _ = tx.send(Arc::clone(&shared));
-                    }
-                    batches += 1;
-                },
-            )?;
-            drop(senders);
-            report.embeddings = produced;
-            report.batches = batches;
-            let mut blocks = Vec::with_capacity(threads);
-            for h in handles {
-                blocks.push(h.join().map_err(|_| {
-                    crate::Error::invalid("stripe worker panicked")
-                })?);
-            }
-            Ok(blocks)
-        })?
     };
     report.seconds_stripes = t0.elapsed().as_secs_f64();
 
@@ -198,23 +160,6 @@ pub fn compute_unifrac_report<R: Real>(
     report.seconds_assemble = t1.elapsed().as_secs_f64();
     report.seconds_total = t0.elapsed().as_secs_f64();
     Ok((dm, report))
-}
-
-/// Split `total` items into `parts` contiguous (start, count) ranges.
-pub fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
-    let parts = parts.max(1).min(total.max(1));
-    let base = total / parts;
-    let extra = total % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut start = 0;
-    for i in 0..parts {
-        let count = base + usize::from(i < extra);
-        if count > 0 {
-            out.push((start, count));
-        }
-        start += count;
-    }
-    out
 }
 
 #[cfg(test)]
@@ -289,6 +234,39 @@ mod tests {
         assert_eq!(rep.batches, rep.embeddings.div_ceil(16));
         assert!(rep.updates() > 0);
         assert!(rep.seconds_total >= rep.seconds_stripes);
+    }
+
+    #[test]
+    fn pooled_streaming_reuses_buffers() {
+        let (tree, table) =
+            SynthSpec { n_samples: 20, n_features: 256, density: 0.1, ..Default::default() }
+                .generate();
+        // single-thread inline streaming: exactly one buffer, ever
+        let (_, rep) = compute_unifrac_report::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { batch_capacity: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert!(rep.batches >= 8, "want a long stream, got {}", rep.batches);
+        assert_eq!(rep.pool_allocated, 1);
+        assert_eq!(rep.pool_reused, rep.batches);
+        // multi-thread broadcast: allocation bounded by the in-flight
+        // window (queue_depth + slack), not by the batch count
+        let (_, rep) = compute_unifrac_report::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { batch_capacity: 4, threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.pool_allocated + rep.pool_reused, rep.batches + 1);
+        assert!(
+            rep.pool_allocated <= ComputeOptions::default().queue_depth + 4,
+            "allocated {} batches {}",
+            rep.pool_allocated,
+            rep.batches
+        );
+        assert!(rep.pool_reused > 0);
     }
 
     #[test]

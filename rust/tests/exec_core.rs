@@ -1,0 +1,157 @@
+//! Property tests for the unified streaming execution core (ISSUE 1):
+//! scheduling strategy, batch pooling and thread count must never change
+//! results, across odd/even sample counts and all four metrics, with
+//! `compute_unifrac_naive` as the oracle.
+
+use unifrac::coordinator::{run, RunOptions};
+use unifrac::exec::SchedulerKind;
+use unifrac::synth::SynthSpec;
+use unifrac::unifrac::{
+    compute_unifrac, compute_unifrac_naive, compute_unifrac_report, ComputeOptions, Metric,
+};
+
+fn workload(n: usize, seed: u64) -> (unifrac::tree::Phylogeny, unifrac::table::FeatureTable) {
+    SynthSpec { n_samples: n, n_features: 128, density: 0.08, seed, ..Default::default() }
+        .generate()
+}
+
+#[test]
+fn schedulers_and_pooling_match_naive_oracle() {
+    for n in [21usize, 24] {
+        let (tree, table) = workload(n, 7);
+        for metric in Metric::all(0.5) {
+            let oracle = compute_unifrac_naive(&tree, &table, metric).unwrap();
+            for scheduler in [SchedulerKind::Static, SchedulerKind::Dynamic] {
+                for pool_depth in [0usize, 8] {
+                    for threads in [1usize, 2, 3, 8] {
+                        let opts = ComputeOptions {
+                            metric,
+                            threads,
+                            scheduler,
+                            pool_depth,
+                            batch_capacity: 6,
+                            block_k: 8,
+                            ..Default::default()
+                        };
+                        let dm = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();
+                        let diff = dm.max_abs_diff(&oracle);
+                        assert!(
+                            diff < 1e-10,
+                            "n={n} {metric} {scheduler:?} pool={pool_depth} \
+                             threads={threads}: diff {diff}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_and_unpooled_are_bit_identical() {
+    // pooling only changes buffer reuse, never fold order: results must
+    // match bit-for-bit, not just within tolerance
+    for threads in [1usize, 3] {
+        let (tree, table) = workload(22, 11);
+        let base = ComputeOptions { threads, batch_capacity: 5, ..Default::default() };
+        let pooled = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { pool_depth: 8, ..base.clone() },
+        )
+        .unwrap();
+        let unpooled = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { pool_depth: 0, ..base.clone() },
+        )
+        .unwrap();
+        assert_eq!(pooled.condensed(), unpooled.condensed(), "threads={threads}");
+    }
+}
+
+#[test]
+fn static_scheduling_is_bit_identical_across_thread_counts() {
+    // static ranges preserve per-stripe fold order exactly, so any
+    // thread count reproduces the single-thread result bit-for-bit
+    let (tree, table) = workload(24, 13);
+    let single = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { batch_capacity: 7, ..Default::default() },
+    )
+    .unwrap();
+    for threads in [2usize, 3, 8] {
+        let multi = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { batch_capacity: 7, threads, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(single.condensed(), multi.condensed(), "threads={threads}");
+    }
+}
+
+#[test]
+fn pool_reuse_counter_proves_zero_steady_state_allocation() {
+    let (tree, table) = workload(20, 17);
+    let (_, rep) = compute_unifrac_report::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { batch_capacity: 2, ..Default::default() },
+    )
+    .unwrap();
+    // inline streaming reuses the single buffer for every batch
+    assert_eq!(rep.pool_allocated, 1);
+    assert_eq!(rep.pool_reused, rep.batches);
+    assert!(rep.batches > 10, "stream long enough to be meaningful");
+
+    let (_, rep) = compute_unifrac_report::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { batch_capacity: 2, threads: 3, ..Default::default() },
+    )
+    .unwrap();
+    // broadcast streaming: allocation bounded by the in-flight window
+    assert_eq!(rep.pool_allocated + rep.pool_reused, rep.batches + 1);
+    assert!(rep.pool_allocated <= 8, "in-flight window exceeded: {}", rep.pool_allocated);
+}
+
+#[test]
+fn dynamic_coordinator_run_matches_naive() {
+    let (tree, table) = workload(27, 23);
+    let oracle =
+        compute_unifrac_naive(&tree, &table, Metric::WeightedNormalized).unwrap();
+    for chips in [2usize, 4] {
+        let out = run::<f64>(
+            &tree,
+            &table,
+            &RunOptions {
+                chips,
+                batch_capacity: 8,
+                scheduler: SchedulerKind::Dynamic,
+                artifacts_dir: None,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(out.dm.max_abs_diff(&oracle) < 1e-10, "chips={chips}");
+        assert_eq!(out.metrics.scheduler, "dynamic");
+        assert!(out.metrics.pool_reused > 0);
+    }
+}
+
+#[test]
+fn fp32_runs_through_both_schedulers() {
+    let (tree, table) = workload(18, 29);
+    let d64 = compute_unifrac::<f64>(&tree, &table, &ComputeOptions::default()).unwrap();
+    for scheduler in [SchedulerKind::Static, SchedulerKind::Dynamic] {
+        let d32 = compute_unifrac::<f32>(
+            &tree,
+            &table,
+            &ComputeOptions { scheduler, threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(d64.max_abs_diff(&d32) < 1e-4, "{scheduler:?}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Bench: the engine sweep — ns per branch·pair update for all five
+//! stripe engines × {f32, f64} on the unweighted metric (the only one
+//! every engine supports, and the one the bit-packed kernel targets).
+//! Emits `BENCH_engines.json`, seeding the measured perf baseline the
+//! BENCH trajectory accumulates across PRs (ISSUE 2 acceptance: packed
+//! ≥ 4× faster than tiled at n_samples ≥ 512).
+//!
+//! Reduced-size CI mode: `UNIFRAC_BENCH_N=128 UNIFRAC_BENCH_REPEATS=1`.
+
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{compute_unifrac_report, ComputeOptions, EngineKind, Metric};
+use unifrac::util::json::{obj, Json};
+use unifrac::util::Real;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Row {
+    engine: EngineKind,
+    dtype: &'static str,
+    seconds: f64,
+    updates: u64,
+    ns_per_update: f64,
+    packed_words: u64,
+    lut_builds: u64,
+}
+
+fn measure<R: Real + unifrac::runtime::XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    engine: EngineKind,
+    repeats: usize,
+) -> Row {
+    let opts = ComputeOptions {
+        metric: Metric::Unweighted,
+        engine: Some(engine),
+        batch_capacity: 64,
+        ..Default::default()
+    };
+    // warm-up, then best-of-N wall time
+    let _ = compute_unifrac_report::<R>(tree, table, &opts).expect("warmup");
+    let mut best_secs = f64::INFINITY;
+    let mut best = None;
+    for _ in 0..repeats.max(1) {
+        let t0 = std::time::Instant::now();
+        let (_, rep) = compute_unifrac_report::<R>(tree, table, &opts).expect("bench run");
+        let secs = t0.elapsed().as_secs_f64();
+        if secs < best_secs {
+            best_secs = secs;
+            best = Some(rep);
+        }
+    }
+    let rep = best.expect("at least one repeat");
+    let updates = rep.updates();
+    Row {
+        engine,
+        dtype: R::TAG,
+        seconds: best_secs,
+        updates,
+        ns_per_update: best_secs * 1e9 / updates.max(1) as f64,
+        packed_words: rep.packed_words,
+        lut_builds: rep.lut_builds,
+    }
+}
+
+fn main() {
+    let n = env_usize("UNIFRAC_BENCH_N", 512);
+    let repeats = env_usize("UNIFRAC_BENCH_REPEATS", 3);
+    let (tree, table) = SynthSpec::emp_like(n, 42).generate();
+
+    println!(
+        "{:<9} {:>6} {:>10} {:>13} {:>14} {:>12}",
+        "engine", "dtype", "seconds", "updates", "ns/branchpair", "vs tiled"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for engine in EngineKind::all() {
+        rows.push(measure::<f64>(&tree, &table, engine, repeats));
+        rows.push(measure::<f32>(&tree, &table, engine, repeats));
+    }
+    let tiled_ns = |dtype: &str| {
+        rows.iter()
+            .find(|r| r.engine == EngineKind::Tiled && r.dtype == dtype)
+            .map(|r| r.ns_per_update)
+            .unwrap_or(f64::NAN)
+    };
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        let speedup = tiled_ns(r.dtype) / r.ns_per_update;
+        println!(
+            "{:<9} {:>6} {:>10.4} {:>13} {:>14.4} {:>11.2}x",
+            r.engine.name(),
+            r.dtype,
+            r.seconds,
+            r.updates,
+            r.ns_per_update,
+            speedup
+        );
+        json_rows.push(obj(vec![
+            ("engine", Json::from(r.engine.name())),
+            ("dtype", Json::from(r.dtype)),
+            ("metric", Json::from("unweighted")),
+            ("seconds", Json::from(r.seconds)),
+            ("updates", Json::from(r.updates as usize)),
+            ("ns_per_branch_pair", Json::from(r.ns_per_update)),
+            ("speedup_vs_tiled", Json::from(speedup)),
+            ("packed_words", Json::from(r.packed_words as usize)),
+            ("lut_builds", Json::from(r.lut_builds as usize)),
+        ]));
+    }
+
+    let packed_speedup_f64 = tiled_ns("f64")
+        / rows
+            .iter()
+            .find(|r| r.engine == EngineKind::Packed && r.dtype == "f64")
+            .map(|r| r.ns_per_update)
+            .unwrap_or(f64::NAN);
+    println!("packed f64 speedup vs tiled: {packed_speedup_f64:.2}x (target >= 4x at n >= 512)");
+
+    let doc = obj(vec![
+        ("bench", Json::from("engine_sweep")),
+        ("n_samples", Json::from(n)),
+        ("repeats", Json::from(repeats)),
+        ("packed_speedup_vs_tiled_f64", Json::from(packed_speedup_f64)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let out = "BENCH_engines.json";
+    std::fs::write(out, doc.dump()).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -75,7 +75,9 @@ COMMON FLAGS
   --metric NAME       unweighted | weighted_normalized | weighted_unnormalized | generalized
   --alpha X           generalized UniFrac exponent (default 1.0)
   --backend B         cpu | pjrt
-  --engine E          cpu: original|unified|batched|tiled ; pjrt: pallas_tiled|jnp|...
+  --engine E          cpu: auto|original|unified|batched|tiled|packed (auto picks the
+                      bit-packed kernel for unweighted, tiled otherwise; packed is
+                      unweighted-only) ; pjrt: pallas_tiled|jnp|...
   --dtype D           f64 | f32
   --chips N           simulated chips (stripe partitions)
   --sequential        time chips one-by-one instead of running in parallel

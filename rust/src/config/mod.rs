@@ -44,7 +44,7 @@ impl Default for RunConfig {
             metric: "weighted_normalized".into(),
             alpha: 1.0,
             backend: "cpu".into(),
-            engine: "tiled".into(),
+            engine: "auto".into(),
             resident: true,
             dtype: "f64".into(),
             chips: 1,
@@ -134,20 +134,39 @@ impl RunConfig {
         let metric = self.metric_enum()?;
         let backend = match self.backend.as_str() {
             "cpu" => {
-                let engine = EngineKind::parse(&self.engine).ok_or_else(|| {
-                    Error::Config(format!("unknown cpu engine {:?}", self.engine))
-                })?;
+                let engine = match self.engine.as_str() {
+                    "auto" => EngineKind::auto_for(metric),
+                    name => EngineKind::parse(name).ok_or_else(|| {
+                        Error::Config(format!("unknown cpu engine {:?}", self.engine))
+                    })?,
+                };
+                if !engine.supports(metric) {
+                    return Err(Error::unsupported(format!(
+                        "engine {:?} cannot compute metric {:?} (packed is \
+                         unweighted-only)",
+                        engine.name(),
+                        self.metric
+                    )));
+                }
                 BackendSpec::Cpu { engine, block_k: self.block_k }
             }
-            "pjrt" => BackendSpec::Pjrt {
-                engine: if self.engine == "tiled" {
-                    // the CLI default engine name maps to the pallas kernel
-                    "pallas_tiled".to_string()
-                } else {
-                    self.engine.clone()
-                },
-                resident: self.resident,
-            },
+            "pjrt" => {
+                if self.engine == "packed" {
+                    return Err(Error::unsupported(
+                        "engine \"packed\" is a CPU bit-kernel; the pjrt backend has \
+                         no packed artifact (use --backend cpu)",
+                    ));
+                }
+                BackendSpec::Pjrt {
+                    engine: if self.engine == "tiled" || self.engine == "auto" {
+                        // the CLI default engine name maps to the pallas kernel
+                        "pallas_tiled".to_string()
+                    } else {
+                        self.engine.clone()
+                    },
+                    resident: self.resident,
+                }
+            }
             other => return Err(Error::Config(format!("unknown backend {other:?}"))),
         };
         let scheduler = SchedulerKind::parse(&self.scheduler).ok_or_else(|| {
@@ -221,6 +240,56 @@ pool_depth = 16
         assert!(matches!(opts.backend, BackendSpec::Pjrt { ref engine, resident: false } if engine == "jnp"));
         assert_eq!(opts.scheduler, SchedulerKind::Dynamic);
         assert_eq!(opts.pool_depth, 16);
+    }
+
+    #[test]
+    fn auto_engine_follows_metric() {
+        // auto + unweighted -> packed
+        let cfg = RunConfig { metric: "unweighted".into(), ..Default::default() };
+        let opts = cfg.to_run_options().unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Packed, .. }));
+        // explicit --engine packed flows through
+        let cfg = RunConfig {
+            metric: "unweighted".into(),
+            engine: "packed".into(),
+            ..Default::default()
+        };
+        let opts = cfg.to_run_options().unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Packed, .. }));
+        // explicit scalar override wins over auto
+        let cfg = RunConfig {
+            metric: "unweighted".into(),
+            engine: "batched".into(),
+            ..Default::default()
+        };
+        let opts = cfg.to_run_options().unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Batched, .. }));
+    }
+
+    #[test]
+    fn packed_with_weighted_metric_rejected() {
+        let cfg = RunConfig { engine: "packed".into(), ..Default::default() };
+        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+    }
+
+    #[test]
+    fn packed_under_pjrt_backend_rejected() {
+        let cfg = RunConfig {
+            backend: "pjrt".into(),
+            engine: "packed".into(),
+            metric: "unweighted".into(),
+            ..Default::default()
+        };
+        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+    }
+
+    #[test]
+    fn pjrt_auto_maps_to_pallas() {
+        let cfg = RunConfig { backend: "pjrt".into(), ..Default::default() };
+        let opts = cfg.to_run_options().unwrap();
+        assert!(
+            matches!(opts.backend, BackendSpec::Pjrt { ref engine, .. } if engine == "pallas_tiled")
+        );
     }
 
     #[test]

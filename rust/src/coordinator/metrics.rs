@@ -20,6 +20,11 @@ pub struct RunMetrics {
     pub pool_allocated: usize,
     /// Batch acquisitions served by recycling a returned buffer.
     pub pool_reused: usize,
+    /// `u64` words packed by the bit-packed unweighted engine (0 on
+    /// scalar/PJRT runs).
+    pub packed_words: u64,
+    /// 256-entry branch-length LUTs built by the bit-packed engine.
+    pub lut_builds: u64,
     /// Wall time each chip spent in the stripe phase. In sequential mode
     /// these are true isolated per-chip measurements (the Table-2 "per
     /// chip" row); in parallel mode they overlap.
@@ -66,6 +71,8 @@ impl RunMetrics {
             ("batches", Json::from(self.batches)),
             ("pool_allocated", Json::from(self.pool_allocated)),
             ("pool_reused", Json::from(self.pool_reused)),
+            ("packed_words", Json::from(self.packed_words as usize)),
+            ("lut_builds", Json::from(self.lut_builds as usize)),
             (
                 "per_chip_seconds",
                 Json::Arr(self.per_chip_seconds.iter().map(|&t| Json::Num(t)).collect()),
@@ -105,6 +112,8 @@ mod tests {
             batches: 3,
             pool_allocated: 2,
             pool_reused: 7,
+            packed_words: 1024,
+            lut_builds: 16,
             ..Default::default()
         };
         let j = m.to_json().dump();
@@ -113,5 +122,7 @@ mod tests {
         assert_eq!(parsed.get("artifact").unwrap(), &Json::Null);
         assert_eq!(parsed.get("scheduler").unwrap().as_str(), Some("dynamic"));
         assert_eq!(parsed.get("pool_reused").unwrap().as_usize(), Some(7));
+        assert_eq!(parsed.get("packed_words").unwrap().as_usize(), Some(1024));
+        assert_eq!(parsed.get("lut_builds").unwrap().as_usize(), Some(16));
     }
 }

@@ -84,6 +84,8 @@ fn absorb(metrics: &mut RunMetrics, rep: &ExecReport) {
     metrics.seconds_embed = rep.seconds_embed;
     metrics.pool_allocated = rep.pool.allocated;
     metrics.pool_reused = rep.pool.reused;
+    metrics.packed_words = rep.engine_stats.packed_words;
+    metrics.lut_builds = rep.engine_stats.lut_builds;
 }
 
 /// Sequential mode: run each chip in isolation, timing it precisely.

@@ -212,18 +212,22 @@ pub fn stage_workload(
         EngineKind::Original => 0,
         EngineKind::Unified => 1,
         EngineKind::Batched => 2,
-        EngineKind::Tiled => 3,
+        // the packed kernel keeps the tiled traffic pattern but streams
+        // presence bits instead of full floats (1/64th the row bytes;
+        // its LUT reads are cache-resident, like the tiled accumulator)
+        EngineKind::Tiled | EngineKind::Packed => 3,
     };
-    let emb_traffic = EMB_TRAFFIC_FACTOR[stage_idx] * s * emb_stream;
+    let bit_pack = if stage == EngineKind::Packed { 1.0 / 64.0 } else { 1.0 };
+    let emb_traffic = EMB_TRAFFIC_FACTOR[stage_idx] * s * emb_stream * bit_pack;
     // accumulator passes: once per embedding before Figure 2 (filtered by
     // L2 at ~10% miss-to-HBM), once per batch after
     let acc_passes = match stage {
         EngineKind::Original | EngineKind::Unified => batches + 0.1 * (t - batches),
-        EngineKind::Batched | EngineKind::Tiled => batches,
+        EngineKind::Batched | EngineKind::Tiled | EngineKind::Packed => batches,
     };
     let launches = match stage {
         EngineKind::Original | EngineKind::Unified => t,
-        EngineKind::Batched | EngineKind::Tiled => batches,
+        EngineKind::Batched | EngineKind::Tiled | EngineKind::Packed => batches,
     };
     Workload {
         bytes_read: emb_traffic + acc_passes * acc,

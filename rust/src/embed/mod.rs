@@ -63,6 +63,19 @@ impl<R: Real> EmbBatch<R> {
         &self.emb[e * 2 * self.n_samples..(e + 1) * 2 * self.n_samples]
     }
 
+    /// Iterate the filled `(row, length)` pairs. Built on
+    /// `chunks_exact`, so engine inner loops that used to re-slice
+    /// `&batch.emb[e * two_n..]` per embedding (one bounds check each)
+    /// get a checked-once iterator LLVM can keep in registers.
+    #[inline]
+    pub fn rows(&self) -> impl Iterator<Item = (&[R], R)> + '_ {
+        let two_n = (2 * self.n_samples).max(1);
+        self.emb[..self.filled * 2 * self.n_samples]
+            .chunks_exact(two_n)
+            .zip(self.lengths[..self.filled].iter())
+            .map(|(row, &len)| (row, len))
+    }
+
     /// Clear back to an empty batch. Only rows `0..filled` are touched —
     /// rows past `filled` are zero by construction, which keeps reset
     /// cheap on recycled pool buffers.
@@ -161,16 +174,18 @@ impl<'a> EmbeddingStream<'a> {
         row
     }
 
-    /// Fill `batch` (which must be empty) with up to `capacity` rows.
-    /// Returns the number of rows written; 0 means the stream is done.
-    pub fn fill<R: Real>(&mut self, batch: &mut EmbBatch<R>) -> usize {
-        assert!(batch.n_samples >= self.n, "batch narrower than sample count");
-        assert_eq!(batch.filled, 0, "fill expects a reset batch");
+    /// Produce the next embedding row, handing `(mass, branch_length)`
+    /// to `sink` before the row is parked for its parent. Returns
+    /// `false` once the stream is exhausted (the root emits no row).
+    fn produce_next(&mut self, sink: impl FnOnce(&[f64], f64)) -> bool {
         let root = self.tree.root();
-        let postorder = self.tree.postorder();
-        while batch.filled < batch.capacity {
-            let Some(&node) = postorder.get(self.pos) else {
-                break;
+        loop {
+            let node = {
+                let postorder = self.tree.postorder();
+                let Some(&node) = postorder.get(self.pos) else {
+                    return false;
+                };
+                node
             };
             self.pos += 1;
             let mut mass = self.fresh_row();
@@ -202,16 +217,74 @@ impl<'a> EmbeddingStream<'a> {
                 }
             }
             if node == root {
-                // root mass (== 1 or all-presence) carries no branch
+                // root mass (== 1 or all-presence) carries no branch;
+                // postorder puts it last, so the stream is now done
                 self.free.push(mass);
-                break;
+                continue;
             }
-            batch.push(&mass, self.tree.branch_length(node));
+            sink(&mass, self.tree.branch_length(node));
             self.produced += 1;
             // keep for the parent (presence rows are already clamped)
             self.pending.insert(node, mass);
+            return true;
+        }
+    }
+
+    /// Fill `batch` (which must be empty) with up to `capacity` rows.
+    /// Returns the number of rows written; 0 means the stream is done.
+    pub fn fill<R: Real>(&mut self, batch: &mut EmbBatch<R>) -> usize {
+        assert!(batch.n_samples >= self.n, "batch narrower than sample count");
+        assert_eq!(batch.filled, 0, "fill expects a reset batch");
+        while batch.filled < batch.capacity {
+            if !self.produce_next(|mass, len| batch.push(mass, len)) {
+                break;
+            }
         }
         batch.filled
+    }
+}
+
+/// Bit-packing embedding producer for the unweighted metric: the same
+/// postorder DP as [`EmbeddingStream`] (same scratch arena, same
+/// deterministic order), but rows go straight into a
+/// [`PackedBatch`](crate::unifrac::bitpack::PackedBatch) — one presence
+/// bit per sample — without ever materializing a float embedding row in
+/// the batch. Feeds the packed kernel and any future device upload path
+/// at 1/64th the f64 batch footprint.
+pub struct PackedStream<'a> {
+    inner: EmbeddingStream<'a>,
+}
+
+impl<'a> PackedStream<'a> {
+    pub fn new(tree: &'a Phylogeny, table: &FeatureTable) -> crate::Result<Self> {
+        Ok(Self { inner: EmbeddingStream::new(tree, table, EmbeddingKind::Presence)? })
+    }
+
+    /// Embeddings emitted so far.
+    pub fn produced(&self) -> usize {
+        self.inner.produced()
+    }
+
+    /// Fill `batch` (which must be reset) with up to `capacity` packed
+    /// rows and build its branch-length LUTs. Returns the number of
+    /// rows written; 0 means the stream is done. Rows past the last
+    /// 64-embedding group boundary are remainder-masked by construction
+    /// (their bits are never set, their LUT entries are zero).
+    pub fn fill<R: Real>(
+        &mut self,
+        batch: &mut crate::unifrac::bitpack::PackedBatch<R>,
+    ) -> usize {
+        assert!(batch.n_samples() >= self.inner.n, "batch narrower than sample count");
+        assert_eq!(batch.filled(), 0, "fill expects a reset batch");
+        while batch.filled() < batch.capacity() {
+            if !self.inner.produce_next(|mass, len| batch.push_presence(mass, len)) {
+                break;
+            }
+        }
+        if batch.filled() > 0 {
+            batch.build_luts();
+        }
+        batch.filled()
     }
 }
 
@@ -383,6 +456,47 @@ mod tests {
         assert_eq!(batch.filled, 0);
         assert!(batch.emb.iter().all(|&x| x == 0.0));
         assert!(batch.lengths.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn rows_iterator_matches_row_indexing() {
+        let (tree, table) = tiny();
+        let b = &collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 4, 16)
+            .unwrap()[0];
+        let collected: Vec<_> = b.rows().collect();
+        assert_eq!(collected.len(), b.filled);
+        for (e, (row, len)) in collected.iter().enumerate() {
+            assert_eq!(*row, b.row(e));
+            assert_eq!(*len, b.lengths[e]);
+        }
+    }
+
+    #[test]
+    fn packed_stream_matches_presence_stream() {
+        let (tree, table) = tiny();
+        let scalar =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Presence, 4, 3).unwrap();
+        let mut stream = PackedStream::new(&tree, &table).unwrap();
+        let mut packed = crate::unifrac::bitpack::PackedBatch::<f64>::new(4, 3);
+        let mut batches = 0;
+        loop {
+            packed.reset();
+            if stream.fill(&mut packed) == 0 {
+                break;
+            }
+            let want = &scalar[batches];
+            assert_eq!(packed.filled(), want.filled);
+            // identical emission order: fold both into stripe blocks
+            let mut a = crate::matrix::StripeBlock::<f64>::new(4, 0, 2);
+            let mut b = crate::matrix::StripeBlock::<f64>::new(4, 0, 2);
+            packed.apply_unweighted(&mut a);
+            crate::unifrac::make_engine::<f64>(crate::unifrac::EngineKind::Tiled, 8)
+                .apply(crate::unifrac::Metric::Unweighted, want, &mut b);
+            assert!(a.max_abs_diff(&b) < 1e-12, "batch {batches}");
+            batches += 1;
+        }
+        assert_eq!(batches, scalar.len());
+        assert_eq!(stream.produced(), tree.n_nodes() - 1);
     }
 
     #[test]

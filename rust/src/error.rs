@@ -13,6 +13,9 @@ pub enum Error {
     Xla(xla::Error),
     Invalid(String),
     Cli(String),
+    /// A valid component was asked for a combination it cannot compute
+    /// (e.g. the bit-packed engine on a weighted metric).
+    Unsupported(String),
 }
 
 impl std::fmt::Display for Error {
@@ -30,6 +33,7 @@ impl std::fmt::Display for Error {
             Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
             Error::Invalid(m) => write!(f, "invalid argument: {m}"),
             Error::Cli(m) => write!(f, "cli error: {m}"),
+            Error::Unsupported(m) => write!(f, "unsupported combination: {m}"),
         }
     }
 }
@@ -61,6 +65,10 @@ pub type Result<T> = std::result::Result<T, Error>;
 impl Error {
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::Invalid(msg.into())
+    }
+
+    pub fn unsupported(msg: impl Into<String>) -> Self {
+        Error::Unsupported(msg.into())
     }
 }
 

@@ -39,7 +39,7 @@ use crate::matrix::{total_stripes, StripeBlock};
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
-use crate::unifrac::{make_engine, Metric, StripeEngine};
+use crate::unifrac::{make_engine, EngineStats, Metric, StripeEngine};
 use scheduler::Role;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -90,6 +90,9 @@ pub struct ExecReport {
     /// Per-worker wall time, worker order (overlapping in parallel runs).
     pub per_worker_seconds: Vec<f64>,
     pub pool: PoolStats,
+    /// Aggregated engine work counters (packed words / LUT builds —
+    /// non-zero only when a `Packed` worker ran).
+    pub engine_stats: EngineStats,
 }
 
 /// A broadcast work item: the shared batch plus the ring slot of its
@@ -154,6 +157,7 @@ impl<R: XlaReal> Runner<R> {
             Runner::Fixed(w) => w.consume(batch),
             Runner::Steal { engine, metric, padded_n, chunks, blocks } => {
                 let mut next_local = 0usize;
+                let mut prepared = false;
                 loop {
                     let c = match cursor {
                         Some(cur) => cur.fetch_add(1, Ordering::Relaxed),
@@ -166,20 +170,32 @@ impl<R: XlaReal> Runner<R> {
                     if c >= chunks.len() {
                         return Ok(());
                     }
+                    // pack/LUT-build (packed engine) once per batch —
+                    // lazily on the first claimed chunk, so a worker
+                    // that wins no claims pays nothing
+                    if !prepared {
+                        engine.prepare(*metric, batch);
+                        prepared = true;
+                    }
                     let (start, count) = chunks[c];
                     let block = blocks
                         .entry(c)
                         .or_insert_with(|| StripeBlock::new(*padded_n, start, count));
-                    engine.apply(*metric, batch, block);
+                    engine.apply_prepared(*metric, batch, block);
                 }
             }
         }
     }
 
-    fn finish(self) -> Result<RunnerOut<R>> {
+    fn finish(self) -> Result<(RunnerOut<R>, EngineStats)> {
         match self {
-            Runner::Fixed(w) => Ok(RunnerOut::Blocks(vec![w.finish()?])),
-            Runner::Steal { blocks, .. } => Ok(RunnerOut::Chunks(blocks)),
+            Runner::Fixed(w) => {
+                let (block, stats) = w.finish()?;
+                Ok((RunnerOut::Blocks(vec![block]), stats))
+            }
+            Runner::Steal { blocks, engine, .. } => {
+                Ok((RunnerOut::Chunks(blocks), engine.take_stats()))
+            }
         }
     }
 }
@@ -204,6 +220,7 @@ pub fn drive<R: XlaReal>(
     }
     for w in &spec.workers {
         worker::validate_spec(&w.spec)?;
+        worker::validate_spec_metric(&w.spec, spec.metric)?;
     }
     let padded = spec.padded_n;
     let n_stripes = total_stripes(padded);
@@ -243,7 +260,8 @@ pub fn drive<R: XlaReal>(
             pool.recycle(shared);
         }
         report.seconds_embed = embed_seconds;
-        let out = runner.finish()?;
+        let (out, stats) = runner.finish()?;
+        report.engine_stats.absorb(stats);
         report.per_worker_seconds.push(t0.elapsed().as_secs_f64());
         vec![out]
     } else {
@@ -256,7 +274,7 @@ pub fn drive<R: XlaReal>(
         let cursors: Arc<Vec<AtomicUsize>> =
             Arc::new((0..ring).map(|_| AtomicUsize::new(0)).collect());
         let dynamic = !chunks.is_empty();
-        let joined: Result<Vec<(RunnerOut<R>, f64)>> = std::thread::scope(|scope| {
+        let joined: Result<Vec<(RunnerOut<R>, EngineStats, f64)>> = std::thread::scope(|scope| {
             let mut senders = Vec::with_capacity(spec.workers.len());
             let mut handles = Vec::with_capacity(spec.workers.len());
             for (w, &role) in spec.workers.iter().zip(&schedule.roles) {
@@ -266,15 +284,18 @@ pub fn drive<R: XlaReal>(
                 let metric = spec.metric;
                 let chunks_cl = Arc::clone(&chunks);
                 let cursors_cl = Arc::clone(&cursors);
-                handles.push(scope.spawn(move || -> Result<(RunnerOut<R>, f64)> {
-                    let t0 = Instant::now();
-                    let mut runner =
-                        Runner::<R>::build(&wspec, role, metric, padded, chunks_cl)?;
-                    while let Ok(msg) = rx.recv() {
-                        runner.consume(&msg.batch, Some(&cursors_cl[msg.slot]))?;
-                    }
-                    Ok((runner.finish()?, t0.elapsed().as_secs_f64()))
-                }));
+                handles.push(scope.spawn(
+                    move || -> Result<(RunnerOut<R>, EngineStats, f64)> {
+                        let t0 = Instant::now();
+                        let mut runner =
+                            Runner::<R>::build(&wspec, role, metric, padded, chunks_cl)?;
+                        while let Ok(msg) = rx.recv() {
+                            runner.consume(&msg.batch, Some(&cursors_cl[msg.slot]))?;
+                        }
+                        let (out, stats) = runner.finish()?;
+                        Ok((out, stats, t0.elapsed().as_secs_f64()))
+                    },
+                ));
             }
             let t_embed = Instant::now();
             loop {
@@ -306,7 +327,8 @@ pub fn drive<R: XlaReal>(
                 .collect()
         });
         let mut outs = Vec::with_capacity(spec.workers.len());
-        for (out, seconds) in joined? {
+        for (out, stats, seconds) in joined? {
+            report.engine_stats.absorb(stats);
             report.per_worker_seconds.push(seconds);
             outs.push(out);
         }
@@ -444,5 +466,63 @@ mod tests {
         let (tree, table) =
             SynthSpec { n_samples: 8, n_features: 32, ..Default::default() }.generate();
         assert!(drive::<f64>(&tree, &table, &spec(vec![], SchedulerKind::Static, 8)).is_err());
+    }
+
+    fn packed_workers(n: usize) -> Vec<WorkerBuild> {
+        (0..n)
+            .map(|_| WorkerBuild {
+                spec: WorkerSpec::Cpu { engine: EngineKind::Packed, block_k: 0 },
+                range: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn packed_workers_match_tiled_over_drive() {
+        let (tree, table) =
+            SynthSpec { n_samples: 24, n_features: 128, density: 0.1, ..Default::default() }
+                .generate();
+        let mut dspec = spec(cpu_workers(1), SchedulerKind::Static, 8);
+        dspec.metric = Metric::Unweighted;
+        let (want, _) = drive::<f64>(&tree, &table, &dspec).unwrap();
+        for scheduler in [SchedulerKind::Static, SchedulerKind::Dynamic] {
+            for threads in [1usize, 3] {
+                let mut pspec = spec(packed_workers(threads), scheduler, 8);
+                pspec.metric = Metric::Unweighted;
+                let (got, rep) = drive::<f64>(&tree, &table, &pspec).unwrap();
+                let diff = crate::matrix::CondensedMatrix::from_stripes(
+                    24,
+                    table.sample_ids().to_vec(),
+                    &got,
+                    |n, d| if d > 0.0 { n / d } else { 0.0 },
+                )
+                .unwrap()
+                .max_abs_diff(
+                    &crate::matrix::CondensedMatrix::from_stripes(
+                        24,
+                        table.sample_ids().to_vec(),
+                        &want,
+                        |n, d| if d > 0.0 { n / d } else { 0.0 },
+                    )
+                    .unwrap(),
+                );
+                assert!(diff < 1e-12, "{scheduler:?} threads={threads}: {diff}");
+                assert!(
+                    rep.engine_stats.packed_words > 0,
+                    "{scheduler:?} threads={threads}: packed counters missing"
+                );
+                assert!(rep.engine_stats.lut_builds > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_worker_rejected_preflight_for_weighted() {
+        let (tree, table) =
+            SynthSpec { n_samples: 8, n_features: 32, ..Default::default() }.generate();
+        // default test spec metric is WeightedNormalized
+        let err = drive::<f64>(&tree, &table, &spec(packed_workers(1), SchedulerKind::Static, 8))
+            .expect_err("packed + weighted must fail before running");
+        assert!(matches!(err, Error::Unsupported(_)), "got {err:?}");
     }
 }

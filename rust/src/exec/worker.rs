@@ -11,7 +11,7 @@ use crate::embed::EmbBatch;
 use crate::error::{Error, Result};
 use crate::matrix::StripeBlock;
 use crate::runtime::{ArtifactQuery, ResidentUpdater, Runtime, StripeExecutor, XlaReal};
-use crate::unifrac::{make_engine, EngineKind, Metric, StripeEngine};
+use crate::unifrac::{make_engine, EngineKind, EngineStats, Metric, StripeEngine};
 use std::path::PathBuf;
 
 /// Plain-data description of a worker's backend (crosses threads; the
@@ -60,6 +60,7 @@ impl<R: XlaReal> Worker<R> {
         start: usize,
         count: usize,
     ) -> Result<Self> {
+        validate_spec_metric(spec, metric)?;
         match spec {
             WorkerSpec::Cpu { engine, block_k } => Ok(Worker::Cpu {
                 engine: make_engine::<R>(*engine, *block_k),
@@ -104,15 +105,18 @@ impl<R: XlaReal> Worker<R> {
         }
     }
 
-    /// Produce the worker's stripe block, trimmed to its owned range.
-    pub fn finish(self) -> Result<StripeBlock<R>> {
+    /// Produce the worker's stripe block (trimmed to its owned range)
+    /// plus the engine's drained work counters.
+    pub fn finish(self) -> Result<(StripeBlock<R>, EngineStats)> {
         match self {
-            Worker::Cpu { block, .. } => Ok(block),
-            Worker::PjrtOneShot { block, count, .. } => Ok(trim(block, count)),
+            Worker::Cpu { block, engine, .. } => Ok((block, engine.take_stats())),
+            Worker::PjrtOneShot { block, count, .. } => {
+                Ok((trim(block, count), EngineStats::default()))
+            }
             Worker::PjrtResident { upd, padded, start, s_artifact, count, .. } => {
                 let mut block = StripeBlock::new_wrapping(padded, start, s_artifact);
                 upd.finish(&mut block)?;
-                Ok(trim(block, count))
+                Ok((trim(block, count), EngineStats::default()))
             }
         }
     }
@@ -148,6 +152,23 @@ pub fn validate_spec(spec: &WorkerSpec) -> Result<()> {
     }
 }
 
+/// Reject spec/metric combinations the engine cannot compute — the
+/// bit-packed engine is presence-bit based and unweighted-only. Called
+/// in `drive`'s pre-flight (before any thread spawns) and again at
+/// worker construction.
+pub fn validate_spec_metric(spec: &WorkerSpec, metric: Metric) -> Result<()> {
+    match spec {
+        WorkerSpec::Cpu { engine, .. } if !engine.supports(metric) => {
+            Err(Error::unsupported(format!(
+                "cpu engine {:?} cannot compute metric {metric} (packed is \
+                 unweighted-only; pick an explicit scalar engine)",
+                engine.name()
+            )))
+        }
+        _ => Ok(()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,9 +190,44 @@ mod tests {
             worker.consume(b).unwrap();
             engine.apply(Metric::WeightedNormalized, b, &mut direct);
         }
-        let block = worker.finish().unwrap();
+        let (block, stats) = worker.finish().unwrap();
         assert_eq!(block.stripe_range(), 1..4);
         assert!(block.max_abs_diff(&direct) < 1e-15);
+        assert_eq!(stats, EngineStats::default());
+    }
+
+    #[test]
+    fn packed_worker_accepted_for_unweighted_only() {
+        let spec = WorkerSpec::Cpu { engine: EngineKind::Packed, block_k: 0 };
+        assert!(Worker::<f64>::build(&spec, Metric::Unweighted, 12, 0, 2).is_ok());
+        let err = Worker::<f64>::build(&spec, Metric::WeightedNormalized, 12, 0, 2)
+            .expect_err("weighted metric must be rejected");
+        assert!(matches!(err, Error::Unsupported(_)), "got {err:?}");
+        assert!(matches!(
+            validate_spec_metric(&spec, Metric::Generalized(0.5)),
+            Err(Error::Unsupported(_))
+        ));
+        // scalar engines accept every metric
+        let tiled = WorkerSpec::Cpu { engine: EngineKind::Tiled, block_k: 8 };
+        for m in Metric::all(0.5) {
+            validate_spec_metric(&tiled, m).unwrap();
+        }
+    }
+
+    #[test]
+    fn packed_worker_reports_stats() {
+        let (tree, table) =
+            SynthSpec { n_samples: 12, n_features: 64, ..Default::default() }.generate();
+        let batches =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Presence, 12, 8).unwrap();
+        let spec = WorkerSpec::Cpu { engine: EngineKind::Packed, block_k: 0 };
+        let mut worker = Worker::<f64>::build(&spec, Metric::Unweighted, 12, 0, 3).unwrap();
+        for b in &batches {
+            worker.consume(b).unwrap();
+        }
+        let (_, stats) = worker.finish().unwrap();
+        assert!(stats.packed_words > 0);
+        assert!(stats.lut_builds > 0);
     }
 
     #[test]

@@ -111,7 +111,7 @@ pub fn measure_engine<R: XlaReal>(
     let (tree, table) = SynthSpec::emp_like(scale.n_samples, scale.seed).generate();
     let opts = ComputeOptions {
         metric,
-        engine: kind,
+        engine: Some(kind),
         threads,
         ..Default::default()
     };
@@ -211,7 +211,9 @@ pub fn table1(scale: Scale, threads: usize) -> Result<Table> {
 /// `scale`, next to V100-model minutes at EMP scale.
 pub fn stages_ablation(scale: Scale, threads: usize) -> Result<Table> {
     let mut rows = Vec::new();
-    for kind in EngineKind::all() {
+    // the paper's four stages; the packed engine is unweighted-only and
+    // measured by `benches/engine_sweep.rs` instead
+    for kind in EngineKind::paper_stages() {
         let m = measure_engine::<f64>(kind, Metric::WeightedNormalized, scale, threads)?;
         rows.push(vec![
             kind.name().to_string(),
@@ -365,7 +367,7 @@ pub fn tiles_ablation<R: XlaReal>(scale: Scale, threads: usize) -> Result<Table>
             continue;
         }
         let opts = ComputeOptions {
-            engine: EngineKind::Tiled,
+            engine: Some(EngineKind::Tiled),
             block_k,
             threads,
             ..Default::default()
@@ -391,7 +393,7 @@ pub fn batch_ablation<R: XlaReal>(scale: Scale, threads: usize) -> Result<Table>
     let mut rows = Vec::new();
     for batch in [1usize, 4, 16, 32, 64, 128] {
         let opts = ComputeOptions {
-            engine: EngineKind::Tiled,
+            engine: Some(EngineKind::Tiled),
             batch_capacity: batch,
             threads,
             ..Default::default()

@@ -1,0 +1,570 @@
+//! Bit-packed unweighted kernel (the fifth engine, `EngineKind::Packed`).
+//!
+//! Unweighted UniFrac only ever sees presence values 0/1, yet the four
+//! scalar engines stream them as full `f32`/`f64` lanes and spend the
+//! hot loop on `|u-v|` / `max(u,v)` floating-point pairs. Following the
+//! follow-up paper *Enabling microbiome research on personal devices*
+//! (Sfiligoi et al., arXiv:2107.05397), this module packs presence bits
+//! along the **embedding axis** — 64 embeddings per `u64` word per
+//! sample column — and folds branch lengths through precomputed per-byte
+//! partial-sum tables, so the inner loop per (stripe, k) becomes
+//!
+//! ```text
+//!   x = w[k] ^ w[k + stripe + 1]     // XOR  -> |u - v| for all 64 rows
+//!   o = w[k] | w[k + stripe + 1]     // OR   -> max(u, v) for all 64 rows
+//!   num += Σ_b LUT[b][byte_b(x)]     // branch-length fold, 8 lookups
+//!   den += Σ_b LUT[b][byte_b(o)]
+//! ```
+//!
+//! with **no floating-point multiply per embedding**. Each 64-embedding
+//! group owns 8 byte-lane LUTs of 256 entries; entry `v` of lane `b` is
+//! the sum of the branch lengths of the set bits of `v` within
+//! embeddings `g*64 + b*8 .. g*64 + b*8 + 8`. The LUTs are built
+//! incrementally (`lut[v] = lut[v & (v-1)] + len[lowest set bit]`), so a
+//! group costs 8·256 adds to prepare and then serves every
+//! (stripe, sample) pair of the batch.
+//!
+//! Remainder masking: when the embedding count is not a multiple of 64
+//! the trailing bits of the last word are simply never set and their LUT
+//! contributions are zero (lengths past `filled` read as 0), so no
+//! explicit mask instruction is needed in the kernel.
+
+use super::metric::Metric;
+use crate::embed::EmbBatch;
+use crate::matrix::StripeBlock;
+use crate::util::Real;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Embeddings per packed word.
+pub const WORD_BITS: usize = 64;
+/// Byte lanes per word.
+pub const LANES: usize = WORD_BITS / 8;
+/// Entries per byte-lane LUT.
+pub const LUT_SIZE: usize = 256;
+
+/// One batch of presence embeddings in bit-packed layout, plus the
+/// per-group branch-length fold tables.
+///
+/// Layout: `words` is `[n_groups, 2 * n_samples]` row-major — group `g`,
+/// column `k` holds bit `e % 64` for every embedding `e` in
+/// `g*64 .. (g+1)*64`, circularly duplicated over `2N` columns exactly
+/// like [`EmbBatch`] so stripe `s` reads `w[k + s + 1]` unconditionally.
+/// `luts` is `[n_groups, LANES, LUT_SIZE]`.
+#[derive(Clone, Debug)]
+pub struct PackedBatch<R: Real> {
+    n_samples: usize,
+    filled: usize,
+    capacity: usize,
+    n_groups: usize,
+    words: Vec<u64>,
+    /// Raw branch lengths (f64 — LUTs are built from these in `R`).
+    lengths: Vec<f64>,
+    luts: Vec<R>,
+    luts_built: bool,
+}
+
+impl<R: Real> PackedBatch<R> {
+    pub fn new(n_samples: usize, capacity: usize) -> Self {
+        assert!(n_samples >= 2, "need at least two samples");
+        assert!(capacity > 0, "need a positive embedding capacity");
+        let n_groups = capacity.div_ceil(WORD_BITS);
+        Self {
+            n_samples,
+            filled: 0,
+            capacity,
+            n_groups,
+            words: vec![0; n_groups * 2 * n_samples],
+            lengths: vec![0.0; capacity],
+            luts: vec![R::ZERO; n_groups * LANES * LUT_SIZE],
+            luts_built: false,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Word groups occupied by the filled embeddings.
+    pub fn groups_used(&self) -> usize {
+        self.filled.div_ceil(WORD_BITS)
+    }
+
+    /// Packed words the kernel reads per stripe sweep (diagnostics).
+    pub fn words_used(&self) -> usize {
+        self.groups_used() * 2 * self.n_samples
+    }
+
+    /// Clear back to an empty batch. Only the occupied word groups are
+    /// touched, keeping reset cheap on recycled buffers (the PR-1 pool
+    /// idiom).
+    pub fn reset(&mut self) {
+        let used = self.groups_used() * 2 * self.n_samples;
+        for w in &mut self.words[..used] {
+            *w = 0;
+        }
+        for l in &mut self.lengths[..self.filled] {
+            *l = 0.0;
+        }
+        self.filled = 0;
+        self.luts_built = false;
+    }
+
+    /// Append one presence row (`mass[k] > 0` sets the bit) with its
+    /// branch length. Mirrors [`EmbBatch::push`]'s circular duplication.
+    pub fn push_presence(&mut self, mass: &[f64], length: f64) {
+        assert!(mass.len() <= self.n_samples, "row wider than sample chunk");
+        self.push_presence_bits(mass.iter().map(|&m| m > 0.0), length);
+    }
+
+    /// Re-pack an existing float presence batch (the [`PackedEngine`]
+    /// path: scalar batches arrive over the exec broadcast and are
+    /// packed worker-side). The batch must hold 0/1 presence rows.
+    pub fn pack_from(&mut self, batch: &EmbBatch<R>) {
+        assert_eq!(
+            self.n_samples, batch.n_samples,
+            "packed/scalar sample-chunk width mismatch"
+        );
+        assert!(batch.filled <= self.capacity, "packed batch too small");
+        self.reset();
+        for (row, len) in batch.rows() {
+            self.push_presence_bits(
+                row[..self.n_samples].iter().map(|&v| v > R::ZERO),
+                len.to_f64(),
+            );
+        }
+    }
+
+    /// As [`Self::push_presence`] from an explicit bit iterator.
+    pub fn push_presence_bits(&mut self, bits: impl Iterator<Item = bool>, length: f64) {
+        assert!(self.filled < self.capacity, "packed batch full");
+        let e = self.filled;
+        let two_n = 2 * self.n_samples;
+        let bit = 1u64 << (e % WORD_BITS);
+        let row = &mut self.words[(e / WORD_BITS) * two_n..(e / WORD_BITS + 1) * two_n];
+        for (k, set) in bits.take(self.n_samples).enumerate() {
+            if set {
+                row[k] |= bit;
+                row[self.n_samples + k] |= bit;
+            }
+        }
+        self.lengths[e] = length;
+        self.filled += 1;
+        self.luts_built = false;
+    }
+
+    /// Build the per-group byte-lane partial-sum tables. Returns the
+    /// number of 256-entry LUTs built (groups_used · 8 lanes).
+    pub fn build_luts(&mut self) -> usize {
+        let groups = self.groups_used();
+        for g in 0..groups {
+            for lane in 0..LANES {
+                let base_e = g * WORD_BITS + lane * 8;
+                let lut = &mut self.luts[(g * LANES + lane) * LUT_SIZE..][..LUT_SIZE];
+                lut[0] = R::ZERO;
+                for v in 1..LUT_SIZE {
+                    let e = base_e + v.trailing_zeros() as usize;
+                    let len = if e < self.filled { self.lengths[e] } else { 0.0 };
+                    // lut[v] = lut[v without lowest bit] + len[lowest bit]
+                    lut[v] = lut[v & (v - 1)] + R::from_f64(len);
+                }
+            }
+        }
+        self.luts_built = true;
+        groups * LANES
+    }
+
+    /// Byte-lane LUT block of word group `g`, as a fixed-size array ref
+    /// so the lookup indices are provably in bounds.
+    fn lut_group(&self, g: usize) -> &[R; LANES * LUT_SIZE] {
+        self.luts[g * LANES * LUT_SIZE..(g + 1) * LANES * LUT_SIZE]
+            .try_into()
+            .expect("LUT group has a fixed size")
+    }
+
+    /// Fold this batch into `block` under the unweighted metric:
+    /// `num += Σ_e len_e · (u_e XOR v_e)`, `den += Σ_e len_e · (u_e OR v_e)`.
+    /// LUTs must have been built since the last mutation.
+    ///
+    /// Each (stripe, sample) accumulator cell is written once per batch
+    /// — multi-group batches fold their groups in registers first, the
+    /// same discipline the scalar `Batched`/`Tiled` stages restored.
+    pub fn apply_unweighted(&self, block: &mut StripeBlock<R>) {
+        assert!(self.luts_built, "call build_luts() before apply_unweighted()");
+        let n = block.n_samples();
+        assert_eq!(self.n_samples, n, "batch/block width mismatch");
+        let start = block.start();
+        let two_n = 2 * n;
+        let groups = self.groups_used();
+        if groups == 1 {
+            // common case (batch capacity <= 64): one word group, fully
+            // zipped sweep — iterators elide the bounds checks (same
+            // trick as the tiled engine's ik loop)
+            let w = &self.words[..two_n];
+            let lut = self.lut_group(0);
+            for s_local in 0..block.n_stripes() {
+                let off = start + s_local + 1;
+                let (num_row, den_row) = block.rows_mut(s_local);
+                let u = &w[..n];
+                let v = &w[off..off + n];
+                for (((nr, dr), &wu), &wv) in
+                    num_row.iter_mut().zip(den_row.iter_mut()).zip(u).zip(v)
+                {
+                    *nr += fold_word(lut, wu ^ wv);
+                    *dr += fold_word(lut, wu | wv);
+                }
+            }
+            return;
+        }
+        let luts: Vec<&[R; LANES * LUT_SIZE]> = (0..groups).map(|g| self.lut_group(g)).collect();
+        for s_local in 0..block.n_stripes() {
+            let off = start + s_local + 1;
+            let (num_row, den_row) = block.rows_mut(s_local);
+            for k in 0..n {
+                let mut fn_ = R::ZERO;
+                let mut fd = R::ZERO;
+                for (g, &lut) in luts.iter().enumerate() {
+                    let base = g * two_n;
+                    let wu = self.words[base + k];
+                    let wv = self.words[base + k + off];
+                    fn_ += fold_word(lut, wu ^ wv);
+                    fd += fold_word(lut, wu | wv);
+                }
+                num_row[k] += fn_;
+                den_row[k] += fd;
+            }
+        }
+    }
+}
+
+/// Sum the LUT entries of the 8 byte lanes of `w` — the whole
+/// branch-length fold for 64 embeddings in 8 loads + 8 adds.
+#[inline(always)]
+fn fold_word<R: Real>(lut: &[R; LANES * LUT_SIZE], w: u64) -> R {
+    let mut acc = R::ZERO;
+    for b in 0..LANES {
+        acc += lut[b * LUT_SIZE + ((w >> (8 * b)) & 0xFF) as usize];
+    }
+    acc
+}
+
+/// Work counters a packed engine accumulates across `apply` calls
+/// (surfaced through `ExecReport` → `ComputeReport` / `RunMetrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// `u64` words packed and swept by the bitwise kernel (the packed
+    /// footprint summed over batches; each word is read once per stripe).
+    pub packed_words: u64,
+    /// 256-entry byte-lane LUTs built.
+    pub lut_builds: u64,
+}
+
+impl EngineStats {
+    pub fn absorb(&mut self, other: EngineStats) {
+        self.packed_words += other.packed_words;
+        self.lut_builds += other.lut_builds;
+    }
+}
+
+/// The fifth stripe engine: packs each broadcast scalar batch into a
+/// reusable [`PackedBatch`] scratch (engine-owned, allocation-free in
+/// steady state) and runs the bitwise kernel. Unweighted metric only —
+/// routing layers reject other metrics with a typed error before any
+/// worker is built (`exec::worker::validate_spec_metric`).
+///
+/// A batch may be folded into several blocks (the dynamic scheduler's
+/// chunk stealing): `prepare_packed` packs once, then
+/// `apply_prepared_packed` reuses the scratch per block. The plain
+/// `apply_packed` stays stateless (pack + fold) for direct callers.
+pub struct PackedEngine<R: Real> {
+    scratch: Mutex<PackedScratch<R>>,
+    packed_words: AtomicU64,
+    lut_builds: AtomicU64,
+}
+
+struct PackedScratch<R: Real> {
+    packed: Option<PackedBatch<R>>,
+    /// Set by `prepare_packed`; cleared by any stateless re-pack. Guards
+    /// `apply_prepared_packed` against folding stale scratch.
+    prepared: bool,
+    /// Identity of the batch the scratch was prepared from (address of
+    /// its `emb` buffer, stored as usize to stay `Send`/`Sync`): a
+    /// different batch with coincidentally equal shape must not reuse
+    /// the prepared bits.
+    src: usize,
+}
+
+impl<R: Real> PackedEngine<R> {
+    pub fn new() -> Self {
+        Self {
+            scratch: Mutex::new(PackedScratch { packed: None, prepared: false, src: 0 }),
+            packed_words: AtomicU64::new(0),
+            lut_builds: AtomicU64::new(0),
+        }
+    }
+
+    fn assert_unweighted(metric: Metric) {
+        assert_eq!(
+            metric,
+            Metric::Unweighted,
+            "packed engine supports only the unweighted metric (routing should \
+             have rejected this)"
+        );
+    }
+
+    /// Pack `batch` into the scratch (reallocating only on shape growth)
+    /// and build its LUTs, updating the work counters.
+    fn repack(&self, scratch: &mut PackedScratch<R>, batch: &EmbBatch<R>) {
+        let needs_new = match scratch.packed.as_ref() {
+            Some(p) => p.n_samples() != batch.n_samples || p.capacity() < batch.capacity,
+            None => true,
+        };
+        if needs_new {
+            scratch.packed = Some(PackedBatch::new(batch.n_samples, batch.capacity.max(1)));
+        }
+        let packed = scratch.packed.as_mut().expect("scratch installed above");
+        packed.pack_from(batch);
+        let luts = packed.build_luts();
+        self.lut_builds.fetch_add(luts as u64, Ordering::Relaxed);
+        self.packed_words.fetch_add(packed.words_used() as u64, Ordering::Relaxed);
+    }
+
+    /// Pack once ahead of a run of [`Self::apply_prepared_packed`] calls
+    /// folding the same batch into several blocks.
+    pub fn prepare_packed(&self, metric: Metric, batch: &EmbBatch<R>) {
+        Self::assert_unweighted(metric);
+        if batch.filled == 0 {
+            return;
+        }
+        let mut guard = self.scratch.lock().expect("packed scratch poisoned");
+        self.repack(&mut guard, batch);
+        guard.prepared = true;
+        guard.src = batch.emb.as_ptr() as usize;
+    }
+
+    /// Fold a batch previously packed by [`Self::prepare_packed`]. Falls
+    /// back to a full re-pack when no prepared scratch is available.
+    pub fn apply_prepared_packed(
+        &self,
+        metric: Metric,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) {
+        Self::assert_unweighted(metric);
+        if batch.filled == 0 {
+            return;
+        }
+        let mut guard = self.scratch.lock().expect("packed scratch poisoned");
+        let reusable = guard.prepared
+            && guard.src == batch.emb.as_ptr() as usize
+            && guard
+                .packed
+                .as_ref()
+                .is_some_and(|p| p.n_samples() == batch.n_samples && p.filled() == batch.filled);
+        if !reusable {
+            self.repack(&mut guard, batch);
+            guard.prepared = false;
+        }
+        guard
+            .packed
+            .as_ref()
+            .expect("scratch packed above")
+            .apply_unweighted(block);
+    }
+
+    /// Stateless fold: pack + LUT-build + kernel in one call.
+    pub fn apply_packed(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        Self::assert_unweighted(metric);
+        if batch.filled == 0 {
+            return;
+        }
+        let mut guard = self.scratch.lock().expect("packed scratch poisoned");
+        self.repack(&mut guard, batch);
+        guard.prepared = false;
+        guard
+            .packed
+            .as_ref()
+            .expect("scratch packed above")
+            .apply_unweighted(block);
+    }
+
+    /// Drain the accumulated work counters (named distinctly from the
+    /// `StripeEngine::take_stats` trait method, which delegates here).
+    pub fn drain_stats(&self) -> EngineStats {
+        EngineStats {
+            packed_words: self.packed_words.swap(0, Ordering::Relaxed),
+            lut_builds: self.lut_builds.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+impl<R: Real> Default for PackedEngine<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::unifrac::engines::{make_engine, EngineKind, StripeEngine};
+    use crate::util::Xoshiro256;
+
+    fn presence_batch(n: usize, e: usize, seed: u64) -> EmbBatch<f64> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut b = EmbBatch::new(n, e);
+        let mut mass = vec![0.0; n];
+        for _ in 0..e {
+            for m in mass.iter_mut() {
+                *m = f64::from(rng.f64() < 0.3);
+            }
+            // branch lengths in (0, 1]
+            let len = rng.f64().max(1e-3);
+            push_scalar(&mut b, &mass, len);
+        }
+        b
+    }
+
+    fn push_scalar(b: &mut EmbBatch<f64>, mass: &[f64], len: f64) {
+        let e = b.filled;
+        let n = b.n_samples;
+        for (k, &m) in mass.iter().enumerate() {
+            b.emb[e * 2 * n + k] = m;
+            b.emb[e * 2 * n + n + k] = m;
+        }
+        b.lengths[e] = len;
+        b.filled += 1;
+    }
+
+    #[test]
+    fn lut_entries_are_subset_sums() {
+        let mut p = PackedBatch::<f64>::new(4, 10);
+        let lens = [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0];
+        for &l in &lens {
+            p.push_presence(&[1.0, 0.0, 0.0, 0.0], l);
+        }
+        p.build_luts();
+        // lane 0 covers embeddings 0..8; entry 0b101 = len[0] + len[2]
+        assert_eq!(p.luts[0b101], 0.5 + 2.0);
+        assert_eq!(p.luts[0xFF], lens[..8].iter().sum::<f64>());
+        // lane 1 covers embeddings 8..16; entry 0b11 = len[8] + len[9]
+        assert_eq!(p.luts[LUT_SIZE + 0b11], 128.0 + 256.0);
+        // bits past `filled` contribute zero
+        assert_eq!(p.luts[LUT_SIZE + 0b100], 0.0);
+    }
+
+    #[test]
+    fn packed_matches_scalar_engine_various_counts() {
+        for &e in &[1usize, 63, 64, 65, 200] {
+            let n = 24;
+            let batch = presence_batch(n, e, 1000 + e as u64);
+            let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+            let mut want = StripeBlock::new(n, 0, total(n));
+            tiled.apply(Metric::Unweighted, &batch, &mut want);
+
+            let mut p = PackedBatch::<f64>::new(n, e);
+            p.pack_from(&batch);
+            p.build_luts();
+            let mut got = StripeBlock::new(n, 0, total(n));
+            p.apply_unweighted(&mut got);
+            assert!(
+                want.max_abs_diff(&got) < 1e-12,
+                "e={e}: diff {}",
+                want.max_abs_diff(&got)
+            );
+        }
+    }
+
+    fn total(n: usize) -> usize {
+        crate::matrix::total_stripes(n)
+    }
+
+    #[test]
+    fn reset_recycles_without_leftover_bits() {
+        let n = 8;
+        let mut p = PackedBatch::<f64>::new(n, 70);
+        let b1 = presence_batch(n, 70, 7);
+        p.pack_from(&b1);
+        p.build_luts();
+        // re-pack a smaller batch into the same buffer
+        let b2 = presence_batch(n, 3, 8);
+        p.pack_from(&b2);
+        p.build_luts();
+        let mut got = StripeBlock::new(n, 0, total(n));
+        p.apply_unweighted(&mut got);
+        let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+        let mut want = StripeBlock::new(n, 0, total(n));
+        tiled.apply(Metric::Unweighted, &b2, &mut want);
+        assert!(want.max_abs_diff(&got) < 1e-12);
+    }
+
+    #[test]
+    fn engine_accumulates_across_batches_and_counts() {
+        let n = 16;
+        let eng = PackedEngine::<f64>::new();
+        let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+        let mut got = StripeBlock::new(n, 1, 4);
+        let mut want = StripeBlock::new(n, 1, 4);
+        for seed in 0..3 {
+            let b = presence_batch(n, 40, 60 + seed);
+            eng.apply_packed(Metric::Unweighted, &b, &mut got);
+            tiled.apply(Metric::Unweighted, &b, &mut want);
+        }
+        assert!(want.max_abs_diff(&got) < 1e-12);
+        let stats = eng.drain_stats();
+        assert!(stats.packed_words > 0);
+        assert_eq!(stats.lut_builds, 3 * LANES as u64); // 40 rows = 1 group/batch
+        // stats drained
+        assert_eq!(eng.drain_stats(), EngineStats::default());
+    }
+
+    #[test]
+    fn prepare_packs_once_for_many_blocks() {
+        let n = 16;
+        let batch = presence_batch(n, 70, 99);
+        // chunked fold via prepare + apply_prepared (the steal path)
+        let eng = PackedEngine::<f64>::new();
+        eng.prepare_packed(Metric::Unweighted, &batch);
+        let mut b0 = StripeBlock::new(n, 0, 3);
+        let mut b1 = StripeBlock::new(n, 3, 5);
+        eng.apply_prepared_packed(Metric::Unweighted, &batch, &mut b0);
+        eng.apply_prepared_packed(Metric::Unweighted, &batch, &mut b1);
+        // 70 rows -> 2 groups; packed exactly once despite two folds
+        let stats = eng.drain_stats();
+        assert_eq!(stats.lut_builds, 2 * LANES as u64);
+        assert_eq!(stats.packed_words, 2 * 2 * n as u64);
+        // results match the stateless fold
+        let direct = PackedEngine::<f64>::new();
+        let mut w0 = StripeBlock::new(n, 0, 3);
+        let mut w1 = StripeBlock::new(n, 3, 5);
+        direct.apply_packed(Metric::Unweighted, &batch, &mut w0);
+        direct.apply_packed(Metric::Unweighted, &batch, &mut w1);
+        assert!(w0.max_abs_diff(&b0) < 1e-15);
+        assert!(w1.max_abs_diff(&b1) < 1e-15);
+        // stateless applies pack per call
+        assert_eq!(direct.drain_stats().lut_builds, 2 * 2 * LANES as u64);
+        // apply_prepared without prepare falls back to a full re-pack
+        let cold = PackedEngine::<f64>::new();
+        let mut c0 = StripeBlock::new(n, 0, 3);
+        cold.apply_prepared_packed(Metric::Unweighted, &batch, &mut c0);
+        assert!(c0.max_abs_diff(&b0) < 1e-15);
+        assert_eq!(cold.drain_stats().lut_builds, 2 * LANES as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "unweighted")]
+    fn engine_rejects_weighted_metric() {
+        let eng = PackedEngine::<f64>::new();
+        let b = presence_batch(8, 4, 1);
+        let mut blk = StripeBlock::new(8, 0, 1);
+        eng.apply_packed(Metric::WeightedNormalized, &b, &mut blk);
+    }
+}

@@ -6,9 +6,10 @@
 //! PJRT-capable equivalent lives in `coordinator::` — both share the
 //! same producer/pool/scheduler/worker plumbing.
 
+use super::bitpack::{PackedBatch, LANES};
 use super::engines::EngineKind;
 use super::metric::Metric;
-use crate::embed::default_padding;
+use crate::embed::{default_padding, PackedStream};
 use crate::exec::{self, DriveSpec, SchedulerKind, WorkerBuild, WorkerSpec};
 use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
 use crate::runtime::XlaReal;
@@ -21,7 +22,10 @@ pub use crate::exec::split_ranges;
 #[derive(Clone, Debug)]
 pub struct ComputeOptions {
     pub metric: Metric,
-    pub engine: EngineKind,
+    /// Stripe engine. `None` = auto: the bit-packed kernel for
+    /// [`Metric::Unweighted`] (presence bits + byte-LUT branch folding),
+    /// `Tiled` for everything else.
+    pub engine: Option<EngineKind>,
     /// Tiled engine's `step_size` (paper Figure 3).
     pub block_k: usize,
     /// Embedding rows per batch (paper Figure 2's `filled_embs`).
@@ -40,11 +44,21 @@ pub struct ComputeOptions {
     pub chunk_stripes: usize,
 }
 
+impl ComputeOptions {
+    /// The engine this run will actually use: the explicit choice, or
+    /// the metric-driven default (packed for unweighted, tiled
+    /// otherwise — the packed kernel replaces 64 fused-multiply-add
+    /// lanes with one XOR/OR + 16 table lookups per word).
+    pub fn resolved_engine(&self) -> EngineKind {
+        self.engine.unwrap_or_else(|| EngineKind::auto_for(self.metric))
+    }
+}
+
 impl Default for ComputeOptions {
     fn default() -> Self {
         Self {
             metric: Metric::WeightedNormalized,
-            engine: EngineKind::Tiled,
+            engine: None,
             block_k: 64,
             batch_capacity: 32,
             threads: 1,
@@ -71,6 +85,10 @@ pub struct ComputeReport {
     pub pool_allocated: usize,
     /// Batch buffers served by recycling.
     pub pool_reused: usize,
+    /// `u64` words packed by the bit-packed engine (0 on scalar runs).
+    pub packed_words: u64,
+    /// 256-entry branch-length LUTs built by the bit-packed engine.
+    pub lut_builds: u64,
     pub seconds_total: f64,
     pub seconds_embed: f64,
     pub seconds_stripes: f64,
@@ -104,7 +122,8 @@ pub fn compute_unifrac_report<R: XlaReal>(
     if n < 2 {
         return Err(crate::Error::Shape("need >= 2 samples".into()));
     }
-    let quantum = if opts.engine == EngineKind::Tiled {
+    let engine = opts.resolved_engine();
+    let quantum = if engine == EngineKind::Tiled {
         opts.pad_quantum.max(opts.block_k.min(64))
     } else {
         opts.pad_quantum.max(4)
@@ -119,6 +138,10 @@ pub fn compute_unifrac_report<R: XlaReal>(
     .min(s_total)
     .max(1);
 
+    if engine == EngineKind::Packed && opts.metric == Metric::Unweighted && threads == 1 {
+        return compute_packed_direct::<R>(tree, table, opts, padded, s_total);
+    }
+
     let t0 = std::time::Instant::now();
     let spec = DriveSpec {
         metric: opts.metric,
@@ -130,7 +153,7 @@ pub fn compute_unifrac_report<R: XlaReal>(
         chunk_stripes: opts.chunk_stripes,
         workers: (0..threads)
             .map(|_| WorkerBuild {
-                spec: WorkerSpec::Cpu { engine: opts.engine, block_k: opts.block_k },
+                spec: WorkerSpec::Cpu { engine, block_k: opts.block_k },
                 range: None,
             })
             .collect(),
@@ -144,21 +167,81 @@ pub fn compute_unifrac_report<R: XlaReal>(
         batches: xrep.batches,
         pool_allocated: xrep.pool.allocated,
         pool_reused: xrep.pool.reused,
+        packed_words: xrep.engine_stats.packed_words,
+        lut_builds: xrep.engine_stats.lut_builds,
         seconds_embed: xrep.seconds_embed,
         ..Default::default()
     };
     report.seconds_stripes = t0.elapsed().as_secs_f64();
+    let dm = assemble::<R>(table, opts.metric, &blocks, &mut report, t0)?;
+    Ok((dm, report))
+}
 
+/// Shared tail of both compute paths: condensed-matrix assembly plus the
+/// assemble/total timing bookkeeping.
+fn assemble<R: XlaReal>(
+    table: &FeatureTable,
+    metric: Metric,
+    blocks: &[StripeBlock<R>],
+    report: &mut ComputeReport,
+    t0: std::time::Instant,
+) -> crate::Result<CondensedMatrix> {
     let t1 = std::time::Instant::now();
-    let metric = opts.metric;
     let dm = CondensedMatrix::from_stripes(
-        n,
+        table.n_samples(),
         table.sample_ids().to_vec(),
-        &blocks,
+        blocks,
         move |num, den| metric.finalize(num, den),
     )?;
     report.seconds_assemble = t1.elapsed().as_secs_f64();
     report.seconds_total = t0.elapsed().as_secs_f64();
+    Ok(dm)
+}
+
+/// Single-threaded unweighted fast path: drive [`PackedStream`] straight
+/// into the bitwise kernel — presence rows never materialize as floats
+/// (1/64th the producer footprint of the broadcast path). Multi-worker
+/// runs go through `exec::drive`, whose packed workers re-pack the
+/// broadcast scalar batches instead.
+fn compute_packed_direct<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    opts: &ComputeOptions,
+    padded: usize,
+    s_total: usize,
+) -> crate::Result<(CondensedMatrix, ComputeReport)> {
+    let n = table.n_samples();
+    let t0 = std::time::Instant::now();
+    let mut stream = PackedStream::new(tree, table)?;
+    // one recycled packed buffer — the pool idiom at one bit per entry
+    let mut packed = PackedBatch::<R>::new(padded, opts.batch_capacity.max(1));
+    let mut block = StripeBlock::<R>::new(padded, 0, s_total);
+    let mut report = ComputeReport {
+        n_samples: n,
+        padded_n: padded,
+        n_stripes: s_total,
+        pool_allocated: 1,
+        ..Default::default()
+    };
+    let mut embed_seconds = 0.0f64;
+    loop {
+        packed.reset();
+        let t1 = std::time::Instant::now();
+        let rows = stream.fill(&mut packed);
+        embed_seconds += t1.elapsed().as_secs_f64();
+        if rows == 0 {
+            break;
+        }
+        report.batches += 1;
+        report.packed_words += packed.words_used() as u64;
+        report.lut_builds += (packed.groups_used() * LANES) as u64;
+        packed.apply_unweighted(&mut block);
+    }
+    report.embeddings = stream.produced();
+    report.pool_reused = report.batches;
+    report.seconds_embed = embed_seconds;
+    report.seconds_stripes = t0.elapsed().as_secs_f64();
+    let dm = assemble::<R>(table, opts.metric, std::slice::from_ref(&block), &mut report, t0)?;
     Ok((dm, report))
 }
 
@@ -191,9 +274,12 @@ mod tests {
         for metric in Metric::all(0.5) {
             let oracle = compute_unifrac_naive(&tree, &table, metric).unwrap();
             for engine in EngineKind::all() {
+                if !engine.supports(metric) {
+                    continue;
+                }
                 let opts = ComputeOptions {
                     metric,
-                    engine,
+                    engine: Some(engine),
                     block_k: 8,
                     batch_capacity: 5,
                     ..Default::default()
@@ -203,6 +289,55 @@ mod tests {
                 assert!(diff < 1e-10, "{metric} {engine:?}: diff {diff}");
             }
         }
+    }
+
+    #[test]
+    fn auto_engine_selection() {
+        let unweighted =
+            ComputeOptions { metric: Metric::Unweighted, ..Default::default() };
+        assert_eq!(unweighted.resolved_engine(), EngineKind::Packed);
+        let weighted = ComputeOptions::default();
+        assert_eq!(weighted.resolved_engine(), EngineKind::Tiled);
+        let overridden = ComputeOptions {
+            metric: Metric::Unweighted,
+            engine: Some(EngineKind::Batched),
+            ..Default::default()
+        };
+        assert_eq!(overridden.resolved_engine(), EngineKind::Batched);
+    }
+
+    #[test]
+    fn packed_engine_rejected_for_weighted_metric() {
+        let (tree, table) =
+            SynthSpec { n_samples: 10, n_features: 64, ..Default::default() }.generate();
+        let opts = ComputeOptions {
+            metric: Metric::WeightedNormalized,
+            engine: Some(EngineKind::Packed),
+            ..Default::default()
+        };
+        let err = compute_unifrac::<f64>(&tree, &table, &opts)
+            .expect_err("packed must reject weighted metrics");
+        assert!(matches!(err, crate::Error::Unsupported(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn packed_counters_surface_in_report() {
+        let (tree, table) =
+            SynthSpec { n_samples: 20, n_features: 128, density: 0.1, ..Default::default() }
+                .generate();
+        let (_, rep) = compute_unifrac_report::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { metric: Metric::Unweighted, ..Default::default() },
+        )
+        .unwrap();
+        assert!(rep.packed_words > 0, "auto-selected packed run must count words");
+        assert!(rep.lut_builds > 0);
+        // scalar run reports zeros
+        let (_, rep) =
+            compute_unifrac_report::<f64>(&tree, &table, &ComputeOptions::default()).unwrap();
+        assert_eq!(rep.packed_words, 0);
+        assert_eq!(rep.lut_builds, 0);
     }
 
     #[test]

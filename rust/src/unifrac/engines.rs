@@ -1,4 +1,5 @@
-//! The four CPU stripe engines — one per optimization stage of the paper.
+//! The CPU stripe engines — one per optimization stage of the paper,
+//! plus the bit-packed unweighted kernel.
 //!
 //! | Engine     | Paper artifact            | Structure                          |
 //! |------------|---------------------------|------------------------------------|
@@ -10,24 +11,42 @@
 //! |            |                           | before ONE write per (s, k)        |
 //! | `Tiled`    | Figure 3 / "Final"        | sample-axis blocked (`step_size`)  |
 //! |            |                           | for cache locality + SIMD          |
+//! | `Packed`   | arXiv:2107.05397 kernel   | 64 presence bits per `u64` word,   |
+//! |            | (unweighted only)         | XOR/OR + byte-LUT length folding   |
 //!
-//! All four compute identical results (tests enforce bit-level agreement
-//! in f64 for sums of the same association order where possible, and
-//! allclose otherwise); they differ only in traffic pattern — which is
-//! exactly what the paper's Tables 1-4 measure.
+//! The four scalar engines compute identical results on every metric;
+//! `Packed` matches them on the unweighted metric (its only one — the
+//! routing layers reject other metrics with a typed error). Tests
+//! enforce agreement to <1e-12 in f64.
 
+use super::bitpack::{EngineStats, PackedEngine};
 use super::metric::{Metric, MetricOps};
 use crate::embed::EmbBatch;
 use crate::matrix::StripeBlock;
 use crate::util::Real;
+use std::sync::Mutex;
 
 /// A stripe-update engine: folds one embedding batch into a stripe block.
 pub trait StripeEngine<R: Real>: Send + Sync {
     fn kind(&self) -> EngineKind;
     /// Accumulate `batch` into `block` under `metric`.
     fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>);
+    /// Hoist per-batch preprocessing ahead of a run of
+    /// [`Self::apply_prepared`] calls folding the *same* batch into
+    /// several blocks (the dynamic scheduler's chunk stealing). Default:
+    /// nothing to hoist.
+    fn prepare(&self, _metric: Metric, _batch: &EmbBatch<R>) {}
+    /// As [`Self::apply`], reusing state from [`Self::prepare`] when the
+    /// engine has any (the packed engine skips its re-pack + LUT build).
+    fn apply_prepared(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        self.apply(metric, batch, block);
+    }
     fn name(&self) -> &'static str {
         self.kind().name()
+    }
+    /// Drain the engine's work counters (non-zero for `Packed` only).
+    fn take_stats(&self) -> EngineStats {
+        EngineStats::default()
     }
 }
 
@@ -38,6 +57,7 @@ pub enum EngineKind {
     Unified,
     Batched,
     Tiled,
+    Packed,
 }
 
 impl EngineKind {
@@ -47,6 +67,7 @@ impl EngineKind {
             EngineKind::Unified => "unified",
             EngineKind::Batched => "batched",
             EngineKind::Tiled => "tiled",
+            EngineKind::Packed => "packed",
         }
     }
 
@@ -56,12 +77,39 @@ impl EngineKind {
             "unified" => Some(Self::Unified),
             "batched" => Some(Self::Batched),
             "tiled" => Some(Self::Tiled),
+            "packed" => Some(Self::Packed),
             _ => None,
         }
     }
 
-    pub fn all() -> [EngineKind; 4] {
+    /// Every engine, including the metric-restricted `Packed`.
+    pub fn all() -> [EngineKind; 5] {
+        [Self::Original, Self::Unified, Self::Batched, Self::Tiled, Self::Packed]
+    }
+
+    /// The paper's four optimization stages (every-metric engines).
+    pub fn paper_stages() -> [EngineKind; 4] {
         [Self::Original, Self::Unified, Self::Batched, Self::Tiled]
+    }
+
+    /// Whether this engine can compute `metric`. `Packed` is
+    /// presence-bit based and therefore unweighted-only.
+    pub fn supports(&self, metric: Metric) -> bool {
+        match self {
+            EngineKind::Packed => metric == Metric::Unweighted,
+            _ => true,
+        }
+    }
+
+    /// The auto-selection policy shared by `ComputeOptions` and the
+    /// CLI/config layer: the bit-packed kernel for unweighted (its only
+    /// metric), the paper's final scalar stage otherwise.
+    pub fn auto_for(metric: Metric) -> EngineKind {
+        if metric == Metric::Unweighted {
+            EngineKind::Packed
+        } else {
+            EngineKind::Tiled
+        }
     }
 }
 
@@ -72,7 +120,30 @@ pub fn make_engine<R: Real>(kind: EngineKind, block_k: usize) -> Box<dyn StripeE
         EngineKind::Original => Box::new(OriginalEngine),
         EngineKind::Unified => Box::new(UnifiedEngine),
         EngineKind::Batched => Box::new(BatchedEngine),
-        EngineKind::Tiled => Box::new(TiledEngine { block_k: block_k.max(8) }),
+        EngineKind::Tiled => Box::new(TiledEngine::<R>::new(block_k)),
+        EngineKind::Packed => Box::new(PackedEngine::<R>::new()),
+    }
+}
+
+impl<R: Real> StripeEngine<R> for PackedEngine<R> {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Packed
+    }
+
+    fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        self.apply_packed(metric, batch, block);
+    }
+
+    fn prepare(&self, metric: Metric, batch: &EmbBatch<R>) {
+        self.prepare_packed(metric, batch);
+    }
+
+    fn apply_prepared(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        self.apply_prepared_packed(metric, batch, block);
+    }
+
+    fn take_stats(&self) -> EngineStats {
+        self.drain_stats()
     }
 }
 
@@ -204,18 +275,18 @@ impl BatchedEngine {
         let n = block.n_samples();
         assert_eq!(batch.n_samples, n, "batch/block width mismatch");
         let start = block.start();
-        let two_n = 2 * n;
         for s_local in 0..block.n_stripes() {
             let off = start + s_local + 1;
             let (num_row, den_row) = block.rows_mut(s_local);
             for k in 0..n {
                 let mut acc_n = R::ZERO;
                 let mut acc_d = R::ZERO;
-                // `#pragma acc loop seq` over embeddings
-                for e in 0..batch.filled {
-                    let emb = &batch.emb[e * two_n..(e + 1) * two_n];
+                // `#pragma acc loop seq` over embeddings; `rows()` is a
+                // `chunks_exact` iterator, so the per-embedding slice
+                // bounds checks of the old `&batch.emb[e * two_n..]`
+                // indexing are gone
+                for (emb, len) in batch.rows() {
                     let (fn_, fd) = metric.terms(emb[k], emb[k + off]);
-                    let len = batch.lengths[e];
                     acc_n += fn_ * len;
                     acc_d += fd * len;
                 }
@@ -230,11 +301,31 @@ impl BatchedEngine {
 /// `step_size` blocks (`block_k`); within one block the embedding rows
 /// are swept sequentially with contiguous, SIMD-friendly inner loops and
 /// the accumulators are written once per (stripe, block).
-pub struct TiledEngine {
+///
+/// The accumulator tile is engine-owned scratch (behind an uncontended
+/// `Mutex`, locked once per `apply`), so steady-state stripe updates
+/// perform no per-`apply` allocation — the same discipline as the PR-1
+/// batch pool.
+pub struct TiledEngine<R: Real> {
     pub block_k: usize,
+    scratch: Mutex<TileScratch<R>>,
 }
 
-impl<R: Real> StripeEngine<R> for TiledEngine {
+struct TileScratch<R> {
+    acc_n: Vec<R>,
+    acc_d: Vec<R>,
+}
+
+impl<R: Real> TiledEngine<R> {
+    pub fn new(block_k: usize) -> Self {
+        Self {
+            block_k: block_k.max(8),
+            scratch: Mutex::new(TileScratch { acc_n: Vec::new(), acc_d: Vec::new() }),
+        }
+    }
+}
+
+impl<R: Real> StripeEngine<R> for TiledEngine<R> {
     fn kind(&self) -> EngineKind {
         EngineKind::Tiled
     }
@@ -244,8 +335,8 @@ impl<R: Real> StripeEngine<R> for TiledEngine {
     }
 }
 
-impl TiledEngine {
-    fn apply_ops<R: Real, M: MetricOps<R>>(
+impl<R: Real> TiledEngine<R> {
+    fn apply_ops<M: MetricOps<R>>(
         &self,
         metric: M,
         batch: &EmbBatch<R>,
@@ -254,11 +345,14 @@ impl TiledEngine {
         let n = block.n_samples();
         assert_eq!(batch.n_samples, n, "batch/block width mismatch");
         let start = block.start();
-        let two_n = 2 * n;
         let bk = self.block_k.min(n);
-        // local accumulator tile lives in cache/registers
-        let mut acc_n = vec![R::ZERO; bk];
-        let mut acc_d = vec![R::ZERO; bk];
+        // reusable accumulator tile (grows once, then steady-state)
+        let mut scratch = self.scratch.lock().expect("tile scratch poisoned");
+        let TileScratch { acc_n, acc_d } = &mut *scratch;
+        if acc_n.len() < bk {
+            acc_n.resize(bk, R::ZERO);
+            acc_d.resize(bk, R::ZERO);
+        }
         let mut k0 = 0usize;
         while k0 < n {
             let width = bk.min(n - k0);
@@ -270,9 +364,7 @@ impl TiledEngine {
                 for a in acc_d[..width].iter_mut() {
                     *a = R::ZERO;
                 }
-                for e in 0..batch.filled {
-                    let emb = &batch.emb[e * two_n..(e + 1) * two_n];
-                    let len = batch.lengths[e];
+                for (emb, len) in batch.rows() {
                     let u = &emb[k0..k0 + width];
                     let v = &emb[k0 + off..k0 + off + width];
                     // contiguous ik loop; zipped iterators elide bounds
@@ -337,15 +429,15 @@ mod tests {
         b
     }
 
-    fn engines() -> Vec<Box<dyn StripeEngine<f64>>> {
-        vec![
-            make_engine(EngineKind::Original, 0),
-            make_engine(EngineKind::Unified, 0),
-            make_engine(EngineKind::Batched, 0),
-            make_engine(EngineKind::Tiled, 16),
-            // non-dividing tile width exercises the remainder path
-            Box::new(TiledEngine { block_k: 13 }),
-        ]
+    fn engines(metric: Metric) -> Vec<Box<dyn StripeEngine<f64>>> {
+        let mut out: Vec<Box<dyn StripeEngine<f64>>> = EngineKind::all()
+            .into_iter()
+            .filter(|k| k.supports(metric))
+            .map(|k| make_engine(k, 16))
+            .collect();
+        // non-dividing tile width exercises the remainder path
+        out.push(Box::new(TiledEngine::new(13)));
+        out
     }
 
     #[test]
@@ -360,7 +452,7 @@ mod tests {
             let presence = metric == Metric::Unweighted;
             let batch = random_batch(n, 7, 99, presence);
             let mut results = Vec::new();
-            for eng in engines() {
+            for eng in engines(metric) {
                 let mut block = StripeBlock::<f64>::new(n, 3, 9);
                 eng.apply(metric, &batch, &mut block);
                 results.push(block);
@@ -460,5 +552,46 @@ mod tests {
             assert_eq!(EngineKind::parse(k.name()), Some(k));
         }
         assert_eq!(EngineKind::parse("gpu"), None);
+        assert_eq!(EngineKind::all().len(), 5);
+        assert_eq!(EngineKind::paper_stages().len(), 4);
+    }
+
+    #[test]
+    fn packed_supports_unweighted_only() {
+        assert!(EngineKind::Packed.supports(Metric::Unweighted));
+        assert!(!EngineKind::Packed.supports(Metric::WeightedNormalized));
+        assert!(!EngineKind::Packed.supports(Metric::Generalized(0.5)));
+        for k in EngineKind::paper_stages() {
+            for m in Metric::all(0.5) {
+                assert!(k.supports(m), "{k:?} must support {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_engines_report_zero_stats() {
+        let eng = make_engine::<f64>(EngineKind::Tiled, 8);
+        let batch = random_batch(8, 3, 4, false);
+        let mut blk = StripeBlock::<f64>::new(8, 0, 2);
+        eng.apply(Metric::WeightedNormalized, &batch, &mut blk);
+        assert_eq!(eng.take_stats(), EngineStats::default());
+    }
+
+    #[test]
+    fn tiled_scratch_reused_across_applies() {
+        // two applies through the same engine must equal two fresh ones
+        let n = 24;
+        let eng = TiledEngine::<f64>::new(13);
+        let b1 = random_batch(n, 5, 21, false);
+        let b2 = random_batch(n, 3, 22, false);
+        let mut reused = StripeBlock::<f64>::new(n, 0, 12);
+        StripeEngine::apply(&eng, Metric::WeightedNormalized, &b1, &mut reused);
+        StripeEngine::apply(&eng, Metric::WeightedNormalized, &b2, &mut reused);
+        let mut fresh = StripeBlock::<f64>::new(n, 0, 12);
+        let once = TiledEngine::<f64>::new(13);
+        StripeEngine::apply(&once, Metric::WeightedNormalized, &b1, &mut fresh);
+        let twice = TiledEngine::<f64>::new(13);
+        StripeEngine::apply(&twice, Metric::WeightedNormalized, &b2, &mut fresh);
+        assert!(reused.max_abs_diff(&fresh) < 1e-15);
     }
 }

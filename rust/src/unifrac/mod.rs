@@ -1,12 +1,14 @@
-//! The UniFrac core: metrics, the four stripe compute engines that
-//! reproduce the paper's optimization stages, the naive oracle, and the
-//! high-level driver.
+//! The UniFrac core: metrics, the five stripe compute engines (the
+//! paper's four optimization stages plus the bit-packed unweighted
+//! kernel), the naive oracle, and the high-level driver.
 
+pub mod bitpack;
 pub mod compute;
 pub mod engines;
 pub mod metric;
 pub mod naive;
 
+pub use bitpack::{EngineStats, PackedBatch, PackedEngine};
 pub use compute::{compute_unifrac, compute_unifrac_report, ComputeOptions, ComputeReport};
 pub use engines::{make_engine, EngineKind, StripeEngine};
 pub use metric::Metric;

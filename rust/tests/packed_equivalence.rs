@@ -1,0 +1,188 @@
+//! Packed-vs-scalar equivalence suite (ISSUE 2 satellite): the
+//! bit-packed unweighted kernel must agree with the scalar engines to
+//! <1e-12 on random presence tables, across the remainder-mask edge
+//! cases (embedding counts around the 64-bit word boundary) and across
+//! multi-batch accumulation.
+
+use unifrac::embed::{collect_batches, EmbBatch, EmbeddingKind, PackedStream};
+use unifrac::matrix::{total_stripes, StripeBlock};
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{
+    compute_unifrac, compute_unifrac_naive, make_engine, ComputeOptions, EngineKind, Metric,
+    PackedBatch,
+};
+use unifrac::util::Xoshiro256;
+
+fn problem(n: usize, features: usize, seed: u64) -> (Phylogeny, FeatureTable) {
+    SynthSpec { n_samples: n, n_features: features, density: 0.1, seed, ..Default::default() }
+        .generate()
+}
+
+/// Random presence batch with the canonical `[mass | mass]` duplication.
+fn presence_batch(n: usize, rows: usize, seed: u64) -> EmbBatch<f64> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut b = EmbBatch::<f64>::new(n, rows);
+    let mut mass = vec![0.0; n];
+    for e in 0..rows {
+        for m in mass.iter_mut() {
+            *m = f64::from(rng.f64() < 0.35);
+        }
+        let len = rng.f64().max(1e-3);
+        for (k, &m) in mass.iter().enumerate() {
+            b.emb[e * 2 * n + k] = m;
+            b.emb[e * 2 * n + n + k] = m;
+        }
+        b.lengths[e] = len;
+        b.filled = e + 1;
+    }
+    b
+}
+
+/// Property: `Packed` matches `Tiled` and `Original` on random presence
+/// tables for the word-boundary embedding counts 1, 63, 64, 65, 200.
+#[test]
+fn packed_matches_scalar_at_word_boundaries() {
+    for &rows in &[1usize, 63, 64, 65, 200] {
+        for seed in 0..3u64 {
+            let n = 20;
+            let batch = presence_batch(n, rows, 9000 + rows as u64 * 10 + seed);
+            let mut packed = PackedBatch::<f64>::new(n, rows);
+            packed.pack_from(&batch);
+            packed.build_luts();
+            let mut got = StripeBlock::<f64>::new(n, 0, total_stripes(n));
+            packed.apply_unweighted(&mut got);
+            for kind in [EngineKind::Tiled, EngineKind::Original] {
+                let eng = make_engine::<f64>(kind, 8);
+                let mut want = StripeBlock::<f64>::new(n, 0, total_stripes(n));
+                eng.apply(Metric::Unweighted, &batch, &mut want);
+                let diff = want.max_abs_diff(&got);
+                assert!(diff < 1e-12, "rows={rows} seed={seed} vs {kind:?}: diff {diff}");
+            }
+        }
+    }
+}
+
+/// Property: folding batches one by one equals folding their
+/// concatenation (accumulation across multiple batches).
+#[test]
+fn packed_accumulates_across_batches() {
+    let n = 16;
+    let parts = [
+        presence_batch(n, 40, 1),
+        presence_batch(n, 63, 2),
+        presence_batch(n, 65, 3),
+    ];
+    let mut split = StripeBlock::<f64>::new(n, 0, total_stripes(n));
+    for part in &parts {
+        let mut p = PackedBatch::<f64>::new(n, part.filled);
+        p.pack_from(part);
+        p.build_luts();
+        p.apply_unweighted(&mut split);
+    }
+    // concatenation
+    let total: usize = parts.iter().map(|p| p.filled).sum();
+    let mut concat = EmbBatch::<f64>::new(n, total);
+    let mut e = 0;
+    for part in &parts {
+        for (row, len) in part.rows() {
+            concat.emb[e * 2 * n..(e + 1) * 2 * n].copy_from_slice(row);
+            concat.lengths[e] = len;
+            e += 1;
+        }
+    }
+    concat.filled = total;
+    let mut p = PackedBatch::<f64>::new(n, total);
+    p.pack_from(&concat);
+    p.build_luts();
+    let mut whole = StripeBlock::<f64>::new(n, 0, total_stripes(n));
+    p.apply_unweighted(&mut whole);
+    assert!(split.max_abs_diff(&whole) < 1e-12);
+}
+
+/// End-to-end: the auto-selected packed engine matches the explicit
+/// scalar engines and the naive oracle on random problems, across batch
+/// capacities that hit the remainder-mask path.
+#[test]
+fn packed_end_to_end_matches_scalar_and_oracle() {
+    for (n, features, seed) in [(9usize, 64usize, 5u64), (21, 128, 6), (32, 200, 7)] {
+        let (tree, table) = problem(n, features, seed);
+        let oracle = compute_unifrac_naive(&tree, &table, Metric::Unweighted).unwrap();
+        for batch_capacity in [1usize, 63, 64, 65, 200] {
+            let opts = ComputeOptions {
+                metric: Metric::Unweighted,
+                batch_capacity,
+                ..Default::default()
+            };
+            // auto-selection picks packed for unweighted
+            assert_eq!(opts.resolved_engine(), EngineKind::Packed);
+            let packed = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();
+            let diff = packed.max_abs_diff(&oracle);
+            assert!(diff < 1e-12, "n={n} cap={batch_capacity}: oracle diff {diff}");
+            let tiled = compute_unifrac::<f64>(
+                &tree,
+                &table,
+                &ComputeOptions { engine: Some(EngineKind::Tiled), ..opts.clone() },
+            )
+            .unwrap();
+            let diff = packed.max_abs_diff(&tiled);
+            assert!(diff < 1e-12, "n={n} cap={batch_capacity}: tiled diff {diff}");
+        }
+    }
+}
+
+/// The packed producer (`PackedStream`) agrees with packing the scalar
+/// presence stream after the fact — bit-for-bit the same fold result.
+#[test]
+fn packed_stream_equals_repacked_scalar_stream() {
+    let (tree, table) = problem(14, 96, 11);
+    for capacity in [1usize, 63, 64, 65, 200] {
+        let scalar =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Presence, 14, capacity)
+                .unwrap();
+        let mut from_scalar = StripeBlock::<f64>::new(14, 0, total_stripes(14));
+        for b in &scalar {
+            let mut p = PackedBatch::<f64>::new(14, capacity);
+            p.pack_from(b);
+            p.build_luts();
+            p.apply_unweighted(&mut from_scalar);
+        }
+        let mut stream = PackedStream::new(&tree, &table).unwrap();
+        let mut direct = StripeBlock::<f64>::new(14, 0, total_stripes(14));
+        let mut packed = PackedBatch::<f64>::new(14, capacity);
+        loop {
+            packed.reset();
+            if stream.fill(&mut packed) == 0 {
+                break;
+            }
+            packed.apply_unweighted(&mut direct);
+        }
+        assert!(
+            from_scalar.max_abs_diff(&direct) < 1e-12,
+            "capacity={capacity}: stream/pack divergence"
+        );
+        assert_eq!(stream.produced(), tree.n_nodes() - 1);
+    }
+}
+
+/// Multi-threaded packed runs agree with single-threaded ones.
+#[test]
+fn packed_multithreaded_matches_single() {
+    let (tree, table) = problem(40, 256, 13);
+    let base = ComputeOptions {
+        metric: Metric::Unweighted,
+        batch_capacity: 8,
+        ..Default::default()
+    };
+    let single = compute_unifrac::<f64>(&tree, &table, &base).unwrap();
+    for threads in [2usize, 3, 8] {
+        let multi = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { threads, ..base.clone() },
+        )
+        .unwrap();
+        assert!(single.max_abs_diff(&multi) < 1e-12, "threads={threads}");
+    }
+}

@@ -163,9 +163,17 @@ fn prop_engine_consistency_sweep() {
         let (tree, table) = workload(n, round as u64 + 50);
         let metric = Metric::all(0.5)[rng.below(4)];
         let base = compute(&tree, &table, metric);
+        // draw an engine compatible with the metric (packed is
+        // unweighted-only)
+        let engine = loop {
+            let k = EngineKind::all()[rng.below(5)];
+            if k.supports(metric) {
+                break k;
+            }
+        };
         let opts = ComputeOptions {
             metric,
-            engine: EngineKind::all()[rng.below(4)],
+            engine: Some(engine),
             block_k: [8, 13, 32, 64][rng.below(4)],
             batch_capacity: 1 + rng.below(40),
             threads: 1 + rng.below(4),

@@ -77,6 +77,11 @@ fn main() {
     );
     let mut rows: Vec<Row> = Vec::new();
     for engine in EngineKind::all() {
+        // the sweep runs the unweighted metric; the sparse CSR engine is
+        // weighted-only (benches/sparse_sweep.rs covers it)
+        if !engine.supports(Metric::Unweighted) {
+            continue;
+        }
         rows.push(measure::<f64>(&tree, &table, engine, repeats));
         rows.push(measure::<f32>(&tree, &table, engine, repeats));
     }

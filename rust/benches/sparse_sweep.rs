@@ -1,0 +1,160 @@
+//! Bench: the density sweep — ns per branch·pair update for the sparse
+//! CSR engine vs the tiled and batched scalar stages on the
+//! weighted_normalized metric, across a table-density axis, in both
+//! precisions. Emits `BENCH_sparse.json` (ISSUE 3 acceptance: sparse ≥
+//! 5× faster than tiled at density 0.05) and reports the crossover
+//! density where the dense stage takes over — the empirical anchor for
+//! `--sparse-threshold`.
+//!
+//! Reduced-size CI mode: `UNIFRAC_BENCH_N=96 UNIFRAC_BENCH_REPEATS=1`.
+
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{compute_unifrac_report, ComputeOptions, EngineKind, Metric};
+use unifrac::util::json::{obj, Json};
+use unifrac::util::Real;
+
+const DENSITIES: [f64; 4] = [0.01, 0.05, 0.2, 0.8];
+const ENGINES: [EngineKind; 3] = [EngineKind::Sparse, EngineKind::Tiled, EngineKind::Batched];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Row {
+    engine: EngineKind,
+    dtype: &'static str,
+    density: f64,
+    embed_density: f64,
+    seconds: f64,
+    updates: u64,
+    ns_per_update: f64,
+    csr_nnz: u64,
+}
+
+fn measure<R: Real + unifrac::runtime::XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    engine: EngineKind,
+    density: f64,
+    repeats: usize,
+) -> Row {
+    let opts = ComputeOptions {
+        metric: Metric::WeightedNormalized,
+        engine: Some(engine),
+        batch_capacity: 64,
+        ..Default::default()
+    };
+    // warm-up, then best-of-N wall time
+    let _ = compute_unifrac_report::<R>(tree, table, &opts).expect("warmup");
+    let mut best_secs = f64::INFINITY;
+    let mut best = None;
+    for _ in 0..repeats.max(1) {
+        let t0 = std::time::Instant::now();
+        let (_, rep) = compute_unifrac_report::<R>(tree, table, &opts).expect("bench run");
+        let secs = t0.elapsed().as_secs_f64();
+        if secs < best_secs {
+            best_secs = secs;
+            best = Some(rep);
+        }
+    }
+    let rep = best.expect("at least one repeat");
+    let updates = rep.updates();
+    Row {
+        engine,
+        dtype: R::TAG,
+        density,
+        embed_density: rep.embed_density,
+        seconds: best_secs,
+        updates,
+        ns_per_update: best_secs * 1e9 / updates.max(1) as f64,
+        csr_nnz: rep.csr_nnz,
+    }
+}
+
+fn main() {
+    let n = env_usize("UNIFRAC_BENCH_N", 256);
+    let repeats = env_usize("UNIFRAC_BENCH_REPEATS", 3);
+
+    println!(
+        "{:<8} {:>6} {:>8} {:>9} {:>10} {:>14} {:>12}",
+        "engine", "dtype", "density", "emb-dens", "seconds", "ns/branchpair", "vs tiled"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for &density in &DENSITIES {
+        let spec = SynthSpec {
+            n_samples: n,
+            n_features: (n * 8).max(512),
+            density,
+            seed: 42,
+            ..Default::default()
+        };
+        let (tree, table) = spec.generate();
+        for engine in ENGINES {
+            rows.push(measure::<f64>(&tree, &table, engine, density, repeats));
+            rows.push(measure::<f32>(&tree, &table, engine, density, repeats));
+        }
+    }
+    let ns_of = |engine: EngineKind, dtype: &str, density: f64| {
+        rows.iter()
+            .find(|r| r.engine == engine && r.dtype == dtype && r.density == density)
+            .map(|r| r.ns_per_update)
+            .unwrap_or(f64::NAN)
+    };
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        let speedup = ns_of(EngineKind::Tiled, r.dtype, r.density) / r.ns_per_update;
+        println!(
+            "{:<8} {:>6} {:>8} {:>9.4} {:>10.4} {:>14.4} {:>11.2}x",
+            r.engine.name(),
+            r.dtype,
+            r.density,
+            r.embed_density,
+            r.seconds,
+            r.ns_per_update,
+            speedup
+        );
+        json_rows.push(obj(vec![
+            ("engine", Json::from(r.engine.name())),
+            ("dtype", Json::from(r.dtype)),
+            ("metric", Json::from("weighted_normalized")),
+            ("table_density", Json::from(r.density)),
+            ("embed_density", Json::from(r.embed_density)),
+            ("seconds", Json::from(r.seconds)),
+            ("updates", Json::from(r.updates as usize)),
+            ("ns_per_branch_pair", Json::from(r.ns_per_update)),
+            ("speedup_vs_tiled", Json::from(speedup)),
+            ("csr_nnz", Json::from(r.csr_nnz as usize)),
+        ]));
+    }
+
+    // acceptance anchor: sparse vs tiled at table density 0.05, f64
+    let sparse_speedup_005 =
+        ns_of(EngineKind::Tiled, "f64", 0.05) / ns_of(EngineKind::Sparse, "f64", 0.05);
+    println!(
+        "sparse f64 speedup vs tiled at density 0.05: {sparse_speedup_005:.2}x \
+         (target >= 5x)"
+    );
+
+    // crossover: the first density on the axis where tiled catches up
+    // (sparse stops being faster); 1.0 would mean "sparse always wins"
+    let crossover = DENSITIES
+        .iter()
+        .copied()
+        .find(|&d| ns_of(EngineKind::Sparse, "f64", d) >= ns_of(EngineKind::Tiled, "f64", d))
+        .unwrap_or(1.0);
+    println!("sparse/tiled crossover table density (f64): {crossover}");
+
+    let doc = obj(vec![
+        ("bench", Json::from("sparse_sweep")),
+        ("n_samples", Json::from(n)),
+        ("repeats", Json::from(repeats)),
+        ("sparse_speedup_vs_tiled_f64_at_0.05", Json::from(sparse_speedup_005)),
+        ("crossover_density_f64", Json::from(crossover)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let out = "BENCH_sparse.json";
+    std::fs::write(out, doc.dump()).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -39,6 +39,7 @@ fn resolve_config(args: &mut Args) -> Result<RunConfig> {
     }
     cfg.batch = args.get_or("batch", cfg.batch)?;
     cfg.block_k = args.get_or("block-k", cfg.block_k)?;
+    cfg.sparse_threshold = args.get_or("sparse-threshold", cfg.sparse_threshold)?;
     if let Some(v) = args.opt("scheduler") {
         cfg.scheduler = v;
     }
@@ -58,7 +59,8 @@ fn load_problem(args: &mut Args, seed: u64) -> Result<(Phylogeny, FeatureTable)>
     if let Some(n) = args.opt_parse::<usize>("samples")? {
         let features = args.get_or("features", (n * 8).max(512))?;
         let density = args.get_or("density", 0.005f64)?;
-        let spec = SynthSpec { n_samples: n, n_features: features, density, seed, ..Default::default() };
+        let spec =
+            SynthSpec { n_samples: n, n_features: features, density, seed, ..Default::default() };
         return Ok(spec.generate());
     }
     let table_path = args.require("table")?;
@@ -80,7 +82,8 @@ pub fn synth(args: &mut Args) -> Result<()> {
     let out_table = args.opt("out-table").unwrap_or_else(|| "synth_table.tsv".into());
     let out_tree = args.opt("out-tree").unwrap_or_else(|| "synth_tree.nwk".into());
     args.finish()?;
-    let spec = SynthSpec { n_samples: n, n_features: features, density, seed, ..Default::default() };
+    let spec =
+        SynthSpec { n_samples: n, n_features: features, density, seed, ..Default::default() };
     let (tree, table) = spec.generate();
     if out_table.ends_with(".bin") {
         write_table_bin(&table, &out_table)?;
@@ -103,7 +106,20 @@ fn run_with_config(
     tree: &Phylogeny,
     table: &FeatureTable,
 ) -> Result<(CondensedMatrix, crate::coordinator::RunMetrics)> {
-    let opts: RunOptions = cfg.to_run_options()?;
+    // `--engine auto` on the CPU backend is density-aware: estimate the
+    // mean embedding-row density (exact, no DP pass) so weighted
+    // metrics route to the sparse CSR kernel on EMP-like inputs. The
+    // walk is skipped whenever the auto policy would not consult it
+    // (e.g. unweighted always takes the packed kernel).
+    let wants_density = cfg.backend == "cpu"
+        && cfg.engine == "auto"
+        && cfg.metric_enum().map(EngineKind::auto_needs_density).unwrap_or(false);
+    let density = if wants_density {
+        crate::embed::embedding_density(tree, table).ok()
+    } else {
+        None
+    };
+    let opts: RunOptions = cfg.to_run_options_with_density(density)?;
     if cfg.is_f32()? {
         let out = run::<f32>(tree, table, &opts)?;
         Ok((out.dm, out.metrics))

@@ -75,14 +75,18 @@ COMMON FLAGS
   --metric NAME       unweighted | weighted_normalized | weighted_unnormalized | generalized
   --alpha X           generalized UniFrac exponent (default 1.0)
   --backend B         cpu | pjrt
-  --engine E          cpu: auto|original|unified|batched|tiled|packed (auto picks the
-                      bit-packed kernel for unweighted, tiled otherwise; packed is
-                      unweighted-only) ; pjrt: pallas_tiled|jnp|...
+  --engine E          cpu: auto|original|unified|batched|tiled|packed|sparse (auto
+                      picks the bit-packed kernel for unweighted and, for weighted
+                      metrics, the sparse CSR kernel below --sparse-threshold row
+                      density, tiled above it; packed is unweighted-only, sparse is
+                      weighted-only) ; pjrt: pallas_tiled|jnp|...
   --dtype D           f64 | f32
   --chips N           simulated chips (stripe partitions)
   --sequential        time chips one-by-one instead of running in parallel
   --batch N           embedding rows per batch (Figure 2 batch size)
-  --block-k N         tiled engine step_size (Figure 3)
+  --block-k N         tiled engine step_size (Figure 3; honored exactly, 0 = auto)
+  --sparse-threshold X  embedding-row density below which --engine auto picks the
+                      sparse CSR kernel for weighted metrics (default 0.25)
   --scheduler S       stripe scheduling: static (contiguous ranges) |
                       dynamic (work-stealing of stripe chunks)
   --pool-depth N      recycled batch buffers in the exec pool (0 = off)

@@ -28,6 +28,9 @@ pub struct RunConfig {
     pub parallel: bool,
     pub batch: usize,
     pub block_k: usize,
+    /// Embedding-row density below which `engine = "auto"` picks the
+    /// sparse CSR kernel for weighted metrics.
+    pub sparse_threshold: f64,
     pub queue_depth: usize,
     /// Stripe scheduling: "static" | "dynamic".
     pub scheduler: String,
@@ -51,6 +54,7 @@ impl Default for RunConfig {
             parallel: true,
             batch: 32,
             block_k: 64,
+            sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
             queue_depth: 4,
             scheduler: "static".into(),
             pool_depth: 8,
@@ -103,6 +107,9 @@ impl RunConfig {
         if let Some(v) = get("block_k") {
             self.block_k = v.as_usize().ok_or_else(|| bad("block_k"))?;
         }
+        if let Some(v) = get("sparse_threshold") {
+            self.sparse_threshold = v.as_f64().ok_or_else(|| bad("sparse_threshold"))?;
+        }
         if let Some(v) = get("queue_depth") {
             self.queue_depth = v.as_usize().ok_or_else(|| bad("queue_depth"))?;
         }
@@ -129,13 +136,26 @@ impl RunConfig {
             .ok_or_else(|| Error::Config(format!("unknown metric {:?}", self.metric)))
     }
 
-    /// Resolve to coordinator [`RunOptions`].
+    /// Resolve to coordinator [`RunOptions`] with no workload density
+    /// estimate (`engine = "auto"` falls back to the density-blind
+    /// policy). Callers that hold the actual problem should prefer
+    /// [`Self::to_run_options_with_density`].
     pub fn to_run_options(&self) -> Result<RunOptions> {
+        self.to_run_options_with_density(None)
+    }
+
+    /// As [`Self::to_run_options`], resolving `engine = "auto"` with a
+    /// measured/estimated mean embedding-row density: weighted metrics
+    /// pick the sparse CSR kernel below `sparse_threshold` and the
+    /// tiled stage otherwise.
+    pub fn to_run_options_with_density(&self, density: Option<f64>) -> Result<RunOptions> {
         let metric = self.metric_enum()?;
         let backend = match self.backend.as_str() {
             "cpu" => {
                 let engine = match self.engine.as_str() {
-                    "auto" => EngineKind::auto_for(metric),
+                    "auto" => {
+                        EngineKind::auto_for_density(metric, density, self.sparse_threshold)
+                    }
                     name => EngineKind::parse(name).ok_or_else(|| {
                         Error::Config(format!("unknown cpu engine {:?}", self.engine))
                     })?,
@@ -143,7 +163,7 @@ impl RunConfig {
                 if !engine.supports(metric) {
                     return Err(Error::unsupported(format!(
                         "engine {:?} cannot compute metric {:?} (packed is \
-                         unweighted-only)",
+                         unweighted-only, sparse is weighted-only)",
                         engine.name(),
                         self.metric
                     )));
@@ -151,11 +171,12 @@ impl RunConfig {
                 BackendSpec::Cpu { engine, block_k: self.block_k }
             }
             "pjrt" => {
-                if self.engine == "packed" {
-                    return Err(Error::unsupported(
-                        "engine \"packed\" is a CPU bit-kernel; the pjrt backend has \
-                         no packed artifact (use --backend cpu)",
-                    ));
+                if self.engine == "packed" || self.engine == "sparse" {
+                    return Err(Error::unsupported(format!(
+                        "engine {:?} is a CPU kernel; the pjrt backend has no such \
+                         artifact (use --backend cpu)",
+                        self.engine
+                    )));
                 }
                 BackendSpec::Pjrt {
                     engine: if self.engine == "tiled" || self.engine == "auto" {
@@ -184,6 +205,7 @@ impl RunConfig {
             queue_depth: self.queue_depth.max(1),
             scheduler,
             pool_depth: self.pool_depth,
+            sparse_threshold: self.sparse_threshold,
             artifacts_dir: Some(self.artifacts_dir.clone()),
         })
     }
@@ -270,6 +292,62 @@ pool_depth = 16
     fn packed_with_weighted_metric_rejected() {
         let cfg = RunConfig { engine: "packed".into(), ..Default::default() };
         assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+    }
+
+    #[test]
+    fn auto_engine_is_density_aware() {
+        // weighted + low measured density -> sparse
+        let cfg = RunConfig::default();
+        let opts = cfg.to_run_options_with_density(Some(0.05)).unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Sparse, .. }));
+        // dense input keeps the tiled stage
+        let opts = cfg.to_run_options_with_density(Some(0.8)).unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        // no estimate -> density-blind default
+        let opts = cfg.to_run_options_with_density(None).unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        // the config threshold steers the cut
+        let tight = RunConfig { sparse_threshold: 0.01, ..Default::default() };
+        let opts = tight.to_run_options_with_density(Some(0.05)).unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        // explicit --engine sparse flows through
+        let cfg = RunConfig { engine: "sparse".into(), ..Default::default() };
+        let opts = cfg.to_run_options().unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Sparse, .. }));
+        // unweighted never picks sparse, density or not
+        let cfg = RunConfig { metric: "unweighted".into(), ..Default::default() };
+        let opts = cfg.to_run_options_with_density(Some(0.01)).unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Packed, .. }));
+    }
+
+    #[test]
+    fn sparse_with_unweighted_metric_rejected() {
+        let cfg = RunConfig {
+            metric: "unweighted".into(),
+            engine: "sparse".into(),
+            ..Default::default()
+        };
+        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+    }
+
+    #[test]
+    fn sparse_under_pjrt_backend_rejected() {
+        let cfg = RunConfig {
+            backend: "pjrt".into(),
+            engine: "sparse".into(),
+            ..Default::default()
+        };
+        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+    }
+
+    #[test]
+    fn sparse_threshold_parses_from_doc() {
+        let doc = TomlDoc::parse("[run]\nsparse_threshold = 0.4\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.sparse_threshold, 0.4);
+        let opts = cfg.to_run_options_with_density(Some(0.3)).unwrap();
+        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Sparse, .. }));
     }
 
     #[test]

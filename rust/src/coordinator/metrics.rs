@@ -25,6 +25,21 @@ pub struct RunMetrics {
     pub packed_words: u64,
     /// 256-entry branch-length LUTs built by the bit-packed engine.
     pub lut_builds: u64,
+    /// Base CSR nonzeros built by the sparse weighted engine (0
+    /// otherwise).
+    pub csr_nnz: u64,
+    /// Embedding rows the sparse engine classified below its density
+    /// threshold.
+    pub rows_sparse: u64,
+    /// Embedding rows at or above the sparse threshold.
+    pub rows_dense: u64,
+    /// Observed mean row density over the sparse engine's CSR builds
+    /// (padded chunk width — slightly below `embed_density` when the
+    /// sample axis is padded).
+    pub csr_density: f64,
+    /// Mean embedding-row density measured by the producer stream over
+    /// the real sample columns (the auto-selection domain).
+    pub embed_density: f64,
     /// Wall time each chip spent in the stripe phase. In sequential mode
     /// these are true isolated per-chip measurements (the Table-2 "per
     /// chip" row); in parallel mode they overlap.
@@ -73,6 +88,11 @@ impl RunMetrics {
             ("pool_reused", Json::from(self.pool_reused)),
             ("packed_words", Json::from(self.packed_words as usize)),
             ("lut_builds", Json::from(self.lut_builds as usize)),
+            ("csr_nnz", Json::from(self.csr_nnz as usize)),
+            ("rows_sparse", Json::from(self.rows_sparse as usize)),
+            ("rows_dense", Json::from(self.rows_dense as usize)),
+            ("csr_density", Json::from(self.csr_density)),
+            ("embed_density", Json::from(self.embed_density)),
             (
                 "per_chip_seconds",
                 Json::Arr(self.per_chip_seconds.iter().map(|&t| Json::Num(t)).collect()),
@@ -114,6 +134,11 @@ mod tests {
             pool_reused: 7,
             packed_words: 1024,
             lut_builds: 16,
+            csr_nnz: 200,
+            rows_sparse: 30,
+            rows_dense: 2,
+            csr_density: 0.125,
+            embed_density: 0.11,
             ..Default::default()
         };
         let j = m.to_json().dump();
@@ -124,5 +149,10 @@ mod tests {
         assert_eq!(parsed.get("pool_reused").unwrap().as_usize(), Some(7));
         assert_eq!(parsed.get("packed_words").unwrap().as_usize(), Some(1024));
         assert_eq!(parsed.get("lut_builds").unwrap().as_usize(), Some(16));
+        assert_eq!(parsed.get("csr_nnz").unwrap().as_usize(), Some(200));
+        assert_eq!(parsed.get("rows_sparse").unwrap().as_usize(), Some(30));
+        assert_eq!(parsed.get("rows_dense").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("csr_density").unwrap().as_f64(), Some(0.125));
+        assert_eq!(parsed.get("embed_density").unwrap().as_f64(), Some(0.11));
     }
 }

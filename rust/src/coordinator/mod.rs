@@ -69,6 +69,9 @@ pub struct RunOptions {
     pub scheduler: SchedulerKind,
     /// Recycled batch buffers kept by the exec pool; 0 disables pooling.
     pub pool_depth: usize,
+    /// Row-density cut the sparse engine's `rows_sparse`/`rows_dense`
+    /// counters classify against (`--sparse-threshold`).
+    pub sparse_threshold: f64,
     /// Where the AOT artifacts live (PJRT backends).
     pub artifacts_dir: Option<PathBuf>,
 }
@@ -84,6 +87,7 @@ impl Default for RunOptions {
             queue_depth: 4,
             scheduler: SchedulerKind::Static,
             pool_depth: 8,
+            sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
             artifacts_dir: Some(PathBuf::from("artifacts")),
         }
     }

@@ -26,9 +26,11 @@ use crate::tree::Phylogeny;
 /// Translate a chip backend into an exec worker spec.
 fn worker_spec(backend: &BackendSpec, opts: &RunOptions) -> Result<WorkerSpec> {
     match backend {
-        BackendSpec::Cpu { engine, block_k } => {
-            Ok(WorkerSpec::Cpu { engine: *engine, block_k: *block_k })
-        }
+        BackendSpec::Cpu { engine, block_k } => Ok(WorkerSpec::Cpu {
+            engine: *engine,
+            block_k: *block_k,
+            sparse_threshold: opts.sparse_threshold,
+        }),
         BackendSpec::Pjrt { engine, resident } => {
             let dir = opts
                 .artifacts_dir
@@ -77,7 +79,11 @@ fn drive_spec(plan: &ChipPlan, opts: &RunOptions, workers: Vec<WorkerBuild>) -> 
 /// parallel mode has exactly one stream; sequential mode re-streams per
 /// chip with identical counts, so the last chip's numbers represent any
 /// of them (keeping the `pool_allocated + pool_reused == batches + 1`
-/// invariant intact either way).
+/// invariant intact either way). The engine work counters follow the
+/// same convention — every sequential chip converts the identical batch
+/// stream, so its `packed_words`/`csr_nnz`/row-classification counts
+/// (and the densities) equal any other chip's; these are per-stream
+/// figures, not sums over chips.
 fn absorb(metrics: &mut RunMetrics, rep: &ExecReport) {
     metrics.embeddings = rep.embeddings;
     metrics.batches = rep.batches;
@@ -86,6 +92,11 @@ fn absorb(metrics: &mut RunMetrics, rep: &ExecReport) {
     metrics.pool_reused = rep.pool.reused;
     metrics.packed_words = rep.engine_stats.packed_words;
     metrics.lut_builds = rep.engine_stats.lut_builds;
+    metrics.csr_nnz = rep.engine_stats.csr_nnz;
+    metrics.rows_sparse = rep.engine_stats.rows_sparse;
+    metrics.rows_dense = rep.engine_stats.rows_dense;
+    metrics.csr_density = rep.engine_stats.csr_density();
+    metrics.embed_density = rep.embed_density;
 }
 
 /// Sequential mode: run each chip in isolation, timing it precisely.

@@ -67,12 +67,22 @@ impl<R: Real> EmbBatch<R> {
     /// `chunks_exact`, so engine inner loops that used to re-slice
     /// `&batch.emb[e * two_n..]` per embedding (one bounds check each)
     /// get a checked-once iterator LLVM can keep in registers.
+    ///
+    /// A zero-sample batch has no row data at all, so the iterator is
+    /// simply empty (`chunks_exact` forbids a zero chunk size, which is
+    /// why the branch is explicit rather than a `.max(1)` clamp).
     #[inline]
     pub fn rows(&self) -> impl Iterator<Item = (&[R], R)> + '_ {
-        let two_n = (2 * self.n_samples).max(1);
-        self.emb[..self.filled * 2 * self.n_samples]
-            .chunks_exact(two_n)
-            .zip(self.lengths[..self.filled].iter())
+        let two_n = 2 * self.n_samples;
+        let (data, lengths, chunk) = if two_n == 0 {
+            // no sample columns: nothing to yield (chunk size is
+            // irrelevant over the empty slice, but must be nonzero)
+            (&[][..], &[][..], 1)
+        } else {
+            (&self.emb[..self.filled * two_n], &self.lengths[..self.filled], two_n)
+        };
+        data.chunks_exact(chunk)
+            .zip(lengths.iter())
             .map(|(row, &len)| (row, len))
     }
 
@@ -127,6 +137,11 @@ pub struct EmbeddingStream<'a> {
     /// Scratch arena: recycled mass rows.
     free: Vec<Vec<f64>>,
     produced: usize,
+    /// Nonzero cells across all emitted rows (density accounting for
+    /// the sparse-engine auto-selection and run reports).
+    nnz_emitted: u64,
+    /// Cells (`rows × n`) across all emitted rows.
+    cells_emitted: u64,
 }
 
 impl<'a> EmbeddingStream<'a> {
@@ -157,6 +172,8 @@ impl<'a> EmbeddingStream<'a> {
             pending: HashMap::new(),
             free: Vec::new(),
             produced: 0,
+            nnz_emitted: 0,
+            cells_emitted: 0,
         })
     }
 
@@ -164,6 +181,16 @@ impl<'a> EmbeddingStream<'a> {
     /// stream is exhausted).
     pub fn produced(&self) -> usize {
         self.produced
+    }
+
+    /// Running mean row density (nonzero fraction over real sample
+    /// columns) of everything emitted so far; 0.0 before the first row.
+    pub fn observed_density(&self) -> f64 {
+        if self.cells_emitted > 0 {
+            self.nnz_emitted as f64 / self.cells_emitted as f64
+        } else {
+            0.0
+        }
     }
 
     /// Grab a zeroed mass row from the arena (or allocate the first few).
@@ -222,6 +249,8 @@ impl<'a> EmbeddingStream<'a> {
                 self.free.push(mass);
                 continue;
             }
+            self.nnz_emitted += mass.iter().filter(|&&m| m != 0.0).count() as u64;
+            self.cells_emitted += self.n as u64;
             sink(&mass, self.tree.branch_length(node));
             self.produced += 1;
             // keep for the parent (presence rows are already clamped)
@@ -263,6 +292,11 @@ impl<'a> PackedStream<'a> {
     /// Embeddings emitted so far.
     pub fn produced(&self) -> usize {
         self.inner.produced()
+    }
+
+    /// Running mean row density of everything emitted so far.
+    pub fn observed_density(&self) -> f64 {
+        self.inner.observed_density()
     }
 
     /// Fill `batch` (which must be reset) with up to `capacity` packed
@@ -329,6 +363,55 @@ pub fn collect_batches<R: Real>(
         out.push(b.clone())
     })?;
     Ok(out)
+}
+
+/// Exact mean embedding-row density for `(tree, table)` — the fraction
+/// of nonzero `(non-root node, sample)` cells the postorder DP will
+/// emit — WITHOUT running the DP. A node's row is nonzero at sample `s`
+/// iff some leaf under the node carries `s`, so the incidence count is
+/// `Σ_s |union of leaf→root paths of s's present features|`: walk each
+/// present leaf towards the root, stopping at the first node already
+/// marked for this sample (per-node epoch array). Total cost is
+/// O(table nnz + incidences), far below one streaming pass.
+///
+/// Drives the density-aware engine auto-selection
+/// (`EngineKind::auto_for_density`): weighted metrics take the sparse
+/// CSR kernel below the threshold, the tiled scalar stage above it.
+pub fn embedding_density(tree: &Phylogeny, table: &FeatureTable) -> crate::Result<f64> {
+    let leaf_index = tree.leaf_index()?;
+    let mut leaf_of_feature = Vec::with_capacity(table.n_features());
+    for fid in table.feature_ids() {
+        let leaf = *leaf_index.get(fid.as_str()).ok_or_else(|| {
+            crate::Error::invalid(format!("feature {fid:?} not a tree leaf"))
+        })?;
+        leaf_of_feature.push(leaf);
+    }
+    let n_nodes = tree.n_nodes();
+    if n_nodes <= 1 || table.n_samples() == 0 {
+        return Ok(0.0);
+    }
+    let root = tree.root();
+    let mut epoch = vec![usize::MAX; n_nodes];
+    let mut incidences: u64 = 0;
+    for s in 0..table.n_samples() {
+        let (features, values) = table.row(s);
+        for (&f, &v) in features.iter().zip(values) {
+            if v <= 0.0 {
+                continue;
+            }
+            let mut node = leaf_of_feature[f as usize];
+            while node != root && epoch[node] != s {
+                epoch[node] = s;
+                incidences += 1;
+                match tree.parent(node) {
+                    Some(p) => node = p,
+                    None => break,
+                }
+            }
+        }
+    }
+    let cells = (n_nodes - 1) as f64 * table.n_samples() as f64;
+    Ok(incidences as f64 / cells)
 }
 
 /// Default padded width: round up to a multiple of `quantum` (the tiled
@@ -529,5 +612,70 @@ mod tests {
         assert_eq!(default_padding(5, 4), 8);
         assert_eq!(default_padding(8, 4), 8);
         assert_eq!(default_padding(1, 4), 4);
+    }
+
+    #[test]
+    fn zero_sample_batch_rows_is_empty() {
+        // regression: `rows()` used a `two_n.max(1)` clamp; it must
+        // yield an explicit empty iterator when there are no sample
+        // columns, even with a nonzero `filled`
+        let b = EmbBatch::<f64>::new(0, 4);
+        assert_eq!(b.rows().count(), 0);
+        let weird = EmbBatch::<f64> {
+            n_samples: 0,
+            filled: 2,
+            capacity: 4,
+            emb: Vec::new(),
+            lengths: vec![0.0; 4],
+        };
+        assert_eq!(weird.rows().count(), 0);
+    }
+
+    #[test]
+    fn stream_density_accounting() {
+        let (tree, table) = tiny();
+        let mut stream =
+            EmbeddingStream::new(&tree, &table, EmbeddingKind::Proportion).unwrap();
+        assert_eq!(stream.observed_density(), 0.0);
+        let mut batch = EmbBatch::<f64>::new(4, 16);
+        assert!(stream.fill(&mut batch) > 0);
+        // rows over 3 real samples: A {s0,s1}, B {s1}, AB {s0,s1}, C {s2}
+        // -> 6 nonzeros / 12 cells
+        let d = stream.observed_density();
+        assert!((d - 0.5).abs() < 1e-12, "observed {d}");
+    }
+
+    #[test]
+    fn embedding_density_matches_streamed_rows() {
+        let (tree, table) = tiny();
+        let est = embedding_density(&tree, &table).unwrap();
+        let mut stream =
+            EmbeddingStream::new(&tree, &table, EmbeddingKind::Proportion).unwrap();
+        let mut batch = EmbBatch::<f64>::new(4, 16);
+        let _ = stream.fill(&mut batch);
+        assert!((est - stream.observed_density()).abs() < 1e-12);
+        // and against a synthetic workload with internal structure
+        let (tree, table) = crate::synth::SynthSpec {
+            n_samples: 12,
+            n_features: 64,
+            density: 0.1,
+            ..Default::default()
+        }
+        .generate();
+        let est = embedding_density(&tree, &table).unwrap();
+        let mut stream =
+            EmbeddingStream::new(&tree, &table, EmbeddingKind::Proportion).unwrap();
+        let mut batch = EmbBatch::<f64>::new(12, 8);
+        loop {
+            batch.reset();
+            if stream.fill(&mut batch) == 0 {
+                break;
+            }
+        }
+        assert!(
+            (est - stream.observed_density()).abs() < 1e-12,
+            "estimator {est} vs streamed {}",
+            stream.observed_density()
+        );
     }
 }

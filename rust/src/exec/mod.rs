@@ -39,7 +39,7 @@ use crate::matrix::{total_stripes, StripeBlock};
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
-use crate::unifrac::{make_engine, EngineStats, Metric, StripeEngine};
+use crate::unifrac::{make_engine_with, EngineStats, Metric, StripeEngine};
 use scheduler::Role;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -90,9 +90,12 @@ pub struct ExecReport {
     /// Per-worker wall time, worker order (overlapping in parallel runs).
     pub per_worker_seconds: Vec<f64>,
     pub pool: PoolStats,
-    /// Aggregated engine work counters (packed words / LUT builds —
-    /// non-zero only when a `Packed` worker ran).
+    /// Aggregated engine work counters (packed words / LUT builds /
+    /// CSR nonzeros — non-zero only when a `Packed` or `Sparse` worker
+    /// ran).
     pub engine_stats: EngineStats,
+    /// Mean embedding-row density measured by the producer stream.
+    pub embed_density: f64,
 }
 
 /// A broadcast work item: the shared batch plus the ring slot of its
@@ -133,8 +136,8 @@ impl<R: XlaReal> Runner<R> {
                 Ok(Runner::Fixed(Worker::build(wspec, metric, padded_n, start, count)?))
             }
             Role::Steal => match wspec {
-                WorkerSpec::Cpu { engine, block_k } => Ok(Runner::Steal {
-                    engine: make_engine::<R>(*engine, *block_k),
+                WorkerSpec::Cpu { engine, block_k, sparse_threshold } => Ok(Runner::Steal {
+                    engine: make_engine_with::<R>(*engine, *block_k, *sparse_threshold),
                     metric,
                     padded_n,
                     chunks,
@@ -336,6 +339,7 @@ pub fn drive<R: XlaReal>(
     };
 
     report.embeddings = stream.produced();
+    report.embed_density = stream.observed_density();
     report.pool = pool.stats();
 
     // Assemble: fixed blocks pass through; stolen chunk blocks merge
@@ -376,14 +380,16 @@ pub fn drive<R: XlaReal>(
 mod tests {
     use super::*;
     use crate::synth::SynthSpec;
-    use crate::unifrac::EngineKind;
+    use crate::unifrac::{EngineKind, DEFAULT_SPARSE_THRESHOLD};
+
+    /// Test shorthand: a CPU worker spec with the default threshold.
+    fn cpu(engine: EngineKind, block_k: usize) -> WorkerSpec {
+        WorkerSpec::Cpu { engine, block_k, sparse_threshold: DEFAULT_SPARSE_THRESHOLD }
+    }
 
     fn cpu_workers(n: usize) -> Vec<WorkerBuild> {
         (0..n)
-            .map(|_| WorkerBuild {
-                spec: WorkerSpec::Cpu { engine: EngineKind::Tiled, block_k: 8 },
-                range: None,
-            })
+            .map(|_| WorkerBuild { spec: cpu(EngineKind::Tiled, 8), range: None })
             .collect()
     }
 
@@ -470,10 +476,7 @@ mod tests {
 
     fn packed_workers(n: usize) -> Vec<WorkerBuild> {
         (0..n)
-            .map(|_| WorkerBuild {
-                spec: WorkerSpec::Cpu { engine: EngineKind::Packed, block_k: 0 },
-                range: None,
-            })
+            .map(|_| WorkerBuild { spec: cpu(EngineKind::Packed, 0), range: None })
             .collect()
     }
 
@@ -523,6 +526,58 @@ mod tests {
         // default test spec metric is WeightedNormalized
         let err = drive::<f64>(&tree, &table, &spec(packed_workers(1), SchedulerKind::Static, 8))
             .expect_err("packed + weighted must fail before running");
+        assert!(matches!(err, Error::Unsupported(_)), "got {err:?}");
+    }
+
+    fn sparse_workers(n: usize) -> Vec<WorkerBuild> {
+        (0..n)
+            .map(|_| WorkerBuild { spec: cpu(EngineKind::Sparse, 0), range: None })
+            .collect()
+    }
+
+    #[test]
+    fn sparse_workers_match_tiled_over_drive() {
+        let (tree, table) =
+            SynthSpec { n_samples: 24, n_features: 128, density: 0.1, ..Default::default() }
+                .generate();
+        let assemble = |blocks: &[StripeBlock<f64>]| {
+            crate::matrix::CondensedMatrix::from_stripes(
+                24,
+                table.sample_ids().to_vec(),
+                blocks,
+                |n, d| if d > 0.0 { n / d } else { 0.0 },
+            )
+            .unwrap()
+        };
+        let (want, _) =
+            drive::<f64>(&tree, &table, &spec(cpu_workers(1), SchedulerKind::Static, 8))
+                .unwrap();
+        let reference = assemble(&want);
+        for scheduler in [SchedulerKind::Static, SchedulerKind::Dynamic] {
+            for threads in [1usize, 3] {
+                let (got, rep) =
+                    drive::<f64>(&tree, &table, &spec(sparse_workers(threads), scheduler, 8))
+                        .unwrap();
+                let diff = assemble(&got).max_abs_diff(&reference);
+                assert!(diff < 1e-12, "{scheduler:?} threads={threads}: {diff}");
+                assert!(
+                    rep.engine_stats.csr_nnz > 0,
+                    "{scheduler:?} threads={threads}: csr counters missing"
+                );
+                assert!(rep.engine_stats.rows_sparse + rep.engine_stats.rows_dense > 0);
+                assert!(rep.embed_density > 0.0 && rep.embed_density < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_worker_rejected_preflight_for_unweighted() {
+        let (tree, table) =
+            SynthSpec { n_samples: 8, n_features: 32, ..Default::default() }.generate();
+        let mut dspec = spec(sparse_workers(1), SchedulerKind::Static, 8);
+        dspec.metric = Metric::Unweighted;
+        let err = drive::<f64>(&tree, &table, &dspec)
+            .expect_err("sparse + unweighted must fail before running");
         assert!(matches!(err, Error::Unsupported(_)), "got {err:?}");
     }
 }

@@ -199,7 +199,11 @@ mod tests {
     use crate::unifrac::EngineKind;
 
     fn cpu() -> WorkerSpec {
-        WorkerSpec::Cpu { engine: EngineKind::Tiled, block_k: 16 }
+        WorkerSpec::Cpu {
+            engine: EngineKind::Tiled,
+            block_k: 16,
+            sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
+        }
     }
 
     #[test]

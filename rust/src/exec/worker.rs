@@ -11,15 +11,18 @@ use crate::embed::EmbBatch;
 use crate::error::{Error, Result};
 use crate::matrix::StripeBlock;
 use crate::runtime::{ArtifactQuery, ResidentUpdater, Runtime, StripeExecutor, XlaReal};
-use crate::unifrac::{make_engine, EngineKind, EngineStats, Metric, StripeEngine};
+use crate::unifrac::{make_engine_with, EngineKind, EngineStats, Metric, StripeEngine};
 use std::path::PathBuf;
 
 /// Plain-data description of a worker's backend (crosses threads; the
 /// device context itself is constructed on the worker thread).
 #[derive(Clone, Debug)]
 pub enum WorkerSpec {
-    /// Pure-rust CPU stripe engine.
-    Cpu { engine: EngineKind, block_k: usize },
+    /// Pure-rust CPU stripe engine. `sparse_threshold` is the
+    /// row-density cut the sparse engine classifies its
+    /// `rows_sparse`/`rows_dense` counters against (ignored by the
+    /// other engines).
+    Cpu { engine: EngineKind, block_k: usize, sparse_threshold: f64 },
     /// AOT artifact via PJRT; `engine` selects the artifact flavor
     /// (e.g. "pallas_tiled", "jnp"), `resident` keeps accumulators
     /// device-side between batches.
@@ -62,8 +65,8 @@ impl<R: XlaReal> Worker<R> {
     ) -> Result<Self> {
         validate_spec_metric(spec, metric)?;
         match spec {
-            WorkerSpec::Cpu { engine, block_k } => Ok(Worker::Cpu {
-                engine: make_engine::<R>(*engine, *block_k),
+            WorkerSpec::Cpu { engine, block_k, sparse_threshold } => Ok(Worker::Cpu {
+                engine: make_engine_with::<R>(*engine, *block_k, *sparse_threshold),
                 metric,
                 block: StripeBlock::new(padded_n, start, count),
             }),
@@ -153,15 +156,16 @@ pub fn validate_spec(spec: &WorkerSpec) -> Result<()> {
 }
 
 /// Reject spec/metric combinations the engine cannot compute — the
-/// bit-packed engine is presence-bit based and unweighted-only. Called
-/// in `drive`'s pre-flight (before any thread spawns) and again at
-/// worker construction.
+/// bit-packed engine is presence-bit based and unweighted-only, the
+/// sparse CSR engine is weighted-only. Called in `drive`'s pre-flight
+/// (before any thread spawns) and again at worker construction.
 pub fn validate_spec_metric(spec: &WorkerSpec, metric: Metric) -> Result<()> {
     match spec {
         WorkerSpec::Cpu { engine, .. } if !engine.supports(metric) => {
             Err(Error::unsupported(format!(
                 "cpu engine {:?} cannot compute metric {metric} (packed is \
-                 unweighted-only; pick an explicit scalar engine)",
+                 unweighted-only, sparse is weighted-only; pick an explicit \
+                 scalar engine)",
                 engine.name()
             )))
         }
@@ -174,6 +178,12 @@ mod tests {
     use super::*;
     use crate::embed::{collect_batches, EmbeddingKind};
     use crate::synth::SynthSpec;
+    use crate::unifrac::{make_engine, DEFAULT_SPARSE_THRESHOLD};
+
+    /// Test shorthand: a CPU worker spec with the default threshold.
+    fn cpu(engine: EngineKind, block_k: usize) -> WorkerSpec {
+        WorkerSpec::Cpu { engine, block_k, sparse_threshold: DEFAULT_SPARSE_THRESHOLD }
+    }
 
     #[test]
     fn cpu_worker_matches_direct_engine() {
@@ -181,7 +191,7 @@ mod tests {
             SynthSpec { n_samples: 12, n_features: 64, ..Default::default() }.generate();
         let batches =
             collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 12, 8).unwrap();
-        let spec = WorkerSpec::Cpu { engine: EngineKind::Batched, block_k: 0 };
+        let spec = cpu(EngineKind::Batched, 0);
         let mut worker =
             Worker::<f64>::build(&spec, Metric::WeightedNormalized, 12, 1, 3).unwrap();
         let engine = make_engine::<f64>(EngineKind::Batched, 0);
@@ -198,7 +208,7 @@ mod tests {
 
     #[test]
     fn packed_worker_accepted_for_unweighted_only() {
-        let spec = WorkerSpec::Cpu { engine: EngineKind::Packed, block_k: 0 };
+        let spec = cpu(EngineKind::Packed, 0);
         assert!(Worker::<f64>::build(&spec, Metric::Unweighted, 12, 0, 2).is_ok());
         let err = Worker::<f64>::build(&spec, Metric::WeightedNormalized, 12, 0, 2)
             .expect_err("weighted metric must be rejected");
@@ -208,10 +218,50 @@ mod tests {
             Err(Error::Unsupported(_))
         ));
         // scalar engines accept every metric
-        let tiled = WorkerSpec::Cpu { engine: EngineKind::Tiled, block_k: 8 };
+        let tiled = cpu(EngineKind::Tiled, 8);
         for m in Metric::all(0.5) {
             validate_spec_metric(&tiled, m).unwrap();
         }
+    }
+
+    #[test]
+    fn sparse_worker_accepted_for_weighted_only() {
+        let spec = cpu(EngineKind::Sparse, 0);
+        for m in [
+            Metric::WeightedNormalized,
+            Metric::WeightedUnnormalized,
+            Metric::Generalized(0.5),
+        ] {
+            assert!(Worker::<f64>::build(&spec, m, 12, 0, 2).is_ok(), "{m}");
+        }
+        let err = Worker::<f64>::build(&spec, Metric::Unweighted, 12, 0, 2)
+            .expect_err("unweighted metric must be rejected");
+        assert!(matches!(err, Error::Unsupported(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn sparse_worker_matches_tiled_and_reports_stats() {
+        let (tree, table) =
+            SynthSpec { n_samples: 14, n_features: 96, density: 0.1, ..Default::default() }
+                .generate();
+        let batches =
+            collect_batches::<f64>(&tree, &table, EmbeddingKind::Proportion, 14, 8).unwrap();
+        let sparse = cpu(EngineKind::Sparse, 0);
+        let tiled = cpu(EngineKind::Tiled, 8);
+        let mut ws =
+            Worker::<f64>::build(&sparse, Metric::WeightedNormalized, 14, 1, 4).unwrap();
+        let mut wt =
+            Worker::<f64>::build(&tiled, Metric::WeightedNormalized, 14, 1, 4).unwrap();
+        for b in &batches {
+            ws.consume(b).unwrap();
+            wt.consume(b).unwrap();
+        }
+        let (bs, stats) = ws.finish().unwrap();
+        let (bt, _) = wt.finish().unwrap();
+        assert!(bs.max_abs_diff(&bt) < 1e-12);
+        assert!(stats.csr_nnz > 0);
+        assert!(stats.rows_sparse + stats.rows_dense > 0);
+        assert!(stats.csr_density() > 0.0);
     }
 
     #[test]
@@ -220,7 +270,7 @@ mod tests {
             SynthSpec { n_samples: 12, n_features: 64, ..Default::default() }.generate();
         let batches =
             collect_batches::<f64>(&tree, &table, EmbeddingKind::Presence, 12, 8).unwrap();
-        let spec = WorkerSpec::Cpu { engine: EngineKind::Packed, block_k: 0 };
+        let spec = cpu(EngineKind::Packed, 0);
         let mut worker = Worker::<f64>::build(&spec, Metric::Unweighted, 12, 0, 3).unwrap();
         for b in &batches {
             worker.consume(b).unwrap();

@@ -161,8 +161,10 @@ fn fmt_min(x: f64) -> String {
 
 /// Table 1: EMP chip-minutes — Original/Final CPU, OpenACC-base/Final GPU.
 pub fn table1(scale: Scale, threads: usize) -> Result<Table> {
-    let orig = measure_engine::<f64>(EngineKind::Original, Metric::WeightedNormalized, scale, threads)?;
-    let tiled = measure_engine::<f64>(EngineKind::Tiled, Metric::WeightedNormalized, scale, threads)?;
+    let orig =
+        measure_engine::<f64>(EngineKind::Original, Metric::WeightedNormalized, scale, threads)?;
+    let tiled =
+        measure_engine::<f64>(EngineKind::Tiled, Metric::WeightedNormalized, scale, threads)?;
     let (n, t) = (EMP_N_SAMPLES, EMP_TREE_NODES);
     let rows = vec![
         vec![
@@ -241,7 +243,8 @@ pub fn stages_ablation(scale: Scale, threads: usize) -> Result<Table> {
 /// Table 2: the 113,721-sample dataset over chips. CPU measured rate,
 /// GPU modeled; chip counts follow the paper (128 CPU, 128 GPU, 4 GPU).
 pub fn table2(scale: Scale, threads: usize) -> Result<Table> {
-    let tiled = measure_engine::<f64>(EngineKind::Tiled, Metric::WeightedNormalized, scale, threads)?;
+    let tiled =
+        measure_engine::<f64>(EngineKind::Tiled, Metric::WeightedNormalized, scale, threads)?;
     let (n, t) = (BIG_N_SAMPLES, BIG_TREE_NODES);
     let total_cpu_h = extrapolate_minutes(&tiled, n, t) / 60.0;
     let gpu_min = model_minutes(&V100, EngineKind::Tiled, Dtype::F64, n, t);

@@ -196,7 +196,8 @@ mod tests {
     #[test]
     fn coordinates_centered() {
         let mut dm = CondensedMatrix::zeros(4, vec![]);
-        for (i, j, v) in [(0, 1, 1.0), (0, 2, 2.0), (0, 3, 1.5), (1, 2, 1.2), (1, 3, 0.8), (2, 3, 1.1)]
+        for (i, j, v) in
+            [(0, 1, 1.0), (0, 2, 2.0), (0, 3, 1.5), (1, 2, 1.2), (1, 3, 0.8), (2, 3, 1.1)]
         {
             dm.set(i, j, v);
         }

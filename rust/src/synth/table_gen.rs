@@ -60,7 +60,8 @@ mod tests {
 
     #[test]
     fn shape_and_sparsity() {
-        let spec = SynthSpec { n_samples: 64, n_features: 512, density: 0.02, ..Default::default() };
+        let spec =
+            SynthSpec { n_samples: 64, n_features: 512, density: 0.02, ..Default::default() };
         let t = generate_table(&spec, &mut Xoshiro256::new(1));
         assert_eq!(t.n_samples(), 64);
         assert_eq!(t.n_features(), 512);

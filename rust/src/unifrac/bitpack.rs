@@ -29,6 +29,7 @@
 //! contributions are zero (lengths past `filled` read as 0), so no
 //! explicit mask instruction is needed in the kernel.
 
+use super::engines::EngineStats;
 use super::metric::Metric;
 use crate::embed::EmbBatch;
 use crate::matrix::StripeBlock;
@@ -256,24 +257,6 @@ fn fold_word<R: Real>(lut: &[R; LANES * LUT_SIZE], w: u64) -> R {
     acc
 }
 
-/// Work counters a packed engine accumulates across `apply` calls
-/// (surfaced through `ExecReport` → `ComputeReport` / `RunMetrics`).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct EngineStats {
-    /// `u64` words packed and swept by the bitwise kernel (the packed
-    /// footprint summed over batches; each word is read once per stripe).
-    pub packed_words: u64,
-    /// 256-entry byte-lane LUTs built.
-    pub lut_builds: u64,
-}
-
-impl EngineStats {
-    pub fn absorb(&mut self, other: EngineStats) {
-        self.packed_words += other.packed_words;
-        self.lut_builds += other.lut_builds;
-    }
-}
-
 /// The fifth stripe engine: packs each broadcast scalar batch into a
 /// reusable [`PackedBatch`] scratch (engine-owned, allocation-free in
 /// steady state) and runs the bitwise kernel. Unweighted metric only —
@@ -402,6 +385,7 @@ impl<R: Real> PackedEngine<R> {
         EngineStats {
             packed_words: self.packed_words.swap(0, Ordering::Relaxed),
             lut_builds: self.lut_builds.swap(0, Ordering::Relaxed),
+            ..EngineStats::default()
         }
     }
 }

@@ -9,7 +9,8 @@
 use super::bitpack::{PackedBatch, LANES};
 use super::engines::EngineKind;
 use super::metric::Metric;
-use crate::embed::{default_padding, PackedStream};
+use super::sparse::DEFAULT_SPARSE_THRESHOLD;
+use crate::embed::{default_padding, embedding_density, PackedStream};
 use crate::exec::{self, DriveSpec, SchedulerKind, WorkerBuild, WorkerSpec};
 use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
 use crate::runtime::XlaReal;
@@ -23,9 +24,14 @@ pub use crate::exec::split_ranges;
 pub struct ComputeOptions {
     pub metric: Metric,
     /// Stripe engine. `None` = auto: the bit-packed kernel for
-    /// [`Metric::Unweighted`] (presence bits + byte-LUT branch folding),
-    /// `Tiled` for everything else.
+    /// [`Metric::Unweighted`] (presence bits + byte-LUT branch folding);
+    /// weighted metrics are density-aware — the sparse CSR kernel when
+    /// the estimated mean embedding-row density falls below
+    /// [`ComputeOptions::sparse_threshold`], `Tiled` otherwise.
     pub engine: Option<EngineKind>,
+    /// Embedding-row density below which auto-selection picks the
+    /// sparse CSR kernel for weighted metrics (`--sparse-threshold`).
+    pub sparse_threshold: f64,
     /// Tiled engine's `step_size` (paper Figure 3).
     pub block_k: usize,
     /// Embedding rows per batch (paper Figure 2's `filled_embs`).
@@ -45,12 +51,22 @@ pub struct ComputeOptions {
 }
 
 impl ComputeOptions {
-    /// The engine this run will actually use: the explicit choice, or
-    /// the metric-driven default (packed for unweighted, tiled
-    /// otherwise — the packed kernel replaces 64 fused-multiply-add
-    /// lanes with one XOR/OR + 16 table lookups per word).
+    /// The engine this run will use when no density estimate is at
+    /// hand: the explicit choice, or the metric-driven default (packed
+    /// for unweighted, tiled otherwise). The compute driver itself uses
+    /// [`Self::resolved_engine_for`] with the measured workload density.
     pub fn resolved_engine(&self) -> EngineKind {
-        self.engine.unwrap_or_else(|| EngineKind::auto_for(self.metric))
+        self.resolved_engine_for(None)
+    }
+
+    /// Density-aware resolution: the explicit choice wins; otherwise
+    /// unweighted takes the bit-packed kernel and weighted metrics take
+    /// the sparse CSR kernel below `sparse_threshold` (tiled above it,
+    /// or when `density` is unknown).
+    pub fn resolved_engine_for(&self, density: Option<f64>) -> EngineKind {
+        self.engine.unwrap_or_else(|| {
+            EngineKind::auto_for_density(self.metric, density, self.sparse_threshold)
+        })
     }
 }
 
@@ -59,6 +75,7 @@ impl Default for ComputeOptions {
         Self {
             metric: Metric::WeightedNormalized,
             engine: None,
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
             block_k: 64,
             batch_capacity: 32,
             threads: 1,
@@ -75,6 +92,8 @@ impl Default for ComputeOptions {
 /// (`devicemodel::`) and EXPERIMENTS.md.
 #[derive(Clone, Debug, Default)]
 pub struct ComputeReport {
+    /// Name of the engine that actually ran (after auto-selection).
+    pub engine: String,
     pub n_samples: usize,
     pub padded_n: usize,
     pub n_stripes: usize,
@@ -89,6 +108,19 @@ pub struct ComputeReport {
     pub packed_words: u64,
     /// 256-entry branch-length LUTs built by the bit-packed engine.
     pub lut_builds: u64,
+    /// Base CSR nonzeros built by the sparse engine (0 otherwise).
+    pub csr_nnz: u64,
+    /// Embedding rows the sparse engine classified below its threshold.
+    pub rows_sparse: u64,
+    /// Embedding rows at or above the sparse threshold.
+    pub rows_dense: u64,
+    /// Observed mean row density over the sparse engine's CSR builds
+    /// (over the padded chunk width — slightly below `embed_density`
+    /// when the sample axis is padded).
+    pub csr_density: f64,
+    /// Mean row density measured by the embedding producer over the
+    /// real sample columns (all runs; the auto-selection domain).
+    pub embed_density: f64,
     pub seconds_total: f64,
     pub seconds_embed: f64,
     pub seconds_stripes: f64,
@@ -122,7 +154,20 @@ pub fn compute_unifrac_report<R: XlaReal>(
     if n < 2 {
         return Err(crate::Error::Shape("need >= 2 samples".into()));
     }
-    let engine = opts.resolved_engine();
+    // density-aware auto-selection: estimate the mean embedding-row
+    // density (exact, via the leaf→root union walk — no DP pass) only
+    // when the policy actually consults it
+    let engine = match opts.engine {
+        Some(e) => e,
+        None => {
+            let density = if EngineKind::auto_needs_density(opts.metric) {
+                Some(embedding_density(tree, table)?)
+            } else {
+                None
+            };
+            opts.resolved_engine_for(density)
+        }
+    };
     let quantum = if engine == EngineKind::Tiled {
         opts.pad_quantum.max(opts.block_k.min(64))
     } else {
@@ -153,13 +198,18 @@ pub fn compute_unifrac_report<R: XlaReal>(
         chunk_stripes: opts.chunk_stripes,
         workers: (0..threads)
             .map(|_| WorkerBuild {
-                spec: WorkerSpec::Cpu { engine, block_k: opts.block_k },
+                spec: WorkerSpec::Cpu {
+                    engine,
+                    block_k: opts.block_k,
+                    sparse_threshold: opts.sparse_threshold,
+                },
                 range: None,
             })
             .collect(),
     };
     let (blocks, xrep): (Vec<StripeBlock<R>>, _) = exec::drive::<R>(tree, table, &spec)?;
     let mut report = ComputeReport {
+        engine: engine.name().to_string(),
         n_samples: n,
         padded_n: padded,
         n_stripes: s_total,
@@ -169,6 +219,11 @@ pub fn compute_unifrac_report<R: XlaReal>(
         pool_reused: xrep.pool.reused,
         packed_words: xrep.engine_stats.packed_words,
         lut_builds: xrep.engine_stats.lut_builds,
+        csr_nnz: xrep.engine_stats.csr_nnz,
+        rows_sparse: xrep.engine_stats.rows_sparse,
+        rows_dense: xrep.engine_stats.rows_dense,
+        csr_density: xrep.engine_stats.csr_density(),
+        embed_density: xrep.embed_density,
         seconds_embed: xrep.seconds_embed,
         ..Default::default()
     };
@@ -217,6 +272,7 @@ fn compute_packed_direct<R: XlaReal>(
     let mut packed = PackedBatch::<R>::new(padded, opts.batch_capacity.max(1));
     let mut block = StripeBlock::<R>::new(padded, 0, s_total);
     let mut report = ComputeReport {
+        engine: EngineKind::Packed.name().to_string(),
         n_samples: n,
         padded_n: padded,
         n_stripes: s_total,
@@ -238,6 +294,7 @@ fn compute_packed_direct<R: XlaReal>(
         packed.apply_unweighted(&mut block);
     }
     report.embeddings = stream.produced();
+    report.embed_density = stream.observed_density();
     report.pool_reused = report.batches;
     report.seconds_embed = embed_seconds;
     report.seconds_stripes = t0.elapsed().as_secs_f64();
@@ -304,6 +361,76 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(overridden.resolved_engine(), EngineKind::Batched);
+    }
+
+    #[test]
+    fn auto_selects_sparse_below_threshold_and_tiled_above() {
+        // EMP-like sparse input: the weighted auto path must pick the
+        // CSR kernel and report its counters
+        let (tree, table) =
+            SynthSpec { n_samples: 20, n_features: 256, density: 0.02, ..Default::default() }
+                .generate();
+        let (dm, rep) =
+            compute_unifrac_report::<f64>(&tree, &table, &ComputeOptions::default()).unwrap();
+        assert_eq!(rep.engine, "sparse", "embed_density {}", rep.embed_density);
+        assert!(rep.csr_nnz > 0);
+        assert!(rep.rows_sparse > 0);
+        assert!(rep.csr_density > 0.0 && rep.csr_density < 0.5);
+        assert!(rep.embed_density > 0.0 && rep.embed_density < 0.25);
+        // and it matches the forced tiled run
+        let tiled = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { engine: Some(EngineKind::Tiled), ..Default::default() },
+        )
+        .unwrap();
+        assert!(dm.max_abs_diff(&tiled) < 1e-12);
+        // dense input: no regression — auto stays on tiled
+        let (tree, table) =
+            SynthSpec { n_samples: 16, n_features: 64, density: 0.9, ..Default::default() }
+                .generate();
+        let (_, rep) =
+            compute_unifrac_report::<f64>(&tree, &table, &ComputeOptions::default()).unwrap();
+        assert_eq!(rep.engine, "tiled", "embed_density {}", rep.embed_density);
+        assert_eq!(rep.csr_nnz, 0);
+        assert!(rep.embed_density > 0.5);
+    }
+
+    #[test]
+    fn sparse_threshold_option_steers_auto() {
+        let (tree, table) =
+            SynthSpec { n_samples: 16, n_features: 128, density: 0.05, ..Default::default() }
+                .generate();
+        // a zero threshold forces the dense default even on sparse input
+        let (_, rep) = compute_unifrac_report::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { sparse_threshold: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.engine, "tiled");
+        // a threshold of 1.0 always picks sparse for weighted metrics
+        let (_, rep) = compute_unifrac_report::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { sparse_threshold: 1.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.engine, "sparse");
+    }
+
+    #[test]
+    fn sparse_engine_rejected_for_unweighted_metric() {
+        let (tree, table) =
+            SynthSpec { n_samples: 10, n_features: 64, ..Default::default() }.generate();
+        let opts = ComputeOptions {
+            metric: Metric::Unweighted,
+            engine: Some(EngineKind::Sparse),
+            ..Default::default()
+        };
+        let err = compute_unifrac::<f64>(&tree, &table, &opts)
+            .expect_err("sparse must reject the unweighted metric");
+        assert!(matches!(err, crate::Error::Unsupported(_)), "got {err:?}");
     }
 
     #[test]

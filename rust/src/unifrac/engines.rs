@@ -1,5 +1,6 @@
 //! The CPU stripe engines — one per optimization stage of the paper,
-//! plus the bit-packed unweighted kernel.
+//! plus the bit-packed unweighted kernel and the sparse CSR weighted
+//! kernel.
 //!
 //! | Engine     | Paper artifact            | Structure                          |
 //! |------------|---------------------------|------------------------------------|
@@ -13,18 +14,67 @@
 //! |            |                           | for cache locality + SIMD          |
 //! | `Packed`   | arXiv:2107.05397 kernel   | 64 presence bits per `u64` word,   |
 //! |            | (unweighted only)         | XOR/OR + byte-LUT length folding   |
+//! | `Sparse`   | arXiv:1611.04634 insight  | per-row CSR nonzeros, dense        |
+//! |            | (weighted only)           | single-sided fold + two-pointer    |
+//! |            |                           | intersection corrections           |
 //!
 //! The four scalar engines compute identical results on every metric;
-//! `Packed` matches them on the unweighted metric (its only one — the
-//! routing layers reject other metrics with a typed error). Tests
-//! enforce agreement to <1e-12 in f64.
+//! `Packed` matches them on the unweighted metric and `Sparse` on the
+//! weighted ones (their only metrics — the routing layers reject the
+//! rest with a typed error). Tests enforce agreement to <1e-12 in f64.
 
-use super::bitpack::{EngineStats, PackedEngine};
+use super::bitpack::PackedEngine;
 use super::metric::{Metric, MetricOps};
+use super::sparse::{SparseEngine, DEFAULT_SPARSE_THRESHOLD};
 use crate::embed::EmbBatch;
 use crate::matrix::StripeBlock;
 use crate::util::Real;
 use std::sync::Mutex;
+
+/// Work counters an engine accumulates across `apply` calls (surfaced
+/// through `ExecReport` → `ComputeReport` / `RunMetrics`). Packed and
+/// sparse engines fill their own counters; scalar engines report zeros.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// `u64` words packed and swept by the bitwise kernel (the packed
+    /// footprint summed over batches; each word is read once per stripe).
+    pub packed_words: u64,
+    /// 256-entry byte-lane LUTs built.
+    pub lut_builds: u64,
+    /// Base (non-duplicated) CSR nonzeros built by the sparse engine.
+    pub csr_nnz: u64,
+    /// Embedding-row cells scanned by the CSR builder (`rows × N` over
+    /// the **padded** chunk width — the engine's actual compute domain,
+    /// like `ComputeReport::updates`). `csr_nnz / csr_cells` is the
+    /// observed row density; it reads slightly below the real-width
+    /// `embed_density` when the sample count is padded up.
+    pub csr_cells: u64,
+    /// Rows whose padded-width density fell below the sparse threshold.
+    pub rows_sparse: u64,
+    /// Rows at or above the sparse threshold.
+    pub rows_dense: u64,
+}
+
+impl EngineStats {
+    pub fn absorb(&mut self, other: EngineStats) {
+        self.packed_words += other.packed_words;
+        self.lut_builds += other.lut_builds;
+        self.csr_nnz += other.csr_nnz;
+        self.csr_cells += other.csr_cells;
+        self.rows_sparse += other.rows_sparse;
+        self.rows_dense += other.rows_dense;
+    }
+
+    /// Observed mean embedding-row density over everything the sparse
+    /// engine converted (0.0 when it never ran).
+    pub fn csr_density(&self) -> f64 {
+        if self.csr_cells > 0 {
+            self.csr_nnz as f64 / self.csr_cells as f64
+        } else {
+            0.0
+        }
+    }
+}
 
 /// A stripe-update engine: folds one embedding batch into a stripe block.
 pub trait StripeEngine<R: Real>: Send + Sync {
@@ -44,7 +94,8 @@ pub trait StripeEngine<R: Real>: Send + Sync {
     fn name(&self) -> &'static str {
         self.kind().name()
     }
-    /// Drain the engine's work counters (non-zero for `Packed` only).
+    /// Drain the engine's work counters (non-zero for `Packed` and
+    /// `Sparse` only).
     fn take_stats(&self) -> EngineStats {
         EngineStats::default()
     }
@@ -58,6 +109,7 @@ pub enum EngineKind {
     Batched,
     Tiled,
     Packed,
+    Sparse,
 }
 
 impl EngineKind {
@@ -68,6 +120,7 @@ impl EngineKind {
             EngineKind::Batched => "batched",
             EngineKind::Tiled => "tiled",
             EngineKind::Packed => "packed",
+            EngineKind::Sparse => "sparse",
         }
     }
 
@@ -78,13 +131,14 @@ impl EngineKind {
             "batched" => Some(Self::Batched),
             "tiled" => Some(Self::Tiled),
             "packed" => Some(Self::Packed),
+            "sparse" => Some(Self::Sparse),
             _ => None,
         }
     }
 
-    /// Every engine, including the metric-restricted `Packed`.
-    pub fn all() -> [EngineKind; 5] {
-        [Self::Original, Self::Unified, Self::Batched, Self::Tiled, Self::Packed]
+    /// Every engine, including the metric-restricted `Packed`/`Sparse`.
+    pub fn all() -> [EngineKind; 6] {
+        [Self::Original, Self::Unified, Self::Batched, Self::Tiled, Self::Packed, Self::Sparse]
     }
 
     /// The paper's four optimization stages (every-metric engines).
@@ -93,35 +147,95 @@ impl EngineKind {
     }
 
     /// Whether this engine can compute `metric`. `Packed` is
-    /// presence-bit based and therefore unweighted-only.
+    /// presence-bit based and therefore unweighted-only; `Sparse` is
+    /// built on the zero-annihilating weighted term decomposition and
+    /// therefore weighted-only.
     pub fn supports(&self, metric: Metric) -> bool {
         match self {
             EngineKind::Packed => metric == Metric::Unweighted,
+            EngineKind::Sparse => metric != Metric::Unweighted,
             _ => true,
         }
     }
 
     /// The auto-selection policy shared by `ComputeOptions` and the
     /// CLI/config layer: the bit-packed kernel for unweighted (its only
-    /// metric), the paper's final scalar stage otherwise.
+    /// metric), the paper's final scalar stage otherwise. Density-blind
+    /// — see [`Self::auto_for_density`] for the sparse-aware variant.
     pub fn auto_for(metric: Metric) -> EngineKind {
+        Self::auto_for_density(metric, None, DEFAULT_SPARSE_THRESHOLD)
+    }
+
+    /// Density-aware auto-selection: unweighted always takes the
+    /// bit-packed kernel; weighted metrics take the sparse CSR kernel
+    /// when the (estimated or observed) mean embedding-row density is
+    /// known and falls below `threshold`, the tiled scalar stage
+    /// otherwise (including when no density estimate is available).
+    pub fn auto_for_density(metric: Metric, density: Option<f64>, threshold: f64) -> EngineKind {
         if metric == Metric::Unweighted {
             EngineKind::Packed
         } else {
-            EngineKind::Tiled
+            match density {
+                Some(d) if d < threshold => EngineKind::Sparse,
+                _ => EngineKind::Tiled,
+            }
         }
+    }
+
+    /// Whether [`Self::auto_for_density`] actually consults a density
+    /// estimate for `metric`. The single source of truth for "should a
+    /// caller pay the `embed::embedding_density` walk before resolving
+    /// `auto`" — keep in sync with [`Self::auto_for_density`]'s shape.
+    pub fn auto_needs_density(metric: Metric) -> bool {
+        metric != Metric::Unweighted
     }
 }
 
 /// Build an engine. `block_k` applies to `Tiled` (the paper's
 /// `step_size`; must divide nothing in particular — remainders handled).
+/// The sparse engine classifies rows against the default threshold; use
+/// [`make_engine_with`] to pass the configured `--sparse-threshold`.
 pub fn make_engine<R: Real>(kind: EngineKind, block_k: usize) -> Box<dyn StripeEngine<R>> {
+    make_engine_with(kind, block_k, DEFAULT_SPARSE_THRESHOLD)
+}
+
+/// As [`make_engine`], with an explicit sparse-engine row-classification
+/// threshold so the `rows_sparse`/`rows_dense` counters match the
+/// configured auto-selection cut. Other engines ignore it.
+pub fn make_engine_with<R: Real>(
+    kind: EngineKind,
+    block_k: usize,
+    sparse_threshold: f64,
+) -> Box<dyn StripeEngine<R>> {
     match kind {
         EngineKind::Original => Box::new(OriginalEngine),
         EngineKind::Unified => Box::new(UnifiedEngine),
         EngineKind::Batched => Box::new(BatchedEngine),
         EngineKind::Tiled => Box::new(TiledEngine::<R>::new(block_k)),
         EngineKind::Packed => Box::new(PackedEngine::<R>::new()),
+        EngineKind::Sparse => Box::new(SparseEngine::<R>::with_threshold(sparse_threshold)),
+    }
+}
+
+impl<R: Real> StripeEngine<R> for SparseEngine<R> {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Sparse
+    }
+
+    fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        self.apply_sparse(metric, batch, block);
+    }
+
+    fn prepare(&self, metric: Metric, batch: &EmbBatch<R>) {
+        self.prepare_sparse(metric, batch);
+    }
+
+    fn apply_prepared(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        self.apply_prepared_sparse(metric, batch, block);
+    }
+
+    fn take_stats(&self) -> EngineStats {
+        self.drain_stats()
     }
 }
 
@@ -317,9 +431,14 @@ struct TileScratch<R> {
 }
 
 impl<R: Real> TiledEngine<R> {
+    /// `block_k` is honored exactly as given (`--block-k 4` really tiles
+    /// by 4 — the seed silently clamped to ≥8); `0` means "auto" and
+    /// falls back to the historical default of 8.
+    pub const DEFAULT_BLOCK_K: usize = 8;
+
     pub fn new(block_k: usize) -> Self {
         Self {
-            block_k: block_k.max(8),
+            block_k: if block_k == 0 { Self::DEFAULT_BLOCK_K } else { block_k },
             scratch: Mutex::new(TileScratch { acc_n: Vec::new(), acc_d: Vec::new() }),
         }
     }
@@ -552,7 +671,7 @@ mod tests {
             assert_eq!(EngineKind::parse(k.name()), Some(k));
         }
         assert_eq!(EngineKind::parse("gpu"), None);
-        assert_eq!(EngineKind::all().len(), 5);
+        assert_eq!(EngineKind::all().len(), 6);
         assert_eq!(EngineKind::paper_stages().len(), 4);
     }
 
@@ -565,6 +684,78 @@ mod tests {
             for m in Metric::all(0.5) {
                 assert!(k.supports(m), "{k:?} must support {m}");
             }
+        }
+    }
+
+    #[test]
+    fn sparse_supports_weighted_only() {
+        assert!(!EngineKind::Sparse.supports(Metric::Unweighted));
+        assert!(EngineKind::Sparse.supports(Metric::WeightedNormalized));
+        assert!(EngineKind::Sparse.supports(Metric::WeightedUnnormalized));
+        assert!(EngineKind::Sparse.supports(Metric::Generalized(0.5)));
+    }
+
+    #[test]
+    fn auto_selection_is_density_aware() {
+        use crate::unifrac::sparse::DEFAULT_SPARSE_THRESHOLD as T;
+        // unweighted always takes the packed kernel, density or not
+        assert_eq!(
+            EngineKind::auto_for_density(Metric::Unweighted, Some(0.01), T),
+            EngineKind::Packed
+        );
+        // weighted: sparse below the threshold, tiled above or unknown
+        assert_eq!(
+            EngineKind::auto_for_density(Metric::WeightedNormalized, Some(0.05), T),
+            EngineKind::Sparse
+        );
+        assert_eq!(
+            EngineKind::auto_for_density(Metric::Generalized(0.5), Some(0.9), T),
+            EngineKind::Tiled
+        );
+        assert_eq!(
+            EngineKind::auto_for_density(Metric::WeightedNormalized, None, T),
+            EngineKind::Tiled
+        );
+        // the threshold itself is exclusive
+        assert_eq!(
+            EngineKind::auto_for_density(Metric::WeightedNormalized, Some(T), T),
+            EngineKind::Tiled
+        );
+        assert_eq!(EngineKind::auto_for(Metric::WeightedNormalized), EngineKind::Tiled);
+        assert_eq!(EngineKind::auto_for(Metric::Unweighted), EngineKind::Packed);
+        // the estimator-skip predicate mirrors the policy shape
+        assert!(!EngineKind::auto_needs_density(Metric::Unweighted));
+        assert!(EngineKind::auto_needs_density(Metric::WeightedNormalized));
+        assert!(EngineKind::auto_needs_density(Metric::Generalized(0.5)));
+    }
+
+    #[test]
+    fn tiled_honors_small_block_k() {
+        // regression: the seed silently clamped block_k to >= 8, so
+        // `--block-k 4` quietly ran with 8
+        for bk in [1usize, 2, 4, 7] {
+            assert_eq!(TiledEngine::<f64>::new(bk).block_k, bk, "block_k {bk} clamped");
+        }
+        // 0 = auto keeps the historical default
+        assert_eq!(TiledEngine::<f64>::new(0).block_k, TiledEngine::<f64>::DEFAULT_BLOCK_K);
+        // and tiny tiles still compute correct results
+        let n = 20;
+        let batch = random_batch(n, 5, 77, false);
+        let mut want = StripeBlock::<f64>::new(n, 0, 10);
+        make_engine::<f64>(EngineKind::Batched, 0).apply(
+            Metric::WeightedNormalized,
+            &batch,
+            &mut want,
+        );
+        for bk in [1usize, 2, 4] {
+            let mut got = StripeBlock::<f64>::new(n, 0, 10);
+            StripeEngine::apply(
+                &TiledEngine::<f64>::new(bk),
+                Metric::WeightedNormalized,
+                &batch,
+                &mut got,
+            );
+            assert!(want.max_abs_diff(&got) < 1e-12, "block_k={bk}");
         }
     }
 

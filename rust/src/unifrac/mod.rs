@@ -1,15 +1,18 @@
-//! The UniFrac core: metrics, the five stripe compute engines (the
+//! The UniFrac core: metrics, the six stripe compute engines (the
 //! paper's four optimization stages plus the bit-packed unweighted
-//! kernel), the naive oracle, and the high-level driver.
+//! kernel and the sparse CSR weighted kernel), the naive oracle, and
+//! the high-level driver.
 
 pub mod bitpack;
 pub mod compute;
 pub mod engines;
 pub mod metric;
 pub mod naive;
+pub mod sparse;
 
-pub use bitpack::{EngineStats, PackedBatch, PackedEngine};
+pub use bitpack::{PackedBatch, PackedEngine};
 pub use compute::{compute_unifrac, compute_unifrac_report, ComputeOptions, ComputeReport};
-pub use engines::{make_engine, EngineKind, StripeEngine};
+pub use engines::{make_engine, make_engine_with, EngineKind, EngineStats, StripeEngine};
 pub use metric::Metric;
 pub use naive::compute_unifrac_naive;
+pub use sparse::{CsrBatch, SparseEngine, DEFAULT_SPARSE_THRESHOLD};

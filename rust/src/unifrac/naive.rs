@@ -148,7 +148,8 @@ mod tests {
     #[test]
     fn distances_bounded() {
         use crate::synth::SynthSpec;
-        let (tree, table) = SynthSpec { n_samples: 12, n_features: 64, ..Default::default() }.generate();
+        let (tree, table) =
+            SynthSpec { n_samples: 12, n_features: 64, ..Default::default() }.generate();
         for m in [Metric::Unweighted, Metric::WeightedNormalized, Metric::Generalized(0.5)] {
             let dm = compute_unifrac_naive(&tree, &table, m).unwrap();
             for i in 0..12 {

@@ -1,0 +1,593 @@
+//! Sparse CSR weighted stripe kernel (the sixth engine,
+//! `EngineKind::Sparse`).
+//!
+//! Microbiome tables are extremely sparse (the repo's synth specs use
+//! density 0.02–0.1, EMP-like), and the postorder DP emits proportion
+//! rows that are near-empty for most tree nodes — yet the scalar
+//! engines evaluate `metric.terms` for every `(embedding, stripe,
+//! sample)` triple including the all-zero pairs that contribute
+//! nothing. EMDUnifrac (arXiv:1611.04634) shows UniFrac's cost is
+//! really governed by nonzero support; this module restructures the
+//! weighted stripe update around it.
+//!
+//! Every supported metric is **symmetric** and **zero-annihilating**
+//! (`terms(0, 0) == (0, 0)`), so one stripe update splits exactly into
+//!
+//! ```text
+//!   terms(u, v) = terms(u, 0) + terms(0, v)                 (≤ 1 nonzero)
+//!               + [terms(u, v) − terms(u, 0) − terms(v, 0)] (both nonzero)
+//! ```
+//!
+//! The single-sided part is *stripe-independent*: fold every nonzero
+//! once per batch into dense per-column tables `U_num/U_den[k] = Σ_rows
+//! len · terms(val, 0)` (duplicated to `2N` like [`EmbBatch`] rows), and
+//! each stripe becomes one vectorizable shifted add
+//! `num[k] += U_num[k] + U_num[k + stripe + 1]` — the whole batch in a
+//! single dense pass per stripe. The both-nonzero corrections are found
+//! by a two-pointer merge over each row's sorted CSR nonzeros: a pair
+//! at circular column distance `d` corrects exactly stripe `d − 1`, so
+//! one forward window scan `(idx_a + start, idx_a + start + count]` per
+//! nonzero covers *every* stripe of the block at once. Per-row cost
+//! drops from `O(n_samples · n_stripes)` to `O(nnz + nnz² / 2)` per
+//! block — a 10–20× reduction in term evaluations at EMP-like density.
+//!
+//! Zero-operand correctness falls out by construction: `terms(u, 0)` is
+//! evaluated through the same monomorphized [`MetricOps`] as the dense
+//! engines (`|u−0|`, `u+0`, and the generalized `s=0` branch included),
+//! and both-zero pairs are never touched because the metrics annihilate
+//! at zero. The unweighted metric is *rejected* — presence data belongs
+//! to the bit-packed kernel (`EngineKind::Packed`).
+
+use super::engines::EngineStats;
+use super::metric::{Metric, MetricOps};
+use crate::embed::EmbBatch;
+use crate::matrix::StripeBlock;
+use crate::util::Real;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default embedding-row density below which the auto-selection policy
+/// picks [`EngineKind::Sparse`](super::EngineKind::Sparse) over `Tiled`
+/// for the weighted metrics (`--sparse-threshold`). EMP-like tables
+/// (input density 0.02–0.1) produce mean embedding densities around
+/// 0.05–0.2; dense validation tables sit near 1.0.
+pub const DEFAULT_SPARSE_THRESHOLD: f64 = 0.25;
+
+/// One embedding batch in engine-owned CSR form: per row the sorted
+/// `(index, value)` nonzeros (circularly duplicated over `2N` columns
+/// exactly like [`EmbBatch`], so stripe `s` reads offset `idx + s + 1`
+/// without modular arithmetic), plus the per-batch single-sided fold
+/// tables `U_num`/`U_den`.
+#[derive(Clone, Debug)]
+pub struct CsrBatch<R: Real> {
+    n_samples: usize,
+    filled: usize,
+    /// Row `r` owns entries `indptr[r] .. indptr[r+1]` (duplicated:
+    /// `2 × base_nnz` entries per row, base half first).
+    indptr: Vec<usize>,
+    /// Sorted column indices in `[0, 2N)`.
+    idx: Vec<u32>,
+    val: Vec<R>,
+    /// Per-entry single-sided terms `terms(val, 0)`, precomputed at
+    /// build so the correction pass never re-evaluates them (for the
+    /// generalized metric each is a `powf`).
+    single_num: Vec<R>,
+    single_den: Vec<R>,
+    lengths: Vec<R>,
+    /// `[2N]` single-sided numerator fold: `Σ_rows len · terms(v, 0).0`.
+    u_num: Vec<R>,
+    /// `[2N]` single-sided denominator fold.
+    u_den: Vec<R>,
+    /// Base (non-duplicated) nonzeros across all rows.
+    nnz_base: usize,
+}
+
+impl<R: Real> Default for CsrBatch<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R: Real> CsrBatch<R> {
+    pub fn new() -> Self {
+        Self {
+            n_samples: 0,
+            filled: 0,
+            indptr: Vec::new(),
+            idx: Vec::new(),
+            val: Vec::new(),
+            single_num: Vec::new(),
+            single_den: Vec::new(),
+            lengths: Vec::new(),
+            u_num: Vec::new(),
+            u_den: Vec::new(),
+            nnz_base: 0,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Base nonzeros captured from the last [`Self::build`].
+    pub fn nnz(&self) -> usize {
+        self.nnz_base
+    }
+
+    /// Base nonzero count of row `r`.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.indptr[r + 1] - self.indptr[r]) / 2
+    }
+
+    /// Convert `batch` into CSR + fold tables under `metric`. Buffers
+    /// are recycled across calls (allocation-free in steady state).
+    pub fn build(&mut self, metric: Metric, batch: &EmbBatch<R>) {
+        crate::with_metric_ops!(metric, ops, self.build_ops(ops, batch))
+    }
+
+    fn build_ops<M: MetricOps<R>>(&mut self, ops: M, batch: &EmbBatch<R>) {
+        let n = batch.n_samples;
+        let two_n = 2 * n;
+        self.n_samples = n;
+        self.filled = batch.filled;
+        self.indptr.clear();
+        self.idx.clear();
+        self.val.clear();
+        self.single_num.clear();
+        self.single_den.clear();
+        self.lengths.clear();
+        self.u_num.clear();
+        self.u_den.clear();
+        self.u_num.resize(two_n, R::ZERO);
+        self.u_den.resize(two_n, R::ZERO);
+        self.indptr.push(0);
+        for (row, len) in batch.rows() {
+            let base_start = self.idx.len();
+            for (k, &v) in row[..n].iter().enumerate() {
+                if v != R::ZERO {
+                    self.idx.push(k as u32);
+                    self.val.push(v);
+                    let (tn, td) = ops.terms(v, R::ZERO);
+                    self.single_num.push(tn);
+                    self.single_den.push(td);
+                    self.u_num[k] += tn * len;
+                    self.u_num[k + n] += tn * len;
+                    self.u_den[k] += td * len;
+                    self.u_den[k + n] += td * len;
+                }
+            }
+            // duplicate the base nonzeros at `idx + N` — the list stays
+            // sorted because every base index is < N
+            let base_end = self.idx.len();
+            for e in base_start..base_end {
+                let k = self.idx[e] + n as u32;
+                let v = self.val[e];
+                let (tn, td) = (self.single_num[e], self.single_den[e]);
+                self.idx.push(k);
+                self.val.push(v);
+                self.single_num.push(tn);
+                self.single_den.push(td);
+            }
+            self.lengths.push(len);
+            self.indptr.push(self.idx.len());
+        }
+        self.nnz_base = self.idx.len() / 2;
+    }
+
+    /// Fold this CSR batch into `block` under `metric`. Must be built
+    /// from a batch of matching width under the same metric.
+    pub fn apply(&self, metric: Metric, block: &mut StripeBlock<R>) {
+        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, block))
+    }
+
+    fn apply_ops<M: MetricOps<R>>(&self, ops: M, block: &mut StripeBlock<R>) {
+        let n = block.n_samples();
+        assert_eq!(self.n_samples, n, "csr/block width mismatch");
+        if self.filled == 0 {
+            return;
+        }
+        let start = block.start();
+        let count = block.n_stripes();
+        // Pass 1 — single-sided fold, one dense shifted add per stripe
+        // for the WHOLE batch (zipped slices vectorize like the tiled
+        // engine's ik loop).
+        for s_local in 0..count {
+            let off = start + s_local + 1;
+            let (num_row, den_row) = block.rows_mut(s_local);
+            let un_a = &self.u_num[..n];
+            let un_b = &self.u_num[off..off + n];
+            let ud_a = &self.u_den[..n];
+            let ud_b = &self.u_den[off..off + n];
+            for ((((nr, dr), (&na, &nb)), &da), &db) in num_row
+                .iter_mut()
+                .zip(den_row.iter_mut())
+                .zip(un_a.iter().zip(un_b))
+                .zip(ud_a)
+                .zip(ud_b)
+            {
+                *nr += na + nb;
+                *dr += da + db;
+            }
+        }
+        // Pass 2 — both-nonzero corrections. A pair of nonzeros at
+        // circular distance d belongs to stripe d − 1 at the left
+        // column, so the window (idx_a + start, idx_a + start + count]
+        // over the duplicated sorted list enumerates exactly this
+        // block's intersections; `w` advances monotonically (two-pointer
+        // merge). The final stripe of even N double-visits its pairs in
+        // the dense engines and is double-found here (once from each
+        // side), so the results agree without special-casing.
+        let lo_add = start as u32 + 1;
+        let hi_add = (start + count) as u32;
+        for r in 0..self.filled {
+            let span = self.indptr[r]..self.indptr[r + 1];
+            let entries = &self.idx[span.clone()];
+            let vals = &self.val[span.clone()];
+            let sn = &self.single_num[span.clone()];
+            let sd = &self.single_den[span];
+            let len = self.lengths[r];
+            let base = entries.len() / 2;
+            let mut w = 0usize;
+            for a in 0..base {
+                let ia = entries[a];
+                let wlo = ia + lo_add;
+                let whi = ia + hi_add;
+                while w < entries.len() && entries[w] < wlo {
+                    w += 1;
+                }
+                let mut j = w;
+                while j < entries.len() && entries[j] <= whi {
+                    let (tn, td) = ops.terms(vals[a], vals[j]);
+                    let s_local = (entries[j] - ia) as usize - 1 - start;
+                    let cell = s_local * n + ia as usize;
+                    block.num[cell] += (tn - sn[a] - sn[j]) * len;
+                    block.den[cell] += (td - sd[a] - sd[j]) * len;
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// The sixth stripe engine: converts each broadcast scalar batch into a
+/// reusable [`CsrBatch`] scratch (engine-owned, allocation-free in
+/// steady state) and runs the sparse kernel. Weighted metrics only —
+/// the routing layers reject the unweighted metric with a typed error
+/// before any worker is built (`exec::worker::validate_spec_metric`).
+///
+/// A batch may be folded into several blocks (the dynamic scheduler's
+/// chunk stealing): `prepare_sparse` builds the CSR once, then
+/// `apply_prepared_sparse` reuses the scratch per block — exactly the
+/// [`PackedEngine`](super::PackedEngine) discipline.
+pub struct SparseEngine<R: Real> {
+    /// Row-density cutoff for the `rows_sparse`/`rows_dense` work
+    /// counters — plumbed from the configured `--sparse-threshold`
+    /// through `WorkerSpec::Cpu` so the reported row split matches the
+    /// auto-selection cut the run was configured with.
+    threshold: f64,
+    scratch: Mutex<SparseScratch<R>>,
+    csr_nnz: AtomicU64,
+    csr_cells: AtomicU64,
+    rows_sparse: AtomicU64,
+    rows_dense: AtomicU64,
+}
+
+struct SparseScratch<R: Real> {
+    csr: CsrBatch<R>,
+    /// Set by `prepare_sparse`; cleared by any stateless rebuild.
+    prepared: bool,
+    /// Identity of the source batch (address of its `emb` buffer) plus
+    /// the metric the fold tables were built under.
+    src: usize,
+    metric: Option<Metric>,
+}
+
+impl<R: Real> SparseEngine<R> {
+    pub fn new() -> Self {
+        Self::with_threshold(DEFAULT_SPARSE_THRESHOLD)
+    }
+
+    pub fn with_threshold(threshold: f64) -> Self {
+        Self {
+            threshold,
+            scratch: Mutex::new(SparseScratch {
+                csr: CsrBatch::new(),
+                prepared: false,
+                src: 0,
+                metric: None,
+            }),
+            csr_nnz: AtomicU64::new(0),
+            csr_cells: AtomicU64::new(0),
+            rows_sparse: AtomicU64::new(0),
+            rows_dense: AtomicU64::new(0),
+        }
+    }
+
+    fn assert_weighted(metric: Metric) {
+        assert_ne!(
+            metric,
+            Metric::Unweighted,
+            "sparse engine supports only the weighted metrics (routing should \
+             have rejected this)"
+        );
+    }
+
+    /// Rebuild the CSR scratch from `batch` and update the counters.
+    fn rebuild(&self, scratch: &mut SparseScratch<R>, metric: Metric, batch: &EmbBatch<R>) {
+        scratch.csr.build(metric, batch);
+        scratch.metric = Some(metric);
+        let n = batch.n_samples.max(1);
+        self.csr_nnz.fetch_add(scratch.csr.nnz() as u64, Ordering::Relaxed);
+        self.csr_cells.fetch_add((batch.filled * n) as u64, Ordering::Relaxed);
+        let mut sparse = 0u64;
+        for r in 0..scratch.csr.filled() {
+            sparse += u64::from(scratch.csr.row_nnz(r) as f64 / n as f64 < self.threshold);
+        }
+        self.rows_sparse.fetch_add(sparse, Ordering::Relaxed);
+        self.rows_dense.fetch_add(batch.filled as u64 - sparse, Ordering::Relaxed);
+    }
+
+    /// Build the CSR once ahead of a run of [`Self::apply_prepared_sparse`]
+    /// calls folding the same batch into several blocks.
+    pub fn prepare_sparse(&self, metric: Metric, batch: &EmbBatch<R>) {
+        Self::assert_weighted(metric);
+        if batch.filled == 0 {
+            return;
+        }
+        let mut guard = self.scratch.lock().expect("sparse scratch poisoned");
+        self.rebuild(&mut guard, metric, batch);
+        guard.prepared = true;
+        guard.src = batch.emb.as_ptr() as usize;
+    }
+
+    /// Fold a batch previously converted by [`Self::prepare_sparse`].
+    /// Falls back to a full rebuild when no matching scratch is ready.
+    pub fn apply_prepared_sparse(
+        &self,
+        metric: Metric,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) {
+        Self::assert_weighted(metric);
+        if batch.filled == 0 {
+            return;
+        }
+        let mut guard = self.scratch.lock().expect("sparse scratch poisoned");
+        let reusable = guard.prepared
+            && guard.src == batch.emb.as_ptr() as usize
+            && guard.metric == Some(metric)
+            && guard.csr.n_samples() == batch.n_samples
+            && guard.csr.filled() == batch.filled;
+        if !reusable {
+            self.rebuild(&mut guard, metric, batch);
+            guard.prepared = false;
+        }
+        guard.csr.apply(metric, block);
+    }
+
+    /// Stateless fold: CSR build + kernel in one call.
+    pub fn apply_sparse(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
+        Self::assert_weighted(metric);
+        if batch.filled == 0 {
+            return;
+        }
+        let mut guard = self.scratch.lock().expect("sparse scratch poisoned");
+        self.rebuild(&mut guard, metric, batch);
+        guard.prepared = false;
+        guard.csr.apply(metric, block);
+    }
+
+    /// Drain the accumulated work counters.
+    pub fn drain_stats(&self) -> EngineStats {
+        EngineStats {
+            csr_nnz: self.csr_nnz.swap(0, Ordering::Relaxed),
+            csr_cells: self.csr_cells.swap(0, Ordering::Relaxed),
+            rows_sparse: self.rows_sparse.swap(0, Ordering::Relaxed),
+            rows_dense: self.rows_dense.swap(0, Ordering::Relaxed),
+            ..EngineStats::default()
+        }
+    }
+}
+
+impl<R: Real> Default for SparseEngine<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::unifrac::engines::{make_engine, EngineKind, StripeEngine};
+    use crate::util::Xoshiro256;
+
+    fn proportion_batch(n: usize, e: usize, density: f64, seed: u64) -> EmbBatch<f64> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut b = EmbBatch::new(n, e);
+        for row in 0..e {
+            for k in 0..n {
+                if rng.f64() < density {
+                    let v = rng.f64().max(1e-6);
+                    b.emb[row * 2 * n + k] = v;
+                    b.emb[row * 2 * n + n + k] = v;
+                }
+            }
+            b.lengths[row] = rng.f64().max(1e-3);
+            b.filled = row + 1;
+        }
+        b
+    }
+
+    fn weighted_metrics() -> Vec<Metric> {
+        vec![
+            Metric::WeightedNormalized,
+            Metric::WeightedUnnormalized,
+            Metric::Generalized(0.0),
+            Metric::Generalized(0.5),
+            Metric::Generalized(1.0),
+            Metric::Generalized(1.5),
+        ]
+    }
+
+    #[test]
+    fn csr_matches_tiled_across_densities_and_metrics() {
+        for metric in weighted_metrics() {
+            for &density in &[0.0, 0.02, 0.1, 0.5, 1.0] {
+                for &n in &[7usize, 24, 33] {
+                    let batch = proportion_batch(n, 9, density, 17 + n as u64);
+                    let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+                    let total = crate::matrix::total_stripes(n);
+                    let mut want = StripeBlock::new(n, 0, total);
+                    tiled.apply(metric, &batch, &mut want);
+                    let mut csr = CsrBatch::new();
+                    csr.build(metric, &batch);
+                    let mut got = StripeBlock::new(n, 0, total);
+                    csr.apply(metric, &mut got);
+                    let diff = want.max_abs_diff(&got);
+                    assert!(diff < 1e-12, "{metric} density={density} n={n}: diff {diff}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csr_matches_tiled_on_partial_blocks() {
+        // worker-style sub-ranges exercise the window arithmetic
+        let n = 26;
+        let batch = proportion_batch(n, 6, 0.15, 5);
+        for (start, count) in [(0usize, 4usize), (3, 7), (9, 4), (12, 1)] {
+            let metric = Metric::WeightedNormalized;
+            let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+            let mut want = StripeBlock::new(n, start, count);
+            tiled.apply(metric, &batch, &mut want);
+            let mut csr = CsrBatch::new();
+            csr.build(metric, &batch);
+            let mut got = StripeBlock::new(n, start, count);
+            csr.apply(metric, &mut got);
+            let diff = want.max_abs_diff(&got);
+            assert!(diff < 1e-12, "start={start} count={count}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn even_n_final_stripe_double_visit_matches() {
+        // n even: the last stripe visits each pair twice in the dense
+        // engines; a fully dense batch maximizes the overlap
+        let n = 8;
+        let batch = proportion_batch(n, 4, 1.0, 3);
+        let metric = Metric::WeightedNormalized;
+        let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+        let mut want = StripeBlock::new(n, 0, n / 2);
+        tiled.apply(metric, &batch, &mut want);
+        let mut csr = CsrBatch::new();
+        csr.build(metric, &batch);
+        let mut got = StripeBlock::new(n, 0, n / 2);
+        csr.apply(metric, &mut got);
+        assert!(want.max_abs_diff(&got) < 1e-12);
+    }
+
+    #[test]
+    fn engine_accumulates_across_batches_and_counts() {
+        let n = 16;
+        let eng = SparseEngine::<f64>::new();
+        let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+        let mut got = StripeBlock::new(n, 1, 4);
+        let mut want = StripeBlock::new(n, 1, 4);
+        for seed in 0..3 {
+            let b = proportion_batch(n, 10, 0.1, 60 + seed);
+            eng.apply_sparse(Metric::WeightedNormalized, &b, &mut got);
+            tiled.apply(Metric::WeightedNormalized, &b, &mut want);
+        }
+        assert!(want.max_abs_diff(&got) < 1e-12);
+        let stats = eng.drain_stats();
+        assert!(stats.csr_nnz > 0);
+        assert_eq!(stats.csr_cells, 3 * 10 * n as u64);
+        assert_eq!(stats.rows_sparse + stats.rows_dense, 30);
+        assert!(stats.csr_density() > 0.0 && stats.csr_density() < 1.0);
+        // stats drained
+        assert_eq!(eng.drain_stats(), EngineStats::default());
+    }
+
+    #[test]
+    fn prepare_builds_once_for_many_blocks() {
+        let n = 16;
+        let batch = proportion_batch(n, 12, 0.2, 99);
+        let eng = SparseEngine::<f64>::new();
+        eng.prepare_sparse(Metric::WeightedNormalized, &batch);
+        let mut b0 = StripeBlock::new(n, 0, 3);
+        let mut b1 = StripeBlock::new(n, 3, 5);
+        eng.apply_prepared_sparse(Metric::WeightedNormalized, &batch, &mut b0);
+        eng.apply_prepared_sparse(Metric::WeightedNormalized, &batch, &mut b1);
+        // one build despite two folds
+        let stats = eng.drain_stats();
+        assert_eq!(stats.rows_sparse + stats.rows_dense, 12);
+        // results match the stateless fold
+        let direct = SparseEngine::<f64>::new();
+        let mut w0 = StripeBlock::new(n, 0, 3);
+        let mut w1 = StripeBlock::new(n, 3, 5);
+        direct.apply_sparse(Metric::WeightedNormalized, &batch, &mut w0);
+        direct.apply_sparse(Metric::WeightedNormalized, &batch, &mut w1);
+        assert!(w0.max_abs_diff(&b0) < 1e-15);
+        assert!(w1.max_abs_diff(&b1) < 1e-15);
+        // stateless applies rebuild per call
+        let dstats = direct.drain_stats();
+        assert_eq!(dstats.rows_sparse + dstats.rows_dense, 2 * 12);
+        // a different metric on the same batch must not reuse the tables
+        let mixed = SparseEngine::<f64>::new();
+        mixed.prepare_sparse(Metric::WeightedNormalized, &batch);
+        let mut c0 = StripeBlock::new(n, 0, 3);
+        mixed.apply_prepared_sparse(Metric::WeightedUnnormalized, &batch, &mut c0);
+        let tiled = make_engine::<f64>(EngineKind::Tiled, 8);
+        let mut t0 = StripeBlock::new(n, 0, 3);
+        tiled.apply(Metric::WeightedUnnormalized, &batch, &mut t0);
+        assert!(c0.max_abs_diff(&t0) < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let n = 8;
+        let batch = EmbBatch::<f64>::new(n, 4); // filled == 0
+        let eng = SparseEngine::<f64>::new();
+        let mut blk = StripeBlock::new(n, 0, 2);
+        eng.apply_sparse(Metric::WeightedNormalized, &batch, &mut blk);
+        assert_eq!(blk.max_abs_diff(&StripeBlock::new(n, 0, 2)), 0.0);
+        assert_eq!(eng.drain_stats(), EngineStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "weighted")]
+    fn engine_rejects_unweighted_metric() {
+        let eng = SparseEngine::<f64>::new();
+        let b = proportion_batch(8, 4, 0.3, 1);
+        let mut blk = StripeBlock::new(8, 0, 1);
+        eng.apply_sparse(Metric::Unweighted, &b, &mut blk);
+    }
+
+    #[test]
+    fn f32_close_to_f64() {
+        let n = 24;
+        let b64 = proportion_batch(n, 6, 0.2, 11);
+        let b32 = EmbBatch::<f32> {
+            n_samples: n,
+            filled: 6,
+            capacity: 6,
+            emb: b64.emb.iter().map(|&x| x as f32).collect(),
+            lengths: b64.lengths.iter().map(|&x| x as f32).collect(),
+        };
+        let mut csr64 = CsrBatch::<f64>::new();
+        let mut csr32 = CsrBatch::<f32>::new();
+        csr64.build(Metric::WeightedNormalized, &b64);
+        csr32.build(Metric::WeightedNormalized, &b32);
+        let mut blk64 = StripeBlock::<f64>::new(n, 0, 6);
+        let mut blk32 = StripeBlock::<f32>::new(n, 0, 6);
+        csr64.apply(Metric::WeightedNormalized, &mut blk64);
+        csr32.apply(Metric::WeightedNormalized, &mut blk32);
+        for (a, b) in blk64.num.iter().zip(&blk32.num) {
+            assert!((a - *b as f64).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -55,7 +55,8 @@ fn coordinator_pjrt_matches_cpu_all_modes() {
     if !dir.join("manifest.json").exists() {
         return;
     }
-    let (tree, table) = SynthSpec { n_samples: 40, n_features: 256, ..Default::default() }.generate();
+    let (tree, table) =
+        SynthSpec { n_samples: 40, n_features: 256, ..Default::default() }.generate();
     let cpu = run::<f64>(
         &tree,
         &table,
@@ -84,7 +85,8 @@ fn coordinator_pjrt_multichip_parallel() {
     if !dir.join("manifest.json").exists() {
         return;
     }
-    let (tree, table) = SynthSpec { n_samples: 32, n_features: 128, ..Default::default() }.generate();
+    let (tree, table) =
+        SynthSpec { n_samples: 32, n_features: 128, ..Default::default() }.generate();
     let cpu = run::<f64>(
         &tree,
         &table,

@@ -164,9 +164,10 @@ fn prop_engine_consistency_sweep() {
         let metric = Metric::all(0.5)[rng.below(4)];
         let base = compute(&tree, &table, metric);
         // draw an engine compatible with the metric (packed is
-        // unweighted-only)
+        // unweighted-only, sparse is weighted-only)
         let engine = loop {
-            let k = EngineKind::all()[rng.below(5)];
+            let all = EngineKind::all();
+            let k = all[rng.below(all.len())];
             if k.supports(metric) {
                 break k;
             }

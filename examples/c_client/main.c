@@ -1,0 +1,118 @@
+/* c_client — end-to-end consumer of the UniFrac C shared library.
+ *
+ * Computes a distance matrix via ssu_one_off, recomputes it as three
+ * stripe partials (round-tripping one through save/load), merges them,
+ * verifies the merge is exactly equal to the one-shot run, and writes
+ * the matrix as TSV (byte-identical to the Rust CLI's --output).
+ *
+ * Build (from the repo root, after `cargo build --release` in rust/):
+ *   cc -O2 -Wall -Werror examples/c_client/main.c \
+ *      -Iinclude -Lrust/target/release -lunifrac -lm -o c_client
+ * Run:
+ *   LD_LIBRARY_PATH=rust/target/release \
+ *     ./c_client table.tsv tree.nwk weighted_normalized out.tsv
+ */
+
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+
+#include "unifrac.h"
+
+#define N_PARTIALS 3
+
+static int die(const char *what, int rc) {
+  fprintf(stderr, "c_client: %s failed: %s (code %d: %s)\n", what,
+          ssu_last_error(), rc, ssu_error_name(rc));
+  return 1;
+}
+
+int main(int argc, char **argv) {
+  if (argc != 5) {
+    fprintf(stderr,
+            "usage: %s TABLE.tsv TREE.nwk METRIC OUT.tsv\n"
+            "  METRIC: unweighted | weighted_normalized | "
+            "weighted_unnormalized | generalized\n",
+            argv[0]);
+    return 2;
+  }
+  const char *table = argv[1];
+  const char *tree = argv[2];
+  const char *metric = argv[3];
+  const char *out_tsv = argv[4];
+
+  printf("c_client: %s\n", ssu_version());
+
+  /* ---- one_off: the full matrix in one call ---- */
+  SsuMatrix *full = NULL;
+  int rc = ssu_one_off(table, tree, metric, 1.0, /*fp32=*/0, /*threads=*/1,
+                       &full);
+  if (rc != SSU_OK) return die("ssu_one_off", rc);
+  unsigned n = ssu_matrix_n_samples(full);
+  printf("c_client: one_off ok — %u samples, d(%s,%s) = %.6f\n", n,
+         ssu_matrix_sample_id(full, 0), ssu_matrix_sample_id(full, 1),
+         ssu_matrix_get(full, 0, 1));
+
+  /* ---- partial: the same job as N independent stripe splits ---- */
+  SsuPartial *parts[N_PARTIALS] = {0};
+  for (unsigned i = 0; i < N_PARTIALS; i++) {
+    rc = ssu_partial(table, tree, metric, 1.0, 0, 1, i, N_PARTIALS,
+                     &parts[i]);
+    if (rc != SSU_OK) return die("ssu_partial", rc);
+    printf("c_client: partial %u/%u covers stripes %u..+%u\n", i, N_PARTIALS,
+           ssu_partial_stripe_start(parts[i]),
+           ssu_partial_stripe_count(parts[i]));
+  }
+
+  /* persist one partial and reload it — the cross-machine path */
+  const char *part_path = "c_client_partial.bin";
+  rc = ssu_partial_save(parts[1], part_path);
+  if (rc != SSU_OK) return die("ssu_partial_save", rc);
+  ssu_partial_free(parts[1]);
+  parts[1] = NULL;
+  rc = ssu_partial_load(part_path, &parts[1]);
+  if (rc != SSU_OK) return die("ssu_partial_load", rc);
+  remove(part_path);
+
+  /* ---- merge and verify: exactly equal to one_off ---- */
+  SsuMatrix *merged = NULL;
+  rc = ssu_merge_partials((const SsuPartial *const *)parts, N_PARTIALS,
+                          &merged);
+  if (rc != SSU_OK) return die("ssu_merge_partials", rc);
+  double max_diff = 0.0;
+  for (unsigned i = 0; i < n; i++) {
+    for (unsigned j = 0; j < n; j++) {
+      double d = ssu_matrix_get(full, i, j) - ssu_matrix_get(merged, i, j);
+      if (d < 0) d = -d;
+      if (d > max_diff) max_diff = d;
+    }
+  }
+  printf("c_client: merge vs one_off max |diff| = %g\n", max_diff);
+  if (max_diff != 0.0) {
+    fprintf(stderr, "c_client: FAIL — merged partials differ from one_off\n");
+    return 1;
+  }
+
+  /* a merge with a hole must be rejected with the merge status code */
+  SsuMatrix *bad = NULL;
+  rc = ssu_merge_partials((const SsuPartial *const *)parts, N_PARTIALS - 1,
+                          &bad);
+  if (rc != SSU_ERR_MERGE) {
+    fprintf(stderr, "c_client: FAIL — gap merge returned %d, want %d\n", rc,
+            SSU_ERR_MERGE);
+    return 1;
+  }
+  printf("c_client: gap rejected as expected (%s: %s)\n", ssu_error_name(rc),
+         ssu_last_error());
+
+  /* ---- write the TSV for the CI diff against the Rust CLI ---- */
+  rc = ssu_matrix_write_tsv(merged, out_tsv);
+  if (rc != SSU_OK) return die("ssu_matrix_write_tsv", rc);
+  printf("c_client: wrote %s\n", out_tsv);
+
+  for (unsigned i = 0; i < N_PARTIALS; i++) ssu_partial_free(parts[i]);
+  ssu_matrix_free(full);
+  ssu_matrix_free(merged);
+  printf("c_client: OK\n");
+  return 0;
+}

@@ -1,16 +1,18 @@
-//! Table-2 style distributed run: partition the stripe set over many
-//! simulated chips, time each in isolation, and compare the observed
-//! per-chip/aggregated split against the device models.
+//! Table-2 style distributed run through the `UniFracJob` facade:
+//! partition the stripe set over many simulated chips, time each in
+//! isolation, demonstrate the partial/merge lifecycle that splits the
+//! same job across *processes or machines*, and compare against the
+//! device models.
 //!
 //! ```bash
 //! cargo run --release --example distributed_chips [n_samples] [chips]
 //! ```
 
-use unifrac::coordinator::{run, BackendSpec, RunOptions};
 use unifrac::devicemodel::{predict_seconds, stage_workload, Dtype, V100, XEON_E5_2680V4};
 use unifrac::matrix::total_stripes;
 use unifrac::synth::SynthSpec;
-use unifrac::unifrac::{EngineKind, Metric};
+use unifrac::unifrac::EngineKind;
+use unifrac::{merge_partials, Metric, UniFracJob};
 
 fn main() -> unifrac::Result<()> {
     let mut args = std::env::args().skip(1);
@@ -26,41 +28,69 @@ fn main() -> unifrac::Result<()> {
     );
 
     // sequential mode = isolated per-chip timing (the paper's Table 2 rows)
-    let opts = RunOptions {
-        metric: Metric::WeightedNormalized,
-        backend: BackendSpec::cpu_tiled(),
-        chips,
-        parallel: false,
-        artifacts_dir: None,
-        ..Default::default()
-    };
-    let seq = run::<f64>(&tree, &table, &opts)?;
+    let seq = UniFracJob::new(&tree, &table)
+        .metric(Metric::WeightedNormalized)
+        .chips(chips)
+        .parallel(false)
+        .run_output()?;
     println!("\nsequential (isolated chips):");
     let per: &[f64] = &seq.metrics.per_chip_seconds;
     let mean = per.iter().sum::<f64>() / per.len() as f64;
     let max = seq.metrics.max_chip_seconds();
     println!("  per-chip mean {:.3}s  max {:.3}s", mean, max);
-    println!("  aggregated    {:.3}s (the paper's chip-hours analogue)", seq.metrics.aggregate_chip_seconds());
-    let imbalance = max / mean;
-    println!("  load imbalance (max/mean) = {imbalance:.3}");
+    println!(
+        "  aggregated    {:.3}s (the paper's chip-hours analogue)",
+        seq.metrics.aggregate_chip_seconds()
+    );
+    println!("  load imbalance (max/mean) = {:.3}", max / mean);
 
     // parallel mode: actual wall-clock speedup on this host
-    let par = run::<f64>(&tree, &table, &RunOptions { parallel: true, ..opts.clone() })?;
+    let par = UniFracJob::new(&tree, &table)
+        .metric(Metric::WeightedNormalized)
+        .chips(chips)
+        .parallel(true)
+        .run_output()?;
     println!("\nparallel (threaded chips):");
-    println!("  wall {:.3}s  vs sequential aggregate {:.3}s  => speedup {:.2}x",
+    println!(
+        "  wall {:.3}s  vs sequential aggregate {:.3}s  => speedup {:.2}x",
         par.metrics.seconds_total,
         seq.metrics.aggregate_chip_seconds(),
         seq.metrics.aggregate_chip_seconds() / par.metrics.seconds_total
     );
     assert!(par.dm.max_abs_diff(&seq.dm) < 1e-12, "parallel/sequential mismatch");
 
+    // the cross-machine version of the same split: each "chip" computes
+    // a stripe partial (serializable — ship it anywhere), the leader
+    // merges; bit-identical to the in-process run
+    let part_job = UniFracJob::new(&tree, &table).metric(Metric::WeightedNormalized);
+    let parts = (0..chips)
+        .map(|i| part_job.run_partial_index(i, chips))
+        .collect::<unifrac::Result<Vec<_>>>()?;
+    let merged = merge_partials(&parts)?;
+    let reference = part_job.run()?;
+    println!("\npartial/merge over {} ranges:", parts.len());
+    println!(
+        "  merged vs one-shot max |diff| = {:e} (exact by construction)",
+        merged.max_abs_diff(&reference)
+    );
+    assert_eq!(merged.max_abs_diff(&reference), 0.0);
+
     // device-model view of the same partitioning at paper scale
     println!("\ndevice-model projection (113,721 samples, per the paper's Table 2):");
-    let (big_n, big_t) = (unifrac::devicemodel::BIG_N_SAMPLES, unifrac::devicemodel::BIG_TREE_NODES);
+    let (big_n, big_t) =
+        (unifrac::devicemodel::BIG_N_SAMPLES, unifrac::devicemodel::BIG_TREE_NODES);
     let w = stage_workload(EngineKind::Tiled, big_n, total_stripes(big_n), big_t, 64, Dtype::F64);
     let cpu_h = predict_seconds(&XEON_E5_2680V4, &w, Dtype::F64) / 3600.0;
     let gpu_h = predict_seconds(&V100, &w, Dtype::F64) / 3600.0;
-    println!("  128x E5-2680v4: per-chip {:.2}h aggregated {:.0}h (paper 6.9 / 890 — original code)", cpu_h / 128.0, cpu_h);
-    println!("  4x V100:        per-chip {:.2}h aggregated {:.1}h (paper 0.34 / 1.9)", gpu_h / 4.0, gpu_h);
+    println!(
+        "  128x E5-2680v4: per-chip {:.2}h aggregated {:.0}h (paper 6.9 / 890 — original code)",
+        cpu_h / 128.0,
+        cpu_h
+    );
+    println!(
+        "  4x V100:        per-chip {:.2}h aggregated {:.1}h (paper 0.34 / 1.9)",
+        gpu_h / 4.0,
+        gpu_h
+    );
     Ok(())
 }

@@ -1,5 +1,6 @@
 //! End-to-end driver: the full three-layer stack on an EMP-shaped
-//! workload (DESIGN.md: the mandated e2e validation run).
+//! workload (DESIGN.md: the mandated e2e validation run), driven
+//! entirely through the `UniFracJob` facade.
 //!
 //! Pipeline exercised, in order:
 //!   1. synthetic EMP-like dataset (substitute for the EMP release);
@@ -19,10 +20,10 @@
 //! make artifacts && cargo run --release --example emp_endtoend
 //! ```
 
-use unifrac::coordinator::{run, BackendSpec, RunOptions};
 use unifrac::stats::{mantel, pcoa, permanova};
 use unifrac::synth::SynthSpec;
-use unifrac::unifrac::{compute_unifrac, compute_unifrac_naive, ComputeOptions, Metric};
+use unifrac::unifrac::compute_unifrac_naive;
+use unifrac::{Backend, Metric, UniFracJob};
 
 fn main() -> unifrac::Result<()> {
     let artifacts = std::path::PathBuf::from(
@@ -48,16 +49,11 @@ fn main() -> unifrac::Result<()> {
 
     // --- full stack through PJRT (pallas kernel artifact, resident) ---
     let t0 = std::time::Instant::now();
-    let out = run::<f64>(
-        &tree,
-        &table,
-        &RunOptions {
-            metric,
-            backend: BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: true },
-            artifacts_dir: Some(artifacts.clone()),
-            ..Default::default()
-        },
-    )?;
+    let out = UniFracJob::new(&tree, &table)
+        .metric(metric)
+        .backend(Backend::Pjrt { artifact: "pallas_tiled".into(), resident: true })
+        .artifacts_dir(artifacts.clone())
+        .run_output()?;
     let pjrt_secs = t0.elapsed().as_secs_f64();
     println!(
         "== PJRT/pallas run: {:.2}s wall, artifact {}, {} embeddings in {} batches, {:.3e} updates/s",
@@ -70,27 +66,18 @@ fn main() -> unifrac::Result<()> {
 
     // --- the jnp-engine artifact (same L2 graph, no pallas) ---
     let t1 = std::time::Instant::now();
-    let out_jnp = run::<f64>(
-        &tree,
-        &table,
-        &RunOptions {
-            metric,
-            backend: BackendSpec::Pjrt { engine: "jnp".into(), resident: true },
-            artifacts_dir: Some(artifacts),
-            ..Default::default()
-        },
-    )?;
+    let out_jnp = UniFracJob::new(&tree, &table)
+        .metric(metric)
+        .backend(Backend::Pjrt { artifact: "jnp".into(), resident: true })
+        .artifacts_dir(artifacts)
+        .run_output()?;
     println!(
         "== PJRT/jnp run:    {:.2}s wall (same HLO interface, XLA-fused formulation)",
         t1.elapsed().as_secs_f64()
     );
 
     // --- independent CPU engine + naive oracle cross-checks ---
-    let cpu = compute_unifrac::<f64>(
-        &tree,
-        &table,
-        &ComputeOptions { metric, threads: 0, ..Default::default() },
-    )?;
+    let cpu = UniFracJob::new(&tree, &table).metric(metric).threads(0).run()?;
     let naive = compute_unifrac_naive(&tree, &table, metric)?;
     let d_pjrt_cpu = out.dm.max_abs_diff(&cpu);
     let d_pjrt_jnp = out.dm.max_abs_diff(&out_jnp.dm);

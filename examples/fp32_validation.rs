@@ -1,5 +1,6 @@
 //! Paper §4 reproduction: fp32 vs fp64 UniFrac are statistically
-//! identical (the paper reports Mantel R² = 0.99999, p < 0.001 on EMP).
+//! identical (the paper reports Mantel R² = 0.99999, p < 0.001 on EMP),
+//! driven through the `UniFracJob` facade's precision axis.
 //!
 //! The synthetic workload uses a large log-normal sigma so per-cell
 //! counts span ~6 orders of magnitude — the "high dynamic range" case
@@ -11,8 +12,8 @@
 
 use unifrac::stats::{mantel, pcoa};
 use unifrac::synth::SynthSpec;
-use unifrac::unifrac::{compute_unifrac, ComputeOptions, Metric};
 use unifrac::util::pearson;
+use unifrac::{FpWidth, Metric, UniFracJob};
 
 fn main() -> unifrac::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(192);
@@ -33,9 +34,15 @@ fn main() -> unifrac::Result<()> {
     );
 
     for metric in [Metric::Unweighted, Metric::WeightedNormalized, Metric::Generalized(0.5)] {
-        let opts = ComputeOptions { metric, threads: 0, ..Default::default() };
-        let d64 = compute_unifrac::<f64>(&tree, &table, &opts)?;
-        let d32 = compute_unifrac::<f32>(&tree, &table, &opts)?;
+        // same job, both precisions — FpWidth is a first-class knob on
+        // the facade, so no generic plumbing leaks into user code
+        let job = UniFracJob::new(&tree, &table).metric(metric).threads(0);
+        let d64 = job.run()?;
+        let d32 = UniFracJob::new(&tree, &table)
+            .metric(metric)
+            .threads(0)
+            .precision(FpWidth::F32)
+            .run()?;
 
         let res = mantel(&d64, &d32, 999, 11);
         let max_diff = d64.max_abs_diff(&d32);

@@ -1,4 +1,5 @@
-//! Quickstart: compute UniFrac on a small synthetic microbiome workload.
+//! Quickstart: compute UniFrac on a small synthetic microbiome workload
+//! through the `UniFracJob` facade.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -6,7 +7,7 @@
 
 use unifrac::stats::pcoa;
 use unifrac::synth::SynthSpec;
-use unifrac::unifrac::{compute_unifrac, ComputeOptions, Metric};
+use unifrac::{Metric, UniFracJob};
 
 fn main() -> unifrac::Result<()> {
     // 1. A synthetic workload: 64 samples, EMP-like sparsity. Real data
@@ -20,14 +21,15 @@ fn main() -> unifrac::Result<()> {
         tree.n_nodes()
     );
 
-    // 2. Compute three UniFrac variants with the optimized CPU engine.
+    // 2. Compute three UniFrac variants. `UniFracJob` auto-selects the
+    //    engine per metric (bit-packed for unweighted, sparse CSR or
+    //    tiled for weighted, by measured density).
     for metric in [
         Metric::Unweighted,
         Metric::WeightedNormalized,
         Metric::Generalized(0.5),
     ] {
-        let opts = ComputeOptions { metric, threads: 0, ..Default::default() };
-        let dm = compute_unifrac::<f64>(&tree, &table, &opts)?;
+        let dm = UniFracJob::new(&tree, &table).metric(metric).threads(0).run()?;
         println!(
             "{metric}: d(0,1) = {:.4}, d(0,2) = {:.4}, mean = {:.4}",
             dm.get(0, 1),
@@ -36,10 +38,18 @@ fn main() -> unifrac::Result<()> {
         );
     }
 
-    // 3. Downstream ordination (what EMP-style studies do with UniFrac).
-    let opts = ComputeOptions { metric: Metric::WeightedNormalized, ..Default::default() };
-    let dm = compute_unifrac::<f64>(&tree, &table, &opts)?;
-    let ord = pcoa(&dm, 3, 1);
+    // 3. Downstream ordination (what EMP-style studies do with UniFrac),
+    //    with the run accounting the facade surfaces alongside.
+    let out = UniFracJob::new(&tree, &table)
+        .metric(Metric::WeightedNormalized)
+        .run_output()?;
+    println!(
+        "engine {} over {} stripes, {:.3e} updates/s",
+        out.metrics.backend,
+        out.metrics.n_stripes,
+        out.metrics.updates_per_second()
+    );
+    let ord = pcoa(&out.dm, 3, 1);
     println!(
         "PCoA: {} axes, leading axis explains {:.1}% of inertia",
         ord.eigenvalues.len(),
@@ -47,8 +57,8 @@ fn main() -> unifrac::Result<()> {
     );
 
     // 4. Persist the matrix in the standard square-TSV layout.
-    let out = std::env::temp_dir().join("quickstart_unifrac.tsv");
-    dm.write_tsv(&out)?;
-    println!("wrote {}", out.display());
+    let out_path = std::env::temp_dir().join("quickstart_unifrac.tsv");
+    out.dm.write_tsv(&out_path)?;
+    println!("wrote {}", out_path.display());
     Ok(())
 }

@@ -1,0 +1,112 @@
+/* unifrac.h — C ABI for the Striped UniFrac shared library.
+ *
+ * Built from the Rust crate with `cargo build --release` (the crate is
+ * a `cdylib`; the library lands at rust/target/release/libunifrac.so /
+ * .dylib). Link with `-lunifrac` and any language's FFI.
+ *
+ * Mirrors the reference implementation's entry points: ssu_one_off
+ * (full matrix), ssu_partial (one stripe partial of N),
+ * ssu_merge_partials (reassemble), plus persistence and accessors.
+ *
+ * Contract:
+ *   - Fallible functions return an int status: 0 on success, otherwise
+ *     a stable per-error-class code (see SSU_* below; 99 = a panic was
+ *     caught at the boundary — never propagated into the caller).
+ *   - Results come back through opaque handles written to the out
+ *     pointer only on success. Free them with ssu_matrix_free /
+ *     ssu_partial_free.
+ *   - ssu_last_error() returns the calling thread's most recent
+ *     failure message (valid until the next failing call).
+ */
+
+#ifndef UNIFRAC_H
+#define UNIFRAC_H
+
+#include <stddef.h>
+
+#ifdef __cplusplus
+extern "C" {
+#endif
+
+/* ---- status codes (stable; shared with the CLI's exit codes) ---- */
+#define SSU_OK 0
+#define SSU_ERR_IO 10
+#define SSU_ERR_NEWICK 11
+#define SSU_ERR_TABLE 12
+#define SSU_ERR_CONFIG 13
+#define SSU_ERR_MANIFEST 14
+#define SSU_ERR_SHAPE 15
+#define SSU_ERR_NO_ARTIFACT 16
+#define SSU_ERR_XLA 17
+#define SSU_ERR_INVALID 18
+#define SSU_ERR_CLI 19
+#define SSU_ERR_UNSUPPORTED 20
+#define SSU_ERR_MERGE 21
+#define SSU_ERR_PANIC 99
+
+/* ---- opaque handles ---- */
+typedef struct SsuMatrix SsuMatrix;   /* condensed distance matrix */
+typedef struct SsuPartial SsuPartial; /* one computed stripe subrange */
+
+/* ---- computation ---- */
+
+/* Full UniFrac distance matrix ("one_off").
+ *   table_path     feature table (.tsv, or the binary .bin format)
+ *   tree_path      Newick tree
+ *   unifrac_method "unweighted" | "weighted_normalized" |
+ *                  "weighted_unnormalized" | "generalized"
+ *   alpha          generalized-UniFrac exponent (ignored otherwise)
+ *   fp32           nonzero computes in single precision
+ *   threads        worker threads (0 = all cores)
+ *   out            receives a fresh handle on success
+ */
+int ssu_one_off(const char *table_path, const char *tree_path,
+                const char *unifrac_method, double alpha, int fp32,
+                unsigned threads, SsuMatrix **out);
+
+/* One stripe partial: the partial_index-th of n_partials equal splits
+ * of the stripe space. Partials of the same problem/options merge
+ * bit-identically to ssu_one_off. Run each on its own process or
+ * machine, persist with ssu_partial_save, merge anywhere. */
+int ssu_partial(const char *table_path, const char *tree_path,
+                const char *unifrac_method, double alpha, int fp32,
+                unsigned threads, unsigned partial_index,
+                unsigned n_partials, SsuPartial **out);
+
+/* Merge partials into the full matrix. Rejects gaps, overlaps and
+ * metadata mismatches with SSU_ERR_MERGE. Inputs are not consumed. */
+int ssu_merge_partials(const SsuPartial *const *parts, size_t n_parts,
+                       SsuMatrix **out);
+
+/* ---- partial persistence / introspection ---- */
+int ssu_partial_save(const SsuPartial *p, const char *path);
+int ssu_partial_load(const char *path, SsuPartial **out);
+unsigned ssu_partial_stripe_start(const SsuPartial *p);
+unsigned ssu_partial_stripe_count(const SsuPartial *p);
+
+/* ---- matrix accessors ---- */
+unsigned ssu_matrix_n_samples(const SsuMatrix *m);
+/* Distance (NaN on bad handle/indices; diagonal is 0). */
+double ssu_matrix_get(const SsuMatrix *m, unsigned i, unsigned j);
+/* Sample id; owned by the handle, valid until ssu_matrix_free. */
+const char *ssu_matrix_sample_id(const SsuMatrix *m, unsigned i);
+/* Condensed upper-triangle vector, pair order (0,1), (0,2), ... */
+size_t ssu_matrix_condensed_len(const SsuMatrix *m);
+int ssu_matrix_condensed(const SsuMatrix *m, double *buf, size_t buf_len);
+/* Standard square TSV — same formatter as the Rust CLI's --output. */
+int ssu_matrix_write_tsv(const SsuMatrix *m, const char *path);
+
+/* ---- lifecycle / diagnostics ---- */
+void ssu_matrix_free(SsuMatrix *m);
+void ssu_partial_free(SsuPartial *p);
+/* Calling thread's most recent failure message. */
+const char *ssu_last_error(void);
+/* Static name for a status code ("ok", "merge", "panic", ...). */
+const char *ssu_error_name(int code);
+const char *ssu_version(void);
+
+#ifdef __cplusplus
+} /* extern "C" */
+#endif
+
+#endif /* UNIFRAC_H */

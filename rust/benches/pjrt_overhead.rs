@@ -4,7 +4,7 @@
 //!
 //! This is the bench behind EXPERIMENTS.md §Perf (L3).
 
-use unifrac::coordinator::{run, BackendSpec, RunOptions};
+use unifrac::coordinator::{run, Backend, RunOptions};
 use unifrac::synth::SynthSpec;
 use unifrac::unifrac::{compute_unifrac_report, ComputeOptions, Metric};
 
@@ -26,7 +26,7 @@ fn main() {
     println!("{:<28} {:>9} {:>14}", "configuration", "seconds", "updates/s");
     println!("{}", "-".repeat(55));
 
-    for (label, engine, resident) in [
+    for (label, artifact, resident) in [
         ("pallas_tiled one-shot", "pallas_tiled", false),
         ("pallas_tiled resident", "pallas_tiled", true),
         ("jnp one-shot", "jnp", false),
@@ -34,7 +34,7 @@ fn main() {
     ] {
         let opts = RunOptions {
             metric: Metric::WeightedNormalized,
-            backend: BackendSpec::Pjrt { engine: engine.into(), resident },
+            backend: Backend::Pjrt { artifact: artifact.into(), resident },
             artifacts_dir: Some(artifacts.clone()),
             ..Default::default()
         };

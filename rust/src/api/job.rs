@@ -1,0 +1,704 @@
+//! The canonical job description ([`JobSpec`]) and the public facade
+//! ([`UniFracJob`]) that lowers it onto the execution layers.
+
+use super::partial::{PartialData, PartialMeta, PartialResult};
+use crate::coordinator::{BackendSpec, RunMetrics, RunOutput};
+use crate::error::{Error, Result};
+use crate::exec::{split_ranges, DriveSpec, SchedulerKind, WorkerBuild, WorkerSpec};
+use crate::matrix::StripeBlock;
+use crate::runtime::XlaReal;
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::unifrac::compute::packed_direct_block;
+use crate::unifrac::{compute_unifrac_report, ComputeReport, EngineKind, Metric};
+use std::path::PathBuf;
+
+/// Floating-point width of a run — the paper's fp32/fp64 axis, carried
+/// as a runtime value so precision-agnostic entry points (CLI, C ABI,
+/// [`UniFracJob::run`]) can dispatch to the monomorphized engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpWidth {
+    F32,
+    F64,
+}
+
+impl FpWidth {
+    pub fn name(self) -> &'static str {
+        match self {
+            FpWidth::F32 => "f32",
+            FpWidth::F64 => "f64",
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            FpWidth::F32 => 4,
+            FpWidth::F64 => 8,
+        }
+    }
+
+    /// Accepts the CLI/config spellings (`f32`/`fp32`/`float32`, …).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "fp32" | "float32" => Some(FpWidth::F32),
+            "f64" | "fp64" | "float64" => Some(FpWidth::F64),
+            _ => None,
+        }
+    }
+}
+
+/// Which execution substrate runs the stripe updates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust CPU engines (selected via [`JobSpec::engine`]).
+    Cpu,
+    /// AOT artifact via PJRT; `artifact` selects the flavor (e.g.
+    /// `"pallas_tiled"`, `"jnp"`), `resident` keeps accumulators
+    /// device-side between batches.
+    Pjrt { artifact: String, resident: bool },
+}
+
+/// The one canonical request type every entry point consumes.
+///
+/// Before the `UniFracJob` redesign the same knobs were smeared over
+/// four overlapping structs (`ComputeOptions` → `RunConfig` →
+/// `RunOptions` → `WorkerSpec`) with hand-copied plumbing at every hop.
+/// `JobSpec` is now the single source of truth: the CLI/config layer
+/// parses straight into it (`RunConfig::to_job`), `coordinator::run`
+/// and `unifrac::compute_unifrac` consume it directly, and the exec
+/// layer receives per-worker [`WorkerSpec`]s lowered from it in exactly
+/// one place. `unifrac::ComputeOptions` and `coordinator::RunOptions`
+/// survive only as type aliases of this struct.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub metric: Metric,
+    /// Floating-point width for precision-agnostic entry points
+    /// ([`UniFracJob::run`], the CLI, the C ABI). The typed entry
+    /// points (`compute_unifrac::<R>`, `coordinator::run::<R>`) ignore
+    /// it — their `R` parameter is the width.
+    pub precision: FpWidth,
+    /// Execution substrate. [`Backend::Cpu`] (default) runs the rust
+    /// stripe engines; [`Backend::Pjrt`] runs an AOT artifact.
+    pub backend: Backend,
+    /// CPU stripe engine. `None` = auto: the bit-packed kernel for
+    /// [`Metric::Unweighted`] (presence bits + byte-LUT branch
+    /// folding); weighted metrics are density-aware — the sparse CSR
+    /// kernel when the estimated mean embedding-row density falls below
+    /// [`JobSpec::sparse_threshold`], `Tiled` otherwise.
+    pub engine: Option<EngineKind>,
+    /// Embedding-row density below which auto-selection picks the
+    /// sparse CSR kernel for weighted metrics (`--sparse-threshold`).
+    pub sparse_threshold: f64,
+    /// Tiled engine's `step_size` (paper Figure 3).
+    pub block_k: usize,
+    /// Embedding rows per batch (paper Figure 2's `filled_embs`).
+    pub batch_capacity: usize,
+    /// Worker threads for the single-node CPU driver (stripe-range
+    /// parallelism). 0 = available cores.
+    pub threads: usize,
+    /// Simulated chips (stripe-range partitions) for the coordinator
+    /// path; `<= 1` runs the single-node driver.
+    pub chips: usize,
+    /// Run chips concurrently on threads (true) or one after another
+    /// while timing each (false — the Table-2 measurement mode).
+    pub parallel: bool,
+    /// Pad the sample axis to a multiple of this (alignment, §3).
+    pub pad_quantum: usize,
+    /// Bounded queue depth per worker (backpressure).
+    pub queue_depth: usize,
+    /// Stripe scheduling strategy (static ranges / dynamic stealing).
+    pub scheduler: SchedulerKind,
+    /// Recycled batch buffers kept by the pool; 0 disables pooling.
+    pub pool_depth: usize,
+    /// Dynamic steal-task granularity in stripes; 0 = auto.
+    pub chunk_stripes: usize,
+    /// Stripe subrange `(start, count)` for partial computation —
+    /// consumed by [`UniFracJob::run_partial`]. A full
+    /// [`UniFracJob::run`] *rejects* a set range (instead of silently
+    /// computing everything) to keep the two entry points honest.
+    pub stripe_range: Option<(usize, usize)>,
+    /// Where the AOT artifacts live (PJRT backends).
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            metric: Metric::WeightedNormalized,
+            precision: FpWidth::F64,
+            backend: Backend::Cpu,
+            engine: None,
+            sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
+            block_k: 64,
+            batch_capacity: 32,
+            threads: 1,
+            chips: 1,
+            parallel: true,
+            pad_quantum: 4,
+            queue_depth: 4,
+            scheduler: SchedulerKind::Static,
+            pool_depth: 8,
+            chunk_stripes: 0,
+            stripe_range: None,
+            artifacts_dir: Some(PathBuf::from("artifacts")),
+        }
+    }
+}
+
+impl JobSpec {
+    /// The engine this run will use when no density estimate is at
+    /// hand: the explicit choice, or the metric-driven default (packed
+    /// for unweighted, tiled otherwise). The compute driver itself uses
+    /// [`Self::resolved_engine_for`] with the measured workload density.
+    pub fn resolved_engine(&self) -> EngineKind {
+        self.resolved_engine_for(None)
+    }
+
+    /// Density-aware resolution: the explicit choice wins; otherwise
+    /// unweighted takes the bit-packed kernel and weighted metrics take
+    /// the sparse CSR kernel below `sparse_threshold` (tiled above it,
+    /// or when `density` is unknown).
+    pub fn resolved_engine_for(&self, density: Option<f64>) -> EngineKind {
+        self.engine.unwrap_or_else(|| {
+            EngineKind::auto_for_density(self.metric, density, self.sparse_threshold)
+        })
+    }
+
+    /// Resolve the CPU engine against the actual problem: estimates the
+    /// mean embedding-row density (exact, via the leaf→root union walk
+    /// — no DP pass) only when the auto policy would consult it, and
+    /// rejects engine/metric combinations the kernel cannot compute.
+    /// The single resolution point shared by `compute_unifrac`,
+    /// `coordinator::run` and the partial driver.
+    pub fn resolve_cpu_engine(
+        &self,
+        tree: &Phylogeny,
+        table: &FeatureTable,
+    ) -> Result<EngineKind> {
+        let engine = match self.engine {
+            Some(e) => e,
+            None => {
+                let density = if EngineKind::auto_needs_density(self.metric) {
+                    Some(crate::embed::embedding_density(tree, table)?)
+                } else {
+                    None
+                };
+                self.resolved_engine_for(density)
+            }
+        };
+        if !engine.supports(self.metric) {
+            return Err(Error::unsupported(format!(
+                "cpu engine {:?} cannot compute metric {} (packed is unweighted-only, \
+                 sparse is weighted-only)",
+                engine.name(),
+                self.metric
+            )));
+        }
+        Ok(engine)
+    }
+
+    /// Lower to the per-chip backend descriptor the coordinator plans
+    /// with (resolving the density-aware auto engine on the CPU path).
+    pub fn resolve_backend_spec(
+        &self,
+        tree: &Phylogeny,
+        table: &FeatureTable,
+    ) -> Result<BackendSpec> {
+        match &self.backend {
+            Backend::Cpu => Ok(BackendSpec::Cpu {
+                engine: self.resolve_cpu_engine(tree, table)?,
+                block_k: self.block_k,
+            }),
+            Backend::Pjrt { artifact, resident } => {
+                Ok(BackendSpec::Pjrt { engine: artifact.clone(), resident: *resident })
+            }
+        }
+    }
+
+    /// Padded sample-chunk width for `n_samples` under `engine` — the
+    /// one padding rule every CPU path shares (the tiled engine aligns
+    /// to its tile width; everything else to the base quantum).
+    pub fn padded_width(&self, engine: EngineKind, n_samples: usize) -> usize {
+        let quantum = if engine == EngineKind::Tiled {
+            self.pad_quantum.max(self.block_k.min(64))
+        } else {
+            self.pad_quantum.max(4)
+        };
+        crate::embed::default_padding(n_samples, quantum)
+    }
+
+    /// Worker-thread count actually used over `s_total` stripes
+    /// (`threads == 0` means all available cores; never more workers
+    /// than stripes, never fewer than one).
+    pub fn effective_threads(&self, s_total: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.min(s_total).max(1)
+    }
+
+    /// Lower to one CPU [`WorkerSpec`] (the only place a `JobSpec`
+    /// becomes a worker description on the single-node path).
+    pub(crate) fn cpu_worker_spec(&self, engine: EngineKind) -> WorkerSpec {
+        WorkerSpec::Cpu {
+            engine,
+            block_k: self.block_k,
+            sparse_threshold: self.sparse_threshold,
+        }
+    }
+}
+
+/// The public facade: one builder over tree + table + [`JobSpec`],
+/// covering full runs, partial (stripe-subrange) runs and — through
+/// [`super::merge_partials`] — the reference implementation's
+/// `one_off` / `partial` / `merge_partial` lifecycle.
+///
+/// ```no_run
+/// use unifrac::api::UniFracJob;
+/// use unifrac::synth::SynthSpec;
+/// use unifrac::unifrac::Metric;
+///
+/// let (tree, table) = SynthSpec::emp_like(64, 42).generate();
+/// let dm = UniFracJob::new(&tree, &table)
+///     .metric(Metric::Unweighted)
+///     .threads(0)
+///     .run()
+///     .unwrap();
+/// println!("d(0,1) = {}", dm.get(0, 1));
+/// ```
+pub struct UniFracJob<'a> {
+    tree: &'a Phylogeny,
+    table: &'a FeatureTable,
+    spec: JobSpec,
+}
+
+impl<'a> UniFracJob<'a> {
+    /// A job over `(tree, table)` with default options (weighted
+    /// normalized UniFrac, f64, auto engine, one thread).
+    pub fn new(tree: &'a Phylogeny, table: &'a FeatureTable) -> Self {
+        Self { tree, table, spec: JobSpec::default() }
+    }
+
+    /// A job from an already-built [`JobSpec`] (the CLI/config path).
+    pub fn with_spec(tree: &'a Phylogeny, table: &'a FeatureTable, spec: JobSpec) -> Self {
+        Self { tree, table, spec }
+    }
+
+    pub fn metric(mut self, metric: Metric) -> Self {
+        self.spec.metric = metric;
+        self
+    }
+
+    pub fn precision(mut self, precision: FpWidth) -> Self {
+        self.spec.precision = precision;
+        self
+    }
+
+    /// Pin a specific CPU engine (default: density-aware auto).
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.spec.engine = Some(engine);
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.spec.backend = backend;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.spec.threads = threads;
+        self
+    }
+
+    pub fn chips(mut self, chips: usize) -> Self {
+        self.spec.chips = chips;
+        self
+    }
+
+    pub fn parallel(mut self, parallel: bool) -> Self {
+        self.spec.parallel = parallel;
+        self
+    }
+
+    pub fn scheduler(mut self, scheduler: SchedulerKind) -> Self {
+        self.spec.scheduler = scheduler;
+        self
+    }
+
+    pub fn pool_depth(mut self, pool_depth: usize) -> Self {
+        self.spec.pool_depth = pool_depth;
+        self
+    }
+
+    pub fn queue_depth(mut self, queue_depth: usize) -> Self {
+        self.spec.queue_depth = queue_depth;
+        self
+    }
+
+    pub fn batch_capacity(mut self, batch_capacity: usize) -> Self {
+        self.spec.batch_capacity = batch_capacity;
+        self
+    }
+
+    pub fn block_k(mut self, block_k: usize) -> Self {
+        self.spec.block_k = block_k;
+        self
+    }
+
+    pub fn sparse_threshold(mut self, threshold: f64) -> Self {
+        self.spec.sparse_threshold = threshold;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spec.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Restrict the job to stripes `start .. start + count` — the unit
+    /// of distributed partial computation ([`Self::run_partial`]).
+    pub fn stripe_range(mut self, start: usize, count: usize) -> Self {
+        self.spec.stripe_range = Some((start, count));
+        self
+    }
+
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    /// Resolve the job's CPU geometry once: `(engine, padded width,
+    /// total stripes)`. The density walk behind auto engine selection
+    /// runs at most once per call — every partial entry point funnels
+    /// through here so the resolution is never repeated.
+    fn resolve_geometry(&self) -> Result<(EngineKind, usize, usize)> {
+        if !matches!(self.spec.backend, Backend::Cpu) {
+            return Err(Error::unsupported(
+                "stripe geometry and partial computation require the CPU backend \
+                 (PJRT padding is artifact-defined)",
+            ));
+        }
+        let n = self.table.n_samples();
+        if n < 2 {
+            return Err(Error::Shape("need >= 2 samples".into()));
+        }
+        let engine = self.spec.resolve_cpu_engine(self.tree, self.table)?;
+        let padded = self.spec.padded_width(engine, n);
+        Ok((engine, padded, crate::matrix::total_stripes(padded)))
+    }
+
+    /// Total stripes this job's padded chunk decomposes into — the
+    /// space `run_partial` ranges partition. CPU backend only (PJRT
+    /// padding is artifact-defined).
+    pub fn total_stripes(&self) -> Result<usize> {
+        self.resolve_geometry().map(|(_, _, total)| total)
+    }
+
+    /// Run the full job at the spec's [`FpWidth`].
+    pub fn run(&self) -> Result<crate::matrix::CondensedMatrix> {
+        self.run_output().map(|o| o.dm)
+    }
+
+    /// As [`Self::run`], also returning the run accounting.
+    pub fn run_output(&self) -> Result<RunOutput> {
+        match self.spec.precision {
+            FpWidth::F32 => self.run_typed::<f32>(),
+            FpWidth::F64 => self.run_typed::<f64>(),
+        }
+    }
+
+    /// Monomorphized run: the facade's one routing point. Single-chip
+    /// CPU jobs take the single-node driver (which keeps the packed
+    /// direct fast path and honors `threads`); everything else — chip
+    /// partitions and PJRT artifacts — goes through the coordinator.
+    pub fn run_typed<R: XlaReal>(&self) -> Result<RunOutput> {
+        // both consumers (compute_unifrac_report / coordinator::run)
+        // reject a set stripe_range themselves — no facade-only check
+        if self.spec.backend == Backend::Cpu && self.spec.chips <= 1 {
+            let (dm, rep) = compute_unifrac_report::<R>(self.tree, self.table, &self.spec)?;
+            return Ok(RunOutput { dm, metrics: metrics_from_compute(&rep, &self.spec) });
+        }
+        crate::coordinator::run::<R>(self.tree, self.table, &self.spec)
+    }
+
+    /// Compute the stripe subrange set via [`Self::stripe_range`].
+    pub fn run_partial(&self) -> Result<PartialResult> {
+        let (start, count) = self.spec.stripe_range.ok_or_else(|| {
+            Error::invalid("run_partial needs a stripe range (UniFracJob::stripe_range)")
+        })?;
+        self.run_partial_range(start, count)
+    }
+
+    /// Compute the `index`-th of `of` equal splits of the stripe space
+    /// — the "machine `i` of `N`" entry point the CLI and C ABI use.
+    /// Resolves the engine/padding geometry exactly once (no separate
+    /// `total_stripes` query needed).
+    pub fn run_partial_index(&self, index: usize, of: usize) -> Result<PartialResult> {
+        if of == 0 {
+            return Err(Error::invalid("number of partials must be >= 1"));
+        }
+        if index >= of {
+            return Err(Error::invalid(format!(
+                "partial index {index} out of range for {of} partials"
+            )));
+        }
+        let (engine, padded, s_total) = self.resolve_geometry()?;
+        let ranges = split_ranges(s_total, of);
+        let (start, count) = ranges.get(index).copied().ok_or_else(|| {
+            Error::invalid(format!("{of} partials exceed the {s_total}-stripe space"))
+        })?;
+        self.partial_resolved(engine, padded, s_total, start, count)
+    }
+
+    /// Compute only stripes `start .. start + count`, returning a
+    /// self-describing [`PartialResult`] that can be persisted
+    /// ([`PartialResult::save`]) and later merged with its siblings by
+    /// [`super::merge_partials`]. Any partition of the stripe space
+    /// merges bit-identically to the full [`Self::run`] result at the
+    /// same precision/engine (under the default static scheduler).
+    pub fn run_partial_range(&self, start: usize, count: usize) -> Result<PartialResult> {
+        let (engine, padded, s_total) = self.resolve_geometry()?;
+        self.partial_resolved(engine, padded, s_total, start, count)
+    }
+
+    /// Shared tail of every partial entry point: validate the range,
+    /// compute at the spec's precision, wrap with metadata.
+    fn partial_resolved(
+        &self,
+        engine: EngineKind,
+        padded: usize,
+        s_total: usize,
+        start: usize,
+        count: usize,
+    ) -> Result<PartialResult> {
+        if count == 0 {
+            return Err(Error::invalid("stripe range must be non-empty"));
+        }
+        if start + count > s_total {
+            return Err(Error::invalid(format!(
+                "stripe range {start}+{count} exceeds the {s_total}-stripe space"
+            )));
+        }
+        let data = match self.spec.precision {
+            FpWidth::F32 => {
+                PartialData::F32(self.partial_block::<f32>(engine, padded, s_total, start, count)?)
+            }
+            FpWidth::F64 => {
+                PartialData::F64(self.partial_block::<f64>(engine, padded, s_total, start, count)?)
+            }
+        };
+        Ok(PartialResult::new(
+            PartialMeta {
+                n_samples: self.table.n_samples(),
+                padded_n: padded,
+                stripe_start: start,
+                stripe_count: count,
+                metric: self.spec.metric,
+                fp: self.spec.precision,
+                engine: engine.name().to_string(),
+                sample_ids: self.table.sample_ids().to_vec(),
+            },
+            data,
+        ))
+    }
+
+    /// The partial compute core: mirrors the full driver's dispatch
+    /// exactly (same resolved engine, same padding, same packed
+    /// direct-path predicate) so that per-stripe accumulators are
+    /// bit-identical to the ones a full run would produce.
+    fn partial_block<R: XlaReal>(
+        &self,
+        engine: EngineKind,
+        padded: usize,
+        s_total: usize,
+        start: usize,
+        count: usize,
+    ) -> Result<StripeBlock<R>> {
+        // `effective_threads` over the FULL stripe space, not the
+        // subrange: the direct-path predicate must agree with what a
+        // full run of the same spec would choose, or partial and full
+        // runs could take different kernels (breaking bit-identity).
+        let threads_full = self.spec.effective_threads(s_total);
+        if engine == EngineKind::Packed
+            && self.spec.metric == Metric::Unweighted
+            && threads_full == 1
+        {
+            let (block, _stats) =
+                packed_direct_block::<R>(self.tree, self.table, &self.spec, padded, start, count)?;
+            return Ok(block);
+        }
+        let workers_n = threads_full.min(count);
+        let dspec = DriveSpec {
+            metric: self.spec.metric,
+            padded_n: padded,
+            batch_capacity: self.spec.batch_capacity,
+            queue_depth: self.spec.queue_depth,
+            pool_depth: self.spec.pool_depth,
+            // pinned ranges only — stealing would reorder additions
+            scheduler: SchedulerKind::Static,
+            chunk_stripes: 0,
+            workers: split_ranges(count, workers_n)
+                .into_iter()
+                .map(|(s, c)| WorkerBuild {
+                    spec: self.spec.cpu_worker_spec(engine),
+                    range: Some((start + s, c)),
+                })
+                .collect(),
+        };
+        let (blocks, _rep) = crate::exec::drive::<R>(self.tree, self.table, &dspec)?;
+        // canonicalize the per-worker blocks into one contiguous block
+        // covering [start, start + count)
+        let mut out = StripeBlock::<R>::new(padded, start, count);
+        for b in &blocks {
+            for sl in 0..b.n_stripes() {
+                let g = b.start() + sl - start;
+                let (num, den) = out.rows_mut(g);
+                num.copy_from_slice(b.num_row(sl));
+                den.copy_from_slice(b.den_row(sl));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Fold a single-node [`ComputeReport`] into the coordinator-shaped
+/// [`RunMetrics`] so every facade run reports through one type.
+fn metrics_from_compute(rep: &ComputeReport, spec: &JobSpec) -> RunMetrics {
+    RunMetrics {
+        backend: format!("cpu/{}", rep.engine),
+        scheduler: spec.scheduler.name().to_string(),
+        artifact: None,
+        n_samples: rep.n_samples,
+        padded_n: rep.padded_n,
+        n_stripes: rep.n_stripes,
+        embeddings: rep.embeddings,
+        batches: rep.batches,
+        pool_allocated: rep.pool_allocated,
+        pool_reused: rep.pool_reused,
+        packed_words: rep.packed_words,
+        lut_builds: rep.lut_builds,
+        csr_nnz: rep.csr_nnz,
+        rows_sparse: rep.rows_sparse,
+        rows_dense: rep.rows_dense,
+        csr_density: rep.csr_density,
+        embed_density: rep.embed_density,
+        per_chip_seconds: vec![rep.seconds_stripes],
+        seconds_embed: rep.seconds_embed,
+        seconds_total: rep.seconds_total,
+        seconds_assemble: rep.seconds_assemble,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::SynthSpec;
+    use crate::unifrac::{compute_unifrac, ComputeOptions};
+
+    fn problem() -> (Phylogeny, FeatureTable) {
+        SynthSpec { n_samples: 22, n_features: 128, density: 0.1, ..Default::default() }
+            .generate()
+    }
+
+    #[test]
+    fn facade_matches_compute_unifrac() {
+        let (tree, table) = problem();
+        let want =
+            compute_unifrac::<f64>(&tree, &table, &ComputeOptions::default()).unwrap();
+        let got = UniFracJob::new(&tree, &table).run().unwrap();
+        assert_eq!(want.max_abs_diff(&got), 0.0);
+        // f32 precision dispatch
+        let got32 = UniFracJob::new(&tree, &table).precision(FpWidth::F32).run().unwrap();
+        assert!(want.max_abs_diff(&got32) < 1e-4);
+    }
+
+    #[test]
+    fn facade_routes_chips_through_coordinator() {
+        let (tree, table) = problem();
+        let single = UniFracJob::new(&tree, &table).run().unwrap();
+        let out = UniFracJob::new(&tree, &table).chips(3).run_output().unwrap();
+        assert!(single.max_abs_diff(&out.dm) < 1e-12);
+        assert_eq!(out.metrics.per_chip_seconds.len(), 3);
+    }
+
+    #[test]
+    fn facade_reports_metrics_on_single_node_path() {
+        let (tree, table) = problem();
+        let out = UniFracJob::new(&tree, &table)
+            .metric(Metric::Unweighted)
+            .run_output()
+            .unwrap();
+        assert_eq!(out.metrics.backend, "cpu/packed");
+        assert!(out.metrics.packed_words > 0);
+        assert_eq!(out.metrics.n_samples, 22);
+        assert!(out.metrics.n_stripes > 0);
+    }
+
+    #[test]
+    fn spec_builder_setters_land_in_spec() {
+        let (tree, table) = problem();
+        let job = UniFracJob::new(&tree, &table)
+            .metric(Metric::Generalized(0.5))
+            .precision(FpWidth::F32)
+            .engine(EngineKind::Batched)
+            .threads(3)
+            .scheduler(SchedulerKind::Dynamic)
+            .pool_depth(2)
+            .queue_depth(7)
+            .batch_capacity(9)
+            .block_k(16)
+            .sparse_threshold(0.5)
+            .stripe_range(1, 2);
+        let s = job.spec();
+        assert_eq!(s.metric, Metric::Generalized(0.5));
+        assert_eq!(s.precision, FpWidth::F32);
+        assert_eq!(s.engine, Some(EngineKind::Batched));
+        assert_eq!(s.threads, 3);
+        assert_eq!(s.scheduler, SchedulerKind::Dynamic);
+        assert_eq!(s.pool_depth, 2);
+        assert_eq!(s.queue_depth, 7);
+        assert_eq!(s.batch_capacity, 9);
+        assert_eq!(s.block_k, 16);
+        assert_eq!(s.sparse_threshold, 0.5);
+        assert_eq!(s.stripe_range, Some((1, 2)));
+    }
+
+    #[test]
+    fn partial_range_validation() {
+        let (tree, table) = problem();
+        let job = UniFracJob::new(&tree, &table);
+        let total = job.total_stripes().unwrap();
+        assert!(job.run_partial_range(0, 0).is_err(), "empty range");
+        assert!(job.run_partial_range(total, 1).is_err(), "past the end");
+        assert!(job.run_partial_range(0, total + 1).is_err(), "too long");
+        assert!(job.run_partial().is_err(), "no stored range");
+        let p = job.stripe_range(0, total).run_partial().unwrap();
+        assert_eq!(p.stripe_range(), 0..total);
+        // index-based splitting: same geometry, one resolution
+        let p0 = UniFracJob::new(&tree, &table).run_partial_index(0, 2).unwrap();
+        let p1 = UniFracJob::new(&tree, &table).run_partial_index(1, 2).unwrap();
+        assert_eq!(p0.stripe_range().start, 0);
+        assert_eq!(p1.stripe_range().end, total);
+        assert_eq!(p0.stripe_range().end, p1.stripe_range().start);
+        assert!(UniFracJob::new(&tree, &table).run_partial_index(2, 2).is_err());
+        assert!(UniFracJob::new(&tree, &table).run_partial_index(0, 0).is_err());
+        // a set stripe_range turns a full run into an error rather than
+        // a silently-unrestricted full compute
+        let err = UniFracJob::new(&tree, &table).stripe_range(0, 1).run().unwrap_err();
+        assert!(err.to_string().contains("run_partial"), "{err}");
+    }
+
+    #[test]
+    fn fpwidth_parse_spellings() {
+        for s in ["f32", "fp32", "float32"] {
+            assert_eq!(FpWidth::parse(s), Some(FpWidth::F32));
+        }
+        for s in ["f64", "fp64", "float64"] {
+            assert_eq!(FpWidth::parse(s), Some(FpWidth::F64));
+        }
+        assert_eq!(FpWidth::parse("f16"), None);
+        assert_eq!(FpWidth::F32.bytes(), 4);
+        assert_eq!(FpWidth::F64.name(), "f64");
+    }
+}

@@ -1,0 +1,31 @@
+//! The public API facade (ISSUE 4 tentpole).
+//!
+//! One canonical request type — [`JobSpec`] — and one builder over it
+//! — [`UniFracJob`] — replace the former four-struct option chain
+//! (`ComputeOptions` → `RunConfig` → `RunOptions` → per-worker specs).
+//! Lowering happens in exactly one direction:
+//!
+//! ```text
+//!   UniFracJob (builder)            CLI / config (RunConfig::to_job)
+//!          └──────────────┬──────────────┘
+//!                      JobSpec                 ← the source of truth
+//!            ┌────────────┼──────────────┐
+//!   compute_unifrac   coordinator::run   run_partial
+//!   (single node)     (chips / PJRT)     (stripe subrange)
+//!            └────────────┼──────────────┘
+//!                    exec::drive (WorkerSpec lowered per worker)
+//! ```
+//!
+//! On top of the facade, partial computation is first-class: Striped
+//! UniFrac's stripes are independent, so [`UniFracJob::run_partial`]
+//! computes any stripe subrange into a self-describing, serializable
+//! [`PartialResult`], and [`merge_partials`] reassembles the full
+//! condensed matrix with typed validation (the reference
+//! implementation's `one_off` / `partial` / `merge_partial` trio —
+//! also exported through the C ABI in `crate::capi`).
+
+mod job;
+mod partial;
+
+pub use job::{Backend, FpWidth, JobSpec, UniFracJob};
+pub use partial::{merge_partials, PartialData, PartialMeta, PartialResult};

@@ -1,0 +1,451 @@
+//! First-class partial computation: the self-describing stripe-subrange
+//! result ([`PartialResult`]), its compact binary serialization, and
+//! [`merge_partials`].
+//!
+//! This is the reference implementation's `partial` / `merge_partial`
+//! lifecycle: Striped UniFrac's stripes are independent, so a big job
+//! splits into stripe-range partials computed on different processes or
+//! machines, persisted (`save`/`load`), shipped around, and merged into
+//! the full condensed matrix — with typed validation
+//! ([`crate::error::MergeError`]) for gaps, overlaps and metadata
+//! mismatches.
+
+use super::job::FpWidth;
+use crate::error::{Error, MergeError, Result};
+use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
+use crate::unifrac::Metric;
+use std::path::Path;
+
+/// Everything needed to validate and merge a partial, independent of
+/// the numeric payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartialMeta {
+    /// Real sample count (the condensed matrix is `n_samples` wide).
+    pub n_samples: usize,
+    /// Padded chunk width the stripe blocks were computed over.
+    pub padded_n: usize,
+    /// First global stripe this partial covers.
+    pub stripe_start: usize,
+    /// Stripes covered.
+    pub stripe_count: usize,
+    /// UniFrac variant (including the generalized alpha).
+    pub metric: Metric,
+    /// Floating-point width of the payload.
+    pub fp: FpWidth,
+    /// Name of the engine that produced the payload (informational:
+    /// mixing engines across partials is allowed — that is how
+    /// heterogeneous CPU/GPU fleets split one job).
+    pub engine: String,
+    /// Sample id ordering (must agree across merged partials).
+    pub sample_ids: Vec<String>,
+}
+
+/// Numeric payload at the partial's native precision (kept native so a
+/// merge is bit-identical to the full in-process run).
+#[derive(Clone, Debug)]
+pub enum PartialData {
+    F32(StripeBlock<f32>),
+    F64(StripeBlock<f64>),
+}
+
+/// One computed stripe subrange plus its metadata.
+#[derive(Clone, Debug)]
+pub struct PartialResult {
+    meta: PartialMeta,
+    data: PartialData,
+}
+
+const MAGIC: &[u8; 4] = b"UFPR";
+const VERSION: u16 = 1;
+
+impl PartialResult {
+    pub(crate) fn new(meta: PartialMeta, data: PartialData) -> Self {
+        Self { meta, data }
+    }
+
+    pub fn meta(&self) -> &PartialMeta {
+        &self.meta
+    }
+
+    /// Global stripe ids this partial covers.
+    pub fn stripe_range(&self) -> std::ops::Range<usize> {
+        self.meta.stripe_start..self.meta.stripe_start + self.meta.stripe_count
+    }
+
+    /// Compact binary serialization (little-endian, self-describing —
+    /// see the format sketch in `ARCHITECTURE.md`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let m = &self.meta;
+        let payload = m.stripe_count * m.padded_n;
+        let mut v = Vec::with_capacity(64 + 2 * payload * m.fp.bytes());
+        v.extend_from_slice(MAGIC);
+        put_u16(&mut v, VERSION);
+        v.push(m.fp.bytes() as u8);
+        put_str(&mut v, m.metric.name());
+        put_f64(&mut v, m.metric.alpha());
+        put_str(&mut v, &m.engine);
+        put_u64(&mut v, m.n_samples as u64);
+        put_u64(&mut v, m.padded_n as u64);
+        put_u64(&mut v, m.stripe_start as u64);
+        put_u64(&mut v, m.stripe_count as u64);
+        put_u32(&mut v, m.sample_ids.len() as u32);
+        for id in &m.sample_ids {
+            put_str(&mut v, id);
+        }
+        match &self.data {
+            PartialData::F32(b) => {
+                for x in &b.num {
+                    v.extend_from_slice(&x.to_le_bytes());
+                }
+                for x in &b.den {
+                    v.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            PartialData::F64(b) => {
+                for x in &b.num {
+                    v.extend_from_slice(&x.to_le_bytes());
+                }
+                for x in &b.den {
+                    v.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        v
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader { buf: bytes, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err(Error::invalid("not a UniFrac partial (bad magic)"));
+        }
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(Error::invalid(format!(
+                "unsupported partial format version {version} (expected {VERSION})"
+            )));
+        }
+        let fp = match r.u8()? {
+            4 => FpWidth::F32,
+            8 => FpWidth::F64,
+            other => {
+                return Err(Error::invalid(format!("bad fp width byte {other}")));
+            }
+        };
+        let metric_name = r.string()?;
+        let alpha = r.f64()?;
+        let metric = Metric::parse(&metric_name, alpha)
+            .ok_or_else(|| Error::invalid(format!("unknown metric {metric_name:?}")))?;
+        let engine = r.string()?;
+        let n_samples = r.u64()? as usize;
+        let padded_n = r.u64()? as usize;
+        let stripe_start = r.u64()? as usize;
+        let stripe_count = r.u64()? as usize;
+        if n_samples < 2 || padded_n < n_samples {
+            return Err(Error::invalid(format!(
+                "bad partial geometry: n_samples {n_samples}, padded {padded_n}"
+            )));
+        }
+        // checked arithmetic throughout: header fields are untrusted
+        // (partials are shipped between machines), and nothing may
+        // allocate before the implied payload is proven to fit the
+        // remaining buffer — an oversized Vec would abort the process
+        // (not unwind), which no FFI catch_unwind could contain.
+        let range_ok = match stripe_start.checked_add(stripe_count) {
+            Some(end) => end <= total_stripes(padded_n),
+            None => false,
+        };
+        if stripe_count == 0 || !range_ok {
+            return Err(Error::invalid(format!(
+                "bad partial stripe range {stripe_start}+{stripe_count} over padded \
+                 width {padded_n}"
+            )));
+        }
+        let payload_bytes = stripe_count
+            .checked_mul(padded_n)
+            .and_then(|cells| cells.checked_mul(2 * fp.bytes()))
+            .ok_or_else(|| Error::invalid("partial payload size overflows"))?;
+        if payload_bytes > bytes.len().saturating_sub(r.pos) {
+            return Err(Error::invalid(format!(
+                "partial payload claims {payload_bytes} bytes but only {} remain",
+                bytes.len().saturating_sub(r.pos)
+            )));
+        }
+        let n_ids = r.u32()? as usize;
+        if n_ids != 0 && n_ids != n_samples {
+            return Err(Error::invalid(format!(
+                "partial carries {n_ids} sample ids for {n_samples} samples"
+            )));
+        }
+        let mut sample_ids = Vec::with_capacity(n_ids);
+        for _ in 0..n_ids {
+            sample_ids.push(r.string()?);
+        }
+        let cells = stripe_count * padded_n;
+        let data = match fp {
+            FpWidth::F32 => {
+                let mut b = StripeBlock::<f32>::new(padded_n, stripe_start, stripe_count);
+                for x in b.num.iter_mut() {
+                    *x = f32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes"));
+                }
+                for x in b.den.iter_mut() {
+                    *x = f32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes"));
+                }
+                debug_assert_eq!(b.num.len(), cells);
+                PartialData::F32(b)
+            }
+            FpWidth::F64 => {
+                let mut b = StripeBlock::<f64>::new(padded_n, stripe_start, stripe_count);
+                for x in b.num.iter_mut() {
+                    *x = f64::from_le_bytes(r.take(8)?.try_into().expect("8 bytes"));
+                }
+                for x in b.den.iter_mut() {
+                    *x = f64::from_le_bytes(r.take(8)?.try_into().expect("8 bytes"));
+                }
+                debug_assert_eq!(b.num.len(), cells);
+                PartialData::F64(b)
+            }
+        };
+        if r.pos != bytes.len() {
+            return Err(Error::invalid(format!(
+                "trailing bytes in partial: {} past the payload",
+                bytes.len() - r.pos
+            )));
+        }
+        Ok(Self {
+            meta: PartialMeta {
+                n_samples,
+                padded_n,
+                stripe_start,
+                stripe_count,
+                metric,
+                fp,
+                engine,
+                sample_ids,
+            },
+            data,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// Merge stripe partials into the full condensed distance matrix.
+///
+/// Validates that all partials describe the same problem (sample count
+/// and ids, padded width, metric, precision) and that their stripe
+/// ranges tile the whole stripe space exactly — gaps and overlaps are
+/// rejected with typed [`MergeError`]s. Mixing *engines* across
+/// partials is allowed (heterogeneous fleets); mixing precisions is
+/// not. The merged matrix is bit-identical to the full in-process run
+/// at the same precision/engine.
+///
+/// Generic over [`std::borrow::Borrow`] so both owned slices
+/// (`&[PartialResult]`) and borrowed collections
+/// (`&[&PartialResult]`, as the C ABI builds from caller handles)
+/// merge without an extra deep copy of the payloads.
+pub fn merge_partials<P: std::borrow::Borrow<PartialResult>>(
+    parts: &[P],
+) -> Result<CondensedMatrix> {
+    // fully-qualified borrow: unambiguous against the `Borrow<T> for T`
+    // blanket impls on `P` / `&P`
+    fn as_partial<P: std::borrow::Borrow<PartialResult>>(p: &P) -> &PartialResult {
+        <P as std::borrow::Borrow<PartialResult>>::borrow(p)
+    }
+    let first = as_partial(parts.first().ok_or(Error::Merge(MergeError::Empty))?);
+    for p in &parts[1..] {
+        let p = as_partial(p);
+        if p.meta.n_samples != first.meta.n_samples {
+            return Err(MergeError::SampleMismatch {
+                expected: first.meta.n_samples,
+                got: p.meta.n_samples,
+            }
+            .into());
+        }
+        if p.meta.padded_n != first.meta.padded_n {
+            return Err(MergeError::WidthMismatch {
+                expected: first.meta.padded_n,
+                got: p.meta.padded_n,
+            }
+            .into());
+        }
+        if p.meta.metric != first.meta.metric {
+            return Err(MergeError::MetricMismatch {
+                expected: first.meta.metric.to_string(),
+                got: p.meta.metric.to_string(),
+            }
+            .into());
+        }
+        if p.meta.fp != first.meta.fp {
+            return Err(MergeError::PrecisionMismatch {
+                expected: first.meta.fp.name(),
+                got: p.meta.fp.name(),
+            }
+            .into());
+        }
+        if p.meta.sample_ids != first.meta.sample_ids {
+            return Err(MergeError::IdMismatch.into());
+        }
+    }
+    let metric = first.meta.metric;
+    let n_real = first.meta.n_samples;
+    let ids = first.meta.sample_ids.clone();
+    let finalize = move |num: f64, den: f64| metric.finalize(num, den);
+    // borrow the payloads — assembly never needs a copy of the blocks
+    match first.meta.fp {
+        FpWidth::F32 => {
+            let blocks: Vec<&StripeBlock<f32>> = parts
+                .iter()
+                .map(|p| match &as_partial(p).data {
+                    PartialData::F32(b) => Ok(b),
+                    PartialData::F64(_) => Err(Error::Merge(MergeError::PrecisionMismatch {
+                        expected: "f32",
+                        got: "f64",
+                    })),
+                })
+                .collect::<Result<_>>()?;
+            CondensedMatrix::from_stripes(n_real, ids, &blocks, finalize)
+        }
+        FpWidth::F64 => {
+            let blocks: Vec<&StripeBlock<f64>> = parts
+                .iter()
+                .map(|p| match &as_partial(p).data {
+                    PartialData::F64(b) => Ok(b),
+                    PartialData::F32(_) => Err(Error::Merge(MergeError::PrecisionMismatch {
+                        expected: "f64",
+                        got: "f32",
+                    })),
+                })
+                .collect::<Result<_>>()?;
+            CondensedMatrix::from_stripes(n_real, ids, &blocks, finalize)
+        }
+    }
+}
+
+// ---- little-endian wire helpers (no serde offline) ----
+
+fn put_u16(v: &mut Vec<u8>, x: u16) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(v: &mut Vec<u8>, x: f64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(v: &mut Vec<u8>, s: &str) {
+    put_u32(v, s.len() as u32);
+    v.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::invalid("truncated partial payload"));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > 1 << 20 {
+            return Err(Error::invalid("unreasonable string length in partial"));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::invalid("non-utf8 string in partial"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::UniFracJob;
+    use crate::synth::SynthSpec;
+
+    fn problem() -> (crate::tree::Phylogeny, crate::table::FeatureTable) {
+        SynthSpec { n_samples: 18, n_features: 96, density: 0.1, ..Default::default() }
+            .generate()
+    }
+
+    #[test]
+    fn serialize_roundtrip_preserves_everything() {
+        let (tree, table) = problem();
+        let job = UniFracJob::new(&tree, &table).metric(Metric::Generalized(0.5));
+        let total = job.total_stripes().unwrap();
+        let p = job.run_partial_range(1, total - 1).unwrap();
+        let bytes = p.to_bytes();
+        let back = PartialResult::from_bytes(&bytes).unwrap();
+        assert_eq!(back.meta(), p.meta());
+        match (&p.data, &back.data) {
+            (PartialData::F64(a), PartialData::F64(b)) => {
+                assert_eq!(a.num, b.num);
+                assert_eq!(a.den, b.den);
+            }
+            _ => panic!("precision changed in round-trip"),
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(PartialResult::from_bytes(b"nope").is_err());
+        assert!(PartialResult::from_bytes(b"UFPRxxxxxxx").is_err());
+        let (tree, table) = problem();
+        let job = UniFracJob::new(&tree, &table);
+        let p = job.run_partial_range(0, 2).unwrap();
+        let mut bytes = p.to_bytes();
+        bytes.truncate(bytes.len() - 3); // truncated payload
+        assert!(PartialResult::from_bytes(&bytes).is_err());
+        bytes.push(0); // wrong trailing size
+        assert!(PartialResult::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_empty() {
+        assert!(matches!(
+            merge_partials::<PartialResult>(&[]),
+            Err(Error::Merge(MergeError::Empty))
+        ));
+    }
+}

@@ -1,0 +1,681 @@
+//! C ABI for the shared library (`crate-type = ["cdylib"]`) — the
+//! paper's headline deliverable: *"a C shared library linkable by any
+//! programming language."*
+//!
+//! The surface mirrors the reference implementation's entry points:
+//! `ssu_one_off` (full matrix), `ssu_partial` (one stripe partial of
+//! `N`), `ssu_merge_partials` (reassemble), plus persistence
+//! (`ssu_partial_save` / `ssu_partial_load`) and accessors. The
+//! hand-written header lives at `include/unifrac.h`; a complete C
+//! client is at `examples/c_client/main.c`.
+//!
+//! ## Contract
+//!
+//! * Every fallible function returns an `int` status: `0` on success,
+//!   otherwise the stable per-error-class code from
+//!   [`Error::code`] (`99` = caught panic). [`ssu_error_name`] maps a
+//!   code to a static name; [`ssu_last_error`] returns the last
+//!   failure's message for the calling thread.
+//! * Results come back through opaque handles (`SsuMatrix*`,
+//!   `SsuPartial*`) written to an out-pointer only on success; free
+//!   them with `ssu_matrix_free` / `ssu_partial_free`.
+//! * Every compute/IO path runs under `catch_unwind` — panics never
+//!   cross into the caller. Raw-pointer handling happens before the
+//!   guard; the guarded closures are pure safe Rust.
+
+use crate::api::{merge_partials, FpWidth, JobSpec, PartialResult, UniFracJob};
+use crate::error::{Error, Result, CODE_PANIC};
+use crate::matrix::CondensedMatrix;
+use crate::table::{read_table_bin, read_table_tsv, FeatureTable};
+use crate::tree::{parse_newick, Phylogeny};
+use crate::unifrac::Metric;
+use std::cell::RefCell;
+use std::ffi::{CStr, CString};
+use std::os::raw::{c_char, c_double, c_int, c_uint};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::ptr;
+
+/// Opaque distance-matrix handle (condensed storage + C-string ids).
+pub struct SsuMatrix {
+    dm: CondensedMatrix,
+    ids: Vec<CString>,
+}
+
+impl SsuMatrix {
+    fn new(dm: CondensedMatrix) -> Self {
+        let n = dm.n_samples();
+        let ids = (0..n)
+            .map(|i| {
+                let id = dm.ids().get(i).cloned().unwrap_or_else(|| format!("S{i}"));
+                CString::new(id.replace('\0', "_")).expect("nul bytes replaced")
+            })
+            .collect();
+        Self { dm, ids }
+    }
+}
+
+/// Opaque stripe-partial handle.
+pub struct SsuPartial(PartialResult);
+
+thread_local! {
+    static LAST_ERROR: RefCell<CString> =
+        RefCell::new(CString::new("ok").expect("static"));
+}
+
+fn set_last_error(msg: &str) {
+    let c = CString::new(msg.replace('\0', " "))
+        .unwrap_or_else(|_| CString::new("error").expect("static"));
+    LAST_ERROR.with(|l| *l.borrow_mut() = c);
+}
+
+fn fail(e: Error) -> c_int {
+    set_last_error(&e.to_string());
+    e.code()
+}
+
+/// Run a pure-safe closure behind a panic guard; an `Err` is the
+/// status code to return (panics collapse to [`CODE_PANIC`]).
+fn guarded<T>(f: impl FnOnce() -> Result<T>) -> std::result::Result<T, c_int> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(fail(e)),
+        Err(_) => {
+            set_last_error("panic caught at the FFI boundary");
+            Err(CODE_PANIC)
+        }
+    }
+}
+
+unsafe fn cstr_arg<'a>(p: *const c_char, what: &str) -> Result<&'a str> {
+    if p.is_null() {
+        return Err(Error::invalid(format!("{what} must not be NULL")));
+    }
+    CStr::from_ptr(p)
+        .to_str()
+        .map_err(|_| Error::invalid(format!("{what} is not valid UTF-8")))
+}
+
+/// Convert a C string argument or bail out of the enclosing FFI
+/// function with its status code. Expands in place, so the (unsafe)
+/// conversion stays in the `unsafe fn` body proper.
+macro_rules! try_cstr {
+    ($p:expr, $what:expr) => {
+        match cstr_arg($p, $what) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        }
+    };
+}
+
+fn load_problem(table_path: &str, tree_path: &str) -> Result<(Phylogeny, FeatureTable)> {
+    let table = if table_path.ends_with(".bin") {
+        read_table_bin(table_path)?
+    } else {
+        read_table_tsv(table_path)?
+    };
+    let tree = parse_newick(&std::fs::read_to_string(tree_path)?)?;
+    Ok((tree, table))
+}
+
+fn build_spec(metric: &str, alpha: f64, fp32: bool, threads: c_uint) -> Result<JobSpec> {
+    let metric = Metric::parse(metric, alpha)
+        .ok_or_else(|| Error::invalid(format!("unknown metric {metric:?}")))?;
+    Ok(JobSpec {
+        metric,
+        precision: if fp32 { FpWidth::F32 } else { FpWidth::F64 },
+        threads: threads as usize,
+        ..Default::default()
+    })
+}
+
+/// Compute a full UniFrac distance matrix — the reference
+/// implementation's `one_off`.
+///
+/// `table_path` is a feature table (`.tsv` or the binary `.bin`),
+/// `tree_path` a Newick file, `unifrac_method` one of `unweighted`,
+/// `weighted_normalized`, `weighted_unnormalized`, `generalized`
+/// (`alpha` applies to the last). `fp32 != 0` computes in single
+/// precision. `threads == 0` uses all cores. On success writes a fresh
+/// handle to `*out` and returns 0.
+///
+/// # Safety
+/// `table_path`, `tree_path` and `unifrac_method` must be valid
+/// NUL-terminated strings; `out` must be a valid pointer.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_one_off(
+    table_path: *const c_char,
+    tree_path: *const c_char,
+    unifrac_method: *const c_char,
+    alpha: c_double,
+    fp32: c_int,
+    threads: c_uint,
+    out: *mut *mut SsuMatrix,
+) -> c_int {
+    if out.is_null() {
+        return fail(Error::invalid("out pointer must not be NULL"));
+    }
+    *out = ptr::null_mut();
+    let table_path = try_cstr!(table_path, "table_path");
+    let tree_path = try_cstr!(tree_path, "tree_path");
+    let metric = try_cstr!(unifrac_method, "unifrac_method");
+    match guarded(|| {
+        let (tree, table) = load_problem(table_path, tree_path)?;
+        let spec = build_spec(metric, alpha, fp32 != 0, threads)?;
+        UniFracJob::with_spec(&tree, &table, spec).run()
+    }) {
+        Ok(dm) => {
+            *out = Box::into_raw(Box::new(SsuMatrix::new(dm)));
+            0
+        }
+        Err(code) => code,
+    }
+}
+
+/// Compute one stripe partial: the `partial_index`-th of `n_partials`
+/// equal splits of the stripe space. Partials of the same problem/spec
+/// merge bit-identically to `ssu_one_off` via [`ssu_merge_partials`].
+///
+/// # Safety
+/// String arguments must be valid NUL-terminated strings; `out` must
+/// be a valid pointer.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_partial(
+    table_path: *const c_char,
+    tree_path: *const c_char,
+    unifrac_method: *const c_char,
+    alpha: c_double,
+    fp32: c_int,
+    threads: c_uint,
+    partial_index: c_uint,
+    n_partials: c_uint,
+    out: *mut *mut SsuPartial,
+) -> c_int {
+    if out.is_null() {
+        return fail(Error::invalid("out pointer must not be NULL"));
+    }
+    *out = ptr::null_mut();
+    let table_path = try_cstr!(table_path, "table_path");
+    let tree_path = try_cstr!(tree_path, "tree_path");
+    let metric = try_cstr!(unifrac_method, "unifrac_method");
+    match guarded(|| {
+        let (tree, table) = load_problem(table_path, tree_path)?;
+        let spec = build_spec(metric, alpha, fp32 != 0, threads)?;
+        UniFracJob::with_spec(&tree, &table, spec)
+            .run_partial_index(partial_index as usize, n_partials as usize)
+    }) {
+        Ok(p) => {
+            *out = Box::into_raw(Box::new(SsuPartial(p)));
+            0
+        }
+        Err(code) => code,
+    }
+}
+
+/// Merge `n_parts` partials into a full distance matrix. The partials
+/// must tile the stripe space exactly and agree on problem metadata;
+/// gaps, overlaps and mismatches return the `merge` status code (21)
+/// with details via [`ssu_last_error`].
+///
+/// # Safety
+/// `parts` must point to `n_parts` valid `SsuPartial*` handles; `out`
+/// must be a valid pointer. The input handles are NOT consumed.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_merge_partials(
+    parts: *const *const SsuPartial,
+    n_parts: usize,
+    out: *mut *mut SsuMatrix,
+) -> c_int {
+    if out.is_null() {
+        return fail(Error::invalid("out pointer must not be NULL"));
+    }
+    *out = ptr::null_mut();
+    if parts.is_null() && n_parts > 0 {
+        return fail(Error::invalid("parts must not be NULL"));
+    }
+    // borrow the caller's handles — no deep copy of the payloads
+    let mut borrowed: Vec<&PartialResult> = Vec::with_capacity(n_parts);
+    for i in 0..n_parts {
+        let p = *parts.add(i);
+        if p.is_null() {
+            return fail(Error::invalid(format!("parts[{i}] is NULL")));
+        }
+        borrowed.push(&(*p).0);
+    }
+    match guarded(|| merge_partials(&borrowed)) {
+        Ok(dm) => {
+            *out = Box::into_raw(Box::new(SsuMatrix::new(dm)));
+            0
+        }
+        Err(code) => code,
+    }
+}
+
+/// Persist a partial to `path` (compact self-describing binary).
+///
+/// # Safety
+/// `p` must be a valid `SsuPartial*`; `path` a valid NUL-terminated
+/// string.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_partial_save(p: *const SsuPartial, path: *const c_char) -> c_int {
+    if p.is_null() {
+        return fail(Error::invalid("partial handle must not be NULL"));
+    }
+    let path = match cstr_arg(path, "path") {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let part = &(*p).0;
+    match guarded(|| part.save(path)) {
+        Ok(()) => 0,
+        Err(code) => code,
+    }
+}
+
+/// Load a partial previously written by [`ssu_partial_save`].
+///
+/// # Safety
+/// `path` must be a valid NUL-terminated string; `out` a valid pointer.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_partial_load(
+    path: *const c_char,
+    out: *mut *mut SsuPartial,
+) -> c_int {
+    if out.is_null() {
+        return fail(Error::invalid("out pointer must not be NULL"));
+    }
+    *out = ptr::null_mut();
+    let path = match cstr_arg(path, "path") {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    match guarded(|| PartialResult::load(path)) {
+        Ok(p) => {
+            *out = Box::into_raw(Box::new(SsuPartial(p)));
+            0
+        }
+        Err(code) => code,
+    }
+}
+
+/// First global stripe a partial covers (0 on NULL).
+///
+/// # Safety
+/// `p` must be NULL or a valid `SsuPartial*`.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_partial_stripe_start(p: *const SsuPartial) -> c_uint {
+    if p.is_null() {
+        return 0;
+    }
+    (*p).0.meta().stripe_start as c_uint
+}
+
+/// Number of stripes a partial covers (0 on NULL).
+///
+/// # Safety
+/// `p` must be NULL or a valid `SsuPartial*`.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_partial_stripe_count(p: *const SsuPartial) -> c_uint {
+    if p.is_null() {
+        return 0;
+    }
+    (*p).0.meta().stripe_count as c_uint
+}
+
+/// Sample count of the matrix (0 on NULL).
+///
+/// # Safety
+/// `m` must be NULL or a valid `SsuMatrix*`.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_matrix_n_samples(m: *const SsuMatrix) -> c_uint {
+    if m.is_null() {
+        return 0;
+    }
+    (*m).dm.n_samples() as c_uint
+}
+
+/// Distance between samples `i` and `j` (NaN on NULL handle or
+/// out-of-range indices; the diagonal is 0).
+///
+/// # Safety
+/// `m` must be NULL or a valid `SsuMatrix*`.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_matrix_get(m: *const SsuMatrix, i: c_uint, j: c_uint) -> c_double {
+    if m.is_null() {
+        return f64::NAN;
+    }
+    let dm = &(*m).dm;
+    let (i, j) = (i as usize, j as usize);
+    if i >= dm.n_samples() || j >= dm.n_samples() {
+        return f64::NAN;
+    }
+    dm.get(i, j)
+}
+
+/// Sample id `i` as a NUL-terminated string owned by the handle (valid
+/// until `ssu_matrix_free`; NULL on bad index).
+///
+/// # Safety
+/// `m` must be NULL or a valid `SsuMatrix*`.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_matrix_sample_id(m: *const SsuMatrix, i: c_uint) -> *const c_char {
+    if m.is_null() {
+        return ptr::null();
+    }
+    match (*m).ids.get(i as usize) {
+        Some(id) => id.as_ptr(),
+        None => ptr::null(),
+    }
+}
+
+/// Length of the condensed (upper-triangle) vector: `n * (n - 1) / 2`.
+///
+/// # Safety
+/// `m` must be NULL or a valid `SsuMatrix*`.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_matrix_condensed_len(m: *const SsuMatrix) -> usize {
+    if m.is_null() {
+        return 0;
+    }
+    (*m).dm.condensed().len()
+}
+
+/// Copy the condensed vector (pair order (0,1), (0,2), …) into `buf`,
+/// which must hold exactly [`ssu_matrix_condensed_len`] doubles.
+///
+/// # Safety
+/// `m` must be a valid `SsuMatrix*`; `buf` must point to `buf_len`
+/// writable doubles.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_matrix_condensed(
+    m: *const SsuMatrix,
+    buf: *mut c_double,
+    buf_len: usize,
+) -> c_int {
+    if m.is_null() || buf.is_null() {
+        return fail(Error::invalid("matrix and buf must not be NULL"));
+    }
+    let data = (*m).dm.condensed();
+    if buf_len != data.len() {
+        return fail(Error::invalid(format!(
+            "buf_len {buf_len} != condensed length {}",
+            data.len()
+        )));
+    }
+    ptr::copy_nonoverlapping(data.as_ptr(), buf, data.len());
+    0
+}
+
+/// Write the matrix as the standard square TSV (same formatter as the
+/// Rust CLI's `--output`, so outputs diff cleanly).
+///
+/// # Safety
+/// `m` must be a valid `SsuMatrix*`; `path` a valid NUL-terminated
+/// string.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_matrix_write_tsv(m: *const SsuMatrix, path: *const c_char) -> c_int {
+    if m.is_null() {
+        return fail(Error::invalid("matrix handle must not be NULL"));
+    }
+    let path = match cstr_arg(path, "path") {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let dm = &(*m).dm;
+    match guarded(|| dm.write_tsv(path)) {
+        Ok(()) => 0,
+        Err(code) => code,
+    }
+}
+
+/// Free a matrix handle (NULL is a no-op).
+///
+/// # Safety
+/// `m` must be NULL or a handle previously returned by this library,
+/// not yet freed.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_matrix_free(m: *mut SsuMatrix) {
+    if !m.is_null() {
+        drop(Box::from_raw(m));
+    }
+}
+
+/// Free a partial handle (NULL is a no-op).
+///
+/// # Safety
+/// `p` must be NULL or a handle previously returned by this library,
+/// not yet freed.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_partial_free(p: *mut SsuPartial) {
+    if !p.is_null() {
+        drop(Box::from_raw(p));
+    }
+}
+
+/// Message of the calling thread's most recent failure (valid until the
+/// next failing call on this thread).
+#[no_mangle]
+pub extern "C" fn ssu_last_error() -> *const c_char {
+    LAST_ERROR.with(|l| l.borrow().as_ptr())
+}
+
+/// Static name for a status code (`"ok"`, `"merge"`, `"panic"`, …).
+// b"...\0" literals keep the minimum toolchain below 1.77 (no c"" syntax)
+#[allow(unknown_lints, clippy::manual_c_str_literals)]
+#[no_mangle]
+pub extern "C" fn ssu_error_name(code: c_int) -> *const c_char {
+    let s: &'static [u8] = match code {
+        0 => b"ok\0",
+        10 => b"io\0",
+        11 => b"newick\0",
+        12 => b"table\0",
+        13 => b"config\0",
+        14 => b"manifest\0",
+        15 => b"shape\0",
+        16 => b"no_artifact\0",
+        17 => b"xla\0",
+        18 => b"invalid\0",
+        19 => b"cli\0",
+        20 => b"unsupported\0",
+        21 => b"merge\0",
+        CODE_PANIC => b"panic\0",
+        _ => b"unknown\0",
+    };
+    s.as_ptr() as *const c_char
+}
+
+/// Library version string.
+#[allow(unknown_lints, clippy::manual_c_str_literals)]
+#[no_mangle]
+pub extern "C" fn ssu_version() -> *const c_char {
+    b"unifrac 0.1.0\0".as_ptr() as *const c_char
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::SynthSpec;
+    use crate::table::write_table_tsv;
+    use crate::tree::write_newick;
+
+    /// Write a small synthetic problem to disk, return the paths.
+    fn problem_files(dir: &std::path::Path) -> (CString, CString) {
+        std::fs::create_dir_all(dir).unwrap();
+        let (tree, table) =
+            SynthSpec { n_samples: 14, n_features: 96, density: 0.1, ..Default::default() }
+                .generate();
+        let t_path = dir.join("t.tsv");
+        let n_path = dir.join("t.nwk");
+        write_table_tsv(&table, &t_path).unwrap();
+        std::fs::write(&n_path, write_newick(&tree)).unwrap();
+        (
+            CString::new(t_path.to_str().unwrap()).unwrap(),
+            CString::new(n_path.to_str().unwrap()).unwrap(),
+        )
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("unifrac_capi_tests").join(name)
+    }
+
+    #[test]
+    fn one_off_partial_merge_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let (table_c, tree_c) = problem_files(&dir);
+        let metric = CString::new("weighted_normalized").unwrap();
+        unsafe {
+            // full matrix
+            let mut full: *mut SsuMatrix = ptr::null_mut();
+            let rc = ssu_one_off(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                metric.as_ptr(),
+                1.0,
+                0,
+                1,
+                &mut full,
+            );
+            assert_eq!(rc, 0, "one_off failed: {:?}", CStr::from_ptr(ssu_last_error()));
+            assert!(!full.is_null());
+            let n = ssu_matrix_n_samples(full);
+            assert_eq!(n, 14);
+            assert_eq!(ssu_matrix_get(full, 0, 0), 0.0);
+            assert!(!ssu_matrix_sample_id(full, 0).is_null());
+            assert!(ssu_matrix_sample_id(full, n).is_null());
+
+            // three partials, one persisted through save/load
+            let mut parts: Vec<*mut SsuPartial> = Vec::new();
+            for i in 0..3u32 {
+                let mut p: *mut SsuPartial = ptr::null_mut();
+                let rc = ssu_partial(
+                    table_c.as_ptr(),
+                    tree_c.as_ptr(),
+                    metric.as_ptr(),
+                    1.0,
+                    0,
+                    1,
+                    i,
+                    3,
+                    &mut p,
+                );
+                assert_eq!(rc, 0, "partial {i}: {:?}", CStr::from_ptr(ssu_last_error()));
+                parts.push(p);
+            }
+            let save_path = CString::new(dir.join("p1.bin").to_str().unwrap()).unwrap();
+            assert_eq!(ssu_partial_save(parts[1], save_path.as_ptr()), 0);
+            let mut reloaded: *mut SsuPartial = ptr::null_mut();
+            assert_eq!(ssu_partial_load(save_path.as_ptr(), &mut reloaded), 0);
+            assert_eq!(
+                ssu_partial_stripe_start(reloaded),
+                ssu_partial_stripe_start(parts[1])
+            );
+            assert_eq!(
+                ssu_partial_stripe_count(reloaded),
+                ssu_partial_stripe_count(parts[1])
+            );
+            ssu_partial_free(parts[1]);
+            parts[1] = reloaded;
+
+            // merge and compare: exactly equal to one_off
+            let const_parts: Vec<*const SsuPartial> =
+                parts.iter().map(|&p| p as *const SsuPartial).collect();
+            let mut merged: *mut SsuMatrix = ptr::null_mut();
+            let rc = ssu_merge_partials(const_parts.as_ptr(), const_parts.len(), &mut merged);
+            assert_eq!(rc, 0, "merge: {:?}", CStr::from_ptr(ssu_last_error()));
+            for i in 0..n {
+                for j in 0..n {
+                    let a = ssu_matrix_get(full, i, j);
+                    let b = ssu_matrix_get(merged, i, j);
+                    assert_eq!(a, b, "({i},{j})");
+                }
+            }
+            // condensed export
+            let len = ssu_matrix_condensed_len(merged);
+            assert_eq!(len, (n as usize) * (n as usize - 1) / 2);
+            let mut buf = vec![0.0f64; len];
+            assert_eq!(ssu_matrix_condensed(merged, buf.as_mut_ptr(), len), 0);
+            assert!(buf.iter().any(|&x| x > 0.0));
+            assert_ne!(ssu_matrix_condensed(merged, buf.as_mut_ptr(), len - 1), 0);
+
+            // TSV writer works from the handle
+            let tsv = CString::new(dir.join("dm.tsv").to_str().unwrap()).unwrap();
+            assert_eq!(ssu_matrix_write_tsv(merged, tsv.as_ptr()), 0);
+
+            for p in parts {
+                ssu_partial_free(p);
+            }
+            ssu_matrix_free(full);
+            ssu_matrix_free(merged);
+        }
+    }
+
+    #[test]
+    fn error_paths_report_codes() {
+        let metric = CString::new("weighted_normalized").unwrap();
+        let missing = CString::new("/nonexistent/table.tsv").unwrap();
+        let tree = CString::new("/nonexistent/tree.nwk").unwrap();
+        unsafe {
+            let mut out: *mut SsuMatrix = ptr::null_mut();
+            let rc = ssu_one_off(
+                missing.as_ptr(),
+                tree.as_ptr(),
+                metric.as_ptr(),
+                1.0,
+                0,
+                1,
+                &mut out,
+            );
+            assert_ne!(rc, 0);
+            assert!(out.is_null());
+            let msg = CStr::from_ptr(ssu_last_error()).to_str().unwrap();
+            assert!(!msg.is_empty());
+            // NULL argument rejection
+            let rc = ssu_one_off(
+                ptr::null(),
+                tree.as_ptr(),
+                metric.as_ptr(),
+                1.0,
+                0,
+                1,
+                &mut out,
+            );
+            assert_eq!(rc, Error::invalid("").code());
+            // bad metric name
+            let dir = tmpdir("errs");
+            let (table_c, tree_c) = problem_files(&dir);
+            let bad = CString::new("nope").unwrap();
+            let rc = ssu_one_off(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                bad.as_ptr(),
+                1.0,
+                0,
+                1,
+                &mut out,
+            );
+            assert_eq!(rc, Error::invalid("").code());
+            // merging nothing is a merge error
+            let mut merged: *mut SsuMatrix = ptr::null_mut();
+            let rc = ssu_merge_partials(ptr::null(), 0, &mut merged);
+            assert_eq!(rc, 21, "empty merge must report the merge code");
+        }
+    }
+
+    #[test]
+    fn error_names_match_error_codes() {
+        unsafe {
+            // the FFI table must agree with Error::code_name over the
+            // whole code space (both say "unknown" off the mapping), so
+            // a new Error variant cannot drift silently
+            for code in -1..=100 {
+                let got = CStr::from_ptr(ssu_error_name(code)).to_str().unwrap();
+                assert_eq!(got, Error::code_name(code), "drift at code {code}");
+            }
+            assert_eq!(
+                CStr::from_ptr(ssu_error_name(CODE_PANIC)).to_str().unwrap(),
+                "panic"
+            );
+            let v = CStr::from_ptr(ssu_version()).to_str().unwrap();
+            assert!(v.contains("unifrac"));
+        }
+    }
+}

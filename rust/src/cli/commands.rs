@@ -1,8 +1,8 @@
 //! Subcommand implementations.
 
 use super::args::Args;
+use crate::api::{merge_partials, PartialResult, UniFracJob};
 use crate::config::RunConfig;
-use crate::coordinator::{run, RunOptions};
 use crate::devicemodel::{device_by_name, paper_gpus, XEON_E5_2680V4};
 use crate::error::{Error, Result};
 use crate::matrix::CondensedMatrix;
@@ -34,6 +34,7 @@ fn resolve_config(args: &mut Args) -> Result<RunConfig> {
         cfg.dtype = v;
     }
     cfg.chips = args.get_or("chips", cfg.chips)?;
+    cfg.threads = args.get_or("threads", cfg.threads)?;
     if args.flag("sequential") {
         cfg.parallel = false;
     }
@@ -106,27 +107,11 @@ fn run_with_config(
     tree: &Phylogeny,
     table: &FeatureTable,
 ) -> Result<(CondensedMatrix, crate::coordinator::RunMetrics)> {
-    // `--engine auto` on the CPU backend is density-aware: estimate the
-    // mean embedding-row density (exact, no DP pass) so weighted
-    // metrics route to the sparse CSR kernel on EMP-like inputs. The
-    // walk is skipped whenever the auto policy would not consult it
-    // (e.g. unweighted always takes the packed kernel).
-    let wants_density = cfg.backend == "cpu"
-        && cfg.engine == "auto"
-        && cfg.metric_enum().map(EngineKind::auto_needs_density).unwrap_or(false);
-    let density = if wants_density {
-        crate::embed::embedding_density(tree, table).ok()
-    } else {
-        None
-    };
-    let opts: RunOptions = cfg.to_run_options_with_density(density)?;
-    if cfg.is_f32()? {
-        let out = run::<f32>(tree, table, &opts)?;
-        Ok((out.dm, out.metrics))
-    } else {
-        let out = run::<f64>(tree, table, &opts)?;
-        Ok((out.dm, out.metrics))
-    }
+    // one lowering hop: string config -> JobSpec -> facade. Density-aware
+    // auto-engine resolution and the f32/f64 dispatch both live behind
+    // `UniFracJob` now — the CLI no longer hand-plumbs either.
+    let out = UniFracJob::with_spec(tree, table, cfg.to_job()?).run_output()?;
+    Ok((out.dm, out.metrics))
 }
 
 pub fn compute(args: &mut Args) -> Result<()> {
@@ -164,6 +149,73 @@ pub fn compute(args: &mut Args) -> Result<()> {
     if let Some(path) = report_path {
         std::fs::write(&path, metrics.to_json().dump())?;
         println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+/// `unifrac partial --table t.tsv --tree t.nwk --index 0 --of 4 --out p0.bin`
+///
+/// Compute one stripe partial (the `--index`-th of `--of` equal
+/// splits of the stripe space) and persist it as a self-describing
+/// binary. Each partial can run on a different process or machine;
+/// `unifrac merge` reassembles the full matrix bit-identically to a
+/// single-process run of the same spec.
+pub fn partial(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let index = args.get_or("index", 0usize)?;
+    let of = args.get_or("of", 1usize)?;
+    let out = args.opt("out").unwrap_or_else(|| format!("partial_{index}_of_{of}.bin"));
+    // pure-integer validation before the (possibly huge) problem loads
+    if of == 0 {
+        return Err(Error::Cli("--of must be >= 1".into()));
+    }
+    if index >= of {
+        return Err(Error::Cli(format!("--index {index} out of range for --of {of}")));
+    }
+    let (tree, table) = load_problem(args, cfg.seed)?;
+    args.finish()?;
+    let job = UniFracJob::with_spec(&tree, &table, cfg.to_job()?);
+    let t0 = std::time::Instant::now();
+    // one geometry resolution: the facade splits the stripe space itself
+    let p = job.run_partial_index(index, of)?;
+    p.save(&out)?;
+    let range = p.stripe_range();
+    println!(
+        "wrote {out}: stripes {}..{} of {} ({} samples, {}, {}, engine {}) in {:.3}s",
+        range.start,
+        range.end,
+        crate::matrix::total_stripes(p.meta().padded_n),
+        table.n_samples(),
+        p.meta().metric,
+        p.meta().fp.name(),
+        p.meta().engine,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `unifrac merge --inputs p0.bin,p1.bin,... [--output dm.tsv]`
+pub fn merge(args: &mut Args) -> Result<()> {
+    let inputs = args.require("inputs")?;
+    let output = args.opt("output");
+    args.finish()?;
+    let parts: Vec<PartialResult> = inputs
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(PartialResult::load)
+        .collect::<Result<_>>()?;
+    let t0 = std::time::Instant::now();
+    let dm = merge_partials(&parts)?;
+    println!(
+        "merged {} partials into a {}-sample distance matrix in {:.3}s",
+        parts.len(),
+        dm.n_samples(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(out) = output {
+        dm.write_tsv(&out)?;
+        println!("  wrote {out}");
     }
     Ok(())
 }

@@ -4,6 +4,8 @@
 //! unifrac synth     --samples 256 --features 2048 --out-table t.tsv --out-tree t.nwk
 //! unifrac compute   --table t.tsv --tree t.nwk --metric weighted_normalized \
 //!                   --backend pjrt --engine pallas_tiled --dtype f64 --output dm.tsv
+//! unifrac partial   --table t.tsv --tree t.nwk --index 0 --of 4 --out p0.bin
+//! unifrac merge     --inputs p0.bin,p1.bin,p2.bin,p3.bin --output dm.tsv
 //! unifrac partition --samples 512 --chips 8         # Table-2 style chip study
 //! unifrac validate-fp32 --samples 128               # paper §4 reproduction
 //! unifrac tables --which 1,3 --scale 512            # regenerate paper tables
@@ -18,14 +20,17 @@ mod commands;
 pub use args::Args;
 
 use crate::error::{Error, Result};
+use crate::unifrac::EngineKind;
 
-/// Entry point used by `main.rs`. Returns the process exit code.
+/// Entry point used by `main.rs`. Returns the process exit code — the
+/// same stable per-error-class mapping the C ABI returns
+/// ([`Error::code`]); `0` on success.
 pub fn run_cli(argv: Vec<String>) -> i32 {
     match dispatch(argv) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
-            2
+            e.code()
         }
     }
 }
@@ -36,6 +41,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "synth" => commands::synth(&mut args),
         "compute" => commands::compute(&mut args),
+        "partial" => commands::partial(&mut args),
+        "merge" => commands::merge(&mut args),
         "partition" => commands::partition(&mut args),
         "validate-fp32" => commands::validate_fp32(&mut args),
         "tables" => commands::tables(&mut args),
@@ -45,14 +52,19 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "info" => commands::info(&mut args),
         "selftest" => commands::selftest(&mut args),
         "help" | "--help" | "-h" => {
-            print!("{}", HELP);
+            print!("{}", help_text());
             Ok(())
         }
         other => Err(Error::Cli(format!("unknown subcommand {other:?}; try `unifrac help`"))),
     }
 }
 
-pub(crate) const HELP: &str = "\
+/// Build the help text. The `--engine` accepted-values list is derived
+/// from the single `EngineKind::ALL` table — it cannot drift from the
+/// parser (ISSUE 4 satellite).
+pub(crate) fn help_text() -> String {
+    format!(
+        "\
 unifrac — Striped UniFrac on a rust+JAX+Pallas stack (PEARC'20 reproduction)
 
 USAGE: unifrac <subcommand> [flags]
@@ -60,6 +72,8 @@ USAGE: unifrac <subcommand> [flags]
 SUBCOMMANDS
   synth          generate a synthetic (tree, table) workload
   compute        compute a UniFrac distance matrix
+  partial        compute one stripe partial (1 of N) and persist it
+  merge          merge persisted partials into the full distance matrix
   partition      Table-2 style multi-chip run with per-chip timing
   validate-fp32  fp32-vs-fp64 Mantel comparison (paper §4)
   tables         regenerate the paper's tables (1-4) at a chosen scale
@@ -75,13 +89,14 @@ COMMON FLAGS
   --metric NAME       unweighted | weighted_normalized | weighted_unnormalized | generalized
   --alpha X           generalized UniFrac exponent (default 1.0)
   --backend B         cpu | pjrt
-  --engine E          cpu: auto|original|unified|batched|tiled|packed|sparse (auto
+  --engine E          cpu: auto|{engines} (auto
                       picks the bit-packed kernel for unweighted and, for weighted
                       metrics, the sparse CSR kernel below --sparse-threshold row
                       density, tiled above it; packed is unweighted-only, sparse is
                       weighted-only) ; pjrt: pallas_tiled|jnp|...
   --dtype D           f64 | f32
   --chips N           simulated chips (stripe partitions)
+  --threads N         worker threads for single-chip cpu runs (0 = all cores)
   --sequential        time chips one-by-one instead of running in parallel
   --batch N           embedding rows per batch (Figure 2 batch size)
   --block-k N         tiled engine step_size (Figure 3; honored exactly, 0 = auto)
@@ -99,4 +114,17 @@ COMMON FLAGS
   --tree FILE         input Newick tree
   --output FILE       write the distance matrix (TSV)
   --report FILE       write run metrics (JSON)
-";
+
+PARTIAL / MERGE FLAGS
+  --index I           which partial to compute (0-based)
+  --of N              how many partials the stripe space splits into
+  --out FILE          where to write the partial (binary, self-describing)
+  --inputs A,B,...    partial files to merge
+
+EXIT CODES
+  0 on success; otherwise the stable per-error-class status code shared
+  with the C ABI (see include/unifrac.h).
+",
+        engines = EngineKind::names_list()
+    )
+}

@@ -4,12 +4,16 @@
 //! TOML parser covering the subset real deployment configs use:
 //! `[section]` headers, `key = value` with strings, integers, floats,
 //! booleans and flat arrays, `#` comments.
+//!
+//! `RunConfig` is the *string-typed* boundary (file keys and CLI flag
+//! values); [`RunConfig::to_job`] lowers it directly into the canonical
+//! [`JobSpec`] — the former `RunConfig → RunOptions` hop is gone.
 
 mod toml_lite;
 
 pub use toml_lite::{TomlDoc, TomlValue};
 
-use crate::coordinator::{BackendSpec, RunOptions};
+use crate::api::{Backend, FpWidth, JobSpec};
 use crate::error::{Error, Result};
 use crate::exec::SchedulerKind;
 use crate::unifrac::{EngineKind, Metric};
@@ -26,6 +30,8 @@ pub struct RunConfig {
     pub dtype: String,
     pub chips: usize,
     pub parallel: bool,
+    /// Worker threads for single-chip CPU runs (0 = all cores).
+    pub threads: usize,
     pub batch: usize,
     pub block_k: usize,
     /// Embedding-row density below which `engine = "auto"` picks the
@@ -52,6 +58,7 @@ impl Default for RunConfig {
             dtype: "f64".into(),
             chips: 1,
             parallel: true,
+            threads: 1,
             batch: 32,
             block_k: 64,
             sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
@@ -101,6 +108,9 @@ impl RunConfig {
         if let Some(v) = get("parallel") {
             self.parallel = v.as_bool().ok_or_else(|| bad("parallel"))?;
         }
+        if let Some(v) = get("threads") {
+            self.threads = v.as_usize().ok_or_else(|| bad("threads"))?;
+        }
         if let Some(v) = get("batch") {
             self.batch = v.as_usize().ok_or_else(|| bad("batch"))?;
         }
@@ -136,57 +146,64 @@ impl RunConfig {
             .ok_or_else(|| Error::Config(format!("unknown metric {:?}", self.metric)))
     }
 
-    /// Resolve to coordinator [`RunOptions`] with no workload density
-    /// estimate (`engine = "auto"` falls back to the density-blind
-    /// policy). Callers that hold the actual problem should prefer
-    /// [`Self::to_run_options_with_density`].
-    pub fn to_run_options(&self) -> Result<RunOptions> {
-        self.to_run_options_with_density(None)
+    pub fn fp_width(&self) -> Result<FpWidth> {
+        FpWidth::parse(&self.dtype)
+            .ok_or_else(|| Error::Config(format!("unknown dtype {:?}", self.dtype)))
     }
 
-    /// As [`Self::to_run_options`], resolving `engine = "auto"` with a
-    /// measured/estimated mean embedding-row density: weighted metrics
-    /// pick the sparse CSR kernel below `sparse_threshold` and the
-    /// tiled stage otherwise.
-    pub fn to_run_options_with_density(&self, density: Option<f64>) -> Result<RunOptions> {
+    pub fn is_f32(&self) -> Result<bool> {
+        Ok(self.fp_width()? == FpWidth::F32)
+    }
+
+    /// Lower the string-typed config into the canonical [`JobSpec`] —
+    /// the single typed request every entry point consumes. Engine
+    /// `"auto"` stays unresolved (`engine: None`): the run layer
+    /// resolves it density-aware against the actual problem.
+    pub fn to_job(&self) -> Result<JobSpec> {
         let metric = self.metric_enum()?;
-        let backend = match self.backend.as_str() {
+        let (backend, engine) = match self.backend.as_str() {
             "cpu" => {
                 let engine = match self.engine.as_str() {
-                    "auto" => {
-                        EngineKind::auto_for_density(metric, density, self.sparse_threshold)
+                    "auto" => None,
+                    name => {
+                        let e = EngineKind::parse(name).ok_or_else(|| {
+                            Error::Config(format!(
+                                "unknown cpu engine {:?} (expected auto|{})",
+                                self.engine,
+                                EngineKind::names_list()
+                            ))
+                        })?;
+                        if !e.supports(metric) {
+                            return Err(Error::unsupported(format!(
+                                "engine {:?} cannot compute metric {:?} (packed is \
+                                 unweighted-only, sparse is weighted-only)",
+                                e.name(),
+                                self.metric
+                            )));
+                        }
+                        Some(e)
                     }
-                    name => EngineKind::parse(name).ok_or_else(|| {
-                        Error::Config(format!("unknown cpu engine {:?}", self.engine))
-                    })?,
                 };
-                if !engine.supports(metric) {
-                    return Err(Error::unsupported(format!(
-                        "engine {:?} cannot compute metric {:?} (packed is \
-                         unweighted-only, sparse is weighted-only)",
-                        engine.name(),
-                        self.metric
-                    )));
-                }
-                BackendSpec::Cpu { engine, block_k: self.block_k }
+                (Backend::Cpu, engine)
             }
             "pjrt" => {
-                if self.engine == "packed" || self.engine == "sparse" {
+                if matches!(
+                    EngineKind::parse(&self.engine),
+                    Some(EngineKind::Packed | EngineKind::Sparse)
+                ) {
                     return Err(Error::unsupported(format!(
                         "engine {:?} is a CPU kernel; the pjrt backend has no such \
                          artifact (use --backend cpu)",
                         self.engine
                     )));
                 }
-                BackendSpec::Pjrt {
-                    engine: if self.engine == "tiled" || self.engine == "auto" {
-                        // the CLI default engine name maps to the pallas kernel
-                        "pallas_tiled".to_string()
-                    } else {
-                        self.engine.clone()
-                    },
-                    resident: self.resident,
-                }
+                let artifact = if self.engine == "tiled" || self.engine == "auto" {
+                    // the CLI default engine name maps to the pallas kernel
+                    "pallas_tiled".to_string()
+                } else {
+                    self.engine.clone()
+                };
+                (Backend::Pjrt { artifact, resident: self.resident }, None)
             }
             other => return Err(Error::Config(format!("unknown backend {other:?}"))),
         };
@@ -196,26 +213,25 @@ impl RunConfig {
                 self.scheduler
             ))
         })?;
-        Ok(RunOptions {
+        Ok(JobSpec {
             metric,
+            precision: self.fp_width()?,
             backend,
+            engine,
+            sparse_threshold: self.sparse_threshold,
+            block_k: self.block_k,
+            batch_capacity: self.batch.max(1),
+            threads: self.threads,
             chips: self.chips.max(1),
             parallel: self.parallel,
-            batch_capacity: self.batch.max(1),
+            pad_quantum: 4,
             queue_depth: self.queue_depth.max(1),
             scheduler,
             pool_depth: self.pool_depth,
-            sparse_threshold: self.sparse_threshold,
+            chunk_stripes: 0,
+            stripe_range: None,
             artifacts_dir: Some(self.artifacts_dir.clone()),
         })
-    }
-
-    pub fn is_f32(&self) -> Result<bool> {
-        match self.dtype.as_str() {
-            "f32" | "fp32" | "float32" => Ok(true),
-            "f64" | "fp64" | "float64" => Ok(false),
-            other => Err(Error::Config(format!("unknown dtype {other:?}"))),
-        }
     }
 }
 
@@ -230,9 +246,14 @@ mod tests {
     #[test]
     fn defaults_resolve() {
         let cfg = RunConfig::default();
-        let opts = cfg.to_run_options().unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.backend, Backend::Cpu);
+        assert_eq!(job.engine, None, "auto stays unresolved until run time");
+        assert_eq!(job.precision, FpWidth::F64);
+        assert_eq!(job.chips, 1);
         assert!(!cfg.is_f32().unwrap());
+        // the density-blind fallback is the tiled stage
+        assert_eq!(job.resolved_engine(), EngineKind::Tiled);
     }
 
     #[test]
@@ -247,6 +268,7 @@ engine = "jnp"
 resident = false
 dtype = "f32"
 chips = 8
+threads = 3
 batch = 16
 scheduler = "dynamic"
 pool_depth = 16
@@ -257,67 +279,69 @@ pool_depth = 16
         cfg.apply_doc(&doc).unwrap();
         assert_eq!(cfg.metric, "unweighted");
         assert_eq!(cfg.chips, 8);
+        assert_eq!(cfg.threads, 3);
         assert!(cfg.is_f32().unwrap());
-        let opts = cfg.to_run_options().unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Pjrt { ref engine, resident: false } if engine == "jnp"));
-        assert_eq!(opts.scheduler, SchedulerKind::Dynamic);
-        assert_eq!(opts.pool_depth, 16);
+        let job = cfg.to_job().unwrap();
+        assert!(
+            matches!(job.backend, Backend::Pjrt { ref artifact, resident: false } if artifact == "jnp")
+        );
+        assert_eq!(job.precision, FpWidth::F32);
+        assert_eq!(job.scheduler, SchedulerKind::Dynamic);
+        assert_eq!(job.pool_depth, 16);
+        assert_eq!(job.threads, 3);
     }
 
     #[test]
-    fn auto_engine_follows_metric() {
-        // auto + unweighted -> packed
+    fn auto_engine_stays_deferred_and_explicit_flows_through() {
+        // auto + unweighted resolves (density-blind) to packed
         let cfg = RunConfig { metric: "unweighted".into(), ..Default::default() };
-        let opts = cfg.to_run_options().unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Packed, .. }));
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.engine, None);
+        assert_eq!(job.resolved_engine(), EngineKind::Packed);
         // explicit --engine packed flows through
         let cfg = RunConfig {
             metric: "unweighted".into(),
             engine: "packed".into(),
             ..Default::default()
         };
-        let opts = cfg.to_run_options().unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Packed, .. }));
+        assert_eq!(cfg.to_job().unwrap().engine, Some(EngineKind::Packed));
         // explicit scalar override wins over auto
         let cfg = RunConfig {
             metric: "unweighted".into(),
             engine: "batched".into(),
             ..Default::default()
         };
-        let opts = cfg.to_run_options().unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Batched, .. }));
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.engine, Some(EngineKind::Batched));
+        assert_eq!(job.resolved_engine(), EngineKind::Batched);
     }
 
     #[test]
     fn packed_with_weighted_metric_rejected() {
         let cfg = RunConfig { engine: "packed".into(), ..Default::default() };
-        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+        assert!(matches!(cfg.to_job(), Err(Error::Unsupported(_))));
     }
 
     #[test]
-    fn auto_engine_is_density_aware() {
+    fn auto_engine_is_density_aware_at_resolution() {
         // weighted + low measured density -> sparse
-        let cfg = RunConfig::default();
-        let opts = cfg.to_run_options_with_density(Some(0.05)).unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Sparse, .. }));
+        let job = RunConfig::default().to_job().unwrap();
+        assert_eq!(job.resolved_engine_for(Some(0.05)), EngineKind::Sparse);
         // dense input keeps the tiled stage
-        let opts = cfg.to_run_options_with_density(Some(0.8)).unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        assert_eq!(job.resolved_engine_for(Some(0.8)), EngineKind::Tiled);
         // no estimate -> density-blind default
-        let opts = cfg.to_run_options_with_density(None).unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        assert_eq!(job.resolved_engine_for(None), EngineKind::Tiled);
         // the config threshold steers the cut
         let tight = RunConfig { sparse_threshold: 0.01, ..Default::default() };
-        let opts = tight.to_run_options_with_density(Some(0.05)).unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Tiled, .. }));
+        let job = tight.to_job().unwrap();
+        assert_eq!(job.resolved_engine_for(Some(0.05)), EngineKind::Tiled);
         // explicit --engine sparse flows through
         let cfg = RunConfig { engine: "sparse".into(), ..Default::default() };
-        let opts = cfg.to_run_options().unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Sparse, .. }));
+        assert_eq!(cfg.to_job().unwrap().engine, Some(EngineKind::Sparse));
         // unweighted never picks sparse, density or not
         let cfg = RunConfig { metric: "unweighted".into(), ..Default::default() };
-        let opts = cfg.to_run_options_with_density(Some(0.01)).unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Packed, .. }));
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.resolved_engine_for(Some(0.01)), EngineKind::Packed);
     }
 
     #[test]
@@ -327,7 +351,7 @@ pool_depth = 16
             engine: "sparse".into(),
             ..Default::default()
         };
-        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+        assert!(matches!(cfg.to_job(), Err(Error::Unsupported(_))));
     }
 
     #[test]
@@ -337,7 +361,7 @@ pool_depth = 16
             engine: "sparse".into(),
             ..Default::default()
         };
-        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+        assert!(matches!(cfg.to_job(), Err(Error::Unsupported(_))));
     }
 
     #[test]
@@ -346,8 +370,8 @@ pool_depth = 16
         let mut cfg = RunConfig::default();
         cfg.apply_doc(&doc).unwrap();
         assert_eq!(cfg.sparse_threshold, 0.4);
-        let opts = cfg.to_run_options_with_density(Some(0.3)).unwrap();
-        assert!(matches!(opts.backend, BackendSpec::Cpu { engine: EngineKind::Sparse, .. }));
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.resolved_engine_for(Some(0.3)), EngineKind::Sparse);
     }
 
     #[test]
@@ -358,41 +382,54 @@ pool_depth = 16
             metric: "unweighted".into(),
             ..Default::default()
         };
-        assert!(matches!(cfg.to_run_options(), Err(Error::Unsupported(_))));
+        assert!(matches!(cfg.to_job(), Err(Error::Unsupported(_))));
     }
 
     #[test]
     fn pjrt_auto_maps_to_pallas() {
         let cfg = RunConfig { backend: "pjrt".into(), ..Default::default() };
-        let opts = cfg.to_run_options().unwrap();
+        let job = cfg.to_job().unwrap();
         assert!(
-            matches!(opts.backend, BackendSpec::Pjrt { ref engine, .. } if engine == "pallas_tiled")
+            matches!(job.backend, Backend::Pjrt { ref artifact, .. } if artifact == "pallas_tiled")
         );
     }
 
     #[test]
     fn rejects_unknown_scheduler() {
         let cfg = RunConfig { scheduler: "greedy".into(), ..Default::default() };
-        assert!(cfg.to_run_options().is_err());
+        assert!(cfg.to_job().is_err());
     }
 
     #[test]
     fn pjrt_tiled_maps_to_pallas() {
         let mut cfg = RunConfig { backend: "pjrt".into(), ..Default::default() };
         cfg.engine = "tiled".into();
-        let opts = cfg.to_run_options().unwrap();
+        let job = cfg.to_job().unwrap();
         assert!(
-            matches!(opts.backend, BackendSpec::Pjrt { ref engine, .. } if engine == "pallas_tiled")
+            matches!(job.backend, Backend::Pjrt { ref artifact, .. } if artifact == "pallas_tiled")
         );
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_accepted_values() {
+        let cfg = RunConfig { engine: "warp".into(), ..Default::default() };
+        let err = cfg.to_job().expect_err("unknown engine must fail");
+        let msg = err.to_string();
+        // the accepted-values list is derived from EngineKind::ALL, so
+        // every engine name must appear in the message
+        for k in EngineKind::ALL {
+            assert!(msg.contains(k.name()), "{msg:?} missing {}", k.name());
+        }
     }
 
     #[test]
     fn rejects_unknown() {
         let cfg = RunConfig { metric: "nope".into(), ..Default::default() };
-        assert!(cfg.to_run_options().is_err());
+        assert!(cfg.to_job().is_err());
         let cfg = RunConfig { backend: "cuda".into(), ..Default::default() };
-        assert!(cfg.to_run_options().is_err());
+        assert!(cfg.to_job().is_err());
         let cfg = RunConfig { dtype: "f16".into(), ..Default::default() };
         assert!(cfg.is_f32().is_err());
+        assert!(cfg.to_job().is_err());
     }
 }

@@ -19,16 +19,23 @@ pub use metrics::RunMetrics;
 pub use partition::{plan_chips, ChipPlan, ChipSpec};
 pub use pipeline::{run_chips_parallel, run_chips_sequential};
 
+// The coordinator consumed its own `RunOptions` until the `UniFracJob`
+// redesign; it now runs the canonical `api::JobSpec` directly, and the
+// old name survives as an alias.
+pub use crate::api::{Backend, JobSpec};
+pub type RunOptions = JobSpec;
+
 use crate::error::Result;
-use crate::exec::SchedulerKind;
 use crate::matrix::CondensedMatrix;
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
-use crate::unifrac::{EngineKind, Metric};
-use std::path::PathBuf;
+use crate::unifrac::EngineKind;
 
-/// How a chip executes stripe updates.
+/// How one chip executes stripe updates — the *lowered* per-chip
+/// backend descriptor `plan_chips` derives from a [`JobSpec`] (with the
+/// density-aware auto engine already resolved), analogous to the exec
+/// layer's `WorkerSpec`.
 #[derive(Clone, Debug)]
 pub enum BackendSpec {
     /// Pure-rust CPU engine (the paper's CPU columns).
@@ -50,62 +57,22 @@ impl BackendSpec {
     }
 }
 
-/// Options for [`run`].
-#[derive(Clone, Debug)]
-pub struct RunOptions {
-    pub metric: Metric,
-    pub backend: BackendSpec,
-    /// Number of simulated chips (stripe-range partitions).
-    pub chips: usize,
-    /// Run chips concurrently on threads (true) or one after another
-    /// while timing each (false — the Table-2 measurement mode).
-    pub parallel: bool,
-    /// Embedding rows per batch (Figure 2's `filled_embs`).
-    pub batch_capacity: usize,
-    /// Bounded queue depth per chip in parallel mode (backpressure).
-    pub queue_depth: usize,
-    /// Stripe scheduling: static contiguous ranges or dynamic chunk
-    /// stealing for heterogeneous chips.
-    pub scheduler: SchedulerKind,
-    /// Recycled batch buffers kept by the exec pool; 0 disables pooling.
-    pub pool_depth: usize,
-    /// Row-density cut the sparse engine's `rows_sparse`/`rows_dense`
-    /// counters classify against (`--sparse-threshold`).
-    pub sparse_threshold: f64,
-    /// Where the AOT artifacts live (PJRT backends).
-    pub artifacts_dir: Option<PathBuf>,
-}
-
-impl Default for RunOptions {
-    fn default() -> Self {
-        Self {
-            metric: Metric::WeightedNormalized,
-            backend: BackendSpec::cpu_tiled(),
-            chips: 1,
-            parallel: true,
-            batch_capacity: 32,
-            queue_depth: 4,
-            scheduler: SchedulerKind::Static,
-            pool_depth: 8,
-            sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
-            artifacts_dir: Some(PathBuf::from("artifacts")),
-        }
-    }
-}
-
 /// Run output: the distance matrix plus run accounting.
 pub struct RunOutput {
     pub dm: CondensedMatrix,
     pub metrics: RunMetrics,
 }
 
-/// Top-level driver: plan chips, execute the pipeline, assemble.
+/// Top-level driver: resolve the backend, plan chips, execute the
+/// pipeline, assemble.
 pub fn run<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
-    opts: &RunOptions,
+    opts: &JobSpec,
 ) -> Result<RunOutput> {
-    let plan = plan_chips::<R>(table.n_samples(), opts)?;
+    crate::unifrac::compute::reject_stripe_range(opts)?;
+    let backend = opts.resolve_backend_spec(tree, table)?;
+    let plan = plan_chips::<R>(table.n_samples(), opts, &backend)?;
     let (blocks, mut metrics) = if opts.parallel {
         run_chips_parallel::<R>(tree, table, &plan, opts)?
     } else {
@@ -126,6 +93,7 @@ pub fn run<R: XlaReal>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::SchedulerKind;
     use crate::synth::SynthSpec;
     use crate::unifrac::{compute_unifrac, ComputeOptions};
 

@@ -1,11 +1,9 @@
 //! Chip planning: map the stripe set onto simulated devices.
 
-use super::{BackendSpec, RunOptions};
-use crate::embed::default_padding;
+use super::{BackendSpec, JobSpec};
 use crate::error::{Error, Result};
 use crate::matrix::total_stripes;
 use crate::runtime::{ArtifactQuery, Manifest, XlaReal};
-use crate::unifrac::EngineKind;
 
 /// One simulated chip: a stripe range plus its backend. Plain data so it
 /// can cross threads (PJRT clients are constructed per-thread).
@@ -37,21 +35,27 @@ pub struct ChipPlan {
     pub chips: Vec<ChipSpec>,
 }
 
-/// Build the chip plan for `n_samples` under `opts`.
+/// Build the chip plan for `n_samples` under `opts`, with `backend`
+/// already resolved from the job spec (the coordinator resolves the
+/// density-aware auto engine once, before planning).
 ///
-/// CPU backends pad to the tile quantum; PJRT backends pad to the
-/// selected artifact's chunk width (and verify the problem fits — one
-/// artifact chunk is the unit of this reproduction; larger sample counts
-/// use the CPU engines, as Table 2's scale does in the benches).
-pub fn plan_chips<R: XlaReal>(n_samples: usize, opts: &RunOptions) -> Result<ChipPlan> {
+/// CPU backends pad via the spec's shared padding rule
+/// (`JobSpec::padded_width`); PJRT backends pad to the selected
+/// artifact's chunk width (and verify the problem fits — one artifact
+/// chunk is the unit of this reproduction; larger sample counts use the
+/// CPU engines, as Table 2's scale does in the benches).
+pub fn plan_chips<R: XlaReal>(
+    n_samples: usize,
+    opts: &JobSpec,
+    backend: &BackendSpec,
+) -> Result<ChipPlan> {
     if n_samples < 2 {
         return Err(Error::Shape("need >= 2 samples".into()));
     }
     let dtype = if R::BYTES == 4 { "float32" } else { "float64" };
-    let (padded, artifact, block_stripes, batch_capacity) = match &opts.backend {
-        BackendSpec::Cpu { engine, block_k } => {
-            let quantum = if *engine == EngineKind::Tiled { (*block_k).clamp(4, 64) } else { 4 };
-            let padded = default_padding(n_samples, quantum);
+    let (padded, artifact, block_stripes, batch_capacity) = match backend {
+        BackendSpec::Cpu { engine, .. } => {
+            let padded = opts.padded_width(*engine, n_samples);
             (padded, None, 0, opts.batch_capacity.max(1))
         }
         BackendSpec::Pjrt { engine, .. } => {
@@ -75,7 +79,7 @@ pub fn plan_chips<R: XlaReal>(n_samples: usize, opts: &RunOptions) -> Result<Chi
             chip_id,
             start,
             count,
-            backend: opts.backend.clone(),
+            backend: backend.clone(),
         })
         .collect();
     Ok(ChipPlan { padded_n: padded, n_stripes, artifact, block_stripes, batch_capacity, chips })
@@ -90,7 +94,7 @@ mod tests {
     #[test]
     fn cpu_plan_covers_all_stripes() {
         let opts = RunOptions { chips: 4, artifacts_dir: None, ..Default::default() };
-        let plan = plan_chips::<f64>(100, &opts).unwrap();
+        let plan = plan_chips::<f64>(100, &opts, &BackendSpec::cpu_tiled()).unwrap();
         assert!(plan.padded_n >= 100);
         assert_eq!(plan.n_stripes, plan.padded_n / 2);
         let covered: usize = plan.chips.iter().map(|c| c.count).sum();
@@ -108,7 +112,7 @@ mod tests {
     #[test]
     fn more_chips_than_stripes_clamped() {
         let opts = RunOptions { chips: 1000, artifacts_dir: None, ..Default::default() };
-        let plan = plan_chips::<f64>(10, &opts).unwrap();
+        let plan = plan_chips::<f64>(10, &opts, &BackendSpec::cpu_tiled()).unwrap();
         assert!(plan.chips.len() <= plan.n_stripes);
     }
 
@@ -118,13 +122,13 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return;
         }
+        let backend = BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: false };
         let opts = RunOptions {
             metric: Metric::WeightedNormalized,
-            backend: BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: false },
             artifacts_dir: Some(dir),
             ..Default::default()
         };
-        let plan = plan_chips::<f64>(50, &opts).unwrap();
+        let plan = plan_chips::<f64>(50, &opts, &backend).unwrap();
         assert!(plan.padded_n >= 50);
         assert!(plan.artifact.is_some());
         assert!(plan.block_stripes > 0);
@@ -136,11 +140,8 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return;
         }
-        let opts = RunOptions {
-            backend: BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: false },
-            artifacts_dir: Some(dir),
-            ..Default::default()
-        };
-        assert!(plan_chips::<f64>(1_000_000, &opts).is_err());
+        let backend = BackendSpec::Pjrt { engine: "pallas_tiled".into(), resident: false };
+        let opts = RunOptions { artifacts_dir: Some(dir), ..Default::default() };
+        assert!(plan_chips::<f64>(1_000_000, &opts, &backend).is_err());
     }
 }

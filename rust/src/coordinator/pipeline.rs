@@ -15,7 +15,7 @@
 
 use super::metrics::RunMetrics;
 use super::partition::ChipPlan;
-use super::{BackendSpec, RunOptions};
+use super::{BackendSpec, JobSpec};
 use crate::error::{Error, Result};
 use crate::exec::{self, DriveSpec, ExecReport, SchedulerKind, WorkerBuild, WorkerSpec};
 use crate::matrix::StripeBlock;
@@ -24,7 +24,7 @@ use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
 
 /// Translate a chip backend into an exec worker spec.
-fn worker_spec(backend: &BackendSpec, opts: &RunOptions) -> Result<WorkerSpec> {
+fn worker_spec(backend: &BackendSpec, opts: &JobSpec) -> Result<WorkerSpec> {
     match backend {
         BackendSpec::Cpu { engine, block_k } => Ok(WorkerSpec::Cpu {
             engine: *engine,
@@ -45,13 +45,15 @@ fn worker_spec(backend: &BackendSpec, opts: &RunOptions) -> Result<WorkerSpec> {
     }
 }
 
-fn base_metrics(plan: &ChipPlan, opts: &RunOptions, n_samples: usize) -> RunMetrics {
+fn base_metrics(plan: &ChipPlan, opts: &JobSpec, n_samples: usize) -> RunMetrics {
     RunMetrics {
-        backend: match &opts.backend {
-            BackendSpec::Cpu { engine, .. } => format!("cpu/{}", engine.name()),
-            BackendSpec::Pjrt { engine, resident } => {
+        // all chips share one lowered backend; label from the plan
+        backend: match plan.chips.first().map(|c| &c.backend) {
+            Some(BackendSpec::Cpu { engine, .. }) => format!("cpu/{}", engine.name()),
+            Some(BackendSpec::Pjrt { engine, resident }) => {
                 format!("pjrt/{engine}{}", if *resident { "+resident" } else { "" })
             }
+            None => "cpu".to_string(),
         },
         scheduler: opts.scheduler.name().to_string(),
         artifact: plan.artifact.clone(),
@@ -62,7 +64,7 @@ fn base_metrics(plan: &ChipPlan, opts: &RunOptions, n_samples: usize) -> RunMetr
     }
 }
 
-fn drive_spec(plan: &ChipPlan, opts: &RunOptions, workers: Vec<WorkerBuild>) -> DriveSpec {
+fn drive_spec(plan: &ChipPlan, opts: &JobSpec, workers: Vec<WorkerBuild>) -> DriveSpec {
     DriveSpec {
         metric: opts.metric,
         padded_n: plan.padded_n,
@@ -106,7 +108,7 @@ pub fn run_chips_sequential<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     plan: &ChipPlan,
-    opts: &RunOptions,
+    opts: &JobSpec,
 ) -> Result<(Vec<StripeBlock<R>>, RunMetrics)> {
     let t_all = std::time::Instant::now();
     let mut metrics = base_metrics(plan, opts, table.n_samples());
@@ -140,7 +142,7 @@ pub fn run_chips_parallel<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     plan: &ChipPlan,
-    opts: &RunOptions,
+    opts: &JobSpec,
 ) -> Result<(Vec<StripeBlock<R>>, RunMetrics)> {
     let t_all = std::time::Instant::now();
     let mut metrics = base_metrics(plan, opts, table.n_samples());

@@ -1,5 +1,62 @@
 //! Unified error type for the whole crate (hand-rolled: the offline
 //! build environment ships no `thiserror`).
+//!
+//! Every variant carries a **stable numeric status code**
+//! ([`Error::code`]) shared by the C ABI (`capi::`) and the CLI exit
+//! path — one mapping, defined here, tested for uniqueness below.
+
+/// Typed validation failure while merging stripe partials into a full
+/// distance matrix (`api::merge_partials` /
+/// `matrix::CondensedMatrix::from_stripes`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MergeError {
+    /// No partials / stripe blocks were provided at all.
+    Empty,
+    /// Stripe `stripe` is covered by no partial (the partition has a
+    /// hole — some worker's output is missing).
+    Gap { stripe: usize },
+    /// Stripe `stripe` is covered twice (overlapping ranges).
+    Overlap { stripe: usize },
+    /// Partials were computed over different padded chunk widths.
+    WidthMismatch { expected: usize, got: usize },
+    /// Partials disagree on the real sample count.
+    SampleMismatch { expected: usize, got: usize },
+    /// Partials disagree on the sample id ordering.
+    IdMismatch,
+    /// Partials were computed under different UniFrac metrics.
+    MetricMismatch { expected: String, got: String },
+    /// Partials were computed at different floating-point widths.
+    PrecisionMismatch { expected: &'static str, got: &'static str },
+}
+
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MergeError::Empty => write!(f, "no partials to merge"),
+            MergeError::Gap { stripe } => {
+                write!(f, "stripe {stripe} is covered by no partial (gap in the partition)")
+            }
+            MergeError::Overlap { stripe } => {
+                write!(f, "stripe {stripe} is covered twice (overlapping partials)")
+            }
+            MergeError::WidthMismatch { expected, got } => {
+                write!(f, "padded width mismatch across partials: {expected} vs {got}")
+            }
+            MergeError::SampleMismatch { expected, got } => {
+                write!(f, "sample count mismatch across partials: {expected} vs {got}")
+            }
+            MergeError::IdMismatch => {
+                write!(f, "sample id ordering differs across partials")
+            }
+            MergeError::MetricMismatch { expected, got } => {
+                write!(f, "metric mismatch across partials: {expected} vs {got}")
+            }
+            MergeError::PrecisionMismatch { expected, got } => {
+                write!(f, "precision mismatch across partials: {expected} vs {got}")
+            }
+        }
+    }
+}
 
 #[derive(Debug)]
 pub enum Error {
@@ -16,6 +73,9 @@ pub enum Error {
     /// A valid component was asked for a combination it cannot compute
     /// (e.g. the bit-packed engine on a weighted metric).
     Unsupported(String),
+    /// Partial/merge validation failure (gaps, overlaps, metadata
+    /// mismatch) — see [`MergeError`].
+    Merge(MergeError),
 }
 
 impl std::fmt::Display for Error {
@@ -34,6 +94,7 @@ impl std::fmt::Display for Error {
             Error::Invalid(m) => write!(f, "invalid argument: {m}"),
             Error::Cli(m) => write!(f, "cli error: {m}"),
             Error::Unsupported(m) => write!(f, "unsupported combination: {m}"),
+            Error::Merge(m) => write!(f, "partial merge error: {m}"),
         }
     }
 }
@@ -60,7 +121,17 @@ impl From<xla::Error> for Error {
     }
 }
 
+impl From<MergeError> for Error {
+    fn from(e: MergeError) -> Self {
+        Error::Merge(e)
+    }
+}
+
 pub type Result<T> = std::result::Result<T, Error>;
+
+/// Status code the C ABI reserves for a caught panic at an FFI boundary
+/// (never produced by [`Error::code`]).
+pub const CODE_PANIC: i32 = 99;
 
 impl Error {
     pub fn invalid(msg: impl Into<String>) -> Self {
@@ -69,6 +140,51 @@ impl Error {
 
     pub fn unsupported(msg: impl Into<String>) -> Self {
         Error::Unsupported(msg.into())
+    }
+
+    /// Stable numeric status code for this error class — the single
+    /// mapping shared by `capi::` status returns and the CLI exit code
+    /// (`cli::run_cli`). `0` is reserved for success and
+    /// [`CODE_PANIC`] for caught FFI panics; every variant maps to a
+    /// distinct small positive integer (they all fit a process exit
+    /// status). The match is exhaustive on purpose: adding a variant
+    /// without assigning a code is a compile error.
+    pub fn code(&self) -> i32 {
+        match self {
+            Error::Io(_) => 10,
+            Error::Newick { .. } => 11,
+            Error::Table(_) => 12,
+            Error::Config(_) => 13,
+            Error::Manifest(_) => 14,
+            Error::Shape(_) => 15,
+            Error::NoArtifact(_) => 16,
+            Error::Xla(_) => 17,
+            Error::Invalid(_) => 18,
+            Error::Cli(_) => 19,
+            Error::Unsupported(_) => 20,
+            Error::Merge(_) => 21,
+        }
+    }
+
+    /// Short stable name for a status code (C ABI `ssu_error_name`).
+    pub fn code_name(code: i32) -> &'static str {
+        match code {
+            0 => "ok",
+            10 => "io",
+            11 => "newick",
+            12 => "table",
+            13 => "config",
+            14 => "manifest",
+            15 => "shape",
+            16 => "no_artifact",
+            17 => "xla",
+            18 => "invalid",
+            19 => "cli",
+            20 => "unsupported",
+            21 => "merge",
+            CODE_PANIC => "panic",
+            _ => "unknown",
+        }
     }
 }
 
@@ -88,5 +204,53 @@ mod tests {
     fn xla_errors_convert() {
         let e: Error = xla::Error("boom".into()).into();
         assert!(e.to_string().contains("xla/pjrt error"));
+    }
+
+    #[test]
+    fn merge_errors_convert_and_format() {
+        let e: Error = MergeError::Gap { stripe: 7 }.into();
+        assert_eq!(e.code(), 21);
+        assert!(e.to_string().contains("stripe 7"));
+        assert!(MergeError::PrecisionMismatch { expected: "f64", got: "f32" }
+            .to_string()
+            .contains("f32"));
+    }
+
+    /// One instance of every variant — keep in sync with the enum (the
+    /// exhaustive `code()` match guarantees a compile error if a new
+    /// variant is added without extending this list's coverage intent).
+    fn all_variants() -> Vec<Error> {
+        vec![
+            Error::Io(std::io::Error::new(std::io::ErrorKind::NotFound, "x")),
+            Error::Newick { at: 0, msg: String::new() },
+            Error::Table(String::new()),
+            Error::Config(String::new()),
+            Error::Manifest(String::new()),
+            Error::Shape(String::new()),
+            Error::NoArtifact(String::new()),
+            Error::Xla(xla::Error("x".into())),
+            Error::Invalid(String::new()),
+            Error::Cli(String::new()),
+            Error::Unsupported(String::new()),
+            Error::Merge(MergeError::Empty),
+        ]
+    }
+
+    #[test]
+    fn status_codes_unique_and_exit_safe() {
+        let variants = all_variants();
+        let codes: std::collections::BTreeSet<i32> =
+            variants.iter().map(|e| e.code()).collect();
+        // unique: no two variants share a code
+        assert_eq!(codes.len(), variants.len(), "duplicate status codes");
+        for e in &variants {
+            let c = e.code();
+            // 0 is success, 99 is the FFI panic sentinel; exit codes
+            // must fit a u8 for the process exit status
+            assert!(c > 0 && c < 99, "{e:?} -> {c}");
+            assert_ne!(Error::code_name(c), "unknown", "{e:?} -> {c} unnamed");
+        }
+        assert_eq!(Error::code_name(0), "ok");
+        assert_eq!(Error::code_name(CODE_PANIC), "panic");
     }
 }

@@ -4,6 +4,37 @@
 //! GPUs"* (Sfiligoi, McDonald, Knight; PEARC'20). See `DESIGN.md` for the
 //! system inventory and `EXPERIMENTS.md` for paper-vs-measured results.
 //!
+//! ## Quickstart
+//!
+//! The public entry point is the [`api::UniFracJob`] facade — one
+//! builder over a tree + feature table that lowers to the canonical
+//! [`api::JobSpec`] and covers full runs, stripe partials and merges:
+//!
+//! ```no_run
+//! use unifrac::{Metric, UniFracJob};
+//! use unifrac::synth::SynthSpec;
+//!
+//! let (tree, table) = SynthSpec::emp_like(128, 42).generate();
+//! let dm = UniFracJob::new(&tree, &table)
+//!     .metric(Metric::Unweighted)
+//!     .threads(0) // all cores
+//!     .run()?;
+//! println!("d(0,1) = {:.4}", dm.get(0, 1));
+//!
+//! // distributed: compute stripe partials anywhere, merge them later
+//! let job = UniFracJob::new(&tree, &table);
+//! let total = job.total_stripes()?;
+//! let a = job.run_partial_range(0, total / 2)?;
+//! let b = job.run_partial_range(total / 2, total - total / 2)?;
+//! let merged = unifrac::merge_partials(&[a, b])?;
+//! assert_eq!(merged.max_abs_diff(&job.run()?), 0.0);
+//! # Ok::<(), unifrac::Error>(())
+//! ```
+//!
+//! The same three operations — `one_off`, `partial`, `merge` — are
+//! exported as a C shared library (`capi`, see `include/unifrac.h`),
+//! linkable from any language.
+//!
 //! Architecture (Python never on the compute path):
 //! - **Layer 1** (`python/compile/kernels/`): Pallas stripe-update kernel,
 //!   AOT-lowered at build time.
@@ -13,8 +44,8 @@
 //!   compute engines, the unified streaming execution core (`exec`:
 //!   batch pool + stripe scheduler + workers), the chip
 //!   partitioner/coordinator, the PJRT runtime that executes the AOT
-//!   artifacts, statistics, and the CLI. See `ARCHITECTURE.md` for the
-//!   layer diagram.
+//!   artifacts, statistics, the `api` facade, the C ABI (`capi`) and
+//!   the CLI. See `ARCHITECTURE.md` for the layer diagram.
 
 pub mod error;
 pub mod matrix;
@@ -25,6 +56,8 @@ pub mod util;
 
 pub use error::{Error, Result};
 
+pub mod api;
+pub mod capi;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -35,3 +68,6 @@ pub mod report;
 pub mod runtime;
 pub mod stats;
 pub mod unifrac;
+
+pub use api::{merge_partials, Backend, FpWidth, JobSpec, PartialResult, UniFracJob};
+pub use unifrac::Metric;

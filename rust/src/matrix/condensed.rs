@@ -1,7 +1,7 @@
 //! Condensed (upper-triangle) pairwise distance matrix + stripe assembly.
 
 use super::stripes::{total_stripes, StripeBlock};
-use crate::error::{Error, Result};
+use crate::error::{Error, MergeError, Result};
 use crate::util::{pearson, Real};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
@@ -64,21 +64,34 @@ impl CondensedMatrix {
     /// columns are ignored (DESIGN.md §4: padding preserves real pairs).
     /// `finalize(num, den) -> distance` applies the metric's final ratio.
     /// Every real pair must be covered by exactly the stripes
-    /// `0..total_stripes(P)` over the padded width `P`; missing stripes
-    /// are an error.
-    pub fn from_stripes<R: Real>(
+    /// `0..total_stripes(P)` over the padded width `P`; gaps, overlaps
+    /// and width mismatches are rejected with typed
+    /// [`MergeError`]s (the validation layer `api::merge_partials`
+    /// builds on).
+    ///
+    /// Accepts owned (`&[StripeBlock<R>]`) or borrowed
+    /// (`&[&StripeBlock<R>]`) blocks — assembly only reads them, so
+    /// callers holding large payloads elsewhere (partial merges) need
+    /// no copy.
+    pub fn from_stripes<R: Real, B: std::borrow::Borrow<StripeBlock<R>>>(
         n_real: usize,
         ids: Vec<String>,
-        blocks: &[StripeBlock<R>],
+        blocks: &[B],
         finalize: impl Fn(f64, f64) -> f64,
     ) -> Result<Self> {
+        // fully-qualified borrow: unambiguous against the blanket impls
+        fn as_block<R: Real, B: std::borrow::Borrow<StripeBlock<R>>>(
+            b: &B,
+        ) -> &StripeBlock<R> {
+            <B as std::borrow::Borrow<StripeBlock<R>>>::borrow(b)
+        }
         if n_real < 2 {
             return Err(Error::Shape("need at least 2 samples".into()));
         }
         let padded = blocks
             .first()
-            .map(|b| b.n_samples())
-            .ok_or_else(|| Error::Shape("no stripe blocks".into()))?;
+            .map(|b| as_block(b).n_samples())
+            .ok_or(Error::Merge(MergeError::Empty))?;
         if padded < n_real {
             return Err(Error::Shape(format!(
                 "blocks are {padded} wide but {n_real} samples requested"
@@ -88,8 +101,12 @@ impl CondensedMatrix {
         let mut covered = vec![false; needed];
         let mut m = Self::zeros(n_real, ids);
         for block in blocks {
+            let block = as_block(block);
             if block.n_samples() != padded {
-                return Err(Error::Shape("inconsistent block widths".into()));
+                return Err(Error::Merge(MergeError::WidthMismatch {
+                    expected: padded,
+                    got: block.n_samples(),
+                }));
             }
             for s_local in 0..block.n_stripes() {
                 let s = block.start() + s_local;
@@ -97,7 +114,7 @@ impl CondensedMatrix {
                     continue; // harmless over-computation beyond coverage
                 }
                 if covered[s] {
-                    return Err(Error::Shape(format!("stripe {s} covered twice")));
+                    return Err(Error::Merge(MergeError::Overlap { stripe: s }));
                 }
                 covered[s] = true;
                 let num = block.num_row(s_local);
@@ -112,7 +129,7 @@ impl CondensedMatrix {
             }
         }
         if let Some(missing) = covered.iter().position(|&c| !c) {
-            return Err(Error::Shape(format!("stripe {missing} never computed")));
+            return Err(Error::Merge(MergeError::Gap { stripe: missing }));
         }
         Ok(m)
     }
@@ -316,11 +333,30 @@ mod tests {
     fn stripe_assembly_detects_gaps_and_overlap() {
         let n = 8usize;
         let b0 = StripeBlock::<f64>::new(n, 0, 2);
-        assert!(CondensedMatrix::from_stripes(n, vec![], &[b0.clone()], |a, _| a).is_err());
-        let b_dup = StripeBlock::<f64>::new(n, 1, 3);
+        let err = CondensedMatrix::from_stripes(n, vec![], &[b0.clone()], |a, _| a)
+            .expect_err("gap must be rejected");
         assert!(
+            matches!(err, Error::Merge(MergeError::Gap { stripe: 2 })),
+            "got {err:?}"
+        );
+        let b_dup = StripeBlock::<f64>::new(n, 1, 3);
+        let err =
             CondensedMatrix::from_stripes(n, vec![], &[b0, b_dup.clone(), b_dup], |a, _| a)
-                .is_err()
+                .expect_err("overlap must be rejected");
+        assert!(matches!(err, Error::Merge(MergeError::Overlap { .. })), "got {err:?}");
+        // no blocks at all
+        let none: [StripeBlock<f64>; 0] = [];
+        let err = CondensedMatrix::from_stripes(n, vec![], &none, |a, _| a)
+            .expect_err("empty must be rejected");
+        assert!(matches!(err, Error::Merge(MergeError::Empty)), "got {err:?}");
+        // inconsistent widths
+        let wide = StripeBlock::<f64>::new(10, 0, 5);
+        let narrow = StripeBlock::<f64>::new(8, 0, 4);
+        let err = CondensedMatrix::from_stripes(8, vec![], &[wide, narrow], |a, _| a)
+            .expect_err("width mismatch must be rejected");
+        assert!(
+            matches!(err, Error::Merge(MergeError::WidthMismatch { expected: 10, got: 8 })),
+            "got {err:?}"
         );
     }
 

@@ -9,84 +9,21 @@
 use super::bitpack::{PackedBatch, LANES};
 use super::engines::EngineKind;
 use super::metric::Metric;
-use super::sparse::DEFAULT_SPARSE_THRESHOLD;
-use crate::embed::{default_padding, embedding_density, PackedStream};
-use crate::exec::{self, DriveSpec, SchedulerKind, WorkerBuild, WorkerSpec};
+use crate::embed::PackedStream;
+use crate::exec::{self, DriveSpec, WorkerBuild};
 use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
+use crate::util::Real;
 
 pub use crate::exec::split_ranges;
 
-/// Options for [`compute_unifrac`].
-#[derive(Clone, Debug)]
-pub struct ComputeOptions {
-    pub metric: Metric,
-    /// Stripe engine. `None` = auto: the bit-packed kernel for
-    /// [`Metric::Unweighted`] (presence bits + byte-LUT branch folding);
-    /// weighted metrics are density-aware — the sparse CSR kernel when
-    /// the estimated mean embedding-row density falls below
-    /// [`ComputeOptions::sparse_threshold`], `Tiled` otherwise.
-    pub engine: Option<EngineKind>,
-    /// Embedding-row density below which auto-selection picks the
-    /// sparse CSR kernel for weighted metrics (`--sparse-threshold`).
-    pub sparse_threshold: f64,
-    /// Tiled engine's `step_size` (paper Figure 3).
-    pub block_k: usize,
-    /// Embedding rows per batch (paper Figure 2's `filled_embs`).
-    pub batch_capacity: usize,
-    /// Worker threads (stripe-range parallelism). 0 = available cores.
-    pub threads: usize,
-    /// Pad the sample axis to a multiple of this (alignment, §3).
-    pub pad_quantum: usize,
-    /// Bounded queue depth per worker (backpressure).
-    pub queue_depth: usize,
-    /// Stripe scheduling strategy (static ranges / dynamic stealing).
-    pub scheduler: SchedulerKind,
-    /// Recycled batch buffers kept by the pool; 0 disables pooling.
-    pub pool_depth: usize,
-    /// Dynamic steal-task granularity in stripes; 0 = auto.
-    pub chunk_stripes: usize,
-}
-
-impl ComputeOptions {
-    /// The engine this run will use when no density estimate is at
-    /// hand: the explicit choice, or the metric-driven default (packed
-    /// for unweighted, tiled otherwise). The compute driver itself uses
-    /// [`Self::resolved_engine_for`] with the measured workload density.
-    pub fn resolved_engine(&self) -> EngineKind {
-        self.resolved_engine_for(None)
-    }
-
-    /// Density-aware resolution: the explicit choice wins; otherwise
-    /// unweighted takes the bit-packed kernel and weighted metrics take
-    /// the sparse CSR kernel below `sparse_threshold` (tiled above it,
-    /// or when `density` is unknown).
-    pub fn resolved_engine_for(&self, density: Option<f64>) -> EngineKind {
-        self.engine.unwrap_or_else(|| {
-            EngineKind::auto_for_density(self.metric, density, self.sparse_threshold)
-        })
-    }
-}
-
-impl Default for ComputeOptions {
-    fn default() -> Self {
-        Self {
-            metric: Metric::WeightedNormalized,
-            engine: None,
-            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
-            block_k: 64,
-            batch_capacity: 32,
-            threads: 1,
-            pad_quantum: 4,
-            queue_depth: 4,
-            scheduler: SchedulerKind::Static,
-            pool_depth: 8,
-            chunk_stripes: 0,
-        }
-    }
-}
+/// Options for [`compute_unifrac`] — since the `UniFracJob` redesign
+/// this is an alias of the one canonical request type,
+/// [`crate::api::JobSpec`] (the single-node driver reads its CPU
+/// fields and ignores the coordinator-only ones).
+pub type ComputeOptions = crate::api::JobSpec;
 
 /// Workload accounting for one run — feeds the GPU device models
 /// (`devicemodel::`) and EXPERIMENTS.md.
@@ -154,34 +91,13 @@ pub fn compute_unifrac_report<R: XlaReal>(
     if n < 2 {
         return Err(crate::Error::Shape("need >= 2 samples".into()));
     }
-    // density-aware auto-selection: estimate the mean embedding-row
-    // density (exact, via the leaf→root union walk — no DP pass) only
-    // when the policy actually consults it
-    let engine = match opts.engine {
-        Some(e) => e,
-        None => {
-            let density = if EngineKind::auto_needs_density(opts.metric) {
-                Some(embedding_density(tree, table)?)
-            } else {
-                None
-            };
-            opts.resolved_engine_for(density)
-        }
-    };
-    let quantum = if engine == EngineKind::Tiled {
-        opts.pad_quantum.max(opts.block_k.min(64))
-    } else {
-        opts.pad_quantum.max(4)
-    };
-    let padded = default_padding(n, quantum);
+    reject_stripe_range(opts)?;
+    // density-aware auto-selection + metric support validation — one
+    // resolution point shared with the coordinator and partial drivers
+    let engine = opts.resolve_cpu_engine(tree, table)?;
+    let padded = opts.padded_width(engine, n);
     let s_total = total_stripes(padded);
-    let threads = if opts.threads == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-    } else {
-        opts.threads
-    }
-    .min(s_total)
-    .max(1);
+    let threads = opts.effective_threads(s_total);
 
     if engine == EngineKind::Packed && opts.metric == Metric::Unweighted && threads == 1 {
         return compute_packed_direct::<R>(tree, table, opts, padded, s_total);
@@ -197,14 +113,7 @@ pub fn compute_unifrac_report<R: XlaReal>(
         scheduler: opts.scheduler,
         chunk_stripes: opts.chunk_stripes,
         workers: (0..threads)
-            .map(|_| WorkerBuild {
-                spec: WorkerSpec::Cpu {
-                    engine,
-                    block_k: opts.block_k,
-                    sparse_threshold: opts.sparse_threshold,
-                },
-                range: None,
-            })
+            .map(|_| WorkerBuild { spec: opts.cpu_worker_spec(engine), range: None })
             .collect(),
     };
     let (blocks, xrep): (Vec<StripeBlock<R>>, _) = exec::drive::<R>(tree, table, &spec)?;
@@ -232,6 +141,20 @@ pub fn compute_unifrac_report<R: XlaReal>(
     Ok((dm, report))
 }
 
+/// Full-run entry points must not silently ignore a partial request:
+/// `JobSpec::stripe_range` is consumed only by `UniFracJob::run_partial`
+/// — every full driver rejects a set range instead of computing the
+/// whole matrix behind the caller's back. Shared with `coordinator::run`.
+pub(crate) fn reject_stripe_range(opts: &ComputeOptions) -> crate::Result<()> {
+    if let Some((start, count)) = opts.stripe_range {
+        return Err(crate::Error::invalid(format!(
+            "stripe_range ({start}, {count}) is set — a full run would ignore it; \
+             use UniFracJob::run_partial for the subrange, or clear the range"
+        )));
+    }
+    Ok(())
+}
+
 /// Shared tail of both compute paths: condensed-matrix assembly plus the
 /// assemble/total timing bookkeeping.
 fn assemble<R: XlaReal>(
@@ -253,11 +176,59 @@ fn assemble<R: XlaReal>(
     Ok(dm)
 }
 
-/// Single-threaded unweighted fast path: drive [`PackedStream`] straight
-/// into the bitwise kernel — presence rows never materialize as floats
-/// (1/64th the producer footprint of the broadcast path). Multi-worker
-/// runs go through `exec::drive`, whose packed workers re-pack the
-/// broadcast scalar batches instead.
+/// Counters the packed direct path measured alongside its block.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct PackedDirectStats {
+    pub batches: usize,
+    pub packed_words: u64,
+    pub lut_builds: u64,
+    pub embeddings: usize,
+    pub embed_density: f64,
+    pub seconds_embed: f64,
+}
+
+/// The single-threaded unweighted fast-path core: drive
+/// [`PackedStream`] straight into the bitwise kernel over stripes
+/// `start .. start + count` — presence rows never materialize as floats
+/// (1/64th the producer footprint of the broadcast path). Shared by the
+/// full driver (`count == total_stripes`) and the partial driver
+/// (`api::UniFracJob::run_partial`): per-stripe accumulation is
+/// independent of the range, so partials are bit-identical to the
+/// matching rows of a full run.
+pub(crate) fn packed_direct_block<R: Real>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    opts: &ComputeOptions,
+    padded: usize,
+    start: usize,
+    count: usize,
+) -> crate::Result<(StripeBlock<R>, PackedDirectStats)> {
+    let mut stream = PackedStream::new(tree, table)?;
+    // one recycled packed buffer — the pool idiom at one bit per entry
+    let mut packed = PackedBatch::<R>::new(padded, opts.batch_capacity.max(1));
+    let mut block = StripeBlock::<R>::new(padded, start, count);
+    let mut stats = PackedDirectStats::default();
+    loop {
+        packed.reset();
+        let t1 = std::time::Instant::now();
+        let rows = stream.fill(&mut packed);
+        stats.seconds_embed += t1.elapsed().as_secs_f64();
+        if rows == 0 {
+            break;
+        }
+        stats.batches += 1;
+        stats.packed_words += packed.words_used() as u64;
+        stats.lut_builds += (packed.groups_used() * LANES) as u64;
+        packed.apply_unweighted(&mut block);
+    }
+    stats.embeddings = stream.produced();
+    stats.embed_density = stream.observed_density();
+    Ok((block, stats))
+}
+
+/// Single-threaded unweighted fast path over the full stripe space.
+/// Multi-worker runs go through `exec::drive`, whose packed workers
+/// re-pack the broadcast scalar batches instead.
 fn compute_packed_direct<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
@@ -265,38 +236,23 @@ fn compute_packed_direct<R: XlaReal>(
     padded: usize,
     s_total: usize,
 ) -> crate::Result<(CondensedMatrix, ComputeReport)> {
-    let n = table.n_samples();
     let t0 = std::time::Instant::now();
-    let mut stream = PackedStream::new(tree, table)?;
-    // one recycled packed buffer — the pool idiom at one bit per entry
-    let mut packed = PackedBatch::<R>::new(padded, opts.batch_capacity.max(1));
-    let mut block = StripeBlock::<R>::new(padded, 0, s_total);
+    let (block, stats) = packed_direct_block::<R>(tree, table, opts, padded, 0, s_total)?;
     let mut report = ComputeReport {
         engine: EngineKind::Packed.name().to_string(),
-        n_samples: n,
+        n_samples: table.n_samples(),
         padded_n: padded,
         n_stripes: s_total,
         pool_allocated: 1,
+        pool_reused: stats.batches,
+        batches: stats.batches,
+        packed_words: stats.packed_words,
+        lut_builds: stats.lut_builds,
+        embeddings: stats.embeddings,
+        embed_density: stats.embed_density,
+        seconds_embed: stats.seconds_embed,
         ..Default::default()
     };
-    let mut embed_seconds = 0.0f64;
-    loop {
-        packed.reset();
-        let t1 = std::time::Instant::now();
-        let rows = stream.fill(&mut packed);
-        embed_seconds += t1.elapsed().as_secs_f64();
-        if rows == 0 {
-            break;
-        }
-        report.batches += 1;
-        report.packed_words += packed.words_used() as u64;
-        report.lut_builds += (packed.groups_used() * LANES) as u64;
-        packed.apply_unweighted(&mut block);
-    }
-    report.embeddings = stream.produced();
-    report.embed_density = stream.observed_density();
-    report.pool_reused = report.batches;
-    report.seconds_embed = embed_seconds;
     report.seconds_stripes = t0.elapsed().as_secs_f64();
     let dm = assemble::<R>(table, opts.metric, std::slice::from_ref(&block), &mut report, t0)?;
     Ok((dm, report))
@@ -540,6 +496,20 @@ mod tests {
         let d32 = compute_unifrac::<f32>(&tree, &table, &opts).unwrap();
         assert!(d64.max_abs_diff(&d32) < 1e-4);
         assert!(d64.correlation(&d32) > 0.999999);
+    }
+
+    #[test]
+    fn full_drivers_reject_set_stripe_range() {
+        // a JobSpec carrying a partial request must not silently run full
+        let (tree, table) =
+            SynthSpec { n_samples: 10, n_features: 64, ..Default::default() }.generate();
+        let opts = ComputeOptions { stripe_range: Some((0, 1)), ..Default::default() };
+        let err = compute_unifrac::<f64>(&tree, &table, &opts)
+            .expect_err("set stripe_range must be rejected");
+        assert!(err.to_string().contains("run_partial"), "{err}");
+        let err = crate::coordinator::run::<f64>(&tree, &table, &opts)
+            .expect_err("coordinator must reject it too");
+        assert!(err.to_string().contains("run_partial"), "{err}");
     }
 
     #[test]

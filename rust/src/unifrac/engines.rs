@@ -113,6 +113,19 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// The single source of truth for the engine set: CLI `--engine`
+    /// help text, `FromStr` parsing, config validation and test sweeps
+    /// all derive from this table — there is no second hand-maintained
+    /// string list to drift out of sync (ISSUE 4 satellite).
+    pub const ALL: [EngineKind; 6] = [
+        Self::Original,
+        Self::Unified,
+        Self::Batched,
+        Self::Tiled,
+        Self::Packed,
+        Self::Sparse,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Original => "original",
@@ -124,21 +137,22 @@ impl EngineKind {
         }
     }
 
+    /// Parse an engine name by scanning [`Self::ALL`] (round-trips with
+    /// [`Self::name`] / `Display` by construction).
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "original" => Some(Self::Original),
-            "unified" => Some(Self::Unified),
-            "batched" => Some(Self::Batched),
-            "tiled" => Some(Self::Tiled),
-            "packed" => Some(Self::Packed),
-            "sparse" => Some(Self::Sparse),
-            _ => None,
-        }
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// `"original|unified|batched|tiled|packed|sparse"` — the accepted
+    /// values string for help text and error messages, derived from
+    /// [`Self::ALL`].
+    pub fn names_list() -> String {
+        Self::ALL.map(|k| k.name()).join("|")
     }
 
     /// Every engine, including the metric-restricted `Packed`/`Sparse`.
     pub fn all() -> [EngineKind; 6] {
-        [Self::Original, Self::Unified, Self::Batched, Self::Tiled, Self::Packed, Self::Sparse]
+        Self::ALL
     }
 
     /// The paper's four optimization stages (every-metric engines).
@@ -188,6 +202,25 @@ impl EngineKind {
     /// `auto`" — keep in sync with [`Self::auto_for_density`]'s shape.
     pub fn auto_needs_density(metric: Metric) -> bool {
         metric != Metric::Unweighted
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = crate::error::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s).ok_or_else(|| {
+            crate::error::Error::Cli(format!(
+                "unknown engine {s:?} (expected one of {})",
+                Self::names_list()
+            ))
+        })
     }
 }
 
@@ -673,6 +706,25 @@ mod tests {
         assert_eq!(EngineKind::parse("gpu"), None);
         assert_eq!(EngineKind::all().len(), 6);
         assert_eq!(EngineKind::paper_stages().len(), 4);
+    }
+
+    #[test]
+    fn fromstr_display_roundtrip_all_engines() {
+        // the CLI-facing parse/display pair is derived from the single
+        // EngineKind::ALL table — round-trip every engine through it
+        for k in EngineKind::ALL {
+            let shown = k.to_string();
+            let parsed: EngineKind = shown.parse().expect("display output must parse");
+            assert_eq!(parsed, k, "round-trip failed for {shown}");
+            assert!(
+                EngineKind::names_list().split('|').any(|n| n == shown),
+                "{shown} missing from names_list()"
+            );
+        }
+        // six engines, six help-text entries, no drift
+        assert_eq!(EngineKind::names_list().split('|').count(), EngineKind::ALL.len());
+        let err = "warp".parse::<EngineKind>().expect_err("bogus engine must fail");
+        assert!(err.to_string().contains("tiled"), "error should list accepted values");
     }
 
     #[test]

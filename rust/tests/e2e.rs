@@ -161,3 +161,97 @@ fn cli_ordination_flows() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("pseudo-F"));
 }
+
+#[test]
+fn cli_partial_merge_flow_matches_compute() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
+    let exe = ["release", "debug"]
+        .iter()
+        .map(|d| root.join(d).join("unifrac"))
+        .find(|p| p.exists());
+    let Some(exe) = exe else {
+        eprintln!("skipping: binary not built");
+        return;
+    };
+    let dir = std::env::temp_dir().join("unifrac_cli_partial");
+    std::fs::create_dir_all(&dir).unwrap();
+    let table = dir.join("t.tsv");
+    let tree = dir.join("t.nwk");
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(&exe).args(args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "{args:?}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    run(&[
+        "synth",
+        "--samples",
+        "20",
+        "--features",
+        "160",
+        "--out-table",
+        table.to_str().unwrap(),
+        "--out-tree",
+        tree.to_str().unwrap(),
+    ]);
+
+    // reference: single-process compute
+    let dm_ref = dir.join("dm_ref.tsv");
+    run(&[
+        "compute",
+        "--table",
+        table.to_str().unwrap(),
+        "--tree",
+        tree.to_str().unwrap(),
+        "--output",
+        dm_ref.to_str().unwrap(),
+    ]);
+
+    // the same job as three persisted partials + a merge
+    let mut inputs = Vec::new();
+    for i in 0..3 {
+        let p = dir.join(format!("p{i}.bin"));
+        let stdout = run(&[
+            "partial",
+            "--table",
+            table.to_str().unwrap(),
+            "--tree",
+            tree.to_str().unwrap(),
+            "--index",
+            &i.to_string(),
+            "--of",
+            "3",
+            "--out",
+            p.to_str().unwrap(),
+        ]);
+        assert!(stdout.contains("stripes"), "{stdout}");
+        inputs.push(p.to_str().unwrap().to_string());
+    }
+    let dm_merged = dir.join("dm_merged.tsv");
+    let stdout = run(&[
+        "merge",
+        "--inputs",
+        &inputs.join(","),
+        "--output",
+        dm_merged.to_str().unwrap(),
+    ]);
+    assert!(stdout.contains("merged 3 partials"), "{stdout}");
+
+    // byte-identical TSVs: the merge is exact, and both handles use the
+    // same formatter
+    let a = std::fs::read_to_string(&dm_ref).unwrap();
+    let b = std::fs::read_to_string(&dm_merged).unwrap();
+    assert_eq!(a, b, "merged TSV must equal the single-process TSV");
+
+    // a gap (2 of 3 partials) must fail with the merge exit code
+    let out = std::process::Command::new(&exe)
+        .args(["merge", "--inputs", &inputs[..2].join(",")])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(21), "merge errors exit with code 21");
+}

@@ -1,0 +1,249 @@
+//! Property suite for first-class partial computation (ISSUE 4): any
+//! partition of the stripe space into `run_partial` ranges — singleton,
+//! uneven, halves — merges **bit-identically** (max abs diff == 0) to
+//! the full `UniFracJob::run` result, across engines × metrics ×
+//! f32/f64; plus the error paths (gap / overlap / metadata mismatch)
+//! and the PartialResult serialization round-trip.
+
+use unifrac::api::{merge_partials, FpWidth, PartialResult, UniFracJob};
+use unifrac::error::{Error, MergeError};
+use unifrac::matrix::CondensedMatrix;
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{EngineKind, Metric};
+
+fn problem(n: usize, seed: u64) -> (Phylogeny, FeatureTable) {
+    SynthSpec { n_samples: n, n_features: 128, density: 0.1, seed, ..Default::default() }
+        .generate()
+}
+
+/// A representative set of partitions of `0..total`: one piece, halves,
+/// all singletons, and an uneven three-way split.
+fn partitions(total: usize) -> Vec<Vec<(usize, usize)>> {
+    let mut out = vec![vec![(0, total)]];
+    if total >= 2 {
+        let h = total / 2;
+        out.push(vec![(0, h), (h, total - h)]);
+        out.push((0..total).map(|s| (s, 1)).collect());
+    }
+    if total >= 4 {
+        // uneven: a singleton, a big middle, a small tail — in shuffled
+        // order to prove merge does not require sorted inputs
+        out.push(vec![(total - 2, 2), (0, 1), (1, total - 3)]);
+    }
+    out
+}
+
+fn assert_partitions_exact(job: &UniFracJob<'_>, full: &CondensedMatrix, label: &str) {
+    let total = job.total_stripes().unwrap();
+    for cuts in partitions(total) {
+        let parts: Vec<PartialResult> = cuts
+            .iter()
+            .map(|&(s, c)| {
+                job.run_partial_range(s, c)
+                    .unwrap_or_else(|e| panic!("{label}: partial ({s},{c}): {e}"))
+            })
+            .collect();
+        let merged = merge_partials(&parts)
+            .unwrap_or_else(|e| panic!("{label}: merge {cuts:?}: {e}"));
+        let diff = merged.max_abs_diff(full);
+        assert_eq!(diff, 0.0, "{label}: partition {cuts:?} not bit-identical ({diff:e})");
+    }
+}
+
+#[test]
+fn every_partition_merges_bit_identical_all_engines_metrics_precisions() {
+    let (tree, table) = problem(21, 7);
+    for metric in Metric::all(0.5) {
+        for engine in EngineKind::ALL {
+            if !engine.supports(metric) {
+                continue;
+            }
+            for fp in [FpWidth::F64, FpWidth::F32] {
+                let job = UniFracJob::new(&tree, &table)
+                    .metric(metric)
+                    .engine(engine)
+                    .precision(fp)
+                    .block_k(8)
+                    .batch_capacity(5);
+                let full = job.run().unwrap();
+                assert_partitions_exact(
+                    &job,
+                    &full,
+                    &format!("{metric}/{}/{}", engine.name(), fp.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_engine_partials_follow_the_full_run() {
+    // auto selection (density walk) must resolve identically for the
+    // full run and every partial, or padding/engine would diverge
+    let (tree, table) = problem(20, 11);
+    for metric in [Metric::Unweighted, Metric::WeightedNormalized] {
+        let job = UniFracJob::new(&tree, &table).metric(metric);
+        let full = job.run().unwrap();
+        assert_partitions_exact(&job, &full, &format!("auto/{metric}"));
+    }
+}
+
+#[test]
+fn multithreaded_partials_match_multithreaded_full_run() {
+    let (tree, table) = problem(26, 3);
+    for metric in [Metric::Unweighted, Metric::WeightedNormalized] {
+        let job = UniFracJob::new(&tree, &table).metric(metric).threads(3);
+        let full = job.run().unwrap();
+        let total = job.total_stripes().unwrap();
+        let h = total / 2;
+        let parts = vec![
+            job.run_partial_range(0, h).unwrap(),
+            job.run_partial_range(h, total - h).unwrap(),
+        ];
+        let merged = merge_partials(&parts).unwrap();
+        assert_eq!(merged.max_abs_diff(&full), 0.0, "{metric} threads=3");
+    }
+}
+
+#[test]
+fn mixed_engine_partials_merge_within_tolerance() {
+    // heterogeneous fleets: one range on the tiled stage, the rest on
+    // batched — allowed by design, equal to within scalar agreement
+    let (tree, table) = problem(18, 5);
+    // block_k 4 keeps the tiled padding quantum equal to the scalar
+    // engines' base quantum, so both jobs agree on the padded width
+    let tiled = UniFracJob::new(&tree, &table).engine(EngineKind::Tiled).block_k(4);
+    let batched = UniFracJob::new(&tree, &table).engine(EngineKind::Batched).block_k(4);
+    let total = tiled.total_stripes().unwrap();
+    assert_eq!(total, batched.total_stripes().unwrap(), "padding must agree");
+    let h = total / 2;
+    let parts = vec![
+        tiled.run_partial_range(0, h).unwrap(),
+        batched.run_partial_range(h, total - h).unwrap(),
+    ];
+    let merged = merge_partials(&parts).unwrap();
+    let full = tiled.run().unwrap();
+    assert!(merged.max_abs_diff(&full) < 1e-12);
+}
+
+#[test]
+fn gap_overlap_and_metadata_mismatch_rejected() {
+    let (tree, table) = problem(20, 9);
+    let job = UniFracJob::new(&tree, &table).engine(EngineKind::Tiled).block_k(8);
+    let total = job.total_stripes().unwrap();
+    assert!(total >= 4, "test needs a few stripes, got {total}");
+
+    // gap: stripe 2 missing
+    let parts = vec![
+        job.run_partial_range(0, 2).unwrap(),
+        job.run_partial_range(3, total - 3).unwrap(),
+    ];
+    let err = merge_partials(&parts).expect_err("gap must be rejected");
+    assert!(matches!(err, Error::Merge(MergeError::Gap { stripe: 2 })), "got {err:?}");
+
+    // overlap: stripe 1 covered twice
+    let parts = vec![
+        job.run_partial_range(0, 2).unwrap(),
+        job.run_partial_range(1, total - 1).unwrap(),
+    ];
+    let err = merge_partials(&parts).expect_err("overlap must be rejected");
+    assert!(matches!(err, Error::Merge(MergeError::Overlap { .. })), "got {err:?}");
+
+    // metric mismatch
+    let other = UniFracJob::new(&tree, &table)
+        .metric(Metric::WeightedUnnormalized)
+        .engine(EngineKind::Tiled)
+        .block_k(8);
+    let parts = vec![
+        job.run_partial_range(0, 2).unwrap(),
+        other.run_partial_range(2, total - 2).unwrap(),
+    ];
+    let err = merge_partials(&parts).expect_err("metric mismatch must be rejected");
+    assert!(matches!(err, Error::Merge(MergeError::MetricMismatch { .. })), "got {err:?}");
+
+    // precision mismatch
+    let f32_job = UniFracJob::new(&tree, &table)
+        .engine(EngineKind::Tiled)
+        .block_k(8)
+        .precision(FpWidth::F32);
+    let parts = vec![
+        job.run_partial_range(0, 2).unwrap(),
+        f32_job.run_partial_range(2, total - 2).unwrap(),
+    ];
+    let err = merge_partials(&parts).expect_err("precision mismatch must be rejected");
+    assert!(
+        matches!(err, Error::Merge(MergeError::PrecisionMismatch { .. })),
+        "got {err:?}"
+    );
+
+    // different problem shape entirely
+    let (tree2, table2) = problem(24, 9);
+    let other_problem =
+        UniFracJob::new(&tree2, &table2).engine(EngineKind::Tiled).block_k(8);
+    let total2 = other_problem.total_stripes().unwrap();
+    let parts = vec![
+        job.run_partial_range(0, total).unwrap(),
+        other_problem.run_partial_range(0, total2).unwrap(),
+    ];
+    let err = merge_partials(&parts).expect_err("shape mismatch must be rejected");
+    assert!(
+        matches!(
+            err,
+            Error::Merge(MergeError::SampleMismatch { .. })
+                | Error::Merge(MergeError::WidthMismatch { .. })
+        ),
+        "got {err:?}"
+    );
+}
+
+#[test]
+fn serialization_roundtrip_preserves_bit_identity() {
+    let dir = std::env::temp_dir().join("unifrac_partial_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (tree, table) = problem(20, 13);
+    for fp in [FpWidth::F64, FpWidth::F32] {
+        let job = UniFracJob::new(&tree, &table).precision(fp);
+        let full = job.run().unwrap();
+        let total = job.total_stripes().unwrap();
+        let h = total / 2;
+        let mut loaded = Vec::new();
+        for (i, (s, c)) in [(0, h), (h, total - h)].into_iter().enumerate() {
+            let p = job.run_partial_range(s, c).unwrap();
+            let path = dir.join(format!("p{}_{}.bin", fp.name(), i));
+            p.save(&path).unwrap();
+            let back = PartialResult::load(&path).unwrap();
+            assert_eq!(back.meta(), p.meta(), "{} meta round-trip", fp.name());
+            loaded.push(back);
+        }
+        let merged = merge_partials(&loaded).unwrap();
+        assert_eq!(
+            merged.max_abs_diff(&full),
+            0.0,
+            "{}: disk round-trip must stay bit-identical",
+            fp.name()
+        );
+        // the ids survive too
+        assert_eq!(merged.ids(), full.ids());
+    }
+}
+
+#[test]
+fn partial_metadata_is_self_describing() {
+    let (tree, table) = problem(20, 17);
+    let job = UniFracJob::new(&tree, &table).metric(Metric::Generalized(0.25));
+    let total = job.total_stripes().unwrap();
+    let p = job.run_partial_range(1, 3).unwrap();
+    let m = p.meta();
+    assert_eq!(m.n_samples, 20);
+    assert!(m.padded_n >= 20);
+    assert_eq!(m.stripe_start, 1);
+    assert_eq!(m.stripe_count, 3);
+    assert_eq!(m.metric, Metric::Generalized(0.25));
+    assert_eq!(m.fp, FpWidth::F64);
+    assert!(!m.engine.is_empty());
+    assert_eq!(m.sample_ids.len(), 20);
+    assert_eq!(p.stripe_range(), 1..4);
+    assert!(total >= 4);
+}

@@ -50,7 +50,7 @@ fn pallas_artifact_matches_cpu_engine() {
 
 #[test]
 fn coordinator_pjrt_matches_cpu_all_modes() {
-    use unifrac::coordinator::{run, BackendSpec, RunOptions};
+    use unifrac::coordinator::{run, Backend, RunOptions};
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         return;
@@ -63,24 +63,24 @@ fn coordinator_pjrt_matches_cpu_all_modes() {
         &RunOptions { artifacts_dir: None, ..Default::default() },
     )
     .unwrap();
-    for engine in ["pallas_tiled", "jnp"] {
+    for artifact in ["pallas_tiled", "jnp"] {
         for resident in [false, true] {
             let opts = RunOptions {
-                backend: BackendSpec::Pjrt { engine: engine.into(), resident },
+                backend: Backend::Pjrt { artifact: artifact.into(), resident },
                 artifacts_dir: Some(dir.clone()),
                 parallel: false,
                 ..Default::default()
             };
             let out = run::<f64>(&tree, &table, &opts).unwrap();
             let diff = out.dm.max_abs_diff(&cpu.dm);
-            assert!(diff < 1e-9, "{engine} resident={resident}: diff {diff}");
+            assert!(diff < 1e-9, "{artifact} resident={resident}: diff {diff}");
         }
     }
 }
 
 #[test]
 fn coordinator_pjrt_multichip_parallel() {
-    use unifrac::coordinator::{run, BackendSpec, RunOptions};
+    use unifrac::coordinator::{run, Backend, RunOptions};
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         return;
@@ -94,7 +94,7 @@ fn coordinator_pjrt_multichip_parallel() {
     )
     .unwrap();
     let opts = RunOptions {
-        backend: BackendSpec::Pjrt { engine: "jnp".into(), resident: true },
+        backend: Backend::Pjrt { artifact: "jnp".into(), resident: true },
         artifacts_dir: Some(dir),
         chips: 2,
         parallel: true,

@@ -64,6 +64,23 @@ int ssu_one_off(const char *table_path, const char *tree_path,
                 const char *unifrac_method, double alpha, int fp32,
                 unsigned threads, SsuMatrix **out);
 
+/* Full matrix streamed straight to out_path — the out-of-core one_off
+ * for EMP-scale workloads; the O(N^2) matrix never materializes in RAM.
+ *   format          "tsv"  streamed square TSV (byte-identical to
+ *                          ssu_one_off + ssu_matrix_write_tsv)
+ *                   "bin"  raw condensed binary (UFDM, little-endian
+ *                          f64; see docs/emp-scale.md for the layout)
+ *                   "mmap" same bytes via a shared memory mapping,
+ *                          RESUMABLE: rerunning after a kill continues
+ *                          at the first stripe range not yet flushed
+ *   max_resident_mb 0 = one pass; otherwise sweep the stripe space in
+ *                   passes whose accumulator scratch fits the budget
+ */
+int ssu_one_off_to_path(const char *table_path, const char *tree_path,
+                        const char *unifrac_method, double alpha, int fp32,
+                        unsigned threads, const char *format,
+                        unsigned max_resident_mb, const char *out_path);
+
 /* One stripe partial: the partial_index-th of n_partials equal splits
  * of the stripe space. Partials of the same problem/options merge
  * bit-identically to ssu_one_off. Run each on its own process or
@@ -79,25 +96,34 @@ int ssu_merge_partials(const SsuPartial *const *parts, size_t n_parts,
                        SsuMatrix **out);
 
 /* ---- partial persistence / introspection ---- */
+/* Persist a partial as a compact self-describing binary (UFPR). */
 int ssu_partial_save(const SsuPartial *p, const char *path);
+/* Load a partial previously written by ssu_partial_save. */
 int ssu_partial_load(const char *path, SsuPartial **out);
+/* First global stripe the partial covers (0 on NULL). */
 unsigned ssu_partial_stripe_start(const SsuPartial *p);
+/* Number of stripes the partial covers (0 on NULL). */
 unsigned ssu_partial_stripe_count(const SsuPartial *p);
 
 /* ---- matrix accessors ---- */
+/* Sample count (0 on NULL). */
 unsigned ssu_matrix_n_samples(const SsuMatrix *m);
 /* Distance (NaN on bad handle/indices; diagonal is 0). */
 double ssu_matrix_get(const SsuMatrix *m, unsigned i, unsigned j);
 /* Sample id; owned by the handle, valid until ssu_matrix_free. */
 const char *ssu_matrix_sample_id(const SsuMatrix *m, unsigned i);
-/* Condensed upper-triangle vector, pair order (0,1), (0,2), ... */
+/* Condensed upper-triangle length: n * (n - 1) / 2. */
 size_t ssu_matrix_condensed_len(const SsuMatrix *m);
+/* Copy the condensed vector (pair order (0,1), (0,2), ...) into buf,
+ * which must hold exactly ssu_matrix_condensed_len doubles. */
 int ssu_matrix_condensed(const SsuMatrix *m, double *buf, size_t buf_len);
 /* Standard square TSV — same formatter as the Rust CLI's --output. */
 int ssu_matrix_write_tsv(const SsuMatrix *m, const char *path);
 
 /* ---- lifecycle / diagnostics ---- */
+/* Free a matrix handle (NULL is a no-op). */
 void ssu_matrix_free(SsuMatrix *m);
+/* Free a partial handle (NULL is a no-op). */
 void ssu_partial_free(SsuPartial *p);
 /* Calling thread's most recent failure message. */
 const char *ssu_last_error(void);

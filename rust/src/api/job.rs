@@ -5,24 +5,30 @@ use super::partial::{PartialData, PartialMeta, PartialResult};
 use crate::coordinator::{BackendSpec, RunMetrics, RunOutput};
 use crate::error::{Error, Result};
 use crate::exec::{split_ranges, DriveSpec, SchedulerKind, WorkerBuild, WorkerSpec};
-use crate::matrix::StripeBlock;
+use crate::matrix::{
+    DistMatrixSink, MmapCondensedSink, OutputFormat, SinkMeta, SinkStats, StreamTsvSink,
+    StripeBlock,
+};
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
 use crate::unifrac::compute::packed_direct_block;
 use crate::unifrac::{compute_unifrac_report, ComputeReport, EngineKind, Metric};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Floating-point width of a run — the paper's fp32/fp64 axis, carried
 /// as a runtime value so precision-agnostic entry points (CLI, C ABI,
 /// [`UniFracJob::run`]) can dispatch to the monomorphized engines.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FpWidth {
+    /// Single precision (4 bytes).
     F32,
+    /// Double precision (8 bytes).
     F64,
 }
 
 impl FpWidth {
+    /// Canonical name ("f32"/"f64").
     pub fn name(self) -> &'static str {
         match self {
             FpWidth::F32 => "f32",
@@ -30,6 +36,7 @@ impl FpWidth {
         }
     }
 
+    /// Bytes per element.
     pub fn bytes(self) -> usize {
         match self {
             FpWidth::F32 => 4,
@@ -55,7 +62,12 @@ pub enum Backend {
     /// AOT artifact via PJRT; `artifact` selects the flavor (e.g.
     /// `"pallas_tiled"`, `"jnp"`), `resident` keeps accumulators
     /// device-side between batches.
-    Pjrt { artifact: String, resident: bool },
+    Pjrt {
+        /// Artifact flavor name (manifest lookup key).
+        artifact: String,
+        /// Keep accumulators device-side between batches.
+        resident: bool,
+    },
 }
 
 /// The one canonical request type every entry point consumes.
@@ -71,6 +83,7 @@ pub enum Backend {
 /// survive only as type aliases of this struct.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
+    /// The UniFrac variant to compute.
     pub metric: Metric,
     /// Floating-point width for precision-agnostic entry points
     /// ([`UniFracJob::run`], the CLI, the C ABI). The typed entry
@@ -119,6 +132,18 @@ pub struct JobSpec {
     pub stripe_range: Option<(usize, usize)>,
     /// Where the AOT artifacts live (PJRT backends).
     pub artifacts_dir: Option<PathBuf>,
+    /// On-disk result form for path-producing runs
+    /// ([`UniFracJob::run_to_path`], `--output-format`): streamed TSV,
+    /// or the raw condensed `UFDM` binary via buffered writes (`bin`)
+    /// or a resumable memory mapping (`mmap`).
+    pub output_format: OutputFormat,
+    /// Resident-memory budget in MiB (`--max-resident-mb`) for
+    /// [`UniFracJob::run_to_path`]: the run sweeps the stripe space in
+    /// range-sized passes whose accumulator scratch fits the budget,
+    /// flushing each pass to the sink — the out-of-core mode that runs
+    /// the paper's EMP matrix on laptop RAM. `None` computes every
+    /// stripe in one pass.
+    pub max_resident_mb: Option<usize>,
 }
 
 impl Default for JobSpec {
@@ -141,6 +166,8 @@ impl Default for JobSpec {
             chunk_stripes: 0,
             stripe_range: None,
             artifacts_dir: Some(PathBuf::from("artifacts")),
+            output_format: OutputFormat::Tsv,
+            max_resident_mb: None,
         }
     }
 }
@@ -239,6 +266,43 @@ impl JobSpec {
         t.min(s_total).max(1)
     }
 
+    /// Stripes computable per out-of-core pass under
+    /// [`Self::max_resident_mb`]: the budget minus the streaming
+    /// scratch (batch pool), divided by **twice** the per-stripe
+    /// accumulator footprint `2 × padded × fp_bytes` — at the end of a
+    /// pass the per-worker blocks and the canonicalized pass block
+    /// coexist briefly, so each budgeted stripe costs 2× its
+    /// accumulators at peak. With no budget the whole stripe space runs
+    /// in one pass. A budget too small for even one stripe is a typed
+    /// config error (with the numbers that would fix it) rather than a
+    /// silent OOM later.
+    pub fn sweep_stripes(&self, padded: usize, s_total: usize) -> Result<usize> {
+        let Some(mb) = self.max_resident_mb else {
+            return Ok(s_total);
+        };
+        let budget = (mb as u64) * 1024 * 1024;
+        let fp = self.precision.bytes() as u64;
+        let per_stripe = 2 * padded as u64 * fp;
+        let pool = (self.pool_depth.max(1) as u64)
+            * (self.batch_capacity.max(1) as u64)
+            * 2
+            * padded as u64
+            * fp;
+        let avail = budget.saturating_sub(pool);
+        // 2×: worker blocks + canonical block coexist at pass end
+        let k = (avail / (2 * per_stripe.max(1))) as usize;
+        if k == 0 {
+            return Err(Error::Config(format!(
+                "--max-resident-mb {mb} cannot fit one stripe pass: the batch pool \
+                 needs ~{} KiB and each stripe pass 2×{} KiB per stripe — raise the \
+                 budget or lower --pool-depth/--batch",
+                pool / 1024,
+                per_stripe.max(1024) / 1024
+            )));
+        }
+        Ok(k.min(s_total))
+    }
+
     /// Lower to one CPU [`WorkerSpec`] (the only place a `JobSpec`
     /// becomes a worker description on the single-node path).
     pub(crate) fn cpu_worker_spec(&self, engine: EngineKind) -> WorkerSpec {
@@ -286,11 +350,13 @@ impl<'a> UniFracJob<'a> {
         Self { tree, table, spec }
     }
 
+    /// The UniFrac variant to compute.
     pub fn metric(mut self, metric: Metric) -> Self {
         self.spec.metric = metric;
         self
     }
 
+    /// Floating-point width for the runtime-dispatched entry points.
     pub fn precision(mut self, precision: FpWidth) -> Self {
         self.spec.precision = precision;
         self
@@ -302,56 +368,67 @@ impl<'a> UniFracJob<'a> {
         self
     }
 
+    /// Execution substrate (CPU engines or a PJRT artifact).
     pub fn backend(mut self, backend: Backend) -> Self {
         self.spec.backend = backend;
         self
     }
 
+    /// Worker threads for single-chip CPU runs (0 = all cores).
     pub fn threads(mut self, threads: usize) -> Self {
         self.spec.threads = threads;
         self
     }
 
+    /// Simulated chips (stripe-range partitions); `<= 1` runs single-node.
     pub fn chips(mut self, chips: usize) -> Self {
         self.spec.chips = chips;
         self
     }
 
+    /// Run chips concurrently (true) or timed one-by-one (false).
     pub fn parallel(mut self, parallel: bool) -> Self {
         self.spec.parallel = parallel;
         self
     }
 
+    /// Stripe scheduling strategy (static ranges / dynamic stealing).
     pub fn scheduler(mut self, scheduler: SchedulerKind) -> Self {
         self.spec.scheduler = scheduler;
         self
     }
 
+    /// Recycled batch buffers kept by the exec pool (0 = off).
     pub fn pool_depth(mut self, pool_depth: usize) -> Self {
         self.spec.pool_depth = pool_depth;
         self
     }
 
+    /// Bounded queue depth per worker (backpressure).
     pub fn queue_depth(mut self, queue_depth: usize) -> Self {
         self.spec.queue_depth = queue_depth;
         self
     }
 
+    /// Embedding rows per batch.
     pub fn batch_capacity(mut self, batch_capacity: usize) -> Self {
         self.spec.batch_capacity = batch_capacity;
         self
     }
 
+    /// Tiled engine `step_size` (0 = auto).
     pub fn block_k(mut self, block_k: usize) -> Self {
         self.spec.block_k = block_k;
         self
     }
 
+    /// Density cut below which auto-selection picks the sparse kernel.
     pub fn sparse_threshold(mut self, threshold: f64) -> Self {
         self.spec.sparse_threshold = threshold;
         self
     }
 
+    /// Where the AOT artifacts live (PJRT backends).
     pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.spec.artifacts_dir = Some(dir.into());
         self
@@ -364,6 +441,21 @@ impl<'a> UniFracJob<'a> {
         self
     }
 
+    /// On-disk format for [`Self::run_to_path`] (default: streamed TSV).
+    pub fn output_format(mut self, format: OutputFormat) -> Self {
+        self.spec.output_format = format;
+        self
+    }
+
+    /// Bound the resident working set of [`Self::run_to_path`] to
+    /// roughly `mb` MiB by sweeping the stripe space in budget-sized
+    /// passes (see [`JobSpec::max_resident_mb`]).
+    pub fn max_resident_mb(mut self, mb: usize) -> Self {
+        self.spec.max_resident_mb = Some(mb);
+        self
+    }
+
+    /// The underlying canonical request.
     pub fn spec(&self) -> &JobSpec {
         &self.spec
     }
@@ -420,6 +512,133 @@ impl<'a> UniFracJob<'a> {
             return Ok(RunOutput { dm, metrics: metrics_from_compute(&rep, &self.spec) });
         }
         crate::coordinator::run::<R>(self.tree, self.table, &self.spec)
+    }
+
+    /// Run the job and stream the distance matrix straight to `path`
+    /// in the spec's [`OutputFormat`] — the out-of-core entry point
+    /// (`--output`/`--output-format` on the CLI, `ssu_one_off_to_path`
+    /// in the C ABI). The full `O(N²)` matrix is never materialized in
+    /// RAM:
+    ///
+    /// * Single-node CPU jobs sweep the stripe space in ranges sized by
+    ///   [`JobSpec::max_resident_mb`] (one pass when unset), flushing
+    ///   each range's finished block into the sink. With
+    ///   `OutputFormat::Mmap` (and the TSV spool) the sink is
+    ///   **resumable**: re-running after a kill skips the stripe ranges
+    ///   whose flushes already landed.
+    /// * Multi-chip and PJRT jobs route through the coordinator's sink
+    ///   path, flushing each chip's blocks as the chip finishes (always
+    ///   from a fresh file — the coordinator recomputes every stripe).
+    ///
+    /// Every format is byte-wise consistent with the in-memory path:
+    /// the TSV equals `run()?.write_tsv(..)` exactly, and the `bin` /
+    /// `mmap` binaries hold the identical f64 condensed entries.
+    pub fn run_to_path(&self, path: impl AsRef<Path>) -> Result<SinkRunReport> {
+        match self.spec.precision {
+            FpWidth::F32 => self.run_to_path_typed::<f32>(path.as_ref()),
+            FpWidth::F64 => self.run_to_path_typed::<f64>(path.as_ref()),
+        }
+    }
+
+    fn sink_meta(&self, padded: usize) -> SinkMeta {
+        SinkMeta {
+            n_samples: self.table.n_samples(),
+            padded_n: padded,
+            metric: self.spec.metric,
+            fp_bytes: self.spec.precision.bytes(),
+            sample_ids: self.table.sample_ids().to_vec(),
+        }
+    }
+
+    /// `resume` opts into reopening an interrupted file at `path`
+    /// (mmap format and the TSV spool). Only the single-node sweep can
+    /// honor a restored coverage bitmap — the coordinator path always
+    /// recomputes every stripe, so it must start from a fresh file or
+    /// the first re-flushed stripe would be a spurious `Overlap`.
+    fn build_sink<R: XlaReal>(
+        &self,
+        path: &Path,
+        padded: usize,
+        resume: bool,
+    ) -> Result<Box<dyn DistMatrixSink<R>>> {
+        let meta = self.sink_meta(padded);
+        Ok(match (self.spec.output_format, resume) {
+            (OutputFormat::Tsv, true) => Box::new(StreamTsvSink::create(path, meta)?),
+            (OutputFormat::Tsv, false) => Box::new(StreamTsvSink::create_fresh(path, meta)?),
+            (OutputFormat::Bin, _) => Box::new(MmapCondensedSink::create_buffered(path, meta)?),
+            (OutputFormat::Mmap, true) => {
+                Box::new(MmapCondensedSink::create_or_resume(path, meta)?)
+            }
+            (OutputFormat::Mmap, false) => Box::new(MmapCondensedSink::create(path, meta)?),
+        })
+    }
+
+    fn run_to_path_typed<R: XlaReal>(&self, path: &Path) -> Result<SinkRunReport> {
+        let spec = &self.spec;
+        crate::unifrac::compute::reject_stripe_range(spec)?;
+        if !matches!(spec.backend, Backend::Cpu) || spec.chips > 1 {
+            if spec.max_resident_mb.is_some() {
+                return Err(Error::unsupported(
+                    "--max-resident-mb sweeps require the single-node CPU backend; \
+                     multi-chip and PJRT runs already flush per chip",
+                ));
+            }
+            let backend = spec.resolve_backend_spec(self.tree, self.table)?;
+            let plan =
+                crate::coordinator::plan_chips::<R>(self.table.n_samples(), spec, &backend)?;
+            // the coordinator recomputes every stripe — start fresh so a
+            // leftover file cannot trip spurious Overlap errors; reuse
+            // the plan so backend resolution (and the density walk)
+            // runs once, not twice
+            let mut sink = self.build_sink::<R>(path, plan.padded_n, false)?;
+            crate::coordinator::run_planned_to_sink::<R>(
+                self.tree,
+                self.table,
+                &plan,
+                spec,
+                sink.as_mut(),
+            )?;
+            return Ok(SinkRunReport {
+                path: path.to_path_buf(),
+                format: spec.output_format,
+                stats: sink.stats(),
+                stripes_total: plan.n_stripes,
+                stripes_resumed: 0,
+                stripes_computed: plan.n_stripes,
+                passes: 1,
+            });
+        }
+        // single-node CPU: budget-bounded stripe-range sweep, resumable
+        let (engine, padded, s_total) = self.resolve_geometry()?;
+        let mut sink = self.build_sink::<R>(path, padded, true)?;
+        let missing = sink.missing_ranges();
+        let owed: usize = missing.iter().map(|r| r.1).sum();
+        let resumed = s_total - owed;
+        let chunk = spec.sweep_stripes(padded, s_total)?;
+        let mut computed = 0usize;
+        let mut passes = 0usize;
+        for (start, count) in missing {
+            let mut s = start;
+            let end = start + count;
+            while s < end {
+                let c = chunk.min(end - s).max(1);
+                let block = self.partial_block::<R>(engine, padded, s_total, s, c)?;
+                sink.put_block(&block)?;
+                computed += c;
+                passes += 1;
+                s += c;
+            }
+        }
+        sink.finish()?;
+        Ok(SinkRunReport {
+            path: path.to_path_buf(),
+            format: spec.output_format,
+            stats: sink.stats(),
+            stripes_total: s_total,
+            stripes_resumed: resumed,
+            stripes_computed: computed,
+            passes,
+        })
     }
 
     /// Compute the stripe subrange set via [`Self::stripe_range`].
@@ -560,6 +779,29 @@ impl<'a> UniFracJob<'a> {
         }
         Ok(out)
     }
+}
+
+/// What a path-producing run ([`UniFracJob::run_to_path`]) did: where
+/// the matrix landed, how much was resumed versus computed, and the
+/// sink's flush accounting (the peak-resident-set evidence the ISSUE-5
+/// acceptance test asserts on).
+#[derive(Clone, Debug)]
+pub struct SinkRunReport {
+    /// Where the matrix was written.
+    pub path: PathBuf,
+    /// Sink format written.
+    pub format: OutputFormat,
+    /// Sink flush accounting.
+    pub stats: SinkStats,
+    /// Stripes in this run's stripe space.
+    pub stripes_total: usize,
+    /// Stripes found already flushed by an interrupted prior run
+    /// (resumable sinks only).
+    pub stripes_resumed: usize,
+    /// Stripes computed by this invocation.
+    pub stripes_computed: usize,
+    /// Compute passes (stripe-range chunks) this invocation ran.
+    pub passes: usize,
 }
 
 /// Fold a single-node [`ComputeReport`] into the coordinator-shaped

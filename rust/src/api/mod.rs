@@ -27,5 +27,5 @@
 mod job;
 mod partial;
 
-pub use job::{Backend, FpWidth, JobSpec, UniFracJob};
+pub use job::{Backend, FpWidth, JobSpec, SinkRunReport, UniFracJob};
 pub use partial::{merge_partials, PartialData, PartialMeta, PartialResult};

@@ -44,7 +44,9 @@ pub struct PartialMeta {
 /// merge is bit-identical to the full in-process run).
 #[derive(Clone, Debug)]
 pub enum PartialData {
+    /// Single-precision accumulators.
     F32(StripeBlock<f32>),
+    /// Double-precision accumulators.
     F64(StripeBlock<f64>),
 }
 
@@ -63,8 +65,16 @@ impl PartialResult {
         Self { meta, data }
     }
 
+    /// The partial's validation metadata.
     pub fn meta(&self) -> &PartialMeta {
         &self.meta
+    }
+
+    /// Borrow the native-precision stripe payload — e.g. to flush a
+    /// partial straight into a `matrix::DistMatrixSink` on the
+    /// out-of-core path instead of merging in RAM.
+    pub fn data(&self) -> &PartialData {
+        &self.data
     }
 
     /// Global stripe ids this partial covers.
@@ -113,6 +123,8 @@ impl PartialResult {
         v
     }
 
+    /// Parse the binary form written by [`Self::to_bytes`], validating
+    /// every untrusted header field before any allocation.
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut r = Reader { buf: bytes, pos: 0 };
         let magic = r.take(4)?;
@@ -227,11 +239,13 @@ impl PartialResult {
         })
     }
 
+    /// Persist to `path` in the [`Self::to_bytes`] form.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path, self.to_bytes())?;
         Ok(())
     }
 
+    /// Load a partial previously written by [`Self::save`].
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::from_bytes(&std::fs::read(path)?)
     }

@@ -25,7 +25,7 @@
 
 use crate::api::{merge_partials, FpWidth, JobSpec, PartialResult, UniFracJob};
 use crate::error::{Error, Result, CODE_PANIC};
-use crate::matrix::CondensedMatrix;
+use crate::matrix::{CondensedMatrix, OutputFormat};
 use crate::table::{read_table_bin, read_table_tsv, FeatureTable};
 use crate::tree::{parse_newick, Phylogeny};
 use crate::unifrac::Metric;
@@ -167,6 +167,54 @@ pub unsafe extern "C" fn ssu_one_off(
             *out = Box::into_raw(Box::new(SsuMatrix::new(dm)));
             0
         }
+        Err(code) => code,
+    }
+}
+
+/// Compute a full UniFrac distance matrix and stream it straight to
+/// `out_path` without materializing it in RAM — the out-of-core
+/// `one_off` for EMP-scale workloads. `format` selects the sink
+/// (`"tsv"` — streamed square TSV; `"bin"` — raw condensed binary;
+/// `"mmap"` — memory-mapped condensed binary, resumable: rerunning
+/// after a kill continues at the first missing stripe range).
+/// `max_resident_mb > 0` bounds the resident working set by sweeping
+/// the stripe space in budget-sized passes. Outputs are byte-identical
+/// to `ssu_one_off` + `ssu_matrix_write_tsv` of the same job.
+///
+/// # Safety
+/// All pointer arguments must be valid NUL-terminated strings.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_one_off_to_path(
+    table_path: *const c_char,
+    tree_path: *const c_char,
+    unifrac_method: *const c_char,
+    alpha: c_double,
+    fp32: c_int,
+    threads: c_uint,
+    format: *const c_char,
+    max_resident_mb: c_uint,
+    out_path: *const c_char,
+) -> c_int {
+    let table_path = try_cstr!(table_path, "table_path");
+    let tree_path = try_cstr!(tree_path, "tree_path");
+    let metric = try_cstr!(unifrac_method, "unifrac_method");
+    let format = try_cstr!(format, "format");
+    let out_path = try_cstr!(out_path, "out_path");
+    match guarded(|| {
+        let (tree, table) = load_problem(table_path, tree_path)?;
+        let mut spec = build_spec(metric, alpha, fp32 != 0, threads)?;
+        spec.output_format = OutputFormat::parse(format).ok_or_else(|| {
+            Error::invalid(format!(
+                "unknown output format {format:?} (expected {})",
+                OutputFormat::names_list()
+            ))
+        })?;
+        if max_resident_mb > 0 {
+            spec.max_resident_mb = Some(max_resident_mb as usize);
+        }
+        UniFracJob::with_spec(&tree, &table, spec).run_to_path(out_path).map(|_| ())
+    }) {
+        Ok(()) => 0,
         Err(code) => code,
     }
 }
@@ -657,6 +705,178 @@ mod tests {
             let mut merged: *mut SsuMatrix = ptr::null_mut();
             let rc = ssu_merge_partials(ptr::null(), 0, &mut merged);
             assert_eq!(rc, 21, "empty merge must report the merge code");
+        }
+    }
+
+    #[test]
+    fn one_off_to_path_matches_in_memory_tsv() {
+        let dir = tmpdir("to_path");
+        let (table_c, tree_c) = problem_files(&dir);
+        let metric = CString::new("weighted_normalized").unwrap();
+        unsafe {
+            // reference: in-memory handle + write_tsv
+            let mut full: *mut SsuMatrix = ptr::null_mut();
+            let rc = ssu_one_off(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                metric.as_ptr(),
+                1.0,
+                0,
+                1,
+                &mut full,
+            );
+            assert_eq!(rc, 0);
+            let want = dir.join("want.tsv");
+            let want_c = CString::new(want.to_str().unwrap()).unwrap();
+            assert_eq!(ssu_matrix_write_tsv(full, want_c.as_ptr()), 0);
+            ssu_matrix_free(full);
+            // streamed: mmap binary, then every other format
+            for fmt in ["tsv", "bin", "mmap"] {
+                let out = dir.join(format!("out.{fmt}"));
+                let out_c = CString::new(out.to_str().unwrap()).unwrap();
+                let fmt_c = CString::new(fmt).unwrap();
+                let rc = ssu_one_off_to_path(
+                    table_c.as_ptr(),
+                    tree_c.as_ptr(),
+                    metric.as_ptr(),
+                    1.0,
+                    0,
+                    1,
+                    fmt_c.as_ptr(),
+                    0,
+                    out_c.as_ptr(),
+                );
+                assert_eq!(rc, 0, "{fmt}: {:?}", CStr::from_ptr(ssu_last_error()));
+                if fmt == "tsv" {
+                    assert_eq!(
+                        std::fs::read(&want).unwrap(),
+                        std::fs::read(&out).unwrap(),
+                        "streamed TSV must be byte-identical to the in-memory path"
+                    );
+                } else {
+                    let dm = crate::matrix::CondensedFile::open(&out).unwrap();
+                    let back = dir.join(format!("back.{fmt}.tsv"));
+                    dm.write_tsv(&back).unwrap();
+                    assert_eq!(std::fs::read(&want).unwrap(), std::fs::read(&back).unwrap());
+                }
+            }
+            // bad format name reports invalid
+            let fmt_c = CString::new("hdf5").unwrap();
+            let out_c = CString::new(dir.join("x").to_str().unwrap()).unwrap();
+            let rc = ssu_one_off_to_path(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                metric.as_ptr(),
+                1.0,
+                0,
+                1,
+                fmt_c.as_ptr(),
+                0,
+                out_c.as_ptr(),
+            );
+            assert_eq!(rc, Error::invalid("").code());
+        }
+    }
+
+    /// ISSUE-5 satellite: `include/unifrac.h` must stay in lockstep
+    /// with the Rust side — every `SSU_*` status constant must match
+    /// `Error::code`/`code_name`, every named code must be exported in
+    /// the header, and every `ssu_*` symbol declared there must exist
+    /// here (and vice versa).
+    #[test]
+    fn header_constants_and_exports_stay_in_sync() {
+        let header_path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../include/unifrac.h");
+        let header = std::fs::read_to_string(&header_path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", header_path.display()));
+        // 1. parse `#define SSU_... <code>` lines
+        let mut defined: std::collections::BTreeMap<String, i32> = Default::default();
+        for line in header.lines() {
+            let Some(rest) = line.trim().strip_prefix("#define SSU_") else {
+                continue;
+            };
+            let mut parts = rest.split_whitespace();
+            let (Some(name), Some(code)) = (parts.next(), parts.next()) else {
+                continue;
+            };
+            defined.insert(name.to_string(), code.parse().expect("numeric SSU_ code"));
+        }
+        assert_eq!(defined.get("OK"), Some(&0), "SSU_OK must be 0");
+        assert_eq!(defined.get("ERR_PANIC"), Some(&CODE_PANIC));
+        // every SSU_ERR_* maps to the identically-named Error code
+        for (name, code) in &defined {
+            let Some(short) = name.strip_prefix("ERR_") else {
+                continue;
+            };
+            if *code == CODE_PANIC {
+                continue;
+            }
+            assert_eq!(
+                Error::code_name(*code),
+                short.to_lowercase(),
+                "header SSU_{name}={code} disagrees with Error::code_name"
+            );
+        }
+        // and every named Rust status code is exported by the header
+        for code in 1..CODE_PANIC {
+            let rust_name = Error::code_name(code);
+            if rust_name == "unknown" {
+                continue;
+            }
+            let macro_name = format!("ERR_{}", rust_name.to_uppercase());
+            assert_eq!(
+                defined.get(&macro_name),
+                Some(&code),
+                "Error code {code} ({rust_name}) missing from include/unifrac.h"
+            );
+        }
+        // 2. exported function surface: header declarations == #[no_mangle] set
+        let exports = [
+            "ssu_one_off",
+            "ssu_one_off_to_path",
+            "ssu_partial",
+            "ssu_merge_partials",
+            "ssu_partial_save",
+            "ssu_partial_load",
+            "ssu_partial_stripe_start",
+            "ssu_partial_stripe_count",
+            "ssu_matrix_n_samples",
+            "ssu_matrix_get",
+            "ssu_matrix_sample_id",
+            "ssu_matrix_condensed_len",
+            "ssu_matrix_condensed",
+            "ssu_matrix_write_tsv",
+            "ssu_matrix_free",
+            "ssu_partial_free",
+            "ssu_last_error",
+            "ssu_error_name",
+            "ssu_version",
+        ];
+        for name in exports {
+            assert!(
+                header.contains(&format!("{name}(")),
+                "exported fn {name} not declared in include/unifrac.h"
+            );
+        }
+        // no ssu_ function is declared in the header without a Rust export
+        let mut declared: std::collections::BTreeSet<&str> = Default::default();
+        for (pos, _) in header.match_indices("ssu_") {
+            let tail = &header[pos..];
+            let end = tail
+                .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+                .unwrap_or(tail.len());
+            if tail[end..].starts_with('(') {
+                declared.insert(&tail[..end]);
+            }
+        }
+        for name in &declared {
+            assert!(
+                exports.contains(name),
+                "header declares {name} but the Rust C ABI does not export it"
+            );
+        }
+        for name in exports {
+            assert!(declared.contains(name), "header must declare {name} as a function");
         }
     }
 

@@ -5,7 +5,7 @@ use crate::api::{merge_partials, PartialResult, UniFracJob};
 use crate::config::RunConfig;
 use crate::devicemodel::{device_by_name, paper_gpus, XEON_E5_2680V4};
 use crate::error::{Error, Result};
-use crate::matrix::CondensedMatrix;
+use crate::matrix::{load_view, CondensedFile, CondensedMatrix};
 use crate::report::{self, Scale};
 use crate::stats::{mantel, pcoa, permanova};
 use crate::synth::SynthSpec;
@@ -52,6 +52,10 @@ fn resolve_config(args: &mut Args) -> Result<RunConfig> {
     if let Some(v) = args.opt("output") {
         cfg.output = Some(PathBuf::from(v));
     }
+    if let Some(v) = args.opt("output-format") {
+        cfg.output_format = v;
+    }
+    cfg.max_resident_mb = args.get_or("max-resident-mb", cfg.max_resident_mb)?;
     Ok(cfg)
 }
 
@@ -129,6 +133,45 @@ pub fn compute(args: &mut Args) -> Result<()> {
             before
         );
     }
+    // a non-TSV sink or a memory budget engages the out-of-core
+    // streamed path: the matrix goes straight to disk, never to RAM
+    let streamed = cfg.output_format != "tsv" || cfg.max_resident_mb > 0;
+    if streamed {
+        let Some(out) = cfg.output.clone() else {
+            return Err(Error::Cli(
+                "--output-format bin|mmap / --max-resident-mb need --output FILE".into(),
+            ));
+        };
+        if report_path.is_some() {
+            return Err(Error::Cli(
+                "--report is not available on the streamed output path (the full \
+                 RunMetrics never materialize); drop --output-format/--max-resident-mb"
+                    .into(),
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let job = UniFracJob::with_spec(&tree, &table, cfg.to_job()?);
+        let rep = job.run_to_path(&out)?;
+        println!(
+            "streamed {} over {} samples to {} ({}): {} stripes in {} passes \
+             ({} resumed from a prior run) in {:.3}s",
+            cfg.metric,
+            table.n_samples(),
+            rep.path.display(),
+            rep.format,
+            rep.stripes_total,
+            rep.passes,
+            rep.stripes_resumed,
+            t0.elapsed().as_secs_f64()
+        );
+        println!(
+            "  {} pairs / {} payload bytes flushed; sink peak resident {} bytes",
+            rep.stats.pairs_written,
+            rep.stats.payload_bytes_written,
+            rep.stats.peak_resident_bytes
+        );
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
     let (dm, metrics) = run_with_config(&cfg, &tree, &table)?;
     let secs = t0.elapsed().as_secs_f64();
@@ -150,6 +193,27 @@ pub fn compute(args: &mut Args) -> Result<()> {
         std::fs::write(&path, metrics.to_json().dump())?;
         println!("  wrote {path}");
     }
+    Ok(())
+}
+
+/// `unifrac convert --matrix dm.bin --output dm.tsv`
+///
+/// Stream a binary condensed matrix (`--output-format bin|mmap`) out as
+/// the standard square TSV — byte-identical to what a TSV-sink run of
+/// the same job would have written.
+pub fn convert(args: &mut Args) -> Result<()> {
+    let input = args.require("matrix")?;
+    let output = args.require("output")?;
+    args.finish()?;
+    let f = CondensedFile::open(&input)?;
+    f.write_tsv(&output)?;
+    println!(
+        "wrote {output}: {} samples, {} pairs ({}, computed in {})",
+        f.n_samples(),
+        f.n_pairs(),
+        f.metric(),
+        if f.fp_bytes() == 4 { "f32" } else { "f64" }
+    );
     Ok(())
 }
 
@@ -300,14 +364,18 @@ pub fn tables(args: &mut Args) -> Result<()> {
 }
 
 /// `unifrac pcoa --matrix dm.tsv [--axes 3] [--output coords.tsv]`
+///
+/// `--matrix` accepts both the square TSV and the binary condensed
+/// formats (`--output-format bin|mmap`) — binary matrices are mapped,
+/// not loaded.
 pub fn pcoa_cmd(args: &mut Args) -> Result<()> {
     let matrix = args.require("matrix")?;
     let axes = args.get_or("axes", 3usize)?;
     let seed = args.get_or("seed", 1u64)?;
     let output = args.opt("output");
     args.finish()?;
-    let dm = CondensedMatrix::read_tsv(&matrix)?;
-    let res = pcoa(&dm, axes, seed);
+    let dm = load_view(&matrix)?;
+    let res = pcoa(&*dm, axes, seed);
     println!("PCoA of {matrix} ({} samples):", dm.n_samples());
     for (i, (ev, pe)) in res.eigenvalues.iter().zip(&res.proportion_explained).enumerate() {
         println!("  axis {}: eigenvalue {:.6}, {:.2}% explained", i + 1, ev, pe * 100.0);
@@ -337,13 +405,16 @@ pub fn pcoa_cmd(args: &mut Args) -> Result<()> {
 /// `unifrac permanova --matrix dm.tsv --groups groups.tsv`
 ///
 /// The groups file has one `sample_id<TAB>group_label` line per sample.
+/// `--matrix` accepts both the square TSV and the binary condensed
+/// formats; binary matrices are streamed in permutation blocks, so
+/// EMP-scale files never load into RAM.
 pub fn permanova_cmd(args: &mut Args) -> Result<()> {
     let matrix = args.require("matrix")?;
     let groups_path = args.require("groups")?;
     let permutations = args.get_or("permutations", 999usize)?;
     let seed = args.get_or("seed", 1u64)?;
     args.finish()?;
-    let dm = CondensedMatrix::read_tsv(&matrix)?;
+    let dm = load_view(&matrix)?;
     // parse the grouping file into dense group indices matching dm order
     let mut by_id = std::collections::HashMap::new();
     for (lineno, line) in std::fs::read_to_string(&groups_path)?.lines().enumerate() {
@@ -364,7 +435,7 @@ pub fn permanova_cmd(args: &mut Args) -> Result<()> {
         let next = label_ids.len();
         groups.push(*label_ids.entry(label.clone()).or_insert(next));
     }
-    let res = permanova(&dm, &groups, permutations, seed);
+    let res = permanova(&*dm, &groups, permutations, seed);
     println!("PERMANOVA of {matrix} ({} samples, {} groups):", dm.n_samples(), res.n_groups);
     println!("  pseudo-F = {:.4}", res.pseudo_f);
     println!("  p-value  = {:.4} ({} permutations)", res.p_value, res.permutations);

@@ -4,6 +4,9 @@
 //! unifrac synth     --samples 256 --features 2048 --out-table t.tsv --out-tree t.nwk
 //! unifrac compute   --table t.tsv --tree t.nwk --metric weighted_normalized \
 //!                   --backend pjrt --engine pallas_tiled --dtype f64 --output dm.tsv
+//! unifrac compute   --table t.tsv --tree t.nwk --output dm.bin \
+//!                   --output-format mmap --max-resident-mb 512   # out-of-core
+//! unifrac convert   --matrix dm.bin --output dm.tsv
 //! unifrac partial   --table t.tsv --tree t.nwk --index 0 --of 4 --out p0.bin
 //! unifrac merge     --inputs p0.bin,p1.bin,p2.bin,p3.bin --output dm.tsv
 //! unifrac partition --samples 512 --chips 8         # Table-2 style chip study
@@ -20,6 +23,7 @@ mod commands;
 pub use args::Args;
 
 use crate::error::{Error, Result};
+use crate::matrix::OutputFormat;
 use crate::unifrac::EngineKind;
 
 /// Entry point used by `main.rs`. Returns the process exit code — the
@@ -41,6 +45,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "synth" => commands::synth(&mut args),
         "compute" => commands::compute(&mut args),
+        "convert" => commands::convert(&mut args),
         "partial" => commands::partial(&mut args),
         "merge" => commands::merge(&mut args),
         "partition" => commands::partition(&mut args),
@@ -72,6 +77,7 @@ USAGE: unifrac <subcommand> [flags]
 SUBCOMMANDS
   synth          generate a synthetic (tree, table) workload
   compute        compute a UniFrac distance matrix
+  convert        convert a binary condensed matrix (bin/mmap) to TSV
   partial        compute one stripe partial (1 of N) and persist it
   merge          merge persisted partials into the full distance matrix
   partition      Table-2 style multi-chip run with per-chip timing
@@ -112,8 +118,15 @@ COMMON FLAGS
   --rarefy N          subsample each sample to depth N first (drops shallow ones)
   --table FILE        input feature table (.tsv or .bin)
   --tree FILE         input Newick tree
-  --output FILE       write the distance matrix (TSV)
-  --report FILE       write run metrics (JSON)
+  --output FILE       write the distance matrix
+  --output-format F   {formats} (default tsv). bin/mmap stream the raw
+                      condensed binary (see docs/emp-scale.md); mmap (and the
+                      tsv spool) RESUME an interrupted run at the same path.
+                      pcoa/permanova/convert read all three.
+  --max-resident-mb N bound the resident set: sweep the stripe space in
+                      N-MiB passes, flushing each to the output sink
+                      (out-of-core mode for EMP-scale matrices)
+  --report FILE       write run metrics (JSON; in-memory path only)
 
 PARTIAL / MERGE FLAGS
   --index I           which partial to compute (0-based)
@@ -121,10 +134,15 @@ PARTIAL / MERGE FLAGS
   --out FILE          where to write the partial (binary, self-describing)
   --inputs A,B,...    partial files to merge
 
+CONVERT FLAGS
+  --matrix FILE       binary condensed matrix to read (bin/mmap output)
+  --output FILE       TSV to write (byte-identical to a tsv-sink run)
+
 EXIT CODES
   0 on success; otherwise the stable per-error-class status code shared
   with the C ABI (see include/unifrac.h).
 ",
-        engines = EngineKind::names_list()
+        engines = EngineKind::names_list(),
+        formats = OutputFormat::names_list()
     )
 }

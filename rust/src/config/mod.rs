@@ -16,6 +16,7 @@ pub use toml_lite::{TomlDoc, TomlValue};
 use crate::api::{Backend, FpWidth, JobSpec};
 use crate::error::{Error, Result};
 use crate::exec::SchedulerKind;
+use crate::matrix::OutputFormat;
 use crate::unifrac::{EngineKind, Metric};
 use std::path::PathBuf;
 
@@ -45,6 +46,12 @@ pub struct RunConfig {
     pub artifacts_dir: PathBuf,
     pub seed: u64,
     pub output: Option<PathBuf>,
+    /// Output sink for `--output`: "tsv" (streamed square TSV), "bin"
+    /// (raw condensed binary, positioned writes) or "mmap" (resumable
+    /// memory-mapped condensed binary).
+    pub output_format: String,
+    /// Resident-memory budget in MiB for out-of-core runs (0 = off).
+    pub max_resident_mb: usize,
 }
 
 impl Default for RunConfig {
@@ -68,6 +75,8 @@ impl Default for RunConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 42,
             output: None,
+            output_format: "tsv".into(),
+            max_resident_mb: 0,
         }
     }
 }
@@ -137,6 +146,12 @@ impl RunConfig {
         }
         if let Some(v) = get("output") {
             self.output = Some(PathBuf::from(v.as_str().ok_or_else(|| bad("output"))?));
+        }
+        if let Some(v) = get("output_format") {
+            self.output_format = v.as_str().ok_or_else(|| bad("output_format"))?.to_string();
+        }
+        if let Some(v) = get("max_resident_mb") {
+            self.max_resident_mb = v.as_usize().ok_or_else(|| bad("max_resident_mb"))?;
         }
         Ok(())
     }
@@ -213,6 +228,13 @@ impl RunConfig {
                 self.scheduler
             ))
         })?;
+        let output_format = OutputFormat::parse(&self.output_format).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown output format {:?} (expected {})",
+                self.output_format,
+                OutputFormat::names_list()
+            ))
+        })?;
         Ok(JobSpec {
             metric,
             precision: self.fp_width()?,
@@ -231,6 +253,12 @@ impl RunConfig {
             chunk_stripes: 0,
             stripe_range: None,
             artifacts_dir: Some(self.artifacts_dir.clone()),
+            output_format,
+            max_resident_mb: if self.max_resident_mb > 0 {
+                Some(self.max_resident_mb)
+            } else {
+                None
+            },
         })
     }
 }
@@ -392,6 +420,27 @@ pool_depth = 16
         assert!(
             matches!(job.backend, Backend::Pjrt { ref artifact, .. } if artifact == "pallas_tiled")
         );
+    }
+
+    #[test]
+    fn output_format_and_budget_parse() {
+        let doc = TomlDoc::parse("[run]\noutput_format = \"mmap\"\nmax_resident_mb = 512\n")
+            .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.output_format, "mmap");
+        assert_eq!(cfg.max_resident_mb, 512);
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.output_format, OutputFormat::Mmap);
+        assert_eq!(job.max_resident_mb, Some(512));
+        // defaults: tsv sink, no budget
+        let job = RunConfig::default().to_job().unwrap();
+        assert_eq!(job.output_format, OutputFormat::Tsv);
+        assert_eq!(job.max_resident_mb, None);
+        // unknown format rejected with the accepted list
+        let cfg = RunConfig { output_format: "hdf5".into(), ..Default::default() };
+        let err = cfg.to_job().expect_err("unknown format must fail");
+        assert!(err.to_string().contains("tsv|bin|mmap"), "{err}");
     }
 
     #[test]

@@ -48,6 +48,12 @@ pub struct RunMetrics {
     pub seconds_embed: f64,
     /// End-to-end stripe phase, seconds.
     pub seconds_total: f64,
+    /// Sink-finalize time, seconds. Since the ISSUE-5 sink rework,
+    /// per-entry distance finalization happens inside the flush as each
+    /// block completes (counted in the chip/stripe times above), so
+    /// this measures only the final coverage validation + sync — expect
+    /// it near zero where the pre-sink "assembly" pass used to
+    /// dominate.
     pub seconds_assemble: f64,
 }
 

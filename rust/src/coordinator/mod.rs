@@ -17,7 +17,9 @@ pub mod pipeline;
 
 pub use metrics::RunMetrics;
 pub use partition::{plan_chips, ChipPlan, ChipSpec};
-pub use pipeline::{run_chips_parallel, run_chips_sequential};
+pub use pipeline::{
+    run_chips_parallel, run_chips_parallel_each, run_chips_sequential, run_chips_sequential_each,
+};
 
 // The coordinator consumed its own `RunOptions` until the `UniFracJob`
 // redesign; it now runs the canonical `api::JobSpec` directly, and the
@@ -26,7 +28,7 @@ pub use crate::api::{Backend, JobSpec};
 pub type RunOptions = JobSpec;
 
 use crate::error::Result;
-use crate::matrix::CondensedMatrix;
+use crate::matrix::{CondensedMatrix, DistMatrixSink, InMemorySink, SinkMeta, StripeBlock};
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
@@ -64,7 +66,13 @@ pub struct RunOutput {
 }
 
 /// Top-level driver: resolve the backend, plan chips, execute the
-/// pipeline, assemble.
+/// pipeline, assemble in RAM.
+///
+/// Since the ISSUE-5 sink rework this is [`run_to_sink`] with an
+/// [`InMemorySink`] behind it — chip blocks are finalized into the
+/// condensed matrix as they finish instead of accumulating in a block
+/// list first; path-producing callers swap in an out-of-core sink and
+/// never materialize the matrix at all.
 pub fn run<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
@@ -73,21 +81,58 @@ pub fn run<R: XlaReal>(
     crate::unifrac::compute::reject_stripe_range(opts)?;
     let backend = opts.resolve_backend_spec(tree, table)?;
     let plan = plan_chips::<R>(table.n_samples(), opts, &backend)?;
-    let (blocks, mut metrics) = if opts.parallel {
-        run_chips_parallel::<R>(tree, table, &plan, opts)?
+    let mut sink = InMemorySink::new(SinkMeta {
+        n_samples: table.n_samples(),
+        padded_n: plan.padded_n,
+        metric: opts.metric,
+        fp_bytes: R::BYTES,
+        sample_ids: table.sample_ids().to_vec(),
+    })?;
+    let metrics = run_planned_to_sink::<R>(tree, table, &plan, opts, &mut sink)?;
+    let dm = DistMatrixSink::<R>::take_matrix(&mut sink)
+        .expect("in-memory sink holds the matrix until taken");
+    Ok(RunOutput { dm, metrics })
+}
+
+/// As [`run`], but flushing every finished chip block into `sink`
+/// instead of assembling in RAM — the coordinator half of the
+/// out-of-core path (`UniFracJob::run_to_path`). The sink must have
+/// been created for this run's geometry (`plan_chips` padding).
+pub fn run_to_sink<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    opts: &JobSpec,
+    sink: &mut dyn DistMatrixSink<R>,
+) -> Result<RunMetrics> {
+    crate::unifrac::compute::reject_stripe_range(opts)?;
+    let backend = opts.resolve_backend_spec(tree, table)?;
+    let plan = plan_chips::<R>(table.n_samples(), opts, &backend)?;
+    run_planned_to_sink::<R>(tree, table, &plan, opts, sink)
+}
+
+/// Shared tail of [`run`]/[`run_to_sink`]: execute the planned chips,
+/// streaming finished blocks into the sink, then finalize it (the
+/// coverage validation that used to live in
+/// `CondensedMatrix::from_stripes`). `pub(crate)` so callers that
+/// already planned (to size the sink — `UniFracJob::run_to_path`) do
+/// not pay the backend resolution and density walk a second time.
+pub(crate) fn run_planned_to_sink<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    plan: &ChipPlan,
+    opts: &JobSpec,
+    sink: &mut dyn DistMatrixSink<R>,
+) -> Result<RunMetrics> {
+    let mut emit = |b: StripeBlock<R>| sink.put_block(&b);
+    let mut metrics = if opts.parallel {
+        run_chips_parallel_each::<R>(tree, table, plan, opts, &mut emit)?
     } else {
-        run_chips_sequential::<R>(tree, table, &plan, opts)?
+        run_chips_sequential_each::<R>(tree, table, plan, opts, &mut emit)?
     };
     let t0 = std::time::Instant::now();
-    let metric = opts.metric;
-    let dm = CondensedMatrix::from_stripes(
-        table.n_samples(),
-        table.sample_ids().to_vec(),
-        &blocks,
-        move |num, den| metric.finalize(num, den),
-    )?;
+    sink.finish()?;
     metrics.seconds_assemble = t0.elapsed().as_secs_f64();
-    Ok(RunOutput { dm, metrics })
+    Ok(metrics)
 }
 
 #[cfg(test)]

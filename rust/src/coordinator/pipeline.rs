@@ -104,18 +104,21 @@ fn absorb(metrics: &mut RunMetrics, rep: &ExecReport) {
 /// Sequential mode: run each chip in isolation, timing it precisely.
 /// Each chip re-streams the embeddings through its own single-worker
 /// pipeline (that isolation is the point of the measurement mode).
-pub fn run_chips_sequential<R: XlaReal>(
+/// Finished chip blocks stream to `emit` the moment the chip's drive
+/// completes — the ISSUE-5 flush point: with an out-of-core sink behind
+/// `emit`, only ONE chip's stripe scratch is ever resident.
+pub fn run_chips_sequential_each<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     plan: &ChipPlan,
     opts: &JobSpec,
-) -> Result<(Vec<StripeBlock<R>>, RunMetrics)> {
+    emit: &mut dyn FnMut(StripeBlock<R>) -> Result<()>,
+) -> Result<RunMetrics> {
     let t_all = std::time::Instant::now();
     let mut metrics = base_metrics(plan, opts, table.n_samples());
     // isolated per-chip timing always runs fixed ranges; report what
     // actually executed rather than the requested scheduler
     metrics.scheduler = SchedulerKind::Static.name().to_string();
-    let mut blocks = Vec::with_capacity(plan.chips.len());
     for spec in &plan.chips {
         let t0 = std::time::Instant::now();
         let workers = vec![WorkerBuild {
@@ -125,25 +128,42 @@ pub fn run_chips_sequential<R: XlaReal>(
         // isolated timing wants the plain fixed-range path
         let mut dspec = drive_spec(plan, opts, workers);
         dspec.scheduler = SchedulerKind::Static;
-        let (mut chip_blocks, rep) = exec::drive::<R>(tree, table, &dspec)?;
-        blocks.append(&mut chip_blocks);
+        let rep = exec::drive_each::<R>(tree, table, &dspec, emit)?;
         metrics.per_chip_seconds.push(t0.elapsed().as_secs_f64());
         absorb(&mut metrics, &rep);
     }
     metrics.seconds_total = t_all.elapsed().as_secs_f64();
-    Ok((blocks, metrics))
+    Ok(metrics)
 }
 
-/// Parallel mode: one producer, all chips as workers of a single
-/// [`exec::drive`] call. Under the static scheduler each chip keeps its
-/// planned contiguous range; under the dynamic scheduler CPU chips
-/// steal stripe chunks (PJRT chips keep their fixed-height ranges).
-pub fn run_chips_parallel<R: XlaReal>(
+/// As [`run_chips_sequential_each`], collecting the blocks (legacy
+/// shape for callers that assemble in RAM).
+pub fn run_chips_sequential<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     plan: &ChipPlan,
     opts: &JobSpec,
 ) -> Result<(Vec<StripeBlock<R>>, RunMetrics)> {
+    let mut blocks = Vec::with_capacity(plan.chips.len());
+    let metrics = run_chips_sequential_each(tree, table, plan, opts, &mut |b| {
+        blocks.push(b);
+        Ok(())
+    })?;
+    Ok((blocks, metrics))
+}
+
+/// Parallel mode: one producer, all chips as workers of a single
+/// [`exec::drive_each`] call. Under the static scheduler each chip
+/// keeps its planned contiguous range; under the dynamic scheduler CPU
+/// chips steal stripe chunks (PJRT chips keep their fixed-height
+/// ranges). Finished blocks stream to `emit` in worker join order.
+pub fn run_chips_parallel_each<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    plan: &ChipPlan,
+    opts: &JobSpec,
+    emit: &mut dyn FnMut(StripeBlock<R>) -> Result<()>,
+) -> Result<RunMetrics> {
     let t_all = std::time::Instant::now();
     let mut metrics = base_metrics(plan, opts, table.n_samples());
     let workers = plan
@@ -160,9 +180,25 @@ pub fn run_chips_parallel<R: XlaReal>(
         })
         .collect::<Result<Vec<_>>>()?;
     let dspec = drive_spec(plan, opts, workers);
-    let (blocks, rep) = exec::drive::<R>(tree, table, &dspec)?;
+    let rep = exec::drive_each::<R>(tree, table, &dspec, emit)?;
     metrics.per_chip_seconds = rep.per_worker_seconds.clone();
     absorb(&mut metrics, &rep);
     metrics.seconds_total = t_all.elapsed().as_secs_f64();
+    Ok(metrics)
+}
+
+/// As [`run_chips_parallel_each`], collecting the blocks (legacy shape
+/// for callers that assemble in RAM).
+pub fn run_chips_parallel<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    plan: &ChipPlan,
+    opts: &JobSpec,
+) -> Result<(Vec<StripeBlock<R>>, RunMetrics)> {
+    let mut blocks = Vec::new();
+    let metrics = run_chips_parallel_each(tree, table, plan, opts, &mut |b| {
+        blocks.push(b);
+        Ok(())
+    })?;
     Ok((blocks, metrics))
 }

@@ -14,19 +14,45 @@ pub enum MergeError {
     Empty,
     /// Stripe `stripe` is covered by no partial (the partition has a
     /// hole — some worker's output is missing).
-    Gap { stripe: usize },
+    Gap {
+        /// First uncovered stripe.
+        stripe: usize,
+    },
     /// Stripe `stripe` is covered twice (overlapping ranges).
-    Overlap { stripe: usize },
+    Overlap {
+        /// The doubly-covered stripe.
+        stripe: usize,
+    },
     /// Partials were computed over different padded chunk widths.
-    WidthMismatch { expected: usize, got: usize },
+    WidthMismatch {
+        /// Width established by the first partial.
+        expected: usize,
+        /// Conflicting width.
+        got: usize,
+    },
     /// Partials disagree on the real sample count.
-    SampleMismatch { expected: usize, got: usize },
+    SampleMismatch {
+        /// Count established by the first partial.
+        expected: usize,
+        /// Conflicting count.
+        got: usize,
+    },
     /// Partials disagree on the sample id ordering.
     IdMismatch,
     /// Partials were computed under different UniFrac metrics.
-    MetricMismatch { expected: String, got: String },
+    MetricMismatch {
+        /// Metric established by the first partial.
+        expected: String,
+        /// Conflicting metric.
+        got: String,
+    },
     /// Partials were computed at different floating-point widths.
-    PrecisionMismatch { expected: &'static str, got: &'static str },
+    PrecisionMismatch {
+        /// Width established by the first partial.
+        expected: &'static str,
+        /// Conflicting width.
+        got: &'static str,
+    },
 }
 
 impl std::fmt::Display for MergeError {
@@ -58,17 +84,34 @@ impl std::fmt::Display for MergeError {
     }
 }
 
+/// Crate-wide error type; every variant maps to a stable status code
+/// ([`Error::code`]) shared by the CLI exit path and the C ABI.
 #[derive(Debug)]
 pub enum Error {
+    /// Underlying I/O failure.
     Io(std::io::Error),
-    Newick { at: usize, msg: String },
+    /// Newick tree parse failure at byte offset `at`.
+    Newick {
+        /// Byte offset of the failure in the input.
+        at: usize,
+        /// What went wrong there.
+        msg: String,
+    },
+    /// Feature-table (or matrix TSV) parse failure.
     Table(String),
+    /// Invalid configuration (file keys, CLI flag values).
     Config(String),
+    /// Artifact-manifest load/validation failure.
     Manifest(String),
+    /// Dimension/geometry mismatch between components.
     Shape(String),
+    /// No AOT artifact satisfies the request.
     NoArtifact(String),
+    /// XLA/PJRT runtime failure.
     Xla(xla::Error),
+    /// Invalid argument at an API boundary.
     Invalid(String),
+    /// Command-line usage error.
     Cli(String),
     /// A valid component was asked for a combination it cannot compute
     /// (e.g. the bit-packed engine on a weighted metric).
@@ -127,6 +170,7 @@ impl From<MergeError> for Error {
     }
 }
 
+/// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Status code the C ABI reserves for a caught panic at an FFI boundary
@@ -134,10 +178,12 @@ pub type Result<T> = std::result::Result<T, Error>;
 pub const CODE_PANIC: i32 = 99;
 
 impl Error {
+    /// Shorthand for [`Error::Invalid`].
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::Invalid(msg.into())
     }
 
+    /// Shorthand for [`Error::Unsupported`].
     pub fn unsupported(msg: impl Into<String>) -> Self {
         Error::Unsupported(msg.into())
     }

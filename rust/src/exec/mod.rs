@@ -203,14 +203,40 @@ impl<R: XlaReal> Runner<R> {
     }
 }
 
-/// Run the streaming pipeline: produce embedding batches once, broadcast
-/// them to every worker, return the finished stripe blocks (disjointly
-/// covering the scheduled ranges) plus the run report.
+/// Run the streaming pipeline and collect the finished stripe blocks
+/// (disjointly covering the scheduled ranges) plus the run report.
+///
+/// A thin wrapper over [`drive_each`] for callers that need the blocks
+/// in hand (partial computation, tests). Matrix-producing callers
+/// should pass a `matrix::sink` flush to [`drive_each`] instead, so
+/// blocks stream out as workers finish rather than accumulating.
 pub fn drive<R: XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     spec: &DriveSpec,
 ) -> Result<(Vec<StripeBlock<R>>, ExecReport)> {
+    let mut blocks = Vec::new();
+    let report = drive_each(tree, table, spec, &mut |b| {
+        blocks.push(b);
+        Ok(())
+    })?;
+    Ok((blocks, report))
+}
+
+/// Run the streaming pipeline, handing each finished stripe block to
+/// `emit` as soon as it completes (ISSUE 5): fixed-range worker blocks
+/// are emitted in worker join order and dropped by the caller at will —
+/// typically flushed into a `matrix::DistMatrixSink` — so peak memory
+/// is bounded by the pool window plus the in-flight blocks, never by an
+/// accumulated `O(N²)` result. Dynamic-scheduler chunk blocks are
+/// merged across workers first (stripe updates are additive) and then
+/// emitted in chunk order.
+pub fn drive_each<R: XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    spec: &DriveSpec,
+    emit: &mut dyn FnMut(StripeBlock<R>) -> Result<()>,
+) -> Result<ExecReport> {
     if spec.workers.is_empty() {
         return Err(Error::Config("exec::drive needs at least one worker".into()));
     }
@@ -342,15 +368,19 @@ pub fn drive<R: XlaReal>(
     report.embed_density = stream.observed_density();
     report.pool = pool.stats();
 
-    // Assemble: fixed blocks pass through; stolen chunk blocks merge
-    // additively across workers (stripe updates are additive), in
-    // worker-then-chunk order for a deterministic merge.
-    let mut blocks: Vec<StripeBlock<R>> = Vec::new();
+    // Emit: fixed blocks stream straight out in join order; stolen
+    // chunk blocks merge additively across workers first (stripe
+    // updates are additive), in worker-then-chunk order for a
+    // deterministic merge, then follow.
     let mut chunk_acc: Vec<Option<StripeBlock<R>>> = (0..chunks.len()).map(|_| None).collect();
     let mut any_steal = false;
     for out in outs {
         match out {
-            RunnerOut::Blocks(mut b) => blocks.append(&mut b),
+            RunnerOut::Blocks(b) => {
+                for blk in b {
+                    emit(blk)?;
+                }
+            }
             RunnerOut::Chunks(mut map) => {
                 any_steal = true;
                 let mut keys: Vec<usize> = map.keys().copied().collect();
@@ -370,10 +400,10 @@ pub fn drive<R: XlaReal>(
             let (start, count) = chunks[ci];
             // chunks untouched by any worker (zero batches) still owe a
             // zero block so matrix assembly sees full coverage
-            blocks.push(slot.unwrap_or_else(|| StripeBlock::new(padded, start, count)));
+            emit(slot.unwrap_or_else(|| StripeBlock::new(padded, start, count)))?;
         }
     }
-    Ok((blocks, report))
+    Ok(report)
 }
 
 #[cfg(test)]

@@ -3,8 +3,21 @@
 use super::stripes::{total_stripes, StripeBlock};
 use crate::error::{Error, MergeError, Result};
 use crate::util::{pearson, Real};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader};
 use std::path::Path;
+
+/// Offset of the pair `(i, j)` (requiring `i < j < n`) in the condensed
+/// upper-triangle vector of an `n`-sample matrix (scipy `squareform`
+/// layout, pair order `(0,1), (0,2), …, (n-2,n-1)`).
+///
+/// This is the one layout rule shared by [`CondensedMatrix`], the
+/// out-of-core sinks (`matrix::sink`) and the file-backed readers
+/// (`matrix::CondensedFile`).
+#[inline]
+pub fn condensed_index(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n, "condensed_index wants i < j < n");
+    i * n - i * (i + 1) / 2 + (j - i - 1)
+}
 
 /// Symmetric zero-diagonal distance matrix stored as the condensed upper
 /// triangle (scipy `squareform` layout).
@@ -16,16 +29,19 @@ pub struct CondensedMatrix {
 }
 
 impl CondensedMatrix {
+    /// All-zero matrix over `n` samples (`ids` may be empty).
     pub fn zeros(n: usize, ids: Vec<String>) -> Self {
         assert!(n >= 2, "need at least 2 samples");
         assert!(ids.is_empty() || ids.len() == n, "id count mismatch");
         Self { n, data: vec![0.0; n * (n - 1) / 2], ids }
     }
 
+    /// Number of samples (the matrix is `n × n`).
     pub fn n_samples(&self) -> usize {
         self.n
     }
 
+    /// Sample id ordering (may be empty).
     pub fn ids(&self) -> &[String] {
         &self.ids
     }
@@ -37,11 +53,10 @@ impl CondensedMatrix {
 
     #[inline]
     fn index(&self, i: usize, j: usize) -> usize {
-        debug_assert!(i < j && j < self.n);
-        // offset of row i in the condensed triangle
-        i * self.n - i * (i + 1) / 2 + (j - i - 1)
+        condensed_index(self.n, i, j)
     }
 
+    /// Distance between samples `i` and `j` (0 on the diagonal).
     pub fn get(&self, i: usize, j: usize) -> f64 {
         if i == j {
             return 0.0;
@@ -50,6 +65,7 @@ impl CondensedMatrix {
         self.data[self.index(a, b)]
     }
 
+    /// Set the symmetric entry `(i, j)`; the diagonal is immutable.
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         assert_ne!(i, j, "diagonal is fixed at 0");
         let (a, b) = (i.min(j), i.max(j));
@@ -147,6 +163,7 @@ impl CondensedMatrix {
         out
     }
 
+    /// Max |self - other| over all entries (fp32-vs-fp64 validation).
     pub fn max_abs_diff(&self, other: &Self) -> f64 {
         assert_eq!(self.n, other.n, "size mismatch");
         self.data
@@ -163,25 +180,12 @@ impl CondensedMatrix {
         pearson(&self.data, &other.data)
     }
 
-    /// Write the standard square TSV (`qiime`-style) distance matrix.
+    /// Write the standard square TSV (`qiime`-style) distance matrix —
+    /// through the one shared formatter (`view::write_square_tsv`), so
+    /// the in-memory and out-of-core TSV outputs are byte-identical by
+    /// construction.
     pub fn write_tsv(&self, path: impl AsRef<Path>) -> Result<()> {
-        let f = std::fs::File::create(path)?;
-        let mut w = BufWriter::new(f);
-        let id = |i: usize| -> String {
-            self.ids.get(i).cloned().unwrap_or_else(|| format!("S{i}"))
-        };
-        for i in 0..self.n {
-            write!(w, "\t{}", id(i))?;
-        }
-        writeln!(w)?;
-        for i in 0..self.n {
-            write!(w, "{}", id(i))?;
-            for j in 0..self.n {
-                write!(w, "\t{:.10}", self.get(i, j))?;
-            }
-            writeln!(w)?;
-        }
-        Ok(())
+        super::view::write_square_tsv(self, path)
     }
 
     /// Read the square TSV written by [`write_tsv`]; validates symmetry.

@@ -1,13 +1,26 @@
-//! Distance-matrix substrate: stripe accumulators + condensed matrix.
+//! Distance-matrix substrate: stripe accumulators, condensed matrix,
+//! out-of-core sinks and read views.
 //!
 //! Striped UniFrac's central data structure is the *stripe buffer*
 //! (`dm_stripes_buf` in the paper's Figure 1): stripe `s` holds, for every
 //! sample `k`, the running numerator/denominator of the pair
 //! `(k, (k + s + 1) mod N)`. Assembly maps finished stripes into the
-//! standard condensed pairwise matrix.
+//! standard condensed pairwise matrix — either in RAM
+//! ([`CondensedMatrix::from_stripes`] / [`InMemorySink`]) or streamed to
+//! disk as they finish ([`sink`]: the ISSUE-5 out-of-core path that
+//! makes the paper's EMP-scale matrices possible on laptop RAM), with
+//! [`CondensedView`] as the read abstraction downstream statistics
+//! consume over both.
 
 mod condensed;
+pub mod sink;
 mod stripes;
+mod view;
 
-pub use condensed::CondensedMatrix;
+pub use condensed::{condensed_index, CondensedMatrix};
+pub use sink::{
+    DistMatrixSink, InMemorySink, MmapCondensedSink, OutputFormat, SinkMeta, SinkStats,
+    StreamTsvSink,
+};
 pub use stripes::{total_stripes, StripeBlock};
+pub use view::{load_view, CondensedFile, CondensedView};

@@ -1,0 +1,1291 @@
+//! Out-of-core distance-matrix sinks (ISSUE 5 tentpole).
+//!
+//! The EMP-scale workloads the paper targets (113k samples) produce a
+//! condensed matrix of ~6.4e9 entries — ~51 GB of f64 — which must never
+//! be materialized in RAM on laptop-class hardware. A
+//! [`DistMatrixSink`] absorbs finished [`StripeBlock`]s *as they
+//! complete* and finalizes them straight into their output form, so the
+//! resident set stays bounded by the compute scratch (batch pool +
+//! in-flight stripe blocks), not by the `O(N²)` result:
+//!
+//! * [`InMemorySink`] — assembles a [`CondensedMatrix`] in RAM (the
+//!   pre-sink behavior; what `coordinator::run` uses).
+//! * [`MmapCondensedSink`] — the raw little-endian condensed binary
+//!   (`UFDM` format below) written through a shared memory mapping (or
+//!   positioned file writes on the `bin` path), **resumable**: a
+//!   stripe-coverage bitmap in the header records which stripes have
+//!   been flushed, so a killed run picks up at the first missing range
+//!   (`missing_ranges`), reusing the partial-result stripe-range
+//!   bookkeeping.
+//! * [`StreamTsvSink`] — streams the standard square TSV by spooling
+//!   the condensed entries to a `*.spool` UFDM file first, then
+//!   emitting rows from it; byte-identical to
+//!   `CondensedMatrix::write_tsv` of an in-memory run.
+//!
+//! ## The `UFDM` on-disk format (version 1, little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic "UFDM"
+//!      4     2  version (u16, = 1)
+//!      6     1  compute fp width in bytes (4 = f32, 8 = f64; provenance
+//!               only — the payload is always f64)
+//!      7     1  flags (bit 0: finalized — full coverage validated)
+//!      8     8  n_samples (u64)
+//!     16     8  padded_n (u64; stripe-block chunk width)
+//!     24     8  stripes_total (u64, = padded_n / 2)
+//!     32     8  bitmap_off (u64)
+//!     40     8  payload_off (u64; 8-byte aligned)
+//!     48     8  generalized-UniFrac alpha (f64)
+//!     56     1  metric name length m (name at offset 64)
+//!     57     7  reserved (zero)
+//!     64     m  metric name (ascii)
+//!      …        sample ids: u32 count, then per id u32 len + bytes
+//! bitmap_off    stripe coverage bitmap, ceil(stripes_total/8) bytes
+//!               (bit s of byte s/8 = stripe s flushed)
+//! payload_off   n_samples*(n_samples-1)/2 condensed f64 distances,
+//!               pair order (0,1), (0,2), …, (n-2,n-1)
+//! ```
+//!
+//! The payload is stored as f64 even for f32 runs: distances are
+//! finalized in f64 (exactly like [`CondensedMatrix`]), which keeps
+//! every sink bit-identical to the in-memory path at both precisions.
+//! `docs/emp-scale.md` is the operator-facing reference for this
+//! format, including the memory-sizing table and resume semantics.
+
+use super::condensed::{condensed_index, CondensedMatrix};
+use super::stripes::{total_stripes, StripeBlock};
+use crate::error::{Error, MergeError, Result};
+use crate::unifrac::Metric;
+use crate::util::Real;
+use std::path::{Path, PathBuf};
+
+/// Where a path-producing run writes its distance matrix
+/// (`--output-format`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputFormat {
+    /// Standard square TSV, streamed through a spool file
+    /// ([`StreamTsvSink`]).
+    Tsv,
+    /// Raw condensed `UFDM` binary via positioned file writes
+    /// ([`MmapCondensedSink`], buffered backend).
+    Bin,
+    /// Raw condensed `UFDM` binary via a shared memory mapping,
+    /// resumable after a kill ([`MmapCondensedSink`]).
+    Mmap,
+}
+
+impl OutputFormat {
+    /// Every format, in CLI help order.
+    pub const ALL: [OutputFormat; 3] = [Self::Tsv, Self::Bin, Self::Mmap];
+
+    /// Canonical CLI/config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            OutputFormat::Tsv => "tsv",
+            OutputFormat::Bin => "bin",
+            OutputFormat::Mmap => "mmap",
+        }
+    }
+
+    /// Parse a CLI/config name (round-trips with [`Self::name`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|f| f.name() == s)
+    }
+
+    /// `"tsv|bin|mmap"` — the accepted-values string for help text.
+    pub fn names_list() -> String {
+        Self::ALL.map(|f| f.name()).join("|")
+    }
+}
+
+impl std::fmt::Display for OutputFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Everything a sink must know before the first block arrives.
+#[derive(Clone, Debug)]
+pub struct SinkMeta {
+    /// Real sample count (the condensed payload is `n*(n-1)/2` wide).
+    pub n_samples: usize,
+    /// Padded chunk width the incoming stripe blocks were computed over.
+    pub padded_n: usize,
+    /// The metric whose `finalize(num, den)` turns accumulators into
+    /// distances.
+    pub metric: Metric,
+    /// Compute-precision width in bytes (4 = f32, 8 = f64) — recorded
+    /// for provenance and resume validation; the payload itself is f64.
+    pub fp_bytes: usize,
+    /// Sample id ordering (may be empty; written into file headers).
+    pub sample_ids: Vec<String>,
+}
+
+impl SinkMeta {
+    fn validate(&self) -> Result<()> {
+        if self.n_samples < 2 {
+            return Err(Error::Shape("need at least 2 samples".into()));
+        }
+        if self.padded_n < self.n_samples {
+            return Err(Error::Shape(format!(
+                "padded width {} below sample count {}",
+                self.padded_n, self.n_samples
+            )));
+        }
+        if !self.sample_ids.is_empty() && self.sample_ids.len() != self.n_samples {
+            return Err(Error::Shape(format!(
+                "{} sample ids for {} samples",
+                self.sample_ids.len(),
+                self.n_samples
+            )));
+        }
+        if self.fp_bytes != 4 && self.fp_bytes != 8 {
+            return Err(Error::invalid(format!("bad fp width {} bytes", self.fp_bytes)));
+        }
+        Ok(())
+    }
+
+    fn n_pairs(&self) -> u64 {
+        let n = self.n_samples as u64;
+        n * (n - 1) / 2
+    }
+}
+
+/// Flush accounting — how much landed in the sink and how much the sink
+/// itself ever kept resident. The ISSUE-5 acceptance criterion asserts
+/// peak-RSS boundedness through `peak_resident_bytes` (the sink's own
+/// memory high-water mark) rather than by allocating a full matrix.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SinkStats {
+    /// Stripe blocks flushed via `put_block`.
+    pub blocks_flushed: usize,
+    /// Stripes flushed (each marked exactly once in the coverage map).
+    pub stripes_flushed: usize,
+    /// Distance entries written (each real pair exactly once).
+    pub pairs_written: u64,
+    /// Payload bytes written (8 per pair).
+    pub payload_bytes_written: u64,
+    /// High-water mark of the sink's own resident memory: the full
+    /// condensed buffer for [`InMemorySink`], only per-flush scratch +
+    /// the coverage map for the out-of-core sinks.
+    pub peak_resident_bytes: u64,
+}
+
+/// A sink for finished stripe blocks: the completed-stripe side of the
+/// streaming pipeline. `exec::drive_each` / `coordinator::run_to_sink`
+/// flush each finished block here instead of accumulating them, and
+/// `finish` validates that the flushed stripes tile the whole stripe
+/// space (the same gap/overlap discipline as
+/// [`CondensedMatrix::from_stripes`], with the same typed
+/// [`MergeError`]s).
+pub trait DistMatrixSink<R: Real> {
+    /// Flush one finished stripe block (finalized entry-by-entry with
+    /// the metric recorded in the sink's [`SinkMeta`]).
+    fn put_block(&mut self, block: &StripeBlock<R>) -> Result<()>;
+    /// All blocks delivered: validate full stripe coverage and finalize
+    /// the output (write the TSV, set the finalized flag, …).
+    fn finish(&mut self) -> Result<()>;
+    /// Flush accounting so far.
+    fn stats(&self) -> SinkStats;
+    /// Maximal runs of stripes not yet flushed — the work a resumed run
+    /// still owes (`[(start, count), …]`, ascending, disjoint).
+    fn missing_ranges(&self) -> Vec<(usize, usize)>;
+    /// The assembled matrix, if this sink holds one in memory
+    /// ([`InMemorySink`] after `finish`; `None` for out-of-core sinks).
+    fn take_matrix(&mut self) -> Option<CondensedMatrix> {
+        None
+    }
+}
+
+// ---- stripe coverage bookkeeping (shared by every sink) ----
+
+#[derive(Clone, Debug)]
+struct Coverage {
+    covered: Vec<bool>,
+    n_covered: usize,
+}
+
+impl Coverage {
+    fn new(total: usize) -> Self {
+        Self { covered: vec![false; total], n_covered: 0 }
+    }
+
+    fn from_bits(bits: &[u8], total: usize) -> Self {
+        let mut c = Self::new(total);
+        for s in 0..total {
+            if bits.get(s / 8).map(|b| (b >> (s % 8)) & 1 == 1).unwrap_or(false) {
+                c.covered[s] = true;
+                c.n_covered += 1;
+            }
+        }
+        c
+    }
+
+    fn to_bits(&self) -> Vec<u8> {
+        let mut bits = vec![0u8; self.covered.len().div_ceil(8)];
+        for (s, &c) in self.covered.iter().enumerate() {
+            if c {
+                bits[s / 8] |= 1 << (s % 8);
+            }
+        }
+        bits
+    }
+
+    fn len(&self) -> usize {
+        self.covered.len()
+    }
+
+    fn mark(&mut self, stripe: usize) -> Result<()> {
+        if self.covered[stripe] {
+            return Err(Error::Merge(MergeError::Overlap { stripe }));
+        }
+        self.covered[stripe] = true;
+        self.n_covered += 1;
+        Ok(())
+    }
+
+    fn require_full(&self) -> Result<()> {
+        if let Some(missing) = self.covered.iter().position(|&c| !c) {
+            return Err(Error::Merge(MergeError::Gap { stripe: missing }));
+        }
+        Ok(())
+    }
+
+    fn missing_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.covered.len() {
+            if self.covered[i] {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < self.covered.len() && !self.covered[i] {
+                i += 1;
+            }
+            out.push((start, i - start));
+        }
+        out
+    }
+}
+
+/// Finalize one stripe row into `(condensed index, distance)` entries.
+/// Mirrors `CondensedMatrix::from_stripes` exactly: padded and diagonal
+/// columns are skipped; the doubled pairs of an even-width last stripe
+/// produce duplicate entries with bit-identical values (deduplicated by
+/// the caller after sorting).
+fn stripe_entries<R: Real>(
+    meta: &SinkMeta,
+    s: usize,
+    num: &[R],
+    den: &[R],
+    out: &mut Vec<(usize, f64)>,
+) {
+    let padded = meta.padded_n;
+    let n = meta.n_samples;
+    for k in 0..padded {
+        let j = (k + s + 1) % padded;
+        if k >= n || j >= n || k == j {
+            continue;
+        }
+        let (a, b) = if k < j { (k, j) } else { (j, k) };
+        let d = meta.metric.finalize(num[k].to_f64(), den[k].to_f64());
+        out.push((condensed_index(n, a, b), d));
+    }
+}
+
+fn check_block_width<R: Real>(meta: &SinkMeta, block: &StripeBlock<R>) -> Result<()> {
+    if block.n_samples() != meta.padded_n {
+        return Err(Error::Merge(MergeError::WidthMismatch {
+            expected: meta.padded_n,
+            got: block.n_samples(),
+        }));
+    }
+    Ok(())
+}
+
+fn fp_name(bytes: usize) -> &'static str {
+    match bytes {
+        4 => "f32",
+        8 => "f64",
+        _ => "?",
+    }
+}
+
+// ---- positioned file IO (portable: `&File` is Read/Seek/Write) ----
+
+fn read_exact_at(f: &std::fs::File, off: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::os::unix::fs::FileExt::read_exact_at(f, buf, off)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut r = f;
+        r.seek(SeekFrom::Start(off))?;
+        r.read_exact(buf)
+    }
+}
+
+fn write_all_at(f: &std::fs::File, off: u64, data: &[u8]) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::os::unix::fs::FileExt::write_all_at(f, data, off)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut w = f;
+        w.seek(SeekFrom::Start(off))?;
+        w.write_all(data)
+    }
+}
+
+// ---- shared memory mapping (unix; no external crates offline) ----
+
+#[cfg(unix)]
+mod mmap_sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+    #[cfg(target_os = "macos")]
+    pub const MS_SYNC: c_int = 0x0010;
+    #[cfg(not(target_os = "macos"))]
+    pub const MS_SYNC: c_int = 4;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn msync(addr: *mut c_void, len: usize, flags: c_int) -> c_int;
+    }
+}
+
+/// A `MAP_SHARED` mapping of a whole file. The OS page cache owns the
+/// memory: dirty pages are written back and evicted under pressure, so
+/// a mapped 50 GB matrix does not count against the process's working
+/// set the way a `Vec` would.
+#[cfg(unix)]
+pub(crate) struct MmapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The region is an exclusively-owned raw allocation; `&self` access is
+// as thread-safe as a slice.
+#[cfg(unix)]
+unsafe impl Send for MmapRegion {}
+#[cfg(unix)]
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(unix)]
+impl MmapRegion {
+    pub(crate) fn map(file: &std::fs::File, len: usize, writable: bool) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Err(Error::invalid("cannot map an empty file"));
+        }
+        let prot = if writable {
+            mmap_sys::PROT_READ | mmap_sys::PROT_WRITE
+        } else {
+            mmap_sys::PROT_READ
+        };
+        let p = unsafe {
+            mmap_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                prot,
+                mmap_sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if p as isize == -1 {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        Ok(Self { ptr: p as *mut u8, len })
+    }
+
+    pub(crate) fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len come from a successful mmap of exactly `len`
+        // bytes; the mapping lives until Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub(crate) fn bytes_mut(&mut self) -> &mut [u8] {
+        // SAFETY: as `bytes`, and the region was mapped writable
+        // (callers only obtain `&mut self` on writable sinks).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    pub(crate) fn sync(&self) {
+        // Durability best-effort; failure leaves the page cache to
+        // write back on its own schedule.
+        unsafe {
+            let _ = mmap_sys::msync(self.ptr as *mut _, self.len, mmap_sys::MS_SYNC);
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        unsafe {
+            let _ = mmap_sys::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+// ---- UFDM header ----
+
+pub(crate) const UFDM_MAGIC: &[u8; 4] = b"UFDM";
+pub(crate) const UFDM_VERSION: u16 = 1;
+pub(crate) const UFDM_FLAG_FINALIZED: u8 = 1;
+const PROLOGUE_LEN: usize = 64;
+
+#[derive(Clone, Debug)]
+struct Layout {
+    bitmap_off: u64,
+    payload_off: u64,
+    n_pairs: u64,
+    stripes_total: usize,
+}
+
+impl Layout {
+    fn for_meta(meta: &SinkMeta) -> Self {
+        let mut ids_len = 4u64;
+        for id in &meta.sample_ids {
+            ids_len += 4 + id.len() as u64;
+        }
+        let bitmap_off = PROLOGUE_LEN as u64 + meta.metric.name().len() as u64 + ids_len;
+        let stripes_total = total_stripes(meta.padded_n);
+        let bitmap_bytes = stripes_total.div_ceil(8) as u64;
+        let payload_off = (bitmap_off + bitmap_bytes + 7) & !7;
+        Self { bitmap_off, payload_off, n_pairs: meta.n_pairs(), stripes_total }
+    }
+
+    fn file_len(&self) -> u64 {
+        self.payload_off + self.n_pairs * 8
+    }
+}
+
+/// Parsed UFDM header (prologue + metric + ids + coverage bitmap).
+pub(crate) struct UfdmHeader {
+    pub fp_bytes: u8,
+    pub flags: u8,
+    pub n_samples: usize,
+    pub padded_n: usize,
+    pub stripes_total: usize,
+    pub payload_off: u64,
+    pub metric: Metric,
+    pub ids: Vec<String>,
+    pub bitmap: Vec<u8>,
+}
+
+impl UfdmHeader {
+    /// Whether every stripe is flushed (finalized flag, or a full
+    /// coverage bitmap from a run killed just before the flag write).
+    pub fn is_complete(&self) -> bool {
+        if self.flags & UFDM_FLAG_FINALIZED != 0 {
+            return true;
+        }
+        (0..self.stripes_total)
+            .all(|s| self.bitmap.get(s / 8).map(|b| (b >> (s % 8)) & 1 == 1).unwrap_or(false))
+    }
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().expect("8 bytes"))
+}
+
+/// Read and validate a UFDM header from an open file.
+pub(crate) fn read_ufdm_header(f: &std::fs::File) -> Result<UfdmHeader> {
+    let mut pro = [0u8; PROLOGUE_LEN];
+    read_exact_at(f, 0, &mut pro)
+        .map_err(|_| Error::invalid("not a UniFrac condensed matrix (short header)"))?;
+    if &pro[0..4] != UFDM_MAGIC {
+        return Err(Error::invalid("not a UniFrac condensed matrix (bad magic)"));
+    }
+    let version = u16::from_le_bytes(pro[4..6].try_into().expect("2 bytes"));
+    if version != UFDM_VERSION {
+        return Err(Error::invalid(format!(
+            "unsupported condensed-matrix format version {version} (expected {UFDM_VERSION})"
+        )));
+    }
+    let fp_bytes = pro[6];
+    let flags = pro[7];
+    let n_samples = le_u64(&pro[8..16]) as usize;
+    let padded_n = le_u64(&pro[16..24]) as usize;
+    let stripes_total = le_u64(&pro[24..32]) as usize;
+    let bitmap_off = le_u64(&pro[32..40]);
+    let payload_off = le_u64(&pro[40..48]);
+    let alpha = f64::from_le_bytes(pro[48..56].try_into().expect("8 bytes"));
+    let metric_len = pro[56] as usize;
+    // untrusted header: everything checked before any allocation sized
+    // from it (same discipline as PartialResult::from_bytes)
+    if fp_bytes != 4 && fp_bytes != 8 {
+        return Err(Error::invalid(format!("bad fp width byte {fp_bytes}")));
+    }
+    if n_samples < 2 || padded_n < n_samples || stripes_total != total_stripes(padded_n) {
+        return Err(Error::invalid(format!(
+            "bad condensed-matrix geometry: n={n_samples}, padded={padded_n}, \
+             stripes={stripes_total}"
+        )));
+    }
+    if metric_len == 0 || metric_len > 32 {
+        return Err(Error::invalid("bad metric name length in header"));
+    }
+    let bitmap_bytes = stripes_total.div_ceil(8) as u64;
+    let var_end = (PROLOGUE_LEN + metric_len) as u64;
+    if bitmap_off < var_end || payload_off < bitmap_off + bitmap_bytes || payload_off % 8 != 0 {
+        return Err(Error::invalid("inconsistent header offsets"));
+    }
+    let file_len = f.metadata()?.len();
+    let n_pairs = (n_samples as u64)
+        .checked_mul(n_samples as u64 - 1)
+        .map(|x| x / 2)
+        .ok_or_else(|| Error::invalid("sample count overflows the pair space"))?;
+    let need = payload_off
+        .checked_add(n_pairs.checked_mul(8).ok_or_else(|| Error::invalid("payload overflows"))?)
+        .ok_or_else(|| Error::invalid("payload overflows"))?;
+    if file_len < need {
+        return Err(Error::invalid(format!(
+            "condensed-matrix file truncated: {file_len} bytes, payload needs {need}"
+        )));
+    }
+    if bitmap_off > file_len || bitmap_off.saturating_sub(PROLOGUE_LEN as u64) > (1 << 30) {
+        return Err(Error::invalid("unreasonable header size"));
+    }
+    let mut metric_buf = vec![0u8; metric_len];
+    read_exact_at(f, PROLOGUE_LEN as u64, &mut metric_buf)?;
+    let metric_name = std::str::from_utf8(&metric_buf)
+        .map_err(|_| Error::invalid("non-utf8 metric name in header"))?;
+    let metric = Metric::parse(metric_name, alpha)
+        .ok_or_else(|| Error::invalid(format!("unknown metric {metric_name:?} in header")))?;
+    // ids section: [var_end, bitmap_off)
+    let ids_bytes = (bitmap_off - var_end) as usize;
+    let mut ids_buf = vec![0u8; ids_bytes];
+    read_exact_at(f, var_end, &mut ids_buf)?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize, buf: &[u8]| -> Result<std::ops::Range<usize>> {
+        if *pos + n > buf.len() {
+            return Err(Error::invalid("truncated id section in header"));
+        }
+        let r = *pos..*pos + n;
+        *pos += n;
+        Ok(r)
+    };
+    let count = u32::from_le_bytes(ids_buf[take(&mut pos, 4, &ids_buf)?].try_into().expect("4"))
+        as usize;
+    if count != 0 && count != n_samples {
+        return Err(Error::invalid(format!("{count} sample ids for {n_samples} samples")));
+    }
+    let mut ids = Vec::with_capacity(count);
+    for _ in 0..count {
+        let len =
+            u32::from_le_bytes(ids_buf[take(&mut pos, 4, &ids_buf)?].try_into().expect("4"))
+                as usize;
+        let r = take(&mut pos, len, &ids_buf)?;
+        ids.push(
+            String::from_utf8(ids_buf[r].to_vec())
+                .map_err(|_| Error::invalid("non-utf8 sample id in header"))?,
+        );
+    }
+    let mut bitmap = vec![0u8; bitmap_bytes as usize];
+    read_exact_at(f, bitmap_off, &mut bitmap)?;
+    Ok(UfdmHeader {
+        fp_bytes,
+        flags,
+        n_samples,
+        padded_n,
+        stripes_total,
+        payload_off,
+        metric,
+        ids,
+        bitmap,
+    })
+}
+
+// ---- the write-side store (mmap or positioned file writes) ----
+
+enum Store {
+    /// Positioned writes through the descriptor (`--output-format bin`,
+    /// and every platform without the mapping support).
+    File(std::fs::File),
+    /// Shared mapping (`--output-format mmap`): stripe flushes are
+    /// plain memory stores; the page cache owns write-back.
+    #[cfg(unix)]
+    Mapped { file: std::fs::File, region: MmapRegion },
+}
+
+impl Store {
+    fn write_at(&mut self, off: u64, data: &[u8]) -> Result<()> {
+        match self {
+            Store::File(f) => write_all_at(f, off, data).map_err(Error::Io),
+            #[cfg(unix)]
+            Store::Mapped { region, .. } => {
+                let o = off as usize;
+                region.bytes_mut()[o..o + data.len()].copy_from_slice(data);
+                Ok(())
+            }
+        }
+    }
+
+    fn sync(&self) {
+        match self {
+            Store::File(f) => {
+                let _ = f.sync_data();
+            }
+            #[cfg(unix)]
+            Store::Mapped { file, region } => {
+                region.sync();
+                let _ = file.sync_data();
+            }
+        }
+    }
+}
+
+// ---- MmapCondensedSink ----
+
+/// The out-of-core condensed-matrix sink: writes the `UFDM` binary
+/// (header + coverage bitmap + condensed f64 payload) as stripe blocks
+/// arrive. Resumable: reopening an interrupted file with the same
+/// [`SinkMeta`] restores the coverage bitmap, and [`DistMatrixSink::missing_ranges`]
+/// says which stripe ranges still need computing.
+pub struct MmapCondensedSink {
+    meta: SinkMeta,
+    layout: Layout,
+    coverage: Coverage,
+    store: Store,
+    stats: SinkStats,
+    scratch: Vec<(usize, f64)>,
+    run_buf: Vec<u8>,
+    finished: bool,
+}
+
+impl MmapCondensedSink {
+    /// Create a fresh sink at `path` (truncates), memory-mapped where
+    /// the platform supports it, positioned file writes otherwise.
+    pub fn create(path: impl AsRef<Path>, meta: SinkMeta) -> Result<Self> {
+        Self::create_backend(path, meta, true)
+    }
+
+    /// Create a fresh sink at `path` using positioned file writes (the
+    /// `--output-format bin` path) — same bytes on disk as [`Self::create`].
+    pub fn create_buffered(path: impl AsRef<Path>, meta: SinkMeta) -> Result<Self> {
+        Self::create_backend(path, meta, false)
+    }
+
+    fn create_backend(path: impl AsRef<Path>, meta: SinkMeta, mapped: bool) -> Result<Self> {
+        meta.validate()?;
+        let layout = Layout::for_meta(&meta);
+        let file = std::fs::File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path.as_ref())?;
+        file.set_len(layout.file_len())?;
+        let coverage = Coverage::new(layout.stripes_total);
+        let head = header_bytes(&meta, &layout, &coverage);
+        write_all_at(&file, 0, &head)?;
+        let store = open_store(file, &layout, mapped)?;
+        Ok(Self::assemble(meta, layout, coverage, store))
+    }
+
+    /// Reopen an interrupted sink at `path`, validating that its header
+    /// describes the same problem as `meta` (same sample count and ids,
+    /// padded width, metric, compute precision — mismatches surface as
+    /// the corresponding typed [`MergeError`]). The restored coverage
+    /// bitmap drives [`DistMatrixSink::missing_ranges`].
+    pub fn open_resume(path: impl AsRef<Path>, meta: SinkMeta) -> Result<Self> {
+        meta.validate()?;
+        let file = std::fs::File::options().read(true).write(true).open(path.as_ref())?;
+        let h = read_ufdm_header(&file)?;
+        if h.n_samples != meta.n_samples {
+            return Err(
+                MergeError::SampleMismatch { expected: meta.n_samples, got: h.n_samples }.into()
+            );
+        }
+        if h.padded_n != meta.padded_n {
+            return Err(
+                MergeError::WidthMismatch { expected: meta.padded_n, got: h.padded_n }.into()
+            );
+        }
+        if h.metric != meta.metric {
+            return Err(MergeError::MetricMismatch {
+                expected: meta.metric.to_string(),
+                got: h.metric.to_string(),
+            }
+            .into());
+        }
+        if h.fp_bytes as usize != meta.fp_bytes {
+            return Err(MergeError::PrecisionMismatch {
+                expected: fp_name(meta.fp_bytes),
+                got: fp_name(h.fp_bytes as usize),
+            }
+            .into());
+        }
+        if !h.ids.is_empty() && !meta.sample_ids.is_empty() && h.ids != meta.sample_ids {
+            return Err(MergeError::IdMismatch.into());
+        }
+        let layout = Layout::for_meta(&meta);
+        if layout.payload_off != h.payload_off {
+            // same logical problem but a different id/metric encoding
+            // would shift the payload — refuse rather than corrupt
+            return Err(Error::invalid(
+                "resume header layout differs from this run's (ids changed?)",
+            ));
+        }
+        let coverage = Coverage::from_bits(&h.bitmap, layout.stripes_total);
+        let store = open_store(file, &layout, true)?;
+        Ok(Self::assemble(meta, layout, coverage, store))
+    }
+
+    /// [`Self::open_resume`] when `path` already holds a resumable file,
+    /// [`Self::create`] otherwise — the `--output-format mmap` entry
+    /// point.
+    pub fn create_or_resume(path: impl AsRef<Path>, meta: SinkMeta) -> Result<Self> {
+        let p = path.as_ref();
+        let existing = std::fs::metadata(p).map(|m| m.len() > 0).unwrap_or(false);
+        if existing {
+            Self::open_resume(p, meta)
+        } else {
+            Self::create(p, meta)
+        }
+    }
+
+    fn assemble(meta: SinkMeta, layout: Layout, coverage: Coverage, store: Store) -> Self {
+        Self {
+            meta,
+            layout,
+            coverage,
+            store,
+            stats: SinkStats::default(),
+            scratch: Vec::new(),
+            run_buf: Vec::new(),
+            finished: false,
+        }
+    }
+
+    /// Stripes already present when the sink was opened (0 for fresh
+    /// sinks) — the resume ledger `run_to_path` reports.
+    pub fn resumed_stripes(&self) -> usize {
+        self.coverage.n_covered - self.stats.stripes_flushed
+    }
+
+    fn put_block_impl<R: Real>(&mut self, block: &StripeBlock<R>) -> Result<()> {
+        if self.finished {
+            return Err(Error::invalid("sink already finished"));
+        }
+        check_block_width(&self.meta, block)?;
+        for s_local in 0..block.n_stripes() {
+            let s = block.start() + s_local;
+            if s >= self.coverage.len() {
+                continue; // harmless over-computation beyond coverage
+            }
+            self.coverage.mark(s)?;
+            self.scratch.clear();
+            stripe_entries(
+                &self.meta,
+                s,
+                block.num_row(s_local),
+                block.den_row(s_local),
+                &mut self.scratch,
+            );
+            self.scratch.sort_unstable_by_key(|e| e.0);
+            // an even-width last stripe visits each of its pairs twice
+            // with bit-identical values — keep one
+            self.scratch.dedup_by_key(|e| e.0);
+            let payload_off = self.layout.payload_off;
+            let mut i = 0usize;
+            while i < self.scratch.len() {
+                let (start_idx, _) = self.scratch[i];
+                self.run_buf.clear();
+                let mut expect = start_idx;
+                let mut j = i;
+                while j < self.scratch.len() && self.scratch[j].0 == expect {
+                    self.run_buf.extend_from_slice(&self.scratch[j].1.to_le_bytes());
+                    expect += 1;
+                    j += 1;
+                }
+                self.store.write_at(payload_off + start_idx as u64 * 8, &self.run_buf)?;
+                i = j;
+            }
+            self.stats.pairs_written += self.scratch.len() as u64;
+            self.stats.payload_bytes_written += self.scratch.len() as u64 * 8;
+            self.stats.stripes_flushed += 1;
+            // persist the coverage bit *after* its payload: a process
+            // kill between the two at worst recomputes the stripe. (The
+            // page cache gives no write-back ORDERING across a power
+            // loss — resume guarantees cover process kills, not system
+            // crashes; see docs/emp-scale.md.)
+            let byte_i = s / 8;
+            let mut byte = 0u8;
+            for bit in 0..8 {
+                let t = byte_i * 8 + bit;
+                if t < self.coverage.len() && self.coverage.covered[t] {
+                    byte |= 1 << bit;
+                }
+            }
+            self.store.write_at(self.layout.bitmap_off + byte_i as u64, &[byte])?;
+        }
+        self.stats.blocks_flushed += 1;
+        let resident = (self.scratch.capacity() * 16
+            + self.run_buf.capacity()
+            + self.coverage.len()) as u64;
+        self.stats.peak_resident_bytes = self.stats.peak_resident_bytes.max(resident);
+        Ok(())
+    }
+
+    fn finish_impl(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.coverage.require_full()?;
+        self.store.write_at(7, &[UFDM_FLAG_FINALIZED])?;
+        self.store.sync();
+        self.finished = true;
+        Ok(())
+    }
+}
+
+fn open_store(file: std::fs::File, layout: &Layout, mapped: bool) -> Result<Store> {
+    #[cfg(unix)]
+    {
+        if mapped {
+            let region = MmapRegion::map(&file, layout.file_len() as usize, true)?;
+            return Ok(Store::Mapped { file, region });
+        }
+    }
+    let _ = (layout, mapped);
+    Ok(Store::File(file))
+}
+
+fn header_bytes(meta: &SinkMeta, layout: &Layout, coverage: &Coverage) -> Vec<u8> {
+    let mut v = Vec::with_capacity(layout.payload_off as usize);
+    v.extend_from_slice(UFDM_MAGIC);
+    v.extend_from_slice(&UFDM_VERSION.to_le_bytes());
+    v.push(meta.fp_bytes as u8);
+    v.push(0u8); // flags: not finalized
+    v.extend_from_slice(&(meta.n_samples as u64).to_le_bytes());
+    v.extend_from_slice(&(meta.padded_n as u64).to_le_bytes());
+    v.extend_from_slice(&(layout.stripes_total as u64).to_le_bytes());
+    v.extend_from_slice(&layout.bitmap_off.to_le_bytes());
+    v.extend_from_slice(&layout.payload_off.to_le_bytes());
+    v.extend_from_slice(&meta.metric.alpha().to_le_bytes());
+    v.push(meta.metric.name().len() as u8);
+    v.resize(PROLOGUE_LEN, 0);
+    v.extend_from_slice(meta.metric.name().as_bytes());
+    v.extend_from_slice(&(meta.sample_ids.len() as u32).to_le_bytes());
+    for id in &meta.sample_ids {
+        v.extend_from_slice(&(id.len() as u32).to_le_bytes());
+        v.extend_from_slice(id.as_bytes());
+    }
+    debug_assert_eq!(v.len() as u64, layout.bitmap_off);
+    v.extend_from_slice(&coverage.to_bits());
+    v.resize(layout.payload_off as usize, 0);
+    v
+}
+
+impl<R: Real> DistMatrixSink<R> for MmapCondensedSink {
+    fn put_block(&mut self, block: &StripeBlock<R>) -> Result<()> {
+        self.put_block_impl(block)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.finish_impl()
+    }
+
+    fn stats(&self) -> SinkStats {
+        self.stats
+    }
+
+    fn missing_ranges(&self) -> Vec<(usize, usize)> {
+        self.coverage.missing_ranges()
+    }
+}
+
+// ---- InMemorySink ----
+
+/// The pre-sink behavior as a sink: assemble a full [`CondensedMatrix`]
+/// in RAM. Bit-identical to `CondensedMatrix::from_stripes` over the
+/// same blocks; its `peak_resident_bytes` is the full `O(N²)` payload —
+/// exactly what the out-of-core sinks avoid.
+pub struct InMemorySink {
+    meta: SinkMeta,
+    coverage: Coverage,
+    matrix: Option<CondensedMatrix>,
+    stats: SinkStats,
+}
+
+impl InMemorySink {
+    /// Allocate the full condensed matrix for `meta`.
+    pub fn new(meta: SinkMeta) -> Result<Self> {
+        meta.validate()?;
+        let coverage = Coverage::new(total_stripes(meta.padded_n));
+        let matrix =
+            CondensedMatrix::zeros(meta.n_samples, meta.sample_ids.clone());
+        let stats = SinkStats {
+            peak_resident_bytes: meta.n_pairs() * 8,
+            ..Default::default()
+        };
+        Ok(Self { meta, coverage, matrix: Some(matrix), stats })
+    }
+
+    fn put_block_impl<R: Real>(&mut self, block: &StripeBlock<R>) -> Result<()> {
+        check_block_width(&self.meta, block)?;
+        let m = self
+            .matrix
+            .as_mut()
+            .ok_or_else(|| Error::invalid("matrix already taken from sink"))?;
+        let padded = self.meta.padded_n;
+        let n = self.meta.n_samples;
+        for s_local in 0..block.n_stripes() {
+            let s = block.start() + s_local;
+            if s >= self.coverage.len() {
+                continue;
+            }
+            self.coverage.mark(s)?;
+            // an even-width last stripe visits each of its pairs twice
+            // (bit-identical values); write both like `from_stripes`
+            // does, but count each pair once so the accounting matches
+            // the out-of-core sinks' dedup exactly
+            let doubled = 2 * (s + 1) == padded;
+            let num = block.num_row(s_local);
+            let den = block.den_row(s_local);
+            for k in 0..padded {
+                let j = (k + s + 1) % padded;
+                if k >= n || j >= n || k == j {
+                    continue;
+                }
+                m.set(k, j, self.meta.metric.finalize(num[k].to_f64(), den[k].to_f64()));
+                if !doubled || k < j {
+                    self.stats.pairs_written += 1;
+                }
+            }
+            self.stats.stripes_flushed += 1;
+        }
+        self.stats.blocks_flushed += 1;
+        self.stats.payload_bytes_written = self.stats.pairs_written * 8;
+        Ok(())
+    }
+}
+
+impl<R: Real> DistMatrixSink<R> for InMemorySink {
+    fn put_block(&mut self, block: &StripeBlock<R>) -> Result<()> {
+        self.put_block_impl(block)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.coverage.require_full()
+    }
+
+    fn stats(&self) -> SinkStats {
+        self.stats
+    }
+
+    fn missing_ranges(&self) -> Vec<(usize, usize)> {
+        self.coverage.missing_ranges()
+    }
+
+    fn take_matrix(&mut self) -> Option<CondensedMatrix> {
+        self.matrix.take()
+    }
+}
+
+// ---- StreamTsvSink ----
+
+/// Stream the standard square TSV without ever holding the matrix in
+/// RAM: stripe flushes spool into a `<out>.spool` UFDM file (via
+/// [`MmapCondensedSink`], so interrupted runs resume), and `finish`
+/// streams TSV rows out of the spool — byte-identical to
+/// `CondensedMatrix::write_tsv` of an in-memory run — then removes it.
+pub struct StreamTsvSink {
+    inner: MmapCondensedSink,
+    out_path: PathBuf,
+    spool_path: PathBuf,
+    finished: bool,
+}
+
+impl StreamTsvSink {
+    /// Create (or resume) the spool next to `path` and target the final
+    /// TSV at `path`.
+    pub fn create(path: impl AsRef<Path>, meta: SinkMeta) -> Result<Self> {
+        Self::build(path, meta, true)
+    }
+
+    /// As [`Self::create`] but always starting from a fresh spool —
+    /// for flush paths that recompute every stripe regardless of what
+    /// a leftover spool claims (the coordinator path).
+    pub fn create_fresh(path: impl AsRef<Path>, meta: SinkMeta) -> Result<Self> {
+        Self::build(path, meta, false)
+    }
+
+    fn build(path: impl AsRef<Path>, meta: SinkMeta, resume: bool) -> Result<Self> {
+        let out_path = path.as_ref().to_path_buf();
+        let mut os = out_path.as_os_str().to_os_string();
+        os.push(".spool");
+        let spool_path = PathBuf::from(os);
+        let inner = if resume {
+            MmapCondensedSink::create_or_resume(&spool_path, meta)?
+        } else {
+            MmapCondensedSink::create(&spool_path, meta)?
+        };
+        Ok(Self { inner, out_path, spool_path, finished: false })
+    }
+
+    fn finish_impl(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.inner.finish_impl()?;
+        let reader = super::view::CondensedFile::open(&self.spool_path)?;
+        reader.write_tsv(&self.out_path)?;
+        drop(reader);
+        let _ = std::fs::remove_file(&self.spool_path);
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl<R: Real> DistMatrixSink<R> for StreamTsvSink {
+    fn put_block(&mut self, block: &StripeBlock<R>) -> Result<()> {
+        self.inner.put_block_impl(block)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.finish_impl()
+    }
+
+    fn stats(&self) -> SinkStats {
+        self.inner.stats
+    }
+
+    fn missing_ranges(&self) -> Vec<(usize, usize)> {
+        self.inner.coverage.missing_ranges()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("unifrac_sink_tests").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A deterministic synthetic stripe problem: 7 real samples padded
+    /// to 8, accumulators chosen so d(i,j) = (i + 2j + 1) / 100.
+    fn meta(n: usize, padded: usize) -> SinkMeta {
+        SinkMeta {
+            n_samples: n,
+            padded_n: padded,
+            metric: Metric::WeightedNormalized,
+            fp_bytes: 8,
+            sample_ids: (0..n).map(|i| format!("s{i}")).collect(),
+        }
+    }
+
+    fn blocks(n: usize, padded: usize) -> Vec<StripeBlock<f64>> {
+        let s_total = total_stripes(padded);
+        (0..s_total)
+            .map(|s| {
+                let mut b = StripeBlock::<f64>::new(padded, s, 1);
+                let (num, den) = b.rows_mut(0);
+                for k in 0..padded {
+                    let j = (k + s + 1) % padded;
+                    if k == j {
+                        continue;
+                    }
+                    let (a, c) = (k.min(j), k.max(j));
+                    if a < n && c < n {
+                        num[k] = (a + 2 * c + 1) as f64;
+                        den[k] = 100.0;
+                    }
+                }
+                b
+            })
+            .collect()
+    }
+
+    fn reference(n: usize, padded: usize) -> CondensedMatrix {
+        CondensedMatrix::from_stripes(
+            n,
+            (0..n).map(|i| format!("s{i}")).collect(),
+            &blocks(n, padded),
+            |num, den| if den > 0.0 { num / den } else { 0.0 },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn in_memory_sink_matches_from_stripes() {
+        let (n, padded) = (7usize, 8usize);
+        let mut sink = InMemorySink::new(meta(n, padded)).unwrap();
+        for b in blocks(n, padded) {
+            DistMatrixSink::<f64>::put_block(&mut sink, &b).unwrap();
+        }
+        DistMatrixSink::<f64>::finish(&mut sink).unwrap();
+        let m = DistMatrixSink::<f64>::take_matrix(&mut sink).unwrap();
+        assert_eq!(m.max_abs_diff(&reference(n, padded)), 0.0);
+        let stats = DistMatrixSink::<f64>::stats(&sink);
+        assert_eq!(stats.stripes_flushed, total_stripes(padded));
+        // exactly-once accounting, matching the out-of-core sinks' dedup
+        assert_eq!(stats.pairs_written, (n * (n - 1) / 2) as u64);
+    }
+
+    #[test]
+    fn mmap_and_buffered_sinks_produce_identical_files() {
+        let (n, padded) = (7usize, 8usize);
+        let dir = tmpdir("backends");
+        let pm = dir.join("m.ufdm");
+        let pb = dir.join("b.ufdm");
+        let mut sm = MmapCondensedSink::create(&pm, meta(n, padded)).unwrap();
+        let mut sb = MmapCondensedSink::create_buffered(&pb, meta(n, padded)).unwrap();
+        for b in blocks(n, padded) {
+            sm.put_block_impl(&b).unwrap();
+            sb.put_block_impl(&b).unwrap();
+        }
+        sm.finish_impl().unwrap();
+        sb.finish_impl().unwrap();
+        drop((sm, sb));
+        assert_eq!(std::fs::read(&pm).unwrap(), std::fs::read(&pb).unwrap());
+        // and the file round-trips to the in-memory reference
+        let back = super::super::view::CondensedFile::open(&pm).unwrap();
+        assert_eq!(back.to_matrix().max_abs_diff(&reference(n, padded)), 0.0);
+        assert_eq!(back.ids(), reference(n, padded).ids());
+    }
+
+    #[test]
+    fn mmap_sink_resumes_after_kill() {
+        let (n, padded) = (7usize, 8usize);
+        let dir = tmpdir("resume");
+        let p = dir.join("resume.ufdm");
+        let all = blocks(n, padded);
+        let s_total = total_stripes(padded);
+        {
+            let mut sink = MmapCondensedSink::create_or_resume(&p, meta(n, padded)).unwrap();
+            sink.put_block_impl(&all[0]).unwrap();
+            // killed here: no finish(), sink dropped mid-run
+        }
+        let mut sink = MmapCondensedSink::create_or_resume(&p, meta(n, padded)).unwrap();
+        assert_eq!(sink.resumed_stripes(), 1);
+        let missing = sink.coverage.missing_ranges();
+        assert_eq!(missing, vec![(1, s_total - 1)]);
+        for b in &all[1..] {
+            sink.put_block_impl(b).unwrap();
+        }
+        sink.finish_impl().unwrap();
+        let stats = sink.stats;
+        assert_eq!(stats.stripes_flushed, s_total - 1);
+        drop(sink);
+        let back = super::super::view::CondensedFile::open(&p).unwrap();
+        assert_eq!(back.to_matrix().max_abs_diff(&reference(n, padded)), 0.0);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_meta() {
+        let (n, padded) = (7usize, 8usize);
+        let dir = tmpdir("mismatch");
+        let p = dir.join("m.ufdm");
+        MmapCondensedSink::create(&p, meta(n, padded)).unwrap();
+        let mut other = meta(n, padded);
+        other.metric = Metric::Unweighted;
+        assert!(matches!(
+            MmapCondensedSink::open_resume(&p, other),
+            Err(Error::Merge(MergeError::MetricMismatch { .. }))
+        ));
+        let mut other = meta(n, padded);
+        other.fp_bytes = 4;
+        assert!(matches!(
+            MmapCondensedSink::open_resume(&p, other),
+            Err(Error::Merge(MergeError::PrecisionMismatch { .. }))
+        ));
+    }
+
+    #[test]
+    fn sinks_reject_overlap_and_gaps() {
+        let (n, padded) = (7usize, 8usize);
+        let all = blocks(n, padded);
+        let mut sink = InMemorySink::new(meta(n, padded)).unwrap();
+        sink.put_block_impl(&all[0]).unwrap();
+        assert!(matches!(
+            sink.put_block_impl(&all[0]),
+            Err(Error::Merge(MergeError::Overlap { stripe: 0 }))
+        ));
+        let mut sink = InMemorySink::new(meta(n, padded)).unwrap();
+        sink.put_block_impl(&all[0]).unwrap();
+        assert!(matches!(
+            DistMatrixSink::<f64>::finish(&mut sink),
+            Err(Error::Merge(MergeError::Gap { stripe: 1 }))
+        ));
+        // width mismatch
+        let wide = StripeBlock::<f64>::new(16, 0, 1);
+        let mut sink = InMemorySink::new(meta(n, padded)).unwrap();
+        assert!(matches!(
+            sink.put_block_impl(&wide),
+            Err(Error::Merge(MergeError::WidthMismatch { expected: 8, got: 16 }))
+        ));
+    }
+
+    #[test]
+    fn stream_tsv_sink_is_byte_identical_to_in_memory_tsv() {
+        let (n, padded) = (7usize, 8usize);
+        let dir = tmpdir("tsv");
+        let want_path = dir.join("want.tsv");
+        reference(n, padded).write_tsv(&want_path).unwrap();
+        let got_path = dir.join("got.tsv");
+        let mut sink = StreamTsvSink::create(&got_path, meta(n, padded)).unwrap();
+        for b in blocks(n, padded) {
+            DistMatrixSink::<f64>::put_block(&mut sink, &b).unwrap();
+        }
+        DistMatrixSink::<f64>::finish(&mut sink).unwrap();
+        assert_eq!(
+            std::fs::read(&want_path).unwrap(),
+            std::fs::read(&got_path).unwrap(),
+            "streamed TSV must be byte-identical"
+        );
+        // the spool is gone
+        assert!(!dir.join("got.tsv.spool").exists());
+        // out-of-core: resident stays far below the payload
+        let stats = DistMatrixSink::<f64>::stats(&sink);
+        assert!(stats.peak_resident_bytes > 0);
+    }
+
+    #[test]
+    fn output_format_round_trips() {
+        for f in OutputFormat::ALL {
+            assert_eq!(OutputFormat::parse(f.name()), Some(f));
+            assert_eq!(f.to_string(), f.name());
+        }
+        assert_eq!(OutputFormat::parse("hdf5"), None);
+        assert!(OutputFormat::names_list().contains("mmap"));
+    }
+
+    #[test]
+    fn coverage_missing_ranges() {
+        let mut c = Coverage::new(10);
+        assert_eq!(c.missing_ranges(), vec![(0, 10)]);
+        for s in [0usize, 1, 4, 9] {
+            c.mark(s).unwrap();
+        }
+        assert_eq!(c.missing_ranges(), vec![(2, 2), (5, 4)]);
+        let bits = c.to_bits();
+        let c2 = Coverage::from_bits(&bits, 10);
+        assert_eq!(c2.missing_ranges(), c.missing_ranges());
+        assert!(c.require_full().is_err());
+    }
+}

@@ -19,11 +19,16 @@ pub struct StripeBlock<R: Real> {
     n_samples: usize,
     start: usize,
     n_stripes: usize,
+    /// Numerator accumulators, row-major `[n_stripes, n_samples]`.
     pub num: Vec<R>,
+    /// Denominator accumulators, row-major `[n_stripes, n_samples]`.
     pub den: Vec<R>,
 }
 
 impl<R: Real> StripeBlock<R> {
+    /// Zeroed accumulators for stripes `start .. start + n_stripes` of
+    /// an `n_samples`-wide chunk; the range must fit
+    /// [`total_stripes`]`(n_samples)`.
     pub fn new(n_samples: usize, start: usize, n_stripes: usize) -> Self {
         assert!(
             start + n_stripes <= total_stripes(n_samples),
@@ -59,14 +64,17 @@ impl<R: Real> StripeBlock<R> {
         }
     }
 
+    /// Chunk width the accumulators span.
     pub fn n_samples(&self) -> usize {
         self.n_samples
     }
 
+    /// First global stripe this block covers.
     pub fn start(&self) -> usize {
         self.start
     }
 
+    /// Stripes covered.
     pub fn n_stripes(&self) -> usize {
         self.n_stripes
     }
@@ -81,6 +89,7 @@ impl<R: Real> StripeBlock<R> {
         &self.num[s * self.n_samples..(s + 1) * self.n_samples]
     }
 
+    /// Denominator row of local stripe `s`.
     pub fn den_row(&self, s: usize) -> &[R] {
         &self.den[s * self.n_samples..(s + 1) * self.n_samples]
     }

@@ -1,0 +1,359 @@
+//! Read-side abstraction over condensed distance matrices.
+//!
+//! Downstream statistics (`stats::{pcoa, permanova, mantel}`) consume a
+//! [`CondensedView`] instead of a concrete [`CondensedMatrix`], so the
+//! same code runs over an in-RAM matrix *and* over a disk-backed `UFDM`
+//! file produced by the out-of-core sinks ([`CondensedFile`]) — the
+//! read half of the EMP-scale pipeline: a 50 GB matrix never loads, the
+//! stats stream it.
+
+use super::condensed::{condensed_index, CondensedMatrix};
+use super::sink::{read_ufdm_header, UFDM_MAGIC};
+use crate::error::{Error, Result};
+use crate::unifrac::Metric;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// A symmetric zero-diagonal distance matrix readable pair-by-pair,
+/// independent of where the entries live (RAM or a mapped file).
+///
+/// Contract: `get` is symmetric (`get(i, j) == get(j, i)`), the
+/// diagonal is 0, and [`Self::for_each_pair`] visits every unordered
+/// pair exactly once in condensed order `(0,1), (0,2), …, (n-2,n-1)` —
+/// sequentially, so out-of-core implementations stream rather than
+/// random-access.
+pub trait CondensedView {
+    /// Number of samples (the matrix is `n × n`).
+    fn n_samples(&self) -> usize;
+
+    /// Sample id ordering (may be empty; display code falls back to
+    /// `S{i}`).
+    fn ids(&self) -> &[String];
+
+    /// Distance between samples `i` and `j` (0 on the diagonal). Both
+    /// indices must be `< n_samples`.
+    fn get(&self, i: usize, j: usize) -> f64;
+
+    /// Visit every pair `(i, j)` with `i < j` in condensed order. The
+    /// default iterates via [`Self::get`]; backends with sequential
+    /// storage override it with a linear scan.
+    fn for_each_pair(&self, f: &mut dyn FnMut(usize, usize, f64)) {
+        let n = self.n_samples();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                f(i, j, self.get(i, j));
+            }
+        }
+    }
+
+    /// Materialize the condensed vector (pair order as above). Needs
+    /// `n*(n-1)/2` doubles of RAM — callers at EMP scale should prefer
+    /// [`Self::for_each_pair`].
+    fn to_condensed_vec(&self) -> Vec<f64> {
+        let n = self.n_samples();
+        let mut v = Vec::with_capacity(n * (n - 1) / 2);
+        self.for_each_pair(&mut |_, _, d| v.push(d));
+        v
+    }
+}
+
+/// The one square-TSV formatter (tab-led header row of ids, `{:.10}`
+/// cells, `S{i}` id fallback) — shared by `CondensedMatrix::write_tsv`
+/// and [`CondensedFile::write_tsv`] so the byte-identity contract
+/// between the in-memory and out-of-core outputs cannot drift.
+pub(crate) fn write_square_tsv<V: CondensedView + ?Sized>(
+    v: &V,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let n = v.n_samples();
+    let ids = v.ids();
+    let id = |i: usize| -> String { ids.get(i).cloned().unwrap_or_else(|| format!("S{i}")) };
+    for i in 0..n {
+        write!(w, "\t{}", id(i))?;
+    }
+    writeln!(w)?;
+    for i in 0..n {
+        write!(w, "{}", id(i))?;
+        for j in 0..n {
+            write!(w, "\t{:.10}", v.get(i, j))?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+impl CondensedView for CondensedMatrix {
+    fn n_samples(&self) -> usize {
+        CondensedMatrix::n_samples(self)
+    }
+
+    fn ids(&self) -> &[String] {
+        CondensedMatrix::ids(self)
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        CondensedMatrix::get(self, i, j)
+    }
+
+    fn for_each_pair(&self, f: &mut dyn FnMut(usize, usize, f64)) {
+        let n = CondensedMatrix::n_samples(self);
+        let data = self.condensed();
+        let mut idx = 0usize;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                f(i, j, data[idx]);
+                idx += 1;
+            }
+        }
+    }
+
+    fn to_condensed_vec(&self) -> Vec<f64> {
+        self.condensed().to_vec()
+    }
+}
+
+enum ReadStore {
+    /// Read-only shared mapping: the page cache pages the payload in
+    /// and out on demand.
+    #[cfg(unix)]
+    Mapped { _file: std::fs::File, region: super::sink::MmapRegion },
+    /// Whole file loaded (platforms without mapping support).
+    Loaded(Vec<u8>),
+}
+
+impl ReadStore {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            ReadStore::Mapped { region, .. } => region.bytes(),
+            ReadStore::Loaded(v) => v,
+        }
+    }
+}
+
+/// A finished `UFDM` condensed-matrix file (written by
+/// `matrix::sink::MmapCondensedSink` / the `--output-format bin|mmap`
+/// paths), opened read-only without loading the payload into RAM.
+pub struct CondensedFile {
+    n_samples: usize,
+    padded_n: usize,
+    fp_bytes: u8,
+    metric: Metric,
+    ids: Vec<String>,
+    payload_off: usize,
+    data: ReadStore,
+}
+
+impl CondensedFile {
+    /// Open and validate a finished `UFDM` file. Files whose coverage
+    /// bitmap is incomplete (a killed, unresumed run) are rejected with
+    /// a pointer at the resume path.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())?;
+        let h = read_ufdm_header(&f)?;
+        if !h.is_complete() {
+            return Err(Error::invalid(format!(
+                "condensed-matrix file {} is incomplete (killed run?) — resume it by \
+                 re-running with --output-format mmap and the same output path",
+                path.as_ref().display()
+            )));
+        }
+        let file_len = f.metadata()?.len() as usize;
+        let data = {
+            #[cfg(unix)]
+            {
+                let region = super::sink::MmapRegion::map(&f, file_len, false)?;
+                ReadStore::Mapped { _file: f, region }
+            }
+            #[cfg(not(unix))]
+            {
+                use std::io::{Read, Seek, SeekFrom};
+                let mut v = Vec::with_capacity(file_len);
+                let mut r = &f;
+                r.seek(SeekFrom::Start(0))?;
+                r.read_to_end(&mut v)?;
+                ReadStore::Loaded(v)
+            }
+        };
+        Ok(Self {
+            n_samples: h.n_samples,
+            padded_n: h.padded_n,
+            fp_bytes: h.fp_bytes,
+            metric: h.metric,
+            ids: h.ids,
+            payload_off: h.payload_off as usize,
+            data,
+        })
+    }
+
+    /// Number of samples.
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    /// Padded chunk width the producing run computed over.
+    pub fn padded_n(&self) -> usize {
+        self.padded_n
+    }
+
+    /// Compute-precision width of the producing run in bytes (4 = f32,
+    /// 8 = f64). The payload itself is always f64.
+    pub fn fp_bytes(&self) -> usize {
+        self.fp_bytes as usize
+    }
+
+    /// The metric the distances were computed under.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Sample ids recorded in the header (may be empty).
+    pub fn ids(&self) -> &[String] {
+        &self.ids
+    }
+
+    /// Condensed entry count (`n*(n-1)/2`).
+    pub fn n_pairs(&self) -> usize {
+        self.n_samples * (self.n_samples - 1) / 2
+    }
+
+    #[inline]
+    fn entry(&self, idx: usize) -> f64 {
+        let off = self.payload_off + idx * 8;
+        let b: [u8; 8] = self.data.bytes()[off..off + 8].try_into().expect("8 bytes");
+        f64::from_le_bytes(b)
+    }
+
+    /// Distance between samples `i` and `j` (0 on the diagonal).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        let (a, b) = (i.min(j), i.max(j));
+        assert!(b < self.n_samples, "sample index {b} out of range");
+        self.entry(condensed_index(self.n_samples, a, b))
+    }
+
+    /// Load the whole payload into an in-memory [`CondensedMatrix`]
+    /// (small-matrix convenience; defeats the out-of-core point at EMP
+    /// scale).
+    pub fn to_matrix(&self) -> CondensedMatrix {
+        let n = self.n_samples;
+        let mut m = CondensedMatrix::zeros(n, self.ids.clone());
+        let mut idx = 0usize;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set(i, j, self.entry(idx));
+                idx += 1;
+            }
+        }
+        m
+    }
+
+    /// Stream the standard square TSV to `path` — byte-identical to
+    /// [`CondensedMatrix::write_tsv`] of the same distances (literally
+    /// the same formatter, [`write_square_tsv`]), reading each row from
+    /// the mapped payload instead of RAM.
+    pub fn write_tsv(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_square_tsv(self, path)
+    }
+}
+
+impl CondensedView for CondensedFile {
+    fn n_samples(&self) -> usize {
+        CondensedFile::n_samples(self)
+    }
+
+    fn ids(&self) -> &[String] {
+        CondensedFile::ids(self)
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        CondensedFile::get(self, i, j)
+    }
+
+    fn for_each_pair(&self, f: &mut dyn FnMut(usize, usize, f64)) {
+        // the payload *is* condensed order: one sequential scan
+        let n = self.n_samples;
+        let mut idx = 0usize;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                f(i, j, self.entry(idx));
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Open `path` as a [`CondensedView`], sniffing the format: `UFDM`
+/// binaries map as [`CondensedFile`], anything else parses as the
+/// square TSV into an in-memory [`CondensedMatrix`]. This is how the
+/// CLI's `pcoa`/`permanova` accept both `--output` flavors.
+pub fn load_view(path: impl AsRef<Path>) -> Result<Box<dyn CondensedView>> {
+    let p = path.as_ref();
+    let mut magic = [0u8; 4];
+    let is_ufdm = {
+        use std::io::Read;
+        match std::fs::File::open(p) {
+            Ok(f) => {
+                let mut r = &f;
+                r.read_exact(&mut magic).is_ok() && &magic == UFDM_MAGIC
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    };
+    if is_ufdm {
+        Ok(Box::new(CondensedFile::open(p)?))
+    } else {
+        Ok(Box::new(CondensedMatrix::read_tsv(p)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matrix(n: usize) -> CondensedMatrix {
+        let mut m =
+            CondensedMatrix::zeros(n, (0..n).map(|i| format!("s{i}")).collect());
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set(i, j, (i * n + j) as f64 / 10.0);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn matrix_view_streams_condensed_order() {
+        let m = sample_matrix(5);
+        let mut pairs = Vec::new();
+        CondensedView::for_each_pair(&m, &mut |i, j, d| pairs.push((i, j, d)));
+        assert_eq!(pairs.len(), 10);
+        assert_eq!(pairs[0].0, 0);
+        assert_eq!(pairs[0].1, 1);
+        assert_eq!(pairs[9], (3, 4, m.get(3, 4)));
+        assert_eq!(m.to_condensed_vec(), m.condensed());
+    }
+
+    #[test]
+    fn load_view_sniffs_tsv() {
+        let dir = std::env::temp_dir().join("unifrac_view_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.tsv");
+        let m = sample_matrix(4);
+        m.write_tsv(&p).unwrap();
+        let v = load_view(&p).unwrap();
+        assert_eq!(v.n_samples(), 4);
+        assert_eq!(v.get(1, 3), m.get(1, 3));
+        assert_eq!(v.get(3, 1), m.get(1, 3), "view get must be symmetric");
+        assert_eq!(v.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn load_view_rejects_missing_file() {
+        assert!(load_view("/nonexistent/unifrac/dm.bin").is_err());
+    }
+}

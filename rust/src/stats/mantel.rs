@@ -4,11 +4,15 @@
 //! The paper validates fp32 against fp64 with "Mantel R² 0.99999;
 //! p < 0.001, comparing pairwise distances in the two matrices" — this
 //! module reproduces exactly that statistic (examples/fp32_validation.rs
-//! and benches/table3.rs).
+//! and benches/table3.rs). Inputs are [`CondensedView`]s, so one side
+//! (or both) may be a disk-backed matrix; note that Mantel needs both
+//! condensed vectors materialized (`n*(n-1)/2` doubles each) — at EMP
+//! scale prefer the streaming `permanova`.
 
-use crate::matrix::CondensedMatrix;
+use crate::matrix::{condensed_index, CondensedView};
 use crate::util::{pearson, Xoshiro256};
 
+/// Result of a [`mantel`] test.
 #[derive(Clone, Debug)]
 pub struct MantelResult {
     /// Pearson r between the condensed distance vectors.
@@ -18,6 +22,7 @@ pub struct MantelResult {
     /// Permutation p-value: P(|r_perm| >= |r_obs|), with the +1
     /// pseudo-count convention.
     pub p_value: f64,
+    /// Label permutations evaluated.
     pub permutations: usize,
 }
 
@@ -26,30 +31,36 @@ pub struct MantelResult {
 /// Permutation scheme: sample labels of `b` are permuted, which permutes
 /// the rows+columns of its square form jointly — the standard Mantel
 /// null of "no association between the two distance structures".
-pub fn mantel(
-    a: &CondensedMatrix,
-    b: &CondensedMatrix,
+pub fn mantel<A: CondensedView + ?Sized, B: CondensedView + ?Sized>(
+    a: &A,
+    b: &B,
     permutations: usize,
     seed: u64,
 ) -> MantelResult {
     assert_eq!(a.n_samples(), b.n_samples(), "matrix size mismatch");
     let n = a.n_samples();
-    let r_obs = pearson(a.condensed(), b.condensed());
+    // one sequential read of each view; permutations then index the
+    // in-RAM vectors instead of random-accessing the (possibly
+    // disk-backed) views
+    let av = a.to_condensed_vec();
+    let bv = b.to_condensed_vec();
+    let r_obs = pearson(&av, &bv);
 
     let mut rng = Xoshiro256::new(seed);
     let mut perm: Vec<usize> = (0..n).collect();
     let mut hits = 0usize;
-    let av = a.condensed();
     let mut bv_perm = Vec::with_capacity(av.len());
     for _ in 0..permutations {
         rng.shuffle(&mut perm);
         bv_perm.clear();
         for i in 0..n {
             for j in (i + 1)..n {
-                bv_perm.push(b.get(perm[i], perm[j]));
+                let (pi, pj) = (perm[i], perm[j]);
+                let (x, y) = (pi.min(pj), pi.max(pj));
+                bv_perm.push(bv[condensed_index(n, x, y)]);
             }
         }
-        let r = pearson(av, &bv_perm);
+        let r = pearson(&av, &bv_perm);
         if r.abs() >= r_obs.abs() - 1e-15 {
             hits += 1;
         }
@@ -61,6 +72,7 @@ pub fn mantel(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::CondensedMatrix;
 
     fn random_dm(n: usize, seed: u64) -> CondensedMatrix {
         let mut rng = Xoshiro256::new(seed);

@@ -1,5 +1,11 @@
 //! Statistics for distance matrices: Mantel test (the paper's §4
 //! fp32-vs-fp64 validation statistic), PERMANOVA, and PCoA.
+//!
+//! Every test consumes a `matrix::CondensedView`, so the same code runs
+//! over an in-RAM `CondensedMatrix` and over a disk-backed
+//! `matrix::CondensedFile` written by the out-of-core sinks — PERMANOVA
+//! additionally batches its permutations so a file-backed matrix is
+//! streamed once per block of shuffles, never random-accessed.
 
 mod mantel;
 mod pcoa;

@@ -5,9 +5,10 @@
 //! matrices in practice (EMP analyses), so the fp32-validation example
 //! also compares leading PCoA coordinates between precisions.
 
-use crate::matrix::CondensedMatrix;
+use crate::matrix::CondensedView;
 use crate::util::Xoshiro256;
 
+/// Result of a [`pcoa`] ordination.
 #[derive(Clone, Debug)]
 pub struct PcoaResult {
     /// Eigenvalues of the centered Gower matrix, descending.
@@ -20,17 +21,22 @@ pub struct PcoaResult {
 
 /// Classical PCoA: double-center `-0.5 * D²`, extract the top `k`
 /// eigenpairs by power iteration with deflation.
-pub fn pcoa(dm: &CondensedMatrix, k: usize, seed: u64) -> PcoaResult {
+///
+/// Accepts any [`CondensedView`] (the matrix is read once, in one
+/// sequential pass), but note the Gower matrix itself is dense `n × n`
+/// f64 in RAM — at EMP scale run PCoA on a subsample, not the full
+/// matrix.
+pub fn pcoa<V: CondensedView + ?Sized>(dm: &V, k: usize, seed: u64) -> PcoaResult {
     let n = dm.n_samples();
     let k = k.min(n.saturating_sub(1));
-    // Gower-centered matrix B = -0.5 * J D² J with J = I - 11ᵀ/n
+    // Gower-centered matrix B = -0.5 * J D² J with J = I - 11ᵀ/n,
+    // filled from one streaming pass over the pair stream
     let mut b = vec![0.0f64; n * n];
-    for i in 0..n {
-        for j in 0..n {
-            let d = dm.get(i, j);
-            b[i * n + j] = -0.5 * d * d;
-        }
-    }
+    dm.for_each_pair(&mut |i, j, d| {
+        let v = -0.5 * d * d;
+        b[i * n + j] = v;
+        b[j * n + i] = v;
+    });
     center(&mut b, n);
 
     let mut rng = Xoshiro256::new(seed);

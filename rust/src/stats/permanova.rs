@@ -1,22 +1,38 @@
 //! PERMANOVA (Anderson 2001): pseudo-F for a grouping over a distance
 //! matrix, permutation p-value. The standard downstream test applied to
 //! UniFrac matrices (completes the "analysis" story of the paper's
-//! microbiome pipeline).
+//! microbiome pipeline), and — following the PERMANOVA-at-scale
+//! follow-on work — the first consumer of the out-of-core
+//! [`CondensedView`] path: permutations are evaluated in blocks, each
+//! block costing ONE streaming pass over the matrix, so a disk-backed
+//! EMP-scale matrix is read `⌈permutations / block⌉` times instead of
+//! once per permutation.
 
-use crate::matrix::CondensedMatrix;
+use crate::matrix::CondensedView;
 use crate::util::Xoshiro256;
 
+/// Permutations evaluated per streaming pass over the matrix.
+const PERM_BATCH: usize = 32;
+
+/// Result of a [`permanova`] test.
 #[derive(Clone, Debug)]
 pub struct PermanovaResult {
+    /// Observed pseudo-F statistic.
     pub pseudo_f: f64,
+    /// Permutation p-value (with the +1 pseudo-count convention).
     pub p_value: f64,
+    /// Label permutations evaluated.
     pub permutations: usize,
+    /// Distinct groups in the design.
     pub n_groups: usize,
 }
 
-/// `groups[i]` is the group id of sample `i` (0-based, dense).
-pub fn permanova(
-    dm: &CondensedMatrix,
+/// Run PERMANOVA over any [`CondensedView`] (in-memory matrix or
+/// mmap-backed file). `groups[i]` is the group id of sample `i`
+/// (0-based, dense). Permutations are batched: each block of up to 32
+/// label shuffles folds over one sequential pass of the pair stream.
+pub fn permanova<V: CondensedView + ?Sized>(
+    dm: &V,
     groups: &[usize],
     permutations: usize,
     seed: u64,
@@ -25,19 +41,50 @@ pub fn permanova(
     assert_eq!(groups.len(), n, "group label count mismatch");
     let n_groups = groups.iter().max().map(|&g| g + 1).unwrap_or(0);
     assert!(n_groups >= 2, "need >= 2 groups");
+    // group sizes are permutation-invariant (labels move, counts don't)
+    let mut sizes = vec![0usize; n_groups];
+    for &g in groups {
+        sizes[g] += 1;
+    }
 
-    let f_obs = pseudo_f(dm, groups, n_groups);
     let mut rng = Xoshiro256::new(seed);
     let mut labels = groups.to_vec();
     let mut hits = 0usize;
-    for _ in 0..permutations {
-        rng.shuffle(&mut labels);
-        if pseudo_f(dm, &labels, n_groups) >= f_obs - 1e-15 {
-            hits += 1;
+    let mut done = 0usize;
+    // the observed labeling rides along as entry 0 of the FIRST block,
+    // so a disk-backed matrix is scanned ceil((1+permutations)/32)
+    // times — no dedicated f_obs pass. The RNG still shuffles
+    // cumulatively in permutation order, so the batched evaluation
+    // visits exactly the label sequences a one-at-a-time loop would.
+    let mut f_obs: Option<f64> = None;
+    while done < permutations || f_obs.is_none() {
+        let room = PERM_BATCH - usize::from(f_obs.is_none());
+        let b = room.min(permutations - done);
+        let mut block: Vec<Vec<usize>> = Vec::with_capacity(b + 1);
+        if f_obs.is_none() {
+            block.push(groups.to_vec());
         }
+        for _ in 0..b {
+            rng.shuffle(&mut labels);
+            block.push(labels.clone());
+        }
+        let fs = pseudo_f_block(dm, &block, n_groups, &sizes);
+        let start = if f_obs.is_none() {
+            f_obs = Some(fs[0]);
+            1
+        } else {
+            0
+        };
+        let f0 = f_obs.expect("set above");
+        for &f in &fs[start..] {
+            if f >= f0 - 1e-15 {
+                hits += 1;
+            }
+        }
+        done += b;
     }
     PermanovaResult {
-        pseudo_f: f_obs,
+        pseudo_f: f_obs.expect("at least one block evaluated"),
         p_value: (hits + 1) as f64 / (permutations + 1) as f64,
         permutations,
         n_groups,
@@ -45,44 +92,52 @@ pub fn permanova(
 }
 
 /// pseudo-F = (SS_among / (a-1)) / (SS_within / (N-a)), computed from
-/// pairwise distances only (Anderson's distance-based decomposition).
-fn pseudo_f(dm: &CondensedMatrix, groups: &[usize], n_groups: usize) -> f64 {
+/// pairwise distances only (Anderson's distance-based decomposition) —
+/// for a whole block of labelings in one sequential pass over the pair
+/// stream (the out-of-core tile-friendly access pattern).
+fn pseudo_f_block<V: CondensedView + ?Sized>(
+    dm: &V,
+    labelings: &[Vec<usize>],
+    n_groups: usize,
+    sizes: &[usize],
+) -> Vec<f64> {
     let n = dm.n_samples();
-    // SS_total = (1/N) Σ_{i<j} d²ij ; SS_within = Σ_groups (1/n_g) Σ_{i<j in g} d²ij
-    let mut ss_total = 0.0;
-    let mut ss_within_per: Vec<f64> = vec![0.0; n_groups];
-    let mut sizes = vec![0usize; n_groups];
-    for &g in groups {
-        sizes[g] += 1;
-    }
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let d2 = dm.get(i, j).powi(2);
-            ss_total += d2;
-            if groups[i] == groups[j] {
-                ss_within_per[groups[i]] += d2;
+    // SS_total = (1/N) Σ_{i<j} d²ij ; SS_within = Σ_g (1/n_g) Σ_{i<j in g} d²ij
+    let mut ss_total = 0.0f64;
+    let mut ssw = vec![vec![0.0f64; n_groups]; labelings.len()];
+    dm.for_each_pair(&mut |i, j, d| {
+        let d2 = d * d;
+        ss_total += d2;
+        for (p, lab) in labelings.iter().enumerate() {
+            if lab[i] == lab[j] {
+                ssw[p][lab[i]] += d2;
             }
         }
-    }
+    });
     ss_total /= n as f64;
-    let ss_within: f64 = ss_within_per
-        .iter()
-        .zip(&sizes)
-        .filter(|(_, &s)| s > 0)
-        .map(|(ss, &s)| ss / s as f64)
-        .sum();
-    let ss_among = (ss_total - ss_within).max(0.0);
     let df_among = (n_groups - 1) as f64;
     let df_within = (n - n_groups) as f64;
-    if ss_within <= 1e-300 || df_within <= 0.0 {
-        return f64::INFINITY;
-    }
-    (ss_among / df_among) / (ss_within / df_within)
+    ssw.iter()
+        .map(|per_group| {
+            let ss_within: f64 = per_group
+                .iter()
+                .zip(sizes)
+                .filter(|(_, &s)| s > 0)
+                .map(|(ss, &s)| ss / s as f64)
+                .sum();
+            let ss_among = (ss_total - ss_within).max(0.0);
+            if ss_within <= 1e-300 || df_within <= 0.0 {
+                return f64::INFINITY;
+            }
+            (ss_among / df_among) / (ss_within / df_within)
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::CondensedMatrix;
 
     /// Two tight clusters far apart -> huge F, significant p.
     #[test]
@@ -115,6 +170,45 @@ mod tests {
         let groups: Vec<usize> = (0..n).map(|i| i % 2).collect();
         let res = permanova(&dm, &groups, 199, 3);
         assert!(res.p_value > 0.01, "p = {}", res.p_value);
+    }
+
+    /// Batching must not change results: an awkward permutation count
+    /// (crossing several partial blocks) still matches a reference
+    /// one-at-a-time evaluation over the same RNG stream.
+    #[test]
+    fn batched_permutations_match_sequential_reference() {
+        let n = 14;
+        let mut rng = Xoshiro256::new(9);
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                dm.set(i, j, 0.2 + rng.f64());
+            }
+        }
+        let groups: Vec<usize> = (0..n).map(|i| i % 3).collect();
+        let n_groups = 3;
+        let mut sizes = vec![0usize; n_groups];
+        for &g in &groups {
+            sizes[g] += 1;
+        }
+        for permutations in [1usize, 31, 32, 33, 77] {
+            // reference: one pseudo-F per shuffle, same RNG order
+            let f_obs = pseudo_f_block(&dm, &[groups.clone()], n_groups, &sizes)[0];
+            let mut r = Xoshiro256::new(5);
+            let mut labels = groups.clone();
+            let mut hits = 0usize;
+            for _ in 0..permutations {
+                r.shuffle(&mut labels);
+                let f = pseudo_f_block(&dm, &[labels.clone()], n_groups, &sizes)[0];
+                if f >= f_obs - 1e-15 {
+                    hits += 1;
+                }
+            }
+            let want = (hits + 1) as f64 / (permutations + 1) as f64;
+            let got = permanova(&dm, &groups, permutations, 5);
+            assert_eq!(got.p_value, want, "permutations={permutations}");
+            assert_eq!(got.pseudo_f, f_obs);
+        }
     }
 
     #[test]

@@ -31,10 +31,15 @@ pub type ComputeOptions = crate::api::JobSpec;
 pub struct ComputeReport {
     /// Name of the engine that actually ran (after auto-selection).
     pub engine: String,
+    /// Real sample count.
     pub n_samples: usize,
+    /// Padded sample-chunk width the stripes were computed over.
     pub padded_n: usize,
+    /// Stripes covering the padded chunk (`padded_n / 2`).
     pub n_stripes: usize,
+    /// Embeddings (non-root tree nodes) streamed.
     pub embeddings: usize,
+    /// Embedding batches processed.
     pub batches: usize,
     /// Batch buffers newly allocated by the pool (steady-state streaming
     /// keeps this at the in-flight window, independent of batch count).
@@ -58,9 +63,13 @@ pub struct ComputeReport {
     /// Mean row density measured by the embedding producer over the
     /// real sample columns (all runs; the auto-selection domain).
     pub embed_density: f64,
+    /// End-to-end wall time, seconds.
     pub seconds_total: f64,
+    /// Producer (embedding generation) time, seconds.
     pub seconds_embed: f64,
+    /// Stripe-update phase wall time, seconds.
     pub seconds_stripes: f64,
+    /// Condensed-matrix assembly time, seconds.
     pub seconds_assemble: f64,
 }
 

@@ -56,6 +56,8 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
+    /// Fold another engine's counters into this one (per-worker stats
+    /// aggregate up through `ExecReport`).
     pub fn absorb(&mut self, other: EngineStats) {
         self.packed_words += other.packed_words;
         self.lut_builds += other.lut_builds;
@@ -78,6 +80,7 @@ impl EngineStats {
 
 /// A stripe-update engine: folds one embedding batch into a stripe block.
 pub trait StripeEngine<R: Real>: Send + Sync {
+    /// Which engine this is (drives reporting and scheduling decisions).
     fn kind(&self) -> EngineKind;
     /// Accumulate `batch` into `block` under `metric`.
     fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>);
@@ -91,6 +94,7 @@ pub trait StripeEngine<R: Real>: Send + Sync {
     fn apply_prepared(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
         self.apply(metric, batch, block);
     }
+    /// Canonical engine name (reports, CLI).
     fn name(&self) -> &'static str {
         self.kind().name()
     }
@@ -101,14 +105,27 @@ pub trait StripeEngine<R: Real>: Send + Sync {
     }
 }
 
-/// Engine selector (CLI / config / benches).
+/// Engine selector (CLI / config / benches). See the module-level table
+/// for what each stage optimizes; `supports` gates the two
+/// metric-restricted kernels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
+    /// Paper Table 1 "Original": per-embedding update, manual 4-way
+    /// unroll, per-stripe row pointers.
     Original,
+    /// Paper Figure 1 / OpenACC base: unified buffer, fused plain loop.
     Unified,
+    /// Paper Figure 2: all embeddings folded in registers before one
+    /// write per (stripe, sample).
     Batched,
+    /// Paper Figure 3 / "Final": sample-axis blocked (`block_k`) for
+    /// cache locality + SIMD. The scalar default.
     Tiled,
+    /// Bit-packed unweighted kernel (64 presence bits per word, XOR/OR
+    /// + byte-LUT branch folding). Unweighted-only.
     Packed,
+    /// Sparse CSR weighted kernel (single-sided fold + two-pointer
+    /// intersection corrections). Weighted-only.
     Sparse,
 }
 
@@ -126,6 +143,7 @@ impl EngineKind {
         Self::Sparse,
     ];
 
+    /// Canonical engine name (CLI `--engine` values, report labels).
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Original => "original",
@@ -454,6 +472,7 @@ impl BatchedEngine {
 /// perform no per-`apply` allocation — the same discipline as the PR-1
 /// batch pool.
 pub struct TiledEngine<R: Real> {
+    /// Sample-axis tile width (the paper's `step_size`).
     pub block_k: usize,
     scratch: Mutex<TileScratch<R>>,
 }
@@ -469,6 +488,7 @@ impl<R: Real> TiledEngine<R> {
     /// falls back to the historical default of 8.
     pub const DEFAULT_BLOCK_K: usize = 8;
 
+    /// Build a tiled engine with the given tile width (0 = auto).
     pub fn new(block_k: usize) -> Self {
         Self {
             block_k: if block_k == 0 { Self::DEFAULT_BLOCK_K } else { block_k },

@@ -50,6 +50,7 @@ impl Metric {
         }
     }
 
+    /// Generalized-UniFrac exponent (1.0 for the fixed metrics).
     pub fn alpha(&self) -> f64 {
         match self {
             Metric::Generalized(a) => *a,
@@ -110,16 +111,23 @@ impl Metric {
 /// once per element lets LLVM vectorize the inner loops (EXPERIMENTS.md
 /// §Perf, L3 iteration 1).
 pub trait MetricOps<R: Real>: Copy {
+    /// Per-branch `(f_num, f_den)` terms for one `(u, v)` pair.
     fn terms(self, u: R, v: R) -> (R, R);
 }
 
+/// [`MetricOps`] for [`Metric::Unweighted`].
 #[derive(Clone, Copy)]
 pub struct UnweightedOps;
+/// [`MetricOps`] for [`Metric::WeightedNormalized`].
 #[derive(Clone, Copy)]
 pub struct WeightedNormalizedOps;
+/// [`MetricOps`] for [`Metric::WeightedUnnormalized`].
 #[derive(Clone, Copy)]
 pub struct WeightedUnnormalizedOps;
+/// [`MetricOps`] for [`Metric::Generalized`], carrying the alpha
+/// exponent pre-cast to `R`.
 #[derive(Clone, Copy)]
+#[allow(missing_docs)]
 pub struct GeneralizedOps<R>(pub R);
 
 impl<R: Real> MetricOps<R> for UnweightedOps {

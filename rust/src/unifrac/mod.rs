@@ -3,11 +3,16 @@
 //! kernel and the sparse CSR weighted kernel), the naive oracle, and
 //! the high-level driver.
 
+// bitpack/naive/sparse predate the ISSUE-5 missing_docs gate (see
+// lib.rs ledger); engines/metric/compute are fully documented.
+#[allow(missing_docs)]
 pub mod bitpack;
 pub mod compute;
 pub mod engines;
 pub mod metric;
+#[allow(missing_docs)]
 pub mod naive;
+#[allow(missing_docs)]
 pub mod sparse;
 
 pub use bitpack::{PackedBatch, PackedEngine};

@@ -1,0 +1,286 @@
+//! ISSUE 5 property suite: every output sink is bit-identical to the
+//! in-memory path, across engines × metrics × precisions, including
+//! multi-partition merges into a sink and kill-and-resume round trips —
+//! and the out-of-core sweep keeps the sink's resident set bounded by
+//! scratch (flush accounting), never by the full matrix.
+
+use std::path::PathBuf;
+use unifrac::matrix::{
+    total_stripes, CondensedFile, DistMatrixSink, MmapCondensedSink, OutputFormat, SinkMeta,
+};
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::api::PartialData;
+use unifrac::unifrac::EngineKind;
+use unifrac::{FpWidth, Metric, UniFracJob};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("unifrac_sink_equivalence").join(name);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn problem() -> (Phylogeny, FeatureTable) {
+    SynthSpec { n_samples: 18, n_features: 96, density: 0.1, ..Default::default() }.generate()
+}
+
+/// The tentpole equality: for every engine × supported metric × fp
+/// width, the three sinks produce the same bytes as the in-memory run.
+#[test]
+fn all_sinks_bit_identical_to_in_memory_across_engines() {
+    let (tree, table) = problem();
+    let dir = tmpdir("matrixwide");
+    for metric in Metric::all(0.5) {
+        for engine in EngineKind::all() {
+            if !engine.supports(metric) {
+                continue;
+            }
+            for fp in [FpWidth::F64, FpWidth::F32] {
+                let tag = format!("{}_{}_{}", metric.name(), engine.name(), fp.name());
+                let job = |fmt: OutputFormat| {
+                    UniFracJob::new(&tree, &table)
+                        .metric(metric)
+                        .engine(engine)
+                        .precision(fp)
+                        .output_format(fmt)
+                };
+                let dm = job(OutputFormat::Tsv).run().unwrap();
+                let want = dir.join(format!("{tag}.want.tsv"));
+                dm.write_tsv(&want).unwrap();
+                let want_bytes = std::fs::read(&want).unwrap();
+                for fmt in OutputFormat::ALL {
+                    let out = dir.join(format!("{tag}.{fmt}"));
+                    let rep = job(fmt).run_to_path(&out).unwrap();
+                    assert_eq!(rep.stripes_computed, rep.stripes_total, "{tag} {fmt}");
+                    let got_bytes = match fmt {
+                        OutputFormat::Tsv => std::fs::read(&out).unwrap(),
+                        OutputFormat::Bin | OutputFormat::Mmap => {
+                            let f = CondensedFile::open(&out).unwrap();
+                            assert_eq!(f.to_matrix().max_abs_diff(&dm), 0.0, "{tag} {fmt}");
+                            assert_eq!(f.fp_bytes(), fp.bytes(), "{tag} {fmt}");
+                            let back = dir.join(format!("{tag}.{fmt}.tsv"));
+                            f.write_tsv(&back).unwrap();
+                            std::fs::read(&back).unwrap()
+                        }
+                    };
+                    assert_eq!(got_bytes, want_bytes, "{tag} {fmt} not byte-identical");
+                }
+            }
+        }
+    }
+}
+
+/// `bin` and `mmap` are two write backends over the same format: their
+/// files must be byte-identical to each other, too.
+#[test]
+fn bin_and_mmap_files_are_byte_identical() {
+    let (tree, table) = problem();
+    let dir = tmpdir("backends");
+    let pb = dir.join("dm.bin");
+    let pm = dir.join("dm.mmap");
+    UniFracJob::new(&tree, &table)
+        .output_format(OutputFormat::Bin)
+        .run_to_path(&pb)
+        .unwrap();
+    UniFracJob::new(&tree, &table)
+        .output_format(OutputFormat::Mmap)
+        .run_to_path(&pm)
+        .unwrap();
+    assert_eq!(std::fs::read(&pb).unwrap(), std::fs::read(&pm).unwrap());
+}
+
+/// Multi-partition merge through a sink: stripe partials computed
+/// independently (the distributed lifecycle) flush into one mmap sink
+/// and reproduce the one-shot matrix exactly.
+#[test]
+fn partials_flush_into_mmap_sink_bit_identically() {
+    let (tree, table) = problem();
+    let dir = tmpdir("partials");
+    let job = UniFracJob::new(&tree, &table);
+    let want = dir.join("want.tsv");
+    job.run().unwrap().write_tsv(&want).unwrap();
+
+    let parts: Vec<_> =
+        (0..3).map(|i| job.run_partial_index(i, 3).unwrap()).collect();
+    let meta = parts[0].meta();
+    let sink_meta = SinkMeta {
+        n_samples: meta.n_samples,
+        padded_n: meta.padded_n,
+        metric: meta.metric,
+        fp_bytes: meta.fp.bytes(),
+        sample_ids: meta.sample_ids.clone(),
+    };
+    let path = dir.join("merged.ufdm");
+    let mut sink = MmapCondensedSink::create(&path, sink_meta).unwrap();
+    for p in &parts {
+        match p.data() {
+            PartialData::F64(b) => DistMatrixSink::<f64>::put_block(&mut sink, b).unwrap(),
+            PartialData::F32(_) => panic!("default precision is f64"),
+        }
+    }
+    DistMatrixSink::<f64>::finish(&mut sink).unwrap();
+    drop(sink);
+    let back = dir.join("merged.tsv");
+    CondensedFile::open(&path).unwrap().write_tsv(&back).unwrap();
+    assert_eq!(std::fs::read(&want).unwrap(), std::fs::read(&back).unwrap());
+}
+
+/// Kill-and-resume round trip at the job level: a run killed after one
+/// partial's flush is resumed by simply re-running `run_to_path` at the
+/// same path — only the missing stripes are recomputed, and the final
+/// bytes match an uninterrupted run.
+#[test]
+fn killed_run_resumes_and_matches() {
+    let (tree, table) = problem();
+    let dir = tmpdir("resume");
+    let job = UniFracJob::new(&tree, &table).output_format(OutputFormat::Mmap);
+    let want = dir.join("want.tsv");
+    job.run().unwrap().write_tsv(&want).unwrap();
+
+    // simulate the kill: flush only the first of three partials, then
+    // drop the sink without finish()
+    let p0 = job.run_partial_index(0, 3).unwrap();
+    let meta = p0.meta();
+    let first = meta.stripe_count;
+    let total = total_stripes(meta.padded_n);
+    let path = dir.join("dm.ufdm");
+    {
+        let sink_meta = SinkMeta {
+            n_samples: meta.n_samples,
+            padded_n: meta.padded_n,
+            metric: meta.metric,
+            fp_bytes: meta.fp.bytes(),
+            sample_ids: meta.sample_ids.clone(),
+        };
+        let mut sink = MmapCondensedSink::create(&path, sink_meta).unwrap();
+        match p0.data() {
+            PartialData::F64(b) => DistMatrixSink::<f64>::put_block(&mut sink, b).unwrap(),
+            PartialData::F32(_) => panic!("default precision is f64"),
+        }
+    }
+
+    let rep = job.run_to_path(&path).unwrap();
+    assert_eq!(rep.stripes_resumed, first, "prior flush must be skipped");
+    assert_eq!(rep.stripes_computed, total - first);
+    let back = dir.join("resumed.tsv");
+    CondensedFile::open(&path).unwrap().write_tsv(&back).unwrap();
+    assert_eq!(std::fs::read(&want).unwrap(), std::fs::read(&back).unwrap());
+
+    // a second run over the complete file computes nothing
+    let rep = job.run_to_path(&path).unwrap();
+    assert_eq!(rep.stripes_resumed, total);
+    assert_eq!(rep.stripes_computed, 0);
+}
+
+/// The ISSUE-5 acceptance criterion: an out-of-core `mmap` run produces
+/// bytes identical to the in-memory TSV path while the sink's resident
+/// high-water mark stays at per-stripe scratch — orders of magnitude
+/// below the full condensed payload — proven by flush accounting, not
+/// by allocating the matrix.
+#[test]
+fn budget_sweep_bounds_resident_set_and_matches_in_memory() {
+    let (tree, table) =
+        SynthSpec { n_samples: 400, n_features: 600, density: 0.02, ..Default::default() }
+            .generate();
+    let dir = tmpdir("budget");
+    let job = UniFracJob::new(&tree, &table).metric(Metric::Unweighted);
+    let want = dir.join("want.tsv");
+    job.run().unwrap().write_tsv(&want).unwrap();
+
+    let out = dir.join("dm.ufdm");
+    let rep = UniFracJob::new(&tree, &table)
+        .metric(Metric::Unweighted)
+        .output_format(OutputFormat::Mmap)
+        .pool_depth(2)
+        .batch_capacity(8)
+        .max_resident_mb(1)
+        .run_to_path(&out)
+        .unwrap();
+    assert!(rep.passes >= 2, "1 MiB budget must force a multi-pass sweep, got {rep:?}");
+    assert_eq!(rep.stripes_computed, rep.stripes_total);
+
+    let n = table.n_samples() as u64;
+    let payload_bytes = n * (n - 1) / 2 * 8;
+    assert_eq!(rep.stats.payload_bytes_written, payload_bytes, "every pair written once");
+    // bounded by scratch: one stripe's entry list + coverage map, not O(N²)
+    assert!(
+        rep.stats.peak_resident_bytes < 64 * 1024,
+        "sink resident {} must stay at per-stripe scratch",
+        rep.stats.peak_resident_bytes
+    );
+    assert!(
+        rep.stats.peak_resident_bytes * 4 < payload_bytes,
+        "sink resident {} must stay far below the {} payload",
+        rep.stats.peak_resident_bytes,
+        payload_bytes
+    );
+
+    let back = dir.join("back.tsv");
+    CondensedFile::open(&out).unwrap().write_tsv(&back).unwrap();
+    assert_eq!(
+        std::fs::read(&want).unwrap(),
+        std::fs::read(&back).unwrap(),
+        "out-of-core sweep must be byte-identical to the in-memory TSV"
+    );
+}
+
+/// The coordinator path flushes per chip into the sink.
+#[test]
+fn multi_chip_run_streams_to_sink() {
+    let (tree, table) = problem();
+    let dir = tmpdir("chips");
+    let want = dir.join("want.tsv");
+    UniFracJob::new(&tree, &table).run().unwrap().write_tsv(&want).unwrap();
+    let out = dir.join("dm.bin");
+    let rep = UniFracJob::new(&tree, &table)
+        .chips(3)
+        .output_format(OutputFormat::Bin)
+        .run_to_path(&out)
+        .unwrap();
+    assert_eq!(rep.stripes_computed, rep.stripes_total);
+    let back = dir.join("back.tsv");
+    CondensedFile::open(&out).unwrap().write_tsv(&back).unwrap();
+    assert_eq!(std::fs::read(&want).unwrap(), std::fs::read(&back).unwrap());
+}
+
+/// Guard rails: misconfigured out-of-core requests fail with typed
+/// errors instead of computing something surprising.
+#[test]
+fn out_of_core_guard_rails() {
+    let (tree, table) = problem();
+    let dir = tmpdir("guards");
+    // budget sweeps are single-node CPU only
+    let err = UniFracJob::new(&tree, &table)
+        .chips(2)
+        .max_resident_mb(64)
+        .run_to_path(dir.join("x.bin"))
+        .unwrap_err();
+    assert!(matches!(err, unifrac::Error::Unsupported(_)), "got {err:?}");
+    // a set stripe_range must not silently stream a full matrix
+    let err = UniFracJob::new(&tree, &table)
+        .stripe_range(0, 1)
+        .run_to_path(dir.join("y.bin"))
+        .unwrap_err();
+    assert!(err.to_string().contains("run_partial"), "{err}");
+    // a budget too small for one stripe is a config error
+    let err = UniFracJob::new(&tree, &table)
+        .max_resident_mb(0)
+        .run_to_path(dir.join("z.bin"))
+        .unwrap_err();
+    assert!(matches!(err, unifrac::Error::Config(_)), "got {err:?}");
+    // an incomplete file is rejected by the reader with a resume hint
+    let p = dir.join("incomplete.ufdm");
+    {
+        let meta = SinkMeta {
+            n_samples: table.n_samples(),
+            padded_n: 20,
+            metric: Metric::WeightedNormalized,
+            fp_bytes: 8,
+            sample_ids: table.sample_ids().to_vec(),
+        };
+        MmapCondensedSink::create(&p, meta).unwrap();
+    }
+    let err = CondensedFile::open(&p).unwrap_err();
+    assert!(err.to_string().contains("resume"), "{err}");
+}

@@ -130,6 +130,11 @@ const char *ssu_last_error(void);
 /* Static name for a status code ("ok", "merge", "panic", ...). */
 const char *ssu_error_name(int code);
 const char *ssu_version(void);
+/* CPU capability diagnostics: the SIMD kernel path the auto dispatcher
+ * selects plus the detected CPU features, e.g.
+ * "kernel=avx2 detected=avx2,fma,avx512f". Static storage, valid for
+ * the process lifetime. Honors UNIFRAC_FORCE_SCALAR (read once). */
+const char *ssu_cpu_features(void);
 
 #ifdef __cplusplus
 } /* extern "C" */

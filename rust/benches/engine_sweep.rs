@@ -1,16 +1,23 @@
 //! Bench: the engine sweep — ns per branch·pair update for all five
 //! stripe engines × {f32, f64} on the unweighted metric (the only one
 //! every engine supports, and the one the bit-packed kernel targets).
-//! Emits `BENCH_engines.json`, seeding the measured perf baseline the
-//! BENCH trajectory accumulates across PRs (ISSUE 2 acceptance: packed
-//! ≥ 4× faster than tiled at n_samples ≥ 512).
+//! Every engine×dtype cell runs twice — once forced onto the scalar
+//! reference path and once under the auto SIMD dispatcher — so each
+//! row carries the executed `kernel_path` and its `simd_speedup`
+//! (ISSUE 6 acceptance: SIMD ≥ 1.5× over scalar on at least one
+//! engine×precision cell on an AVX2 host). Emits `BENCH_engines.json`,
+//! the measured perf baseline the BENCH trajectory accumulates across
+//! PRs (ISSUE 2 acceptance: packed ≥ 4× faster than tiled at
+//! n_samples ≥ 512); `src/bin/bench_gate.rs` ratchets these ratios.
 //!
 //! Reduced-size CI mode: `UNIFRAC_BENCH_N=128 UNIFRAC_BENCH_REPEATS=1`.
 
 use unifrac::synth::SynthSpec;
 use unifrac::table::FeatureTable;
 use unifrac::tree::Phylogeny;
-use unifrac::unifrac::{compute_unifrac_report, ComputeOptions, EngineKind, Metric};
+use unifrac::unifrac::{
+    compute_unifrac_report, ComputeOptions, CpuFeatures, EngineKind, Metric,
+};
 use unifrac::util::json::{obj, Json};
 use unifrac::util::Real;
 
@@ -21,23 +28,30 @@ fn env_usize(key: &str, default: usize) -> usize {
 struct Row {
     engine: EngineKind,
     dtype: &'static str,
+    kernel_path: String,
     seconds: f64,
+    seconds_scalar: f64,
     updates: u64,
     ns_per_update: f64,
+    simd_speedup: f64,
     packed_words: u64,
     lut_builds: u64,
 }
 
-fn measure<R: Real + unifrac::runtime::XlaReal>(
+/// Best-of-N wall time for one engine×dtype cell on one kernel path.
+/// Returns (seconds, report-of-best-run).
+fn time_once<R: Real + unifrac::runtime::XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     engine: EngineKind,
+    cpu: CpuFeatures,
     repeats: usize,
-) -> Row {
+) -> (f64, unifrac::unifrac::ComputeReport) {
     let opts = ComputeOptions {
         metric: Metric::Unweighted,
         engine: Some(engine),
         batch_capacity: 64,
+        cpu_features: cpu,
         ..Default::default()
     };
     // warm-up, then best-of-N wall time
@@ -53,14 +67,27 @@ fn measure<R: Real + unifrac::runtime::XlaReal>(
             best = Some(rep);
         }
     }
-    let rep = best.expect("at least one repeat");
+    (best_secs, best.expect("at least one repeat"))
+}
+
+fn measure<R: Real + unifrac::runtime::XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    engine: EngineKind,
+    repeats: usize,
+) -> Row {
+    let (secs_scalar, _) = time_once::<R>(tree, table, engine, CpuFeatures::Scalar, repeats);
+    let (secs_auto, rep) = time_once::<R>(tree, table, engine, CpuFeatures::Auto, repeats);
     let updates = rep.updates();
     Row {
         engine,
         dtype: R::TAG,
-        seconds: best_secs,
+        kernel_path: rep.kernel_path.clone(),
+        seconds: secs_auto,
+        seconds_scalar: secs_scalar,
         updates,
-        ns_per_update: best_secs * 1e9 / updates.max(1) as f64,
+        ns_per_update: secs_auto * 1e9 / updates.max(1) as f64,
+        simd_speedup: secs_scalar / secs_auto.max(f64::MIN_POSITIVE),
         packed_words: rep.packed_words,
         lut_builds: rep.lut_builds,
     }
@@ -72,8 +99,8 @@ fn main() {
     let (tree, table) = SynthSpec::emp_like(n, 42).generate();
 
     println!(
-        "{:<9} {:>6} {:>10} {:>13} {:>14} {:>12}",
-        "engine", "dtype", "seconds", "updates", "ns/branchpair", "vs tiled"
+        "{:<9} {:>6} {:>7} {:>10} {:>13} {:>14} {:>10} {:>10}",
+        "engine", "dtype", "kernel", "seconds", "updates", "ns/branchpair", "vs tiled", "vs scalar"
     );
     let mut rows: Vec<Row> = Vec::new();
     for engine in EngineKind::all() {
@@ -95,22 +122,27 @@ fn main() {
     for r in &rows {
         let speedup = tiled_ns(r.dtype) / r.ns_per_update;
         println!(
-            "{:<9} {:>6} {:>10.4} {:>13} {:>14.4} {:>11.2}x",
+            "{:<9} {:>6} {:>7} {:>10.4} {:>13} {:>14.4} {:>9.2}x {:>9.2}x",
             r.engine.name(),
             r.dtype,
+            r.kernel_path,
             r.seconds,
             r.updates,
             r.ns_per_update,
-            speedup
+            speedup,
+            r.simd_speedup
         );
         json_rows.push(obj(vec![
             ("engine", Json::from(r.engine.name())),
             ("dtype", Json::from(r.dtype)),
             ("metric", Json::from("unweighted")),
+            ("kernel_path", Json::from(r.kernel_path.as_str())),
             ("seconds", Json::from(r.seconds)),
+            ("seconds_scalar", Json::from(r.seconds_scalar)),
             ("updates", Json::from(r.updates as usize)),
             ("ns_per_branch_pair", Json::from(r.ns_per_update)),
             ("speedup_vs_tiled", Json::from(speedup)),
+            ("simd_speedup", Json::from(r.simd_speedup)),
             ("packed_words", Json::from(r.packed_words as usize)),
             ("lut_builds", Json::from(r.lut_builds as usize)),
         ]));
@@ -124,11 +156,29 @@ fn main() {
             .unwrap_or(f64::NAN);
     println!("packed f64 speedup vs tiled: {packed_speedup_f64:.2}x (target >= 4x at n >= 512)");
 
+    // ISSUE-6 headline: auto-dispatch vs forced-scalar on the tiled
+    // dense engine (the cell whose inner loop the SIMD layer targets
+    // most directly)
+    let simd_speedup_of = |engine: EngineKind, dtype: &str| {
+        rows.iter()
+            .find(|r| r.engine == engine && r.dtype == dtype)
+            .map(|r| r.simd_speedup)
+            .unwrap_or(f64::NAN)
+    };
+    let simd_tiled_f64 = simd_speedup_of(EngineKind::Tiled, "f64");
+    let simd_tiled_f32 = simd_speedup_of(EngineKind::Tiled, "f32");
+    println!(
+        "tiled SIMD speedup vs scalar: f64 {simd_tiled_f64:.2}x, f32 {simd_tiled_f32:.2}x \
+         (target >= 1.5x on one cell on an AVX2 host)"
+    );
+
     let doc = obj(vec![
         ("bench", Json::from("engine_sweep")),
         ("n_samples", Json::from(n)),
         ("repeats", Json::from(repeats)),
         ("packed_speedup_vs_tiled_f64", Json::from(packed_speedup_f64)),
+        ("simd_speedup_tiled_f64", Json::from(simd_tiled_f64)),
+        ("simd_speedup_tiled_f32", Json::from(simd_tiled_f32)),
         ("rows", Json::Arr(json_rows)),
     ]);
     let out = "BENCH_engines.json";

@@ -1,17 +1,21 @@
 //! Bench: the density sweep — ns per branch·pair update for the sparse
 //! CSR engine vs the tiled and batched scalar stages on the
 //! weighted_normalized metric, across a table-density axis, in both
-//! precisions. Emits `BENCH_sparse.json` (ISSUE 3 acceptance: sparse ≥
-//! 5× faster than tiled at density 0.05) and reports the crossover
-//! density where the dense stage takes over — the empirical anchor for
-//! `--sparse-threshold`.
+//! precisions. Every engine×dtype×density cell runs twice (forced
+//! scalar, then auto SIMD dispatch) so each row carries the executed
+//! `kernel_path` and its `simd_speedup`. Emits `BENCH_sparse.json`
+//! (ISSUE 3 acceptance: sparse ≥ 5× faster than tiled at density 0.05)
+//! and reports the crossover density where the dense stage takes over —
+//! the empirical anchor for `--sparse-threshold`.
 //!
 //! Reduced-size CI mode: `UNIFRAC_BENCH_N=96 UNIFRAC_BENCH_REPEATS=1`.
 
 use unifrac::synth::SynthSpec;
 use unifrac::table::FeatureTable;
 use unifrac::tree::Phylogeny;
-use unifrac::unifrac::{compute_unifrac_report, ComputeOptions, EngineKind, Metric};
+use unifrac::unifrac::{
+    compute_unifrac_report, ComputeOptions, CpuFeatures, EngineKind, Metric,
+};
 use unifrac::util::json::{obj, Json};
 use unifrac::util::Real;
 
@@ -27,23 +31,28 @@ struct Row {
     dtype: &'static str,
     density: f64,
     embed_density: f64,
+    kernel_path: String,
     seconds: f64,
+    seconds_scalar: f64,
     updates: u64,
     ns_per_update: f64,
+    simd_speedup: f64,
     csr_nnz: u64,
 }
 
-fn measure<R: Real + unifrac::runtime::XlaReal>(
+/// Best-of-N wall time for one cell on one kernel path.
+fn time_once<R: Real + unifrac::runtime::XlaReal>(
     tree: &Phylogeny,
     table: &FeatureTable,
     engine: EngineKind,
-    density: f64,
+    cpu: CpuFeatures,
     repeats: usize,
-) -> Row {
+) -> (f64, unifrac::unifrac::ComputeReport) {
     let opts = ComputeOptions {
         metric: Metric::WeightedNormalized,
         engine: Some(engine),
         batch_capacity: 64,
+        cpu_features: cpu,
         ..Default::default()
     };
     // warm-up, then best-of-N wall time
@@ -59,16 +68,30 @@ fn measure<R: Real + unifrac::runtime::XlaReal>(
             best = Some(rep);
         }
     }
-    let rep = best.expect("at least one repeat");
+    (best_secs, best.expect("at least one repeat"))
+}
+
+fn measure<R: Real + unifrac::runtime::XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    engine: EngineKind,
+    density: f64,
+    repeats: usize,
+) -> Row {
+    let (secs_scalar, _) = time_once::<R>(tree, table, engine, CpuFeatures::Scalar, repeats);
+    let (secs_auto, rep) = time_once::<R>(tree, table, engine, CpuFeatures::Auto, repeats);
     let updates = rep.updates();
     Row {
         engine,
         dtype: R::TAG,
         density,
         embed_density: rep.embed_density,
-        seconds: best_secs,
+        kernel_path: rep.kernel_path.clone(),
+        seconds: secs_auto,
+        seconds_scalar: secs_scalar,
         updates,
-        ns_per_update: best_secs * 1e9 / updates.max(1) as f64,
+        ns_per_update: secs_auto * 1e9 / updates.max(1) as f64,
+        simd_speedup: secs_scalar / secs_auto.max(f64::MIN_POSITIVE),
         csr_nnz: rep.csr_nnz,
     }
 }
@@ -78,8 +101,9 @@ fn main() {
     let repeats = env_usize("UNIFRAC_BENCH_REPEATS", 3);
 
     println!(
-        "{:<8} {:>6} {:>8} {:>9} {:>10} {:>14} {:>12}",
-        "engine", "dtype", "density", "emb-dens", "seconds", "ns/branchpair", "vs tiled"
+        "{:<8} {:>6} {:>8} {:>9} {:>7} {:>10} {:>14} {:>10} {:>10}",
+        "engine", "dtype", "density", "emb-dens", "kernel", "seconds", "ns/branchpair",
+        "vs tiled", "vs scalar"
     );
     let mut rows: Vec<Row> = Vec::new();
     for &density in &DENSITIES {
@@ -106,14 +130,16 @@ fn main() {
     for r in &rows {
         let speedup = ns_of(EngineKind::Tiled, r.dtype, r.density) / r.ns_per_update;
         println!(
-            "{:<8} {:>6} {:>8} {:>9.4} {:>10.4} {:>14.4} {:>11.2}x",
+            "{:<8} {:>6} {:>8} {:>9.4} {:>7} {:>10.4} {:>14.4} {:>9.2}x {:>9.2}x",
             r.engine.name(),
             r.dtype,
             r.density,
             r.embed_density,
+            r.kernel_path,
             r.seconds,
             r.ns_per_update,
-            speedup
+            speedup,
+            r.simd_speedup
         );
         json_rows.push(obj(vec![
             ("engine", Json::from(r.engine.name())),
@@ -121,10 +147,13 @@ fn main() {
             ("metric", Json::from("weighted_normalized")),
             ("table_density", Json::from(r.density)),
             ("embed_density", Json::from(r.embed_density)),
+            ("kernel_path", Json::from(r.kernel_path.as_str())),
             ("seconds", Json::from(r.seconds)),
+            ("seconds_scalar", Json::from(r.seconds_scalar)),
             ("updates", Json::from(r.updates as usize)),
             ("ns_per_branch_pair", Json::from(r.ns_per_update)),
             ("speedup_vs_tiled", Json::from(speedup)),
+            ("simd_speedup", Json::from(r.simd_speedup)),
             ("csr_nnz", Json::from(r.csr_nnz as usize)),
         ]));
     }
@@ -136,6 +165,15 @@ fn main() {
         "sparse f64 speedup vs tiled at density 0.05: {sparse_speedup_005:.2}x \
          (target >= 5x)"
     );
+
+    // SIMD headline for this sweep: the sparse engine's vectorized
+    // pass-1 at the dense end of the axis (where pass 1 dominates)
+    let simd_sparse_f64 = rows
+        .iter()
+        .find(|r| r.engine == EngineKind::Sparse && r.dtype == "f64" && r.density == 0.8)
+        .map(|r| r.simd_speedup)
+        .unwrap_or(f64::NAN);
+    println!("sparse f64 SIMD speedup vs scalar at density 0.8: {simd_sparse_f64:.2}x");
 
     // crossover: the first density on the axis where tiled catches up
     // (sparse stops being faster); 1.0 would mean "sparse always wins"
@@ -151,6 +189,7 @@ fn main() {
         ("n_samples", Json::from(n)),
         ("repeats", Json::from(repeats)),
         ("sparse_speedup_vs_tiled_f64_at_0.05", Json::from(sparse_speedup_005)),
+        ("simd_speedup_sparse_f64_at_0.8", Json::from(simd_sparse_f64)),
         ("crossover_density_f64", Json::from(crossover)),
         ("rows", Json::Arr(json_rows)),
     ]);

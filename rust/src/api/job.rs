@@ -13,7 +13,7 @@ use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
 use crate::unifrac::compute::packed_direct_block;
-use crate::unifrac::{compute_unifrac_report, ComputeReport, EngineKind, Metric};
+use crate::unifrac::{compute_unifrac_report, ComputeReport, CpuFeatures, EngineKind, Metric};
 use std::path::{Path, PathBuf};
 
 /// Floating-point width of a run — the paper's fp32/fp64 axis, carried
@@ -102,6 +102,12 @@ pub struct JobSpec {
     /// Embedding-row density below which auto-selection picks the
     /// sparse CSR kernel for weighted metrics (`--sparse-threshold`).
     pub sparse_threshold: f64,
+    /// SIMD kernel path for the CPU engines (`--cpu-features`). `Auto`
+    /// (default) resolves by runtime CPU-feature detection (honoring
+    /// the `UNIFRAC_FORCE_SCALAR` env override); `Scalar` pins the
+    /// reference path; an explicit ISA unavailable on this host fails
+    /// the run with a typed `Error::Unsupported`.
+    pub cpu_features: CpuFeatures,
     /// Tiled engine's `step_size` (paper Figure 3).
     pub block_k: usize,
     /// Embedding rows per batch (paper Figure 2's `filled_embs`).
@@ -154,6 +160,7 @@ impl Default for JobSpec {
             backend: Backend::Cpu,
             engine: None,
             sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
+            cpu_features: CpuFeatures::Auto,
             block_k: 64,
             batch_capacity: 32,
             threads: 1,
@@ -310,6 +317,7 @@ impl JobSpec {
             engine,
             block_k: self.block_k,
             sparse_threshold: self.sparse_threshold,
+            cpu_features: self.cpu_features,
         }
     }
 }
@@ -425,6 +433,13 @@ impl<'a> UniFracJob<'a> {
     /// Density cut below which auto-selection picks the sparse kernel.
     pub fn sparse_threshold(mut self, threshold: f64) -> Self {
         self.spec.sparse_threshold = threshold;
+        self
+    }
+
+    /// SIMD kernel path for the CPU engines (default: runtime auto
+    /// detection; an unavailable explicit ISA fails the run).
+    pub fn cpu_features(mut self, cpu_features: CpuFeatures) -> Self {
+        self.spec.cpu_features = cpu_features;
         self
     }
 
@@ -810,6 +825,7 @@ fn metrics_from_compute(rep: &ComputeReport, spec: &JobSpec) -> RunMetrics {
     RunMetrics {
         backend: format!("cpu/{}", rep.engine),
         scheduler: spec.scheduler.name().to_string(),
+        kernel_path: rep.kernel_path.clone(),
         artifact: None,
         n_samples: rep.n_samples,
         padded_n: rep.padded_n,
@@ -891,6 +907,7 @@ mod tests {
             .batch_capacity(9)
             .block_k(16)
             .sparse_threshold(0.5)
+            .cpu_features(CpuFeatures::Scalar)
             .stripe_range(1, 2);
         let s = job.spec();
         assert_eq!(s.metric, Metric::Generalized(0.5));
@@ -903,6 +920,7 @@ mod tests {
         assert_eq!(s.batch_capacity, 9);
         assert_eq!(s.block_k, 16);
         assert_eq!(s.sparse_threshold, 0.5);
+        assert_eq!(s.cpu_features, CpuFeatures::Scalar);
         assert_eq!(s.stripe_range, Some((1, 2)));
     }
 

@@ -1,0 +1,448 @@
+//! CI bench regression gate: compare the ratio metrics emitted by the
+//! bench sweeps (`BENCH_engines.json`, `BENCH_sparse.json`) against the
+//! committed floor file `BENCH_baseline.json` and fail (exit 1) when
+//! any cell regresses by more than the baseline's tolerance.
+//!
+//! The baseline stores *ratio minimums* (engine-vs-engine and
+//! SIMD-vs-scalar speedups), not absolute times — ratios of runs taken
+//! on the same host in the same process are stable across machines and
+//! CI hardware generations, where nanosecond floors are not. A cell
+//! passes when
+//!
+//! ```text
+//! value >= min * (1 - tolerance)
+//! ```
+//!
+//! Usage:
+//!
+//! ```text
+//! bench_gate --baseline ../BENCH_baseline.json \
+//!            [--engines BENCH_engines.json] [--sparse BENCH_sparse.json] \
+//!            [--record]
+//! ```
+//!
+//! `--record` is the ratchet mode: instead of failing, rewrite the
+//! baseline with `min = max(old min, observed)` per cell, so floors
+//! only ever move up (run it on a quiet reference host, commit the
+//! diff). Exit codes: 0 all cells pass, 1 regression, 2 usage/IO error.
+//!
+//! Baseline format (all keys of a cell except `min` select the value):
+//!
+//! ```json
+//! {"tolerance": 0.10,
+//!  "cells": [
+//!    {"bench": "engine_sweep", "key": "simd_speedup_tiled_f64", "min": 1.0},
+//!    {"bench": "sparse_sweep", "engine": "sparse", "dtype": "f64",
+//!     "density": 0.05, "field": "speedup_vs_tiled", "min": 2.0}]}
+//! ```
+//!
+//! A cell with `key` reads a top-level number of the bench document; a
+//! cell with `engine`/`dtype` (plus optional `density`) reads `field`
+//! (default `"speedup_vs_tiled"`) from the matching entry of the
+//! document's `rows` array.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+use unifrac::util::json::{obj, Json};
+
+/// One baseline cell: a value selector plus its floor.
+#[derive(Clone, Debug)]
+struct Cell {
+    bench: String,
+    key: Option<String>,
+    engine: Option<String>,
+    dtype: Option<String>,
+    density: Option<f64>,
+    field: String,
+    min: f64,
+}
+
+impl Cell {
+    fn from_json(j: &Json) -> Result<Cell, String> {
+        let bench = j.get("bench")?.as_str().ok_or("cell bench must be a string")?.to_string();
+        let min = j.get("min")?.as_f64().ok_or("cell min must be a number")?;
+        let opt_str = |key: &str| -> Option<String> {
+            j.get(key).ok().and_then(|v| v.as_str()).map(str::to_string)
+        };
+        let cell = Cell {
+            bench,
+            key: opt_str("key"),
+            engine: opt_str("engine"),
+            dtype: opt_str("dtype"),
+            density: j.get("density").ok().and_then(|v| v.as_f64()),
+            field: opt_str("field").unwrap_or_else(|| "speedup_vs_tiled".to_string()),
+            min,
+        };
+        if cell.key.is_none() && cell.engine.is_none() {
+            return Err("cell needs either \"key\" or an \"engine\" row selector".into());
+        }
+        Ok(cell)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![("bench", Json::from(self.bench.as_str()))];
+        if let Some(k) = &self.key {
+            pairs.push(("key", Json::from(k.as_str())));
+        }
+        if let Some(e) = &self.engine {
+            pairs.push(("engine", Json::from(e.as_str())));
+            pairs.push(("field", Json::from(self.field.as_str())));
+        }
+        if let Some(d) = &self.dtype {
+            pairs.push(("dtype", Json::from(d.as_str())));
+        }
+        if let Some(d) = self.density {
+            pairs.push(("density", Json::from(d)));
+        }
+        pairs.push(("min", Json::from(self.min)));
+        obj(pairs)
+    }
+
+    /// Human label for the PASS/FAIL line.
+    fn label(&self) -> String {
+        match &self.key {
+            Some(k) => format!("{}::{}", self.bench, k),
+            None => {
+                let mut s = format!(
+                    "{}::{}[{}",
+                    self.bench,
+                    self.field,
+                    self.engine.as_deref().unwrap_or("?")
+                );
+                if let Some(d) = &self.dtype {
+                    s.push_str(&format!(",{d}"));
+                }
+                if let Some(d) = self.density {
+                    s.push_str(&format!(",density={d}"));
+                }
+                s.push(']');
+                s
+            }
+        }
+    }
+
+    /// Pull this cell's observed value out of its bench document.
+    fn lookup(&self, doc: &Json) -> Result<f64, String> {
+        if let Some(key) = &self.key {
+            return doc
+                .get(key)
+                .map_err(|e| format!("{}: {e}", self.label()))?
+                .as_f64()
+                .ok_or_else(|| format!("{}: not a number", self.label()));
+        }
+        let rows = doc
+            .get("rows")
+            .map_err(|e| format!("{}: {e}", self.label()))?
+            .as_arr()
+            .ok_or("rows must be an array")?;
+        let matches_row = |row: &Json| -> bool {
+            let str_eq = |key: &str, want: &Option<String>| match want {
+                None => true,
+                Some(w) => row.get(key).ok().and_then(|v| v.as_str()) == Some(w.as_str()),
+            };
+            let density_eq = match self.density {
+                None => true,
+                Some(d) => row.get("table_density").ok().and_then(|v| v.as_f64()) == Some(d),
+            };
+            str_eq("engine", &self.engine) && str_eq("dtype", &self.dtype) && density_eq
+        };
+        let row = rows
+            .iter()
+            .find(|r| matches_row(r))
+            .ok_or_else(|| format!("{}: no matching row", self.label()))?;
+        row.get(&self.field)
+            .map_err(|e| format!("{}: {e}", self.label()))?
+            .as_f64()
+            .ok_or_else(|| format!("{}: not a number", self.label()))
+    }
+}
+
+/// Parsed baseline: tolerance + cells.
+struct Baseline {
+    tolerance: f64,
+    cells: Vec<Cell>,
+}
+
+impl Baseline {
+    fn parse(text: &str) -> Result<Baseline, String> {
+        let doc = Json::parse(text)?;
+        let tolerance = doc.get("tolerance")?.as_f64().ok_or("tolerance must be a number")?;
+        if !(0.0..1.0).contains(&tolerance) {
+            return Err(format!("tolerance {tolerance} out of [0, 1)"));
+        }
+        let cells = doc
+            .get("cells")?
+            .as_arr()
+            .ok_or("cells must be an array")?
+            .iter()
+            .map(Cell::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        if cells.is_empty() {
+            return Err("baseline has no cells".into());
+        }
+        Ok(Baseline { tolerance, cells })
+    }
+
+    fn dump(&self) -> String {
+        obj(vec![
+            ("tolerance", Json::from(self.tolerance)),
+            ("cells", Json::Arr(self.cells.iter().map(Cell::to_json).collect())),
+        ])
+        .dump()
+    }
+}
+
+/// One checked cell, ready to print.
+struct Outcome {
+    label: String,
+    value: f64,
+    min: f64,
+    floor: f64,
+    pass: bool,
+}
+
+/// Check every baseline cell against its bench document. The returned
+/// outcomes are in baseline order; a missing document or cell is a hard
+/// error (a gate that silently skips cells gates nothing).
+fn evaluate(baseline: &Baseline, docs: &BTreeMap<String, Json>) -> Result<Vec<Outcome>, String> {
+    let mut out = Vec::with_capacity(baseline.cells.len());
+    for cell in &baseline.cells {
+        let doc = docs
+            .get(&cell.bench)
+            .ok_or_else(|| format!("{}: no bench document for {:?}", cell.label(), cell.bench))?;
+        let value = cell.lookup(doc)?;
+        let floor = cell.min * (1.0 - baseline.tolerance);
+        out.push(Outcome {
+            label: cell.label(),
+            value,
+            min: cell.min,
+            floor,
+            // NaN never passes: a cell the sweep failed to measure is a
+            // regression, not a skip
+            pass: value >= floor,
+        });
+    }
+    Ok(out)
+}
+
+/// Ratchet: raise each cell's floor to the observed value where the
+/// observation is finite and higher. Returns how many cells moved.
+fn ratchet(baseline: &mut Baseline, docs: &BTreeMap<String, Json>) -> Result<usize, String> {
+    let mut raised = 0;
+    for cell in &mut baseline.cells {
+        let doc = docs
+            .get(&cell.bench)
+            .ok_or_else(|| format!("{}: no bench document for {:?}", cell.label(), cell.bench))?;
+        let value = cell.lookup(doc)?;
+        if value.is_finite() && value > cell.min {
+            cell.min = value;
+            raised += 1;
+        }
+    }
+    Ok(raised)
+}
+
+fn usage() -> String {
+    "usage: bench_gate --baseline FILE [--engines FILE] [--sparse FILE] [--record]".to_string()
+}
+
+fn run(argv: &[String]) -> Result<ExitCode, String> {
+    let mut baseline_path = None;
+    let mut engines_path = "BENCH_engines.json".to_string();
+    let mut sparse_path = "BENCH_sparse.json".to_string();
+    let mut record = false;
+    let mut it = argv.iter();
+    while let Some(arg) = it.next() {
+        let mut val = |flag: &str| {
+            it.next().cloned().ok_or_else(|| format!("{flag} needs a value\n{}", usage()))
+        };
+        match arg.as_str() {
+            "--baseline" => baseline_path = Some(val("--baseline")?),
+            "--engines" => engines_path = val("--engines")?,
+            "--sparse" => sparse_path = val("--sparse")?,
+            "--record" => record = true,
+            other => return Err(format!("unknown flag {other:?}\n{}", usage())),
+        }
+    }
+    let baseline_path = baseline_path.ok_or_else(usage)?;
+    let baseline_text = std::fs::read_to_string(&baseline_path)
+        .map_err(|e| format!("read {baseline_path}: {e}"))?;
+    let mut baseline = Baseline::parse(&baseline_text)
+        .map_err(|e| format!("parse {baseline_path}: {e}"))?;
+
+    // load only the documents the baseline actually references
+    let mut docs = BTreeMap::new();
+    for cell in &baseline.cells {
+        if docs.contains_key(&cell.bench) {
+            continue;
+        }
+        let path = match cell.bench.as_str() {
+            "engine_sweep" => &engines_path,
+            "sparse_sweep" => &sparse_path,
+            other => return Err(format!("no file mapping for bench {other:?}")),
+        };
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+        docs.insert(cell.bench.clone(), doc);
+    }
+
+    if record {
+        let raised = ratchet(&mut baseline, &docs)?;
+        std::fs::write(&baseline_path, baseline.dump())
+            .map_err(|e| format!("write {baseline_path}: {e}"))?;
+        println!("bench_gate: recorded {baseline_path} ({raised} floor(s) raised)");
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let outcomes = evaluate(&baseline, &docs)?;
+    let mut failures = 0;
+    for o in &outcomes {
+        println!(
+            "  {} {:<55} {:>8.3} (floor {:.3} = min {:.3} - {:.0}%)",
+            if o.pass { "PASS" } else { "FAIL" },
+            o.label,
+            o.value,
+            o.floor,
+            o.min,
+            baseline.tolerance * 100.0
+        );
+        failures += usize::from(!o.pass);
+    }
+    if failures > 0 {
+        eprintln!("bench_gate: {failures} cell(s) regressed past the {baseline_path} floors");
+        return Ok(ExitCode::FAILURE);
+    }
+    println!("bench_gate: all {} cell(s) within tolerance", outcomes.len());
+    Ok(ExitCode::SUCCESS)
+}
+
+fn main() -> ExitCode {
+    match run(&std::env::args().skip(1).collect::<Vec<_>>()) {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("bench_gate: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline(tolerance: f64) -> Baseline {
+        Baseline::parse(&format!(
+            r#"{{"tolerance": {tolerance}, "cells": [
+                 {{"bench": "engine_sweep", "key": "simd_speedup_tiled_f64", "min": 2.0}},
+                 {{"bench": "engine_sweep", "engine": "packed", "dtype": "f64",
+                   "field": "speedup_vs_tiled", "min": 4.0}},
+                 {{"bench": "sparse_sweep", "engine": "sparse", "dtype": "f64",
+                   "density": 0.05, "min": 5.0}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    fn docs(simd: f64, packed: f64, sparse: f64) -> BTreeMap<String, Json> {
+        let engines = Json::parse(&format!(
+            r#"{{"simd_speedup_tiled_f64": {simd},
+                 "rows": [
+                   {{"engine": "tiled", "dtype": "f64", "speedup_vs_tiled": 1.0}},
+                   {{"engine": "packed", "dtype": "f64", "speedup_vs_tiled": {packed}}}]}}"#
+        ))
+        .unwrap();
+        let sparse_doc = Json::parse(&format!(
+            r#"{{"rows": [
+                   {{"engine": "sparse", "dtype": "f64", "table_density": 0.01,
+                     "speedup_vs_tiled": 99.0}},
+                   {{"engine": "sparse", "dtype": "f64", "table_density": 0.05,
+                     "speedup_vs_tiled": {sparse}}}]}}"#
+        ))
+        .unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("engine_sweep".to_string(), engines);
+        m.insert("sparse_sweep".to_string(), sparse_doc);
+        m
+    }
+
+    #[test]
+    fn all_cells_at_baseline_pass() {
+        let out = evaluate(&baseline(0.10), &docs(2.0, 4.0, 5.0)).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|o| o.pass));
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        // 5% below the floors: inside the 10% band
+        let out = evaluate(&baseline(0.10), &docs(1.9, 3.8, 4.75)).unwrap();
+        assert!(out.iter().all(|o| o.pass));
+    }
+
+    #[test]
+    fn synthetic_regression_over_10_percent_fails() {
+        // the ISSUE-6 acceptance demo: a >10% slowdown on one cell must
+        // flip the gate
+        let out = evaluate(&baseline(0.10), &docs(2.0, 4.0 * 0.85, 5.0)).unwrap();
+        let fails: Vec<_> = out.iter().filter(|o| !o.pass).collect();
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].label.contains("packed"), "label: {}", fails[0].label);
+        // and the exact boundary passes while epsilon below it fails
+        assert!(evaluate(&baseline(0.10), &docs(2.0, 3.6, 5.0)).unwrap()[1].pass);
+        assert!(!evaluate(&baseline(0.10), &docs(2.0, 3.599, 5.0)).unwrap()[1].pass);
+    }
+
+    #[test]
+    fn density_selector_picks_the_right_row() {
+        // density 0.05 row is the gated one; the 0.01 row says 99x and
+        // must not mask a regression at 0.05
+        let out = evaluate(&baseline(0.10), &docs(2.0, 4.0, 1.0)).unwrap();
+        assert!(!out[2].pass);
+        assert!(out[2].label.contains("density=0.05"), "label: {}", out[2].label);
+    }
+
+    #[test]
+    fn nan_and_missing_cells_are_hard_failures() {
+        // JSON text can't carry NaN, so inject it into the parsed doc
+        let mut d = docs(2.0, 4.0, 5.0);
+        if let Json::Obj(o) = d.get_mut("engine_sweep").unwrap() {
+            o.insert("simd_speedup_tiled_f64".to_string(), Json::Num(f64::NAN));
+        }
+        let out = evaluate(&baseline(0.10), &d).unwrap();
+        assert!(!out[0].pass, "NaN must not pass the gate");
+        // a cell whose row vanished from the sweep is an error, not a skip
+        let mut d = docs(2.0, 4.0, 5.0);
+        d.insert("sparse_sweep".to_string(), Json::parse(r#"{"rows": []}"#).unwrap());
+        assert!(evaluate(&baseline(0.10), &d).is_err());
+        // as is a missing document
+        d.remove("sparse_sweep");
+        assert!(evaluate(&baseline(0.10), &d).is_err());
+    }
+
+    #[test]
+    fn record_ratchets_floors_up_only() {
+        let mut b = baseline(0.10);
+        let raised = ratchet(&mut b, &docs(2.5, 3.0, 7.0)).unwrap();
+        // simd 2.0 -> 2.5 and sparse 5.0 -> 7.0 move; packed stays at
+        // its committed 4.0 even though the run was slower
+        assert_eq!(raised, 2);
+        assert_eq!(b.cells[0].min, 2.5);
+        assert_eq!(b.cells[1].min, 4.0);
+        assert_eq!(b.cells[2].min, 7.0);
+        // the ratcheted baseline round-trips through its own dump
+        let again = Baseline::parse(&b.dump()).unwrap();
+        assert_eq!(again.cells[2].min, 7.0);
+        assert_eq!(again.cells[2].density, Some(0.05));
+    }
+
+    #[test]
+    fn baseline_rejects_malformed_input() {
+        assert!(Baseline::parse(r#"{"tolerance": 1.5, "cells": []}"#).is_err());
+        assert!(Baseline::parse(r#"{"tolerance": 0.1, "cells": []}"#).is_err());
+        // a cell with neither key nor engine selector selects nothing
+        assert!(Baseline::parse(
+            r#"{"tolerance": 0.1, "cells": [{"bench": "engine_sweep", "min": 1.0}]}"#
+        )
+        .is_err());
+    }
+}

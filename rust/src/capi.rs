@@ -538,6 +538,23 @@ pub extern "C" fn ssu_version() -> *const c_char {
     b"unifrac 0.1.0\0".as_ptr() as *const c_char
 }
 
+/// CPU capability diagnostics: the SIMD kernel path the auto dispatcher
+/// selects plus the detected CPU features, as a static string like
+/// `"kernel=avx2 detected=avx2,fma,avx512f"` (same text the CLI's
+/// `version` subcommand prints). Honors `UNIFRAC_FORCE_SCALAR`, which is
+/// read once per process. The pointer stays valid for the process
+/// lifetime.
+#[no_mangle]
+pub extern "C" fn ssu_cpu_features() -> *const c_char {
+    static FEATURES: std::sync::OnceLock<CString> = std::sync::OnceLock::new();
+    FEATURES
+        .get_or_init(|| {
+            CString::new(crate::unifrac::simd::describe().replace('\0', " "))
+                .unwrap_or_else(|_| CString::new("kernel=scalar").expect("static"))
+        })
+        .as_ptr()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -851,6 +868,7 @@ mod tests {
             "ssu_last_error",
             "ssu_error_name",
             "ssu_version",
+            "ssu_cpu_features",
         ];
         for name in exports {
             assert!(
@@ -896,6 +914,11 @@ mod tests {
             );
             let v = CStr::from_ptr(ssu_version()).to_str().unwrap();
             assert!(v.contains("unifrac"));
+            let f = CStr::from_ptr(ssu_cpu_features()).to_str().unwrap();
+            assert!(f.contains("kernel="), "cpu features string: {f:?}");
+            assert!(f.contains("detected="), "cpu features string: {f:?}");
+            // stable pointer: repeated calls return the same allocation
+            assert_eq!(ssu_cpu_features(), ssu_cpu_features());
         }
     }
 }

@@ -41,6 +41,9 @@ fn resolve_config(args: &mut Args) -> Result<RunConfig> {
     cfg.batch = args.get_or("batch", cfg.batch)?;
     cfg.block_k = args.get_or("block-k", cfg.block_k)?;
     cfg.sparse_threshold = args.get_or("sparse-threshold", cfg.sparse_threshold)?;
+    if let Some(v) = args.opt("cpu-features") {
+        cfg.cpu_features = v;
+    }
     if let Some(v) = args.opt("scheduler") {
         cfg.scheduler = v;
     }
@@ -475,6 +478,18 @@ pub fn info(args: &mut Args) -> Result<()> {
             a.vmem_bytes / 1024
         );
     }
+    Ok(())
+}
+
+/// `unifrac version`: build + CPU capability diagnostics. Reports the
+/// crate version, the detected CPU features, and the SIMD kernel path
+/// the auto dispatcher would select (honoring `UNIFRAC_FORCE_SCALAR`)
+/// — the same string the C ABI exposes via `ssu_cpu_features()`.
+pub fn version(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    println!("unifrac {}", env!("CARGO_PKG_VERSION"));
+    println!("cpu: {}", crate::unifrac::simd::describe());
+    println!("engines: {}", EngineKind::names_list());
     Ok(())
 }
 

@@ -15,6 +15,7 @@
 //! unifrac devices                                   # device model inventory
 //! unifrac info                                      # artifact manifest
 //! unifrac selftest                                  # quick end-to-end check
+//! unifrac version                                   # build + CPU feature diagnostics
 //! ```
 
 mod args;
@@ -56,6 +57,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "devices" => commands::devices(&mut args),
         "info" => commands::info(&mut args),
         "selftest" => commands::selftest(&mut args),
+        "version" | "--version" | "-V" => commands::version(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", help_text());
             Ok(())
@@ -88,6 +90,7 @@ SUBCOMMANDS
   devices        list the GPU/CPU device performance models
   info           show the AOT artifact manifest
   selftest       quick end-to-end consistency check
+  version        build version + detected CPU features + kernel path
   help           this text
 
 COMMON FLAGS
@@ -108,6 +111,10 @@ COMMON FLAGS
   --block-k N         tiled engine step_size (Figure 3; honored exactly, 0 = auto)
   --sparse-threshold X  embedding-row density below which --engine auto picks the
                       sparse CSR kernel for weighted metrics (default 0.25)
+  --cpu-features F    SIMD kernel path for cpu engines: {cpu_features}
+                      (default auto; explicit ISAs not available on this
+                      host are rejected; UNIFRAC_FORCE_SCALAR=1 forces
+                      the scalar reference path)
   --scheduler S       stripe scheduling: static (contiguous ranges) |
                       dynamic (work-stealing of stripe chunks)
   --pool-depth N      recycled batch buffers in the exec pool (0 = off)
@@ -143,6 +150,7 @@ EXIT CODES
   with the C ABI (see include/unifrac.h).
 ",
         engines = EngineKind::names_list(),
-        formats = OutputFormat::names_list()
+        formats = OutputFormat::names_list(),
+        cpu_features = crate::unifrac::CpuFeatures::names_list()
     )
 }

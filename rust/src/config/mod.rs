@@ -17,7 +17,7 @@ use crate::api::{Backend, FpWidth, JobSpec};
 use crate::error::{Error, Result};
 use crate::exec::SchedulerKind;
 use crate::matrix::OutputFormat;
-use crate::unifrac::{EngineKind, Metric};
+use crate::unifrac::{CpuFeatures, EngineKind, Metric};
 use std::path::PathBuf;
 
 /// Fully resolved run configuration (CLI flags override file values).
@@ -38,6 +38,9 @@ pub struct RunConfig {
     /// Embedding-row density below which `engine = "auto"` picks the
     /// sparse CSR kernel for weighted metrics.
     pub sparse_threshold: f64,
+    /// SIMD kernel path for the CPU engines: "auto" (runtime
+    /// detection), "scalar", "avx2" or "neon".
+    pub cpu_features: String,
     pub queue_depth: usize,
     /// Stripe scheduling: "static" | "dynamic".
     pub scheduler: String,
@@ -69,6 +72,7 @@ impl Default for RunConfig {
             batch: 32,
             block_k: 64,
             sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
+            cpu_features: "auto".into(),
             queue_depth: 4,
             scheduler: "static".into(),
             pool_depth: 8,
@@ -128,6 +132,9 @@ impl RunConfig {
         }
         if let Some(v) = get("sparse_threshold") {
             self.sparse_threshold = v.as_f64().ok_or_else(|| bad("sparse_threshold"))?;
+        }
+        if let Some(v) = get("cpu_features") {
+            self.cpu_features = v.as_str().ok_or_else(|| bad("cpu_features"))?.to_string();
         }
         if let Some(v) = get("queue_depth") {
             self.queue_depth = v.as_usize().ok_or_else(|| bad("queue_depth"))?;
@@ -228,6 +235,13 @@ impl RunConfig {
                 self.scheduler
             ))
         })?;
+        let cpu_features = CpuFeatures::parse(&self.cpu_features).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown cpu_features {:?} (expected {})",
+                self.cpu_features,
+                CpuFeatures::names_list()
+            ))
+        })?;
         let output_format = OutputFormat::parse(&self.output_format).ok_or_else(|| {
             Error::Config(format!(
                 "unknown output format {:?} (expected {})",
@@ -241,6 +255,7 @@ impl RunConfig {
             backend,
             engine,
             sparse_threshold: self.sparse_threshold,
+            cpu_features,
             block_k: self.block_k,
             batch_capacity: self.batch.max(1),
             threads: self.threads,
@@ -441,6 +456,22 @@ pool_depth = 16
         let cfg = RunConfig { output_format: "hdf5".into(), ..Default::default() };
         let err = cfg.to_job().expect_err("unknown format must fail");
         assert!(err.to_string().contains("tsv|bin|mmap"), "{err}");
+    }
+
+    #[test]
+    fn cpu_features_parses_and_rejects_unknown() {
+        let doc = TomlDoc::parse("[run]\ncpu_features = \"scalar\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.cpu_features, "scalar");
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.cpu_features, CpuFeatures::Scalar);
+        // default stays auto
+        assert_eq!(RunConfig::default().to_job().unwrap().cpu_features, CpuFeatures::Auto);
+        // unknown value fails with the accepted list
+        let cfg = RunConfig { cpu_features: "sse9".into(), ..Default::default() };
+        let err = cfg.to_job().expect_err("unknown cpu_features must fail");
+        assert!(err.to_string().contains("auto|scalar|avx2|neon"), "{err}");
     }
 
     #[test]

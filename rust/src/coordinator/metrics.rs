@@ -8,6 +8,10 @@ pub struct RunMetrics {
     pub backend: String,
     /// Stripe scheduling strategy ("static" | "dynamic").
     pub scheduler: String,
+    /// SIMD kernel path the CPU engines executed ("scalar" | "avx2" |
+    /// "neon"); "scalar" for PJRT-only runs and scalar-reference
+    /// engines.
+    pub kernel_path: String,
     pub artifact: Option<String>,
     pub n_samples: usize,
     pub padded_n: usize,
@@ -81,6 +85,7 @@ impl RunMetrics {
         obj(vec![
             ("backend", Json::from(self.backend.as_str())),
             ("scheduler", Json::from(self.scheduler.as_str())),
+            ("kernel_path", Json::from(self.kernel_path.as_str())),
             (
                 "artifact",
                 self.artifact.as_deref().map(Json::from).unwrap_or(Json::Null),
@@ -135,6 +140,7 @@ mod tests {
         let m = RunMetrics {
             backend: "cpu/tiled".into(),
             scheduler: "dynamic".into(),
+            kernel_path: "avx2".into(),
             batches: 3,
             pool_allocated: 2,
             pool_reused: 7,
@@ -152,6 +158,7 @@ mod tests {
         assert_eq!(parsed.get("batches").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("artifact").unwrap(), &Json::Null);
         assert_eq!(parsed.get("scheduler").unwrap().as_str(), Some("dynamic"));
+        assert_eq!(parsed.get("kernel_path").unwrap().as_str(), Some("avx2"));
         assert_eq!(parsed.get("pool_reused").unwrap().as_usize(), Some(7));
         assert_eq!(parsed.get("packed_words").unwrap().as_usize(), Some(1024));
         assert_eq!(parsed.get("lut_builds").unwrap().as_usize(), Some(16));

@@ -30,6 +30,7 @@ fn worker_spec(backend: &BackendSpec, opts: &JobSpec) -> Result<WorkerSpec> {
             engine: *engine,
             block_k: *block_k,
             sparse_threshold: opts.sparse_threshold,
+            cpu_features: opts.cpu_features,
         }),
         BackendSpec::Pjrt { engine, resident } => {
             let dir = opts
@@ -56,6 +57,9 @@ fn base_metrics(plan: &ChipPlan, opts: &JobSpec, n_samples: usize) -> RunMetrics
             None => "cpu".to_string(),
         },
         scheduler: opts.scheduler.name().to_string(),
+        // overwritten by `absorb` with the path the engines actually
+        // executed; PJRT-only runs keep the scalar label
+        kernel_path: "scalar".to_string(),
         artifact: plan.artifact.clone(),
         n_samples,
         padded_n: plan.padded_n,
@@ -99,6 +103,7 @@ fn absorb(metrics: &mut RunMetrics, rep: &ExecReport) {
     metrics.rows_dense = rep.engine_stats.rows_dense;
     metrics.csr_density = rep.engine_stats.csr_density();
     metrics.embed_density = rep.embed_density;
+    metrics.kernel_path = rep.engine_stats.kernel_path.name().to_string();
 }
 
 /// Sequential mode: run each chip in isolation, timing it precisely.

@@ -39,6 +39,7 @@ use crate::matrix::{total_stripes, StripeBlock};
 use crate::runtime::XlaReal;
 use crate::table::FeatureTable;
 use crate::tree::Phylogeny;
+use crate::unifrac::simd;
 use crate::unifrac::{make_engine_with, EngineStats, Metric, StripeEngine};
 use scheduler::Role;
 use std::collections::HashMap;
@@ -136,13 +137,20 @@ impl<R: XlaReal> Runner<R> {
                 Ok(Runner::Fixed(Worker::build(wspec, metric, padded_n, start, count)?))
             }
             Role::Steal => match wspec {
-                WorkerSpec::Cpu { engine, block_k, sparse_threshold } => Ok(Runner::Steal {
-                    engine: make_engine_with::<R>(*engine, *block_k, *sparse_threshold),
-                    metric,
-                    padded_n,
-                    chunks,
-                    blocks: HashMap::new(),
-                }),
+                WorkerSpec::Cpu { engine, block_k, sparse_threshold, cpu_features } => {
+                    Ok(Runner::Steal {
+                        engine: make_engine_with::<R>(
+                            *engine,
+                            *block_k,
+                            *sparse_threshold,
+                            simd::resolve(*cpu_features)?,
+                        ),
+                        metric,
+                        padded_n,
+                        chunks,
+                        blocks: HashMap::new(),
+                    })
+                }
                 WorkerSpec::Pjrt { .. } => Err(Error::Config(
                     "dynamic stealing requires CPU workers (scheduler should have \
                      rejected this)"
@@ -412,9 +420,15 @@ mod tests {
     use crate::synth::SynthSpec;
     use crate::unifrac::{EngineKind, DEFAULT_SPARSE_THRESHOLD};
 
-    /// Test shorthand: a CPU worker spec with the default threshold.
+    /// Test shorthand: a CPU worker spec with the default threshold and
+    /// auto SIMD dispatch.
     fn cpu(engine: EngineKind, block_k: usize) -> WorkerSpec {
-        WorkerSpec::Cpu { engine, block_k, sparse_threshold: DEFAULT_SPARSE_THRESHOLD }
+        WorkerSpec::Cpu {
+            engine,
+            block_k,
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+            cpu_features: crate::unifrac::CpuFeatures::Auto,
+        }
     }
 
     fn cpu_workers(n: usize) -> Vec<WorkerBuild> {

@@ -203,6 +203,7 @@ mod tests {
             engine: EngineKind::Tiled,
             block_k: 16,
             sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
+            cpu_features: crate::unifrac::CpuFeatures::Auto,
         }
     }
 

@@ -11,7 +11,8 @@ use crate::embed::EmbBatch;
 use crate::error::{Error, Result};
 use crate::matrix::StripeBlock;
 use crate::runtime::{ArtifactQuery, ResidentUpdater, Runtime, StripeExecutor, XlaReal};
-use crate::unifrac::{make_engine_with, EngineKind, EngineStats, Metric, StripeEngine};
+use crate::unifrac::simd;
+use crate::unifrac::{make_engine_with, CpuFeatures, EngineKind, EngineStats, Metric, StripeEngine};
 use std::path::PathBuf;
 
 /// Plain-data description of a worker's backend (crosses threads; the
@@ -21,8 +22,16 @@ pub enum WorkerSpec {
     /// Pure-rust CPU stripe engine. `sparse_threshold` is the
     /// row-density cut the sparse engine classifies its
     /// `rows_sparse`/`rows_dense` counters against (ignored by the
-    /// other engines).
-    Cpu { engine: EngineKind, block_k: usize, sparse_threshold: f64 },
+    /// other engines). `cpu_features` picks the SIMD kernel path —
+    /// `Auto` resolves by runtime detection at worker construction; an
+    /// explicit unavailable ISA fails the build with
+    /// `Error::Unsupported`.
+    Cpu {
+        engine: EngineKind,
+        block_k: usize,
+        sparse_threshold: f64,
+        cpu_features: CpuFeatures,
+    },
     /// AOT artifact via PJRT; `engine` selects the artifact flavor
     /// (e.g. "pallas_tiled", "jnp"), `resident` keeps accumulators
     /// device-side between batches.
@@ -65,11 +74,18 @@ impl<R: XlaReal> Worker<R> {
     ) -> Result<Self> {
         validate_spec_metric(spec, metric)?;
         match spec {
-            WorkerSpec::Cpu { engine, block_k, sparse_threshold } => Ok(Worker::Cpu {
-                engine: make_engine_with::<R>(*engine, *block_k, *sparse_threshold),
-                metric,
-                block: StripeBlock::new(padded_n, start, count),
-            }),
+            WorkerSpec::Cpu { engine, block_k, sparse_threshold, cpu_features } => {
+                Ok(Worker::Cpu {
+                    engine: make_engine_with::<R>(
+                        *engine,
+                        *block_k,
+                        *sparse_threshold,
+                        simd::resolve(*cpu_features)?,
+                    ),
+                    metric,
+                    block: StripeBlock::new(padded_n, start, count),
+                })
+            }
             WorkerSpec::Pjrt { engine, resident, artifacts_dir } => {
                 let runtime = Box::new(Runtime::open(artifacts_dir)?);
                 let dtype = if R::BYTES == 4 { "float32" } else { "float64" };
@@ -180,9 +196,15 @@ mod tests {
     use crate::synth::SynthSpec;
     use crate::unifrac::{make_engine, DEFAULT_SPARSE_THRESHOLD};
 
-    /// Test shorthand: a CPU worker spec with the default threshold.
+    /// Test shorthand: a CPU worker spec with the default threshold and
+    /// auto SIMD dispatch.
     fn cpu(engine: EngineKind, block_k: usize) -> WorkerSpec {
-        WorkerSpec::Cpu { engine, block_k, sparse_threshold: DEFAULT_SPARSE_THRESHOLD }
+        WorkerSpec::Cpu {
+            engine,
+            block_k,
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+            cpu_features: CpuFeatures::Auto,
+        }
     }
 
     #[test]
@@ -278,6 +300,23 @@ mod tests {
         let (_, stats) = worker.finish().unwrap();
         assert!(stats.packed_words > 0);
         assert!(stats.lut_builds > 0);
+    }
+
+    #[test]
+    fn unavailable_isa_rejected_at_build() {
+        #[cfg(target_arch = "x86_64")]
+        let unavailable = CpuFeatures::Neon;
+        #[cfg(not(target_arch = "x86_64"))]
+        let unavailable = CpuFeatures::Avx2;
+        let spec = WorkerSpec::Cpu {
+            engine: EngineKind::Tiled,
+            block_k: 8,
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+            cpu_features: unavailable,
+        };
+        let err = Worker::<f64>::build(&spec, Metric::WeightedNormalized, 12, 0, 2)
+            .expect_err("unavailable ISA must fail the worker build");
+        assert!(matches!(err, Error::Unsupported(_)), "got {err:?}");
     }
 
     #[test]

@@ -31,6 +31,7 @@
 
 use super::engines::EngineStats;
 use super::metric::Metric;
+use super::simd::{self, AVec, KernelPath};
 use crate::embed::EmbBatch;
 use crate::matrix::StripeBlock;
 use crate::util::Real;
@@ -58,10 +59,12 @@ pub struct PackedBatch<R: Real> {
     filled: usize,
     capacity: usize,
     n_groups: usize,
-    words: Vec<u64>,
+    // words + luts are 64-byte aligned: the AVX2 kernel streams the
+    // word rows with 256-bit loads and gathers from the LUT blocks
+    words: AVec<u64>,
     /// Raw branch lengths (f64 — LUTs are built from these in `R`).
     lengths: Vec<f64>,
-    luts: Vec<R>,
+    luts: AVec<R>,
     luts_built: bool,
 }
 
@@ -75,9 +78,9 @@ impl<R: Real> PackedBatch<R> {
             filled: 0,
             capacity,
             n_groups,
-            words: vec![0; n_groups * 2 * n_samples],
+            words: AVec::with_len(n_groups * 2 * n_samples, 0),
             lengths: vec![0.0; capacity],
-            luts: vec![R::ZERO; n_groups * LANES * LUT_SIZE],
+            luts: AVec::with_len(n_groups * LANES * LUT_SIZE, R::ZERO),
             luts_built: false,
         }
     }
@@ -129,12 +132,19 @@ impl<R: Real> PackedBatch<R> {
     /// Re-pack an existing float presence batch (the [`PackedEngine`]
     /// path: scalar batches arrive over the exec broadcast and are
     /// packed worker-side). The batch must hold 0/1 presence rows.
+    ///
+    /// When the incoming batch exceeds the current capacity the packed
+    /// buffers are rebuilt once at **exactly** the incoming row count —
+    /// no incremental doubling, no over-allocation (ISSUE-6 satellite
+    /// fix; the old code asserted instead of growing).
     pub fn pack_from(&mut self, batch: &EmbBatch<R>) {
         assert_eq!(
             self.n_samples, batch.n_samples,
             "packed/scalar sample-chunk width mismatch"
         );
-        assert!(batch.filled <= self.capacity, "packed batch too small");
+        if batch.filled > self.capacity {
+            *self = Self::new(self.n_samples, batch.filled);
+        }
         self.reset();
         for (row, len) in batch.rows() {
             self.push_presence_bits(
@@ -198,13 +208,55 @@ impl<R: Real> PackedBatch<R> {
     /// Each (stripe, sample) accumulator cell is written once per batch
     /// — multi-group batches fold their groups in registers first, the
     /// same discipline the scalar `Batched`/`Tiled` stages restored.
+    ///
+    /// This entry point is the **scalar reference**; see
+    /// [`Self::apply_unweighted_with`] for the SIMD-dispatched variant.
     pub fn apply_unweighted(&self, block: &mut StripeBlock<R>) {
+        self.apply_unweighted_with(KernelPath::Scalar, block);
+    }
+
+    /// As [`Self::apply_unweighted`], folding through the vector gather
+    /// kernel when `path` (from `simd::resolve`/`simd::auto_path` on
+    /// this host) supports it. Today that is AVX2 only — AArch64 has no
+    /// vector gather, so NEON degrades to the scalar fold here (see
+    /// `simd::packed_effective`). Bit-identical to the scalar path.
+    pub fn apply_unweighted_with(&self, path: KernelPath, block: &mut StripeBlock<R>) {
         assert!(self.luts_built, "call build_luts() before apply_unweighted()");
         let n = block.n_samples();
         assert_eq!(self.n_samples, n, "batch/block width mismatch");
         let start = block.start();
         let two_n = 2 * n;
         let groups = self.groups_used();
+        if simd::packed_effective::<R>(path) != KernelPath::Scalar {
+            let eff = simd::packed_effective::<R>(path);
+            let luts = &self.luts[..groups * LANES * LUT_SIZE];
+            let words = &self.words[..groups * two_n];
+            for s_local in 0..block.n_stripes() {
+                let off = start + s_local + 1;
+                let (num_row, den_row) = block.rows_mut(s_local);
+                let ran = simd::packed_fold(eff, luts, words, two_n, groups, off, num_row, den_row);
+                debug_assert!(ran, "packed_effective promised a vector kernel");
+                if !ran {
+                    // defensive scalar fallback for this row (unreachable
+                    // when `eff` came from packed_effective)
+                    for k in 0..n {
+                        let mut fn_ = R::ZERO;
+                        let mut fd = R::ZERO;
+                        for g in 0..groups {
+                            let lut = self.lut_group(g);
+                            let base = g * two_n;
+                            let wu = self.words[base + k];
+                            let wv = self.words[base + k + off];
+                            fn_ += fold_word(lut, wu ^ wv);
+                            fd += fold_word(lut, wu | wv);
+                        }
+                        num_row[k] += fn_;
+                        den_row[k] += fd;
+                    }
+                }
+            }
+            return;
+        }
         if groups == 1 {
             // common case (batch capacity <= 64): one word group, fully
             // zipped sweep — iterators elide the bounds checks (same
@@ -268,6 +320,11 @@ fn fold_word<R: Real>(lut: &[R; LANES * LUT_SIZE], w: u64) -> R {
 /// `apply_prepared_packed` reuses the scratch per block. The plain
 /// `apply_packed` stays stateless (pack + fold) for direct callers.
 pub struct PackedEngine<R: Real> {
+    /// Resolved SIMD kernel path (fixed at construction).
+    path: KernelPath,
+    /// `KernelPath::as_code()` of the path the last fold executed
+    /// (drained by `drain_stats`).
+    used: AtomicU64,
     scratch: Mutex<PackedScratch<R>>,
     packed_words: AtomicU64,
     lut_builds: AtomicU64,
@@ -286,8 +343,19 @@ struct PackedScratch<R: Real> {
 }
 
 impl<R: Real> PackedEngine<R> {
+    /// Engine on the scalar reference fold — direct construction is the
+    /// reference configuration; `make_engine_with` passes the resolved
+    /// path via [`Self::with_path`].
     pub fn new() -> Self {
+        Self::with_path(KernelPath::Scalar)
+    }
+
+    /// Engine pinned to an explicit kernel path (which must have come
+    /// from `simd::resolve`/`simd::auto_path` on this host).
+    pub fn with_path(path: KernelPath) -> Self {
         Self {
+            path,
+            used: AtomicU64::new(KernelPath::Scalar.as_code()),
             scratch: Mutex::new(PackedScratch { packed: None, prepared: false, src: 0 }),
             packed_words: AtomicU64::new(0),
             lut_builds: AtomicU64::new(0),
@@ -356,11 +424,12 @@ impl<R: Real> PackedEngine<R> {
             self.repack(&mut guard, batch);
             guard.prepared = false;
         }
+        self.used.store(simd::packed_effective::<R>(self.path).as_code(), Ordering::Relaxed);
         guard
             .packed
             .as_ref()
             .expect("scratch packed above")
-            .apply_unweighted(block);
+            .apply_unweighted_with(self.path, block);
     }
 
     /// Stateless fold: pack + LUT-build + kernel in one call.
@@ -372,11 +441,12 @@ impl<R: Real> PackedEngine<R> {
         let mut guard = self.scratch.lock().expect("packed scratch poisoned");
         self.repack(&mut guard, batch);
         guard.prepared = false;
+        self.used.store(simd::packed_effective::<R>(self.path).as_code(), Ordering::Relaxed);
         guard
             .packed
             .as_ref()
             .expect("scratch packed above")
-            .apply_unweighted(block);
+            .apply_unweighted_with(self.path, block);
     }
 
     /// Drain the accumulated work counters (named distinctly from the
@@ -385,6 +455,7 @@ impl<R: Real> PackedEngine<R> {
         EngineStats {
             packed_words: self.packed_words.swap(0, Ordering::Relaxed),
             lut_builds: self.lut_builds.swap(0, Ordering::Relaxed),
+            kernel_path: KernelPath::from_code(self.used.swap(0, Ordering::Relaxed)),
             ..EngineStats::default()
         }
     }
@@ -550,5 +621,49 @@ mod tests {
         let b = presence_batch(8, 4, 1);
         let mut blk = StripeBlock::new(8, 0, 1);
         eng.apply_packed(Metric::WeightedNormalized, &b, &mut blk);
+    }
+
+    #[test]
+    fn pack_from_grows_to_exact_capacity() {
+        // ISSUE-6 satellite: an undersized packed buffer must grow in
+        // one jump to exactly the incoming row count (the old code
+        // asserted "packed batch too small")
+        let n = 8;
+        let b = presence_batch(n, 70, 5);
+        let mut p = PackedBatch::<f64>::new(n, 1);
+        p.pack_from(&b);
+        assert_eq!(p.capacity(), 70, "capacity must match the batch exactly");
+        assert_eq!(p.filled(), 70);
+        p.build_luts();
+        let mut got = StripeBlock::new(n, 0, total(n));
+        p.apply_unweighted(&mut got);
+        let mut q = PackedBatch::<f64>::new(n, 70);
+        q.pack_from(&b);
+        q.build_luts();
+        let mut want = StripeBlock::new(n, 0, total(n));
+        q.apply_unweighted(&mut want);
+        assert!(want.max_abs_diff(&got) < 1e-15);
+    }
+
+    #[test]
+    fn vector_path_matches_scalar_and_reports() {
+        // multi-group batch (70 rows -> 2 word groups) through the
+        // auto-resolved path vs the scalar reference engine
+        let auto = simd::auto_path();
+        let n = 19; // odd width exercises the gather-loop tail
+        let batch = presence_batch(n, 70, 123);
+        let eng = PackedEngine::<f64>::with_path(auto);
+        let mut got = StripeBlock::new(n, 0, total(n));
+        eng.apply_packed(Metric::Unweighted, &batch, &mut got);
+        let reference = PackedEngine::<f64>::new();
+        let mut want = StripeBlock::new(n, 0, total(n));
+        reference.apply_packed(Metric::Unweighted, &batch, &mut want);
+        assert!(
+            want.max_abs_diff(&got) < 1e-12,
+            "vector/scalar packed diff {}",
+            want.max_abs_diff(&got)
+        );
+        assert_eq!(eng.drain_stats().kernel_path, simd::packed_effective::<f64>(auto));
+        assert_eq!(reference.drain_stats().kernel_path, KernelPath::Scalar);
     }
 }

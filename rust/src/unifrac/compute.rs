@@ -9,6 +9,7 @@
 use super::bitpack::{PackedBatch, LANES};
 use super::engines::EngineKind;
 use super::metric::Metric;
+use super::simd::{self, KernelPath};
 use crate::embed::PackedStream;
 use crate::exec::{self, DriveSpec, WorkerBuild};
 use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
@@ -31,6 +32,10 @@ pub type ComputeOptions = crate::api::JobSpec;
 pub struct ComputeReport {
     /// Name of the engine that actually ran (after auto-selection).
     pub engine: String,
+    /// SIMD kernel path the engine hot loop executed ("scalar" |
+    /// "avx2" | "neon") — "scalar" for the reference engines and for
+    /// forced-scalar runs.
+    pub kernel_path: String,
     /// Real sample count.
     pub n_samples: usize,
     /// Padded sample-chunk width the stripes were computed over.
@@ -128,6 +133,7 @@ pub fn compute_unifrac_report<R: XlaReal>(
     let (blocks, xrep): (Vec<StripeBlock<R>>, _) = exec::drive::<R>(tree, table, &spec)?;
     let mut report = ComputeReport {
         engine: engine.name().to_string(),
+        kernel_path: xrep.engine_stats.kernel_path.name().to_string(),
         n_samples: n,
         padded_n: padded,
         n_stripes: s_total,
@@ -194,6 +200,8 @@ pub(crate) struct PackedDirectStats {
     pub embeddings: usize,
     pub embed_density: f64,
     pub seconds_embed: f64,
+    /// Kernel path the packed fold executed (defaults to scalar).
+    pub kernel_path: KernelPath,
 }
 
 /// The single-threaded unweighted fast-path core: drive
@@ -213,10 +221,17 @@ pub(crate) fn packed_direct_block<R: Real>(
     count: usize,
 ) -> crate::Result<(StripeBlock<R>, PackedDirectStats)> {
     let mut stream = PackedStream::new(tree, table)?;
+    // resolve the SIMD request up front — this path bypasses the exec
+    // workers (and their resolution), so an unavailable explicit ISA
+    // must fail here with the same typed error
+    let path = simd::resolve(opts.cpu_features)?;
     // one recycled packed buffer — the pool idiom at one bit per entry
     let mut packed = PackedBatch::<R>::new(padded, opts.batch_capacity.max(1));
     let mut block = StripeBlock::<R>::new(padded, start, count);
-    let mut stats = PackedDirectStats::default();
+    let mut stats = PackedDirectStats {
+        kernel_path: simd::packed_effective::<R>(path),
+        ..Default::default()
+    };
     loop {
         packed.reset();
         let t1 = std::time::Instant::now();
@@ -228,7 +243,7 @@ pub(crate) fn packed_direct_block<R: Real>(
         stats.batches += 1;
         stats.packed_words += packed.words_used() as u64;
         stats.lut_builds += (packed.groups_used() * LANES) as u64;
-        packed.apply_unweighted(&mut block);
+        packed.apply_unweighted_with(path, &mut block);
     }
     stats.embeddings = stream.produced();
     stats.embed_density = stream.observed_density();
@@ -249,6 +264,7 @@ fn compute_packed_direct<R: XlaReal>(
     let (block, stats) = packed_direct_block::<R>(tree, table, opts, padded, 0, s_total)?;
     let mut report = ComputeReport {
         engine: EngineKind::Packed.name().to_string(),
+        kernel_path: stats.kernel_path.name().to_string(),
         n_samples: table.n_samples(),
         padded_n: padded,
         n_stripes: s_total,
@@ -430,6 +446,34 @@ mod tests {
             compute_unifrac_report::<f64>(&tree, &table, &ComputeOptions::default()).unwrap();
         assert_eq!(rep.packed_words, 0);
         assert_eq!(rep.lut_builds, 0);
+    }
+
+    #[test]
+    fn kernel_path_lands_in_report_and_scalar_matches() {
+        let (tree, table) =
+            SynthSpec { n_samples: 20, n_features: 128, density: 0.1, ..Default::default() }
+                .generate();
+        let auto = simd::auto_path();
+        let opts = ComputeOptions { engine: Some(EngineKind::Tiled), ..Default::default() };
+        let (dm, rep) = compute_unifrac_report::<f64>(&tree, &table, &opts).unwrap();
+        assert_eq!(
+            rep.kernel_path,
+            simd::tile_effective::<f64>(auto, Metric::WeightedNormalized).name()
+        );
+        // pinning the scalar path must be bit-identical (the SIMD
+        // kernels preserve the scalar accumulation order exactly)
+        let sopts = ComputeOptions {
+            engine: Some(EngineKind::Tiled),
+            cpu_features: crate::unifrac::CpuFeatures::Scalar,
+            ..Default::default()
+        };
+        let (sdm, srep) = compute_unifrac_report::<f64>(&tree, &table, &sopts).unwrap();
+        assert_eq!(srep.kernel_path, "scalar");
+        assert_eq!(dm.max_abs_diff(&sdm), 0.0);
+        // the packed direct fast path reports its own effective path
+        let popts = ComputeOptions { metric: Metric::Unweighted, ..Default::default() };
+        let (_, prep) = compute_unifrac_report::<f64>(&tree, &table, &popts).unwrap();
+        assert_eq!(prep.kernel_path, simd::packed_effective::<f64>(auto).name());
     }
 
     #[test]

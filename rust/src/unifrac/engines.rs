@@ -25,10 +25,12 @@
 
 use super::bitpack::PackedEngine;
 use super::metric::{Metric, MetricOps};
+use super::simd::{self, AVec, KernelPath};
 use super::sparse::{SparseEngine, DEFAULT_SPARSE_THRESHOLD};
 use crate::embed::EmbBatch;
 use crate::matrix::StripeBlock;
 use crate::util::Real;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Work counters an engine accumulates across `apply` calls (surfaced
@@ -53,6 +55,10 @@ pub struct EngineStats {
     pub rows_sparse: u64,
     /// Rows at or above the sparse threshold.
     pub rows_dense: u64,
+    /// The SIMD kernel path the engine's hot loop actually executed
+    /// since the last drain (`Scalar` when the engine ran the reference
+    /// loops — or never ran).
+    pub kernel_path: KernelPath,
 }
 
 impl EngineStats {
@@ -65,6 +71,11 @@ impl EngineStats {
         self.csr_cells += other.csr_cells;
         self.rows_sparse += other.rows_sparse;
         self.rows_dense += other.rows_dense;
+        // workers share one resolved path, so any non-scalar report is
+        // *the* vector path of the run
+        if other.kernel_path != KernelPath::Scalar {
+            self.kernel_path = other.kernel_path;
+        }
     }
 
     /// Observed mean embedding-row density over everything the sparse
@@ -242,29 +253,37 @@ impl std::str::FromStr for EngineKind {
     }
 }
 
-/// Build an engine. `block_k` applies to `Tiled` (the paper's
-/// `step_size`; must divide nothing in particular — remainders handled).
-/// The sparse engine classifies rows against the default threshold; use
-/// [`make_engine_with`] to pass the configured `--sparse-threshold`.
+/// Build an engine on the host's auto-resolved SIMD kernel path.
+/// `block_k` applies to `Tiled` (the paper's `step_size`; must divide
+/// nothing in particular — remainders handled). The sparse engine
+/// classifies rows against the default threshold; use
+/// [`make_engine_with`] to pass the configured `--sparse-threshold`
+/// and an explicit kernel path.
 pub fn make_engine<R: Real>(kind: EngineKind, block_k: usize) -> Box<dyn StripeEngine<R>> {
-    make_engine_with(kind, block_k, DEFAULT_SPARSE_THRESHOLD)
+    make_engine_with(kind, block_k, DEFAULT_SPARSE_THRESHOLD, simd::auto_path())
 }
 
 /// As [`make_engine`], with an explicit sparse-engine row-classification
-/// threshold so the `rows_sparse`/`rows_dense` counters match the
-/// configured auto-selection cut. Other engines ignore it.
+/// threshold (so the `rows_sparse`/`rows_dense` counters match the
+/// configured auto-selection cut) and an explicit SIMD kernel path from
+/// [`simd::resolve`] — the dispatch decision is made exactly once, here
+/// at construction. Scalar-stage engines (`Original`/`Unified`/
+/// `Batched`) ignore the path: they *are* the paper's pre-SIMD stages.
 pub fn make_engine_with<R: Real>(
     kind: EngineKind,
     block_k: usize,
     sparse_threshold: f64,
+    path: KernelPath,
 ) -> Box<dyn StripeEngine<R>> {
     match kind {
         EngineKind::Original => Box::new(OriginalEngine),
         EngineKind::Unified => Box::new(UnifiedEngine),
         EngineKind::Batched => Box::new(BatchedEngine),
-        EngineKind::Tiled => Box::new(TiledEngine::<R>::new(block_k)),
-        EngineKind::Packed => Box::new(PackedEngine::<R>::new()),
-        EngineKind::Sparse => Box::new(SparseEngine::<R>::with_threshold(sparse_threshold)),
+        EngineKind::Tiled => Box::new(TiledEngine::<R>::with_path(block_k, path)),
+        EngineKind::Packed => Box::new(PackedEngine::<R>::with_path(path)),
+        EngineKind::Sparse => {
+            Box::new(SparseEngine::<R>::with_threshold_path(sparse_threshold, path))
+        }
     }
 }
 
@@ -474,12 +493,19 @@ impl BatchedEngine {
 pub struct TiledEngine<R: Real> {
     /// Sample-axis tile width (the paper's `step_size`).
     pub block_k: usize,
+    /// Resolved SIMD kernel path (fixed at construction).
+    path: KernelPath,
+    /// `KernelPath::as_code()` of the path the last `apply` actually
+    /// executed (drained by `take_stats`).
+    used: AtomicU64,
     scratch: Mutex<TileScratch<R>>,
 }
 
-struct TileScratch<R> {
-    acc_n: Vec<R>,
-    acc_d: Vec<R>,
+struct TileScratch<R: Real> {
+    // 64-byte aligned so the AVX2/NEON tile kernels load the
+    // accumulators without straddling cache lines
+    acc_n: AVec<R>,
+    acc_d: AVec<R>,
 }
 
 impl<R: Real> TiledEngine<R> {
@@ -488,11 +514,22 @@ impl<R: Real> TiledEngine<R> {
     /// falls back to the historical default of 8.
     pub const DEFAULT_BLOCK_K: usize = 8;
 
-    /// Build a tiled engine with the given tile width (0 = auto).
+    /// Build a tiled engine with the given tile width (0 = auto) on the
+    /// scalar reference path — direct construction is the reference
+    /// configuration; [`make_engine_with`] passes the resolved path.
     pub fn new(block_k: usize) -> Self {
+        Self::with_path(block_k, KernelPath::Scalar)
+    }
+
+    /// As [`Self::new`], pinned to an explicit kernel path (which must
+    /// have come from [`simd::resolve`]/[`simd::auto_path`] on this
+    /// host).
+    pub fn with_path(block_k: usize, path: KernelPath) -> Self {
         Self {
             block_k: if block_k == 0 { Self::DEFAULT_BLOCK_K } else { block_k },
-            scratch: Mutex::new(TileScratch { acc_n: Vec::new(), acc_d: Vec::new() }),
+            path,
+            used: AtomicU64::new(KernelPath::Scalar.as_code()),
+            scratch: Mutex::new(TileScratch { acc_n: AVec::new(), acc_d: AVec::new() }),
         }
     }
 }
@@ -503,7 +540,20 @@ impl<R: Real> StripeEngine<R> for TiledEngine<R> {
     }
 
     fn apply(&self, metric: Metric, batch: &EmbBatch<R>, block: &mut StripeBlock<R>) {
-        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, batch, block))
+        let eff = simd::tile_effective::<R>(self.path, metric);
+        self.used.store(eff.as_code(), Ordering::Relaxed);
+        if eff == KernelPath::Scalar {
+            crate::with_metric_ops!(metric, ops, self.apply_ops(ops, batch, block))
+        } else {
+            self.apply_simd(eff, metric, batch, block)
+        }
+    }
+
+    fn take_stats(&self) -> EngineStats {
+        EngineStats {
+            kernel_path: KernelPath::from_code(self.used.swap(0, Ordering::Relaxed)),
+            ..EngineStats::default()
+        }
     }
 }
 
@@ -550,6 +600,80 @@ impl<R: Real> TiledEngine<R> {
                         let (fn_, fd) = metric.terms(uu, vv);
                         *an += fn_ * len;
                         *ad += fd * len;
+                    }
+                }
+                let (num_row, den_row) = block.rows_mut(s_local);
+                for (((nr, dr), &an), &ad) in num_row[k0..k0 + width]
+                    .iter_mut()
+                    .zip(den_row[k0..k0 + width].iter_mut())
+                    .zip(&acc_n[..width])
+                    .zip(&acc_d[..width])
+                {
+                    *nr += an;
+                    *dr += ad;
+                }
+            }
+            k0 += width;
+        }
+    }
+
+    /// The same tiling skeleton as `apply_ops`, with the per-row inner
+    /// fold handed to the vector kernel for `path`. The kernels are
+    /// bit-identical to the scalar loops by construction (same fold
+    /// order, no FMA), so this is a pure throughput change.
+    fn apply_simd(
+        &self,
+        path: KernelPath,
+        metric: Metric,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) {
+        let n = block.n_samples();
+        assert_eq!(batch.n_samples, n, "batch/block width mismatch");
+        let start = block.start();
+        let bk = self.block_k.min(n);
+        let mut scratch = self.scratch.lock().expect("tile scratch poisoned");
+        let TileScratch { acc_n, acc_d } = &mut *scratch;
+        if acc_n.len() < bk {
+            acc_n.resize(bk, R::ZERO);
+            acc_d.resize(bk, R::ZERO);
+        }
+        let mut k0 = 0usize;
+        while k0 < n {
+            let width = bk.min(n - k0);
+            for s_local in 0..block.n_stripes() {
+                let off = start + s_local + 1;
+                for a in acc_n[..width].iter_mut() {
+                    *a = R::ZERO;
+                }
+                for a in acc_d[..width].iter_mut() {
+                    *a = R::ZERO;
+                }
+                for (emb, len) in batch.rows() {
+                    let u = &emb[k0..k0 + width];
+                    let v = &emb[k0 + off..k0 + off + width];
+                    let ran = simd::tile_accumulate(
+                        path,
+                        metric,
+                        u,
+                        v,
+                        len,
+                        &mut acc_n[..width],
+                        &mut acc_d[..width],
+                    );
+                    if !ran {
+                        // unreachable when `path` came from tile_effective,
+                        // but keep a correct fallback rather than a panic
+                        for (((an, ad), &uu), &vv) in acc_n[..width]
+                            .iter_mut()
+                            .zip(acc_d[..width].iter_mut())
+                            .zip(u)
+                            .zip(v)
+                        {
+                            let (fn_, fd) = metric.terms(uu, vv);
+                            *an += fn_ * len;
+                            *ad += fd * len;
+                        }
                     }
                 }
                 let (num_row, den_row) = block.rows_mut(s_local);
@@ -833,11 +957,56 @@ mod tests {
 
     #[test]
     fn scalar_engines_report_zero_stats() {
-        let eng = make_engine::<f64>(EngineKind::Tiled, 8);
+        // pinned to the scalar reference path, the tiled engine's stats
+        // stay all-default (counters zero, kernel_path scalar)
+        let eng = make_engine_with::<f64>(
+            EngineKind::Tiled,
+            8,
+            DEFAULT_SPARSE_THRESHOLD,
+            KernelPath::Scalar,
+        );
         let batch = random_batch(8, 3, 4, false);
         let mut blk = StripeBlock::<f64>::new(8, 0, 2);
         eng.apply(Metric::WeightedNormalized, &batch, &mut blk);
         assert_eq!(eng.take_stats(), EngineStats::default());
+        // the paper's pre-SIMD stages ignore the path entirely
+        for kind in [EngineKind::Original, EngineKind::Unified, EngineKind::Batched] {
+            let eng = make_engine::<f64>(kind, 8);
+            let mut blk = StripeBlock::<f64>::new(8, 0, 2);
+            eng.apply(Metric::WeightedNormalized, &batch, &mut blk);
+            assert_eq!(eng.take_stats(), EngineStats::default(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn tiled_reports_and_drains_kernel_path() {
+        let auto = simd::auto_path();
+        let eng =
+            make_engine_with::<f64>(EngineKind::Tiled, 8, DEFAULT_SPARSE_THRESHOLD, auto);
+        let batch = random_batch(16, 3, 4, false);
+        let mut blk = StripeBlock::<f64>::new(16, 0, 4);
+        eng.apply(Metric::WeightedNormalized, &batch, &mut blk);
+        let stats = eng.take_stats();
+        assert_eq!(
+            stats.kernel_path,
+            simd::tile_effective::<f64>(auto, Metric::WeightedNormalized)
+        );
+        // draining resets the path (EngineStats::default semantics hold
+        // post-drain, as the exec-layer counter tests assume)
+        assert_eq!(eng.take_stats(), EngineStats::default());
+        // generalized has no vector tile kernel: the engine must record
+        // that it fell back to scalar
+        let mut blk = StripeBlock::<f64>::new(16, 0, 4);
+        eng.apply(Metric::Generalized(0.5), &batch, &mut blk);
+        assert_eq!(eng.take_stats().kernel_path, KernelPath::Scalar);
+    }
+
+    #[test]
+    fn stats_absorb_prefers_vector_path() {
+        let mut total = EngineStats::default();
+        total.absorb(EngineStats { kernel_path: KernelPath::Avx2, ..EngineStats::default() });
+        total.absorb(EngineStats::default());
+        assert_eq!(total.kernel_path, KernelPath::Avx2);
     }
 
     #[test]

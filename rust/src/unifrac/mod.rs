@@ -12,6 +12,7 @@ pub mod engines;
 pub mod metric;
 #[allow(missing_docs)]
 pub mod naive;
+pub mod simd;
 #[allow(missing_docs)]
 pub mod sparse;
 
@@ -20,4 +21,5 @@ pub use compute::{compute_unifrac, compute_unifrac_report, ComputeOptions, Compu
 pub use engines::{make_engine, make_engine_with, EngineKind, EngineStats, StripeEngine};
 pub use metric::Metric;
 pub use naive::compute_unifrac_naive;
+pub use simd::{CpuFeatures, KernelPath, FORCE_SCALAR_ENV};
 pub use sparse::{CsrBatch, SparseEngine, DEFAULT_SPARSE_THRESHOLD};

@@ -1,0 +1,212 @@
+//! 64-byte-aligned scratch buffers for the vector kernels.
+//!
+//! `Vec<f32>`/`Vec<f64>` only guarantee element alignment (4/8 bytes),
+//! so a 256-bit vector load of engine scratch may straddle a cache
+//! line. [`AVec`] is a minimal `Vec`-alike whose allocation is always
+//! aligned to [`SIMD_ALIGN`] — one cache line, and enough for any
+//! current or future (AVX-512) vector width. The engines use it for the
+//! tiled accumulator tile, the sparse single-sided fold tables, and the
+//! packed word/LUT buffers (the ISSUE-6 "per-apply scratch alignment"
+//! satellite fix).
+//!
+//! Only the operations the engines need exist: exact-capacity `resize`
+//! (no incremental doubling — capacity jumps straight to the requested
+//! length), `clear`, and full slice access through `Deref`/`DerefMut`.
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::ptr::NonNull;
+
+/// Allocation alignment of [`AVec`]: one x86 cache line, and a multiple
+/// of every vector width the kernel layer dispatches to (32-byte AVX2,
+/// 16-byte NEON).
+pub const SIMD_ALIGN: usize = 64;
+
+/// A fixed-alignment growable buffer of `Copy` elements.
+///
+/// Capacity grows to exactly the requested length (the engines size
+/// their scratch once per shape and then recycle it), and the contents
+/// behave like `Vec::resize`: the existing prefix is preserved, new
+/// tail elements take the fill value.
+pub struct AVec<T: Copy> {
+    ptr: NonNull<T>,
+    cap: usize,
+    len: usize,
+}
+
+impl<T: Copy> AVec<T> {
+    /// An empty buffer; allocates nothing until the first `resize`.
+    pub const fn new() -> Self {
+        Self { ptr: NonNull::dangling(), cap: 0, len: 0 }
+    }
+
+    /// A buffer of `len` copies of `fill`, 64-byte aligned.
+    pub fn with_len(len: usize, fill: T) -> Self {
+        let mut v = Self::new();
+        v.resize(len, fill);
+        v
+    }
+
+    /// Elements currently live (the `Deref` slice length).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer holds no live elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocated capacity in elements.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(
+            cap * std::mem::size_of::<T>(),
+            SIMD_ALIGN.max(std::mem::align_of::<T>()),
+        )
+        .expect("aligned scratch layout")
+    }
+
+    /// Resize to `new_len`, filling any new tail elements with `fill`.
+    /// Growth reallocates to **exactly** `new_len` (one jump, no
+    /// doubling) and preserves the existing prefix; shrinking just drops
+    /// the tail without reallocating.
+    pub fn resize(&mut self, new_len: usize, fill: T) {
+        if new_len > self.cap {
+            // new_len > cap >= 0, so the layout size is nonzero
+            let layout = Self::layout(new_len);
+            let raw = unsafe { alloc(layout) } as *mut T;
+            let Some(ptr) = NonNull::new(raw) else {
+                handle_alloc_error(layout);
+            };
+            // SAFETY: the old prefix (possibly empty) fits the new block
+            unsafe { std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.len) };
+            if self.cap > 0 {
+                // SAFETY: allocated above with the same layout recipe
+                unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+            }
+            self.ptr = ptr;
+            self.cap = new_len;
+        }
+        for i in self.len..new_len {
+            // SAFETY: i < new_len <= cap
+            unsafe { self.ptr.as_ptr().add(i).write(fill) };
+        }
+        self.len = new_len;
+    }
+
+    /// Drop all live elements (capacity is retained for recycling).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+impl<T: Copy> Drop for AVec<T> {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: allocated with this exact layout; T: Copy needs no drop
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+}
+
+impl<T: Copy> std::ops::Deref for AVec<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        // SAFETY: ptr is dangling-but-aligned only when len == 0
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> std::ops::DerefMut for AVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: as Deref, and &mut self guarantees uniqueness
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> Clone for AVec<T> {
+    fn clone(&self) -> Self {
+        let mut v = Self::new();
+        if self.len > 0 {
+            v.resize(self.len, self[0]);
+            v.copy_from_slice(self);
+        }
+        v
+    }
+}
+
+impl<T: Copy> Default for AVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+// SAFETY: AVec owns its allocation exclusively; T: Copy has no interior
+// mutability of its own, so the usual container rules apply.
+unsafe impl<T: Copy + Send> Send for AVec<T> {}
+unsafe impl<T: Copy + Sync> Sync for AVec<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_is_simd_aligned() {
+        for len in [1usize, 3, 64, 1000] {
+            let v = AVec::<f64>::with_len(len, 0.0);
+            assert_eq!(v.as_ptr() as usize % SIMD_ALIGN, 0, "len {len}");
+            assert_eq!(v.len(), len);
+            assert_eq!(v.capacity(), len, "capacity must be exact, not doubled");
+        }
+        let w = AVec::<u64>::with_len(7, 0);
+        assert_eq!(w.as_ptr() as usize % SIMD_ALIGN, 0);
+    }
+
+    #[test]
+    fn resize_preserves_prefix_and_fills_tail() {
+        let mut v = AVec::<f64>::with_len(3, 1.5);
+        v[1] = 9.0;
+        v.resize(6, 2.5);
+        assert_eq!(&*v, &[1.5, 9.0, 1.5, 2.5, 2.5, 2.5]);
+        // shrink keeps capacity, clear keeps capacity
+        v.resize(2, 0.0);
+        assert_eq!(&*v, &[1.5, 9.0]);
+        assert_eq!(v.capacity(), 6);
+        v.clear();
+        assert!(v.is_empty());
+        assert_eq!(v.capacity(), 6);
+        // regrow within capacity fills from the shrunk length
+        v.resize(3, 7.0);
+        assert_eq!(&*v, &[7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn clone_and_debug_match_slice_semantics() {
+        let mut v = AVec::<f32>::with_len(4, 0.25);
+        v[3] = -1.0;
+        let c = v.clone();
+        assert_eq!(&*c, &*v);
+        assert_eq!(c.as_ptr() as usize % SIMD_ALIGN, 0);
+        assert_eq!(format!("{c:?}"), format!("{:?}", &*v));
+        let empty = AVec::<f32>::new();
+        assert!(empty.clone().is_empty());
+        assert_eq!(AVec::<f32>::default().len(), 0);
+    }
+
+    #[test]
+    fn empty_deref_is_valid() {
+        let v = AVec::<f64>::new();
+        assert_eq!(v.iter().count(), 0);
+        assert!(v.first().is_none());
+    }
+}

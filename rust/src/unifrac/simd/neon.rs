@@ -1,0 +1,248 @@
+//! Hand-written NEON kernels for the dense tile and shifted-add loops.
+//!
+//! Same bit-identity contract as the AVX2 file: lane-per-column
+//! mapping, left-to-right fold order, separate multiply and add, and
+//! `vmaxq` only on clean non-negative presence values. The packed
+//! byte-LUT fold has no NEON variant — AArch64 lacks a vector gather,
+//! so `KernelPath::Neon` falls back to the scalar packed path (see
+//! `packed_effective` in the dispatch module).
+//!
+//! Lane widths: 2 columns per iteration for `f64` (`float64x2_t`),
+//! 4 for `f32` (`float32x4_t`), with scalar tails.
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+/// Unweighted tile fold, f64: `acc_n += |u-v|*len`, `acc_d += max(u,v)*len`.
+///
+/// # Safety
+/// Caller must ensure NEON is available and that `u`, `v`, `acc_n`,
+/// `acc_d` all have length >= `acc_n.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_unweighted_f64(u: &[f64], v: &[f64], len: f64, acc_n: &mut [f64], acc_d: &mut [f64]) {
+    let w = acc_n.len();
+    let lv = vdupq_n_f64(len);
+    let mut k = 0;
+    while k + 2 <= w {
+        let uu = vld1q_f64(u.as_ptr().add(k));
+        let vv = vld1q_f64(v.as_ptr().add(k));
+        let fn_ = vabsq_f64(vsubq_f64(uu, vv));
+        let fd = vmaxq_f64(uu, vv);
+        let an = vld1q_f64(acc_n.as_ptr().add(k));
+        let ad = vld1q_f64(acc_d.as_ptr().add(k));
+        vst1q_f64(acc_n.as_mut_ptr().add(k), vaddq_f64(an, vmulq_f64(fn_, lv)));
+        vst1q_f64(acc_d.as_mut_ptr().add(k), vaddq_f64(ad, vmulq_f64(fd, lv)));
+        k += 2;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += uu.max(vv) * len;
+        k += 1;
+    }
+}
+
+/// Unweighted tile fold, f32 (4 columns per iteration).
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_unweighted_f32(u: &[f32], v: &[f32], len: f32, acc_n: &mut [f32], acc_d: &mut [f32]) {
+    let w = acc_n.len();
+    let lv = vdupq_n_f32(len);
+    let mut k = 0;
+    while k + 4 <= w {
+        let uu = vld1q_f32(u.as_ptr().add(k));
+        let vv = vld1q_f32(v.as_ptr().add(k));
+        let fn_ = vabsq_f32(vsubq_f32(uu, vv));
+        let fd = vmaxq_f32(uu, vv);
+        let an = vld1q_f32(acc_n.as_ptr().add(k));
+        let ad = vld1q_f32(acc_d.as_ptr().add(k));
+        vst1q_f32(acc_n.as_mut_ptr().add(k), vaddq_f32(an, vmulq_f32(fn_, lv)));
+        vst1q_f32(acc_d.as_mut_ptr().add(k), vaddq_f32(ad, vmulq_f32(fd, lv)));
+        k += 4;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += uu.max(vv) * len;
+        k += 1;
+    }
+}
+
+/// Weighted-normalized tile fold, f64: numerator `|u-v|`, denominator `u+v`.
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_wnorm_f64(u: &[f64], v: &[f64], len: f64, acc_n: &mut [f64], acc_d: &mut [f64]) {
+    let w = acc_n.len();
+    let lv = vdupq_n_f64(len);
+    let mut k = 0;
+    while k + 2 <= w {
+        let uu = vld1q_f64(u.as_ptr().add(k));
+        let vv = vld1q_f64(v.as_ptr().add(k));
+        let fn_ = vabsq_f64(vsubq_f64(uu, vv));
+        let fd = vaddq_f64(uu, vv);
+        let an = vld1q_f64(acc_n.as_ptr().add(k));
+        let ad = vld1q_f64(acc_d.as_ptr().add(k));
+        vst1q_f64(acc_n.as_mut_ptr().add(k), vaddq_f64(an, vmulq_f64(fn_, lv)));
+        vst1q_f64(acc_d.as_mut_ptr().add(k), vaddq_f64(ad, vmulq_f64(fd, lv)));
+        k += 2;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += (uu + vv) * len;
+        k += 1;
+    }
+}
+
+/// Weighted-normalized tile fold, f32.
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_wnorm_f32(u: &[f32], v: &[f32], len: f32, acc_n: &mut [f32], acc_d: &mut [f32]) {
+    let w = acc_n.len();
+    let lv = vdupq_n_f32(len);
+    let mut k = 0;
+    while k + 4 <= w {
+        let uu = vld1q_f32(u.as_ptr().add(k));
+        let vv = vld1q_f32(v.as_ptr().add(k));
+        let fn_ = vabsq_f32(vsubq_f32(uu, vv));
+        let fd = vaddq_f32(uu, vv);
+        let an = vld1q_f32(acc_n.as_ptr().add(k));
+        let ad = vld1q_f32(acc_d.as_ptr().add(k));
+        vst1q_f32(acc_n.as_mut_ptr().add(k), vaddq_f32(an, vmulq_f32(fn_, lv)));
+        vst1q_f32(acc_d.as_mut_ptr().add(k), vaddq_f32(ad, vmulq_f32(fd, lv)));
+        k += 4;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += (uu + vv) * len;
+        k += 1;
+    }
+}
+
+/// Weighted-unnormalized tile fold, f64 (denominator add of `0*len`
+/// kept for bit-identity with the scalar reference).
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_wunnorm_f64(u: &[f64], v: &[f64], len: f64, acc_n: &mut [f64], acc_d: &mut [f64]) {
+    let w = acc_n.len();
+    let lv = vdupq_n_f64(len);
+    let zero = vdupq_n_f64(0.0);
+    let mut k = 0;
+    while k + 2 <= w {
+        let uu = vld1q_f64(u.as_ptr().add(k));
+        let vv = vld1q_f64(v.as_ptr().add(k));
+        let fn_ = vabsq_f64(vsubq_f64(uu, vv));
+        let an = vld1q_f64(acc_n.as_ptr().add(k));
+        let ad = vld1q_f64(acc_d.as_ptr().add(k));
+        vst1q_f64(acc_n.as_mut_ptr().add(k), vaddq_f64(an, vmulq_f64(fn_, lv)));
+        vst1q_f64(acc_d.as_mut_ptr().add(k), vaddq_f64(ad, vmulq_f64(zero, lv)));
+        k += 2;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += 0.0 * len;
+        k += 1;
+    }
+}
+
+/// Weighted-unnormalized tile fold, f32.
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_wunnorm_f32(u: &[f32], v: &[f32], len: f32, acc_n: &mut [f32], acc_d: &mut [f32]) {
+    let w = acc_n.len();
+    let lv = vdupq_n_f32(len);
+    let zero = vdupq_n_f32(0.0);
+    let mut k = 0;
+    while k + 4 <= w {
+        let uu = vld1q_f32(u.as_ptr().add(k));
+        let vv = vld1q_f32(v.as_ptr().add(k));
+        let fn_ = vabsq_f32(vsubq_f32(uu, vv));
+        let an = vld1q_f32(acc_n.as_ptr().add(k));
+        let ad = vld1q_f32(acc_d.as_ptr().add(k));
+        vst1q_f32(acc_n.as_mut_ptr().add(k), vaddq_f32(an, vmulq_f32(fn_, lv)));
+        vst1q_f32(acc_d.as_mut_ptr().add(k), vaddq_f32(ad, vmulq_f32(zero, lv)));
+        k += 4;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += 0.0 * len;
+        k += 1;
+    }
+}
+
+/// Shifted-add fold, f64: `num[k] += a_n[k] + b_n[k]` (same for den).
+///
+/// # Safety
+/// Caller must ensure NEON is available and that all six slices have
+/// length >= `num.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn shifted_add_f64(
+    a_n: &[f64],
+    b_n: &[f64],
+    a_d: &[f64],
+    b_d: &[f64],
+    num: &mut [f64],
+    den: &mut [f64],
+) {
+    let n = num.len();
+    let mut k = 0;
+    while k + 2 <= n {
+        let tn = vaddq_f64(vld1q_f64(a_n.as_ptr().add(k)), vld1q_f64(b_n.as_ptr().add(k)));
+        let td = vaddq_f64(vld1q_f64(a_d.as_ptr().add(k)), vld1q_f64(b_d.as_ptr().add(k)));
+        let nr = vld1q_f64(num.as_ptr().add(k));
+        let dr = vld1q_f64(den.as_ptr().add(k));
+        vst1q_f64(num.as_mut_ptr().add(k), vaddq_f64(nr, tn));
+        vst1q_f64(den.as_mut_ptr().add(k), vaddq_f64(dr, td));
+        k += 2;
+    }
+    while k < n {
+        num[k] += a_n[k] + b_n[k];
+        den[k] += a_d[k] + b_d[k];
+        k += 1;
+    }
+}
+
+/// Shifted-add fold, f32 (4 columns per iteration).
+///
+/// # Safety
+/// As [`shifted_add_f64`].
+#[target_feature(enable = "neon")]
+pub unsafe fn shifted_add_f32(
+    a_n: &[f32],
+    b_n: &[f32],
+    a_d: &[f32],
+    b_d: &[f32],
+    num: &mut [f32],
+    den: &mut [f32],
+) {
+    let n = num.len();
+    let mut k = 0;
+    while k + 4 <= n {
+        let tn = vaddq_f32(vld1q_f32(a_n.as_ptr().add(k)), vld1q_f32(b_n.as_ptr().add(k)));
+        let td = vaddq_f32(vld1q_f32(a_d.as_ptr().add(k)), vld1q_f32(b_d.as_ptr().add(k)));
+        let nr = vld1q_f32(num.as_ptr().add(k));
+        let dr = vld1q_f32(den.as_ptr().add(k));
+        vst1q_f32(num.as_mut_ptr().add(k), vaddq_f32(nr, tn));
+        vst1q_f32(den.as_mut_ptr().add(k), vaddq_f32(dr, td));
+        k += 4;
+    }
+    while k < n {
+        num[k] += a_n[k] + b_n[k];
+        den[k] += a_d[k] + b_d[k];
+        k += 1;
+    }
+}

@@ -1,0 +1,451 @@
+//! Hand-written AVX2 kernels for the three hot stripe loops.
+//!
+//! Every function here is a drop-in replacement for one scalar inner
+//! loop and is written to be **bitwise identical** to it: the same
+//! operation order (per-lane left-to-right fold), separate multiply and
+//! add (no FMA contraction — intrinsics lower to plain `fmul`/`fadd`),
+//! `abs` as a sign-bit clear (exactly what `f64::abs` does), and `max`
+//! only ever applied to non-negative, NaN-free presence values where
+//! `_mm256_max_pd` and `f64::max` agree bitwise. That identity is what
+//! lets `tests/simd_equivalence.rs` hold both `f32` and `f64` to the
+//! <1e-12 bar.
+//!
+//! AVX-512 is deliberately absent: the 512-bit intrinsics are not yet
+//! stable-safe across the toolchains we target, and on many parts the
+//! license-based downclocking erases the win for these short folds.
+//! Detection still reports the avx512* bits (see `detected_features`)
+//! so the gap is visible in diagnostics.
+//!
+//! Lane layouts:
+//! * tile kernels: one lane per stripe column, 4 (`f64`) / 8 (`f32`)
+//!   columns per iteration, scalar tail for the remainder;
+//! * shifted-add: same column-per-lane mapping over the duplicated
+//!   `2N` fold tables;
+//! * packed LUT fold: 4 columns per iteration; per column-chunk the 8
+//!   shifted bytes of the XOR/OR words index 8 gathered LUT rows, and
+//!   per-group partial sums accumulate in a register before a single
+//!   store-add — mirroring the scalar `fold_word` grouping exactly.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use crate::unifrac::bitpack::{LANES, LUT_SIZE};
+
+// ---------------------------------------------------------------------------
+// Tiled dense stripe accumulation
+// ---------------------------------------------------------------------------
+
+/// Unweighted tile fold, f64: `acc_n += |u-v|*len`, `acc_d += max(u,v)*len`.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available and that `u`, `v`, `acc_n`,
+/// `acc_d` all have length >= `acc_n.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_unweighted_f64(u: &[f64], v: &[f64], len: f64, acc_n: &mut [f64], acc_d: &mut [f64]) {
+    let w = acc_n.len();
+    let lv = _mm256_set1_pd(len);
+    let sign = _mm256_set1_pd(-0.0);
+    let mut k = 0;
+    while k + 4 <= w {
+        let uu = _mm256_loadu_pd(u.as_ptr().add(k));
+        let vv = _mm256_loadu_pd(v.as_ptr().add(k));
+        let fn_ = _mm256_andnot_pd(sign, _mm256_sub_pd(uu, vv));
+        let fd = _mm256_max_pd(uu, vv);
+        let an = _mm256_loadu_pd(acc_n.as_ptr().add(k));
+        let ad = _mm256_loadu_pd(acc_d.as_ptr().add(k));
+        _mm256_storeu_pd(acc_n.as_mut_ptr().add(k), _mm256_add_pd(an, _mm256_mul_pd(fn_, lv)));
+        _mm256_storeu_pd(acc_d.as_mut_ptr().add(k), _mm256_add_pd(ad, _mm256_mul_pd(fd, lv)));
+        k += 4;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += uu.max(vv) * len;
+        k += 1;
+    }
+}
+
+/// Unweighted tile fold, f32 (8 columns per iteration).
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_unweighted_f32(u: &[f32], v: &[f32], len: f32, acc_n: &mut [f32], acc_d: &mut [f32]) {
+    let w = acc_n.len();
+    let lv = _mm256_set1_ps(len);
+    let sign = _mm256_set1_ps(-0.0);
+    let mut k = 0;
+    while k + 8 <= w {
+        let uu = _mm256_loadu_ps(u.as_ptr().add(k));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(k));
+        let fn_ = _mm256_andnot_ps(sign, _mm256_sub_ps(uu, vv));
+        let fd = _mm256_max_ps(uu, vv);
+        let an = _mm256_loadu_ps(acc_n.as_ptr().add(k));
+        let ad = _mm256_loadu_ps(acc_d.as_ptr().add(k));
+        _mm256_storeu_ps(acc_n.as_mut_ptr().add(k), _mm256_add_ps(an, _mm256_mul_ps(fn_, lv)));
+        _mm256_storeu_ps(acc_d.as_mut_ptr().add(k), _mm256_add_ps(ad, _mm256_mul_ps(fd, lv)));
+        k += 8;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += uu.max(vv) * len;
+        k += 1;
+    }
+}
+
+/// Weighted-normalized tile fold, f64: numerator `|u-v|`, denominator `u+v`.
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_wnorm_f64(u: &[f64], v: &[f64], len: f64, acc_n: &mut [f64], acc_d: &mut [f64]) {
+    let w = acc_n.len();
+    let lv = _mm256_set1_pd(len);
+    let sign = _mm256_set1_pd(-0.0);
+    let mut k = 0;
+    while k + 4 <= w {
+        let uu = _mm256_loadu_pd(u.as_ptr().add(k));
+        let vv = _mm256_loadu_pd(v.as_ptr().add(k));
+        let fn_ = _mm256_andnot_pd(sign, _mm256_sub_pd(uu, vv));
+        let fd = _mm256_add_pd(uu, vv);
+        let an = _mm256_loadu_pd(acc_n.as_ptr().add(k));
+        let ad = _mm256_loadu_pd(acc_d.as_ptr().add(k));
+        _mm256_storeu_pd(acc_n.as_mut_ptr().add(k), _mm256_add_pd(an, _mm256_mul_pd(fn_, lv)));
+        _mm256_storeu_pd(acc_d.as_mut_ptr().add(k), _mm256_add_pd(ad, _mm256_mul_pd(fd, lv)));
+        k += 4;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += (uu + vv) * len;
+        k += 1;
+    }
+}
+
+/// Weighted-normalized tile fold, f32.
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_wnorm_f32(u: &[f32], v: &[f32], len: f32, acc_n: &mut [f32], acc_d: &mut [f32]) {
+    let w = acc_n.len();
+    let lv = _mm256_set1_ps(len);
+    let sign = _mm256_set1_ps(-0.0);
+    let mut k = 0;
+    while k + 8 <= w {
+        let uu = _mm256_loadu_ps(u.as_ptr().add(k));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(k));
+        let fn_ = _mm256_andnot_ps(sign, _mm256_sub_ps(uu, vv));
+        let fd = _mm256_add_ps(uu, vv);
+        let an = _mm256_loadu_ps(acc_n.as_ptr().add(k));
+        let ad = _mm256_loadu_ps(acc_d.as_ptr().add(k));
+        _mm256_storeu_ps(acc_n.as_mut_ptr().add(k), _mm256_add_ps(an, _mm256_mul_ps(fn_, lv)));
+        _mm256_storeu_ps(acc_d.as_mut_ptr().add(k), _mm256_add_ps(ad, _mm256_mul_ps(fd, lv)));
+        k += 8;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += (uu + vv) * len;
+        k += 1;
+    }
+}
+
+/// Weighted-unnormalized tile fold, f64: the denominator term is zero,
+/// but the scalar reference still performs `acc_d += 0*len`, so this
+/// kernel mirrors that add for strict bit-identity.
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_wunnorm_f64(u: &[f64], v: &[f64], len: f64, acc_n: &mut [f64], acc_d: &mut [f64]) {
+    let w = acc_n.len();
+    let lv = _mm256_set1_pd(len);
+    let sign = _mm256_set1_pd(-0.0);
+    let zero = _mm256_setzero_pd();
+    let mut k = 0;
+    while k + 4 <= w {
+        let uu = _mm256_loadu_pd(u.as_ptr().add(k));
+        let vv = _mm256_loadu_pd(v.as_ptr().add(k));
+        let fn_ = _mm256_andnot_pd(sign, _mm256_sub_pd(uu, vv));
+        let an = _mm256_loadu_pd(acc_n.as_ptr().add(k));
+        let ad = _mm256_loadu_pd(acc_d.as_ptr().add(k));
+        _mm256_storeu_pd(acc_n.as_mut_ptr().add(k), _mm256_add_pd(an, _mm256_mul_pd(fn_, lv)));
+        _mm256_storeu_pd(acc_d.as_mut_ptr().add(k), _mm256_add_pd(ad, _mm256_mul_pd(zero, lv)));
+        k += 4;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += 0.0 * len;
+        k += 1;
+    }
+}
+
+/// Weighted-unnormalized tile fold, f32.
+///
+/// # Safety
+/// As [`tile_unweighted_f64`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_wunnorm_f32(u: &[f32], v: &[f32], len: f32, acc_n: &mut [f32], acc_d: &mut [f32]) {
+    let w = acc_n.len();
+    let lv = _mm256_set1_ps(len);
+    let sign = _mm256_set1_ps(-0.0);
+    let zero = _mm256_setzero_ps();
+    let mut k = 0;
+    while k + 8 <= w {
+        let uu = _mm256_loadu_ps(u.as_ptr().add(k));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(k));
+        let fn_ = _mm256_andnot_ps(sign, _mm256_sub_ps(uu, vv));
+        let an = _mm256_loadu_ps(acc_n.as_ptr().add(k));
+        let ad = _mm256_loadu_ps(acc_d.as_ptr().add(k));
+        _mm256_storeu_ps(acc_n.as_mut_ptr().add(k), _mm256_add_ps(an, _mm256_mul_ps(fn_, lv)));
+        _mm256_storeu_ps(acc_d.as_mut_ptr().add(k), _mm256_add_ps(ad, _mm256_mul_ps(zero, lv)));
+        k += 8;
+    }
+    while k < w {
+        let (uu, vv) = (u[k], v[k]);
+        acc_n[k] += (uu - vv).abs() * len;
+        acc_d[k] += 0.0 * len;
+        k += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse pass-1: dense shifted add over the duplicated fold tables
+// ---------------------------------------------------------------------------
+
+/// Shifted-add fold, f64: `num[k] += a_n[k] + b_n[k]` (same for den).
+///
+/// # Safety
+/// Caller must ensure AVX2 is available and that all six slices have
+/// length >= `num.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn shifted_add_f64(
+    a_n: &[f64],
+    b_n: &[f64],
+    a_d: &[f64],
+    b_d: &[f64],
+    num: &mut [f64],
+    den: &mut [f64],
+) {
+    let n = num.len();
+    let mut k = 0;
+    while k + 4 <= n {
+        let tn = _mm256_add_pd(
+            _mm256_loadu_pd(a_n.as_ptr().add(k)),
+            _mm256_loadu_pd(b_n.as_ptr().add(k)),
+        );
+        let td = _mm256_add_pd(
+            _mm256_loadu_pd(a_d.as_ptr().add(k)),
+            _mm256_loadu_pd(b_d.as_ptr().add(k)),
+        );
+        let nr = _mm256_loadu_pd(num.as_ptr().add(k));
+        let dr = _mm256_loadu_pd(den.as_ptr().add(k));
+        _mm256_storeu_pd(num.as_mut_ptr().add(k), _mm256_add_pd(nr, tn));
+        _mm256_storeu_pd(den.as_mut_ptr().add(k), _mm256_add_pd(dr, td));
+        k += 4;
+    }
+    while k < n {
+        num[k] += a_n[k] + b_n[k];
+        den[k] += a_d[k] + b_d[k];
+        k += 1;
+    }
+}
+
+/// Shifted-add fold, f32 (8 columns per iteration).
+///
+/// # Safety
+/// As [`shifted_add_f64`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn shifted_add_f32(
+    a_n: &[f32],
+    b_n: &[f32],
+    a_d: &[f32],
+    b_d: &[f32],
+    num: &mut [f32],
+    den: &mut [f32],
+) {
+    let n = num.len();
+    let mut k = 0;
+    while k + 8 <= n {
+        let tn = _mm256_add_ps(
+            _mm256_loadu_ps(a_n.as_ptr().add(k)),
+            _mm256_loadu_ps(b_n.as_ptr().add(k)),
+        );
+        let td = _mm256_add_ps(
+            _mm256_loadu_ps(a_d.as_ptr().add(k)),
+            _mm256_loadu_ps(b_d.as_ptr().add(k)),
+        );
+        let nr = _mm256_loadu_ps(num.as_ptr().add(k));
+        let dr = _mm256_loadu_ps(den.as_ptr().add(k));
+        _mm256_storeu_ps(num.as_mut_ptr().add(k), _mm256_add_ps(nr, tn));
+        _mm256_storeu_ps(den.as_mut_ptr().add(k), _mm256_add_ps(dr, td));
+        k += 8;
+    }
+    while k < n {
+        num[k] += a_n[k] + b_n[k];
+        den[k] += a_d[k] + b_d[k];
+        k += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed XOR/OR + byte-LUT gather fold
+// ---------------------------------------------------------------------------
+
+/// One scalar LUT fold (the `fold_word` reference order): byte `b` of
+/// `w` indexes LUT row `b`.
+#[inline(always)]
+fn fold8_f64(lut: &[f64], w: u64) -> f64 {
+    let mut acc = 0.0f64;
+    for b in 0..LANES {
+        acc += lut[b * LUT_SIZE + ((w >> (8 * b)) & 0xFF) as usize];
+    }
+    acc
+}
+
+#[inline(always)]
+fn fold8_f32(lut: &[f32], w: u64) -> f32 {
+    let mut acc = 0.0f32;
+    for b in 0..LANES {
+        acc += lut[b * LUT_SIZE + ((w >> (8 * b)) & 0xFF) as usize];
+    }
+    acc
+}
+
+/// Packed unweighted stripe fold, f64: for each of the `num.len()`
+/// columns, XOR/OR the packed words of column `k` and `k+off` across
+/// all bit-groups and gather-fold the byte LUTs. 4 columns per
+/// iteration; per-group partial sums stay in registers so the add
+/// order matches the scalar path bit-for-bit.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available, `luts` holds
+/// `groups * LANES * LUT_SIZE` entries, `words` holds `groups * two_n`
+/// words, and `num.len() + off <= two_n` with `den.len() == num.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn packed_fold_f64(
+    luts: &[f64],
+    words: &[u64],
+    two_n: usize,
+    groups: usize,
+    off: usize,
+    num: &mut [f64],
+    den: &mut [f64],
+) {
+    let count = num.len();
+    let mask = _mm256_set1_epi64x(0xFF);
+    let mut k = 0;
+    while k + 4 <= count {
+        let mut accn = _mm256_setzero_pd();
+        let mut accd = _mm256_setzero_pd();
+        for g in 0..groups {
+            let row = words.as_ptr().add(g * two_n);
+            let wu = _mm256_loadu_si256(row.add(k) as *const __m256i);
+            let wv = _mm256_loadu_si256(row.add(k + off) as *const __m256i);
+            let x = _mm256_xor_si256(wu, wv);
+            let o = _mm256_or_si256(wu, wv);
+            let lut = luts.as_ptr().add(g * LANES * LUT_SIZE);
+            let mut gn = _mm256_setzero_pd();
+            let mut gd = _mm256_setzero_pd();
+            for b in 0..LANES {
+                let shift = _mm256_set1_epi64x((8 * b) as i64);
+                let ix = _mm256_and_si256(_mm256_srlv_epi64(x, shift), mask);
+                let io = _mm256_and_si256(_mm256_srlv_epi64(o, shift), mask);
+                let base = lut.add(b * LUT_SIZE);
+                gn = _mm256_add_pd(gn, _mm256_i64gather_pd::<8>(base, ix));
+                gd = _mm256_add_pd(gd, _mm256_i64gather_pd::<8>(base, io));
+            }
+            accn = _mm256_add_pd(accn, gn);
+            accd = _mm256_add_pd(accd, gd);
+        }
+        let nr = _mm256_loadu_pd(num.as_ptr().add(k));
+        let dr = _mm256_loadu_pd(den.as_ptr().add(k));
+        _mm256_storeu_pd(num.as_mut_ptr().add(k), _mm256_add_pd(nr, accn));
+        _mm256_storeu_pd(den.as_mut_ptr().add(k), _mm256_add_pd(dr, accd));
+        k += 4;
+    }
+    while k < count {
+        let mut fn_ = 0.0f64;
+        let mut fd = 0.0f64;
+        for g in 0..groups {
+            let row = g * two_n;
+            let wu = words[row + k];
+            let wv = words[row + k + off];
+            let lut = &luts[g * LANES * LUT_SIZE..(g + 1) * LANES * LUT_SIZE];
+            fn_ += fold8_f64(lut, wu ^ wv);
+            fd += fold8_f64(lut, wu | wv);
+        }
+        num[k] += fn_;
+        den[k] += fd;
+        k += 1;
+    }
+}
+
+/// Packed unweighted stripe fold, f32. The i64 gather yields four f32
+/// lanes per load, so this path also advances 4 columns per iteration
+/// with a 128-bit accumulator.
+///
+/// # Safety
+/// As [`packed_fold_f64`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn packed_fold_f32(
+    luts: &[f32],
+    words: &[u64],
+    two_n: usize,
+    groups: usize,
+    off: usize,
+    num: &mut [f32],
+    den: &mut [f32],
+) {
+    let count = num.len();
+    let mask = _mm256_set1_epi64x(0xFF);
+    let mut k = 0;
+    while k + 4 <= count {
+        let mut accn = _mm_setzero_ps();
+        let mut accd = _mm_setzero_ps();
+        for g in 0..groups {
+            let row = words.as_ptr().add(g * two_n);
+            let wu = _mm256_loadu_si256(row.add(k) as *const __m256i);
+            let wv = _mm256_loadu_si256(row.add(k + off) as *const __m256i);
+            let x = _mm256_xor_si256(wu, wv);
+            let o = _mm256_or_si256(wu, wv);
+            let lut = luts.as_ptr().add(g * LANES * LUT_SIZE);
+            let mut gn = _mm_setzero_ps();
+            let mut gd = _mm_setzero_ps();
+            for b in 0..LANES {
+                let shift = _mm256_set1_epi64x((8 * b) as i64);
+                let ix = _mm256_and_si256(_mm256_srlv_epi64(x, shift), mask);
+                let io = _mm256_and_si256(_mm256_srlv_epi64(o, shift), mask);
+                let base = lut.add(b * LUT_SIZE);
+                gn = _mm_add_ps(gn, _mm256_i64gather_ps::<4>(base, ix));
+                gd = _mm_add_ps(gd, _mm256_i64gather_ps::<4>(base, io));
+            }
+            accn = _mm_add_ps(accn, gn);
+            accd = _mm_add_ps(accd, gd);
+        }
+        let nr = _mm_loadu_ps(num.as_ptr().add(k));
+        let dr = _mm_loadu_ps(den.as_ptr().add(k));
+        _mm_storeu_ps(num.as_mut_ptr().add(k), _mm_add_ps(nr, accn));
+        _mm_storeu_ps(den.as_mut_ptr().add(k), _mm_add_ps(dr, accd));
+        k += 4;
+    }
+    while k < count {
+        let mut fn_ = 0.0f32;
+        let mut fd = 0.0f32;
+        for g in 0..groups {
+            let row = g * two_n;
+            let wu = words[row + k];
+            let wv = words[row + k + off];
+            let lut = &luts[g * LANES * LUT_SIZE..(g + 1) * LANES * LUT_SIZE];
+            fn_ += fold8_f32(lut, wu ^ wv);
+            fd += fold8_f32(lut, wu | wv);
+        }
+        num[k] += fn_;
+        den[k] += fd;
+        k += 1;
+    }
+}

@@ -40,6 +40,7 @@
 
 use super::engines::EngineStats;
 use super::metric::{Metric, MetricOps};
+use super::simd::{self, AVec, KernelPath};
 use crate::embed::EmbBatch;
 use crate::matrix::StripeBlock;
 use crate::util::Real;
@@ -75,9 +76,11 @@ pub struct CsrBatch<R: Real> {
     single_den: Vec<R>,
     lengths: Vec<R>,
     /// `[2N]` single-sided numerator fold: `Σ_rows len · terms(v, 0).0`.
-    u_num: Vec<R>,
-    /// `[2N]` single-sided denominator fold.
-    u_den: Vec<R>,
+    /// 64-byte aligned so the pass-1 shifted add can use full-width
+    /// vector loads on the `a` side (`u_num[..n]` starts at offset 0).
+    u_num: AVec<R>,
+    /// `[2N]` single-sided denominator fold (aligned like `u_num`).
+    u_den: AVec<R>,
     /// Base (non-duplicated) nonzeros across all rows.
     nnz_base: usize,
 }
@@ -99,8 +102,8 @@ impl<R: Real> CsrBatch<R> {
             single_num: Vec::new(),
             single_den: Vec::new(),
             lengths: Vec::new(),
-            u_num: Vec::new(),
-            u_den: Vec::new(),
+            u_num: AVec::new(),
+            u_den: AVec::new(),
             nnz_base: 0,
         }
     }
@@ -144,6 +147,20 @@ impl<R: Real> CsrBatch<R> {
         self.u_den.clear();
         self.u_num.resize(two_n, R::ZERO);
         self.u_den.resize(two_n, R::ZERO);
+        // Pre-count the nonzeros and reserve the entry vectors to their
+        // exact final size: the old push-and-grow path doubled through
+        // up to log2(2·nnz) reallocations per build and could strand
+        // ~2x the steady-state footprint (ISSUE-6 satellite fix).
+        let mut nnz = 0usize;
+        for (row, _) in batch.rows() {
+            nnz += row[..n].iter().filter(|&&v| v != R::ZERO).count();
+        }
+        self.idx.reserve_exact(2 * nnz);
+        self.val.reserve_exact(2 * nnz);
+        self.single_num.reserve_exact(2 * nnz);
+        self.single_den.reserve_exact(2 * nnz);
+        self.lengths.reserve_exact(batch.filled);
+        self.indptr.reserve_exact(batch.filled + 1);
         self.indptr.push(0);
         for (row, len) in batch.rows() {
             let base_start = self.idx.len();
@@ -179,12 +196,23 @@ impl<R: Real> CsrBatch<R> {
     }
 
     /// Fold this CSR batch into `block` under `metric`. Must be built
-    /// from a batch of matching width under the same metric.
+    /// from a batch of matching width under the same metric. Scalar
+    /// reference path — equivalent to
+    /// [`Self::apply_with`]`(metric, KernelPath::Scalar, block)`.
     pub fn apply(&self, metric: Metric, block: &mut StripeBlock<R>) {
-        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, block))
+        self.apply_with(metric, KernelPath::Scalar, block)
     }
 
-    fn apply_ops<M: MetricOps<R>>(&self, ops: M, block: &mut StripeBlock<R>) {
+    /// Fold this CSR batch into `block`, routing the dense pass-1
+    /// shifted add through the requested SIMD kernel `path`. Pass 2
+    /// (the two-pointer correction merge) is irregular and always
+    /// scalar. Results are bit-identical across paths: the vector
+    /// shifted add preserves the scalar per-column accumulation order.
+    pub fn apply_with(&self, metric: Metric, path: KernelPath, block: &mut StripeBlock<R>) {
+        crate::with_metric_ops!(metric, ops, self.apply_ops(ops, path, block))
+    }
+
+    fn apply_ops<M: MetricOps<R>>(&self, ops: M, path: KernelPath, block: &mut StripeBlock<R>) {
         let n = block.n_samples();
         assert_eq!(self.n_samples, n, "csr/block width mismatch");
         if self.filled == 0 {
@@ -193,8 +221,10 @@ impl<R: Real> CsrBatch<R> {
         let start = block.start();
         let count = block.n_stripes();
         // Pass 1 — single-sided fold, one dense shifted add per stripe
-        // for the WHOLE batch (zipped slices vectorize like the tiled
-        // engine's ik loop).
+        // for the WHOLE batch. Routed through the explicit SIMD kernel
+        // when a vector path was resolved; the zipped scalar loop below
+        // is the reference (and the fallback for unvectorizable `R`).
+        let eff = simd::sparse_effective::<R>(path);
         for s_local in 0..count {
             let off = start + s_local + 1;
             let (num_row, den_row) = block.rows_mut(s_local);
@@ -202,6 +232,9 @@ impl<R: Real> CsrBatch<R> {
             let un_b = &self.u_num[off..off + n];
             let ud_a = &self.u_den[..n];
             let ud_b = &self.u_den[off..off + n];
+            if simd::shifted_add::<R>(eff, un_a, un_b, ud_a, ud_b, num_row, den_row) {
+                continue;
+            }
             for ((((nr, dr), (&na, &nb)), &da), &db) in num_row
                 .iter_mut()
                 .zip(den_row.iter_mut())
@@ -269,6 +302,13 @@ pub struct SparseEngine<R: Real> {
     /// through `WorkerSpec::Cpu` so the reported row split matches the
     /// auto-selection cut the run was configured with.
     threshold: f64,
+    /// Resolved SIMD kernel path for the pass-1 shifted add (pass 2 is
+    /// always scalar). Direct constructors pin `Scalar`;
+    /// `make_engine_with` plumbs the dispatch decision here.
+    path: KernelPath,
+    /// `KernelPath::as_code` of the path the last fold executed,
+    /// drained (and reset) by `drain_stats`.
+    used: AtomicU64,
     scratch: Mutex<SparseScratch<R>>,
     csr_nnz: AtomicU64,
     csr_cells: AtomicU64,
@@ -291,9 +331,20 @@ impl<R: Real> SparseEngine<R> {
         Self::with_threshold(DEFAULT_SPARSE_THRESHOLD)
     }
 
+    /// Scalar-reference engine with a custom row-density threshold
+    /// (equivalent to [`Self::with_threshold_path`] with
+    /// `KernelPath::Scalar`).
     pub fn with_threshold(threshold: f64) -> Self {
+        Self::with_threshold_path(threshold, KernelPath::Scalar)
+    }
+
+    /// Engine with both the row-density threshold and the SIMD kernel
+    /// path explicit — the `make_engine_with` construction route.
+    pub fn with_threshold_path(threshold: f64, path: KernelPath) -> Self {
         Self {
             threshold,
+            path,
+            used: AtomicU64::new(0),
             scratch: Mutex::new(SparseScratch {
                 csr: CsrBatch::new(),
                 prepared: false,
@@ -305,6 +356,13 @@ impl<R: Real> SparseEngine<R> {
             rows_sparse: AtomicU64::new(0),
             rows_dense: AtomicU64::new(0),
         }
+    }
+
+    /// Record the kernel path a fold is about to execute (drained by
+    /// [`Self::drain_stats`]).
+    fn note_path(&self) {
+        let eff = simd::sparse_effective::<R>(self.path);
+        self.used.store(eff.as_code(), Ordering::Relaxed);
     }
 
     fn assert_weighted(metric: Metric) {
@@ -366,7 +424,8 @@ impl<R: Real> SparseEngine<R> {
             self.rebuild(&mut guard, metric, batch);
             guard.prepared = false;
         }
-        guard.csr.apply(metric, block);
+        self.note_path();
+        guard.csr.apply_with(metric, self.path, block);
     }
 
     /// Stateless fold: CSR build + kernel in one call.
@@ -378,16 +437,18 @@ impl<R: Real> SparseEngine<R> {
         let mut guard = self.scratch.lock().expect("sparse scratch poisoned");
         self.rebuild(&mut guard, metric, batch);
         guard.prepared = false;
-        guard.csr.apply(metric, block);
+        self.note_path();
+        guard.csr.apply_with(metric, self.path, block);
     }
 
-    /// Drain the accumulated work counters.
+    /// Drain the accumulated work counters and the executed kernel path.
     pub fn drain_stats(&self) -> EngineStats {
         EngineStats {
             csr_nnz: self.csr_nnz.swap(0, Ordering::Relaxed),
             csr_cells: self.csr_cells.swap(0, Ordering::Relaxed),
             rows_sparse: self.rows_sparse.swap(0, Ordering::Relaxed),
             rows_dense: self.rows_dense.swap(0, Ordering::Relaxed),
+            kernel_path: KernelPath::from_code(self.used.swap(0, Ordering::Relaxed)),
             ..EngineStats::default()
         }
     }
@@ -565,6 +626,57 @@ mod tests {
         let b = proportion_batch(8, 4, 0.3, 1);
         let mut blk = StripeBlock::new(8, 0, 1);
         eng.apply_sparse(Metric::Unweighted, &b, &mut blk);
+    }
+
+    #[test]
+    fn vector_path_matches_scalar_and_reports() {
+        // auto-dispatch engine vs the scalar-reference engine across
+        // densities and both weighted metrics the kernels cover; the
+        // shifted-add kernel is bit-identity so exact equality holds
+        let auto = simd::auto_path();
+        for metric in [Metric::WeightedNormalized, Metric::WeightedUnnormalized] {
+            for &density in &[0.02, 0.2, 0.8] {
+                for &n in &[9usize, 24, 33] {
+                    let batch = proportion_batch(n, 7, density, 400 + n as u64);
+                    let vec_eng =
+                        SparseEngine::<f64>::with_threshold_path(DEFAULT_SPARSE_THRESHOLD, auto);
+                    let ref_eng = SparseEngine::<f64>::new();
+                    let total = crate::matrix::total_stripes(n);
+                    let mut got = StripeBlock::new(n, 0, total);
+                    let mut want = StripeBlock::new(n, 0, total);
+                    vec_eng.apply_sparse(metric, &batch, &mut got);
+                    ref_eng.apply_sparse(metric, &batch, &mut want);
+                    assert_eq!(want.max_abs_diff(&got), 0.0, "{metric} density={density} n={n}");
+                    assert_eq!(
+                        vec_eng.drain_stats().kernel_path,
+                        simd::sparse_effective::<f64>(auto)
+                    );
+                    assert_eq!(ref_eng.drain_stats().kernel_path, KernelPath::Scalar);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_reserves_exact_entry_capacity() {
+        // a fresh CsrBatch must land at exactly 2·nnz entry capacity —
+        // no push-doubling overshoot
+        let batch = proportion_batch(31, 8, 0.3, 77);
+        let mut csr = CsrBatch::<f64>::new();
+        csr.build(Metric::WeightedNormalized, &batch);
+        let want = 2 * csr.nnz();
+        assert!(want > 0);
+        assert_eq!(csr.idx.len(), want);
+        assert_eq!(csr.idx.capacity(), want);
+        assert_eq!(csr.val.capacity(), want);
+        assert_eq!(csr.single_num.capacity(), want);
+        assert_eq!(csr.single_den.capacity(), want);
+        assert_eq!(csr.indptr.capacity(), batch.filled + 1);
+        assert_eq!(csr.lengths.capacity(), batch.filled);
+        // rebuilding from a smaller batch recycles, never shrinks
+        let small = proportion_batch(31, 3, 0.1, 78);
+        csr.build(Metric::WeightedNormalized, &small);
+        assert!(csr.idx.capacity() >= want);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! SIMD-vs-scalar equivalence suite (ISSUE 6 satellite): the
+//! auto-dispatched vector kernels must agree with the forced-scalar
+//! reference path to <1e-12 — in fact bit-for-bit, since the SIMD lanes
+//! preserve the scalar accumulation grouping — across every metric,
+//! both precisions, a density axis, multi-batch accumulation, and the
+//! tile-remainder shapes. On hosts without AVX2/NEON the auto path *is*
+//! scalar and the suite degenerates to a self-comparison, which is
+//! exactly the intended behavior of the fallback.
+
+use unifrac::api::{JobSpec, UniFracJob};
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{
+    compute_unifrac, compute_unifrac_naive, simd, ComputeOptions, CpuFeatures, EngineKind, Metric,
+};
+use unifrac::Error;
+
+fn problem(n: usize, density: f64, seed: u64) -> (Phylogeny, FeatureTable) {
+    SynthSpec {
+        n_samples: n,
+        n_features: (n * 8).max(256),
+        density,
+        seed,
+        ..Default::default()
+    }
+    .generate()
+}
+
+/// Run one compute twice — forced scalar and auto dispatch — and demand
+/// bit-identical distance matrices.
+fn assert_paths_agree<R: unifrac::util::Real + unifrac::runtime::XlaReal>(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    base: &ComputeOptions,
+    what: &str,
+) {
+    let scalar = compute_unifrac::<R>(
+        tree,
+        table,
+        &ComputeOptions { cpu_features: CpuFeatures::Scalar, ..base.clone() },
+    )
+    .unwrap();
+    let auto = compute_unifrac::<R>(
+        tree,
+        table,
+        &ComputeOptions { cpu_features: CpuFeatures::Auto, ..base.clone() },
+    )
+    .unwrap();
+    let diff = scalar.max_abs_diff(&auto);
+    assert!(
+        diff == 0.0,
+        "{what} ({}): scalar/auto divergence {diff:e} (requirement < 1e-12, design: exact)",
+        R::TAG
+    );
+}
+
+/// Every metric × every supporting engine × both precisions × a density
+/// axis: auto dispatch is bit-identical to forced scalar.
+#[test]
+fn auto_matches_scalar_across_metrics_engines_densities() {
+    for &density in &[0.02, 0.2, 0.8] {
+        let (tree, table) = problem(24, density, 100 + (density * 100.0) as u64);
+        for metric in Metric::all(0.5) {
+            for engine in EngineKind::all() {
+                if !engine.supports(metric) {
+                    continue;
+                }
+                let base = ComputeOptions {
+                    metric,
+                    engine: Some(engine),
+                    batch_capacity: 16,
+                    ..Default::default()
+                };
+                let what = format!("{metric} {} density={density}", engine.name());
+                assert_paths_agree::<f64>(&tree, &table, &base, &what);
+                assert_paths_agree::<f32>(&tree, &table, &base, &what);
+            }
+        }
+    }
+}
+
+/// The vector kernels still produce correct *answers*, not just
+/// self-consistent ones: auto dispatch matches the naive oracle.
+#[test]
+fn auto_matches_naive_oracle() {
+    let (tree, table) = problem(18, 0.15, 7);
+    for metric in Metric::all(0.5) {
+        let oracle = compute_unifrac_naive(&tree, &table, metric).unwrap();
+        let auto = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { metric, ..Default::default() },
+        )
+        .unwrap();
+        let diff = auto.max_abs_diff(&oracle);
+        assert!(diff < 1e-10, "{metric}: oracle diff {diff:e}");
+    }
+}
+
+/// Remainder shapes: n=33 with odd block_k values exercises both the
+/// 4-lane/2-lane main loops and their scalar column tails, plus the
+/// tiled row remainder.
+#[test]
+fn tile_remainder_shapes_agree() {
+    let (tree, table) = problem(33, 0.2, 11);
+    for &block_k in &[1usize, 13, 16] {
+        for metric in [Metric::Unweighted, Metric::WeightedNormalized] {
+            let base = ComputeOptions {
+                metric,
+                engine: Some(EngineKind::Tiled),
+                block_k,
+                batch_capacity: 8,
+                ..Default::default()
+            };
+            let what = format!("{metric} tiled block_k={block_k}");
+            assert_paths_agree::<f64>(&tree, &table, &base, &what);
+            assert_paths_agree::<f32>(&tree, &table, &base, &what);
+        }
+    }
+}
+
+/// Multi-batch accumulation: tiny batch capacities force many partial
+/// folds into the same stripe scratch; the order-preserving lanes must
+/// keep the result bit-identical to scalar.
+#[test]
+fn multi_batch_accumulation_agrees() {
+    let (tree, table) = problem(21, 0.3, 13);
+    for &batch_capacity in &[1usize, 7, 64] {
+        for (metric, engine) in [
+            (Metric::Unweighted, EngineKind::Packed),
+            (Metric::WeightedNormalized, EngineKind::Sparse),
+            (Metric::WeightedUnnormalized, EngineKind::Tiled),
+        ] {
+            let base = ComputeOptions {
+                metric,
+                engine: Some(engine),
+                batch_capacity,
+                ..Default::default()
+            };
+            let what = format!("{metric} {} cap={batch_capacity}", engine.name());
+            assert_paths_agree::<f64>(&tree, &table, &base, &what);
+            assert_paths_agree::<f32>(&tree, &table, &base, &what);
+        }
+    }
+}
+
+/// Whole-pipeline check through the public facade: a multi-threaded
+/// `UniFracJob` forced onto scalar equals the auto-dispatched one, and
+/// the run metrics report the kernel path that actually executed.
+#[test]
+fn jobspec_pipeline_agrees_and_reports_path() {
+    let (tree, table) = problem(40, 0.1, 17);
+    let spec = |cpu: CpuFeatures| JobSpec {
+        metric: Metric::WeightedNormalized,
+        engine: Some(EngineKind::Tiled),
+        threads: 2,
+        batch_capacity: 16,
+        cpu_features: cpu,
+        ..Default::default()
+    };
+    let scalar = UniFracJob::with_spec(&tree, &table, spec(CpuFeatures::Scalar))
+        .run_output()
+        .unwrap();
+    let auto = UniFracJob::with_spec(&tree, &table, spec(CpuFeatures::Auto))
+        .run_output()
+        .unwrap();
+    let diff = scalar.dm.max_abs_diff(&auto.dm);
+    assert!(diff == 0.0, "pipeline scalar/auto divergence {diff:e}");
+    assert_eq!(scalar.metrics.kernel_path, "scalar");
+    let expected =
+        simd::tile_effective::<f64>(simd::auto_path(), Metric::WeightedNormalized).name();
+    assert_eq!(auto.metrics.kernel_path, expected);
+}
+
+/// Requesting an ISA this host does not have is a typed
+/// `Error::Unsupported` at construction, not a silent downgrade.
+#[test]
+fn unavailable_isa_is_rejected() {
+    let (tree, table) = problem(10, 0.2, 19);
+    #[cfg(target_arch = "x86_64")]
+    let foreign = CpuFeatures::Neon;
+    #[cfg(not(target_arch = "x86_64"))]
+    let foreign = CpuFeatures::Avx2;
+    let err = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { cpu_features: foreign, ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(matches!(err, Error::Unsupported(_)), "got {err:?}");
+}
+
+/// An explicitly requested ISA that IS available runs and matches
+/// scalar — covered only where the host supports it.
+#[test]
+fn explicit_available_isa_agrees_with_scalar() {
+    let native = match simd::best_available() {
+        unifrac::unifrac::KernelPath::Avx2 => CpuFeatures::Avx2,
+        unifrac::unifrac::KernelPath::Neon => CpuFeatures::Neon,
+        unifrac::unifrac::KernelPath::Scalar => return, // nothing to test here
+    };
+    let (tree, table) = problem(16, 0.25, 23);
+    let base = ComputeOptions {
+        metric: Metric::WeightedNormalized,
+        engine: Some(EngineKind::Tiled),
+        ..Default::default()
+    };
+    let scalar = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { cpu_features: CpuFeatures::Scalar, ..base.clone() },
+    )
+    .unwrap();
+    let explicit = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { cpu_features: native, ..base },
+    )
+    .unwrap();
+    assert_eq!(scalar.max_abs_diff(&explicit), 0.0);
+}

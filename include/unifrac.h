@@ -42,6 +42,7 @@ extern "C" {
 #define SSU_ERR_CLI 19
 #define SSU_ERR_UNSUPPORTED 20
 #define SSU_ERR_MERGE 21
+#define SSU_ERR_CORRUPT 22
 #define SSU_ERR_PANIC 99
 
 /* ---- opaque handles ---- */

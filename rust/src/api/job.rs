@@ -150,6 +150,12 @@ pub struct JobSpec {
     /// the paper's EMP matrix on laptop RAM. `None` computes every
     /// stripe in one pass.
     pub max_resident_mb: Option<usize>,
+    /// Deterministic fault-injection plan (`--fault` /
+    /// `UNIFRAC_FAULT`), used by the distributed-fleet test harness:
+    /// compute-time directives (`kill@N`, `delay@N:MS`) fire inside the
+    /// partial compute path when the stripe range covers their anchor.
+    /// `None` (the default) injects nothing.
+    pub fault: Option<crate::distrib::FaultPlan>,
 }
 
 impl Default for JobSpec {
@@ -175,6 +181,7 @@ impl Default for JobSpec {
             artifacts_dir: Some(PathBuf::from("artifacts")),
             output_format: OutputFormat::Tsv,
             max_resident_mb: None,
+            fault: None,
         }
     }
 }
@@ -502,6 +509,16 @@ impl<'a> UniFracJob<'a> {
         self.resolve_geometry().map(|(_, _, total)| total)
     }
 
+    /// The job's resolved CPU geometry: `(engine, padded width, total
+    /// stripes)`. External drivers that spawn worker processes — the
+    /// `distrib` fleet supervisor — resolve once through here and pin
+    /// the result on every worker's command line, so all workers share
+    /// the exact engine/padding a single-process run would use (the
+    /// bit-identity precondition).
+    pub fn geometry(&self) -> Result<(EngineKind, usize, usize)> {
+        self.resolve_geometry()
+    }
+
     /// Run the full job at the spec's [`FpWidth`].
     pub fn run(&self) -> Result<crate::matrix::CondensedMatrix> {
         self.run_output().map(|o| o.dm)
@@ -606,13 +623,17 @@ impl<'a> UniFracJob<'a> {
             // the plan so backend resolution (and the density walk)
             // runs once, not twice
             let mut sink = self.build_sink::<R>(path, plan.padded_n, false)?;
-            crate::coordinator::run_planned_to_sink::<R>(
+            if let Err(e) = crate::coordinator::run_planned_to_sink::<R>(
                 self.tree,
                 self.table,
                 &plan,
                 spec,
                 sink.as_mut(),
-            )?;
+            ) {
+                // don't leave a torn fresh file behind a failed run
+                let _ = sink.abandon();
+                return Err(e);
+            }
             return Ok(SinkRunReport {
                 path: path.to_path_buf(),
                 format: spec.output_format,
@@ -629,22 +650,34 @@ impl<'a> UniFracJob<'a> {
         let missing = sink.missing_ranges();
         let owed: usize = missing.iter().map(|r| r.1).sum();
         let resumed = s_total - owed;
-        let chunk = spec.sweep_stripes(padded, s_total)?;
-        let mut computed = 0usize;
-        let mut passes = 0usize;
-        for (start, count) in missing {
-            let mut s = start;
-            let end = start + count;
-            while s < end {
-                let c = chunk.min(end - s).max(1);
-                let block = self.partial_block::<R>(engine, padded, s_total, s, c)?;
-                sink.put_block(&block)?;
-                computed += c;
-                passes += 1;
-                s += c;
+        // any failure mid-sweep abandons the sink: a zero-progress file
+        // is removed, a partially-covered one is kept for resume
+        let sweep = (|| -> Result<(usize, usize)> {
+            let chunk = spec.sweep_stripes(padded, s_total)?;
+            let mut computed = 0usize;
+            let mut passes = 0usize;
+            for (start, count) in missing {
+                let mut s = start;
+                let end = start + count;
+                while s < end {
+                    let c = chunk.min(end - s).max(1);
+                    let block = self.partial_block::<R>(engine, padded, s_total, s, c)?;
+                    sink.put_block(&block)?;
+                    computed += c;
+                    passes += 1;
+                    s += c;
+                }
             }
-        }
-        sink.finish()?;
+            sink.finish()?;
+            Ok((computed, passes))
+        })();
+        let (computed, passes) = match sweep {
+            Ok(v) => v,
+            Err(e) => {
+                let _ = sink.abandon();
+                return Err(e);
+            }
+        };
         Ok(SinkRunReport {
             path: path.to_path_buf(),
             format: spec.output_format,
@@ -713,6 +746,12 @@ impl<'a> UniFracJob<'a> {
             return Err(Error::invalid(format!(
                 "stripe range {start}+{count} exceeds the {s_total}-stripe space"
             )));
+        }
+        // fault-injection harness: fire compute-time directives whose
+        // anchor stripe falls in this range (delay sleeps; kill aborts
+        // the process — this is how the fleet tests lose a worker)
+        if let Some(plan) = &self.spec.fault {
+            plan.apply_compute_faults(start, count);
         }
         let data = match self.spec.precision {
             FpWidth::F32 => {
@@ -947,6 +986,35 @@ mod tests {
         // a silently-unrestricted full compute
         let err = UniFracJob::new(&tree, &table).stripe_range(0, 1).run().unwrap_err();
         assert!(err.to_string().contains("run_partial"), "{err}");
+    }
+
+    #[test]
+    fn failed_run_to_path_leaves_no_zero_progress_file() {
+        let (tree, table) = problem();
+        let dir = std::env::temp_dir()
+            .join(format!("unifrac_job_abandon_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (format, name) in [
+            (OutputFormat::Mmap, "dm.ufdm"),
+            (OutputFormat::Bin, "dm.bin"),
+            (OutputFormat::Tsv, "dm.tsv"),
+        ] {
+            let path = dir.join(name);
+            // a budget too small for one stripe fails after the sink
+            // file was created — the abandon path must clean it up
+            let err = UniFracJob::new(&tree, &table)
+                .output_format(format)
+                .max_resident_mb(0)
+                .run_to_path(&path)
+                .unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{format:?}: {err}");
+            assert!(
+                !path.exists(),
+                "{format:?}: failed zero-progress run left {} behind",
+                path.display()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

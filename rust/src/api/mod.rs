@@ -28,4 +28,4 @@ mod job;
 mod partial;
 
 pub use job::{Backend, FpWidth, JobSpec, SinkRunReport, UniFracJob};
-pub use partial::{merge_partials, PartialData, PartialMeta, PartialResult};
+pub use partial::{merge_partials, PartialCheck, PartialData, PartialMeta, PartialResult};

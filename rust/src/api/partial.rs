@@ -14,6 +14,7 @@ use super::job::FpWidth;
 use crate::error::{Error, MergeError, Result};
 use crate::matrix::{total_stripes, CondensedMatrix, StripeBlock};
 use crate::unifrac::Metric;
+use crate::util::crc32c::crc32c;
 use std::path::Path;
 
 /// Everything needed to validate and merge a partial, independent of
@@ -58,7 +59,31 @@ pub struct PartialResult {
 }
 
 const MAGIC: &[u8; 4] = b"UFPR";
-const VERSION: u16 = 1;
+/// Current `UFPR` on-disk version. v2 (ISSUE 7) inserts two CRC32C
+/// checksums right after the version field — header (everything between
+/// the checksums and the payload) and payload — so torn writes and bit
+/// rot are detected at load instead of silently merging wrong numbers.
+/// v1 files (no checksums) still load; see [`PartialCheck`].
+const VERSION: u16 = 2;
+const VERSION_V1: u16 = 1;
+/// Byte offset where the v2 header checksum field starts (after
+/// magic + version), and where the checksummed header region begins
+/// (after both CRC fields).
+const V2_CRC_OFF: usize = 6;
+const V2_HEADER_START: usize = 14;
+
+/// Integrity report returned by [`PartialResult::from_bytes_checked`]:
+/// which format version the file carried and whether its CRC32C
+/// checksums were present and verified. A v1 file loads with
+/// `checksummed == false` — the distributed supervisor counts those so
+/// operators know some shards were accepted unverified.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartialCheck {
+    /// On-disk format version the file declared (1 or 2).
+    pub version: u16,
+    /// True iff the file carried checksums and both verified.
+    pub checksummed: bool,
+}
 
 impl PartialResult {
     pub(crate) fn new(meta: PartialMeta, data: PartialData) -> Self {
@@ -83,13 +108,18 @@ impl PartialResult {
     }
 
     /// Compact binary serialization (little-endian, self-describing —
-    /// see the format sketch in `ARCHITECTURE.md`).
+    /// see the format sketch in `ARCHITECTURE.md`). Always writes the
+    /// current (v2, checksummed) format.
     pub fn to_bytes(&self) -> Vec<u8> {
         let m = &self.meta;
         let payload = m.stripe_count * m.padded_n;
         let mut v = Vec::with_capacity(64 + 2 * payload * m.fp.bytes());
         v.extend_from_slice(MAGIC);
         put_u16(&mut v, VERSION);
+        // CRC32C placeholders (header, payload) — patched below once
+        // the bytes they cover exist.
+        put_u32(&mut v, 0);
+        put_u32(&mut v, 0);
         v.push(m.fp.bytes() as u8);
         put_str(&mut v, m.metric.name());
         put_f64(&mut v, m.metric.alpha());
@@ -102,6 +132,7 @@ impl PartialResult {
         for id in &m.sample_ids {
             put_str(&mut v, id);
         }
+        let payload_start = v.len();
         match &self.data {
             PartialData::F32(b) => {
                 for x in &b.num {
@@ -120,23 +151,42 @@ impl PartialResult {
                 }
             }
         }
+        let header_crc = crc32c(&v[V2_HEADER_START..payload_start]);
+        let payload_crc = crc32c(&v[payload_start..]);
+        v[V2_CRC_OFF..V2_CRC_OFF + 4].copy_from_slice(&header_crc.to_le_bytes());
+        v[V2_CRC_OFF + 4..V2_CRC_OFF + 8].copy_from_slice(&payload_crc.to_le_bytes());
         v
     }
 
     /// Parse the binary form written by [`Self::to_bytes`], validating
-    /// every untrusted header field before any allocation.
+    /// every untrusted header field before any allocation. Convenience
+    /// wrapper over [`Self::from_bytes_checked`] that discards the
+    /// integrity report.
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        Ok(Self::from_bytes_checked(bytes)?.0)
+    }
+
+    /// Parse a `UFPR` buffer and report its integrity status.
+    ///
+    /// v2 buffers have both CRC32C checksums verified before the
+    /// payload is decoded — a mismatch is [`Error::Corrupt`] (status
+    /// code 22), distinct from malformed-header
+    /// [`Error::Invalid`] so the supervisor can classify it as a
+    /// retryable torn write. v1 buffers (no checksums) parse with
+    /// `checksummed == false`.
+    pub fn from_bytes_checked(bytes: &[u8]) -> Result<(Self, PartialCheck)> {
         let mut r = Reader { buf: bytes, pos: 0 };
         let magic = r.take(4)?;
         if magic != MAGIC {
             return Err(Error::invalid("not a UniFrac partial (bad magic)"));
         }
         let version = r.u16()?;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_V1 {
             return Err(Error::invalid(format!(
-                "unsupported partial format version {version} (expected {VERSION})"
+                "unsupported partial format version {version} (expected ≤ {VERSION})"
             )));
         }
+        let crcs = if version >= 2 { Some((r.u32()?, r.u32()?)) } else { None };
         let fp = match r.u8()? {
             4 => FpWidth::F32,
             8 => FpWidth::F64,
@@ -193,6 +243,32 @@ impl PartialResult {
         for _ in 0..n_ids {
             sample_ids.push(r.string()?);
         }
+        let payload_start = r.pos;
+        if bytes.len() - payload_start != payload_bytes {
+            return Err(Error::invalid(format!(
+                "partial payload claims {payload_bytes} bytes but {} follow the header",
+                bytes.len() - payload_start
+            )));
+        }
+        // Verify integrity before decoding a single float: a checksum
+        // mismatch is a *different* failure class (Corrupt, retryable)
+        // than a malformed header (Invalid, fatal).
+        if let Some((header_crc, payload_crc)) = crcs {
+            let got = crc32c(&bytes[V2_HEADER_START..payload_start]);
+            if got != header_crc {
+                return Err(Error::corrupt(format!(
+                    "partial header checksum mismatch: stored {header_crc:#010x}, \
+                     computed {got:#010x}"
+                )));
+            }
+            let got = crc32c(&bytes[payload_start..]);
+            if got != payload_crc {
+                return Err(Error::corrupt(format!(
+                    "partial payload checksum mismatch: stored {payload_crc:#010x}, \
+                     computed {got:#010x}"
+                )));
+            }
+        }
         let cells = stripe_count * padded_n;
         let data = match fp {
             FpWidth::F32 => {
@@ -218,13 +294,8 @@ impl PartialResult {
                 PartialData::F64(b)
             }
         };
-        if r.pos != bytes.len() {
-            return Err(Error::invalid(format!(
-                "trailing bytes in partial: {} past the payload",
-                bytes.len() - r.pos
-            )));
-        }
-        Ok(Self {
+        debug_assert_eq!(r.pos, bytes.len(), "payload length pre-validated above");
+        let me = Self {
             meta: PartialMeta {
                 n_samples,
                 padded_n,
@@ -236,7 +307,8 @@ impl PartialResult {
                 sample_ids,
             },
             data,
-        })
+        };
+        Ok((me, PartialCheck { version, checksummed: crcs.is_some() }))
     }
 
     /// Persist to `path` in the [`Self::to_bytes`] form.
@@ -248,6 +320,13 @@ impl PartialResult {
     /// Load a partial previously written by [`Self::save`].
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::from_bytes(&std::fs::read(path)?)
+    }
+
+    /// Load a partial and report its integrity status — the supervisor
+    /// uses the [`PartialCheck`] to count shards accepted from
+    /// unchecksummed v1 files.
+    pub fn load_checked(path: impl AsRef<Path>) -> Result<(Self, PartialCheck)> {
+        Self::from_bytes_checked(&std::fs::read(path)?)
     }
 }
 
@@ -461,5 +540,42 @@ mod tests {
             merge_partials::<PartialResult>(&[]),
             Err(Error::Merge(MergeError::Empty))
         ));
+    }
+
+    #[test]
+    fn v2_roundtrip_reports_checksummed() {
+        let (tree, table) = problem();
+        let job = UniFracJob::new(&tree, &table);
+        let p = job.run_partial_range(0, 3).unwrap();
+        let (back, check) = PartialResult::from_bytes_checked(&p.to_bytes()).unwrap();
+        assert_eq!(check, PartialCheck { version: 2, checksummed: true });
+        assert_eq!(back.meta(), p.meta());
+    }
+
+    #[test]
+    fn checksum_catches_payload_and_header_flips() {
+        let (tree, table) = problem();
+        let job = UniFracJob::new(&tree, &table);
+        let p = job.run_partial_range(0, 2).unwrap();
+        let clean = p.to_bytes();
+        // flip one bit in the last payload byte: must be Corrupt (22),
+        // not Invalid — the header still parses fine
+        let mut bytes = clean.clone();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        match PartialResult::from_bytes(&bytes) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("payload flip not caught as Corrupt: {other:?}"),
+        }
+        // flip a byte inside the checksummed header region (the engine
+        // name / geometry area, past the CRC fields themselves)
+        let mut bytes = clean.clone();
+        bytes[V2_HEADER_START + 1] ^= 0x40;
+        assert!(
+            PartialResult::from_bytes(&bytes).is_err(),
+            "header flip must not load cleanly"
+        );
+        // the untouched buffer still loads
+        assert!(PartialResult::from_bytes(&clean).is_ok());
     }
 }

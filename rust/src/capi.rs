@@ -525,6 +525,7 @@ pub extern "C" fn ssu_error_name(code: c_int) -> *const c_char {
         19 => b"cli\0",
         20 => b"unsupported\0",
         21 => b"merge\0",
+        22 => b"corrupt\0",
         CODE_PANIC => b"panic\0",
         _ => b"unknown\0",
     };

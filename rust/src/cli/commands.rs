@@ -59,6 +59,15 @@ fn resolve_config(args: &mut Args) -> Result<RunConfig> {
         cfg.output_format = v;
     }
     cfg.max_resident_mb = args.get_or("max-resident-mb", cfg.max_resident_mb)?;
+    if let Some(v) = args.opt("fault") {
+        cfg.fault = v;
+    } else if cfg.fault.is_empty() {
+        // env fallback so a whole supervised fleet can be put under
+        // fault injection without threading flags through every layer
+        if let Ok(v) = std::env::var("UNIFRAC_FAULT") {
+            cfg.fault = v;
+        }
+    }
     Ok(cfg)
 }
 
@@ -209,6 +218,13 @@ pub fn convert(args: &mut Args) -> Result<()> {
     let output = args.require("output")?;
     args.finish()?;
     let f = CondensedFile::open(&input)?;
+    if !f.checksummed() {
+        eprintln!(
+            "warning: {input} is a v{} UFDM file without checksums (older writer); \
+             payload integrity was NOT verified",
+            f.version()
+        );
+    }
     f.write_tsv(&output)?;
     println!(
         "wrote {output}: {} samples, {} pairs ({}, computed in {})",
@@ -283,6 +299,139 @@ pub fn merge(args: &mut Args) -> Result<()> {
     if let Some(out) = output {
         dm.write_tsv(&out)?;
         println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+/// `unifrac worker --table t.tsv --tree t.nwk --start S --count C --out shard.ufpr`
+///
+/// The fleet-supervisor's unit of work: compute stripes
+/// `S .. S + C` into one checksummed `UFPR` partial. Spawned by
+/// `unifrac supervise` with the resolved engine/padding pinned on the
+/// command line; also usable by hand for ad-hoc distribution. The
+/// process exit code is the stable per-error-class code of
+/// [`Error::code`] — the supervisor classifies it into
+/// retryable-vs-fatal (`distrib::classify_exit`).
+pub fn worker(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let start = args
+        .opt_parse::<usize>("start")?
+        .ok_or_else(|| Error::Cli("missing required flag --start".into()))?;
+    let count = args
+        .opt_parse::<usize>("count")?
+        .ok_or_else(|| Error::Cli("missing required flag --count".into()))?;
+    let out = args.require("out")?;
+    let (tree, table) = load_problem(args, cfg.seed)?;
+    args.finish()?;
+    let spec = cfg.to_job()?;
+    let fault = spec.fault.clone();
+    let t0 = std::time::Instant::now();
+    let job = UniFracJob::with_spec(&tree, &table, spec);
+    // compute-time fault directives (kill/delay) fire inside here
+    let p = job.run_partial_range(start, count)?;
+    p.save(&out)?;
+    // artifact fault directives (truncate/flip) corrupt the file we
+    // just wrote — the supervisor's checksum check must catch them
+    if let Some(plan) = &fault {
+        let m = p.meta();
+        let payload = (m.stripe_count * m.padded_n * 2 * m.fp.bytes()) as u64;
+        for line in plan.corrupt_artifact(&out, start, count, payload)? {
+            println!("fault injected: {line}");
+        }
+    }
+    println!(
+        "worker wrote {out}: stripes {start}..{} ({} samples, {}, {}) in {:.3}s",
+        start + count,
+        table.n_samples(),
+        p.meta().metric,
+        p.meta().fp.name(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `unifrac supervise --table t.tsv --tree t.nwk --output dm.tsv --workers 4`
+///
+/// Run the whole job as a fault-tolerant multi-process stripe fleet:
+/// shard the stripe space across `--workers` re-invocations of
+/// `unifrac worker`, retry failed/timed-out/corrupt shards with
+/// backoff, and finalize a matrix bit-identical to a single-process
+/// run. Resumable: re-running after a kill recomputes only the stripe
+/// ranges the sink hasn't flushed (mmap bitmap / tsv spool).
+pub fn supervise_cmd(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let table_path = args.require("table")?;
+    let tree_path = args.require("tree")?;
+    let workers = args.get_or("workers", 4usize)?;
+    let shard_stripes = args.get_or("shard-stripes", 0usize)?;
+    let timeout_ms = args.get_or("timeout-ms", 0u64)?;
+    let max_retries = args.get_or("max-retries", 3usize)?;
+    let backoff_base_ms = args.get_or("backoff-ms", 50u64)?;
+    let backoff_cap_ms = args.get_or("backoff-cap-ms", 2000u64)?;
+    let work_dir = args.opt("work-dir").map(PathBuf::from);
+    let keep_partials = args.flag("keep-partials");
+    let worker_program = args.opt("worker-program").map(PathBuf::from);
+    args.finish()?;
+    let output = cfg
+        .output
+        .clone()
+        .ok_or_else(|| Error::Cli("supervise needs --output FILE".into()))?;
+    // workers reload these same files; synth problems must be written
+    // out first (`unifrac synth`) — there is nothing to distribute
+    // otherwise
+    let table = if table_path.ends_with(".bin") {
+        read_table_bin(&table_path)?
+    } else {
+        read_table_tsv(&table_path)?
+    };
+    let tree = parse_newick(&std::fs::read_to_string(&tree_path)?)?;
+    let spec = cfg.to_job()?;
+    let fleet = crate::distrib::FleetSpec {
+        table: PathBuf::from(table_path),
+        tree: PathBuf::from(tree_path),
+        output,
+        workers,
+        shard_stripes,
+        timeout: std::time::Duration::from_millis(timeout_ms),
+        max_retries,
+        backoff_base_ms,
+        backoff_cap_ms,
+        seed: cfg.seed,
+        work_dir,
+        keep_partials,
+        worker_program,
+        fault: spec.fault.clone(),
+    };
+    let t0 = std::time::Instant::now();
+    let rep = crate::distrib::supervise(&tree, &table, &spec, &fleet)?;
+    println!(
+        "{} {} over {} samples to {} in {:.3}s",
+        if rep.halted { "HALTED (fault): resumable partial fleet run of" } else { "supervised" },
+        cfg.metric,
+        table.n_samples(),
+        rep.output.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "  stripes: {} total, {} resumed, {} computed | shards: {} dispatched, \
+         {} degraded in-process",
+        rep.stripes_total,
+        rep.stripes_resumed,
+        rep.stripes_computed,
+        rep.shards_dispatched,
+        rep.degraded_shards
+    );
+    println!(
+        "  faults survived: {} worker failures, {} timeouts, {} corrupt partials \
+         rejected, {} retries | {} workers spawned",
+        rep.shards_failed, rep.timeouts, rep.corrupt_rejected, rep.retries, rep.workers_spawned
+    );
+    if rep.checksum_skipped > 0 {
+        eprintln!(
+            "warning: {} shard(s) were v1 partials accepted WITHOUT checksum \
+             verification (older worker binary)",
+            rep.checksum_skipped
+        );
     }
     Ok(())
 }

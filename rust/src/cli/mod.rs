@@ -9,6 +9,8 @@
 //! unifrac convert   --matrix dm.bin --output dm.tsv
 //! unifrac partial   --table t.tsv --tree t.nwk --index 0 --of 4 --out p0.bin
 //! unifrac merge     --inputs p0.bin,p1.bin,p2.bin,p3.bin --output dm.tsv
+//! unifrac supervise --table t.tsv --tree t.nwk --output dm.tsv --workers 4
+//! unifrac worker    --table t.tsv --tree t.nwk --start 0 --count 16 --out s.ufpr
 //! unifrac partition --samples 512 --chips 8         # Table-2 style chip study
 //! unifrac validate-fp32 --samples 128               # paper §4 reproduction
 //! unifrac tables --which 1,3 --scale 512            # regenerate paper tables
@@ -49,6 +51,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "convert" => commands::convert(&mut args),
         "partial" => commands::partial(&mut args),
         "merge" => commands::merge(&mut args),
+        "worker" => commands::worker(&mut args),
+        "supervise" => commands::supervise_cmd(&mut args),
         "partition" => commands::partition(&mut args),
         "validate-fp32" => commands::validate_fp32(&mut args),
         "tables" => commands::tables(&mut args),
@@ -82,6 +86,10 @@ SUBCOMMANDS
   convert        convert a binary condensed matrix (bin/mmap) to TSV
   partial        compute one stripe partial (1 of N) and persist it
   merge          merge persisted partials into the full distance matrix
+  supervise      run a fault-tolerant multi-process worker fleet (see
+                 docs/distributed.md): retry/backoff, checksum-verified
+                 shards, resumable output
+  worker         fleet unit of work: one stripe shard -> one UFPR partial
   partition      Table-2 style multi-chip run with per-chip timing
   validate-fp32  fp32-vs-fp64 Mantel comparison (paper §4)
   tables         regenerate the paper's tables (1-4) at a chosen scale
@@ -140,6 +148,24 @@ PARTIAL / MERGE FLAGS
   --of N              how many partials the stripe space splits into
   --out FILE          where to write the partial (binary, self-describing)
   --inputs A,B,...    partial files to merge
+
+SUPERVISE / WORKER FLAGS
+  --workers N         concurrent worker processes (default 4)
+  --shard-stripes N   stripes per shard (default 0 = auto, ~4 waves/worker;
+                      slower workers receive proportionally smaller shards)
+  --timeout-ms N      per-shard wall-clock limit; timed-out workers are
+                      killed and their shard re-queued (0 = no limit)
+  --max-retries N     re-queue attempts per shard before the fleet fails (3)
+  --backoff-ms N      base retry backoff, doubled per attempt + jitter (50)
+  --backoff-cap-ms N  backoff ceiling (2000)
+  --work-dir DIR      where shard partials land (default <output>.shards/)
+  --keep-partials     keep shard partials after flushing (debugging)
+  --worker-program P  worker executable (default: this binary)
+  --fault SPEC        deterministic fault injection (or UNIFRAC_FAULT env):
+                      kill@N | truncate@N[:BYTES] | flip@N | delay@N:MS |
+                      halt@K, ';'-separated, anchored to global stripe N
+                      (halt@K: stop after K shard flushes, resumable)
+  --start S --count C worker: the stripe shard to compute
 
 CONVERT FLAGS
   --matrix FILE       binary condensed matrix to read (bin/mmap output)

@@ -55,6 +55,10 @@ pub struct RunConfig {
     pub output_format: String,
     /// Resident-memory budget in MiB for out-of-core runs (0 = off).
     pub max_resident_mb: usize,
+    /// Deterministic fault-injection spec (`--fault` / `UNIFRAC_FAULT`,
+    /// e.g. `"kill@3;flip@10"`); empty = no injection. See
+    /// `distrib::FaultPlan` for the grammar.
+    pub fault: String,
 }
 
 impl Default for RunConfig {
@@ -81,6 +85,7 @@ impl Default for RunConfig {
             output: None,
             output_format: "tsv".into(),
             max_resident_mb: 0,
+            fault: String::new(),
         }
     }
 }
@@ -159,6 +164,9 @@ impl RunConfig {
         }
         if let Some(v) = get("max_resident_mb") {
             self.max_resident_mb = v.as_usize().ok_or_else(|| bad("max_resident_mb"))?;
+        }
+        if let Some(v) = get("fault") {
+            self.fault = v.as_str().ok_or_else(|| bad("fault"))?.to_string();
         }
         Ok(())
     }
@@ -273,6 +281,11 @@ impl RunConfig {
                 Some(self.max_resident_mb)
             } else {
                 None
+            },
+            fault: if self.fault.is_empty() {
+                None
+            } else {
+                Some(crate::distrib::FaultPlan::parse(&self.fault, self.seed)?)
             },
         })
     }
@@ -472,6 +485,23 @@ pool_depth = 16
         let cfg = RunConfig { cpu_features: "sse9".into(), ..Default::default() };
         let err = cfg.to_job().expect_err("unknown cpu_features must fail");
         assert!(err.to_string().contains("auto|scalar|avx2|neon"), "{err}");
+    }
+
+    #[test]
+    fn fault_spec_parses_and_rejects_garbage() {
+        let doc = TomlDoc::parse("[run]\nfault = \"kill@3;halt@1\"\nseed = 7\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.fault, "kill@3;halt@1");
+        let job = cfg.to_job().unwrap();
+        let plan = job.fault.expect("fault plan lowered");
+        assert_eq!(plan.seed, 7, "fault PRNG seeds from the run seed");
+        assert_eq!(plan.halt_after(), Some(1));
+        // default: no injection
+        assert!(RunConfig::default().to_job().unwrap().fault.is_none());
+        // malformed spec is a config error at lowering time
+        let cfg = RunConfig { fault: "explode@9".into(), ..Default::default() };
+        assert!(matches!(cfg.to_job(), Err(Error::Config(_))));
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Deterministic fault injection for the stripe fleet.
+//!
+//! A [`FaultPlan`] is a parsed `--fault` / `UNIFRAC_FAULT` spec — a
+//! `;`-separated list of directives, each anchored to a global stripe
+//! index so the same spec reproduces the same failure on every run:
+//!
+//! ```text
+//! kill@N            abort the worker whose shard contains stripe N
+//!                   (before its partial is written)
+//! truncate@N[:B]    chop B bytes (default 16) off the end of the
+//!                   partial written by the shard containing stripe N
+//! flip@N            flip one payload bit of that shard's partial
+//!                   (byte/bit chosen by the seeded PRNG)
+//! delay@N:MS        sleep MS milliseconds before computing the shard
+//!                   containing stripe N
+//! halt@K            supervisor-side: stop the fleet after K shards
+//!                   have flushed, leaving a resumable sink behind
+//! ```
+//!
+//! The supervisor owns the plan: each non-`halt` directive is handed to
+//! exactly one worker (the first dispatch whose shard covers its
+//! stripe) and never re-sent on retry, so every injected failure fires
+//! once and the fleet provably converges. Compute-time directives
+//! (`kill`, `delay`) fire inside `UniFracJob::run_partial_range`;
+//! artifact directives (`truncate`, `flip`) are applied by the `worker`
+//! subcommand to the partial file it just wrote.
+
+use crate::error::{Error, Result};
+use crate::util::prng::Xoshiro256;
+use std::fmt;
+use std::path::Path;
+
+/// One failure mode, anchored at a stripe (or, for `halt`, a flush count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Abort the worker process (`std::process::abort`) before it
+    /// writes its partial — simulates an OOM kill or node loss.
+    Kill,
+    /// Truncate this many bytes off the end of the written partial —
+    /// simulates a torn write. The checksum must catch it.
+    Truncate(usize),
+    /// Flip one bit inside the written partial's payload — simulates
+    /// bit rot. The checksum must catch it.
+    Flip,
+    /// Sleep this many milliseconds before computing — simulates a
+    /// straggler (drives the supervisor's timeout/re-queue path).
+    Delay(u64),
+    /// Supervisor-side: stop the whole fleet after the anchor count of
+    /// shard flushes, leaving a resumable sink (tests resume).
+    Halt,
+}
+
+/// A [`FaultKind`] plus its anchor: the global stripe index the
+/// directive fires at (`halt`: the number of flushed shards).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultDirective {
+    /// What to do.
+    pub kind: FaultKind,
+    /// Global stripe index (or flush count for [`FaultKind::Halt`]).
+    pub at: usize,
+}
+
+impl fmt::Display for FaultDirective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            FaultKind::Kill => write!(f, "kill@{}", self.at),
+            FaultKind::Truncate(n) => write!(f, "truncate@{}:{n}", self.at),
+            FaultKind::Flip => write!(f, "flip@{}", self.at),
+            FaultKind::Delay(ms) => write!(f, "delay@{}:{ms}", self.at),
+            FaultKind::Halt => write!(f, "halt@{}", self.at),
+        }
+    }
+}
+
+/// A parsed, seeded fault-injection plan (see the module docs for the
+/// spec grammar). Deterministic: the same spec + seed reproduces the
+/// same corruption bytes on every platform.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The directives, in spec order.
+    pub directives: Vec<FaultDirective>,
+    /// Seed for the corruption PRNG (bit/byte choice of `flip`).
+    pub seed: u64,
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, d) in self.directives.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FaultPlan {
+    /// An empty plan (no directives) with the given seed.
+    pub fn empty(seed: u64) -> Self {
+        Self { directives: Vec::new(), seed }
+    }
+
+    /// Parse a `--fault` spec. Unknown directives, missing anchors and
+    /// malformed numbers are typed config errors naming the grammar.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        let mut directives = Vec::new();
+        for raw in spec.split(';') {
+            let part = raw.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, anchor) = part.split_once('@').ok_or_else(|| bad(part, "missing @N"))?;
+            let (at_str, arg) = match anchor.split_once(':') {
+                Some((a, b)) => (a, Some(b)),
+                None => (anchor, None),
+            };
+            let at: usize = at_str.parse().map_err(|_| bad(part, "anchor must be an integer"))?;
+            let kind = match (name, arg) {
+                ("kill", None) => FaultKind::Kill,
+                ("flip", None) => FaultKind::Flip,
+                ("halt", None) => FaultKind::Halt,
+                ("truncate", None) => FaultKind::Truncate(16),
+                ("truncate", Some(b)) => FaultKind::Truncate(
+                    b.parse().map_err(|_| bad(part, "truncate byte count must be an integer"))?,
+                ),
+                ("delay", Some(ms)) => FaultKind::Delay(
+                    ms.parse().map_err(|_| bad(part, "delay milliseconds must be an integer"))?,
+                ),
+                ("delay", None) => return Err(bad(part, "delay needs @N:MS")),
+                _ => return Err(bad(part, "unknown directive")),
+            };
+            directives.push(FaultDirective { kind, at });
+        }
+        Ok(Self { directives, seed })
+    }
+
+    /// True when no directives remain.
+    pub fn is_empty(&self) -> bool {
+        self.directives.is_empty()
+    }
+
+    /// The smallest `halt@K` anchor, if any (supervisor-side stop).
+    pub fn halt_after(&self) -> Option<usize> {
+        self.directives
+            .iter()
+            .filter(|d| d.kind == FaultKind::Halt)
+            .map(|d| d.at)
+            .min()
+    }
+
+    /// Remove (and return as an argv-ready spec string) every
+    /// worker-side directive whose anchor stripe falls in
+    /// `start .. start + count`. `halt` directives are supervisor-owned
+    /// and never taken. Returns `None` when nothing matched — the
+    /// single-fire guarantee: a retried shard gets no directives.
+    pub fn take_for_range(&mut self, start: usize, count: usize) -> Option<String> {
+        let in_range = |d: &FaultDirective| {
+            d.kind != FaultKind::Halt && d.at >= start && d.at < start + count
+        };
+        if !self.directives.iter().any(in_range) {
+            return None;
+        }
+        let mut taken = Vec::new();
+        self.directives.retain(|d| {
+            if in_range(d) {
+                taken.push(*d);
+                false
+            } else {
+                true
+            }
+        });
+        Some(FaultPlan { directives: taken, seed: self.seed }.to_string())
+    }
+
+    /// Fire the compute-time directives (`delay`, then `kill`) whose
+    /// anchor falls in `start .. start + count`. Called by the partial
+    /// compute path, i.e. inside the worker process. `kill` never
+    /// returns — it aborts the process, simulating a node loss.
+    pub fn apply_compute_faults(&self, start: usize, count: usize) {
+        let hits = self
+            .directives
+            .iter()
+            .filter(|d| d.at >= start && d.at < start + count);
+        for d in hits.clone() {
+            if let FaultKind::Delay(ms) = d.kind {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+        for d in hits {
+            if d.kind == FaultKind::Kill {
+                eprintln!("fault: kill@{} — aborting worker", d.at);
+                std::process::abort();
+            }
+        }
+    }
+
+    /// Fire the artifact directives (`truncate`, `flip`) whose anchor
+    /// falls in `start .. start + count` against the partial file at
+    /// `path`. `payload_bytes` is the file's numeric payload length
+    /// (trailing bytes) — `flip` targets a payload bit so the payload
+    /// checksum is what must catch it. Returns a description of each
+    /// applied directive (worker log lines).
+    pub fn corrupt_artifact(
+        &self,
+        path: impl AsRef<Path>,
+        start: usize,
+        count: usize,
+        payload_bytes: u64,
+    ) -> Result<Vec<String>> {
+        let path = path.as_ref();
+        let mut applied = Vec::new();
+        for d in &self.directives {
+            if d.at < start || d.at >= start + count {
+                continue;
+            }
+            match d.kind {
+                FaultKind::Truncate(n) => {
+                    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+                    let len = f.metadata()?.len();
+                    let new_len = len.saturating_sub(n as u64);
+                    f.set_len(new_len)?;
+                    applied.push(format!("truncate@{}: {len} -> {new_len} bytes", d.at));
+                }
+                FaultKind::Flip => {
+                    let mut bytes = std::fs::read(path)?;
+                    let len = bytes.len() as u64;
+                    if len == 0 {
+                        continue;
+                    }
+                    // deterministic per (seed, anchor): the same spec
+                    // flips the same bit on every run
+                    let mut prng = Xoshiro256::new(self.seed ^ d.at as u64);
+                    let span = payload_bytes.clamp(1, len) as usize;
+                    let off = bytes.len() - span + prng.below(span);
+                    let bit = prng.below(8) as u32;
+                    bytes[off] ^= 1 << bit;
+                    std::fs::write(path, &bytes)?;
+                    applied.push(format!("flip@{}: bit {bit} of byte {off}", d.at));
+                }
+                FaultKind::Kill | FaultKind::Delay(_) | FaultKind::Halt => {}
+            }
+        }
+        Ok(applied)
+    }
+}
+
+fn bad(part: &str, why: &str) -> Error {
+    Error::Config(format!(
+        "bad fault directive {part:?}: {why} (grammar: kill@N | truncate@N[:BYTES] | \
+         flip@N | delay@N:MS | halt@K, ';'-separated)"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_through_display() {
+        let spec = "kill@3;truncate@5:32;flip@7;delay@2:50;halt@1";
+        let plan = FaultPlan::parse(spec, 9).unwrap();
+        assert_eq!(plan.directives.len(), 5);
+        assert_eq!(plan.to_string(), spec);
+        assert_eq!(FaultPlan::parse(&plan.to_string(), 9).unwrap(), plan);
+        // default truncate byte count
+        let t = FaultPlan::parse("truncate@4", 0).unwrap();
+        assert_eq!(t.directives[0].kind, FaultKind::Truncate(16));
+        // empty spec -> empty plan
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in ["kill", "kill@x", "boom@3", "delay@3", "delay@3:ms", "truncate@1:x"] {
+            let err = FaultPlan::parse(bad, 0).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{bad}: {err}");
+            assert!(err.to_string().contains("grammar"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn take_for_range_is_single_fire_and_leaves_halt() {
+        let mut plan = FaultPlan::parse("kill@3;flip@10;halt@2", 1).unwrap();
+        // stripe 3 falls in [0, 5): kill taken, flip + halt stay
+        let spec = plan.take_for_range(0, 5).unwrap();
+        assert_eq!(spec, "kill@3");
+        assert_eq!(plan.directives.len(), 2);
+        // second dispatch of the same range gets nothing
+        assert_eq!(plan.take_for_range(0, 5), None);
+        // halt is never handed to a worker
+        assert_eq!(plan.take_for_range(0, 100).unwrap(), "flip@10");
+        assert_eq!(plan.halt_after(), Some(2));
+    }
+
+    #[test]
+    fn corrupt_artifact_is_deterministic_and_ranged() {
+        let dir = std::env::temp_dir().join(format!("unifrac_fault_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.ufpr");
+        let original: Vec<u8> = (0..200u8).collect();
+
+        // out-of-range directives leave the file alone
+        std::fs::write(&path, &original).unwrap();
+        let plan = FaultPlan::parse("flip@50;truncate@60", 7).unwrap();
+        assert!(plan.corrupt_artifact(&path, 0, 10, 64).unwrap().is_empty());
+        assert_eq!(std::fs::read(&path).unwrap(), original);
+
+        // flip: exactly one bit differs, in the payload (last 64 bytes),
+        // and the same seed flips the same bit again
+        let plan = FaultPlan::parse("flip@5", 7).unwrap();
+        plan.corrupt_artifact(&path, 0, 10, 64).unwrap();
+        let once = std::fs::read(&path).unwrap();
+        let diffs: Vec<usize> =
+            (0..200).filter(|&i| once[i] != original[i]).collect();
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0] >= 200 - 64, "flip landed outside the payload");
+        assert_eq!((once[diffs[0]] ^ original[diffs[0]]).count_ones(), 1);
+        std::fs::write(&path, &original).unwrap();
+        plan.corrupt_artifact(&path, 0, 10, 64).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), once);
+
+        // truncate chops the tail
+        std::fs::write(&path, &original).unwrap();
+        let plan = FaultPlan::parse("truncate@5:24", 7).unwrap();
+        plan.corrupt_artifact(&path, 0, 10, 64).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), original[..176]);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compute_faults_outside_range_are_noops() {
+        // a kill anchored outside the range must NOT abort this process
+        let plan = FaultPlan::parse("kill@99;delay@98:1", 0).unwrap();
+        plan.apply_compute_faults(0, 10);
+        // in-range delay sleeps (and returns)
+        let plan = FaultPlan::parse("delay@3:1", 0).unwrap();
+        let t0 = std::time::Instant::now();
+        plan.apply_compute_faults(0, 5);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(1));
+    }
+}

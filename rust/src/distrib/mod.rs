@@ -1,0 +1,35 @@
+//! Fault-tolerant multi-process stripe fleet (ISSUE 7 tentpole).
+//!
+//! Striped UniFrac's stripes are embarrassingly parallel, and PR 4 made
+//! stripe partials first-class (`UFPR` files + `merge_partials`). This
+//! module adds the missing operational layer for running that split
+//! across *processes that fail*: a [`supervise`] loop that shards the
+//! stripe space over re-invocations of the `unifrac worker` subcommand,
+//! flushes each finished shard into a resumable on-disk sink, and
+//! converges on a matrix bit-identical to the single-process run
+//! despite killed workers, stragglers and corrupt artifacts.
+//!
+//! The pieces:
+//!
+//! * [`supervisor`] — the dispatch/poll loop: per-slot speed tracking
+//!   (slower workers get smaller shards), per-shard timeouts, bounded
+//!   retry with exponential backoff + jitter, graceful degradation to
+//!   in-process compute when spawning fails, and resume from a prior
+//!   interrupted run via the sink's coverage state.
+//! * [`fault`] — the deterministic fault-injection harness
+//!   (`--fault` / `UNIFRAC_FAULT`): kill/truncate/flip/delay/halt
+//!   directives anchored to stripe indices, seeded so every failure
+//!   reproduces exactly. The property suite in `tests/distrib_faults.rs`
+//!   drives it to prove convergence.
+//!
+//! Integrity: `UFPR` partials and `UFDM` matrices carry CRC32C
+//! checksums (format v2); the supervisor treats a checksum rejection as
+//! one more retryable shard failure, so torn writes and bit rot are
+//! recomputed, never merged. See `docs/distributed.md` for the
+//! operator guide and the wire-format/retry-policy reference.
+
+pub mod fault;
+pub mod supervisor;
+
+pub use fault::{FaultDirective, FaultKind, FaultPlan};
+pub use supervisor::{classify_exit, supervise, Disposition, FleetReport, FleetSpec};

@@ -1,0 +1,735 @@
+//! The stripe-fleet supervisor: shard the stripe space across worker
+//! *processes*, survive their failures, and converge on the exact
+//! single-process matrix.
+//!
+//! Each worker is a re-invocation of the `unifrac` CLI's `worker`
+//! subcommand computing one stripe shard into a checksummed `UFPR`
+//! partial. The supervisor polls the fleet, flushes finished shards
+//! into a resumable sink, and treats every failure mode uniformly as a
+//! retryable shard: a killed worker, a timed-out straggler, and a
+//! corrupt partial (CRC32C rejection at load) all re-queue with
+//! exponential backoff + jitter onto the surviving workers. Worker
+//! speeds are tracked per slot, so a slower worker receives smaller
+//! remaining shards (the heterogeneous-fleet policy). If workers cannot
+//! be spawned at all, the supervisor degrades gracefully and computes
+//! shards in-process — a one-worker local fleet.
+//!
+//! Bit-identity: the supervisor resolves the job's engine/padding
+//! geometry once and pins it on every worker's command line, and each
+//! worker computes its shard through the same static-scheduler partial
+//! path a single-process run uses — so the merged matrix equals the
+//! single-process result exactly (`== 0.0`), per the partial/merge
+//! guarantee.
+
+use super::fault::FaultPlan;
+use crate::api::{FpWidth, JobSpec, PartialData, PartialResult, UniFracJob};
+use crate::error::{Error, Result};
+use crate::matrix::{DistMatrixSink, MmapCondensedSink, OutputFormat, SinkMeta, StreamTsvSink};
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::unifrac::CpuFeatures;
+use crate::util::prng::Xoshiro256;
+use crate::util::Real;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// How a finished worker process is handled, keyed off its exit code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Disposition {
+    /// Exit 0: load, verify and flush the shard's partial.
+    Success,
+    /// Transient by construction (I/O, runtime, corruption, panic, or
+    /// death by signal): re-queue the shard with backoff.
+    Retry,
+    /// Deterministic (bad config, bad input, unsupported combination):
+    /// retrying reproduces it — fail the fleet with a typed error.
+    Fatal,
+}
+
+/// Classify a worker exit code (`None` = killed by a signal) into a
+/// [`Disposition`]. The codes are the stable per-error-class codes of
+/// [`Error::code`] shared with the C ABI — see `include/unifrac.h`.
+pub fn classify_exit(code: Option<i32>) -> Disposition {
+    match code {
+        None => Disposition::Retry, // signal: OOM-kill, node loss, injected abort
+        Some(0) => Disposition::Success,
+        // Io(10), Xla(17) and Corrupt(22) are environmental; 99 is the
+        // CLI's panic code. All can succeed on a healthy retry.
+        Some(10) | Some(17) | Some(22) | Some(99) => Disposition::Retry,
+        // Newick(11), Table(12), Config(13), Manifest(14), Shape(15),
+        // NoArtifact(16), Invalid(18), Cli(19), Unsupported(20),
+        // Merge(21): deterministic — the same argv fails the same way.
+        Some(11..=16) | Some(18..=21) => Disposition::Fatal,
+        // unknown codes (future versions, shells): assume transient
+        Some(_) => Disposition::Retry,
+    }
+}
+
+/// What the supervisor needs beyond the [`JobSpec`]: the worker fleet's
+/// shape, the retry/backoff policy, the on-disk inputs workers reload,
+/// and the (optional) fault-injection plan.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Feature-table path workers load (`.tsv` or `.bin`).
+    pub table: PathBuf,
+    /// Newick tree path workers load.
+    pub tree: PathBuf,
+    /// Where the final matrix lands (format per [`JobSpec::output_format`]).
+    pub output: PathBuf,
+    /// Concurrent worker processes (minimum 1).
+    pub workers: usize,
+    /// Stripes per shard; 0 sizes shards automatically to ~4 waves per
+    /// worker. Slower workers receive proportionally smaller shards.
+    pub shard_stripes: usize,
+    /// Per-shard wall-clock limit; `Duration::ZERO` disables timeouts.
+    pub timeout: Duration,
+    /// Re-queue attempts per shard before the fleet fails.
+    pub max_retries: usize,
+    /// Base backoff delay in milliseconds (doubles per attempt).
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling in milliseconds.
+    pub backoff_cap_ms: u64,
+    /// Seed for the backoff jitter stream.
+    pub seed: u64,
+    /// Directory for shard partials; `None` puts them next to `output`
+    /// (in `<output>.shards/`).
+    pub work_dir: Option<PathBuf>,
+    /// Keep shard partials after a successful flush (debugging).
+    pub keep_partials: bool,
+    /// Worker executable; `None` re-invokes the current executable.
+    pub worker_program: Option<PathBuf>,
+    /// Deterministic fault-injection plan (tests, CI chaos smoke).
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        Self {
+            table: PathBuf::new(),
+            tree: PathBuf::new(),
+            output: PathBuf::from("dm.tsv"),
+            workers: 4,
+            shard_stripes: 0,
+            timeout: Duration::ZERO,
+            max_retries: 3,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2000,
+            seed: 42,
+            work_dir: None,
+            keep_partials: false,
+            worker_program: None,
+            fault: None,
+        }
+    }
+}
+
+/// What a supervised run did — the operator-facing accounting every
+/// fault either shows up in (retries, timeouts, rejected partials) or
+/// provably did not affect (a clean report plus a bit-identical matrix).
+#[derive(Clone, Debug, Default)]
+pub struct FleetReport {
+    /// Stripes in the job's stripe space.
+    pub stripes_total: usize,
+    /// Stripes already flushed by a prior interrupted run (resume).
+    pub stripes_resumed: usize,
+    /// Stripes computed (and flushed) by this run.
+    pub stripes_computed: usize,
+    /// Shards handed to workers (including in-process degraded ones).
+    pub shards_dispatched: usize,
+    /// Worker exits classified retryable (non-zero exit or signal).
+    pub shards_failed: usize,
+    /// Shard re-queues (failures + timeouts + corrupt partials).
+    pub retries: usize,
+    /// Workers killed for exceeding [`FleetSpec::timeout`].
+    pub timeouts: usize,
+    /// Partials rejected at load (checksum mismatch / torn write) —
+    /// deleted and recomputed, never merged.
+    pub corrupt_rejected: usize,
+    /// Partials accepted WITHOUT checksum verification (v1 files from
+    /// an older worker binary).
+    pub checksum_skipped: usize,
+    /// Shards computed in-process because spawning failed (graceful
+    /// degradation down to a local single worker).
+    pub degraded_shards: usize,
+    /// Worker processes spawned over the fleet's lifetime.
+    pub workers_spawned: usize,
+    /// True when a `halt@K` fault stopped the fleet early: the sink is
+    /// left resumable and the matrix is NOT finalized.
+    pub halted: bool,
+    /// Where the matrix landed.
+    pub output: PathBuf,
+}
+
+/// Precision-erased sink: the supervisor flushes whichever payload
+/// width the workers produced without being generic itself.
+enum AnySink {
+    F32(Box<dyn DistMatrixSink<f32>>),
+    F64(Box<dyn DistMatrixSink<f64>>),
+}
+
+impl AnySink {
+    fn build(job: &JobSpec, meta: SinkMeta, path: &std::path::Path) -> Result<Self> {
+        Ok(match job.precision {
+            FpWidth::F32 => AnySink::F32(build_typed::<f32>(job.output_format, meta, path)?),
+            FpWidth::F64 => AnySink::F64(build_typed::<f64>(job.output_format, meta, path)?),
+        })
+    }
+
+    fn missing_ranges(&self) -> Vec<(usize, usize)> {
+        match self {
+            AnySink::F32(s) => s.missing_ranges(),
+            AnySink::F64(s) => s.missing_ranges(),
+        }
+    }
+
+    fn put_partial(&mut self, p: &PartialResult) -> Result<()> {
+        match (self, p.data()) {
+            (AnySink::F32(s), PartialData::F32(b)) => s.put_block(b),
+            (AnySink::F64(s), PartialData::F64(b)) => s.put_block(b),
+            (AnySink::F32(_), PartialData::F64(_)) => Err(Error::invalid(
+                "worker produced an f64 partial for an f32 fleet run",
+            )),
+            (AnySink::F64(_), PartialData::F32(_)) => Err(Error::invalid(
+                "worker produced an f32 partial for an f64 fleet run",
+            )),
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        match self {
+            AnySink::F32(s) => s.finish(),
+            AnySink::F64(s) => s.finish(),
+        }
+    }
+
+    fn abandon(&mut self) -> Result<()> {
+        match self {
+            AnySink::F32(s) => s.abandon(),
+            AnySink::F64(s) => s.abandon(),
+        }
+    }
+}
+
+fn build_typed<R: Real>(
+    format: OutputFormat,
+    meta: SinkMeta,
+    path: &std::path::Path,
+) -> Result<Box<dyn DistMatrixSink<R>>> {
+    Ok(match format {
+        // tsv resumes from its spool, mmap from its coverage bitmap;
+        // bin is write-once (fresh file, full recompute)
+        OutputFormat::Tsv => Box::new(StreamTsvSink::create(path, meta)?),
+        OutputFormat::Bin => Box::new(MmapCondensedSink::create_buffered(path, meta)?),
+        OutputFormat::Mmap => Box::new(MmapCondensedSink::create_or_resume(path, meta)?),
+    })
+}
+
+/// A shard waiting to run (fresh, or re-queued after a failure).
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    start: usize,
+    count: usize,
+    /// Completed failed attempts so far (0 = never dispatched).
+    attempt: usize,
+    ready_at: Instant,
+}
+
+/// A shard currently running in a worker process.
+struct Running {
+    child: Child,
+    start: usize,
+    count: usize,
+    attempt: usize,
+    out: PathBuf,
+    t0: Instant,
+}
+
+/// Exponential backoff with jitter: `min(cap, base * 2^attempt)` plus a
+/// uniform jitter in `[0, base)` milliseconds.
+fn backoff_ms(base: u64, cap: u64, attempt: usize, prng: &mut Xoshiro256) -> u64 {
+    let exp = base.saturating_mul(1u64 << attempt.min(16)).min(cap.max(base));
+    exp + prng.below(base.max(1) as usize) as u64
+}
+
+/// Shard size for a slot given the measured per-slot rates
+/// (stripes/sec; 0 = unmeasured): proportional to the slot's speed
+/// relative to the fleet mean, clamped to `[1, 4 * base]`.
+fn shard_size_for(base: usize, rates: &[f64], slot: usize) -> usize {
+    let known: Vec<f64> = rates.iter().copied().filter(|r| *r > 0.0).collect();
+    if known.is_empty() || rates[slot] <= 0.0 {
+        return base.max(1);
+    }
+    let mean = known.iter().sum::<f64>() / known.len() as f64;
+    if mean <= 0.0 {
+        return base.max(1);
+    }
+    let scaled = (base as f64 * rates[slot] / mean).round() as usize;
+    scaled.clamp(1, base.saturating_mul(4).max(1))
+}
+
+fn kill_all(running: &mut [Option<Running>]) {
+    for slot in running.iter_mut() {
+        if let Some(mut r) = slot.take() {
+            let _ = r.child.kill();
+            let _ = r.child.wait();
+        }
+    }
+}
+
+/// Verify a loaded partial against the shard the supervisor dispatched.
+/// Any mismatch is deterministic (wrong binary, wrong inputs) — fatal.
+fn validate_partial(
+    p: &PartialResult,
+    table: &FeatureTable,
+    job: &JobSpec,
+    padded: usize,
+    start: usize,
+    count: usize,
+) -> Result<()> {
+    let m = p.meta();
+    if m.stripe_start != start || m.stripe_count != count {
+        return Err(Error::invalid(format!(
+            "worker partial covers stripes {}+{}, supervisor dispatched {start}+{count}",
+            m.stripe_start, m.stripe_count
+        )));
+    }
+    if m.padded_n != padded || m.n_samples != table.n_samples() {
+        return Err(Error::invalid(format!(
+            "worker partial geometry ({} samples padded {}) disagrees with the fleet \
+             ({} samples padded {padded}) — mismatched inputs or binary",
+            m.n_samples,
+            m.padded_n,
+            table.n_samples()
+        )));
+    }
+    if m.metric != job.metric || m.fp != job.precision {
+        return Err(Error::invalid(format!(
+            "worker partial computed {}/{}, fleet wants {}/{}",
+            m.metric,
+            m.fp.name(),
+            job.metric,
+            job.precision.name()
+        )));
+    }
+    if m.sample_ids.as_slice() != table.sample_ids() {
+        return Err(Error::invalid(
+            "worker partial sample ids disagree with the fleet's table",
+        ));
+    }
+    Ok(())
+}
+
+/// Run `job` over `(tree, table)` as a supervised multi-process fleet
+/// per `fleet`, writing the matrix to `fleet.output`.
+///
+/// The caller loads the problem once (the same files named by
+/// `fleet.table` / `fleet.tree` that workers reload); the supervisor
+/// resolves the geometry, opens a resumable sink, dispatches the
+/// missing stripe ranges as shards, and survives worker failure per the
+/// module docs. Returns the [`FleetReport`] accounting; the matrix is
+/// finalized unless a `halt@K` fault stopped the fleet early.
+pub fn supervise(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    job: &JobSpec,
+    fleet: &FleetSpec,
+) -> Result<FleetReport> {
+    if job.stripe_range.is_some() {
+        return Err(Error::invalid(
+            "supervise runs the whole stripe space; drop the JobSpec stripe_range",
+        ));
+    }
+    // the supervisor never fires worker-side faults itself — they reach
+    // workers via argv only (single-fire, owned by the dispatch loop)
+    let mut local = job.clone();
+    local.fault = None;
+    let jobh = UniFracJob::with_spec(tree, table, local);
+    let (engine, padded, s_total) = jobh.geometry()?;
+
+    let meta = SinkMeta {
+        n_samples: table.n_samples(),
+        padded_n: padded,
+        metric: job.metric,
+        fp_bytes: job.precision.bytes(),
+        sample_ids: table.sample_ids().to_vec(),
+    };
+    let mut sink = AnySink::build(job, meta, &fleet.output)?;
+    let mut remaining: VecDeque<(usize, usize)> = sink.missing_ranges().into();
+    let owed: usize = remaining.iter().map(|r| r.1).sum();
+
+    let mut report = FleetReport {
+        stripes_total: s_total,
+        stripes_resumed: s_total - owed,
+        output: fleet.output.clone(),
+        ..Default::default()
+    };
+
+    let workers_n = fleet.workers.max(1);
+    let base_shard = if fleet.shard_stripes > 0 {
+        fleet.shard_stripes
+    } else {
+        (owed / (workers_n * 4)).max(1)
+    };
+    let program = match &fleet.worker_program {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()?,
+    };
+    let work_dir = fleet
+        .work_dir
+        .clone()
+        .unwrap_or_else(|| fleet.output.with_extension("shards"));
+    std::fs::create_dir_all(&work_dir)?;
+
+    let mut fault = fleet.fault.clone().unwrap_or_else(|| FaultPlan::empty(fleet.seed));
+    let halt_after = fault.halt_after();
+
+    let mut running: Vec<Option<Running>> = (0..workers_n).map(|_| None).collect();
+    let mut retries: Vec<Pending> = Vec::new();
+    let mut rates: Vec<f64> = vec![0.0; workers_n];
+    let mut prng = Xoshiro256::new(fleet.seed ^ 0xF1EE_7F1E);
+    let mut flushed_shards = 0usize;
+
+    // one closure per failure path: re-queue with backoff, or fail the
+    // fleet once the shard's retry budget is spent
+    let requeue = |p: Pending,
+                   why: &str,
+                   retries: &mut Vec<Pending>,
+                   report: &mut FleetReport,
+                   prng: &mut Xoshiro256|
+     -> Result<()> {
+        if p.attempt >= fleet.max_retries {
+            return Err(Error::invalid(format!(
+                "shard {}+{} failed {} attempts (last: {why}); giving up",
+                p.start,
+                p.count,
+                p.attempt + 1
+            )));
+        }
+        let delay = backoff_ms(fleet.backoff_base_ms, fleet.backoff_cap_ms, p.attempt, prng);
+        report.retries += 1;
+        retries.push(Pending {
+            attempt: p.attempt + 1,
+            ready_at: Instant::now() + Duration::from_millis(delay),
+            ..p
+        });
+        Ok(())
+    };
+
+    'fleet: loop {
+        let now = Instant::now();
+
+        // ---- dispatch: fill every free slot ----
+        for slot in 0..workers_n {
+            if running[slot].is_some() {
+                continue;
+            }
+            // ready re-queued shards first (they block completion)
+            let next = if let Some(i) = retries.iter().position(|p| p.ready_at <= now) {
+                Some(retries.swap_remove(i))
+            } else {
+                remaining.pop_front().map(|(start, count)| {
+                    let take = shard_size_for(base_shard, &rates, slot).min(count);
+                    if take < count {
+                        remaining.push_front((start + take, count - take));
+                    }
+                    Pending { start, count: take, attempt: 0, ready_at: now }
+                })
+            };
+            let Some(p) = next else { continue };
+            report.shards_dispatched += 1;
+            // faults fire on a shard's FIRST dispatch only
+            let fault_arg =
+                if p.attempt == 0 { fault.take_for_range(p.start, p.count) } else { None };
+            let out = work_dir.join(format!("shard_{}_{}.ufpr", p.start, p.count));
+            let _ = std::fs::remove_file(&out);
+            let mut cmd = Command::new(&program);
+            cmd.arg("worker")
+                .arg("--table")
+                .arg(&fleet.table)
+                .arg("--tree")
+                .arg(&fleet.tree)
+                .arg("--start")
+                .arg(p.start.to_string())
+                .arg("--count")
+                .arg(p.count.to_string())
+                .arg("--out")
+                .arg(&out)
+                .arg("--metric")
+                .arg(job.metric.name())
+                .arg("--alpha")
+                .arg(job.metric.alpha().to_string())
+                .arg("--dtype")
+                .arg(job.precision.name())
+                .arg("--engine")
+                .arg(engine.name())
+                .arg("--block-k")
+                .arg(job.block_k.to_string())
+                .arg("--sparse-threshold")
+                .arg(job.sparse_threshold.to_string())
+                .arg("--threads")
+                .arg(job.threads.to_string())
+                .arg("--batch")
+                .arg(job.batch_capacity.to_string())
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                // fault plans reach workers only through --fault on
+                // their FIRST dispatch: a UNIFRAC_FAULT set on the
+                // supervisor is the *fleet's* plan, and inheriting it
+                // would re-fire every fault on every retry
+                .env_remove("UNIFRAC_FAULT");
+            if job.cpu_features != CpuFeatures::Auto {
+                cmd.arg("--cpu-features").arg(job.cpu_features.name());
+            }
+            if let Some(spec) = &fault_arg {
+                // the corruption PRNG is seeded worker-side from the
+                // config seed — pin it so flips reproduce per fleet seed
+                cmd.arg("--seed").arg(fleet.seed.to_string());
+                cmd.arg("--fault").arg(spec);
+            }
+            match cmd.spawn() {
+                Ok(child) => {
+                    report.workers_spawned += 1;
+                    running[slot] = Some(Running {
+                        child,
+                        start: p.start,
+                        count: p.count,
+                        attempt: p.attempt,
+                        out,
+                        t0: now,
+                    });
+                }
+                Err(_) => {
+                    // graceful degradation: no subprocess available —
+                    // compute the shard in-process (single local worker)
+                    let part = match jobh.run_partial_range(p.start, p.count) {
+                        Ok(part) => part,
+                        Err(e) => {
+                            kill_all(&mut running);
+                            let _ = sink.abandon();
+                            return Err(e);
+                        }
+                    };
+                    if let Err(e) = sink.put_partial(&part) {
+                        kill_all(&mut running);
+                        let _ = sink.abandon();
+                        return Err(e);
+                    }
+                    report.degraded_shards += 1;
+                    report.stripes_computed += p.count;
+                    flushed_shards += 1;
+                    if halt_after.map_or(false, |k| flushed_shards >= k) {
+                        report.halted = true;
+                        break 'fleet;
+                    }
+                }
+            }
+        }
+
+        // ---- completion check ----
+        if remaining.is_empty() && retries.is_empty() && running.iter().all(Option::is_none) {
+            break 'fleet;
+        }
+
+        // ---- poll the fleet ----
+        for slot in 0..workers_n {
+            enum Event {
+                Exited(Option<i32>),
+                TimedOut,
+            }
+            let event = match &mut running[slot] {
+                None => continue,
+                Some(r) => match r.child.try_wait() {
+                    Ok(Some(status)) => Event::Exited(status.code()),
+                    Ok(None) => {
+                        if !fleet.timeout.is_zero() && r.t0.elapsed() > fleet.timeout {
+                            Event::TimedOut
+                        } else {
+                            continue;
+                        }
+                    }
+                    // losing track of a child is indistinguishable from
+                    // losing the child: kill and re-queue
+                    Err(_) => Event::TimedOut,
+                },
+            };
+            let mut r = running[slot].take().expect("polled slot is occupied");
+            let p = Pending { start: r.start, count: r.count, attempt: r.attempt, ready_at: now };
+            match event {
+                Event::TimedOut => {
+                    let _ = r.child.kill();
+                    let _ = r.child.wait();
+                    let _ = std::fs::remove_file(&r.out);
+                    report.timeouts += 1;
+                    if let Err(e) = requeue(p, "timeout", &mut retries, &mut report, &mut prng) {
+                        kill_all(&mut running);
+                        let _ = sink.abandon();
+                        return Err(e);
+                    }
+                }
+                Event::Exited(code) => match classify_exit(code) {
+                    Disposition::Fatal => {
+                        kill_all(&mut running);
+                        let _ = sink.abandon();
+                        return Err(Error::invalid(format!(
+                            "worker for shard {}+{} failed fatally (exit code {code:?}); \
+                             this failure is deterministic — not retrying",
+                            r.start, r.count
+                        )));
+                    }
+                    Disposition::Retry => {
+                        let _ = std::fs::remove_file(&r.out);
+                        report.shards_failed += 1;
+                        let why = format!("exit {code:?}");
+                        if let Err(e) = requeue(p, &why, &mut retries, &mut report, &mut prng) {
+                            kill_all(&mut running);
+                            let _ = sink.abandon();
+                            return Err(e);
+                        }
+                    }
+                    Disposition::Success => {
+                        match PartialResult::load_checked(&r.out) {
+                            Ok((part, check)) => {
+                                if let Err(e) = validate_partial(
+                                    &part, table, job, padded, r.start, r.count,
+                                ) {
+                                    kill_all(&mut running);
+                                    let _ = sink.abandon();
+                                    return Err(e);
+                                }
+                                if let Err(e) = sink.put_partial(&part) {
+                                    kill_all(&mut running);
+                                    let _ = sink.abandon();
+                                    return Err(e);
+                                }
+                                if !check.checksummed {
+                                    report.checksum_skipped += 1;
+                                }
+                                if !fleet.keep_partials {
+                                    let _ = std::fs::remove_file(&r.out);
+                                }
+                                report.stripes_computed += r.count;
+                                flushed_shards += 1;
+                                // rate: EWMA of stripes/sec for this slot
+                                let secs = r.t0.elapsed().as_secs_f64().max(1e-6);
+                                let rate = r.count as f64 / secs;
+                                rates[slot] = if rates[slot] > 0.0 {
+                                    0.5 * rates[slot] + 0.5 * rate
+                                } else {
+                                    rate
+                                };
+                                if halt_after.map_or(false, |k| flushed_shards >= k) {
+                                    report.halted = true;
+                                    break 'fleet;
+                                }
+                            }
+                            // a partial that exists but fails its CRC or
+                            // its parse is a torn/corrupt artifact:
+                            // delete, count, recompute — NEVER merged
+                            Err(Error::Corrupt(_)) | Err(Error::Invalid(_)) | Err(Error::Io(_)) => {
+                                let _ = std::fs::remove_file(&r.out);
+                                report.corrupt_rejected += 1;
+                                if let Err(e) = requeue(
+                                    p,
+                                    "corrupt partial",
+                                    &mut retries,
+                                    &mut report,
+                                    &mut prng,
+                                ) {
+                                    kill_all(&mut running);
+                                    let _ = sink.abandon();
+                                    return Err(e);
+                                }
+                            }
+                            Err(e) => {
+                                kill_all(&mut running);
+                                let _ = sink.abandon();
+                                return Err(e);
+                            }
+                        }
+                    }
+                },
+            }
+        }
+
+        std::thread::sleep(Duration::from_millis(3));
+    }
+
+    kill_all(&mut running);
+    if report.halted {
+        // leave the sink resumable: a re-run picks up from the coverage
+        // bitmap / spool and computes only the missing ranges
+        return Ok(report);
+    }
+    sink.finish()?;
+    if !fleet.keep_partials {
+        let _ = std::fs::remove_dir(&work_dir); // only if empty
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite 2: every error class the worker can exit with must map
+    /// to a deliberate disposition. The loop walks the full assigned
+    /// code range (10..=22, per `Error::code`) and the sentinel below
+    /// pins the range end — assigning a new error code moves the
+    /// sentinel and forces a classification decision here.
+    #[test]
+    fn classification_covers_every_error_code() {
+        for code in 10..=22 {
+            let name = Error::code_name(code);
+            assert_ne!(name, "unknown", "code {code} must be an assigned error class");
+            let d = classify_exit(Some(code));
+            assert_ne!(d, Disposition::Success, "error code {code} classified as success");
+            let expect_retry = matches!(name, "io" | "xla" | "corrupt");
+            assert_eq!(
+                d,
+                if expect_retry { Disposition::Retry } else { Disposition::Fatal },
+                "unexpected disposition for {name} (code {code})"
+            );
+        }
+        // sentinel: 23 is unassigned today; when a variant claims it,
+        // extend the loop above AND pick its disposition deliberately
+        assert_eq!(Error::code_name(23), "unknown");
+        // the non-variant codes
+        assert_eq!(classify_exit(Some(0)), Disposition::Success);
+        assert_eq!(Error::code_name(99), "panic");
+        assert_eq!(classify_exit(Some(99)), Disposition::Retry, "panic code retries");
+        assert_eq!(classify_exit(None), Disposition::Retry, "signal death retries");
+        assert_eq!(classify_exit(Some(42)), Disposition::Retry, "unknown codes retry");
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_within_base() {
+        let mut prng = Xoshiro256::new(7);
+        let mut prev_floor = 0u64;
+        for attempt in 0..10 {
+            let d = backoff_ms(50, 2000, attempt, &mut prng);
+            let floor = (50u64 << attempt.min(16)).min(2000);
+            assert!(d >= floor, "attempt {attempt}: {d} < floor {floor}");
+            assert!(d < floor + 50, "attempt {attempt}: jitter exceeds base");
+            assert!(floor >= prev_floor, "backoff floor must be monotone");
+            prev_floor = floor;
+        }
+        // overflow safety at absurd attempt counts
+        assert!(backoff_ms(50, 2000, 1000, &mut prng) < 2050);
+    }
+
+    #[test]
+    fn slower_slots_get_smaller_shards() {
+        // no measurements yet: everyone gets the base size
+        assert_eq!(shard_size_for(8, &[0.0, 0.0], 0), 8);
+        // slot 1 runs at half the fleet mean -> roughly half the shard
+        let rates = [30.0, 10.0];
+        let fast = shard_size_for(8, &rates, 0);
+        let slow = shard_size_for(8, &rates, 1);
+        assert!(fast > slow, "fast {fast} <= slow {slow}");
+        assert!(slow >= 1);
+        // clamp: a hot slot never exceeds 4x base
+        assert!(shard_size_for(8, &[1000.0, 1.0], 0) <= 32);
+    }
+}

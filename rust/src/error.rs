@@ -119,6 +119,11 @@ pub enum Error {
     /// Partial/merge validation failure (gaps, overlaps, metadata
     /// mismatch) — see [`MergeError`].
     Merge(MergeError),
+    /// A stored artifact (`UFPR` partial, `UFDM` matrix) failed its
+    /// CRC32C integrity check — a torn write or bit rot, not a format
+    /// error. The distributed supervisor treats this as a retryable
+    /// shard failure.
+    Corrupt(String),
 }
 
 impl std::fmt::Display for Error {
@@ -138,6 +143,7 @@ impl std::fmt::Display for Error {
             Error::Cli(m) => write!(f, "cli error: {m}"),
             Error::Unsupported(m) => write!(f, "unsupported combination: {m}"),
             Error::Merge(m) => write!(f, "partial merge error: {m}"),
+            Error::Corrupt(m) => write!(f, "corrupt artifact: {m}"),
         }
     }
 }
@@ -188,6 +194,11 @@ impl Error {
         Error::Unsupported(msg.into())
     }
 
+    /// Shorthand for [`Error::Corrupt`].
+    pub fn corrupt(msg: impl Into<String>) -> Self {
+        Error::Corrupt(msg.into())
+    }
+
     /// Stable numeric status code for this error class — the single
     /// mapping shared by `capi::` status returns and the CLI exit code
     /// (`cli::run_cli`). `0` is reserved for success and
@@ -209,6 +220,7 @@ impl Error {
             Error::Cli(_) => 19,
             Error::Unsupported(_) => 20,
             Error::Merge(_) => 21,
+            Error::Corrupt(_) => 22,
         }
     }
 
@@ -228,6 +240,7 @@ impl Error {
             19 => "cli",
             20 => "unsupported",
             21 => "merge",
+            22 => "corrupt",
             CODE_PANIC => "panic",
             _ => "unknown",
         }
@@ -279,6 +292,7 @@ mod tests {
             Error::Cli(String::new()),
             Error::Unsupported(String::new()),
             Error::Merge(MergeError::Empty),
+            Error::Corrupt(String::new()),
         ]
     }
 

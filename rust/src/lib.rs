@@ -80,6 +80,7 @@ pub mod config;
 pub mod coordinator;
 #[allow(missing_docs)]
 pub mod devicemodel;
+pub mod distrib;
 #[allow(missing_docs)]
 pub mod embed;
 #[allow(missing_docs)]
@@ -94,5 +95,6 @@ pub mod unifrac;
 pub use api::{
     merge_partials, Backend, FpWidth, JobSpec, PartialResult, SinkRunReport, UniFracJob,
 };
+pub use distrib::{supervise, FleetReport, FleetSpec};
 pub use matrix::{CondensedFile, CondensedMatrix, CondensedView, OutputFormat};
 pub use unifrac::Metric;

@@ -22,12 +22,12 @@
 //!   emitting rows from it; byte-identical to
 //!   `CondensedMatrix::write_tsv` of an in-memory run.
 //!
-//! ## The `UFDM` on-disk format (version 1, little-endian)
+//! ## The `UFDM` on-disk format (version 2, little-endian)
 //!
 //! ```text
 //! offset  size  field
 //!      0     4  magic "UFDM"
-//!      4     2  version (u16, = 1)
+//!      4     2  version (u16, = 2)
 //!      6     1  compute fp width in bytes (4 = f32, 8 = f64; provenance
 //!               only — the payload is always f64)
 //!      7     1  flags (bit 0: finalized — full coverage validated)
@@ -37,15 +37,26 @@
 //!     32     8  bitmap_off (u64)
 //!     40     8  payload_off (u64; 8-byte aligned)
 //!     48     8  generalized-UniFrac alpha (f64)
-//!     56     1  metric name length m (name at offset 64)
+//!     56     1  metric name length m (name at offset 72)
 //!     57     7  reserved (zero)
-//!     64     m  metric name (ascii)
+//!     64     4  header CRC32C (u32) — over bytes [0, 64) with the
+//!               mutable flags byte zeroed, then [72, bitmap_off);
+//!               written at creation, immutable afterwards
+//!     68     4  payload CRC32C (u32) — over [payload_off, EOF);
+//!               written at finalize, just before the finalized flag
+//!     72     m  metric name (ascii)
 //!      …        sample ids: u32 count, then per id u32 len + bytes
 //! bitmap_off    stripe coverage bitmap, ceil(stripes_total/8) bytes
 //!               (bit s of byte s/8 = stripe s flushed)
 //! payload_off   n_samples*(n_samples-1)/2 condensed f64 distances,
 //!               pair order (0,1), (0,2), …, (n-2,n-1)
 //! ```
+//!
+//! Version 1 (no CRC fields; metric name at offset 64) still loads —
+//! readers report `checksummed = false` so fleet tooling can warn.
+//! The coverage bitmap and the flags byte mutate during a run, so the
+//! header checksum deliberately excludes both; torn bitmap writes only
+//! ever cause a stripe recompute, never wrong numbers.
 //!
 //! The payload is stored as f64 even for f32 runs: distances are
 //! finalized in f64 (exactly like [`CondensedMatrix`]), which keeps
@@ -57,6 +68,7 @@ use super::condensed::{condensed_index, CondensedMatrix};
 use super::stripes::{total_stripes, StripeBlock};
 use crate::error::{Error, MergeError, Result};
 use crate::unifrac::Metric;
+use crate::util::crc32c::{crc32c, Crc32c};
 use crate::util::Real;
 use std::path::{Path, PathBuf};
 
@@ -196,6 +208,14 @@ pub trait DistMatrixSink<R: Real> {
     fn take_matrix(&mut self) -> Option<CondensedMatrix> {
         None
     }
+    /// The run failed before `finish`: clean up artifacts the sink
+    /// created that carry no resumable progress (a spool/output file
+    /// with an empty coverage bitmap). Sinks with flushed stripes keep
+    /// their files — they are valid resume state. Default: nothing to
+    /// clean.
+    fn abandon(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 // ---- stripe coverage bookkeeping (shared by every sink) ----
@@ -315,7 +335,7 @@ fn fp_name(bytes: usize) -> &'static str {
 
 // ---- positioned file IO (portable: `&File` is Read/Seek/Write) ----
 
-fn read_exact_at(f: &std::fs::File, off: u64, buf: &mut [u8]) -> std::io::Result<()> {
+pub(crate) fn read_exact_at(f: &std::fs::File, off: u64, buf: &mut [u8]) -> std::io::Result<()> {
     #[cfg(unix)]
     {
         std::os::unix::fs::FileExt::read_exact_at(f, buf, off)
@@ -449,9 +469,19 @@ impl Drop for MmapRegion {
 // ---- UFDM header ----
 
 pub(crate) const UFDM_MAGIC: &[u8; 4] = b"UFDM";
-pub(crate) const UFDM_VERSION: u16 = 1;
+/// Current on-disk version. v2 (ISSUE 7) appends two CRC32C fields to
+/// the fixed prologue; v1 files still load (see the module docs).
+pub(crate) const UFDM_VERSION: u16 = 2;
+const UFDM_VERSION_V1: u16 = 1;
 pub(crate) const UFDM_FLAG_FINALIZED: u8 = 1;
+/// Fixed prologue shared by both versions (v1's full prologue).
 const PROLOGUE_LEN: usize = 64;
+/// v2 prologue: the shared 64 bytes + header CRC + payload CRC.
+const V2_PROLOGUE_LEN: usize = 72;
+const HEADER_CRC_OFF: usize = 64;
+const PAYLOAD_CRC_OFF: usize = 68;
+/// Byte offset of the mutable flags byte (excluded from the header CRC).
+const FLAGS_OFF: usize = 7;
 
 #[derive(Clone, Debug)]
 struct Layout {
@@ -467,7 +497,7 @@ impl Layout {
         for id in &meta.sample_ids {
             ids_len += 4 + id.len() as u64;
         }
-        let bitmap_off = PROLOGUE_LEN as u64 + meta.metric.name().len() as u64 + ids_len;
+        let bitmap_off = V2_PROLOGUE_LEN as u64 + meta.metric.name().len() as u64 + ids_len;
         let stripes_total = total_stripes(meta.padded_n);
         let bitmap_bytes = stripes_total.div_ceil(8) as u64;
         let payload_off = (bitmap_off + bitmap_bytes + 7) & !7;
@@ -481,12 +511,17 @@ impl Layout {
 
 /// Parsed UFDM header (prologue + metric + ids + coverage bitmap).
 pub(crate) struct UfdmHeader {
+    pub version: u16,
     pub fp_bytes: u8,
     pub flags: u8,
     pub n_samples: usize,
     pub padded_n: usize,
     pub stripes_total: usize,
     pub payload_off: u64,
+    /// Stored payload CRC32C (v2 only; 0 until the file is finalized).
+    pub payload_crc: u32,
+    /// True iff the file is v2 and its header CRC verified.
+    pub checksummed: bool,
     pub metric: Metric,
     pub ids: Vec<String>,
     pub bitmap: Vec<u8>,
@@ -517,13 +552,13 @@ pub(crate) fn read_ufdm_header(f: &std::fs::File) -> Result<UfdmHeader> {
         return Err(Error::invalid("not a UniFrac condensed matrix (bad magic)"));
     }
     let version = u16::from_le_bytes(pro[4..6].try_into().expect("2 bytes"));
-    if version != UFDM_VERSION {
+    if version != UFDM_VERSION && version != UFDM_VERSION_V1 {
         return Err(Error::invalid(format!(
-            "unsupported condensed-matrix format version {version} (expected {UFDM_VERSION})"
+            "unsupported condensed-matrix format version {version} (expected ≤ {UFDM_VERSION})"
         )));
     }
     let fp_bytes = pro[6];
-    let flags = pro[7];
+    let flags = pro[FLAGS_OFF];
     let n_samples = le_u64(&pro[8..16]) as usize;
     let padded_n = le_u64(&pro[16..24]) as usize;
     let stripes_total = le_u64(&pro[24..32]) as usize;
@@ -545,8 +580,22 @@ pub(crate) fn read_ufdm_header(f: &std::fs::File) -> Result<UfdmHeader> {
     if metric_len == 0 || metric_len > 32 {
         return Err(Error::invalid("bad metric name length in header"));
     }
+    // v2 inserts the two CRC fields between the fixed prologue and the
+    // metric name, so the variable section starts 8 bytes later
+    let metric_off = if version >= 2 { V2_PROLOGUE_LEN } else { PROLOGUE_LEN };
+    let (header_crc, payload_crc) = if version >= 2 {
+        let mut crc_buf = [0u8; 8];
+        read_exact_at(f, HEADER_CRC_OFF as u64, &mut crc_buf)
+            .map_err(|_| Error::invalid("not a UniFrac condensed matrix (short header)"))?;
+        (
+            u32::from_le_bytes(crc_buf[0..4].try_into().expect("4 bytes")),
+            u32::from_le_bytes(crc_buf[4..8].try_into().expect("4 bytes")),
+        )
+    } else {
+        (0, 0)
+    };
     let bitmap_bytes = stripes_total.div_ceil(8) as u64;
-    let var_end = (PROLOGUE_LEN + metric_len) as u64;
+    let var_end = (metric_off + metric_len) as u64;
     if bitmap_off < var_end || payload_off < bitmap_off + bitmap_bytes || payload_off % 8 != 0 {
         return Err(Error::invalid("inconsistent header offsets"));
     }
@@ -567,15 +616,34 @@ pub(crate) fn read_ufdm_header(f: &std::fs::File) -> Result<UfdmHeader> {
         return Err(Error::invalid("unreasonable header size"));
     }
     let mut metric_buf = vec![0u8; metric_len];
-    read_exact_at(f, PROLOGUE_LEN as u64, &mut metric_buf)?;
-    let metric_name = std::str::from_utf8(&metric_buf)
-        .map_err(|_| Error::invalid("non-utf8 metric name in header"))?;
-    let metric = Metric::parse(metric_name, alpha)
-        .ok_or_else(|| Error::invalid(format!("unknown metric {metric_name:?} in header")))?;
+    read_exact_at(f, metric_off as u64, &mut metric_buf)?;
     // ids section: [var_end, bitmap_off)
     let ids_bytes = (bitmap_off - var_end) as usize;
     let mut ids_buf = vec![0u8; ids_bytes];
     read_exact_at(f, var_end, &mut ids_buf)?;
+    // v2: verify the header checksum before *parsing* the variable
+    // section, so bit rot in the metric/id strings reports as Corrupt
+    // (retryable) rather than some arbitrary parse failure
+    let checksummed = version >= 2;
+    if checksummed {
+        let mut h = Crc32c::new();
+        let mut fixed = pro;
+        fixed[FLAGS_OFF] = 0; // flags mutate after the CRC is written
+        h.update(&fixed);
+        h.update(&metric_buf);
+        h.update(&ids_buf);
+        let got = h.finish();
+        if got != header_crc {
+            return Err(Error::corrupt(format!(
+                "condensed-matrix header checksum mismatch: stored {header_crc:#010x}, \
+                 computed {got:#010x}"
+            )));
+        }
+    }
+    let metric_name = std::str::from_utf8(&metric_buf)
+        .map_err(|_| Error::invalid("non-utf8 metric name in header"))?;
+    let metric = Metric::parse(metric_name, alpha)
+        .ok_or_else(|| Error::invalid(format!("unknown metric {metric_name:?} in header")))?;
     let mut pos = 0usize;
     let take = |pos: &mut usize, n: usize, buf: &[u8]| -> Result<std::ops::Range<usize>> {
         if *pos + n > buf.len() {
@@ -604,12 +672,15 @@ pub(crate) fn read_ufdm_header(f: &std::fs::File) -> Result<UfdmHeader> {
     let mut bitmap = vec![0u8; bitmap_bytes as usize];
     read_exact_at(f, bitmap_off, &mut bitmap)?;
     Ok(UfdmHeader {
+        version,
         fp_bytes,
         flags,
         n_samples,
         padded_n,
         stripes_total,
         payload_off,
+        payload_crc,
+        checksummed,
         metric,
         ids,
         bitmap,
@@ -636,6 +707,21 @@ impl Store {
             Store::Mapped { region, .. } => {
                 let o = off as usize;
                 region.bytes_mut()[o..o + data.len()].copy_from_slice(data);
+                Ok(())
+            }
+        }
+    }
+
+    /// Read back bytes the sink wrote earlier (finalize-time payload
+    /// checksum) — a positioned read on the file backend, a copy out of
+    /// the mapping on the mmap backend.
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        match self {
+            Store::File(f) => read_exact_at(f, off, buf).map_err(Error::Io),
+            #[cfg(unix)]
+            Store::Mapped { region, .. } => {
+                let o = off as usize;
+                buf.copy_from_slice(&region.bytes()[o..o + buf.len()]);
                 Ok(())
             }
         }
@@ -670,6 +756,7 @@ pub struct MmapCondensedSink {
     stats: SinkStats,
     scratch: Vec<(usize, f64)>,
     run_buf: Vec<u8>,
+    path: PathBuf,
     finished: bool,
 }
 
@@ -700,7 +787,7 @@ impl MmapCondensedSink {
         let head = header_bytes(&meta, &layout, &coverage);
         write_all_at(&file, 0, &head)?;
         let store = open_store(file, &layout, mapped)?;
-        Ok(Self::assemble(meta, layout, coverage, store))
+        Ok(Self::assemble(meta, layout, coverage, store, path.as_ref().to_path_buf()))
     }
 
     /// Reopen an interrupted sink at `path`, validating that its header
@@ -712,6 +799,14 @@ impl MmapCondensedSink {
         meta.validate()?;
         let file = std::fs::File::options().read(true).write(true).open(path.as_ref())?;
         let h = read_ufdm_header(&file)?;
+        if h.version != UFDM_VERSION {
+            return Err(Error::unsupported(format!(
+                "cannot resume a version {} UFDM file with this writer (current version \
+                 {UFDM_VERSION}) — finish it with the release that created it, or start \
+                 a fresh output path",
+                h.version
+            )));
+        }
         if h.n_samples != meta.n_samples {
             return Err(
                 MergeError::SampleMismatch { expected: meta.n_samples, got: h.n_samples }.into()
@@ -749,7 +844,7 @@ impl MmapCondensedSink {
         }
         let coverage = Coverage::from_bits(&h.bitmap, layout.stripes_total);
         let store = open_store(file, &layout, true)?;
-        Ok(Self::assemble(meta, layout, coverage, store))
+        Ok(Self::assemble(meta, layout, coverage, store, path.as_ref().to_path_buf()))
     }
 
     /// [`Self::open_resume`] when `path` already holds a resumable file,
@@ -765,7 +860,13 @@ impl MmapCondensedSink {
         }
     }
 
-    fn assemble(meta: SinkMeta, layout: Layout, coverage: Coverage, store: Store) -> Self {
+    fn assemble(
+        meta: SinkMeta,
+        layout: Layout,
+        coverage: Coverage,
+        store: Store,
+        path: PathBuf,
+    ) -> Self {
         Self {
             meta,
             layout,
@@ -774,6 +875,7 @@ impl MmapCondensedSink {
             stats: SinkStats::default(),
             scratch: Vec::new(),
             run_buf: Vec::new(),
+            path,
             finished: false,
         }
     }
@@ -853,9 +955,37 @@ impl MmapCondensedSink {
             return Ok(());
         }
         self.coverage.require_full()?;
-        self.store.write_at(7, &[UFDM_FLAG_FINALIZED])?;
+        // Fold the whole payload back through a bounded buffer into the
+        // payload CRC, store it, *then* set the finalized flag — a kill
+        // between the two leaves an unfinalized (resumable) file, never
+        // a finalized file with a stale checksum.
+        let mut hasher = Crc32c::new();
+        let mut buf = vec![0u8; 1 << 20];
+        let mut off = self.layout.payload_off;
+        let end = self.layout.file_len();
+        while off < end {
+            let n = ((end - off) as usize).min(buf.len());
+            self.store.read_at(off, &mut buf[..n])?;
+            hasher.update(&buf[..n]);
+            off += n as u64;
+        }
+        self.store.write_at(PAYLOAD_CRC_OFF as u64, &hasher.finish().to_le_bytes())?;
+        self.store.write_at(FLAGS_OFF as u64, &[UFDM_FLAG_FINALIZED])?;
         self.store.sync();
         self.finished = true;
+        Ok(())
+    }
+
+    fn abandon_impl(&mut self) -> Result<()> {
+        if self.finished || self.coverage.n_covered > 0 {
+            // any flushed stripe makes the file valid resume state —
+            // keep it so the operator can rerun with the same path
+            return Ok(());
+        }
+        // zero progress: the file is a truncated husk nobody can resume
+        // anything from — remove it rather than leave it behind
+        self.finished = true; // block further puts
+        std::fs::remove_file(&self.path)?;
         Ok(())
     }
 }
@@ -885,7 +1015,9 @@ fn header_bytes(meta: &SinkMeta, layout: &Layout, coverage: &Coverage) -> Vec<u8
     v.extend_from_slice(&layout.payload_off.to_le_bytes());
     v.extend_from_slice(&meta.metric.alpha().to_le_bytes());
     v.push(meta.metric.name().len() as u8);
-    v.resize(PROLOGUE_LEN, 0);
+    // reserved pad to 64, then the two CRC fields (header CRC patched
+    // below; payload CRC stays 0 until finalize)
+    v.resize(V2_PROLOGUE_LEN, 0);
     v.extend_from_slice(meta.metric.name().as_bytes());
     v.extend_from_slice(&(meta.sample_ids.len() as u32).to_le_bytes());
     for id in &meta.sample_ids {
@@ -893,6 +1025,14 @@ fn header_bytes(meta: &SinkMeta, layout: &Layout, coverage: &Coverage) -> Vec<u8
         v.extend_from_slice(id.as_bytes());
     }
     debug_assert_eq!(v.len() as u64, layout.bitmap_off);
+    // header CRC: the fixed prologue (flags byte is 0 here) + the
+    // variable metric/ids section — excludes the CRC fields themselves
+    // and everything that mutates during the run (flags, bitmap)
+    let mut h = Crc32c::new();
+    h.update(&v[..PROLOGUE_LEN]);
+    h.update(&v[V2_PROLOGUE_LEN..]);
+    let header_crc = h.finish();
+    v[HEADER_CRC_OFF..HEADER_CRC_OFF + 4].copy_from_slice(&header_crc.to_le_bytes());
     v.extend_from_slice(&coverage.to_bits());
     v.resize(layout.payload_off as usize, 0);
     v
@@ -913,6 +1053,10 @@ impl<R: Real> DistMatrixSink<R> for MmapCondensedSink {
 
     fn missing_ranges(&self) -> Vec<(usize, usize)> {
         self.coverage.missing_ranges()
+    }
+
+    fn abandon(&mut self) -> Result<()> {
+        self.abandon_impl()
     }
 }
 
@@ -1074,6 +1218,13 @@ impl<R: Real> DistMatrixSink<R> for StreamTsvSink {
 
     fn missing_ranges(&self) -> Vec<(usize, usize)> {
         self.inner.coverage.missing_ranges()
+    }
+
+    fn abandon(&mut self) -> Result<()> {
+        // the final TSV is only written at finish, so the spool is the
+        // only artifact to consider — the inner sink keeps it iff it
+        // holds resumable progress
+        self.inner.abandon_impl()
     }
 }
 
@@ -1273,6 +1424,74 @@ mod tests {
         }
         assert_eq!(OutputFormat::parse("hdf5"), None);
         assert!(OutputFormat::names_list().contains("mmap"));
+    }
+
+    #[test]
+    fn abandon_removes_zero_progress_files_keeps_resumable_ones() {
+        let (n, padded) = (7usize, 8usize);
+        let dir = tmpdir("abandon");
+        // zero progress: the file goes away
+        let p = dir.join("empty.ufdm");
+        let mut sink = MmapCondensedSink::create(&p, meta(n, padded)).unwrap();
+        assert!(p.exists());
+        DistMatrixSink::<f64>::abandon(&mut sink).unwrap();
+        assert!(!p.exists(), "zero-progress sink must remove its file");
+        // flushed progress: the file stays (valid resume state)
+        let p = dir.join("progress.ufdm");
+        let mut sink = MmapCondensedSink::create(&p, meta(n, padded)).unwrap();
+        sink.put_block_impl(&blocks(n, padded)[0]).unwrap();
+        DistMatrixSink::<f64>::abandon(&mut sink).unwrap();
+        drop(sink);
+        assert!(p.exists(), "sink with progress must keep its resume file");
+        let resumed = MmapCondensedSink::create_or_resume(&p, meta(n, padded)).unwrap();
+        assert_eq!(resumed.resumed_stripes(), 1);
+        // TSV sink: the spool follows the same rule
+        let out = dir.join("out.tsv");
+        let mut sink = StreamTsvSink::create(&out, meta(n, padded)).unwrap();
+        let spool = dir.join("out.tsv.spool");
+        assert!(spool.exists());
+        DistMatrixSink::<f64>::abandon(&mut sink).unwrap();
+        assert!(!spool.exists(), "zero-progress spool must be cleaned up");
+        assert!(!out.exists());
+    }
+
+    #[test]
+    fn finalized_file_carries_verified_payload_checksum() {
+        let (n, padded) = (7usize, 8usize);
+        let dir = tmpdir("crc");
+        let p = dir.join("c.ufdm");
+        let mut sink = MmapCondensedSink::create(&p, meta(n, padded)).unwrap();
+        for b in blocks(n, padded) {
+            sink.put_block_impl(&b).unwrap();
+        }
+        sink.finish_impl().unwrap();
+        drop(sink);
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), UFDM_VERSION);
+        let stored =
+            u32::from_le_bytes(bytes[PAYLOAD_CRC_OFF..PAYLOAD_CRC_OFF + 4].try_into().unwrap());
+        let payload_off =
+            u64::from_le_bytes(bytes[40..48].try_into().unwrap()) as usize;
+        assert_eq!(stored, crc32c(&bytes[payload_off..]), "stored payload CRC must match");
+        // a payload bit flip is rejected at open as Corrupt
+        let mut dirty = bytes.clone();
+        dirty[payload_off + 9] ^= 0x04;
+        std::fs::write(&p, &dirty).unwrap();
+        match super::super::view::CondensedFile::open(&p) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("payload flip not caught as Corrupt: {other:?}"),
+        }
+        // an ids-section flip is rejected by the header checksum
+        let mut dirty = bytes.clone();
+        dirty[V2_PROLOGUE_LEN + 24] ^= 0x01; // inside metric/ids region
+        std::fs::write(&p, &dirty).unwrap();
+        match super::super::view::CondensedFile::open(&p) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("header flip not caught as Corrupt: {other:?}"),
+        }
+        // the clean bytes still open
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(super::super::view::CondensedFile::open(&p).is_ok());
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //! stats stream it.
 
 use super::condensed::{condensed_index, CondensedMatrix};
-use super::sink::{read_ufdm_header, UFDM_MAGIC};
+use super::sink::{read_exact_at, read_ufdm_header, UFDM_FLAG_FINALIZED, UFDM_MAGIC};
 use crate::error::{Error, Result};
 use crate::unifrac::Metric;
+use crate::util::crc32c::Crc32c;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
@@ -140,6 +141,8 @@ pub struct CondensedFile {
     n_samples: usize,
     padded_n: usize,
     fp_bytes: u8,
+    version: u16,
+    checksummed: bool,
     metric: Metric,
     ids: Vec<String>,
     payload_off: usize,
@@ -149,7 +152,10 @@ pub struct CondensedFile {
 impl CondensedFile {
     /// Open and validate a finished `UFDM` file. Files whose coverage
     /// bitmap is incomplete (a killed, unresumed run) are rejected with
-    /// a pointer at the resume path.
+    /// a pointer at the resume path. v2 files have their payload CRC32C
+    /// verified (streamed through a bounded buffer — the payload never
+    /// loads whole); a mismatch is [`Error::Corrupt`]. v1 files load
+    /// with [`Self::checksummed`] `== false` so callers can warn.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let f = std::fs::File::open(path.as_ref())?;
         let h = read_ufdm_header(&f)?;
@@ -159,6 +165,31 @@ impl CondensedFile {
                  re-running with --output-format mmap and the same output path",
                 path.as_ref().display()
             )));
+        }
+        // the payload CRC is only ever written by finalize, so a file
+        // that is complete-by-bitmap but missed its flag write (killed
+        // between the two) legitimately carries none to verify
+        if h.checksummed && h.flags & UFDM_FLAG_FINALIZED != 0 {
+            let n_pairs = h.n_samples as u64 * (h.n_samples as u64 - 1) / 2;
+            let mut hasher = Crc32c::new();
+            let mut buf = vec![0u8; 1 << 20];
+            let mut off = h.payload_off;
+            let end = h.payload_off + n_pairs * 8;
+            while off < end {
+                let n = ((end - off) as usize).min(buf.len());
+                read_exact_at(&f, off, &mut buf[..n])?;
+                hasher.update(&buf[..n]);
+                off += n as u64;
+            }
+            let got = hasher.finish();
+            if got != h.payload_crc {
+                return Err(Error::corrupt(format!(
+                    "condensed-matrix payload checksum mismatch in {}: stored {:#010x}, \
+                     computed {got:#010x}",
+                    path.as_ref().display(),
+                    h.payload_crc
+                )));
+            }
         }
         let file_len = f.metadata()?.len() as usize;
         let data = {
@@ -181,11 +212,25 @@ impl CondensedFile {
             n_samples: h.n_samples,
             padded_n: h.padded_n,
             fp_bytes: h.fp_bytes,
+            version: h.version,
+            checksummed: h.checksummed,
             metric: h.metric,
             ids: h.ids,
             payload_off: h.payload_off as usize,
             data,
         })
+    }
+
+    /// On-disk format version the file declared (1 or 2).
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// Whether the file carried CRC32C checksums that verified at open.
+    /// False for v1 files — callers surfacing matrices to operators
+    /// (the `convert` CLI, the fleet supervisor) warn on these.
+    pub fn checksummed(&self) -> bool {
+        self.checksummed
     }
 
     /// Number of samples.

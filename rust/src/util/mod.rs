@@ -4,6 +4,7 @@
 //! so the repo owns these pieces (DESIGN.md §3) — each is tested here and
 //! used across the tree/table/synth/stats/bench layers.
 
+pub mod crc32c;
 pub mod fp;
 pub mod json;
 pub mod prng;

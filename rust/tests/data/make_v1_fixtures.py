@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Regenerate the committed v1 (pre-checksum) format fixtures.
+
+The v2 readers in `api/partial.rs` and `matrix/{sink,view}.rs` must keep
+loading v1 `UFPR` / `UFDM` files (written by releases before ISSUE 7
+added CRC32C checksums) with `checksummed == false`. The current Rust
+writers only emit v2, so the v1 bytes are synthesized here, byte by
+byte, from the frozen v1 layouts:
+
+  UFPR v1:  "UFPR" | u16 version=1 | u8 fp_bytes | str metric |
+            f64 alpha | str engine | u64 n_samples | u64 padded_n |
+            u64 stripe_start | u64 stripe_count | u32 n_ids | ids... |
+            num payload | den payload        (str = u32 len + bytes)
+
+  UFDM v1:  64-byte prologue (magic, u16 version=1, u8 fp, u8 flags,
+            u64 n_samples, u64 padded_n, u64 stripes_total,
+            u64 bitmap_off, u64 payload_off, f64 alpha,
+            u8 metric_len, 7 reserved) | metric name at offset 64 |
+            ids (u32 count, per id u32 len + bytes) | coverage bitmap |
+            zero pad to 8-aligned payload_off | n*(n-1)/2 f64 distances
+
+`tests/format_compat.rs` asserts against the exact values below, so a
+regeneration is byte-identical to the committed fixtures.
+"""
+
+import struct
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+
+def put_str(buf: bytearray, s: str) -> None:
+    buf += struct.pack("<I", len(s))
+    buf += s.encode("ascii")
+
+
+def make_ufpr_v1() -> bytes:
+    n_samples = 8
+    padded_n = 8
+    start, count = 0, 4
+    buf = bytearray()
+    buf += b"UFPR"
+    buf += struct.pack("<H", 1)  # version 1: no CRC fields
+    buf += struct.pack("<B", 8)  # fp width: f64
+    put_str(buf, "weighted_normalized")
+    buf += struct.pack("<d", 1.0)  # alpha
+    put_str(buf, "tiled")
+    buf += struct.pack("<QQQQ", n_samples, padded_n, start, count)
+    ids = [f"s{i}" for i in range(n_samples)]
+    buf += struct.pack("<I", len(ids))
+    for sid in ids:
+        put_str(buf, sid)
+    cells = count * padded_n
+    for i in range(cells):  # numerators
+        buf += struct.pack("<d", (i + 1) * 0.5)
+    for _ in range(cells):  # denominators
+        buf += struct.pack("<d", 100.0)
+    return bytes(buf)
+
+
+def make_ufdm_v1() -> bytes:
+    n_samples = 5
+    padded_n = 8
+    stripes_total = padded_n // 2
+    metric = b"weighted_normalized"
+    ids = [f"s{i}" for i in range(n_samples)]
+    ids_len = 4 + sum(4 + len(s) for s in ids)
+    bitmap_off = 64 + len(metric) + ids_len
+    bitmap_bytes = (stripes_total + 7) // 8
+    payload_off = (bitmap_off + bitmap_bytes + 7) & ~7
+    buf = bytearray()
+    buf += b"UFDM"
+    buf += struct.pack("<H", 1)  # version 1: metric at offset 64, no CRCs
+    buf += struct.pack("<BB", 8, 1)  # fp width f64, flags: FINALIZED
+    buf += struct.pack("<QQQ", n_samples, padded_n, stripes_total)
+    buf += struct.pack("<QQ", bitmap_off, payload_off)
+    buf += struct.pack("<d", 1.0)  # alpha
+    buf += struct.pack("<B", len(metric))
+    buf += b"\0" * 7  # reserved
+    assert len(buf) == 64
+    buf += metric
+    buf += struct.pack("<I", len(ids))
+    for sid in ids:
+        buf += struct.pack("<I", len(sid)) + sid.encode("ascii")
+    assert len(buf) == bitmap_off
+    buf += bytes([0x0F])  # all 4 stripes flushed
+    buf += b"\0" * (payload_off - len(buf))
+    n_pairs = n_samples * (n_samples - 1) // 2
+    for idx in range(n_pairs):
+        buf += struct.pack("<d", (idx + 1) / 16.0)
+    return bytes(buf)
+
+
+def main() -> None:
+    ufpr = make_ufpr_v1()
+    ufdm = make_ufdm_v1()
+    (HERE / "partial_v1.ufpr").write_bytes(ufpr)
+    (HERE / "matrix_v1.ufdm").write_bytes(ufdm)
+    print(f"partial_v1.ufpr: {len(ufpr)} bytes")
+    print(f"matrix_v1.ufdm:  {len(ufdm)} bytes")
+
+
+if __name__ == "__main__":
+    main()

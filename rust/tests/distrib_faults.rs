@@ -1,0 +1,258 @@
+//! Property suite for the fault-tolerant stripe fleet (ISSUE 7): every
+//! deterministically injected failure — killed workers, truncated and
+//! bit-flipped partials, stragglers, a halted supervisor — must either
+//! converge to a matrix **bit-identical** (max abs diff == 0) to the
+//! single-process run, or fail with a typed error. Corrupted `UFPR`
+//! partials must be rejected by their CRC32C checksum and recomputed,
+//! never merged.
+//!
+//! Workers are real subprocesses: each test re-invokes the compiled
+//! `unifrac` binary's `worker` subcommand via `CARGO_BIN_EXE_unifrac`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use unifrac::api::{FpWidth, JobSpec, UniFracJob};
+use unifrac::distrib::{supervise, FaultPlan, FleetSpec};
+use unifrac::error::Error;
+use unifrac::matrix::{CondensedFile, CondensedMatrix, OutputFormat};
+use unifrac::synth::SynthSpec;
+use unifrac::table::{write_table_tsv, FeatureTable};
+use unifrac::tree::{write_newick, Phylogeny};
+use unifrac::unifrac::{EngineKind, Metric};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_unifrac"))
+}
+
+/// A synthetic problem written to disk (workers reload it) plus the
+/// in-memory handles for the reference run.
+struct Scene {
+    dir: PathBuf,
+    table_path: PathBuf,
+    tree_path: PathBuf,
+    tree: Phylogeny,
+    table: FeatureTable,
+}
+
+impl Scene {
+    fn new(tag: &str, n_samples: usize, seed: u64) -> Self {
+        let dir = std::env::temp_dir()
+            .join(format!("unifrac_distrib_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (tree, table) = SynthSpec {
+            n_samples,
+            n_features: 96,
+            density: 0.15,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let table_path = dir.join("t.tsv");
+        let tree_path = dir.join("t.nwk");
+        write_table_tsv(&table, &table_path).unwrap();
+        std::fs::write(&tree_path, write_newick(&tree)).unwrap();
+        Self { dir, table_path, tree_path, tree, table }
+    }
+
+    fn fleet(&self, output: &str) -> FleetSpec {
+        FleetSpec {
+            table: self.table_path.clone(),
+            tree: self.tree_path.clone(),
+            output: self.dir.join(output),
+            workers: 4,
+            backoff_base_ms: 5,
+            backoff_cap_ms: 50,
+            worker_program: Some(worker_bin()),
+            ..Default::default()
+        }
+    }
+
+    fn reference(&self, spec: &JobSpec) -> CondensedMatrix {
+        UniFracJob::with_spec(&self.tree, &self.table, spec.clone()).run().unwrap()
+    }
+}
+
+impl Drop for Scene {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+fn open_matrix(path: &std::path::Path) -> CondensedMatrix {
+    CondensedFile::open(path).unwrap().to_matrix()
+}
+
+#[test]
+fn clean_fleet_is_bit_identical_across_engines_and_precisions() {
+    let wn = Metric::parse("weighted_normalized", 1.0).unwrap();
+    let uw = Metric::parse("unweighted", 1.0).unwrap();
+    let wu = Metric::parse("weighted_unnormalized", 1.0).unwrap();
+    let configs: [(&str, Metric, EngineKind, FpWidth); 3] = [
+        ("wn_tiled_f64", wn, EngineKind::Tiled, FpWidth::F64),
+        ("uw_packed_f32", uw, EngineKind::Packed, FpWidth::F32),
+        ("wu_sparse_f64", wu, EngineKind::Sparse, FpWidth::F64),
+    ];
+    for (tag, metric, engine, precision) in configs {
+        let scene = Scene::new(tag, 26, 3);
+        let spec = JobSpec {
+            metric,
+            engine: Some(engine),
+            precision,
+            output_format: OutputFormat::Tsv,
+            ..Default::default()
+        };
+        let fleet = scene.fleet("dm.tsv");
+        let report = supervise(&scene.tree, &scene.table, &spec, &fleet)
+            .unwrap_or_else(|e| panic!("{tag}: fleet failed: {e}"));
+        assert!(!report.halted);
+        assert_eq!(report.stripes_computed, report.stripes_total, "{tag}");
+        // byte-for-byte: the fleet's TSV equals the in-memory run's TSV
+        let full = scene.reference(&spec);
+        let ref_path = scene.dir.join("ref.tsv");
+        full.write_tsv(&ref_path).unwrap();
+        let got = std::fs::read(&fleet.output).unwrap();
+        let want = std::fs::read(&ref_path).unwrap();
+        assert_eq!(got, want, "{tag}: fleet TSV differs from single-process TSV");
+    }
+}
+
+#[test]
+fn killed_worker_and_bit_flip_converge_bit_identical() {
+    let scene = Scene::new("kill_flip", 26, 5);
+    let spec = JobSpec { output_format: OutputFormat::Mmap, ..Default::default() };
+    let mut fleet = scene.fleet("dm.ufdm");
+    // kill the worker holding stripe 1; flip a payload bit in the
+    // partial covering stripe 5 (its CRC must catch the flip)
+    fleet.fault = Some(FaultPlan::parse("kill@1;flip@5", 42).unwrap());
+    let report = supervise(&scene.tree, &scene.table, &spec, &fleet).unwrap();
+    assert!(!report.halted);
+    assert!(report.shards_failed >= 1, "the killed worker must be observed: {report:?}");
+    assert!(report.corrupt_rejected >= 1, "the flipped partial must be rejected: {report:?}");
+    assert!(report.retries >= 2, "both faults must re-queue their shard: {report:?}");
+    let full = scene.reference(&spec);
+    let f = CondensedFile::open(&fleet.output).unwrap();
+    assert_eq!(f.version(), 2);
+    assert!(f.checksummed());
+    assert_eq!(f.to_matrix().max_abs_diff(&full), 0.0, "fleet result must be bit-identical");
+}
+
+#[test]
+fn truncated_partial_is_rejected_by_checksum_and_recomputed() {
+    let scene = Scene::new("truncate", 24, 9);
+    let spec = JobSpec { output_format: OutputFormat::Mmap, ..Default::default() };
+    let mut fleet = scene.fleet("dm.ufdm");
+    fleet.fault = Some(FaultPlan::parse("truncate@2:24", 42).unwrap());
+    let report = supervise(&scene.tree, &scene.table, &spec, &fleet).unwrap();
+    assert!(report.corrupt_rejected >= 1, "torn partial must be rejected: {report:?}");
+    let full = scene.reference(&spec);
+    assert_eq!(open_matrix(&fleet.output).max_abs_diff(&full), 0.0);
+}
+
+#[test]
+fn straggler_times_out_and_its_shard_requeues() {
+    let scene = Scene::new("straggler", 24, 13);
+    let spec = JobSpec { output_format: OutputFormat::Mmap, ..Default::default() };
+    let mut fleet = scene.fleet("dm.ufdm");
+    fleet.timeout = Duration::from_millis(400);
+    fleet.fault = Some(FaultPlan::parse("delay@0:30000", 42).unwrap());
+    let report = supervise(&scene.tree, &scene.table, &spec, &fleet).unwrap();
+    assert!(report.timeouts >= 1, "the delayed worker must be killed: {report:?}");
+    assert!(report.retries >= 1, "its shard must re-queue: {report:?}");
+    let full = scene.reference(&spec);
+    assert_eq!(open_matrix(&fleet.output).max_abs_diff(&full), 0.0);
+}
+
+#[test]
+fn halted_supervisor_resumes_from_coverage_bitmap() {
+    let scene = Scene::new("halt_resume", 26, 17);
+    let spec = JobSpec { output_format: OutputFormat::Mmap, ..Default::default() };
+    let mut fleet = scene.fleet("dm.ufdm");
+    fleet.workers = 2;
+    fleet.fault = Some(FaultPlan::parse("halt@1", 42).unwrap());
+    let halted = supervise(&scene.tree, &scene.table, &spec, &fleet).unwrap();
+    assert!(halted.halted, "halt@1 must stop the fleet early");
+    assert!(
+        halted.stripes_computed < halted.stripes_total,
+        "a halted fleet must leave work: {halted:?}"
+    );
+    // the unfinalized file must be rejected as a finished matrix...
+    assert!(CondensedFile::open(&fleet.output).is_err(), "halted output must not read as done");
+    // ...and a faultless re-run at the same path resumes, not recomputes
+    fleet.fault = None;
+    let resumed = supervise(&scene.tree, &scene.table, &spec, &fleet).unwrap();
+    assert!(!resumed.halted);
+    assert!(resumed.stripes_resumed >= halted.stripes_computed, "{resumed:?}");
+    assert_eq!(
+        resumed.stripes_resumed + resumed.stripes_computed,
+        resumed.stripes_total,
+        "{resumed:?}"
+    );
+    let full = scene.reference(&spec);
+    assert_eq!(open_matrix(&fleet.output).max_abs_diff(&full), 0.0);
+}
+
+#[test]
+fn retry_exhaustion_fails_with_typed_error_and_no_output() {
+    let scene = Scene::new("exhaust", 20, 21);
+    let spec = JobSpec { output_format: OutputFormat::Mmap, ..Default::default() };
+    let mut fleet = scene.fleet("dm.ufdm");
+    // a "worker" that always exits non-zero with a code outside the
+    // fatal set: retryable every time, so the shard's retry budget is
+    // what ends the fleet
+    fleet.worker_program = Some(PathBuf::from("/bin/false"));
+    fleet.max_retries = 1;
+    let err = supervise(&scene.tree, &scene.table, &spec, &fleet)
+        .err()
+        .expect("a fleet whose workers always fail must give up");
+    match err {
+        Error::Invalid(msg) => assert!(msg.contains("giving up"), "unexpected message: {msg}"),
+        other => panic!("retry exhaustion must be Invalid, got: {other}"),
+    }
+    // the sink abandoned a zero-progress file rather than leaving junk
+    assert!(!fleet.output.exists(), "failed fleet must not leave a zero-progress output");
+}
+
+#[test]
+fn fatal_worker_exit_fails_fast_without_retries() {
+    let scene = Scene::new("fatal", 20, 23);
+    // sabotage determinism: point workers at a table file that does not
+    // parse, so every worker exits with the Table error code (12, fatal)
+    let bad = scene.dir.join("bad.tsv");
+    std::fs::write(&bad, "this is not a feature table\n").unwrap();
+    let spec = JobSpec { output_format: OutputFormat::Mmap, ..Default::default() };
+    let mut fleet = scene.fleet("dm.ufdm");
+    fleet.table = bad;
+    let err = supervise(&scene.tree, &scene.table, &spec, &fleet)
+        .err()
+        .expect("deterministic worker failure must fail the fleet");
+    match err {
+        Error::Invalid(msg) => {
+            assert!(msg.contains("fatally"), "should report the fatal exit: {msg}")
+        }
+        other => panic!("fatal exit must be Invalid, got: {other}"),
+    }
+}
+
+#[test]
+fn worker_exit_codes_are_the_stable_error_codes() {
+    // the supervisor's classify_exit contract only holds if the worker
+    // subcommand actually exits with Error::code values
+    let exe = worker_bin();
+    let dir = std::env::temp_dir()
+        .join(format!("unifrac_distrib_codes_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // missing table file -> Io (10)
+    let out = std::process::Command::new(&exe)
+        .args(["worker", "--table", "/nonexistent/t.tsv", "--tree", "/nonexistent/t.nwk"])
+        .args(["--start", "0", "--count", "1", "--out"])
+        .arg(dir.join("p.ufpr"))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(10), "missing input must exit with the Io code");
+    // missing required flag -> Cli (19): deterministic, a retry loop
+    // must classify it fatal rather than spin
+    let out = std::process::Command::new(&exe).args(["worker"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(19), "usage error must exit with the Cli code");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -43,6 +43,8 @@ extern "C" {
 #define SSU_ERR_UNSUPPORTED 20
 #define SSU_ERR_MERGE 21
 #define SSU_ERR_CORRUPT 22
+#define SSU_ERR_OVERLOADED 23 /* query service shed this request */
+#define SSU_ERR_DEADLINE 24   /* request ran past its deadline */
 #define SSU_ERR_PANIC 99
 
 /* ---- opaque handles ---- */

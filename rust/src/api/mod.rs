@@ -25,7 +25,7 @@
 //! also exported through the C ABI in `crate::capi`).
 
 mod job;
-mod partial;
+pub(crate) mod partial;
 
 pub use job::{Backend, FpWidth, JobSpec, SinkRunReport, UniFracJob};
 pub use partial::{merge_partials, PartialCheck, PartialData, PartialMeta, PartialResult};

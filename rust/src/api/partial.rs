@@ -423,35 +423,37 @@ pub fn merge_partials<P: std::borrow::Borrow<PartialResult>>(
 }
 
 // ---- little-endian wire helpers (no serde offline) ----
+// pub(crate): the UFRS reference-set format (`service::refset`) reuses
+// these so every checksummed artifact shares one wire discipline.
 
-fn put_u16(v: &mut Vec<u8>, x: u16) {
+pub(crate) fn put_u16(v: &mut Vec<u8>, x: u16) {
     v.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_u32(v: &mut Vec<u8>, x: u32) {
+pub(crate) fn put_u32(v: &mut Vec<u8>, x: u32) {
     v.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_u64(v: &mut Vec<u8>, x: u64) {
+pub(crate) fn put_u64(v: &mut Vec<u8>, x: u64) {
     v.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_f64(v: &mut Vec<u8>, x: f64) {
+pub(crate) fn put_f64(v: &mut Vec<u8>, x: f64) {
     v.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_str(v: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(v: &mut Vec<u8>, s: &str) {
     put_u32(v, s.len() as u32);
     v.extend_from_slice(s.as_bytes());
 }
 
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
+pub(crate) struct Reader<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             return Err(Error::invalid("truncated partial payload"));
         }
@@ -460,27 +462,27 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> Result<u16> {
+    pub(crate) fn u16(&mut self) -> Result<u16> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 
-    fn string(&mut self) -> Result<String> {
+    pub(crate) fn string(&mut self) -> Result<String> {
         let len = self.u32()? as usize;
         if len > 1 << 20 {
             return Err(Error::invalid("unreasonable string length in partial"));

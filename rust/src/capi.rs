@@ -526,6 +526,8 @@ pub extern "C" fn ssu_error_name(code: c_int) -> *const c_char {
         20 => b"unsupported\0",
         21 => b"merge\0",
         22 => b"corrupt\0",
+        23 => b"overloaded\0",
+        24 => b"deadline\0",
         CODE_PANIC => b"panic\0",
         _ => b"unknown\0",
     };

@@ -9,6 +9,7 @@ pub struct Args {
     subcommand: Option<String>,
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    positionals: Vec<String>,
     consumed: std::collections::BTreeSet<String>,
 }
 
@@ -24,7 +25,8 @@ impl Args {
         }
         while let Some(a) = it.next() {
             let Some(key) = a.strip_prefix("--") else {
-                return Err(Error::Cli(format!("unexpected positional argument {a:?}")));
+                out.positionals.push(a);
+                continue;
             };
             if key.is_empty() {
                 return Err(Error::Cli("bare `--` not supported".into()));
@@ -74,7 +76,17 @@ impl Args {
             .ok_or_else(|| Error::Cli(format!("missing required flag --{name}")))
     }
 
-    /// Error on unknown flags (typo safety); call at the end of a command.
+    /// Take the next positional argument (e.g. `unifrac inspect PATH`).
+    pub fn take_positional(&mut self) -> Option<String> {
+        if self.positionals.is_empty() {
+            None
+        } else {
+            Some(self.positionals.remove(0))
+        }
+    }
+
+    /// Error on unknown flags and unconsumed positionals (typo
+    /// safety); call at the end of a command.
     pub fn finish(&self) -> Result<()> {
         for k in self.values.keys() {
             if !self.consumed.contains(k) {
@@ -85,6 +97,9 @@ impl Args {
             if !self.consumed.contains(k) {
                 return Err(Error::Cli(format!("unknown flag --{k}")));
             }
+        }
+        if let Some(p) = self.positionals.first() {
+            return Err(Error::Cli(format!("unexpected positional argument {p:?}")));
         }
         Ok(())
     }
@@ -139,5 +154,18 @@ mod tests {
     fn no_subcommand() {
         let a = parse("--help");
         assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn positionals_consumed_or_rejected() {
+        let mut a = parse("inspect out.bin --verbose");
+        assert_eq!(a.take_positional().as_deref(), Some("out.bin"));
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+
+        let b = parse("compute stray");
+        assert!(b.finish().is_err());
+        let mut c = parse("inspect");
+        assert_eq!(c.take_positional(), None);
     }
 }

@@ -693,3 +693,292 @@ pub fn selftest(args: &mut Args) -> Result<()> {
     println!("selftest OK");
     Ok(())
 }
+
+// The query service (ISSUE 8): snapshot / serve / query / inspect.
+
+use crate::distrib::FaultPlan;
+use crate::service::{query, refset, server, QuerySpec, ReferenceSet, ServeConfig, Server};
+use crate::util::json::{self, Json};
+use std::time::{Duration, Instant};
+
+fn load_table_file(path: &str) -> Result<FeatureTable> {
+    if path.ends_with(".bin") {
+        read_table_bin(path)
+    } else {
+        read_table_tsv(path)
+    }
+}
+
+fn kind_name(kind: crate::embed::EmbeddingKind) -> &'static str {
+    match kind {
+        crate::embed::EmbeddingKind::Presence => "presence",
+        crate::embed::EmbeddingKind::Proportion => "proportion",
+    }
+}
+
+/// `unifrac snapshot --table ref.tsv --tree t.nwk --metric unweighted --out ref.ufrs`
+///
+/// Freeze the reference side of future k-vs-N queries into a UFRS v1
+/// artifact. The embedding kind follows the metric family: unweighted
+/// snapshots store presence rows (bit-packed), the weighted family
+/// stores proportion rows (dense f64).
+pub fn snapshot(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let out = args.require("out")?;
+    let (tree, table) = load_problem(args, cfg.seed)?;
+    args.finish()?;
+    let kind = cfg.metric_enum()?.embedding_kind();
+    let rs = ReferenceSet::snapshot(&tree, &table, kind)?;
+    rs.save(&out)?;
+    println!(
+        "wrote {out}: UFRS v1 ({}), {} samples x {} rows, ~{} KiB resident",
+        kind_name(rs.kind()),
+        rs.n_samples(),
+        rs.n_rows(),
+        rs.approx_bytes() / 1024
+    );
+    Ok(())
+}
+
+/// `unifrac serve --listen 127.0.0.1:8787 --workers 4 --deadline-ms 2000`
+///
+/// Run the k-vs-N query server until SIGTERM, then drain gracefully
+/// (docs/service.md). Service fault directives (`reject@N`,
+/// `slowref@N:MS`, `drop-conn@N`) from `--fault`/`UNIFRAC_FAULT` fire
+/// on the N-th accepted connection.
+pub fn serve(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let listen = args.opt("listen").unwrap_or_else(|| cfg.listen.clone());
+    let unix_sock = args.opt("unix-socket");
+    let workers = args.get_or("workers", 2usize)?;
+    let queue_depth = args.get_or("queue-depth", 16usize)?;
+    let cache_mb = args.get_or("cache-mb", cfg.cache_mb)?;
+    let deadline_ms = args.get_or("deadline-ms", cfg.deadline_ms)?;
+    let drain_ms = args.get_or("drain-ms", cfg.drain_ms)?;
+    let io_timeout_ms = args.get_or("io-timeout-ms", 5000u64)?;
+    args.finish()?;
+    let fault = if cfg.fault.is_empty() {
+        FaultPlan::empty(cfg.seed)
+    } else {
+        FaultPlan::parse(&cfg.fault, cfg.seed)?
+    };
+    let scfg = ServeConfig {
+        workers,
+        queue_depth,
+        cache_bytes: cache_mb << 20,
+        deadline_ms,
+        drain_ms,
+        io_timeout_ms,
+        fault,
+    };
+    server::sig::install_sigterm();
+    let srv = Server::start(Some(listen.as_str()), unix_sock.as_deref(), scfg)?;
+    if let Some(addr) = srv.local_addr() {
+        println!("listening on {addr}");
+    }
+    if let Some(p) = &unix_sock {
+        println!("listening on unix:{p}");
+    }
+    {
+        use std::io::Write as _;
+        std::io::stdout().flush()?; // readiness line for scripted callers
+    }
+    while !server::sig::term_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    eprintln!("SIGTERM: draining (window {drain_ms} ms)");
+    srv.begin_shutdown();
+    let s = srv.join();
+    println!(
+        "drained: accepted={} completed={} failed={} shed={} deadline_exceeded={} \
+         cache_hits={} cache_misses={} p50_us={} p99_us={}",
+        s.accepted,
+        s.completed,
+        s.failed,
+        s.shed,
+        s.deadline_exceeded,
+        s.cache_hits,
+        s.cache_misses,
+        s.p50_us,
+        s.p99_us
+    );
+    Ok(())
+}
+
+/// `unifrac query --ref ref.ufrs --table new.tsv [--server HOST:PORT]`
+///
+/// k new samples against a UFRS snapshot. Offline by default; with
+/// `--server` it becomes a client of a running `unifrac serve` and the
+/// TSV it writes is byte-identical to the offline path (same formatter,
+/// shortest-round-trip f64 over the wire). Server-side typed failures
+/// keep their exit codes: 23 shed, 24 deadline, 22 corrupt snapshot.
+pub fn query_cmd(args: &mut Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let ref_path = args.require("ref")?;
+    let table_path = args.require("table")?;
+    let server_addr = args.opt("server");
+    let deadline_ms = args.get_or("deadline-ms", 0u64)?;
+    let timeout_ms = args.get_or("io-timeout-ms", 30_000u64)?;
+    args.finish()?;
+
+    let out = match server_addr {
+        Some(addr) => {
+            let req = json::obj(vec![
+                ("op", Json::Str("query".into())),
+                ("ref", Json::Str(ref_path.clone())),
+                ("table", Json::Str(table_path.clone())),
+                ("metric", Json::Str(cfg.metric.clone())),
+                ("alpha", Json::Num(cfg.alpha)),
+                ("dtype", Json::Str(cfg.dtype.clone())),
+                ("deadline_ms", Json::Num(deadline_ms as f64)),
+            ]);
+            let resp = server::request_line(&addr, &req.dump(), timeout_ms)?;
+            let j = Json::parse(&resp)
+                .map_err(|e| Error::invalid(format!("bad server response: {e}")))?;
+            if !matches!(j.get("ok"), Ok(Json::Bool(true))) {
+                return Err(server::error_from_response(&j));
+            }
+            query::output_from_json(&j)?
+        }
+        None => {
+            let refset = ReferenceSet::load(&ref_path)?;
+            let table = load_table_file(&table_path)?;
+            let mut spec = QuerySpec::new(cfg.metric_enum()?, cfg.fp_width()?);
+            if deadline_ms > 0 {
+                spec.deadline = Some(Instant::now() + Duration::from_millis(deadline_ms));
+            }
+            query::run(&refset, &table, &spec)?
+        }
+    };
+
+    match &cfg.output {
+        Some(path) => {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+            query::write_query_tsv(&mut w, &out)?;
+            use std::io::Write as _;
+            w.flush()?;
+            println!(
+                "wrote {} ({} query x {} reference distances)",
+                path.display(),
+                out.query_ids.len(),
+                out.ref_ids.len()
+            );
+        }
+        None => {
+            let stdout = std::io::stdout();
+            let mut w = stdout.lock();
+            query::write_query_tsv(&mut w, &out)?;
+        }
+    }
+    Ok(())
+}
+
+/// `unifrac inspect <path>`: header, version, checksum status and
+/// stripe coverage for any of the repo's binary artifacts (UFDM
+/// condensed matrix, UFPR stripe partial, UFRS reference set).
+/// Checksum mismatches exit with the retryable code 22.
+pub fn inspect(args: &mut Args) -> Result<()> {
+    let path = args
+        .take_positional()
+        .or_else(|| args.opt("path"))
+        .ok_or_else(|| Error::Cli("inspect needs a file path (positional or --path)".into()))?;
+    args.finish()?;
+    let mut magic = [0u8; 4];
+    {
+        use std::io::Read as _;
+        let mut f = std::fs::File::open(&path)?;
+        f.read_exact(&mut magic)
+            .map_err(|_| Error::invalid(format!("{path}: too short to be a UniFrac artifact")))?;
+    }
+    match &magic {
+        b"UFDM" => inspect_ufdm(&path),
+        b"UFPR" => inspect_ufpr(&path),
+        b"UFRS" => inspect_ufrs(&path),
+        _ => Err(Error::invalid(format!(
+            "{path}: unknown magic {:?} (expected UFDM, UFPR or UFRS)",
+            String::from_utf8_lossy(&magic)
+        ))),
+    }
+}
+
+fn inspect_ufdm(path: &str) -> Result<()> {
+    use crate::matrix::sink::{read_ufdm_header, UFDM_FLAG_FINALIZED};
+    let f = std::fs::File::open(path)?;
+    let h = read_ufdm_header(&f)?;
+    let finalized = h.flags & UFDM_FLAG_FINALIZED != 0;
+    println!("{path}: UFDM v{} condensed distance matrix", h.version);
+    println!("  metric: {}", h.metric);
+    println!("  samples: {} (padded to {})", h.n_samples, h.padded_n);
+    println!("  precision: f{} accumulators", h.fp_bytes as usize * 8);
+    println!("  stripes: {} total", h.stripes_total);
+    println!("  header checksum: {}", if h.checksummed { "ok (crc32c)" } else { "none (v1)" });
+    let missing = h.missing_ranges();
+    if missing.is_empty() {
+        println!("  coverage: complete{}", if finalized { ", finalized" } else { "" });
+    } else {
+        println!("  coverage: INCOMPLETE, missing stripe ranges (start, count):");
+        for (start, count) in &missing {
+            println!("    ({start}, {count})");
+        }
+    }
+    if h.checksummed && finalized {
+        use std::io::{Read as _, Seek as _, SeekFrom};
+        let n_pairs = h.n_samples as u64 * (h.n_samples as u64 - 1) / 2;
+        let mut f = f;
+        f.seek(SeekFrom::Start(h.payload_off))?;
+        let mut hasher = crate::util::crc32c::Crc32c::new();
+        let mut left = n_pairs * 8;
+        let mut buf = vec![0u8; 1 << 20];
+        while left > 0 {
+            let take = left.min(buf.len() as u64) as usize;
+            f.read_exact(&mut buf[..take]).map_err(|_| {
+                Error::corrupt(format!("{path}: payload truncated ({left} bytes unreadable)"))
+            })?;
+            hasher.update(&buf[..take]);
+            left -= take as u64;
+        }
+        let computed = hasher.finish();
+        if computed != h.payload_crc {
+            return Err(Error::corrupt(format!(
+                "{path}: payload checksum mismatch: stored {:#010x}, computed {computed:#010x}",
+                h.payload_crc
+            )));
+        }
+        println!("  payload checksum: ok (crc32c over {n_pairs} pairs)");
+    } else if h.checksummed {
+        println!("  payload checksum: not yet written (file not finalized)");
+    }
+    Ok(())
+}
+
+fn inspect_ufpr(path: &str) -> Result<()> {
+    // load_checked verifies both CRCs before decoding; a mismatch
+    // propagates as Error::Corrupt (exit 22).
+    let (p, check) = PartialResult::load_checked(path)?;
+    let m = p.meta();
+    println!("{path}: UFPR v{} stripe partial", check.version);
+    println!("  metric: {} ({})", m.metric, m.fp.name());
+    println!("  samples: {} (padded to {})", m.n_samples, m.padded_n);
+    println!("  stripes: [{}, {}) of {}", m.stripe_start, m.stripe_start + m.stripe_count, {
+        crate::matrix::total_stripes(m.padded_n)
+    });
+    println!(
+        "  checksums: {}",
+        if check.checksummed { "ok (header + payload crc32c)" } else { "none (v1)" }
+    );
+    Ok(())
+}
+
+fn inspect_ufrs(path: &str) -> Result<()> {
+    let bytes = std::fs::read(path)?;
+    let c = refset::check_bytes(&bytes)?;
+    println!("{path}: UFRS v{} reference set", c.version);
+    println!("  embedding: {}", kind_name(c.kind));
+    println!("  samples: {}", c.n_samples);
+    println!("  rows: {} (non-root tree nodes)", c.n_rows);
+    if !c.checksums_ok {
+        return Err(Error::corrupt(format!("{path}: payload checksum mismatch")));
+    }
+    println!("  checksums: ok (header + payload crc32c)");
+    Ok(())
+}

@@ -11,6 +11,11 @@
 //! unifrac merge     --inputs p0.bin,p1.bin,p2.bin,p3.bin --output dm.tsv
 //! unifrac supervise --table t.tsv --tree t.nwk --output dm.tsv --workers 4
 //! unifrac worker    --table t.tsv --tree t.nwk --start 0 --count 16 --out s.ufpr
+//! unifrac snapshot  --table ref.tsv --tree t.nwk --metric unweighted --out ref.ufrs
+//! unifrac serve     --listen 127.0.0.1:8787 --workers 4 --deadline-ms 2000
+//! unifrac query     --ref ref.ufrs --table new.tsv --output q.tsv   # offline
+//! unifrac query     --server 127.0.0.1:8787 --ref ref.ufrs --table new.tsv
+//! unifrac inspect   dm.bin                          # header/checksum/coverage
 //! unifrac partition --samples 512 --chips 8         # Table-2 style chip study
 //! unifrac validate-fp32 --samples 128               # paper §4 reproduction
 //! unifrac tables --which 1,3 --scale 512            # regenerate paper tables
@@ -56,6 +61,10 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "partition" => commands::partition(&mut args),
         "validate-fp32" => commands::validate_fp32(&mut args),
         "tables" => commands::tables(&mut args),
+        "snapshot" => commands::snapshot(&mut args),
+        "serve" => commands::serve(&mut args),
+        "query" => commands::query_cmd(&mut args),
+        "inspect" => commands::inspect(&mut args),
         "pcoa" => commands::pcoa_cmd(&mut args),
         "permanova" => commands::permanova_cmd(&mut args),
         "devices" => commands::devices(&mut args),
@@ -90,6 +99,14 @@ SUBCOMMANDS
                  docs/distributed.md): retry/backoff, checksum-verified
                  shards, resumable output
   worker         fleet unit of work: one stripe shard -> one UFPR partial
+  snapshot       freeze a reference table+tree into a UFRS reference set
+  serve          k-vs-N query server over snapshots (docs/service.md):
+                 bounded admission queue, per-request deadlines, LRU
+                 snapshot cache, graceful SIGTERM drain
+  query          k new samples vs a UFRS snapshot — offline, or as a
+                 client against a running server (--server)
+  inspect        print header/checksum/coverage facts for UFDM / UFPR /
+                 UFRS artifacts (exit 22 on checksum mismatch)
   partition      Table-2 style multi-chip run with per-chip timing
   validate-fp32  fp32-vs-fp64 Mantel comparison (paper §4)
   tables         regenerate the paper's tables (1-4) at a chosen scale
@@ -163,9 +180,30 @@ SUPERVISE / WORKER FLAGS
   --worker-program P  worker executable (default: this binary)
   --fault SPEC        deterministic fault injection (or UNIFRAC_FAULT env):
                       kill@N | truncate@N[:BYTES] | flip@N | delay@N:MS |
-                      halt@K, ';'-separated, anchored to global stripe N
-                      (halt@K: stop after K shard flushes, resumable)
+                      halt@K | reject@N | slowref@N:MS | drop-conn@N,
+                      ';'-separated; stripe faults anchor to global stripe
+                      N (halt@K: stop after K shard flushes, resumable);
+                      service faults anchor to the N-th accepted server
+                      connection (0-based, single-fire)
   --start S --count C worker: the stripe shard to compute
+
+SERVICE FLAGS (snapshot / serve / query / inspect)
+  --ref FILE          UFRS reference-set artifact (snapshot --out output)
+  --out FILE          snapshot: where to write the UFRS artifact
+  --listen ADDR       serve: TCP host:port (default 127.0.0.1:8787; empty
+                      string disables TCP)
+  --unix-socket PATH  serve: also (or instead) listen on a Unix socket
+  --workers N         serve: worker threads (default 2)
+  --queue-depth N     serve: bounded admission queue; full = typed shed,
+                      exit/code 23 (default 16)
+  --cache-mb N        serve: ReferenceSet LRU byte budget (default 256)
+  --deadline-ms N     serve: default per-request deadline, 0 = none;
+                      query: this request's deadline (code 24 on expiry)
+  --drain-ms N        serve: grace window after SIGTERM before in-flight
+                      queries abort cooperatively (default 2000)
+  --io-timeout-ms N   serve: slow-client socket read/write timeout (5000)
+  --server ADDR       query: run as a client of `host:port` or
+                      `unix:/path` instead of computing offline
 
 CONVERT FLAGS
   --matrix FILE       binary condensed matrix to read (bin/mmap output)

@@ -59,6 +59,15 @@ pub struct RunConfig {
     /// e.g. `"kill@3;flip@10"`); empty = no injection. See
     /// `distrib::FaultPlan` for the grammar.
     pub fault: String,
+    /// `unifrac serve`: TCP listen address (empty disables TCP).
+    pub listen: String,
+    /// `unifrac serve`: ReferenceSet LRU cache budget in MiB.
+    pub cache_mb: usize,
+    /// `unifrac serve`: default per-request deadline in ms (0 = none).
+    pub deadline_ms: u64,
+    /// `unifrac serve`: SIGTERM drain window in ms before in-flight
+    /// queries are cooperatively aborted.
+    pub drain_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -86,6 +95,10 @@ impl Default for RunConfig {
             output_format: "tsv".into(),
             max_resident_mb: 0,
             fault: String::new(),
+            listen: "127.0.0.1:8787".into(),
+            cache_mb: 256,
+            deadline_ms: 0,
+            drain_ms: 2000,
         }
     }
 }
@@ -167,6 +180,18 @@ impl RunConfig {
         }
         if let Some(v) = get("fault") {
             self.fault = v.as_str().ok_or_else(|| bad("fault"))?.to_string();
+        }
+        if let Some(v) = get("listen") {
+            self.listen = v.as_str().ok_or_else(|| bad("listen"))?.to_string();
+        }
+        if let Some(v) = get("cache_mb") {
+            self.cache_mb = v.as_usize().ok_or_else(|| bad("cache_mb"))?;
+        }
+        if let Some(v) = get("deadline_ms") {
+            self.deadline_ms = v.as_usize().ok_or_else(|| bad("deadline_ms"))? as u64;
+        }
+        if let Some(v) = get("drain_ms") {
+            self.drain_ms = v.as_usize().ok_or_else(|| bad("drain_ms"))? as u64;
         }
         Ok(())
     }
@@ -502,6 +527,26 @@ pool_depth = 16
         // malformed spec is a config error at lowering time
         let cfg = RunConfig { fault: "explode@9".into(), ..Default::default() };
         assert!(matches!(cfg.to_job(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn serve_keys_parse_from_doc() {
+        let doc = TomlDoc::parse(
+            "[run]\nlisten = \"0.0.0.0:9000\"\ncache_mb = 64\ndeadline_ms = 1500\ndrain_ms = 500\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.cache_mb, 64);
+        assert_eq!(cfg.deadline_ms, 1500);
+        assert_eq!(cfg.drain_ms, 500);
+        // defaults
+        let d = RunConfig::default();
+        assert_eq!(d.listen, "127.0.0.1:8787");
+        assert_eq!(d.cache_mb, 256);
+        assert_eq!(d.deadline_ms, 0);
+        assert_eq!(d.drain_ms, 2000);
     }
 
     #[test]

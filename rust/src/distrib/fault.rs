@@ -15,6 +15,13 @@
 //!                   containing stripe N
 //! halt@K            supervisor-side: stop the fleet after K shards
 //!                   have flushed, leaving a resumable sink behind
+//! reject@N          service-side: shed the N-th query request with a
+//!                   typed Overloaded error (admission-control test)
+//! slowref@N:MS      service-side: sleep MS before loading the
+//!                   reference set for the N-th query request (drives
+//!                   the deadline path deterministically)
+//! drop-conn@N       service-side: close the client connection of the
+//!                   N-th query request without responding
 //! ```
 //!
 //! The supervisor owns the plan: each non-`halt` directive is handed to
@@ -23,7 +30,11 @@
 //! once and the fleet provably converges. Compute-time directives
 //! (`kill`, `delay`) fire inside `UniFracJob::run_partial_range`;
 //! artifact directives (`truncate`, `flip`) are applied by the `worker`
-//! subcommand to the partial file it just wrote.
+//! subcommand to the partial file it just wrote. Service directives
+//! (`reject`, `slowref`, `drop-conn`) are owned by `unifrac serve`:
+//! their anchor is a 0-based query-request counter, each fires once
+//! ([`FaultPlan::take_service_at`]), and they are never handed to
+//! workers.
 
 use crate::error::{Error, Result};
 use crate::util::prng::Xoshiro256;
@@ -48,6 +59,24 @@ pub enum FaultKind {
     /// Supervisor-side: stop the whole fleet after the anchor count of
     /// shard flushes, leaving a resumable sink (tests resume).
     Halt,
+    /// Service-side: shed the anchor-th query request at admission with
+    /// a typed `Overloaded` error, as if the queue were full.
+    Reject,
+    /// Service-side: sleep this many milliseconds before loading the
+    /// reference set for the anchor-th query request — a deterministic
+    /// slow-artifact straggler that drives the deadline path.
+    SlowRef(u64),
+    /// Service-side: close the client connection of the anchor-th query
+    /// request without writing a response (tests slow/broken clients).
+    DropConn,
+}
+
+impl FaultKind {
+    /// True for the service-side directives (`reject`, `slowref`,
+    /// `drop-conn`): owned by `unifrac serve`, never handed to workers.
+    pub fn is_service(&self) -> bool {
+        matches!(self, FaultKind::Reject | FaultKind::SlowRef(_) | FaultKind::DropConn)
+    }
 }
 
 /// A [`FaultKind`] plus its anchor: the global stripe index the
@@ -68,6 +97,9 @@ impl fmt::Display for FaultDirective {
             FaultKind::Flip => write!(f, "flip@{}", self.at),
             FaultKind::Delay(ms) => write!(f, "delay@{}:{ms}", self.at),
             FaultKind::Halt => write!(f, "halt@{}", self.at),
+            FaultKind::Reject => write!(f, "reject@{}", self.at),
+            FaultKind::SlowRef(ms) => write!(f, "slowref@{}:{ms}", self.at),
+            FaultKind::DropConn => write!(f, "drop-conn@{}", self.at),
         }
     }
 }
@@ -128,6 +160,13 @@ impl FaultPlan {
                     ms.parse().map_err(|_| bad(part, "delay milliseconds must be an integer"))?,
                 ),
                 ("delay", None) => return Err(bad(part, "delay needs @N:MS")),
+                ("reject", None) => FaultKind::Reject,
+                ("slowref", Some(ms)) => FaultKind::SlowRef(
+                    ms.parse()
+                        .map_err(|_| bad(part, "slowref milliseconds must be an integer"))?,
+                ),
+                ("slowref", None) => return Err(bad(part, "slowref needs @N:MS")),
+                ("drop-conn", None) => FaultKind::DropConn,
                 _ => return Err(bad(part, "unknown directive")),
             };
             directives.push(FaultDirective { kind, at });
@@ -152,11 +191,15 @@ impl FaultPlan {
     /// Remove (and return as an argv-ready spec string) every
     /// worker-side directive whose anchor stripe falls in
     /// `start .. start + count`. `halt` directives are supervisor-owned
-    /// and never taken. Returns `None` when nothing matched — the
-    /// single-fire guarantee: a retried shard gets no directives.
+    /// and service directives server-owned — neither is ever taken.
+    /// Returns `None` when nothing matched — the single-fire guarantee:
+    /// a retried shard gets no directives.
     pub fn take_for_range(&mut self, start: usize, count: usize) -> Option<String> {
         let in_range = |d: &FaultDirective| {
-            d.kind != FaultKind::Halt && d.at >= start && d.at < start + count
+            d.kind != FaultKind::Halt
+                && !d.kind.is_service()
+                && d.at >= start
+                && d.at < start + count
         };
         if !self.directives.iter().any(in_range) {
             return None;
@@ -171,6 +214,24 @@ impl FaultPlan {
             }
         });
         Some(FaultPlan { directives: taken, seed: self.seed }.to_string())
+    }
+
+    /// Remove and return every service-side directive anchored at
+    /// query-request index `at` (0-based admission order). Single-fire:
+    /// a directive fires for exactly one request and is then gone, so a
+    /// client retry of the same logical query succeeds. Called by
+    /// `unifrac serve` once per accepted connection.
+    pub fn take_service_at(&mut self, at: usize) -> Vec<FaultKind> {
+        let mut taken = Vec::new();
+        self.directives.retain(|d| {
+            if d.kind.is_service() && d.at == at {
+                taken.push(d.kind);
+                false
+            } else {
+                true
+            }
+        });
+        taken
     }
 
     /// Fire the compute-time directives (`delay`, then `kill`) whose
@@ -238,7 +299,12 @@ impl FaultPlan {
                     std::fs::write(path, &bytes)?;
                     applied.push(format!("flip@{}: bit {bit} of byte {off}", d.at));
                 }
-                FaultKind::Kill | FaultKind::Delay(_) | FaultKind::Halt => {}
+                FaultKind::Kill
+                | FaultKind::Delay(_)
+                | FaultKind::Halt
+                | FaultKind::Reject
+                | FaultKind::SlowRef(_)
+                | FaultKind::DropConn => {}
             }
         }
         Ok(applied)
@@ -248,7 +314,8 @@ impl FaultPlan {
 fn bad(part: &str, why: &str) -> Error {
     Error::Config(format!(
         "bad fault directive {part:?}: {why} (grammar: kill@N | truncate@N[:BYTES] | \
-         flip@N | delay@N:MS | halt@K, ';'-separated)"
+         flip@N | delay@N:MS | halt@K | reject@N | slowref@N:MS | drop-conn@N, \
+         ';'-separated)"
     ))
 }
 
@@ -258,9 +325,9 @@ mod tests {
 
     #[test]
     fn parse_roundtrips_through_display() {
-        let spec = "kill@3;truncate@5:32;flip@7;delay@2:50;halt@1";
+        let spec = "kill@3;truncate@5:32;flip@7;delay@2:50;halt@1;reject@0;slowref@4:25;drop-conn@6";
         let plan = FaultPlan::parse(spec, 9).unwrap();
-        assert_eq!(plan.directives.len(), 5);
+        assert_eq!(plan.directives.len(), 8);
         assert_eq!(plan.to_string(), spec);
         assert_eq!(FaultPlan::parse(&plan.to_string(), 9).unwrap(), plan);
         // default truncate byte count
@@ -273,7 +340,18 @@ mod tests {
 
     #[test]
     fn parse_rejects_malformed_specs() {
-        for bad in ["kill", "kill@x", "boom@3", "delay@3", "delay@3:ms", "truncate@1:x"] {
+        for bad in [
+            "kill",
+            "kill@x",
+            "boom@3",
+            "delay@3",
+            "delay@3:ms",
+            "truncate@1:x",
+            "slowref@2",
+            "slowref@2:ms",
+            "reject@1:5",
+            "drop-conn@1:5",
+        ] {
             let err = FaultPlan::parse(bad, 0).unwrap_err();
             assert!(matches!(err, Error::Config(_)), "{bad}: {err}");
             assert!(err.to_string().contains("grammar"), "{bad}: {err}");
@@ -292,6 +370,24 @@ mod tests {
         // halt is never handed to a worker
         assert_eq!(plan.take_for_range(0, 100).unwrap(), "flip@10");
         assert_eq!(plan.halt_after(), Some(2));
+    }
+
+    #[test]
+    fn service_directives_are_server_owned_and_single_fire() {
+        let mut plan =
+            FaultPlan::parse("reject@1;slowref@1:40;drop-conn@2;kill@1", 0).unwrap();
+        // worker dispatch over any range never takes a service directive
+        assert_eq!(plan.take_for_range(0, 100).unwrap(), "kill@1");
+        assert_eq!(plan.directives.len(), 3);
+        // request 0: nothing anchored there
+        assert!(plan.take_service_at(0).is_empty());
+        // request 1: both directives fire together, then are gone
+        let fired = plan.take_service_at(1);
+        assert_eq!(fired, vec![FaultKind::Reject, FaultKind::SlowRef(40)]);
+        assert!(plan.take_service_at(1).is_empty());
+        // request 2: drop-conn fires once
+        assert_eq!(plan.take_service_at(2), vec![FaultKind::DropConn]);
+        assert!(plan.is_empty());
     }
 
     #[test]

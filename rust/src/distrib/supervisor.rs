@@ -55,9 +55,11 @@ pub fn classify_exit(code: Option<i32>) -> Disposition {
     match code {
         None => Disposition::Retry, // signal: OOM-kill, node loss, injected abort
         Some(0) => Disposition::Success,
-        // Io(10), Xla(17) and Corrupt(22) are environmental; 99 is the
-        // CLI's panic code. All can succeed on a healthy retry.
-        Some(10) | Some(17) | Some(22) | Some(99) => Disposition::Retry,
+        // Io(10), Xla(17) and Corrupt(22) are environmental;
+        // Overloaded(23) and DeadlineExceeded(24) are transient load
+        // conditions of the query service; 99 is the CLI's panic code.
+        // All can succeed on a healthy retry.
+        Some(10) | Some(17) | Some(22..=24) | Some(99) => Disposition::Retry,
         // Newick(11), Table(12), Config(13), Manifest(14), Shape(15),
         // NoArtifact(16), Invalid(18), Cli(19), Unsupported(20),
         // Merge(21): deterministic — the same argv fails the same way.
@@ -680,21 +682,22 @@ mod tests {
     /// sentinel and forces a classification decision here.
     #[test]
     fn classification_covers_every_error_code() {
-        for code in 10..=22 {
+        for code in 10..=24 {
             let name = Error::code_name(code);
             assert_ne!(name, "unknown", "code {code} must be an assigned error class");
             let d = classify_exit(Some(code));
             assert_ne!(d, Disposition::Success, "error code {code} classified as success");
-            let expect_retry = matches!(name, "io" | "xla" | "corrupt");
+            let expect_retry =
+                matches!(name, "io" | "xla" | "corrupt" | "overloaded" | "deadline");
             assert_eq!(
                 d,
                 if expect_retry { Disposition::Retry } else { Disposition::Fatal },
                 "unexpected disposition for {name} (code {code})"
             );
         }
-        // sentinel: 23 is unassigned today; when a variant claims it,
+        // sentinel: 25 is unassigned today; when a variant claims it,
         // extend the loop above AND pick its disposition deliberately
-        assert_eq!(Error::code_name(23), "unknown");
+        assert_eq!(Error::code_name(25), "unknown");
         // the non-variant codes
         assert_eq!(classify_exit(Some(0)), Disposition::Success);
         assert_eq!(Error::code_name(99), "panic");

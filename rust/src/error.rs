@@ -119,11 +119,19 @@ pub enum Error {
     /// Partial/merge validation failure (gaps, overlaps, metadata
     /// mismatch) — see [`MergeError`].
     Merge(MergeError),
-    /// A stored artifact (`UFPR` partial, `UFDM` matrix) failed its
-    /// CRC32C integrity check — a torn write or bit rot, not a format
-    /// error. The distributed supervisor treats this as a retryable
-    /// shard failure.
+    /// A stored artifact (`UFPR` partial, `UFDM` matrix, `UFRS`
+    /// reference set) failed its CRC32C integrity check — a torn write
+    /// or bit rot, not a format error. The distributed supervisor
+    /// treats this as a retryable shard failure.
     Corrupt(String),
+    /// The query service shed this request at admission: the bounded
+    /// queue is full (or a fault directive forced the shed). Retryable
+    /// — the server is healthy, just saturated.
+    Overloaded(String),
+    /// A request (or the server's drain window) ran past its deadline;
+    /// the computation was aborted at a stripe-block boundary.
+    /// Retryable with a larger deadline or on a less loaded server.
+    DeadlineExceeded(String),
 }
 
 impl std::fmt::Display for Error {
@@ -144,6 +152,8 @@ impl std::fmt::Display for Error {
             Error::Unsupported(m) => write!(f, "unsupported combination: {m}"),
             Error::Merge(m) => write!(f, "partial merge error: {m}"),
             Error::Corrupt(m) => write!(f, "corrupt artifact: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }
@@ -199,6 +209,16 @@ impl Error {
         Error::Corrupt(msg.into())
     }
 
+    /// Shorthand for [`Error::Overloaded`].
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        Error::Overloaded(msg.into())
+    }
+
+    /// Shorthand for [`Error::DeadlineExceeded`].
+    pub fn deadline(msg: impl Into<String>) -> Self {
+        Error::DeadlineExceeded(msg.into())
+    }
+
     /// Stable numeric status code for this error class — the single
     /// mapping shared by `capi::` status returns and the CLI exit code
     /// (`cli::run_cli`). `0` is reserved for success and
@@ -221,6 +241,8 @@ impl Error {
             Error::Unsupported(_) => 20,
             Error::Merge(_) => 21,
             Error::Corrupt(_) => 22,
+            Error::Overloaded(_) => 23,
+            Error::DeadlineExceeded(_) => 24,
         }
     }
 
@@ -241,6 +263,8 @@ impl Error {
             20 => "unsupported",
             21 => "merge",
             22 => "corrupt",
+            23 => "overloaded",
+            24 => "deadline",
             CODE_PANIC => "panic",
             _ => "unknown",
         }
@@ -293,6 +317,8 @@ mod tests {
             Error::Unsupported(String::new()),
             Error::Merge(MergeError::Empty),
             Error::Corrupt(String::new()),
+            Error::Overloaded(String::new()),
+            Error::DeadlineExceeded(String::new()),
         ]
     }
 

@@ -89,6 +89,7 @@ pub mod exec;
 pub mod report;
 #[allow(missing_docs)]
 pub mod runtime;
+pub mod service;
 pub mod stats;
 pub mod unifrac;
 
@@ -97,4 +98,5 @@ pub use api::{
 };
 pub use distrib::{supervise, FleetReport, FleetSpec};
 pub use matrix::{CondensedFile, CondensedMatrix, CondensedView, OutputFormat};
+pub use service::{QuerySpec, ReferenceSet, ServeConfig, Server};
 pub use unifrac::Metric;

@@ -537,6 +537,12 @@ impl UfdmHeader {
         (0..self.stripes_total)
             .all(|s| self.bitmap.get(s / 8).map(|b| (b >> (s % 8)) & 1 == 1).unwrap_or(false))
     }
+
+    /// Unflushed stripe ranges as `(start, count)` pairs, from the
+    /// coverage bitmap (`unifrac inspect` and resume diagnostics).
+    pub fn missing_ranges(&self) -> Vec<(usize, usize)> {
+        Coverage::from_bits(&self.bitmap, self.stripes_total).missing_ranges()
+    }
 }
 
 fn le_u64(b: &[u8]) -> u64 {

@@ -1,0 +1,32 @@
+//! UniFrac query service (ISSUE 8 tentpole): snapshot-able reference
+//! sets + a k-vs-N server with admission control, deadlines, and
+//! graceful degradation.
+//!
+//! The EMP-scale workflow the paper enables ends with a *reference*
+//! distance matrix over N samples; the operational question that
+//! follows is "where do my k new samples fall?". Recomputing the full
+//! (N+k)-sample matrix is O((N+k)²); this module answers in O(k·N):
+//!
+//! - [`refset`] — the `UFRS` v1 artifact: tree + per-node reference
+//!   masses frozen once ([`ReferenceSet::snapshot`]), CRC32C-guarded
+//!   like every other artifact in the repo, loadable in one read.
+//! - [`query`] — the k-vs-N engine: stream the *query* table's
+//!   embedding over the snapshot tree and accumulate k stripe-rows
+//!   against the stored reference columns, bit-identical to the rows a
+//!   fresh combined build would produce.
+//! - [`server`] — a dependency-free blocking-I/O server around the
+//!   query engine: bounded admission queue with typed load-shedding
+//!   (code 23), per-request deadlines honored at stripe-block
+//!   granularity (code 24), a byte-budgeted single-flight LRU of
+//!   reference sets, slow-client socket timeouts, and SIGTERM drain.
+//!
+//! Wire protocol and capacity planning live in `docs/service.md`; the
+//! CLI surface is `unifrac snapshot` / `serve` / `query` / `inspect`.
+
+pub mod query;
+pub mod refset;
+pub mod server;
+
+pub use query::{run as run_query, write_query_tsv, QueryOutput, QuerySpec};
+pub use refset::ReferenceSet;
+pub use server::{request_line, ServeConfig, ServeStats, Server};

@@ -1,0 +1,253 @@
+//! k-vs-N query engine: k fresh samples against a frozen
+//! [`ReferenceSet`], computing only the k new stripe-rows.
+//!
+//! The full striped engines compute all `n/2` stripes of an n-sample
+//! problem; adding k samples to an N-sample reference and recomputing
+//! from scratch costs O((N+k)²). The query path instead streams the
+//! *query* table's embedding over the snapshot tree — per-sample masses
+//! are independent (presence is per-column; proportions normalize per
+//! sample), so the stream emits rows in the same deterministic
+//! postorder as the snapshot did, aligned by emission index — and
+//! accumulates one [`StripeBlock`] row per query sample over the N
+//! reference columns: O(k·N), bit-identical to the rows a fresh
+//! combined build would have produced.
+//!
+//! Deadlines and aborts are honored at stripe-block granularity: the
+//! loop checks between embedding batches (a few hundred tree nodes of
+//! work), so a request never overruns its deadline by more than one
+//! batch of accumulation.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::api::FpWidth;
+use crate::embed::{EmbBatch, EmbeddingStream};
+use crate::matrix::StripeBlock;
+use crate::service::refset::ReferenceSet;
+use crate::table::FeatureTable;
+use crate::unifrac::metric::MetricOps;
+use crate::unifrac::Metric;
+use crate::util::json::{self, Json};
+use crate::util::Real;
+use crate::{Error, Result};
+
+/// Everything that shapes one k-vs-N query run.
+#[derive(Clone)]
+pub struct QuerySpec {
+    /// Distance metric; its embedding kind must match the snapshot's.
+    pub metric: Metric,
+    /// Accumulator precision.
+    pub fp: FpWidth,
+    /// Absolute wall-clock deadline; checked between embedding batches.
+    pub deadline: Option<Instant>,
+    /// Cooperative abort flag (server drain); checked with the deadline.
+    pub abort: Option<Arc<AtomicBool>>,
+}
+
+impl QuerySpec {
+    /// A spec with no deadline and no abort hook.
+    pub fn new(metric: Metric, fp: FpWidth) -> Self {
+        Self { metric, fp, deadline: None, abort: None }
+    }
+}
+
+/// Result of a k-vs-N query: a dense k×N distance rectangle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryOutput {
+    /// Query sample ids (row order).
+    pub query_ids: Vec<String>,
+    /// Reference sample ids (column order, from the snapshot).
+    pub ref_ids: Vec<String>,
+    /// Row-major `[k, N]` distances.
+    pub distances: Vec<f64>,
+}
+
+impl QueryOutput {
+    /// Distance between query row `q` and reference column `j`.
+    pub fn get(&self, q: usize, j: usize) -> f64 {
+        self.distances[q * self.ref_ids.len() + j]
+    }
+}
+
+/// Check the deadline/abort hooks; called between embedding batches.
+fn check_interrupts(spec: &QuerySpec) -> Result<()> {
+    if let Some(d) = spec.deadline {
+        if Instant::now() >= d {
+            return Err(Error::deadline("query deadline exceeded mid-computation"));
+        }
+    }
+    if let Some(a) = &spec.abort {
+        if a.load(Ordering::Relaxed) {
+            return Err(Error::deadline("request aborted: server drain window elapsed"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `k` query samples (`table`) against the frozen reference set.
+pub fn run(refset: &ReferenceSet, table: &FeatureTable, spec: &QuerySpec) -> Result<QueryOutput> {
+    if spec.metric.embedding_kind() != refset.kind() {
+        return Err(Error::invalid(format!(
+            "metric {} needs a {:?} reference set, snapshot is {:?}",
+            spec.metric,
+            spec.metric.embedding_kind(),
+            refset.kind()
+        )));
+    }
+    let k = table.n_samples();
+    let n = refset.n_samples();
+    if k == 0 {
+        return Err(Error::invalid("query table has no samples"));
+    }
+    if k > n {
+        return Err(Error::invalid(format!(
+            "{k} query samples against {n} reference samples: k exceeds N, \
+             compute the full matrix instead"
+        )));
+    }
+    let distances = match spec.fp {
+        FpWidth::F32 => run_typed::<f32>(refset, table, spec)?,
+        FpWidth::F64 => run_typed::<f64>(refset, table, spec)?,
+    };
+    Ok(QueryOutput {
+        query_ids: table.sample_ids().to_vec(),
+        ref_ids: refset.ids().to_vec(),
+        distances,
+    })
+}
+
+fn run_typed<R: Real>(
+    refset: &ReferenceSet,
+    table: &FeatureTable,
+    spec: &QuerySpec,
+) -> Result<Vec<f64>> {
+    let k = table.n_samples();
+    let n = refset.n_samples();
+    // One "stripe" row per query sample over the N reference columns;
+    // new_wrapping because k rows of an N-wide block is a rectangle,
+    // not a triangle-covering stripe range.
+    let mut block = StripeBlock::<R>::new_wrapping(n, 0, k);
+    let mut stream = EmbeddingStream::new(refset.tree(), table, refset.kind())?;
+    let mut batch = EmbBatch::<R>::new(k, 64);
+    let mut scratch = vec![R::ZERO; n];
+    let mut row_at = 0usize;
+
+    crate::with_metric_ops!(spec.metric, ops, {
+        loop {
+            check_interrupts(spec)?;
+            batch.reset();
+            if stream.fill(&mut batch) == 0 {
+                break;
+            }
+            accumulate_batch(&batch, ops, refset, &mut block, &mut scratch, &mut row_at, k)?;
+        }
+    });
+    if row_at != refset.n_rows() {
+        return Err(Error::invalid(format!(
+            "query stream emitted {row_at} rows, snapshot stores {}",
+            refset.n_rows()
+        )));
+    }
+
+    let mut out = vec![0.0; k * n];
+    for q in 0..k {
+        let (num, den) = (block.num_row(q), block.den_row(q));
+        for ((slot, &nu), &de) in out[q * n..(q + 1) * n].iter_mut().zip(num).zip(den) {
+            *slot = spec.metric.finalize(nu.to_f64(), de.to_f64());
+        }
+    }
+    Ok(out)
+}
+
+/// Accumulate one embedding batch of the query stream into the block.
+/// Rows arrive in the snapshot's emission order, so `row_at` indexes
+/// straight into the stored reference rows.
+fn accumulate_batch<R: Real, O: MetricOps<R>>(
+    batch: &EmbBatch<R>,
+    ops: O,
+    refset: &ReferenceSet,
+    block: &mut StripeBlock<R>,
+    scratch: &mut [R],
+    row_at: &mut usize,
+    k: usize,
+) -> Result<()> {
+    for (qrow, len) in batch.rows() {
+        if *row_at >= refset.n_rows() {
+            return Err(Error::invalid(
+                "query stream emitted more rows than the snapshot stores \
+                 (table/tree mismatch?)",
+            ));
+        }
+        debug_assert_eq!(R::from_f64(refset.length(*row_at)).to_f64(), len.to_f64());
+        refset.fill_row(*row_at, scratch);
+        for (q, &mq) in qrow.iter().enumerate().take(k) {
+            let (num, den) = block.rows_mut(q);
+            for (j, &mr) in scratch.iter().enumerate() {
+                let (fnum, fden) = ops.terms(mq, mr);
+                num[j] += len * fnum;
+                den[j] += len * fden;
+            }
+        }
+        *row_at += 1;
+    }
+    Ok(())
+}
+
+/// Write the rectangle as TSV: a header row of reference ids, then one
+/// row per query sample, distances printed `{:.10}`. The server client
+/// and the offline CLI both call this, so their bytes match exactly.
+pub fn write_query_tsv(w: &mut impl Write, out: &QueryOutput) -> std::io::Result<()> {
+    for id in &out.ref_ids {
+        write!(w, "\t{id}")?;
+    }
+    writeln!(w)?;
+    for (q, qid) in out.query_ids.iter().enumerate() {
+        write!(w, "{qid}")?;
+        for j in 0..out.ref_ids.len() {
+            write!(w, "\t{:.10}", out.get(q, j))?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Encode a [`QueryOutput`] as the JSON the wire protocol carries.
+/// `Json::Num` prints f64 with shortest-round-trip formatting, so
+/// decode recovers bit-identical distances.
+pub fn output_to_json(out: &QueryOutput) -> Json {
+    json::obj(vec![
+        ("query_ids", Json::Arr(out.query_ids.iter().map(|s| Json::Str(s.clone())).collect())),
+        ("ref_ids", Json::Arr(out.ref_ids.iter().map(|s| Json::Str(s.clone())).collect())),
+        ("distances", Json::Arr(out.distances.iter().map(|&d| Json::Num(d)).collect())),
+    ])
+}
+
+/// Decode a [`QueryOutput`] from a server response object.
+pub fn output_from_json(j: &Json) -> Result<QueryOutput> {
+    let bad = |what: &str| Error::invalid(format!("malformed query response: {what}"));
+    let strs = |key: &str| -> Result<Vec<String>> {
+        j.get(key)
+            .ok()
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad(key))?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string).ok_or_else(|| bad(key)))
+            .collect()
+    };
+    let query_ids = strs("query_ids")?;
+    let ref_ids = strs("ref_ids")?;
+    let distances: Vec<f64> = j
+        .get("distances")
+        .ok()
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("distances"))?
+        .iter()
+        .map(|d| d.as_f64().ok_or_else(|| bad("distances")))
+        .collect::<Result<_>>()?;
+    if distances.len() != query_ids.len() * ref_ids.len() {
+        return Err(bad("distance count"));
+    }
+    Ok(QueryOutput { query_ids, ref_ids, distances })
+}

@@ -1,0 +1,449 @@
+//! Snapshot-able reference set — the `UFRS` v1 artifact.
+//!
+//! A [`ReferenceSet`] freezes everything the k-vs-N query path needs
+//! about the *reference* side of a comparison: the tree (as canonical
+//! Newick text), the per-node branch lengths in emission order, and the
+//! per-node mass rows over the N reference samples. Snapshotting runs
+//! the exact same [`EmbeddingStream`] the full engines use, so a loaded
+//! snapshot reproduces reference masses bit-identically to a fresh
+//! in-memory build.
+//!
+//! # UFRS v1 layout
+//!
+//! Little-endian throughout, following the UFPR v2 / UFDM v2 wire
+//! discipline (`api::partial`): magic, version, then two CRC32C slots
+//! *before* the variable-length header so corruption is detected before
+//! any payload bytes are decoded.
+//!
+//! ```text
+//! off  size  field
+//! 0    4     magic b"UFRS"
+//! 4    2     version (1)
+//! 6    4     header CRC32C  (over [14, payload_start))
+//! 10   4     payload CRC32C (over [payload_start, end))
+//! 14   1     embedding kind (0 = presence, 1 = proportion)
+//! 15   8     n_samples N (u64)
+//! 23   8     n_rows (u64, = tree nodes minus root)
+//! ..   4+..  sample ids (u32 count, then u32-length-prefixed UTF-8)
+//! ..   4+..  Newick text (u32 length, then UTF-8 bytes)
+//! ..   ...   payload: n_rows × f64 branch lengths, then the rows
+//! ```
+//!
+//! Presence rows are bit-packed (`n.div_ceil(64)` u64 words per row) —
+//! lossless, since presence masses are exactly 0.0 or 1.0. Proportion
+//! rows are dense f64. Both CRCs are verified (and the geometry checked
+//! with overflow-safe arithmetic) before any float is decoded or the
+//! Newick text parsed; a mismatch is the retryable [`Error::Corrupt`].
+
+use std::path::Path;
+
+use crate::api::partial::{put_str, put_u16, put_u32, put_u64, Reader};
+use crate::embed::{EmbBatch, EmbeddingKind, EmbeddingStream};
+use crate::table::FeatureTable;
+use crate::tree::{parse_newick, write_newick, Phylogeny};
+use crate::util::crc32c::crc32c;
+use crate::util::Real;
+use crate::{Error, Result};
+
+/// Reader failures during the structural walk of bytes that already
+/// passed the magic check are disk corruption (e.g. a flipped length
+/// field), not bad API input — remap so they exit retryable-22.
+fn as_corrupt(e: Error) -> Error {
+    match e {
+        Error::Invalid(m) => Error::corrupt(m),
+        other => other,
+    }
+}
+
+const MAGIC: &[u8; 4] = b"UFRS";
+const VERSION: u16 = 1;
+/// Offset of the header CRC32C slot.
+const CRC_OFF: usize = 6;
+/// First byte covered by the header CRC (after magic/version/CRCs).
+const HEADER_START: usize = 14;
+
+/// Reference mass rows, one per non-root tree node in emission order.
+enum RefRows {
+    /// Presence masses bit-packed per row (`words_per_row` u64 words).
+    Packed { words: Vec<u64>, words_per_row: usize },
+    /// Proportion masses, dense row-major `[n_rows, n]` f64.
+    Dense(Vec<f64>),
+}
+
+/// A frozen reference side for k-vs-N UniFrac queries.
+///
+/// Built by [`ReferenceSet::snapshot`] (or loaded from a `UFRS` file via
+/// [`ReferenceSet::load`]); consumed by [`crate::service::query::run`].
+pub struct ReferenceSet {
+    ids: Vec<String>,
+    kind: EmbeddingKind,
+    newick: String,
+    tree: Phylogeny,
+    lengths: Vec<f64>,
+    rows: RefRows,
+    n: usize,
+}
+
+impl ReferenceSet {
+    /// Freeze `table` (the N reference samples) against `tree` under
+    /// `kind`. The snapshot stores the canonical Newick text *and* runs
+    /// the embedding over the reparsed tree, so the save/load round
+    /// trip is bit-identical by construction.
+    pub fn snapshot(
+        tree: &Phylogeny,
+        table: &FeatureTable,
+        kind: EmbeddingKind,
+    ) -> Result<Self> {
+        let n = table.n_samples();
+        if n < 2 {
+            return Err(Error::invalid(format!(
+                "reference set needs at least 2 samples, got {n}"
+            )));
+        }
+        let newick = write_newick(tree);
+        let tree = parse_newick(&newick)?;
+        let n_rows = tree.n_nodes() - 1;
+        let words_per_row = n.div_ceil(64);
+
+        let mut stream = EmbeddingStream::new(&tree, table, kind)?;
+        let mut batch = EmbBatch::<f64>::new(n, 256);
+        let mut lengths = Vec::with_capacity(n_rows);
+        let mut rows = match kind {
+            EmbeddingKind::Presence => RefRows::Packed {
+                words: Vec::with_capacity(n_rows * words_per_row),
+                words_per_row,
+            },
+            EmbeddingKind::Proportion => RefRows::Dense(Vec::with_capacity(n_rows * n)),
+        };
+        loop {
+            batch.reset();
+            if stream.fill(&mut batch) == 0 {
+                break;
+            }
+            for (row, len) in batch.rows() {
+                lengths.push(len);
+                match &mut rows {
+                    RefRows::Packed { words, words_per_row } => {
+                        let base = words.len();
+                        words.resize(base + *words_per_row, 0);
+                        for (j, &m) in row[..n].iter().enumerate() {
+                            if m != 0.0 {
+                                words[base + j / 64] |= 1u64 << (j % 64);
+                            }
+                        }
+                    }
+                    RefRows::Dense(d) => d.extend_from_slice(&row[..n]),
+                }
+            }
+        }
+        debug_assert_eq!(lengths.len(), n_rows);
+
+        Ok(Self { ids: table.sample_ids().to_vec(), kind, newick, tree, lengths, rows, n })
+    }
+
+    /// Number of reference samples N.
+    pub fn n_samples(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored mass rows (non-root tree nodes).
+    pub fn n_rows(&self) -> usize {
+        self.lengths.len()
+    }
+
+    /// Reference sample ids, in stored (column) order.
+    pub fn ids(&self) -> &[String] {
+        &self.ids
+    }
+
+    /// Embedding kind the rows were built under. Queries must use a
+    /// metric whose [`crate::Metric::embedding_kind`] matches.
+    pub fn kind(&self) -> EmbeddingKind {
+        self.kind
+    }
+
+    /// The reparsed snapshot tree — queries must stream over *this*
+    /// tree so query rows align with the stored reference rows.
+    pub fn tree(&self) -> &Phylogeny {
+        &self.tree
+    }
+
+    /// Canonical Newick text the snapshot tree was parsed from.
+    pub fn newick(&self) -> &str {
+        &self.newick
+    }
+
+    /// Branch length of emission row `r`.
+    pub fn length(&self, r: usize) -> f64 {
+        self.lengths[r]
+    }
+
+    /// Approximate resident size in bytes (cache accounting).
+    pub fn approx_bytes(&self) -> usize {
+        let rows = match &self.rows {
+            RefRows::Packed { words, .. } => words.len() * 8,
+            RefRows::Dense(d) => d.len() * 8,
+        };
+        rows + self.lengths.len() * 8
+            + self.newick.len()
+            + self.ids.iter().map(|s| s.len() + 24).sum::<usize>()
+            + self.tree.n_nodes() * 48
+    }
+
+    /// Decode emission row `r` into `out` (length `n_samples`).
+    pub fn fill_row<R: Real>(&self, r: usize, out: &mut [R]) {
+        debug_assert_eq!(out.len(), self.n);
+        match &self.rows {
+            RefRows::Packed { words, words_per_row } => {
+                let base = r * words_per_row;
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = if (words[base + j / 64] >> (j % 64)) & 1 == 1 {
+                        R::ONE
+                    } else {
+                        R::ZERO
+                    };
+                }
+            }
+            RefRows::Dense(d) => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = R::from_f64(d[r * self.n + j]);
+                }
+            }
+        }
+    }
+
+    /// Serialize to the `UFRS` v1 wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(MAGIC);
+        put_u16(&mut v, VERSION);
+        put_u32(&mut v, 0); // header CRC, patched below
+        put_u32(&mut v, 0); // payload CRC, patched below
+        debug_assert_eq!(v.len(), HEADER_START);
+
+        v.push(match self.kind {
+            EmbeddingKind::Presence => 0,
+            EmbeddingKind::Proportion => 1,
+        });
+        put_u64(&mut v, self.n as u64);
+        put_u64(&mut v, self.lengths.len() as u64);
+        put_u32(&mut v, self.ids.len() as u32);
+        for id in &self.ids {
+            put_str(&mut v, id);
+        }
+        put_u32(&mut v, self.newick.len() as u32);
+        v.extend_from_slice(self.newick.as_bytes());
+
+        let payload_start = v.len();
+        for &len in &self.lengths {
+            v.extend_from_slice(&len.to_le_bytes());
+        }
+        match &self.rows {
+            RefRows::Packed { words, .. } => {
+                for &w in words {
+                    v.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            RefRows::Dense(d) => {
+                for &x in d {
+                    v.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+
+        let header_crc = crc32c(&v[HEADER_START..payload_start]);
+        let payload_crc = crc32c(&v[payload_start..]);
+        v[CRC_OFF..CRC_OFF + 4].copy_from_slice(&header_crc.to_le_bytes());
+        v[CRC_OFF + 4..CRC_OFF + 8].copy_from_slice(&payload_crc.to_le_bytes());
+        v
+    }
+
+    /// Parse and fully validate a `UFRS` v1 artifact. Both CRCs are
+    /// verified — and all geometry checked with overflow-safe
+    /// arithmetic — *before* any payload float is decoded or the Newick
+    /// text parsed; any mismatch is [`Error::Corrupt`] (exit 22,
+    /// retryable under the fleet supervisor).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < HEADER_START {
+            return Err(Error::corrupt("UFRS artifact shorter than its fixed prologue"));
+        }
+        if &bytes[0..4] != MAGIC {
+            return Err(Error::corrupt("bad magic: not a UFRS reference-set artifact"));
+        }
+        let mut r = Reader { buf: bytes, pos: 4 };
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(Error::invalid(format!(
+                "unsupported UFRS version {version} (supported: {VERSION})"
+            )));
+        }
+        let stored_header_crc = r.u32()?;
+        let stored_payload_crc = r.u32()?;
+        debug_assert_eq!(r.pos, HEADER_START);
+
+        let kind = match r.u8().map_err(as_corrupt)? {
+            0 => EmbeddingKind::Presence,
+            1 => EmbeddingKind::Proportion,
+            k => return Err(Error::corrupt(format!("unknown embedding kind tag {k}"))),
+        };
+        let n = r.u64().map_err(as_corrupt)? as usize;
+        let n_rows = r.u64().map_err(as_corrupt)? as usize;
+        if n < 2 {
+            return Err(Error::corrupt(format!("UFRS n_samples {n} < 2")));
+        }
+        let n_ids = r.u32().map_err(as_corrupt)? as usize;
+        if n_ids != n {
+            return Err(Error::corrupt(format!("id count {n_ids} != n_samples {n}")));
+        }
+        // Untrusted count: every id costs >= 4 bytes on the wire, so a
+        // count exceeding the remaining bytes / 4 cannot be honest.
+        if n_ids > (bytes.len() - r.pos) / 4 {
+            return Err(Error::corrupt(format!("id count {n_ids} exceeds artifact size")));
+        }
+        let mut ids = Vec::with_capacity(n_ids);
+        for _ in 0..n_ids {
+            ids.push(r.string().map_err(as_corrupt)?);
+        }
+        let newick_len = r.u32().map_err(as_corrupt)? as usize;
+        let newick_bytes = r.take(newick_len).map_err(as_corrupt)?;
+        let payload_start = r.pos;
+
+        // Geometry before allocation, all arithmetic checked.
+        let row_units = match kind {
+            EmbeddingKind::Presence => n.div_ceil(64),
+            EmbeddingKind::Proportion => n,
+        };
+        let payload_len = n_rows
+            .checked_mul(8)
+            .and_then(|lens| n_rows.checked_mul(row_units)?.checked_mul(8)?.checked_add(lens))
+            .ok_or_else(|| Error::corrupt("UFRS payload size overflows"))?;
+        if bytes.len() - payload_start != payload_len {
+            return Err(Error::corrupt(format!(
+                "UFRS payload length mismatch: expected {payload_len} bytes, found {}",
+                bytes.len() - payload_start
+            )));
+        }
+
+        // CRCs before decoding a single payload float or parsing Newick.
+        let header_crc = crc32c(&bytes[HEADER_START..payload_start]);
+        if header_crc != stored_header_crc {
+            return Err(Error::corrupt(format!(
+                "UFRS header checksum mismatch: \
+                 stored {stored_header_crc:#010x}, computed {header_crc:#010x}"
+            )));
+        }
+        let payload_crc = crc32c(&bytes[payload_start..]);
+        if payload_crc != stored_payload_crc {
+            return Err(Error::corrupt(format!(
+                "UFRS payload checksum mismatch: \
+                 stored {stored_payload_crc:#010x}, computed {payload_crc:#010x}"
+            )));
+        }
+
+        let newick = String::from_utf8(newick_bytes.to_vec())
+            .map_err(|_| Error::corrupt("UFRS Newick text is not valid UTF-8"))?;
+        let tree = parse_newick(&newick)?;
+        if tree.n_nodes() - 1 != n_rows {
+            return Err(Error::corrupt(format!(
+                "UFRS row count {n_rows} does not match tree ({} non-root nodes)",
+                tree.n_nodes() - 1
+            )));
+        }
+
+        let mut r = Reader { buf: bytes, pos: payload_start };
+        let mut lengths = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            lengths.push(r.f64()?);
+        }
+        let rows = match kind {
+            EmbeddingKind::Presence => {
+                let mut words = Vec::with_capacity(n_rows * row_units);
+                for _ in 0..n_rows * row_units {
+                    words.push(r.u64()?);
+                }
+                RefRows::Packed { words, words_per_row: row_units }
+            }
+            EmbeddingKind::Proportion => {
+                let mut d = Vec::with_capacity(n_rows * n);
+                for _ in 0..n_rows * n {
+                    d.push(r.f64()?);
+                }
+                RefRows::Dense(d)
+            }
+        };
+
+        Ok(Self { ids, kind, newick, tree, lengths, rows, n })
+    }
+
+    /// Write the artifact to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load and validate an artifact from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// Peek helper for `unifrac inspect`: header facts without requiring a
+/// valid payload (payload CRC verification is still performed and the
+/// result reported).
+pub struct RefSetCheck {
+    /// Format version.
+    pub version: u16,
+    /// Embedding kind tag.
+    pub kind: EmbeddingKind,
+    /// Reference sample count.
+    pub n_samples: usize,
+    /// Stored mass-row count.
+    pub n_rows: usize,
+    /// Whether both stored CRCs matched the bytes.
+    pub checksums_ok: bool,
+}
+
+/// Parse just the UFRS header of `bytes` and verify both CRCs without
+/// decoding the payload. Header corruption is a hard [`Error::Corrupt`];
+/// payload corruption is reported via `checksums_ok: false` so inspect
+/// can print the header before failing.
+pub fn check_bytes(bytes: &[u8]) -> Result<RefSetCheck> {
+    if bytes.len() < HEADER_START || &bytes[0..4] != MAGIC {
+        return Err(Error::corrupt("not a UFRS reference-set artifact"));
+    }
+    let mut r = Reader { buf: bytes, pos: 4 };
+    let version = r.u16()?;
+    if version != VERSION {
+        return Err(Error::invalid(format!(
+            "unsupported UFRS version {version} (supported: {VERSION})"
+        )));
+    }
+    let stored_header_crc = r.u32()?;
+    let stored_payload_crc = r.u32()?;
+    let kind = match r.u8().map_err(as_corrupt)? {
+        0 => EmbeddingKind::Presence,
+        1 => EmbeddingKind::Proportion,
+        k => return Err(Error::corrupt(format!("unknown embedding kind tag {k}"))),
+    };
+    let n_samples = r.u64().map_err(as_corrupt)? as usize;
+    let n_rows = r.u64().map_err(as_corrupt)? as usize;
+    let n_ids = r.u32().map_err(as_corrupt)? as usize;
+    if n_ids > (bytes.len() - r.pos) / 4 {
+        return Err(Error::corrupt(format!("id count {n_ids} exceeds artifact size")));
+    }
+    for _ in 0..n_ids {
+        r.string().map_err(as_corrupt)?;
+    }
+    let newick_len = r.u32().map_err(as_corrupt)? as usize;
+    r.take(newick_len).map_err(as_corrupt)?;
+    let payload_start = r.pos;
+    let header_crc = crc32c(&bytes[HEADER_START..payload_start]);
+    if header_crc != stored_header_crc {
+        return Err(Error::corrupt(format!(
+            "UFRS header checksum mismatch: \
+             stored {stored_header_crc:#010x}, computed {header_crc:#010x}"
+        )));
+    }
+    let checksums_ok = crc32c(&bytes[payload_start..]) == stored_payload_crc;
+    Ok(RefSetCheck { version, kind, n_samples, n_rows, checksums_ok })
+}

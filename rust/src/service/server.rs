@@ -1,0 +1,850 @@
+//! The k-vs-N query server: admission control, deadlines, graceful
+//! degradation.
+//!
+//! A dependency-free blocking-I/O design (no async runtime in the
+//! offline registry): one acceptor thread polls nonblocking TCP and
+//! Unix-socket listeners, admits connections into a *bounded* queue
+//! (`std::sync::mpsc::sync_channel`), and a fixed pool of worker
+//! threads drains it. Every overload path is typed rather than
+//! emergent:
+//!
+//! - **Load shedding** — a full admission queue answers immediately
+//!   with [`Error::Overloaded`] (code 23) instead of queueing without
+//!   bound; the client sees a fast typed rejection it can back off on.
+//! - **Deadlines** — each request carries (or inherits) a deadline the
+//!   query engine checks at stripe-block granularity, so an over-budget
+//!   request fails with [`Error::DeadlineExceeded`] (code 24) within
+//!   one embedding batch of the limit instead of running to completion.
+//! - **Slow clients** — read/write socket timeouts bound how long a
+//!   worker can be held hostage by a stalled peer.
+//! - **Graceful drain** — [`Server::begin_shutdown`] (wired to SIGTERM
+//!   by the CLI) stops admission, lets in-flight requests finish inside
+//!   a drain window, then flips a cooperative abort flag that the query
+//!   engine observes at the same stripe-block granularity.
+//!
+//! Loaded [`ReferenceSet`]s live in a byte-budgeted LRU with
+//! single-flight loading: concurrent requests for the same snapshot
+//! block on one load instead of thundering the filesystem.
+//!
+//! The wire protocol is one JSON object per line (`docs/service.md`);
+//! [`request_line`] is the matching blocking client helper.
+
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::api::FpWidth;
+use crate::distrib::{FaultKind, FaultPlan};
+use crate::service::query::{self, QuerySpec};
+use crate::service::refset::ReferenceSet;
+use crate::table::{read_table_bin, read_table_tsv, FeatureTable};
+use crate::unifrac::Metric;
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+
+/// Server tuning knobs (CLI flags / `RunConfig` map onto these).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads draining the admission queue.
+    pub workers: usize,
+    /// Bounded admission-queue depth; a full queue sheds (code 23).
+    pub queue_depth: usize,
+    /// Byte budget for the ReferenceSet LRU cache.
+    pub cache_bytes: usize,
+    /// Default per-request deadline in ms (0 = none) for requests that
+    /// do not carry their own `deadline_ms`.
+    pub deadline_ms: u64,
+    /// Drain window after [`Server::begin_shutdown`] before in-flight
+    /// requests are cooperatively aborted.
+    pub drain_ms: u64,
+    /// Socket read/write timeout guarding against slow clients.
+    pub io_timeout_ms: u64,
+    /// Injected service faults (`reject@N` / `slowref@N:MS` /
+    /// `drop-conn@N`), fired by connection index at admission.
+    pub fault: FaultPlan,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_depth: 16,
+            cache_bytes: 256 << 20,
+            deadline_ms: 0,
+            drain_ms: 2000,
+            io_timeout_ms: 5000,
+            fault: FaultPlan::empty(0),
+        }
+    }
+}
+
+/// One accepted connection, TCP or Unix-domain.
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> io::Result<Conn> {
+        Ok(match self {
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Slow-client guard: bound both directions.
+    fn set_timeouts(&self, ms: u64) -> io::Result<()> {
+        let t = if ms == 0 { None } else { Some(Duration::from_millis(ms)) };
+        match self {
+            Conn::Tcp(s) => {
+                s.set_read_timeout(t)?;
+                s.set_write_timeout(t)
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                s.set_read_timeout(t)?;
+                s.set_write_timeout(t)
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// An admitted connection waiting for a worker.
+struct Job {
+    conn: Conn,
+    /// `slowref@N:MS` fault payload: sleep this long before touching
+    /// the reference cache (models a slow snapshot load).
+    slow_ms: u64,
+}
+
+/// Internal atomic counters; snapshotted into [`ServeStats`].
+struct Stats {
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    queue_depth: AtomicU64,
+    /// Request latencies in µs, bounded ring (newest overwrite).
+    lat_us: Mutex<Vec<u64>>,
+    lat_at: AtomicUsize,
+}
+
+const LAT_RING: usize = 4096;
+
+impl Stats {
+    fn new() -> Self {
+        Self {
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            lat_us: Mutex::new(Vec::new()),
+            lat_at: AtomicUsize::new(0),
+        }
+    }
+
+    fn record_latency(&self, us: u64) {
+        let mut ring = self.lat_us.lock().unwrap();
+        if ring.len() < LAT_RING {
+            ring.push(us);
+        } else {
+            let at = self.lat_at.fetch_add(1, Ordering::Relaxed) % LAT_RING;
+            ring[at] = us;
+        }
+    }
+
+    fn snapshot(&self) -> ServeStats {
+        let mut lats = self.lat_us.lock().unwrap().clone();
+        lats.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lats.is_empty() {
+                0
+            } else {
+                lats[((lats.len() - 1) as f64 * p) as usize]
+            }
+        };
+        ServeStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+        }
+    }
+}
+
+/// A point-in-time snapshot of the server counters (the `stats` op).
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    /// Connections admitted into the queue.
+    pub accepted: u64,
+    /// Connections shed with code 23 (full queue or `reject@N`).
+    pub shed: u64,
+    /// Requests answered `ok:true`.
+    pub completed: u64,
+    /// Requests answered `ok:false` (any code).
+    pub failed: u64,
+    /// Subset of `failed` with code 24.
+    pub deadline_exceeded: u64,
+    /// ReferenceSet cache hits.
+    pub cache_hits: u64,
+    /// ReferenceSet cache misses (loads).
+    pub cache_misses: u64,
+    /// Connections currently queued.
+    pub queue_depth: u64,
+    /// Median request latency, µs.
+    pub p50_us: u64,
+    /// 99th-percentile request latency, µs.
+    pub p99_us: u64,
+}
+
+impl ServeStats {
+    /// Encode for the `stats` wire op.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+        ])
+    }
+}
+
+/// Cache slot: either a load in flight (others wait on the condvar) or
+/// a resident snapshot with LRU bookkeeping.
+enum Slot {
+    Loading,
+    Ready { rs: Arc<ReferenceSet>, bytes: usize, last_used: u64 },
+}
+
+/// Byte-budgeted single-flight LRU of loaded [`ReferenceSet`]s.
+struct RefCache {
+    budget: usize,
+    inner: Mutex<CacheInner>,
+    cond: Condvar,
+}
+
+struct CacheInner {
+    map: HashMap<String, Slot>,
+    clock: u64,
+    used: usize,
+}
+
+impl RefCache {
+    fn new(budget: usize) -> Self {
+        Self {
+            budget,
+            inner: Mutex::new(CacheInner { map: HashMap::new(), clock: 0, used: 0 }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Fetch `path`, loading it at most once across concurrent callers
+    /// (single-flight): the first caller inserts a `Loading` marker and
+    /// loads outside the lock; the rest wait on the condvar.
+    fn get_or_load(&self, path: &str, stats: &Stats) -> Result<Arc<ReferenceSet>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            match inner.map.get(path) {
+                Some(Slot::Ready { .. }) => {
+                    inner.clock += 1;
+                    let now = inner.clock;
+                    if let Some(Slot::Ready { rs, last_used, .. }) = inner.map.get_mut(path) {
+                        *last_used = now;
+                        stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok(rs.clone());
+                    }
+                    unreachable!("slot vanished under the lock");
+                }
+                Some(Slot::Loading) => {
+                    inner = self.cond.wait(inner).unwrap();
+                }
+                None => break,
+            }
+        }
+        inner.map.insert(path.to_string(), Slot::Loading);
+        stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+        drop(inner);
+
+        let loaded = ReferenceSet::load(path);
+
+        let mut inner = self.inner.lock().unwrap();
+        match loaded {
+            Ok(rs) => {
+                let rs = Arc::new(rs);
+                let bytes = rs.approx_bytes();
+                inner.clock += 1;
+                let now = inner.clock;
+                inner.used += bytes;
+                let slot = Slot::Ready { rs: rs.clone(), bytes, last_used: now };
+                inner.map.insert(path.to_string(), slot);
+                // Evict least-recently-used Ready entries (never the one
+                // just loaded, never Loading markers) down to budget.
+                while inner.used > self.budget {
+                    let victim = inner
+                        .map
+                        .iter()
+                        .filter_map(|(k, s)| match s {
+                            Slot::Ready { last_used, .. } if k != path => {
+                                Some((*last_used, k.clone()))
+                            }
+                            _ => None,
+                        })
+                        .min();
+                    match victim {
+                        Some((_, k)) => {
+                            if let Some(Slot::Ready { bytes, .. }) = inner.map.remove(&k) {
+                                inner.used -= bytes;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+                self.cond.notify_all();
+                Ok(rs)
+            }
+            Err(e) => {
+                // Clear the Loading marker so the next caller retries.
+                inner.map.remove(path);
+                self.cond.notify_all();
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Shared state every server thread holds.
+struct Shared {
+    cfg: ServeConfig,
+    stats: Stats,
+    cache: RefCache,
+    /// Stop admitting; finish in-flight work (drain phase).
+    shutdown: AtomicBool,
+    /// Drain window elapsed; in-flight queries abort cooperatively.
+    hard_abort: Arc<AtomicBool>,
+    fault: Mutex<FaultPlan>,
+    /// 0-based index of the next accepted connection (fault anchor).
+    conn_index: AtomicUsize,
+}
+
+/// A running query server; create with [`Server::start`].
+pub struct Server {
+    shared: Arc<Shared>,
+    acceptor: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+    local_addr: Option<SocketAddr>,
+    unix_path: Option<String>,
+}
+
+impl Server {
+    /// Bind `listen` (a TCP `host:port`, empty to skip) and/or a Unix
+    /// socket path, then spawn the acceptor and worker pool.
+    pub fn start(listen: Option<&str>, unix: Option<&str>, cfg: ServeConfig) -> Result<Server> {
+        let tcp = match listen {
+            Some(addr) if !addr.is_empty() => {
+                let l = TcpListener::bind(addr)
+                    .map_err(|e| Error::invalid(format!("cannot bind {addr}: {e}")))?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+            _ => None,
+        };
+        #[cfg(unix)]
+        let unix_l = match unix {
+            Some(path) if !path.is_empty() => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .map_err(|e| Error::invalid(format!("cannot bind unix socket {path}: {e}")))?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+            _ => None,
+        };
+        #[cfg(not(unix))]
+        let unix_l: Option<()> = {
+            if unix.is_some_and(|p| !p.is_empty()) {
+                return Err(Error::invalid("unix sockets are not supported on this platform"));
+            }
+            None
+        };
+        if tcp.is_none() && unix_l.is_none() {
+            return Err(Error::invalid("server needs a TCP address or a unix socket path"));
+        }
+        let local_addr = tcp.as_ref().and_then(|l| l.local_addr().ok());
+        let unix_path = unix.filter(|p| !p.is_empty()).map(str::to_string);
+
+        let fault = cfg.fault.clone();
+        let workers_n = cfg.workers.max(1);
+        let queue_depth = cfg.queue_depth.max(1);
+        let cache = RefCache::new(cfg.cache_bytes.max(1));
+        let shared = Arc::new(Shared {
+            cfg,
+            stats: Stats::new(),
+            cache,
+            shutdown: AtomicBool::new(false),
+            hard_abort: Arc::new(AtomicBool::new(false)),
+            fault: Mutex::new(fault),
+            conn_index: AtomicUsize::new(0),
+        });
+
+        let (tx, rx) = sync_channel::<Job>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::with_capacity(workers_n);
+        for i in 0..workers_n {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("ufq-worker-{i}"))
+                    .spawn(move || worker_loop(&shared, &rx))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let acceptor = {
+            let shared = shared.clone();
+            thread::Builder::new()
+                .name("ufq-acceptor".to_string())
+                .spawn(move || accept_loop(&shared, tcp, unix_l, tx))
+                .expect("spawn acceptor")
+        };
+
+        Ok(Server { shared, acceptor, workers, local_addr, unix_path })
+    }
+
+    /// The bound TCP address (useful with `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.local_addr
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats.snapshot()
+    }
+
+    /// Start a graceful drain: stop admitting, let in-flight requests
+    /// finish, and after `drain_ms` abort stragglers cooperatively.
+    pub fn begin_shutdown(&self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return; // already draining
+        }
+        let hard = self.shared.hard_abort.clone();
+        let drain = Duration::from_millis(self.shared.cfg.drain_ms);
+        thread::spawn(move || {
+            thread::sleep(drain);
+            hard.store(true, Ordering::SeqCst);
+        });
+    }
+
+    /// Wait for the acceptor and workers to exit (call after
+    /// [`Server::begin_shutdown`]) and return the final counters.
+    pub fn join(self) -> ServeStats {
+        let _ = self.acceptor.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        if let Some(p) = &self.unix_path {
+            let _ = std::fs::remove_file(p);
+        }
+        self.shared.stats.snapshot()
+    }
+}
+
+#[cfg(unix)]
+type UnixAccept = Option<UnixListener>;
+#[cfg(not(unix))]
+type UnixAccept = Option<()>;
+
+/// Accept + admission-control loop. Service faults fire here, keyed by
+/// the 0-based accepted-connection index: `drop-conn` closes without a
+/// byte, `reject` sheds with a typed 23 before reading the request,
+/// `slowref` tags the job for the worker.
+fn accept_loop(shared: &Shared, tcp: Option<TcpListener>, unix_l: UnixAccept, tx: SyncSender<Job>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut idle = true;
+        if let Some(l) = &tcp {
+            match l.accept() {
+                Ok((s, _)) => {
+                    idle = false;
+                    admit(shared, Conn::Tcp(s), &tx);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                Err(_) => {}
+            }
+        }
+        #[cfg(unix)]
+        if let Some(l) = &unix_l {
+            match l.accept() {
+                Ok((s, _)) => {
+                    idle = false;
+                    admit(shared, Conn::Unix(s), &tx);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                Err(_) => {}
+            }
+        }
+        #[cfg(not(unix))]
+        let _ = &unix_l;
+        if idle {
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+    // Dropping tx disconnects the channel; workers exit once drained.
+}
+
+fn admit(shared: &Shared, conn: Conn, tx: &SyncSender<Job>) {
+    let idx = shared.conn_index.fetch_add(1, Ordering::SeqCst);
+    let faults = shared.fault.lock().unwrap().take_service_at(idx);
+    let _ = conn.set_timeouts(shared.cfg.io_timeout_ms);
+
+    let mut slow_ms = 0u64;
+    for f in faults {
+        match f {
+            FaultKind::DropConn => {
+                // Close without writing a byte: clients see EOF.
+                return;
+            }
+            FaultKind::Reject => {
+                shed(shared, conn, "injected reject (fault plan)");
+                return;
+            }
+            FaultKind::SlowRef(ms) => slow_ms = ms,
+            _ => {}
+        }
+    }
+
+    match tx.try_send(Job { conn, slow_ms }) {
+        Ok(()) => {
+            shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+            shared.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(TrySendError::Full(job)) => {
+            shed(shared, job.conn, "admission queue full, try again later");
+        }
+        Err(TrySendError::Disconnected(job)) => {
+            shed(shared, job.conn, "server is draining");
+        }
+    }
+}
+
+/// Answer with a typed overload rejection and close.
+fn shed(shared: &Shared, mut conn: Conn, why: &str) {
+    shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+    let e = Error::overloaded(why);
+    let line = format!("{}\n", error_json(&e).dump());
+    let _ = conn.write_all(line.as_bytes());
+    let _ = conn.flush();
+}
+
+fn error_json(e: &Error) -> Json {
+    json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::Num(e.code() as f64)),
+        ("error", Json::Str(e.code_name().to_string())),
+        ("message", Json::Str(e.to_string())),
+    ])
+}
+
+fn worker_loop(shared: &Shared, rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Holding the lock across recv() is intentional: exactly one
+        // idle worker parks on the channel at a time, the rest queue on
+        // the mutex — both are woken as jobs arrive.
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => break, // acceptor gone and queue drained
+        };
+        shared.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        serve_conn(shared, job);
+    }
+}
+
+/// Handle one connection: line-delimited JSON requests, keep-alive
+/// until EOF, error, timeout, or drain.
+fn serve_conn(shared: &Shared, job: Job) {
+    let Job { conn, slow_ms } = job;
+    let Ok(read_half) = conn.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut conn = conn;
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {}
+            Err(_) => break, // slow client / reset
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let started = Instant::now();
+        let resp = handle_request(shared, line, slow_ms);
+        let us = started.elapsed().as_micros() as u64;
+        shared.stats.record_latency(us);
+        let out = format!("{}\n", resp.dump());
+        if conn.write_all(out.as_bytes()).is_err() || conn.flush().is_err() {
+            break;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) || shared.hard_abort.load(Ordering::SeqCst) {
+            break; // finish this response, then close (drain)
+        }
+    }
+}
+
+fn handle_request(shared: &Shared, line: &str, slow_ms: u64) -> Json {
+    match handle_request_inner(shared, line, slow_ms) {
+        Ok(j) => j,
+        Err(e) => {
+            shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+            if e.code() == 24 {
+                shared.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            }
+            error_json(&e)
+        }
+    }
+}
+
+fn handle_request_inner(shared: &Shared, line: &str, slow_ms: u64) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| Error::invalid(format!("bad request JSON: {e}")))?;
+    let op = req.get("op").ok().and_then(Json::as_str).unwrap_or("query");
+    match op {
+        "health" => {
+            let draining = shared.shutdown.load(Ordering::SeqCst);
+            Ok(json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("status", Json::Str(if draining { "draining" } else { "ok" }.to_string())),
+            ]))
+        }
+        "stats" => {
+            let mut j = shared.stats.snapshot().to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("ok".to_string(), Json::Bool(true));
+            }
+            Ok(j)
+        }
+        "query" => {
+            let need = |key: &str| -> Result<&str> {
+                req.get(key)
+                    .ok()
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::invalid(format!("query needs a string {key:?} field")))
+            };
+            let ref_path = need("ref")?;
+            let table_path = need("table")?;
+            let metric_name = req.get("metric").ok().and_then(Json::as_str).unwrap_or("unweighted");
+            let alpha =
+                req.get("alpha").ok().and_then(Json::as_f64).unwrap_or(1.0);
+            let metric = Metric::parse(metric_name, alpha)
+                .ok_or_else(|| Error::invalid(format!("unknown metric {metric_name:?}")))?;
+            let fp = match req.get("dtype").ok().and_then(Json::as_str).unwrap_or("f64") {
+                "f32" | "float32" => FpWidth::F32,
+                "f64" | "float64" => FpWidth::F64,
+                other => return Err(Error::invalid(format!("unknown dtype {other:?}"))),
+            };
+            let deadline_ms = req
+                .get("deadline_ms")
+                .ok()
+                .and_then(Json::as_f64)
+                .map(|x| x as u64)
+                .unwrap_or(shared.cfg.deadline_ms);
+            let deadline =
+                (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
+
+            if slow_ms > 0 {
+                // slowref@N:MS — model a cold/slow snapshot load.
+                thread::sleep(Duration::from_millis(slow_ms));
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(Error::deadline("deadline elapsed before compute started"));
+                }
+            }
+            let refset = shared.cache.get_or_load(ref_path, &shared.stats)?;
+            let table = load_table(table_path)?;
+            let spec = QuerySpec {
+                metric,
+                fp,
+                deadline,
+                abort: Some(shared.hard_abort.clone()),
+            };
+            let out = query::run(&refset, &table, &spec)?;
+            shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+            let mut j = query::output_to_json(&out);
+            if let Json::Obj(m) = &mut j {
+                m.insert("ok".to_string(), Json::Bool(true));
+            }
+            Ok(j)
+        }
+        other => Err(Error::invalid(format!("unknown op {other:?}"))),
+    }
+}
+
+fn load_table(path: &str) -> Result<FeatureTable> {
+    if path.ends_with(".bin") {
+        read_table_bin(path)
+    } else {
+        read_table_tsv(path)
+    }
+}
+
+/// Reconstruct a typed [`Error`] from a wire error response so CLI exit
+/// codes survive the network hop (23 stays 23, 24 stays 24, 22 stays
+/// retryable-corrupt).
+pub fn error_from_response(j: &Json) -> Error {
+    let msg = j
+        .get("message")
+        .ok()
+        .and_then(Json::as_str)
+        .unwrap_or("server error")
+        .to_string();
+    match j.get("code").ok().and_then(Json::as_f64).map(|c| c as i32) {
+        Some(22) => Error::corrupt(msg),
+        Some(23) => Error::overloaded(msg),
+        Some(24) => Error::deadline(msg),
+        _ => Error::invalid(msg),
+    }
+}
+
+/// Blocking one-shot client: connect to `addr` (a TCP `host:port` or
+/// `unix:/path`), send one request line, read one response line.
+/// A connection closed before any response (e.g. the `drop-conn`
+/// fault) is an [`Error::Io`], distinct from a typed shed.
+pub fn request_line(addr: &str, line: &str, timeout_ms: u64) -> Result<String> {
+    let t = if timeout_ms == 0 { None } else { Some(Duration::from_millis(timeout_ms)) };
+    let mut conn = if let Some(path) = addr.strip_prefix("unix:") {
+        #[cfg(unix)]
+        {
+            let s = UnixStream::connect(path)
+                .map_err(|e| Error::invalid(format!("cannot connect to {addr}: {e}")))?;
+            s.set_read_timeout(t)?;
+            s.set_write_timeout(t)?;
+            Conn::Unix(s)
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            return Err(Error::invalid("unix sockets are not supported on this platform"));
+        }
+    } else {
+        let s = TcpStream::connect(addr)
+            .map_err(|e| Error::invalid(format!("cannot connect to {addr}: {e}")))?;
+        s.set_read_timeout(t)?;
+        s.set_write_timeout(t)?;
+        Conn::Tcp(s)
+    };
+    conn.write_all(line.as_bytes())?;
+    conn.write_all(b"\n")?;
+    conn.flush()?;
+    let mut reader = BufReader::new(conn);
+    let mut resp = String::new();
+    let n = reader.read_line(&mut resp)?;
+    if n == 0 {
+        return Err(Error::Io(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "server closed the connection without responding",
+        )));
+    }
+    Ok(resp.trim_end().to_string())
+}
+
+/// SIGTERM plumbing for graceful drain (`unifrac serve`). Installing
+/// the handler flips a flag the serve loop polls; no allocation or
+/// locking happens in signal context.
+#[cfg(unix)]
+pub mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Set by the SIGTERM handler.
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    /// Install the SIGTERM handler (idempotent).
+    pub fn install_sigterm() {
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_term);
+        }
+    }
+
+    /// True once SIGTERM has been delivered.
+    pub fn term_requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix stub: no signal handling, never requests termination.
+#[cfg(not(unix))]
+pub mod sig {
+    /// No-op on this platform.
+    pub fn install_sigterm() {}
+
+    /// Always false on this platform.
+    pub fn term_requested() -> bool {
+        false
+    }
+}

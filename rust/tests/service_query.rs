@@ -1,0 +1,210 @@
+//! ReferenceSet snapshot + k-vs-N query properties (ISSUE 8).
+//!
+//! The two load-bearing claims:
+//! 1. snapshot → serialize → load → query is **bit-identical** to
+//!    querying the fresh in-memory snapshot (the UFRS round trip loses
+//!    nothing), and
+//! 2. the k-vs-N rectangle matches the corresponding entries of a full
+//!    (N+k)-sample engine run — exactly for the tiled engine (same
+//!    per-cell accumulation order), within tight tolerance for the
+//!    reordered kernels.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use unifrac::embed::EmbeddingKind;
+use unifrac::service::{query, refset, QuerySpec, ReferenceSet};
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{compute_unifrac, ComputeOptions, EngineKind};
+use unifrac::{Error, FpWidth, Metric};
+
+const N_REF: usize = 24;
+const K: usize = 8;
+
+fn problem() -> (Phylogeny, FeatureTable, FeatureTable, FeatureTable) {
+    let spec = SynthSpec {
+        n_samples: N_REF + K,
+        n_features: 256,
+        density: 0.1,
+        seed: 77,
+        ..Default::default()
+    };
+    let (tree, combined) = spec.generate();
+    let ref_table = combined.select_samples(&(0..N_REF).collect::<Vec<_>>()).unwrap();
+    let query_table =
+        combined.select_samples(&(N_REF..N_REF + K).collect::<Vec<_>>()).unwrap();
+    (tree, combined, ref_table, query_table)
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("unifrac_service_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn snapshot_roundtrip_is_bit_identical() {
+    let (tree, _, ref_table, query_table) = problem();
+    for metric in Metric::all(1.5) {
+        let fresh = ReferenceSet::snapshot(&tree, &ref_table, metric.embedding_kind()).unwrap();
+        let loaded = ReferenceSet::from_bytes(&fresh.to_bytes()).unwrap();
+        assert_eq!(loaded.n_samples(), N_REF);
+        assert_eq!(loaded.n_rows(), fresh.n_rows());
+        assert_eq!(loaded.ids(), fresh.ids());
+        assert_eq!(loaded.newick(), fresh.newick());
+        for fp in [FpWidth::F64, FpWidth::F32] {
+            let spec = QuerySpec::new(metric, fp);
+            let a = query::run(&fresh, &query_table, &spec).unwrap();
+            let b = query::run(&loaded, &query_table, &spec).unwrap();
+            assert_eq!(a.query_ids, b.query_ids);
+            assert_eq!(a.ref_ids, b.ref_ids);
+            for (x, y) in a.distances.iter().zip(&b.distances) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "round-trip must be bit-identical ({metric}, {fp:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn query_matches_full_matrix_across_engines() {
+    let (tree, combined, ref_table, query_table) = problem();
+    for metric in Metric::all(1.5) {
+        let rs = ReferenceSet::snapshot(&tree, &ref_table, metric.embedding_kind()).unwrap();
+        let out = query::run(&rs, &query_table, &QuerySpec::new(metric, FpWidth::F64)).unwrap();
+        let out32 = query::run(&rs, &query_table, &QuerySpec::new(metric, FpWidth::F32)).unwrap();
+        for engine in EngineKind::all() {
+            if !engine.supports(metric) {
+                continue;
+            }
+            let opts = ComputeOptions { metric, engine: Some(engine), ..Default::default() };
+            let dm = compute_unifrac::<f64>(&tree, &combined, &opts).unwrap();
+            for q in 0..K {
+                for j in 0..N_REF {
+                    let want = dm.get(N_REF + q, j);
+                    let got = out.get(q, j);
+                    if engine == EngineKind::Tiled {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "tiled f64 must match exactly ({metric}, q={q}, j={j})"
+                        );
+                    } else {
+                        assert!(
+                            (got - want).abs() < 1e-12,
+                            "{metric}/{engine:?} q={q} j={j}: {got} vs {want}"
+                        );
+                    }
+                    assert!(
+                        (out32.get(q, j) - want).abs() < 2e-5,
+                        "f32 query drifted ({metric}, q={q}, j={j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn save_load_and_flipped_byte_is_corrupt() {
+    let (tree, _, ref_table, query_table) = problem();
+    let dir = tmpdir("corrupt");
+    let rs = ReferenceSet::snapshot(&tree, &ref_table, EmbeddingKind::Presence).unwrap();
+    let path = dir.join("ref.ufrs");
+    rs.save(&path).unwrap();
+    let loaded = ReferenceSet::load(&path).unwrap();
+    let spec = QuerySpec::new(Metric::Unweighted, FpWidth::F64);
+    let a = query::run(&rs, &query_table, &spec).unwrap();
+    let b = query::run(&loaded, &query_table, &spec).unwrap();
+    assert_eq!(a.distances, b.distances);
+
+    let bytes = std::fs::read(&path).unwrap();
+    // flip one bit deep in the payload: must be Corrupt, detected from
+    // the stored CRC before any payload decode
+    let mut bad = bytes.clone();
+    let at = bad.len() - 9;
+    bad[at] ^= 0x10;
+    match ReferenceSet::from_bytes(&bad) {
+        Err(Error::Corrupt(m)) => assert!(m.contains("checksum"), "{m}"),
+        other => panic!("expected Corrupt, got {other:?}"),
+    }
+    // flip a header byte (sample id region): also Corrupt
+    let mut bad = bytes.clone();
+    bad[40] ^= 0x01;
+    assert!(matches!(ReferenceSet::from_bytes(&bad), Err(Error::Corrupt(_))));
+    // truncation: error, never a panic
+    assert!(ReferenceSet::from_bytes(&bytes[..bytes.len() - 7]).is_err());
+    assert!(ReferenceSet::from_bytes(&bytes[..10]).is_err());
+    // the inspect helper agrees
+    let c = refset::check_bytes(&bytes).unwrap();
+    assert_eq!(c.n_samples, N_REF);
+    assert!(c.checksums_ok);
+    let mut bad = bytes.clone();
+    let at = bad.len() - 1;
+    bad[at] ^= 0x80;
+    assert!(!refset::check_bytes(&bad).unwrap().checksums_ok);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn guard_rails() {
+    let (tree, _, ref_table, query_table) = problem();
+    // kind mismatch: presence snapshot cannot serve weighted metrics
+    let rs = ReferenceSet::snapshot(&tree, &ref_table, EmbeddingKind::Presence).unwrap();
+    let wspec = QuerySpec::new(Metric::WeightedNormalized, FpWidth::F64);
+    let err = query::run(&rs, &query_table, &wspec).unwrap_err();
+    assert!(matches!(err, Error::Invalid(_)), "{err}");
+
+    // k > N is a typed refusal pointing at the full-matrix path
+    let two = ref_table.select_samples(&[0, 1]).unwrap();
+    let rs_small = ReferenceSet::snapshot(&tree, &two, EmbeddingKind::Presence).unwrap();
+    let err =
+        query::run(&rs_small, &query_table, &QuerySpec::new(Metric::Unweighted, FpWidth::F64))
+            .unwrap_err();
+    assert!(err.to_string().contains("full matrix"), "{err}");
+
+    // an already-expired deadline fails typed, before finishing
+    let mut spec = QuerySpec::new(Metric::Unweighted, FpWidth::F64);
+    spec.deadline = Some(Instant::now());
+    let err = query::run(&rs, &query_table, &spec).unwrap_err();
+    assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
+    assert_eq!(err.code(), 24);
+
+    // tiny reference sets are rejected at snapshot time
+    let one = ref_table.select_samples(&[0]).unwrap();
+    assert!(ReferenceSet::snapshot(&tree, &one, EmbeddingKind::Presence).is_err());
+}
+
+#[test]
+fn tsv_and_json_round_trip() {
+    let (tree, _, ref_table, query_table) = problem();
+    let rs = ReferenceSet::snapshot(&tree, &ref_table, EmbeddingKind::Proportion).unwrap();
+    let out =
+        query::run(&rs, &query_table, &QuerySpec::new(Metric::WeightedNormalized, FpWidth::F64))
+            .unwrap();
+    // JSON transport is lossless (shortest-round-trip f64)
+    let j = query::output_to_json(&out);
+    let back = query::output_from_json(
+        &unifrac::util::json::Json::parse(&j.dump()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(back.query_ids, out.query_ids);
+    assert_eq!(back.ref_ids, out.ref_ids);
+    for (x, y) in out.distances.iter().zip(&back.distances) {
+        assert_eq!(x.to_bits(), y.to_bits(), "JSON hop must be lossless");
+    }
+    // TSV shape: header + one row per query sample
+    let mut buf = Vec::new();
+    query::write_query_tsv(&mut buf, &out).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), K + 1);
+    assert_eq!(lines[0].split('\t').count(), N_REF + 1);
+    assert!(lines[1].starts_with(&out.query_ids[0]));
+}

@@ -1,0 +1,306 @@
+//! Query server behavior: protocol round trip, typed overload paths,
+//! fault injection, and graceful drain (ISSUE 8).
+//!
+//! Every test binds `127.0.0.1:0` (kernel-assigned port), so the suite
+//! is safe to run in parallel with itself.
+
+use std::path::{Path, PathBuf};
+
+use unifrac::distrib::FaultPlan;
+use unifrac::embed::EmbeddingKind;
+use unifrac::service::server::error_from_response;
+use unifrac::service::{query, request_line, QuerySpec, ReferenceSet, ServeConfig, Server};
+use unifrac::synth::SynthSpec;
+use unifrac::table::{write_table_tsv, FeatureTable};
+use unifrac::util::json::{self, Json};
+use unifrac::{Error, FpWidth, Metric};
+
+const N_REF: usize = 16;
+const K: usize = 5;
+
+struct Fixture {
+    dir: PathBuf,
+    ref_path: String,
+    table_path: String,
+    refset: ReferenceSet,
+    query_table: FeatureTable,
+}
+
+fn fixture(name: &str) -> Fixture {
+    let dir = std::env::temp_dir().join(format!("unifrac_serve_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (tree, combined) = SynthSpec {
+        n_samples: N_REF + K,
+        n_features: 128,
+        density: 0.12,
+        seed: 909,
+        ..Default::default()
+    }
+    .generate();
+    let ref_table = combined.select_samples(&(0..N_REF).collect::<Vec<_>>()).unwrap();
+    let query_table =
+        combined.select_samples(&(N_REF..N_REF + K).collect::<Vec<_>>()).unwrap();
+    let refset = ReferenceSet::snapshot(&tree, &ref_table, EmbeddingKind::Presence).unwrap();
+    let ref_path = dir.join("ref.ufrs");
+    refset.save(&ref_path).unwrap();
+    let table_path = dir.join("query.tsv");
+    write_table_tsv(&query_table, &table_path).unwrap();
+    Fixture {
+        ref_path: ref_path.to_string_lossy().into_owned(),
+        table_path: table_path.to_string_lossy().into_owned(),
+        dir,
+        refset,
+        query_table,
+    }
+}
+
+fn cfg(fault: &str) -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        queue_depth: 8,
+        cache_bytes: 64 << 20,
+        deadline_ms: 0,
+        drain_ms: 500,
+        io_timeout_ms: 5000,
+        fault: FaultPlan::parse(fault, 0).unwrap(),
+    }
+}
+
+fn query_req(fx: &Fixture) -> String {
+    json::obj(vec![
+        ("op", Json::Str("query".into())),
+        ("ref", Json::Str(fx.ref_path.clone())),
+        ("table", Json::Str(fx.table_path.clone())),
+        ("metric", Json::Str("unweighted".into())),
+    ])
+    .dump()
+}
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn tcp_roundtrip_matches_offline_bit_for_bit() {
+    let fx = fixture("roundtrip");
+    let server = Server::start(Some("127.0.0.1:0"), None, cfg("")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let resp = request_line(&addr, &query_req(&fx), 10_000).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert!(matches!(j.get("ok"), Ok(Json::Bool(true))), "{resp}");
+    let got = query::output_from_json(&j).unwrap();
+
+    let spec = QuerySpec::new(Metric::Unweighted, FpWidth::F64);
+    let want = query::run(&fx.refset, &fx.query_table, &spec).unwrap();
+    assert_eq!(got.query_ids, want.query_ids);
+    assert_eq!(got.ref_ids, want.ref_ids);
+    for (x, y) in got.distances.iter().zip(&want.distances) {
+        assert_eq!(x.to_bits(), y.to_bits(), "wire hop must be lossless");
+    }
+
+    // health + stats ops answer on the same keep-alive protocol
+    let h = Json::parse(&request_line(&addr, r#"{"op":"health"}"#, 10_000).unwrap()).unwrap();
+    assert_eq!(h.get("status").ok().and_then(Json::as_str), Some("ok"));
+    let s = Json::parse(&request_line(&addr, r#"{"op":"stats"}"#, 10_000).unwrap()).unwrap();
+    assert!(s.get("completed").ok().and_then(Json::as_f64).unwrap() >= 1.0);
+
+    // unknown op and bad JSON are typed errors, not dropped connections
+    let b = Json::parse(&request_line(&addr, r#"{"op":"nope"}"#, 10_000).unwrap()).unwrap();
+    assert!(matches!(b.get("ok"), Ok(Json::Bool(false))));
+    let b = Json::parse(&request_line(&addr, "{not json", 10_000).unwrap()).unwrap();
+    assert!(matches!(b.get("ok"), Ok(Json::Bool(false))));
+
+    server.begin_shutdown();
+    let stats = server.join();
+    assert!(stats.completed >= 1);
+    assert_eq!(stats.shed, 0);
+    cleanup(&fx.dir);
+}
+
+#[test]
+fn reject_fault_sheds_with_code_23() {
+    let fx = fixture("reject");
+    // connection #0 is rejected at admission; #1 succeeds
+    let server = Server::start(Some("127.0.0.1:0"), None, cfg("reject@0")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let resp = request_line(&addr, &query_req(&fx), 10_000).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert!(matches!(j.get("ok"), Ok(Json::Bool(false))), "{resp}");
+    assert_eq!(j.get("code").ok().and_then(Json::as_f64), Some(23.0));
+    let e = error_from_response(&j);
+    assert!(matches!(e, Error::Overloaded(_)));
+    assert_eq!(e.code(), 23);
+
+    let resp = request_line(&addr, &query_req(&fx), 10_000).unwrap();
+    assert!(matches!(Json::parse(&resp).unwrap().get("ok"), Ok(Json::Bool(true))));
+
+    server.begin_shutdown();
+    let stats = server.join();
+    assert_eq!(stats.shed, 1);
+    cleanup(&fx.dir);
+}
+
+#[test]
+fn drop_conn_fault_is_an_io_error_not_a_shed() {
+    let fx = fixture("drop");
+    let server = Server::start(Some("127.0.0.1:0"), None, cfg("drop-conn@0")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let err = request_line(&addr, &query_req(&fx), 10_000).unwrap_err();
+    assert!(matches!(err, Error::Io(_)), "dropped conn must be Io, got {err}");
+    assert_ne!(err.code(), 23);
+
+    // the next connection is unaffected (single-fire fault)
+    let resp = request_line(&addr, &query_req(&fx), 10_000).unwrap();
+    assert!(matches!(Json::parse(&resp).unwrap().get("ok"), Ok(Json::Bool(true))));
+
+    server.begin_shutdown();
+    server.join();
+    cleanup(&fx.dir);
+}
+
+#[test]
+fn slowref_plus_deadline_exceeds_with_code_24() {
+    let fx = fixture("deadline");
+    // connection #0 sleeps 300ms before touching the cache; a 50ms
+    // request deadline must fire with code 24, not run to completion
+    let server = Server::start(Some("127.0.0.1:0"), None, cfg("slowref@0:300")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let req = json::obj(vec![
+        ("op", Json::Str("query".into())),
+        ("ref", Json::Str(fx.ref_path.clone())),
+        ("table", Json::Str(fx.table_path.clone())),
+        ("metric", Json::Str("unweighted".into())),
+        ("deadline_ms", Json::Num(50.0)),
+    ])
+    .dump();
+    let j = Json::parse(&request_line(&addr, &req, 10_000).unwrap()).unwrap();
+    assert_eq!(j.get("code").ok().and_then(Json::as_f64), Some(24.0), "{j:?}");
+    assert!(matches!(error_from_response(&j), Error::DeadlineExceeded(_)));
+
+    server.begin_shutdown();
+    let stats = server.join();
+    assert_eq!(stats.deadline_exceeded, 1);
+    cleanup(&fx.dir);
+}
+
+#[test]
+fn missing_reference_is_a_typed_error_and_corrupt_ref_is_code_22() {
+    let fx = fixture("corrupt");
+    let server = Server::start(Some("127.0.0.1:0"), None, cfg("")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let req = json::obj(vec![
+        ("op", Json::Str("query".into())),
+        ("ref", Json::Str(fx.dir.join("absent.ufrs").to_string_lossy().into_owned())),
+        ("table", Json::Str(fx.table_path.clone())),
+    ])
+    .dump();
+    let j = Json::parse(&request_line(&addr, &req, 10_000).unwrap()).unwrap();
+    assert!(matches!(j.get("ok"), Ok(Json::Bool(false))));
+
+    // corrupt the artifact on disk: the server must answer 22, and the
+    // single-flight cache must not poison later loads of a fixed file
+    let mut bytes = std::fs::read(&fx.ref_path).unwrap();
+    let at = bytes.len() - 3;
+    bytes[at] ^= 0x40;
+    let bad_path = fx.dir.join("bad.ufrs");
+    std::fs::write(&bad_path, &bytes).unwrap();
+    let req = json::obj(vec![
+        ("op", Json::Str("query".into())),
+        ("ref", Json::Str(bad_path.to_string_lossy().into_owned())),
+        ("table", Json::Str(fx.table_path.clone())),
+    ])
+    .dump();
+    let j = Json::parse(&request_line(&addr, &req, 10_000).unwrap()).unwrap();
+    assert_eq!(j.get("code").ok().and_then(Json::as_f64), Some(22.0), "{j:?}");
+
+    // the pristine artifact still serves
+    let resp = request_line(&addr, &query_req(&fx), 10_000).unwrap();
+    assert!(matches!(Json::parse(&resp).unwrap().get("ok"), Ok(Json::Bool(true))));
+
+    server.begin_shutdown();
+    server.join();
+    cleanup(&fx.dir);
+}
+
+#[test]
+fn concurrent_clients_all_get_identical_answers() {
+    let fx = fixture("concurrent");
+    let server = Server::start(Some("127.0.0.1:0"), None, cfg("")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let want = {
+        let spec = QuerySpec::new(Metric::Unweighted, FpWidth::F64);
+        query::run(&fx.refset, &fx.query_table, &spec).unwrap()
+    };
+    let req = query_req(&fx);
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.clone();
+            let req = req.clone();
+            std::thread::spawn(move || request_line(&addr, &req, 15_000).unwrap())
+        })
+        .collect();
+    for h in handles {
+        let j = Json::parse(&h.join().unwrap()).unwrap();
+        let got = query::output_from_json(&j).unwrap();
+        assert_eq!(got.distances, want.distances);
+    }
+
+    server.begin_shutdown();
+    let stats = server.join();
+    assert!(stats.completed >= 6);
+    // six loads of one artifact: single-flight means at most one miss
+    assert_eq!(stats.cache_misses, 1);
+    assert!(stats.cache_hits >= 5);
+    cleanup(&fx.dir);
+}
+
+#[test]
+fn drain_refuses_new_work_and_join_returns_stats() {
+    let fx = fixture("drain");
+    let server = Server::start(Some("127.0.0.1:0"), None, cfg("")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let resp = request_line(&addr, &query_req(&fx), 10_000).unwrap();
+    assert!(matches!(Json::parse(&resp).unwrap().get("ok"), Ok(Json::Bool(true))));
+
+    server.begin_shutdown();
+    // after shutdown the listener is gone: connects fail or are reset
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert!(request_line(&addr, &query_req(&fx), 2_000).is_err());
+    let stats = server.join();
+    assert_eq!(stats.completed, 1);
+    cleanup(&fx.dir);
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_roundtrip() {
+    let fx = fixture("unix");
+    let sock = fx.dir.join("serve.sock");
+    let sock_str = sock.to_string_lossy().into_owned();
+    let server = Server::start(None, Some(&sock_str), cfg("")).unwrap();
+
+    let addr = format!("unix:{sock_str}");
+    let j = Json::parse(&request_line(&addr, &query_req(&fx), 10_000).unwrap()).unwrap();
+    assert!(matches!(j.get("ok"), Ok(Json::Bool(true))), "{j:?}");
+    let got = query::output_from_json(&j).unwrap();
+    let want = query::run(
+        &fx.refset,
+        &fx.query_table,
+        &QuerySpec::new(Metric::Unweighted, FpWidth::F64),
+    )
+    .unwrap();
+    assert_eq!(got.distances, want.distances);
+
+    server.begin_shutdown();
+    server.join();
+    assert!(!sock.exists(), "socket file must be removed on join");
+    cleanup(&fx.dir);
+}

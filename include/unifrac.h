@@ -57,7 +57,9 @@ typedef struct SsuPartial SsuPartial; /* one computed stripe subrange */
  *   table_path     feature table (.tsv, or the binary .bin format)
  *   tree_path      Newick tree
  *   unifrac_method "unweighted" | "weighted_normalized" |
- *                  "weighted_unnormalized" | "generalized"
+ *                  "weighted_unnormalized" | "generalized" | "emd"
+ *                  (emd distances equal weighted_unnormalized; the
+ *                  per-branch flows come from ssu_emd_flows)
  *   alpha          generalized-UniFrac exponent (ignored otherwise)
  *   fp32           nonzero computes in single precision
  *   threads        worker threads (0 = all cores)
@@ -83,6 +85,16 @@ int ssu_one_off_to_path(const char *table_path, const char *tree_path,
                         const char *unifrac_method, double alpha, int fp32,
                         unsigned threads, const char *format,
                         unsigned max_resident_mb, const char *out_path);
+
+/* EMDUniFrac differential-abundance flows for one sample pair, written
+ * to out_path (as_json nonzero writes the JSON document, otherwise the
+ * tab-separated flow table — identical bytes to the CLI's emd-flows
+ * subcommand). sample_i / sample_j name the pair by sample id or by
+ * 0-based index. The recorded distance equals the pair's
+ * weighted_unnormalized UniFrac distance. */
+int ssu_emd_flows(const char *table_path, const char *tree_path,
+                  const char *sample_i, const char *sample_j, int as_json,
+                  const char *out_path);
 
 /* One stripe partial: the partial_index-th of n_partials equal splits
  * of the stripe space. Partials of the same problem/options merge

@@ -1,0 +1,135 @@
+//! Bench: the large-N stats path (ISSUE 9) — randomized range-finder
+//! PCoA vs the exact dense Jacobi reference, and panel-batched
+//! PERMANOVA vs one-permutation-per-pass streaming.
+//!
+//! Two ratios feed the CI regression gate (`BENCH_baseline.json`):
+//!
+//! * `pcoa_memory_ratio_vs_dense` — dense Gower bytes (8·n²) over the
+//!   randomized solver's measured `peak_resident_bytes`. Deterministic
+//!   for a given (n, sketch), so it gates the O(n·ℓ) memory contract
+//!   itself, not a timing.
+//! * `permanova_batch32_speedup` — wall time of the batch=1 path (one
+//!   pair-stream pass per permutation) over the batch=32 label panel.
+//!   Both paths are bitwise identical by construction (asserted here);
+//!   the ratio is what the GEMM batching buys.
+//!
+//! Reduced-size CI mode: `UNIFRAC_BENCH_N=128 UNIFRAC_BENCH_REPEATS=1`.
+
+use unifrac::matrix::CondensedMatrix;
+use unifrac::stats::{
+    pcoa_exact_dense, pcoa_scale, permanova_with, procrustes_rms, PcoaOpts, PermanovaOpts,
+};
+use unifrac::util::json::{obj, Json};
+use unifrac::util::Xoshiro256;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Euclidean distances of random points in `dims`-space: the Gower
+/// matrix has rank ≤ dims, so a sketch with ℓ ≥ dims is exact and the
+/// dense-vs-randomized Procrustes residual is a pure correctness probe.
+fn random_euclidean(n: usize, dims: usize, seed: u64) -> CondensedMatrix {
+    let mut rng = Xoshiro256::new(seed);
+    let pts: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..dims).map(|_| rng.f64()).collect()).collect();
+    let mut dm = CondensedMatrix::zeros(n, vec![]);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = pts[i]
+                .iter()
+                .zip(&pts[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            dm.set(i, j, d);
+        }
+    }
+    dm
+}
+
+fn best_of<T>(repeats: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut best_secs = f64::INFINITY;
+    let mut best = None;
+    for _ in 0..repeats.max(1) {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        let secs = t0.elapsed().as_secs_f64();
+        if secs < best_secs {
+            best_secs = secs;
+            best = Some(out);
+        }
+    }
+    (best_secs, best.expect("at least one repeat"))
+}
+
+fn main() {
+    let n = env_usize("UNIFRAC_BENCH_N", 384);
+    let repeats = env_usize("UNIFRAC_BENCH_REPEATS", 3);
+    let permutations = env_usize("UNIFRAC_BENCH_PERMS", 199);
+    let dm = random_euclidean(n, 6, 42);
+
+    // ---- PCoA: dense Jacobi reference vs randomized range-finder ----
+    let k = 8usize;
+    let opts = PcoaOpts { components: k, oversample: 8, power_iters: 2, seed: 7 };
+    let (dense_secs, dense) = best_of(repeats, || pcoa_exact_dense(&dm, k));
+    let (rand_secs, (fast, stats)) = best_of(repeats, || pcoa_scale(&dm, &opts));
+    let rms = procrustes_rms(&dense.coordinates, &fast.coordinates);
+    let dense_bytes = 8 * n * n;
+    let memory_ratio = dense_bytes as f64 / stats.peak_resident_bytes.max(1) as f64;
+    let pcoa_speedup = dense_secs / rand_secs.max(f64::MIN_POSITIVE);
+    println!(
+        "pcoa n={n} k={k}: dense {dense_secs:.4}s vs randomized {rand_secs:.4}s \
+         ({pcoa_speedup:.2}x), sketch {} cols, {} passes",
+        stats.sketch_columns, stats.matrix_passes
+    );
+    println!(
+        "  memory: dense Gower {} KiB vs peak resident {} KiB ({memory_ratio:.2}x); \
+         procrustes rms {rms:.3e} (rank-covered sketch: exact)",
+        dense_bytes / 1024,
+        stats.peak_resident_bytes.div_ceil(1024)
+    );
+
+    // ---- PERMANOVA: batch=1 streaming vs the batch=32 label panel ----
+    let groups: Vec<usize> = (0..n).map(|i| i % 4).collect();
+    let (b1_secs, r1) = best_of(repeats, || {
+        permanova_with(&dm, &groups, &PermanovaOpts { permutations, batch: 1, seed: 11 })
+    });
+    let (b32_secs, r32) = best_of(repeats, || {
+        permanova_with(&dm, &groups, &PermanovaOpts { permutations, batch: 32, seed: 11 })
+    });
+    assert_eq!(
+        r1.pseudo_f.to_bits(),
+        r32.pseudo_f.to_bits(),
+        "batch widths must be bitwise identical"
+    );
+    assert_eq!(r1.p_value.to_bits(), r32.p_value.to_bits());
+    let permanova_speedup = b1_secs / b32_secs.max(f64::MIN_POSITIVE);
+    println!(
+        "permanova n={n} perms={permutations}: batch=1 {b1_secs:.4}s vs batch=32 \
+         {b32_secs:.4}s ({permanova_speedup:.2}x, F and p bitwise identical)"
+    );
+
+    let doc = obj(vec![
+        ("bench", Json::from("stats_sweep")),
+        ("n_samples", Json::from(n)),
+        ("repeats", Json::from(repeats)),
+        ("permutations", Json::from(permutations)),
+        ("pcoa_components", Json::from(k)),
+        ("pcoa_sketch_columns", Json::from(stats.sketch_columns)),
+        ("pcoa_matrix_passes", Json::from(stats.matrix_passes)),
+        ("pcoa_dense_seconds", Json::from(dense_secs)),
+        ("pcoa_randomized_seconds", Json::from(rand_secs)),
+        ("pcoa_speedup_vs_dense", Json::from(pcoa_speedup)),
+        ("pcoa_peak_resident_bytes", Json::from(stats.peak_resident_bytes)),
+        ("pcoa_dense_bytes", Json::from(dense_bytes)),
+        ("pcoa_memory_ratio_vs_dense", Json::from(memory_ratio)),
+        ("pcoa_procrustes_rms_vs_dense", Json::from(rms)),
+        ("permanova_batch1_seconds", Json::from(b1_secs)),
+        ("permanova_batch32_seconds", Json::from(b32_secs)),
+        ("permanova_batch32_speedup", Json::from(permanova_speedup)),
+    ]);
+    let out = "BENCH_stats.json";
+    std::fs::write(out, doc.dump()).expect("write bench json");
+    println!("wrote {out}");
+}

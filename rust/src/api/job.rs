@@ -216,6 +216,7 @@ impl JobSpec {
         tree: &Phylogeny,
         table: &FeatureTable,
     ) -> Result<EngineKind> {
+        self.metric.validate()?;
         let engine = match self.engine {
             Some(e) => e,
             None => {

@@ -1,7 +1,8 @@
 //! CI bench regression gate: compare the ratio metrics emitted by the
-//! bench sweeps (`BENCH_engines.json`, `BENCH_sparse.json`) against the
-//! committed floor file `BENCH_baseline.json` and fail (exit 1) when
-//! any cell regresses by more than the baseline's tolerance.
+//! bench sweeps (`BENCH_engines.json`, `BENCH_sparse.json`,
+//! `BENCH_stats.json`) against the committed floor file
+//! `BENCH_baseline.json` and fail (exit 1) when any cell regresses by
+//! more than the baseline's tolerance.
 //!
 //! The baseline stores *ratio minimums* (engine-vs-engine and
 //! SIMD-vs-scalar speedups), not absolute times — ratios of runs taken
@@ -243,13 +244,16 @@ fn ratchet(baseline: &mut Baseline, docs: &BTreeMap<String, Json>) -> Result<usi
 }
 
 fn usage() -> String {
-    "usage: bench_gate --baseline FILE [--engines FILE] [--sparse FILE] [--record]".to_string()
+    "usage: bench_gate --baseline FILE [--engines FILE] [--sparse FILE] \
+     [--stats FILE] [--record]"
+        .to_string()
 }
 
 fn run(argv: &[String]) -> Result<ExitCode, String> {
     let mut baseline_path = None;
     let mut engines_path = "BENCH_engines.json".to_string();
     let mut sparse_path = "BENCH_sparse.json".to_string();
+    let mut stats_path = "BENCH_stats.json".to_string();
     let mut record = false;
     let mut it = argv.iter();
     while let Some(arg) = it.next() {
@@ -260,6 +264,7 @@ fn run(argv: &[String]) -> Result<ExitCode, String> {
             "--baseline" => baseline_path = Some(val("--baseline")?),
             "--engines" => engines_path = val("--engines")?,
             "--sparse" => sparse_path = val("--sparse")?,
+            "--stats" => stats_path = val("--stats")?,
             "--record" => record = true,
             other => return Err(format!("unknown flag {other:?}\n{}", usage())),
         }
@@ -279,6 +284,7 @@ fn run(argv: &[String]) -> Result<ExitCode, String> {
         let path = match cell.bench.as_str() {
             "engine_sweep" => &engines_path,
             "sparse_sweep" => &sparse_path,
+            "stats_sweep" => &stats_path,
             other => return Err(format!("no file mapping for bench {other:?}")),
         };
         let text =

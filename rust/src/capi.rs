@@ -219,6 +219,58 @@ pub unsafe extern "C" fn ssu_one_off_to_path(
     }
 }
 
+/// Compute the EMDUniFrac differential-abundance flows for one sample
+/// pair and write them to `out_path` (`as_json != 0` writes the JSON
+/// document, otherwise the tab-separated flow table — the same bytes
+/// the CLI's `emd-flows` subcommand emits). `sample_i` / `sample_j`
+/// name the pair either by sample id or by 0-based index. The distance
+/// recorded in the artifact equals the pair's `weighted_unnormalized`
+/// UniFrac distance.
+///
+/// # Safety
+/// All pointer arguments must be valid NUL-terminated strings.
+#[no_mangle]
+pub unsafe extern "C" fn ssu_emd_flows(
+    table_path: *const c_char,
+    tree_path: *const c_char,
+    sample_i: *const c_char,
+    sample_j: *const c_char,
+    as_json: c_int,
+    out_path: *const c_char,
+) -> c_int {
+    let table_path = try_cstr!(table_path, "table_path");
+    let tree_path = try_cstr!(tree_path, "tree_path");
+    let si = try_cstr!(sample_i, "sample_i");
+    let sj = try_cstr!(sample_j, "sample_j");
+    let out_path = try_cstr!(out_path, "out_path");
+    match guarded(|| {
+        let (tree, table) = load_problem(table_path, tree_path)?;
+        let resolve = |tok: &str| -> Result<usize> {
+            if let Some(pos) = table.sample_ids().iter().position(|id| id.as_str() == tok) {
+                return Ok(pos);
+            }
+            tok.trim().parse::<usize>().map_err(|_| {
+                Error::invalid(format!("{tok:?} is neither a sample id nor a 0-based index"))
+            })
+        };
+        let da = crate::unifrac::emd_flows(&tree, &table, resolve(si)?, resolve(sj)?)?;
+        if as_json != 0 {
+            let mut s = da.to_json().dump();
+            s.push('\n');
+            std::fs::write(out_path, s)?;
+        } else {
+            use std::io::Write as _;
+            let mut w = std::io::BufWriter::new(std::fs::File::create(out_path)?);
+            da.write_tsv(&mut w)?;
+            w.flush()?;
+        }
+        Ok(())
+    }) {
+        Ok(()) => 0,
+        Err(code) => code,
+    }
+}
+
 /// Compute one stripe partial: the `partial_index`-th of `n_partials`
 /// equal splits of the stripe space. Partials of the same problem/spec
 /// merge bit-identically to `ssu_one_off` via [`ssu_merge_partials`].
@@ -854,6 +906,7 @@ mod tests {
         let exports = [
             "ssu_one_off",
             "ssu_one_off_to_path",
+            "ssu_emd_flows",
             "ssu_partial",
             "ssu_merge_partials",
             "ssu_partial_save",
@@ -898,6 +951,85 @@ mod tests {
         }
         for name in exports {
             assert!(declared.contains(name), "header must declare {name} as a function");
+        }
+    }
+
+    /// ISSUE-9 tentpole: `ssu_emd_flows` writes both artifact formats
+    /// and its recorded distance equals the pair's
+    /// weighted_unnormalized distance from the matrix path.
+    #[test]
+    fn emd_flows_writes_both_formats() {
+        let dir = tmpdir("emd_flows");
+        let (table_c, tree_c) = problem_files(&dir);
+        let metric = CString::new("weighted_unnormalized").unwrap();
+        unsafe {
+            let mut full: *mut SsuMatrix = ptr::null_mut();
+            let rc = ssu_one_off(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                metric.as_ptr(),
+                1.0,
+                0,
+                1,
+                &mut full,
+            );
+            assert_eq!(rc, 0, "{:?}", CStr::from_ptr(ssu_last_error()));
+            let want = ssu_matrix_get(full, 0, 1);
+            ssu_matrix_free(full);
+
+            let si = CString::new("0").unwrap();
+            let sj = CString::new("1").unwrap();
+            let tsv = CString::new(dir.join("flows.tsv").to_str().unwrap()).unwrap();
+            let rc = ssu_emd_flows(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                si.as_ptr(),
+                sj.as_ptr(),
+                0,
+                tsv.as_ptr(),
+            );
+            assert_eq!(rc, 0, "{:?}", CStr::from_ptr(ssu_last_error()));
+            let text = std::fs::read_to_string(dir.join("flows.tsv")).unwrap();
+            assert!(text.starts_with("# emd-flows"), "bad header: {:?}", text.lines().next());
+            let distance: f64 = text
+                .lines()
+                .next()
+                .unwrap()
+                .split("distance=")
+                .nth(1)
+                .unwrap()
+                .parse()
+                .unwrap();
+            assert!((distance - want).abs() < 1e-12, "{distance} vs {want}");
+
+            let json_c = CString::new(dir.join("flows.json").to_str().unwrap()).unwrap();
+            let rc = ssu_emd_flows(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                si.as_ptr(),
+                sj.as_ptr(),
+                1,
+                json_c.as_ptr(),
+            );
+            assert_eq!(rc, 0, "{:?}", CStr::from_ptr(ssu_last_error()));
+            let doc = crate::util::json::Json::parse(
+                &std::fs::read_to_string(dir.join("flows.json")).unwrap(),
+            )
+            .unwrap();
+            assert!((doc.get("distance").unwrap().as_f64().unwrap() - want).abs() < 1e-12);
+            assert!(!doc.get("rows").unwrap().as_arr().unwrap().is_empty());
+
+            // unknown sample token is a typed invalid error
+            let bad = CString::new("no_such_sample").unwrap();
+            let rc = ssu_emd_flows(
+                table_c.as_ptr(),
+                tree_c.as_ptr(),
+                bad.as_ptr(),
+                si.as_ptr(),
+                0,
+                tsv.as_ptr(),
+            );
+            assert_eq!(rc, Error::invalid("").code());
         }
     }
 

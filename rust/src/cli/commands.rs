@@ -7,11 +7,13 @@ use crate::devicemodel::{device_by_name, paper_gpus, XEON_E5_2680V4};
 use crate::error::{Error, Result};
 use crate::matrix::{load_view, CondensedFile, CondensedMatrix};
 use crate::report::{self, Scale};
-use crate::stats::{mantel, pcoa, permanova};
+use crate::stats::{mantel, pcoa, pcoa_scale, permanova_with, PcoaOpts, PermanovaOpts};
 use crate::synth::SynthSpec;
 use crate::table::{read_table_bin, read_table_tsv, write_table_bin, write_table_tsv, FeatureTable};
 use crate::tree::{parse_newick, write_newick, Phylogeny};
-use crate::unifrac::{compute_unifrac, compute_unifrac_naive, ComputeOptions, EngineKind, Metric};
+use crate::unifrac::{
+    compute_unifrac, compute_unifrac_naive, ComputeOptions, EngineKind, FlowRow, Metric,
+};
 use std::path::PathBuf;
 
 /// Resolve a RunConfig from `--config` plus flag overrides.
@@ -519,24 +521,50 @@ pub fn tables(args: &mut Args) -> Result<()> {
 ///
 /// `--matrix` accepts both the square TSV and the binary condensed
 /// formats (`--output-format bin|mmap`) — binary matrices are mapped,
-/// not loaded.
+/// not loaded: the randomized range-finder solver only ever touches
+/// the matrix through sequential pair-stream panel products, so
+/// EMP-scale UFDM files stream at O(n·sketch) resident memory. The
+/// sketch knobs (`--components`, `--oversample`, `--power-iters`) are
+/// documented in docs/stats.md; the solve is exact whenever
+/// components + oversample reaches the Gower-matrix rank.
 pub fn pcoa_cmd(args: &mut Args) -> Result<()> {
+    // sketch knobs default from [run] config keys, CLI flags override
+    let cfg = match args.opt("config") {
+        Some(p) => RunConfig::from_file(p)?,
+        None => RunConfig::default(),
+    };
     let matrix = args.require("matrix")?;
     let axes = args.get_or("axes", 3usize)?;
     let seed = args.get_or("seed", 1u64)?;
+    let components = args.get_or("components", cfg.components)?;
+    let oversample = args.get_or("oversample", cfg.oversample)?;
+    let power_iters = args.get_or("power-iters", cfg.power_iters)?;
     let output = args.opt("output");
     args.finish()?;
     let dm = load_view(&matrix)?;
-    let res = pcoa(&*dm, axes, seed);
-    println!("PCoA of {matrix} ({} samples):", dm.n_samples());
-    for (i, (ev, pe)) in res.eigenvalues.iter().zip(&res.proportion_explained).enumerate() {
+    // the sketch must at least cover the axes we report
+    let opts =
+        PcoaOpts { components: components.max(axes), oversample, power_iters, seed };
+    let (res, stats) = pcoa_scale(&*dm, &opts);
+    println!(
+        "PCoA of {matrix} ({} samples; sketch {} columns, {} pair-stream passes, \
+         peak {} KiB resident):",
+        dm.n_samples(),
+        stats.sketch_columns,
+        stats.matrix_passes,
+        stats.peak_resident_bytes.div_ceil(1024)
+    );
+    for (i, (ev, pe)) in
+        res.eigenvalues.iter().zip(&res.proportion_explained).enumerate().take(axes)
+    {
         println!("  axis {}: eigenvalue {:.6}, {:.2}% explained", i + 1, ev, pe * 100.0);
     }
     if let Some(path) = output {
         use std::io::Write;
+        let n_axes = res.coordinates.len().min(axes);
         let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
         write!(w, "sample")?;
-        for i in 0..res.coordinates.len() {
+        for i in 0..n_axes {
             write!(w, "\tPC{}", i + 1)?;
         }
         writeln!(w)?;
@@ -544,7 +572,7 @@ pub fn pcoa_cmd(args: &mut Args) -> Result<()> {
         for s in 0..dm.n_samples() {
             let id = ids.get(s).cloned().unwrap_or_else(|| format!("S{s}"));
             write!(w, "{id}")?;
-            for axis in &res.coordinates {
+            for axis in res.coordinates.iter().take(n_axes) {
                 write!(w, "\t{:.8}", axis[s])?;
             }
             writeln!(w)?;
@@ -561,11 +589,20 @@ pub fn pcoa_cmd(args: &mut Args) -> Result<()> {
 /// formats; binary matrices are streamed in permutation blocks, so
 /// EMP-scale files never load into RAM.
 pub fn permanova_cmd(args: &mut Args) -> Result<()> {
+    // batching defaults from the [run] config key, CLI flag overrides
+    let cfg = match args.opt("config") {
+        Some(p) => RunConfig::from_file(p)?,
+        None => RunConfig::default(),
+    };
     let matrix = args.require("matrix")?;
     let groups_path = args.require("groups")?;
     let permutations = args.get_or("permutations", 999usize)?;
     let seed = args.get_or("seed", 1u64)?;
+    let perm_batch = args.get_or("perm-batch", cfg.perm_batch)?;
     args.finish()?;
+    if perm_batch == 0 {
+        return Err(Error::Cli("--perm-batch must be >= 1".into()));
+    }
     let dm = load_view(&matrix)?;
     // parse the grouping file into dense group indices matching dm order
     let mut by_id = std::collections::HashMap::new();
@@ -587,10 +624,81 @@ pub fn permanova_cmd(args: &mut Args) -> Result<()> {
         let next = label_ids.len();
         groups.push(*label_ids.entry(label.clone()).or_insert(next));
     }
-    let res = permanova(&*dm, &groups, permutations, seed);
+    let res = permanova_with(
+        &*dm,
+        &groups,
+        &PermanovaOpts { permutations, batch: perm_batch, seed },
+    );
     println!("PERMANOVA of {matrix} ({} samples, {} groups):", dm.n_samples(), res.n_groups);
     println!("  pseudo-F = {:.4}", res.pseudo_f);
     println!("  p-value  = {:.4} ({} permutations)", res.p_value, res.permutations);
+    Ok(())
+}
+
+/// Resolve one `--pair` token to a sample index: a matching sample id
+/// wins; otherwise the token must parse as a 0-based index.
+fn sample_index(token: &str, table: &FeatureTable) -> Result<usize> {
+    let t = token.trim();
+    if let Some(pos) = table.sample_ids().iter().position(|id| id.as_str() == t) {
+        return Ok(pos);
+    }
+    t.parse::<usize>()
+        .map_err(|_| Error::Cli(format!("--pair: {t:?} is neither a sample id nor an index")))
+}
+
+/// `unifrac emd-flows --table t.tsv --tree t.nwk --pair A,B [--format json]`
+///
+/// EMDUniFrac differential abundance for one sample pair: the signed
+/// mass each branch transports in the optimal earth-mover plan between
+/// the two relative-abundance distributions. The reported distance is
+/// exactly the pair's weighted_unnormalized UniFrac distance; positive
+/// flow means excess abundance below that branch in the first sample,
+/// negative in the second (docs/stats.md).
+pub fn emd_flows(args: &mut Args) -> Result<()> {
+    let pair = args.opt("pair").unwrap_or_else(|| "0,1".into());
+    let top = args.get_or("top", 0usize)?;
+    let format = args.opt("format").unwrap_or_else(|| "tsv".into());
+    let output = args.opt("output");
+    let seed = args.get_or("seed", 42u64)?;
+    let (tree, table) = load_problem(args, seed)?;
+    args.finish()?;
+    let (a, b) = pair
+        .split_once(',')
+        .ok_or_else(|| Error::Cli("--pair needs I,J (sample ids or 0-based indices)".into()))?;
+    let i = sample_index(a, &table)?;
+    let j = sample_index(b, &table)?;
+    let mut da = crate::unifrac::emd_flows(&tree, &table, i, j)?;
+    if top > 0 {
+        // keep only the `top` largest flows by transported cost
+        let keep: Vec<FlowRow> = da.ranked().into_iter().take(top).cloned().collect();
+        da.rows = keep;
+    }
+    let rendered = match format.as_str() {
+        "json" => {
+            let mut s = da.to_json().dump();
+            s.push('\n');
+            s
+        }
+        "tsv" => {
+            let mut buf = Vec::new();
+            da.write_tsv(&mut buf)?;
+            String::from_utf8(buf).expect("flow TSV is utf-8")
+        }
+        other => return Err(Error::Cli(format!("unknown --format {other:?} (tsv | json)"))),
+    };
+    match output {
+        Some(path) => {
+            std::fs::write(&path, rendered)?;
+            println!(
+                "wrote {path}: {} branch flows for pair ({}, {}), distance {:.6}",
+                da.rows.len(),
+                da.sample_i,
+                da.sample_j,
+                da.distance
+            );
+        }
+        None => print!("{rendered}"),
+    }
     Ok(())
 }
 

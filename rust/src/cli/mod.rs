@@ -67,6 +67,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "inspect" => commands::inspect(&mut args),
         "pcoa" => commands::pcoa_cmd(&mut args),
         "permanova" => commands::permanova_cmd(&mut args),
+        "emd-flows" => commands::emd_flows(&mut args),
         "devices" => commands::devices(&mut args),
         "info" => commands::info(&mut args),
         "selftest" => commands::selftest(&mut args),
@@ -110,8 +111,12 @@ SUBCOMMANDS
   partition      Table-2 style multi-chip run with per-chip timing
   validate-fp32  fp32-vs-fp64 Mantel comparison (paper §4)
   tables         regenerate the paper's tables (1-4) at a chosen scale
-  pcoa           principal coordinates of a distance matrix TSV
-  permanova      PERMANOVA over a distance matrix TSV + grouping file
+  pcoa           principal coordinates of a distance matrix (randomized
+                 range-finder solver; streams TSV and binary matrices)
+  permanova      PERMANOVA over a distance matrix + grouping file
+                 (permutations batched into one GEMM-shaped label panel)
+  emd-flows      per-branch differential-abundance flows for one sample
+                 pair under the EMD metric (docs/stats.md)
   devices        list the GPU/CPU device performance models
   info           show the AOT artifact manifest
   selftest       quick end-to-end consistency check
@@ -120,7 +125,9 @@ SUBCOMMANDS
 
 COMMON FLAGS
   --config FILE       load [run] settings from a TOML file
-  --metric NAME       unweighted | weighted_normalized | weighted_unnormalized | generalized
+  --metric NAME       unweighted | weighted_normalized | weighted_unnormalized |
+                      generalized | emd (emd distances == weighted_unnormalized;
+                      it additionally exposes per-branch flows via emd-flows)
   --alpha X           generalized UniFrac exponent (default 1.0)
   --backend B         cpu | pjrt
   --engine E          cpu: auto|{engines} (auto
@@ -204,6 +211,27 @@ SERVICE FLAGS (snapshot / serve / query / inspect)
   --io-timeout-ms N   serve: slow-client socket read/write timeout (5000)
   --server ADDR       query: run as a client of `host:port` or
                       `unix:/path` instead of computing offline
+
+STATS FLAGS (pcoa / permanova / emd-flows — see docs/stats.md)
+  --matrix FILE       distance matrix: square TSV or binary UFDM (bin/mmap);
+                      the format is sniffed from the first bytes, and binary
+                      matrices are mapped + streamed, never loaded
+  --axes N            pcoa: axes to report (default 3)
+  --components N      pcoa: rank of the randomized eigensolver sketch
+                      (default: --axes; exact when components+oversample
+                      reaches the Gower-matrix rank)
+  --oversample N      pcoa: extra sketch columns beyond --components (8)
+  --power-iters N     pcoa: subspace (power) iterations sharpening the
+                      sketch; each costs one pair-stream pass (2)
+  --groups FILE       permanova: sample_id<TAB>group_label lines
+  --permutations N    permanova: label permutations (default 999)
+  --perm-batch N      permanova: permutations evaluated per pair-stream
+                      pass as one label panel (default 32; results are
+                      bitwise identical for every batch width)
+  --pair I,J          emd-flows: sample pair, by 0-based index or by
+                      sample id (default 0,1)
+  --top N             emd-flows: print only the N largest flows (0 = all)
+  --format F          emd-flows: tsv | json (default tsv)
 
 CONVERT FLAGS
   --matrix FILE       binary condensed matrix to read (bin/mmap output)

@@ -68,6 +68,17 @@ pub struct RunConfig {
     /// `unifrac serve`: SIGTERM drain window in ms before in-flight
     /// queries are cooperatively aborted.
     pub drain_ms: u64,
+    /// `unifrac pcoa`: coordinate axes requested.
+    pub components: usize,
+    /// `unifrac pcoa`: extra sketch columns for the randomized
+    /// eigensolver (sketch width = components + oversample).
+    pub oversample: usize,
+    /// `unifrac pcoa`: subspace-iteration rounds (one extra streaming
+    /// pass over the matrix each).
+    pub power_iters: usize,
+    /// `unifrac permanova`: permutations folded per streaming pass
+    /// (pure performance knob; results are batch-invariant).
+    pub perm_batch: usize,
 }
 
 impl Default for RunConfig {
@@ -99,6 +110,10 @@ impl Default for RunConfig {
             cache_mb: 256,
             deadline_ms: 0,
             drain_ms: 2000,
+            components: 10,
+            oversample: 8,
+            power_iters: 2,
+            perm_batch: 32,
         }
     }
 }
@@ -192,6 +207,18 @@ impl RunConfig {
         }
         if let Some(v) = get("drain_ms") {
             self.drain_ms = v.as_usize().ok_or_else(|| bad("drain_ms"))? as u64;
+        }
+        if let Some(v) = get("components") {
+            self.components = v.as_usize().ok_or_else(|| bad("components"))?;
+        }
+        if let Some(v) = get("oversample") {
+            self.oversample = v.as_usize().ok_or_else(|| bad("oversample"))?;
+        }
+        if let Some(v) = get("power_iters") {
+            self.power_iters = v.as_usize().ok_or_else(|| bad("power_iters"))?;
+        }
+        if let Some(v) = get("perm_batch") {
+            self.perm_batch = v.as_usize().ok_or_else(|| bad("perm_batch"))?;
         }
         Ok(())
     }
@@ -547,6 +574,26 @@ pool_depth = 16
         assert_eq!(d.cache_mb, 256);
         assert_eq!(d.deadline_ms, 0);
         assert_eq!(d.drain_ms, 2000);
+    }
+
+    #[test]
+    fn stats_keys_parse_from_doc() {
+        let doc = TomlDoc::parse(
+            "[run]\ncomponents = 4\noversample = 16\npower_iters = 3\nperm_batch = 128\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.components, 4);
+        assert_eq!(cfg.oversample, 16);
+        assert_eq!(cfg.power_iters, 3);
+        assert_eq!(cfg.perm_batch, 128);
+        // defaults mirror stats::{PcoaOpts, PermanovaOpts}
+        let d = RunConfig::default();
+        assert_eq!(d.components, 10);
+        assert_eq!(d.oversample, 8);
+        assert_eq!(d.power_iters, 2);
+        assert_eq!(d.perm_batch, 32);
     }
 
     #[test]

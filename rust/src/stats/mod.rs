@@ -4,13 +4,18 @@
 //! Every test consumes a `matrix::CondensedView`, so the same code runs
 //! over an in-RAM `CondensedMatrix` and over a disk-backed
 //! `matrix::CondensedFile` written by the out-of-core sinks — PERMANOVA
-//! additionally batches its permutations so a file-backed matrix is
-//! streamed once per block of shuffles, never random-accessed.
+//! batches its permutations into a GEMM-shaped label panel so a
+//! file-backed matrix is streamed once per block of shuffles, and PCoA
+//! runs a randomized range-finder eigensolver (`scale`) whose only
+//! matrix access is a row-panel × tall-skinny product over the pair
+//! stream: O(n·ℓ) resident memory, never the dense Gower matrix.
 
 mod mantel;
 mod pcoa;
 mod permanova;
+mod scale;
 
 pub use mantel::{mantel, MantelResult};
-pub use pcoa::{pcoa, PcoaResult};
-pub use permanova::{permanova, PermanovaResult};
+pub use pcoa::{pcoa, pcoa_exact_dense, PcoaResult};
+pub use permanova::{permanova, permanova_with, PermanovaOpts, PermanovaResult};
+pub use scale::{pcoa_scale, procrustes_rms, PcoaOpts, ScaleStats};

@@ -1,12 +1,23 @@
-//! Principal Coordinates Analysis (classical MDS) via power iteration.
+//! Principal Coordinates Analysis (classical MDS).
 //!
 //! The paper motivates fp32 adequacy "especially ... after dimensionality
 //! reduction" — PCoA is *the* dimensionality reduction applied to UniFrac
 //! matrices in practice (EMP analyses), so the fp32-validation example
 //! also compares leading PCoA coordinates between precisions.
+//!
+//! Two solvers share the [`PcoaResult`] contract:
+//!
+//! - [`pcoa`] — the default path, delegating to the randomized
+//!   range-finder eigensolver in [`super::scale`]: O(n·ℓ) resident
+//!   memory, a handful of sequential pair-stream passes, exact when the
+//!   sketch covers the spectrum (ℓ ≥ rank). Safe on disk-backed
+//!   matrices at large n.
+//! - [`pcoa_exact_dense`] — the O(n²)-RAM reference: materializes the
+//!   centered Gower matrix and runs a full Jacobi eigensolve. Exact to
+//!   machine precision; the accuracy-contract baseline and the dense
+//!   leg of `benches/stats_sweep.rs`. Small n only.
 
 use crate::matrix::CondensedView;
-use crate::util::Xoshiro256;
 
 /// Result of a [`pcoa`] ordination.
 #[derive(Clone, Debug)]
@@ -19,16 +30,36 @@ pub struct PcoaResult {
     pub proportion_explained: Vec<f64>,
 }
 
-/// Classical PCoA: double-center `-0.5 * D²`, extract the top `k`
-/// eigenpairs by power iteration with deflation.
+/// Classical PCoA: top `k` eigenpairs of the Gower-centered
+/// `-0.5·J·D²·J`, computed by the randomized range-finder subspace
+/// solver — the matrix is only ever touched through sequential
+/// pair-stream panel products, so any [`CondensedView`] (in-RAM or
+/// disk-backed UFDM) streams without materializing `n × n` anything.
 ///
-/// Accepts any [`CondensedView`] (the matrix is read once, in one
-/// sequential pass), but note the Gower matrix itself is dense `n × n`
-/// f64 in RAM — at EMP scale run PCoA on a subsample, not the full
-/// matrix.
+/// Uses the default sketch knobs ([`super::scale::PcoaOpts`]:
+/// oversample 8, two power iterations); call
+/// [`super::scale::pcoa_scale`] directly to tune them or to read the
+/// [`super::scale::ScaleStats`] resource evidence.
 pub fn pcoa<V: CondensedView + ?Sized>(dm: &V, k: usize, seed: u64) -> PcoaResult {
+    let opts = super::scale::PcoaOpts { components: k, seed, ..Default::default() };
+    super::scale::pcoa_scale(dm, &opts).0
+}
+
+/// Exact dense PCoA reference: double-center `-0.5·D²` into a dense
+/// Gower matrix and Jacobi-eigensolve it completely. O(n²) memory,
+/// O(n³) time — the small-n accuracy baseline the randomized path is
+/// contracted against (Procrustes RMS < 1e-6 at full rank), not a
+/// large-N tool.
+pub fn pcoa_exact_dense<V: CondensedView + ?Sized>(dm: &V, k: usize) -> PcoaResult {
     let n = dm.n_samples();
     let k = k.min(n.saturating_sub(1));
+    if n == 0 || k == 0 {
+        return PcoaResult {
+            eigenvalues: Vec::new(),
+            coordinates: Vec::new(),
+            proportion_explained: Vec::new(),
+        };
+    }
     // Gower-centered matrix B = -0.5 * J D² J with J = I - 11ᵀ/n,
     // filled from one streaming pass over the pair stream
     let mut b = vec![0.0f64; n * n];
@@ -38,25 +69,21 @@ pub fn pcoa<V: CondensedView + ?Sized>(dm: &V, k: usize, seed: u64) -> PcoaResul
         b[j * n + i] = v;
     });
     center(&mut b, n);
+    let trace: f64 = (0..n).map(|i| b[i * n + i]).sum();
 
-    let mut rng = Xoshiro256::new(seed);
+    let (vals, vecs) = super::scale::jacobi_eigen(&mut b, n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap_or(std::cmp::Ordering::Equal));
     let mut eigenvalues = Vec::with_capacity(k);
     let mut coordinates = Vec::with_capacity(k);
-    let mut vectors: Vec<Vec<f64>> = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (lambda, v) = power_iteration(&b, n, &vectors, &mut rng);
-        if lambda <= 1e-12 {
-            break; // remaining spectrum is non-positive; stop
+    for &c in &order {
+        if eigenvalues.len() >= k || vals[c] <= 1e-12 {
+            break;
         }
-        let coord: Vec<f64> = v.iter().map(|x| x * lambda.sqrt()).collect();
-        eigenvalues.push(lambda);
-        coordinates.push(coord);
-        vectors.push(v);
+        let root = vals[c].sqrt();
+        coordinates.push((0..n).map(|i| vecs[i * n + c] * root).collect());
+        eigenvalues.push(vals[c]);
     }
-
-    // total positive inertia ~ trace of B (sum of positive eigenvalues is
-    // bounded by it; use trace as the conventional denominator)
-    let trace: f64 = (0..n).map(|i| b[i * n + i]).sum();
     let denom = if trace > 0.0 { trace } else { eigenvalues.iter().sum::<f64>().max(1e-300) };
     let proportion_explained = eigenvalues.iter().map(|l| l / denom).collect();
     PcoaResult { eigenvalues, coordinates, proportion_explained }
@@ -81,70 +108,11 @@ fn center(b: &mut [f64], n: usize) {
     }
 }
 
-/// Power iteration for the dominant eigenpair of symmetric `b`,
-/// orthogonalized against previously found `vectors` (deflation).
-fn power_iteration(
-    b: &[f64],
-    n: usize,
-    vectors: &[Vec<f64>],
-    rng: &mut Xoshiro256,
-) -> (f64, Vec<f64>) {
-    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    orthonormalize(&mut v, vectors);
-    let mut lambda = 0.0;
-    for _ in 0..500 {
-        // w = B v
-        let mut w = vec![0.0; n];
-        for i in 0..n {
-            let row = &b[i * n..(i + 1) * n];
-            w[i] = row.iter().zip(&v).map(|(a, x)| a * x).sum();
-        }
-        orthonormalize(&mut w, vectors);
-        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
-        if norm < 1e-300 {
-            return (0.0, v);
-        }
-        for x in w.iter_mut() {
-            *x /= norm;
-        }
-        let new_lambda: f64 = {
-            // Rayleigh quotient vᵀBv
-            let mut s = 0.0;
-            for i in 0..n {
-                let row = &b[i * n..(i + 1) * n];
-                let bv: f64 = row.iter().zip(&w).map(|(a, x)| a * x).sum();
-                s += w[i] * bv;
-            }
-            s
-        };
-        let done = (new_lambda - lambda).abs() <= 1e-12 * (1.0 + new_lambda.abs());
-        v = w;
-        lambda = new_lambda;
-        if done {
-            break;
-        }
-    }
-    (lambda, v)
-}
-
-fn orthonormalize(v: &mut [f64], basis: &[Vec<f64>]) {
-    for u in basis {
-        let dot: f64 = v.iter().zip(u).map(|(a, b)| a * b).sum();
-        for (x, y) in v.iter_mut().zip(u) {
-            *x -= dot * y;
-        }
-    }
-    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
-    if norm > 1e-300 {
-        for x in v.iter_mut() {
-            *x /= norm;
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::CondensedMatrix;
+    use crate::util::Xoshiro256;
 
     /// Distances of points on a line embed back onto a line.
     #[test]
@@ -212,5 +180,28 @@ mod tests {
             let mean: f64 = axis.iter().sum::<f64>() / axis.len() as f64;
             assert!(mean.abs() < 1e-8, "axis not centered: {mean}");
         }
+    }
+
+    /// The two solvers agree on small problems (default pcoa vs the
+    /// dense Jacobi reference, Procrustes-aligned).
+    #[test]
+    fn default_path_matches_dense_reference() {
+        let mut rng = Xoshiro256::new(8);
+        let n = 16;
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                dm.set(i, j, 0.3 + rng.f64());
+            }
+        }
+        // oversample 8 + k 8 >= n: full-rank sketch, exact
+        let fast = pcoa(&dm, 8, 42);
+        let exact = pcoa_exact_dense(&dm, 8);
+        assert_eq!(fast.eigenvalues.len(), exact.eigenvalues.len());
+        for (a, b) in fast.eigenvalues.iter().zip(&exact.eigenvalues) {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        let rms = super::super::scale::procrustes_rms(&exact.coordinates, &fast.coordinates);
+        assert!(rms < 1e-6, "procrustes rms {rms}");
     }
 }

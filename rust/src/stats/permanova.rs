@@ -11,8 +11,29 @@
 use crate::matrix::CondensedView;
 use crate::util::Xoshiro256;
 
-/// Permutations evaluated per streaming pass over the matrix.
+/// Default permutations evaluated per streaming pass over the matrix.
 const PERM_BATCH: usize = 32;
+
+/// Tuning knobs for [`permanova_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct PermanovaOpts {
+    /// Label permutations to evaluate (p-value resolution).
+    pub permutations: usize,
+    /// Permutations folded per streaming pass — the label-panel width
+    /// of the batched kernel. Larger batches amortize disk scans of an
+    /// out-of-core matrix; results are bitwise independent of this
+    /// knob (the RNG shuffles cumulatively in permutation order either
+    /// way).
+    pub batch: usize,
+    /// Shuffle RNG seed.
+    pub seed: u64,
+}
+
+impl Default for PermanovaOpts {
+    fn default() -> Self {
+        Self { permutations: 999, batch: PERM_BATCH, seed: 0 }
+    }
+}
 
 /// Result of a [`permanova`] test.
 #[derive(Clone, Debug)]
@@ -37,8 +58,24 @@ pub fn permanova<V: CondensedView + ?Sized>(
     permutations: usize,
     seed: u64,
 ) -> PermanovaResult {
+    permanova_with(dm, groups, &PermanovaOpts { permutations, batch: PERM_BATCH, seed })
+}
+
+/// [`permanova`] with explicit tuning — same statistic, same RNG
+/// stream, plus control over the permutation-panel width. The p-value
+/// and pseudo-F are bitwise identical for every `batch >= 1`: batching
+/// only changes how many label shuffles share one pass over the pair
+/// stream, never the order in which each (permutation, group) bucket
+/// accumulates its d² terms.
+pub fn permanova_with<V: CondensedView + ?Sized>(
+    dm: &V,
+    groups: &[usize],
+    opts: &PermanovaOpts,
+) -> PermanovaResult {
     let n = dm.n_samples();
+    let permutations = opts.permutations;
     assert_eq!(groups.len(), n, "group label count mismatch");
+    assert!(opts.batch >= 1, "permutation batch must be >= 1");
     let n_groups = groups.iter().max().map(|&g| g + 1).unwrap_or(0);
     assert!(n_groups >= 2, "need >= 2 groups");
     // group sizes are permutation-invariant (labels move, counts don't)
@@ -47,18 +84,18 @@ pub fn permanova<V: CondensedView + ?Sized>(
         sizes[g] += 1;
     }
 
-    let mut rng = Xoshiro256::new(seed);
+    let mut rng = Xoshiro256::new(opts.seed);
     let mut labels = groups.to_vec();
     let mut hits = 0usize;
     let mut done = 0usize;
     // the observed labeling rides along as entry 0 of the FIRST block,
-    // so a disk-backed matrix is scanned ceil((1+permutations)/32)
+    // so a disk-backed matrix is scanned ceil((1+permutations)/batch)
     // times — no dedicated f_obs pass. The RNG still shuffles
     // cumulatively in permutation order, so the batched evaluation
     // visits exactly the label sequences a one-at-a-time loop would.
     let mut f_obs: Option<f64> = None;
     while done < permutations || f_obs.is_none() {
-        let room = PERM_BATCH - usize::from(f_obs.is_none());
+        let room = opts.batch - usize::from(f_obs.is_none());
         let b = room.min(permutations - done);
         let mut block: Vec<Vec<usize>> = Vec::with_capacity(b + 1);
         if f_obs.is_none() {
@@ -68,7 +105,7 @@ pub fn permanova<V: CondensedView + ?Sized>(
             rng.shuffle(&mut labels);
             block.push(labels.clone());
         }
-        let fs = pseudo_f_block(dm, &block, n_groups, &sizes);
+        let fs = pseudo_f_panel(dm, &block, n_groups, &sizes);
         let start = if f_obs.is_none() {
             f_obs = Some(fs[0]);
             1
@@ -91,10 +128,78 @@ pub fn permanova<V: CondensedView + ?Sized>(
     }
 }
 
-/// pseudo-F = (SS_among / (a-1)) / (SS_within / (N-a)), computed from
-/// pairwise distances only (Anderson's distance-based decomposition) —
-/// for a whole block of labelings in one sequential pass over the pair
-/// stream (the out-of-core tile-friendly access pattern).
+/// pseudo-F = (SS_among / (a-1)) / (SS_within / (N-a)) for a whole
+/// block of labelings in one sequential pass — the GEMM-shaped panel
+/// kernel. Labels are packed into a sample-major `u16` panel
+/// (`panel[i*P + p]`) and the per-(permutation, group) accumulator is
+/// one flat `P × G` array, so the pair-stream inner loop is two
+/// unit-stride row scans and a fused accumulate: the exact shape a
+/// device GEMM (or SIMD lane broadcast) wants, with no per-permutation
+/// pointer chasing.
+///
+/// Accumulation order per (p, g) bucket — condensed pair order, `p`
+/// ascending within a pair — matches [`pseudo_f_block`] term for term,
+/// so the two kernels are bitwise identical (pinned by the
+/// `panel_matches_block_bitwise` test).
+fn pseudo_f_panel<V: CondensedView + ?Sized>(
+    dm: &V,
+    labelings: &[Vec<usize>],
+    n_groups: usize,
+    sizes: &[usize],
+) -> Vec<f64> {
+    let n = dm.n_samples();
+    let p_count = labelings.len();
+    assert!(n_groups <= usize::from(u16::MAX), "too many groups for u16 panel");
+    if p_count == 0 {
+        return Vec::new();
+    }
+    // sample-major label panel: row i holds sample i's label under
+    // every permutation, contiguously
+    let mut panel = vec![0u16; n * p_count];
+    for (p, lab) in labelings.iter().enumerate() {
+        debug_assert_eq!(lab.len(), n);
+        for (i, &g) in lab.iter().enumerate() {
+            panel[i * p_count + p] = g as u16;
+        }
+    }
+    let mut ss_total = 0.0f64;
+    let mut ssw = vec![0.0f64; p_count * n_groups];
+    dm.for_each_pair(&mut |i, j, d| {
+        let d2 = d * d;
+        ss_total += d2;
+        let ri = &panel[i * p_count..(i + 1) * p_count];
+        let rj = &panel[j * p_count..(j + 1) * p_count];
+        for (p, (&gi, &gj)) in ri.iter().zip(rj).enumerate() {
+            if gi == gj {
+                ssw[p * n_groups + usize::from(gi)] += d2;
+            }
+        }
+    });
+    ss_total /= n as f64;
+    let df_among = (n_groups - 1) as f64;
+    let df_within = (n - n_groups) as f64;
+    ssw.chunks_exact(n_groups)
+        .map(|per_group| {
+            let ss_within: f64 = per_group
+                .iter()
+                .zip(sizes)
+                .filter(|(_, &s)| s > 0)
+                .map(|(ss, &s)| ss / s as f64)
+                .sum();
+            let ss_among = (ss_total - ss_within).max(0.0);
+            if ss_within <= 1e-300 || df_within <= 0.0 {
+                return f64::INFINITY;
+            }
+            (ss_among / df_among) / (ss_within / df_within)
+        })
+        .collect()
+}
+
+/// The pre-panel reference kernel: per-labeling `Vec<Vec<f64>>`
+/// accumulators over the same pair stream. Kept as the bitwise-identity
+/// oracle for [`pseudo_f_panel`] (and the sequential reference in the
+/// batching test).
+#[cfg_attr(not(test), allow(dead_code))]
 fn pseudo_f_block<V: CondensedView + ?Sized>(
     dm: &V,
     labelings: &[Vec<usize>],
@@ -216,5 +321,73 @@ mod tests {
     fn wrong_label_count_panics() {
         let dm = CondensedMatrix::zeros(4, vec![]);
         permanova(&dm, &[0, 1], 9, 0);
+    }
+
+    /// The GEMM-shaped panel kernel is bitwise identical to the
+    /// reference block kernel on every labeling.
+    #[test]
+    fn panel_matches_block_bitwise() {
+        let n = 18;
+        let mut rng = Xoshiro256::new(21);
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                dm.set(i, j, 0.1 + rng.f64());
+            }
+        }
+        let n_groups = 4;
+        let mut labelings: Vec<Vec<usize>> = Vec::new();
+        let mut labels: Vec<usize> = (0..n).map(|i| i % n_groups).collect();
+        let sizes = {
+            let mut s = vec![0usize; n_groups];
+            for &g in &labels {
+                s[g] += 1;
+            }
+            s
+        };
+        for _ in 0..23 {
+            labelings.push(labels.clone());
+            rng.shuffle(&mut labels);
+        }
+        let a = pseudo_f_panel(&dm, &labelings, n_groups, &sizes);
+        let b = pseudo_f_block(&dm, &labelings, n_groups, &sizes);
+        assert_eq!(a.len(), b.len());
+        for (p, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "labeling {p}: {x} vs {y}");
+        }
+    }
+
+    /// Batch width is a pure performance knob: F and p are bitwise
+    /// identical across panel widths (same RNG stream either way).
+    #[test]
+    fn batch_width_is_bitwise_invariant() {
+        let n = 15;
+        let mut rng = Xoshiro256::new(13);
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                dm.set(i, j, 0.2 + rng.f64());
+            }
+        }
+        let groups: Vec<usize> = (0..n).map(|i| i % 3).collect();
+        let base = permanova_with(
+            &dm,
+            &groups,
+            &PermanovaOpts { permutations: 77, batch: 32, seed: 5 },
+        );
+        // the default entry point is the batch-32 path
+        let default = permanova(&dm, &groups, 77, 5);
+        assert_eq!(base.pseudo_f.to_bits(), default.pseudo_f.to_bits());
+        assert_eq!(base.p_value.to_bits(), default.p_value.to_bits());
+        for batch in [1usize, 8, 33, 64, 1024] {
+            let got = permanova_with(
+                &dm,
+                &groups,
+                &PermanovaOpts { permutations: 77, batch, seed: 5 },
+            );
+            assert_eq!(got.pseudo_f.to_bits(), base.pseudo_f.to_bits(), "batch {batch}");
+            assert_eq!(got.p_value.to_bits(), base.p_value.to_bits(), "batch {batch}");
+            assert_eq!(got.permutations, 77);
+        }
     }
 }

@@ -1,0 +1,573 @@
+//! Streaming large-N ordination: a randomized range-finder eigensolver
+//! whose only access to the distance matrix is a blocked
+//! row-panel × tall-skinny product over the [`CondensedView`] pair
+//! stream.
+//!
+//! Classical PCoA double-centers `-0.5·D²` into a dense `n × n` Gower
+//! matrix — O(n²) RAM, which is exactly what the out-of-core UFDM path
+//! exists to avoid. This module never materializes the Gower matrix:
+//! the operator `B = -0.5·J·D²·J` (`J = I − 11ᵀ/n`) is applied to an
+//! `n × ℓ` panel in ONE sequential pass over the pair stream
+//!
+//! ```text
+//!   Xc = J·X              (center panel columns)
+//!   W[i,:] += d²ij·Xc[j,:]   ┐ per streamed pair (i, j, d) — the
+//!   W[j,:] += d²ij·Xc[i,:]   ┘ row-panel × tall-skinny GEMM kernel
+//!   B·X = -0.5·J·W
+//! ```
+//!
+//! so a disk-backed [`CondensedFile`](crate::matrix::CondensedFile) is
+//! scanned `power_iters + 2` times and resident memory stays
+//! O(n·ℓ + ℓ²) with `ℓ = components + oversample` — the subspace
+//! sketch, never the matrix. Subspace (power) iteration sharpens the
+//! sketch; a Jacobi eigensolve of the ℓ×ℓ Rayleigh-Ritz projection
+//! `T = QᵀBQ` recovers the eigenpairs. When `ℓ ≥ rank(B)` the
+//! projection is exact, which is what the accuracy contract tests pin
+//! (Procrustes RMS < 1e-6 against the dense path at full rank).
+
+use super::pcoa::PcoaResult;
+use crate::matrix::CondensedView;
+use crate::util::Xoshiro256;
+
+/// Tuning knobs for the randomized PCoA eigensolver ([`pcoa_scale`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PcoaOpts {
+    /// Coordinate axes (eigenpairs) requested. Clamped to `n - 1`.
+    pub components: usize,
+    /// Extra random probe columns beyond `components`; the sketch width
+    /// is `ℓ = min(n, components + oversample)`. More oversampling
+    /// buys accuracy on slowly decaying spectra at O(n) memory each.
+    pub oversample: usize,
+    /// Subspace-iteration rounds applied to the sketch. Each round
+    /// costs one extra streaming pass and sharpens the captured
+    /// subspace by a factor of the spectral-gap ratio.
+    pub power_iters: usize,
+    /// Seed for the Gaussian probe block (deterministic output).
+    pub seed: u64,
+}
+
+impl Default for PcoaOpts {
+    fn default() -> Self {
+        Self { components: 10, oversample: 8, power_iters: 2, seed: 0 }
+    }
+}
+
+/// Resource accounting for one [`pcoa_scale`] run — the evidence for
+/// the O(n·ℓ) memory contract.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScaleStats {
+    /// Peak bytes simultaneously live in the solver's own buffers
+    /// (panels, sketch, projection, coordinates). Excludes the input
+    /// view, which may be an mmap.
+    pub peak_resident_bytes: usize,
+    /// Sequential passes made over the pair stream
+    /// (`power_iters + 2`).
+    pub matrix_passes: usize,
+    /// Sketch width ℓ actually used.
+    pub sketch_columns: usize,
+}
+
+/// Tracks live/peak bytes of the solver's explicit allocations.
+#[derive(Default)]
+struct MemMeter {
+    live: usize,
+    peak: usize,
+}
+
+impl MemMeter {
+    fn alloc(&mut self, bytes: usize) {
+        self.live += bytes;
+        self.peak = self.peak.max(self.live);
+    }
+
+    fn free(&mut self, bytes: usize) {
+        self.live = self.live.saturating_sub(bytes);
+    }
+}
+
+/// Subtract each column's mean: `x ← J·x` for a sample-major `n × l`
+/// panel (row `i` is `x[i*l..(i+1)*l]`).
+fn center_columns(x: &mut [f64], n: usize, l: usize) {
+    if n == 0 {
+        return;
+    }
+    let mut means = vec![0.0f64; l];
+    for row in x.chunks_exact(l) {
+        for (m, v) in means.iter_mut().zip(row) {
+            *m += v;
+        }
+    }
+    for m in means.iter_mut() {
+        *m /= n as f64;
+    }
+    for row in x.chunks_exact_mut(l) {
+        for (v, m) in row.iter_mut().zip(&means) {
+            *v -= m;
+        }
+    }
+}
+
+/// One streaming pass: `out ← B·x` for the Gower operator
+/// `B = -0.5·J·D²·J`, with `x` an `n × l` sample-major panel. When
+/// `sum_d2` is given it additionally accumulates `Σ_{i<j} d²` (the
+/// trace of `B` is `Σd²/n` — the proportion-explained denominator,
+/// collected for free on the first pass).
+fn gower_matvec<V: CondensedView + ?Sized>(
+    dm: &V,
+    x: &[f64],
+    out: &mut [f64],
+    l: usize,
+    mut sum_d2: Option<&mut f64>,
+    meter: &mut MemMeter,
+) {
+    let n = dm.n_samples();
+    debug_assert_eq!(x.len(), n * l);
+    debug_assert_eq!(out.len(), n * l);
+    // centered copy (callers keep their panel orthonormal)
+    let mut xc = x.to_vec();
+    meter.alloc(xc.len() * 8);
+    center_columns(&mut xc, n, l);
+    out.fill(0.0);
+    dm.for_each_pair(&mut |i, j, d| {
+        let d2 = d * d;
+        if let Some(s) = sum_d2.as_deref_mut() {
+            *s += d2;
+        }
+        let (ri, rj) = (i * l, j * l);
+        for c in 0..l {
+            out[ri + c] += d2 * xc[rj + c];
+            out[rj + c] += d2 * xc[ri + c];
+        }
+    });
+    center_columns(out, n, l);
+    for v in out.iter_mut() {
+        *v *= -0.5;
+    }
+    meter.free(xc.len() * 8);
+}
+
+/// Modified Gram-Schmidt with one reorthogonalization pass over a
+/// sample-major `n × l` panel. Numerically dead columns (residual below
+/// `1e-12` of their incoming norm) are zeroed — they contribute empty
+/// rows/columns to the Rayleigh-Ritz projection, which the eigenvalue
+/// cutoff discards.
+fn mgs_orthonormalize(x: &mut [f64], n: usize, l: usize) {
+    let col_dot = |x: &[f64], a: usize, b: usize| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            s += x[i * l + a] * x[i * l + b];
+        }
+        s
+    };
+    for c in 0..l {
+        let incoming = col_dot(x, c, c).sqrt();
+        // two projection rounds: "twice is enough" reorthogonalization
+        for _round in 0..2 {
+            for p in 0..c {
+                let dot = col_dot(x, p, c);
+                for i in 0..n {
+                    x[i * l + c] -= dot * x[i * l + p];
+                }
+            }
+        }
+        let norm = col_dot(x, c, c).sqrt();
+        if norm <= 1e-12 * (incoming + 1e-300) || norm <= 1e-300 {
+            for i in 0..n {
+                x[i * l + c] = 0.0;
+            }
+        } else {
+            for i in 0..n {
+                x[i * l + c] /= norm;
+            }
+        }
+    }
+}
+
+/// Cyclic Jacobi eigensolver for a symmetric `l × l` matrix (row-major,
+/// destroyed). Returns `(eigenvalues, eigenvectors)` with eigenvector
+/// `c` stored down column `c` of the returned row-major matrix. Small,
+/// dense, O(l³) — `l` is the sketch width, not `n`.
+pub(super) fn jacobi_eigen(a: &mut [f64], l: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut v = vec![0.0f64; l * l];
+    for i in 0..l {
+        v[i * l + i] = 1.0;
+    }
+    let scale: f64 = a.iter().map(|x| x.abs()).fold(0.0, f64::max).max(1e-300);
+    for _sweep in 0..100 {
+        let mut off = 0.0f64;
+        for p in 0..l {
+            for q in (p + 1)..l {
+                off += a[p * l + q] * a[p * l + q];
+            }
+        }
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..l {
+            for q in (p + 1)..l {
+                let apq = a[p * l + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let theta = (a[q * l + q] - a[p * l + p]) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (theta * theta + 1.0).sqrt())
+                } else {
+                    -1.0 / (-theta + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // A ← GᵀAG on rows/columns p, q
+                for k in 0..l {
+                    let (akp, akq) = (a[k * l + p], a[k * l + q]);
+                    a[k * l + p] = c * akp - s * akq;
+                    a[k * l + q] = s * akp + c * akq;
+                }
+                for k in 0..l {
+                    let (apk, aqk) = (a[p * l + k], a[q * l + k]);
+                    a[p * l + k] = c * apk - s * aqk;
+                    a[q * l + k] = s * apk + c * aqk;
+                }
+                for k in 0..l {
+                    let (vkp, vkq) = (v[k * l + p], v[k * l + q]);
+                    v[k * l + p] = c * vkp - s * vkq;
+                    v[k * l + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let vals: Vec<f64> = (0..l).map(|i| a[i * l + i]).collect();
+    (vals, v)
+}
+
+/// Randomized PCoA over any [`CondensedView`] — same contract as
+/// [`pcoa`](super::pcoa::pcoa) (which delegates here) plus the
+/// [`ScaleStats`] resource evidence.
+///
+/// Memory: O(n·ℓ + ℓ²). Matrix access: `power_iters + 2` sequential
+/// pair-stream passes (disk-backed views are streamed, never
+/// random-accessed). Exact when `ℓ = components + oversample ≥
+/// rank(B)`; a truncated sketch otherwise, with accuracy governed by
+/// the spectral decay and `power_iters`.
+pub fn pcoa_scale<V: CondensedView + ?Sized>(dm: &V, opts: &PcoaOpts) -> (PcoaResult, ScaleStats) {
+    let n = dm.n_samples();
+    let k = opts.components.min(n.saturating_sub(1));
+    let empty = PcoaResult {
+        eigenvalues: Vec::new(),
+        coordinates: Vec::new(),
+        proportion_explained: Vec::new(),
+    };
+    if n == 0 || k == 0 {
+        return (empty, ScaleStats::default());
+    }
+    let l = (k + opts.oversample).min(n);
+    let mut meter = MemMeter::default();
+    let mut passes = 0usize;
+
+    // Gaussian probe block Ω (n × ℓ)
+    let mut rng = Xoshiro256::new(opts.seed);
+    let mut x: Vec<f64> = (0..n * l).map(|_| rng.normal()).collect();
+    meter.alloc(x.len() * 8);
+    let mut y = vec![0.0f64; n * l];
+    meter.alloc(y.len() * 8);
+
+    // Y = B·Ω (collecting Σd² for the trace on this first pass)
+    let mut sum_d2 = 0.0f64;
+    gower_matvec(dm, &x, &mut y, l, Some(&mut sum_d2), &mut meter);
+    passes += 1;
+    // subspace iteration: Y ← B·orth(Y)
+    for _ in 0..opts.power_iters {
+        mgs_orthonormalize(&mut y, n, l);
+        std::mem::swap(&mut x, &mut y);
+        gower_matvec(dm, &x, &mut y, l, None, &mut meter);
+        passes += 1;
+    }
+    // Q = orth(Y); Z = B·Q; T = QᵀZ (Rayleigh-Ritz)
+    mgs_orthonormalize(&mut y, n, l);
+    std::mem::swap(&mut x, &mut y); // x = Q
+    gower_matvec(dm, &x, &mut y, l, None, &mut meter); // y = Z
+    passes += 1;
+    let mut t = vec![0.0f64; l * l];
+    meter.alloc(t.len() * 8);
+    for i in 0..n {
+        let (qi, zi) = (&x[i * l..(i + 1) * l], &y[i * l..(i + 1) * l]);
+        for (r, &q) in qi.iter().enumerate() {
+            for (c, &z) in zi.iter().enumerate() {
+                t[r * l + c] += q * z;
+            }
+        }
+    }
+    // kill roundoff asymmetry before Jacobi
+    for r in 0..l {
+        for c in (r + 1)..l {
+            let m = 0.5 * (t[r * l + c] + t[c * l + r]);
+            t[r * l + c] = m;
+            t[c * l + r] = m;
+        }
+    }
+    let (vals, w) = jacobi_eigen(&mut t, l);
+    meter.alloc(vals.len() * 8 + w.len() * 8);
+
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut eigenvalues = Vec::with_capacity(k);
+    let mut coordinates = Vec::with_capacity(k);
+    for &c in &order {
+        if eigenvalues.len() >= k || vals[c] <= 1e-12 {
+            break;
+        }
+        // sample-space eigenvector u = Q·w_c, coordinate = u·sqrt(λ)
+        let root = vals[c].sqrt();
+        let mut coord = vec![0.0f64; n];
+        for (i, u) in coord.iter_mut().enumerate() {
+            let qi = &x[i * l..(i + 1) * l];
+            let mut s = 0.0;
+            for (r, &q) in qi.iter().enumerate() {
+                s += q * w[r * l + c];
+            }
+            *u = s * root;
+        }
+        meter.alloc(coord.len() * 8);
+        eigenvalues.push(vals[c]);
+        coordinates.push(coord);
+    }
+
+    // trace(B) = Σ_{i<j} d² / n — algebraically identical to the dense
+    // path's trace of the centered Gower matrix
+    let trace = sum_d2 / n as f64;
+    let denom = if trace > 0.0 { trace } else { eigenvalues.iter().sum::<f64>().max(1e-300) };
+    let proportion_explained = eigenvalues.iter().map(|l| l / denom).collect();
+    let stats = ScaleStats {
+        peak_resident_bytes: meter.peak,
+        matrix_passes: passes,
+        sketch_columns: l,
+    };
+    (PcoaResult { eigenvalues, coordinates, proportion_explained }, stats)
+}
+
+/// Procrustes-aligned RMS between two coordinate sets
+/// (`coords[axis][sample]`, the [`PcoaResult`] layout): rotates /
+/// reflects `b` onto `a` with the orthogonal Procrustes solution over
+/// the shared leading axes, then reports `√(‖a − b·Q‖²_F / (n·k))`.
+/// This is the right comparison for ordinations, whose axes are only
+/// defined up to sign (and rotation within degenerate eigenspaces).
+pub fn procrustes_rms(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let k = a.len().min(b.len());
+    if k == 0 {
+        return 0.0;
+    }
+    let n = a[0].len();
+    assert!(
+        a.iter().take(k).all(|ax| ax.len() == n) && b.iter().take(k).all(|ax| ax.len() == n),
+        "coordinate sets must share sample count"
+    );
+    if n == 0 {
+        return 0.0;
+    }
+    // M = BᵀA (k×k, axis-major makes this a dot of axis vectors)
+    let mut m = vec![0.0f64; k * k];
+    for r in 0..k {
+        for c in 0..k {
+            m[r * k + c] = b[r].iter().zip(&a[c]).map(|(x, y)| x * y).sum();
+        }
+    }
+    // SVD of M via Jacobi on MᵀM = VΣ²Vᵀ, then U = MVΣ⁻¹, Q = UVᵀ
+    let mut mtm = vec![0.0f64; k * k];
+    for r in 0..k {
+        for c in 0..k {
+            mtm[r * k + c] = (0..k).map(|i| m[i * k + r] * m[i * k + c]).sum();
+        }
+    }
+    let (sig2, v) = jacobi_eigen(&mut mtm, k);
+    let mut u = vec![0.0f64; k * k];
+    for c in 0..k {
+        let sigma = sig2[c].max(0.0).sqrt();
+        if sigma > 1e-300 {
+            for r in 0..k {
+                u[r * k + c] =
+                    (0..k).map(|i| m[r * k + i] * v[i * k + c]).sum::<f64>() / sigma;
+            }
+        } else {
+            // null direction: any orthogonal completion works; reuse V
+            for r in 0..k {
+                u[r * k + c] = v[r * k + c];
+            }
+        }
+    }
+    // Q = UVᵀ
+    let mut q = vec![0.0f64; k * k];
+    for r in 0..k {
+        for c in 0..k {
+            q[r * k + c] = (0..k).map(|i| u[r * k + i] * v[c * k + i]).sum();
+        }
+    }
+    // ‖A − BQ‖²_F, iterating samples (axis-major input)
+    let mut err = 0.0f64;
+    for s in 0..n {
+        for c in 0..k {
+            let rotated: f64 = (0..k).map(|r| b[r][s] * q[r * k + c]).sum();
+            let diff = a[c][s] - rotated;
+            err += diff * diff;
+        }
+    }
+    (err / (n * k) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::pcoa::pcoa_exact_dense;
+    use crate::matrix::CondensedMatrix;
+
+    fn random_euclidean(n: usize, dims: usize, seed: u64) -> CondensedMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..dims).map(|_| rng.f64() * 3.0).collect()).collect();
+        let mut dm = CondensedMatrix::zeros(n, vec![]);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = pts[i]
+                    .iter()
+                    .zip(&pts[j])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                dm.set(i, j, d);
+            }
+        }
+        dm
+    }
+
+    #[test]
+    fn jacobi_recovers_known_spectrum() {
+        // diag(5, 2, -1) conjugated by a rotation stays {5, 2, -1}
+        let (c, s) = (0.8f64, 0.6f64);
+        // R rotates axes 0,1; A = R diag R'
+        let d = [5.0, 2.0, -1.0];
+        let mut a = vec![0.0f64; 9];
+        let r = [c, -s, 0.0, s, c, 0.0, 0.0, 0.0, 1.0];
+        for i in 0..3 {
+            for j in 0..3 {
+                a[i * 3 + j] = (0..3).map(|t| r[i * 3 + t] * d[t] * r[j * 3 + t]).sum();
+            }
+        }
+        let (mut vals, v) = jacobi_eigen(&mut a.clone(), 3);
+        vals.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        for (got, want) in vals.iter().zip(&[5.0, 2.0, -1.0]) {
+            assert!((got - want).abs() < 1e-12, "{vals:?}");
+        }
+        // eigenvectors orthonormal
+        for p in 0..3 {
+            for q in 0..3 {
+                let dot: f64 = (0..3).map(|i| v[i * 3 + p] * v[i * 3 + q]).sum();
+                let want = f64::from(p == q);
+                assert!((dot - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mgs_produces_orthonormal_columns() {
+        let n = 20;
+        let l = 6;
+        let mut rng = Xoshiro256::new(11);
+        let mut x: Vec<f64> = (0..n * l).map(|_| rng.normal()).collect();
+        mgs_orthonormalize(&mut x, n, l);
+        for p in 0..l {
+            for q in p..l {
+                let dot: f64 = (0..n).map(|i| x[i * l + p] * x[i * l + q]).sum();
+                let want = f64::from(p == q);
+                assert!((dot - want).abs() < 1e-10, "cols {p},{q}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_sketch_matches_dense_exactly() {
+        let dm = random_euclidean(24, 4, 3);
+        let exact = pcoa_exact_dense(&dm, 4);
+        let (rand, stats) = pcoa_scale(
+            &dm,
+            &PcoaOpts { components: 4, oversample: 24, power_iters: 1, seed: 9 },
+        );
+        assert_eq!(stats.sketch_columns, 24); // clamped to n: full rank
+        assert_eq!(stats.matrix_passes, 3);
+        assert_eq!(rand.eigenvalues.len(), exact.eigenvalues.len().min(4));
+        for (a, b) in rand.eigenvalues.iter().zip(&exact.eigenvalues) {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        let rms = procrustes_rms(&exact.coordinates, &rand.coordinates);
+        assert!(rms < 1e-6, "procrustes rms {rms}");
+    }
+
+    #[test]
+    fn truncated_sketch_still_close_on_decaying_spectrum() {
+        // 3 intrinsic dimensions, sketch of 3+4 on n=40: captures the
+        // whole positive spectrum even though l << n
+        let dm = random_euclidean(40, 3, 7);
+        let exact = pcoa_exact_dense(&dm, 3);
+        let (rand, stats) = pcoa_scale(
+            &dm,
+            &PcoaOpts { components: 3, oversample: 4, power_iters: 2, seed: 2 },
+        );
+        assert!(stats.sketch_columns < 40);
+        let rms = procrustes_rms(&exact.coordinates, &rand.coordinates);
+        // normalize by the coordinate scale
+        let scale = exact.coordinates[0].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(rms < 1e-6 * scale.max(1.0), "rms {rms} scale {scale}");
+    }
+
+    #[test]
+    fn memory_stays_in_sketch_regime() {
+        let n = 96;
+        let dm = random_euclidean(n, 5, 5);
+        let opts = PcoaOpts { components: 4, oversample: 4, power_iters: 2, seed: 0 };
+        let (_, stats) = pcoa_scale(&dm, &opts);
+        let l = stats.sketch_columns;
+        assert_eq!(l, 8);
+        // panels (x, y, centered scratch) + projection + eigvecs + coords
+        let bound = 8 * (3 * n * l + 3 * l * l + opts.components * n + l);
+        assert!(
+            stats.peak_resident_bytes <= bound,
+            "peak {} > bound {bound}",
+            stats.peak_resident_bytes
+        );
+        // and strictly below the dense Gower footprint
+        assert!(stats.peak_resident_bytes < 8 * n * n);
+    }
+
+    #[test]
+    fn procrustes_is_zero_on_rotated_copy() {
+        // rotate a 2-axis configuration by 30° and flip one sign: the
+        // aligned RMS must vanish
+        let n = 9;
+        let mut rng = Xoshiro256::new(4);
+        let a: Vec<Vec<f64>> =
+            (0..2).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let (c, s) = (0.5f64.sqrt(), 0.5f64.sqrt());
+        let b = vec![
+            (0..n).map(|i| c * a[0][i] - s * a[1][i]).collect::<Vec<f64>>(),
+            (0..n).map(|i| -(s * a[0][i] + c * a[1][i])).collect::<Vec<f64>>(),
+        ];
+        let rms = procrustes_rms(&a, &b);
+        assert!(rms < 1e-12, "rms {rms}");
+        // and it is NOT zero for an unrelated configuration
+        let unrelated: Vec<Vec<f64>> =
+            (0..2).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        assert!(procrustes_rms(&a, &unrelated) > 1e-3);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        // zero requested components: the early-return path, no passes
+        let dm = CondensedMatrix::zeros(2, vec![]);
+        let (res, stats) =
+            pcoa_scale(&dm, &PcoaOpts { components: 0, ..Default::default() });
+        assert!(res.eigenvalues.is_empty());
+        assert_eq!(stats.matrix_passes, 0);
+        // all-zero distances: no positive spectrum
+        let dm = CondensedMatrix::zeros(6, vec![]);
+        let (res, _) = pcoa_scale(&dm, &PcoaOpts { components: 3, ..Default::default() });
+        assert!(res.eigenvalues.is_empty(), "{:?}", res.eigenvalues);
+    }
+}

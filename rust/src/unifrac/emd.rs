@@ -1,0 +1,335 @@
+//! EMDUniFrac: earth-mover's-distance restatement of weighted UniFrac
+//! with the differential-abundance flow decomposition.
+//!
+//! The EMDUniFrac theorem (Evans & Matsen; McClelland & Koslicki) shows
+//! that the 1-Wasserstein distance between two samples' leaf mass
+//! distributions, under the tree metric, equals unnormalized weighted
+//! UniFrac — and that the *optimal transport plan* is recovered in one
+//! linear postorder pass: the net signed mass crossing each branch is
+//! simply the difference of the subtree masses of the two samples, and
+//! the distance is `Σ_branches length · |flow|`.
+//!
+//! [`Metric::Emd`](crate::unifrac::Metric::Emd) exposes the distance
+//! through every stripe engine (it binds the weighted-unnormalized
+//! kernel, so per-pair values bit-match by construction). This module
+//! adds what the matrix engines cannot: the per-branch **flow vector**
+//! for one sample pair — the differential-abundance artifact that says
+//! *which clades* moved mass, not just how far apart two samples are.
+//!
+//! Flows are keyed by the tree's deterministic postorder, the same
+//! order the embedding stream emits, so artifacts are reproducible
+//! across runs and comparable across pairs of the same tree.
+
+use crate::embed::{generate_embeddings, EmbeddingKind};
+use crate::table::FeatureTable;
+use crate::tree::Phylogeny;
+use crate::util::json::{obj, Json};
+
+/// One branch's share of the optimal transport plan between two samples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlowRow {
+    /// Index of this node in `tree.postorder()` — the stable,
+    /// reproducible key for cross-run comparison (the root, which
+    /// carries no branch, never appears).
+    pub node: usize,
+    /// Node name when the tree has one (leaf taxa always do).
+    pub name: Option<String>,
+    /// Length of the branch above the node.
+    pub length: f64,
+    /// Net signed mass crossing the branch: positive means sample *i*
+    /// carries more mass under this clade than sample *j* (mass flows
+    /// from *i*'s side of the branch toward *j*'s needs), negative the
+    /// reverse. Zero-flow branches are kept so row `r` always refers to
+    /// the same node for every pair of the same tree.
+    pub flow: f64,
+}
+
+/// The differential-abundance artifact for one sample pair: the full
+/// per-branch flow vector of the optimal transport plan plus the
+/// resulting EMD(UniFrac) distance.
+///
+/// Invariants (enforced by construction, asserted in the test suite):
+/// - `distance == Σ rows length·|flow|` and bit-matches the
+///   `Metric::WeightedUnnormalized` / `Metric::Emd` matrix entry;
+/// - flows of the root's children sum to zero (mass conservation —
+///   both samples carry total mass 1).
+#[derive(Clone, Debug)]
+pub struct DiffAbundance {
+    /// Sample id of the pair's first member (flow > 0 means "more mass
+    /// in this sample").
+    pub sample_i: String,
+    /// Sample id of the pair's second member.
+    pub sample_j: String,
+    /// The EMDUniFrac distance, `Σ length·|flow|` over all branches.
+    pub distance: f64,
+    /// Per-branch flows, in tree postorder (root excluded).
+    pub rows: Vec<FlowRow>,
+}
+
+impl DiffAbundance {
+    /// Sum of `length · |flow|` over all rows — recomputed from the
+    /// rows; equals [`DiffAbundance::distance`] up to float roundoff
+    /// and is used by the conservation property tests.
+    pub fn transport_cost(&self) -> f64 {
+        self.rows.iter().map(|r| r.length * r.flow.abs()).sum()
+    }
+
+    /// Sum of signed flows over a set of postorder node indices.
+    /// Called with the root's children it must be ~0 (conservation).
+    pub fn flow_sum(&self, nodes: &[usize]) -> f64 {
+        self.rows.iter().filter(|r| nodes.contains(&r.node)).map(|r| r.flow).sum()
+    }
+
+    /// Rows with nonzero flow, largest absolute transported cost first
+    /// (ties broken by postorder index for determinism). This is the
+    /// "which clades differ" view for reports.
+    pub fn ranked(&self) -> Vec<&FlowRow> {
+        let mut v: Vec<&FlowRow> =
+            self.rows.iter().filter(|r| r.flow != 0.0).collect();
+        v.sort_by(|a, b| {
+            let (ca, cb) = (a.length * a.flow.abs(), b.length * b.flow.abs());
+            cb.partial_cmp(&ca).unwrap_or(std::cmp::Ordering::Equal).then(a.node.cmp(&b.node))
+        });
+        v
+    }
+
+    /// Serialize as TSV: a `#`-prefixed provenance header followed by
+    /// one `node \t name \t length \t flow` line per branch (postorder).
+    pub fn write_tsv(&self, out: &mut impl std::io::Write) -> std::io::Result<()> {
+        writeln!(
+            out,
+            "# emd-flows\tsample_i={}\tsample_j={}\tdistance={:.17}",
+            self.sample_i, self.sample_j, self.distance
+        )?;
+        writeln!(out, "node\tname\tlength\tflow")?;
+        for r in &self.rows {
+            writeln!(
+                out,
+                "{}\t{}\t{}\t{:.17}",
+                r.node,
+                r.name.as_deref().unwrap_or(""),
+                r.length,
+                r.flow
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Serialize as a JSON document (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("node", Json::from(r.node)),
+                    (
+                        "name",
+                        r.name.as_deref().map(Json::from).unwrap_or(Json::Null),
+                    ),
+                    ("length", Json::from(r.length)),
+                    ("flow", Json::from(r.flow)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("sample_i", Json::from(self.sample_i.as_str())),
+            ("sample_j", Json::from(self.sample_j.as_str())),
+            ("distance", Json::from(self.distance)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Compute the EMDUniFrac flow decomposition for samples `i` and `j`.
+///
+/// One postorder pass over the proportion embedding stream — the same
+/// producer the matrix engines consume, so the flow vector is exactly
+/// consistent with the `Metric::Emd` distance matrix: per emitted node
+/// the signed flow is `mass_i − mass_j` and the distance accumulates
+/// `length · |flow|`. Linear in tree size, O(N) scratch (one embedding
+/// row at a time).
+pub fn emd_flows(
+    tree: &Phylogeny,
+    table: &FeatureTable,
+    i: usize,
+    j: usize,
+) -> crate::Result<DiffAbundance> {
+    let n = table.n_samples();
+    if i >= n || j >= n {
+        return Err(crate::Error::invalid(format!(
+            "sample index out of range: pair ({i}, {j}) with {n} samples"
+        )));
+    }
+    // the postorder nodes the stream will emit, in emission order
+    let root = tree.root();
+    let emitted: Vec<usize> =
+        tree.postorder().iter().copied().filter(|&v| v != root).collect();
+    let mut rows = Vec::with_capacity(emitted.len());
+    let mut distance = 0.0f64;
+    let mut next = 0usize;
+    // batch capacity 1 keeps scratch at a single row; padded width n
+    // (the stream requires batch width >= sample count, no more)
+    generate_embeddings::<f64>(
+        tree,
+        table,
+        EmbeddingKind::Proportion,
+        n.max(1),
+        1,
+        |batch| {
+            for (row, len) in batch.rows() {
+                let node = emitted[next];
+                next += 1;
+                let flow = row[i] - row[j];
+                distance += f64::from(len) * flow.abs();
+                rows.push(FlowRow {
+                    node,
+                    name: tree.name(node).map(String::from),
+                    length: f64::from(len),
+                    flow,
+                });
+            }
+        },
+    )?;
+    debug_assert_eq!(next, emitted.len(), "stream emitted unexpected row count");
+    Ok(DiffAbundance {
+        sample_i: table.sample_ids()[i].clone(),
+        sample_j: table.sample_ids()[j].clone(),
+        distance,
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::parse_newick;
+    use crate::unifrac::{compute_unifrac, ComputeOptions, Metric};
+
+    fn tiny() -> (Phylogeny, FeatureTable) {
+        // ((A:1,B:2):0.5,C:3);  s0={A:2}, s1={A:1,B:1}, s2={C:4}
+        let tree = parse_newick("((A:1,B:2):0.5,C:3);").unwrap();
+        let table = FeatureTable::from_dense(
+            vec!["s0".into(), "s1".into(), "s2".into()],
+            vec!["A".into(), "B".into(), "C".into()],
+            &[vec![2.0, 0.0, 0.0], vec![1.0, 1.0, 0.0], vec![0.0, 0.0, 4.0]],
+        )
+        .unwrap();
+        (tree, table)
+    }
+
+    #[test]
+    fn pinned_flows_on_hand_tree() {
+        let (tree, table) = tiny();
+        // s0 = {A: 1.0}, s1 = {A: 0.5, B: 0.5}
+        let d = emd_flows(&tree, &table, 0, 1).unwrap();
+        assert_eq!(d.sample_i, "s0");
+        assert_eq!(d.sample_j, "s1");
+        assert_eq!(d.rows.len(), tree.n_nodes() - 1);
+        // flows by node name: A carries +0.5, B carries -0.5, the AB
+        // clade and C carry 0 -> distance 1*0.5 + 2*0.5 = 1.5
+        for r in &d.rows {
+            match r.name.as_deref() {
+                Some("A") => assert!((r.flow - 0.5).abs() < 1e-15, "A {r:?}"),
+                Some("B") => assert!((r.flow + 0.5).abs() < 1e-15, "B {r:?}"),
+                _ => assert!(r.flow.abs() < 1e-15, "{r:?}"),
+            }
+        }
+        assert!((d.distance - 1.5).abs() < 1e-15, "distance {}", d.distance);
+        assert!((d.transport_cost() - d.distance).abs() < 1e-15);
+
+        // s0 vs s2: disjoint clades, everything moves through the root
+        let d = emd_flows(&tree, &table, 0, 2).unwrap();
+        // 1*1 (A) + 0.5*1 (AB clade) + 3*1 (C)
+        assert!((d.distance - 4.5).abs() < 1e-15, "distance {}", d.distance);
+    }
+
+    #[test]
+    fn root_children_flows_conserve_mass() {
+        let (tree, table) = tiny();
+        let root_kids = tree.children(tree.root()).to_vec();
+        for (i, j) in [(0, 1), (0, 2), (1, 2)] {
+            let d = emd_flows(&tree, &table, i, j).unwrap();
+            let s = d.flow_sum(&root_kids);
+            assert!(s.abs() < 1e-15, "pair ({i},{j}): root flow sum {s}");
+        }
+    }
+
+    #[test]
+    fn distance_matches_weighted_unnormalized_matrix() {
+        let (tree, table) = crate::synth::SynthSpec {
+            n_samples: 10,
+            n_features: 64,
+            density: 0.15,
+            seed: 7,
+            ..Default::default()
+        }
+        .generate();
+        let dm = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { metric: Metric::WeightedUnnormalized, ..Default::default() },
+        )
+        .unwrap();
+        for (i, j) in [(0usize, 1usize), (2, 7), (3, 9), (5, 6)] {
+            let d = emd_flows(&tree, &table, i, j).unwrap();
+            assert!(
+                (d.distance - dm.get(i, j)).abs() < 1e-12,
+                "pair ({i},{j}): flow {} vs matrix {}",
+                d.distance,
+                dm.get(i, j)
+            );
+        }
+    }
+
+    #[test]
+    fn self_pair_has_zero_flows() {
+        let (tree, table) = tiny();
+        let d = emd_flows(&tree, &table, 1, 1).unwrap();
+        assert_eq!(d.distance, 0.0);
+        assert!(d.rows.iter().all(|r| r.flow == 0.0));
+        assert!(d.ranked().is_empty());
+    }
+
+    #[test]
+    fn out_of_range_pair_rejected() {
+        let (tree, table) = tiny();
+        let e = emd_flows(&tree, &table, 0, 3).unwrap_err();
+        assert!(matches!(e, crate::Error::Invalid(_)), "{e:?}");
+    }
+
+    #[test]
+    fn ranked_orders_by_transported_cost() {
+        let (tree, table) = tiny();
+        let d = emd_flows(&tree, &table, 0, 2).unwrap();
+        let ranked = d.ranked();
+        assert!(!ranked.is_empty());
+        for w in ranked.windows(2) {
+            assert!(
+                w[0].length * w[0].flow.abs() >= w[1].length * w[1].flow.abs(),
+                "not sorted: {w:?}"
+            );
+        }
+        // C (3.0 * 1.0) dominates
+        assert_eq!(ranked[0].name.as_deref(), Some("C"));
+    }
+
+    #[test]
+    fn tsv_and_json_roundtrip_shape() {
+        let (tree, table) = tiny();
+        let d = emd_flows(&tree, &table, 0, 1).unwrap();
+        let mut tsv = Vec::new();
+        d.write_tsv(&mut tsv).unwrap();
+        let text = String::from_utf8(tsv).unwrap();
+        assert!(text.starts_with("# emd-flows\tsample_i=s0\tsample_j=s1"));
+        assert_eq!(text.lines().count(), 2 + d.rows.len());
+        let json = Json::parse(&d.to_json().dump()).unwrap();
+        assert_eq!(json.get("sample_i").unwrap().as_str(), Some("s0"));
+        assert_eq!(
+            json.get("rows").unwrap().as_arr().unwrap().len(),
+            d.rows.len()
+        );
+        let d0 = json.get("distance").unwrap().as_f64().unwrap();
+        assert!((d0 - d.distance).abs() < 1e-12);
+    }
+}

@@ -744,6 +744,7 @@ mod tests {
             Metric::WeightedNormalized,
             Metric::WeightedUnnormalized,
             Metric::Generalized(0.5),
+            Metric::Emd,
         ] {
             let presence = metric == Metric::Unweighted;
             let batch = random_batch(n, 7, 99, presence);
@@ -876,6 +877,7 @@ mod tests {
         assert!(EngineKind::Packed.supports(Metric::Unweighted));
         assert!(!EngineKind::Packed.supports(Metric::WeightedNormalized));
         assert!(!EngineKind::Packed.supports(Metric::Generalized(0.5)));
+        assert!(!EngineKind::Packed.supports(Metric::Emd));
         for k in EngineKind::paper_stages() {
             for m in Metric::all(0.5) {
                 assert!(k.supports(m), "{k:?} must support {m}");
@@ -889,6 +891,7 @@ mod tests {
         assert!(EngineKind::Sparse.supports(Metric::WeightedNormalized));
         assert!(EngineKind::Sparse.supports(Metric::WeightedUnnormalized));
         assert!(EngineKind::Sparse.supports(Metric::Generalized(0.5)));
+        assert!(EngineKind::Sparse.supports(Metric::Emd));
     }
 
     #[test]
@@ -919,6 +922,13 @@ mod tests {
         );
         assert_eq!(EngineKind::auto_for(Metric::WeightedNormalized), EngineKind::Tiled);
         assert_eq!(EngineKind::auto_for(Metric::Unweighted), EngineKind::Packed);
+        // EMD follows the weighted auto policy (sparse below threshold)
+        assert_eq!(
+            EngineKind::auto_for_density(Metric::Emd, Some(0.05), T),
+            EngineKind::Sparse
+        );
+        assert_eq!(EngineKind::auto_for(Metric::Emd), EngineKind::Tiled);
+        assert!(EngineKind::auto_needs_density(Metric::Emd));
         // the estimator-skip predicate mirrors the policy shape
         assert!(!EngineKind::auto_needs_density(Metric::Unweighted));
         assert!(EngineKind::auto_needs_density(Metric::WeightedNormalized));

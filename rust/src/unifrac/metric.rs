@@ -18,6 +18,16 @@ pub enum Metric {
     WeightedUnnormalized,
     /// Generalized UniFrac (Chen et al.) with exponent `alpha`.
     Generalized(f64),
+    /// EMDUniFrac (McClelland & Koslicki): the earth-mover's distance
+    /// on the tree. Per-branch terms are identical to
+    /// [`Metric::WeightedUnnormalized`] — EMDUniFrac's theorem is that
+    /// weighted-unnormalized UniFrac *is* the EMD between the two
+    /// abundance distributions — so distances bit-match that metric on
+    /// every engine. What the variant adds is the differential-abundance
+    /// flow decomposition ([`crate::unifrac::emd`]): the per-branch
+    /// signed mass flows whose length-weighted magnitudes sum to the
+    /// distance.
+    Emd,
 }
 
 impl Metric {
@@ -36,6 +46,7 @@ impl Metric {
             Metric::WeightedNormalized => "weighted_normalized",
             Metric::WeightedUnnormalized => "weighted_unnormalized",
             Metric::Generalized(_) => "generalized",
+            Metric::Emd => "emd",
         }
     }
 
@@ -46,6 +57,7 @@ impl Metric {
             "weighted_normalized" | "weighted" => Some(Metric::WeightedNormalized),
             "weighted_unnormalized" => Some(Metric::WeightedUnnormalized),
             "generalized" => Some(Metric::Generalized(alpha)),
+            "emd" => Some(Metric::Emd),
             _ => None,
         }
     }
@@ -66,7 +78,7 @@ impl Metric {
         match self {
             Metric::Unweighted => (d, u.max(v)),
             Metric::WeightedNormalized => (d, u + v),
-            Metric::WeightedUnnormalized => (d, R::ZERO),
+            Metric::WeightedUnnormalized | Metric::Emd => (d, R::ZERO),
             Metric::Generalized(alpha) => {
                 let s = u + v;
                 if s > R::ZERO {
@@ -84,7 +96,7 @@ impl Metric {
     #[inline]
     pub fn finalize(&self, num: f64, den: f64) -> f64 {
         match self {
-            Metric::WeightedUnnormalized => num,
+            Metric::WeightedUnnormalized | Metric::Emd => num,
             _ => {
                 if den > 0.0 {
                     num / den
@@ -96,13 +108,33 @@ impl Metric {
     }
 
     /// All canonical variants (used by test/bench sweeps).
-    pub fn all(alpha: f64) -> [Metric; 4] {
+    pub fn all(alpha: f64) -> [Metric; 5] {
         [
             Metric::Unweighted,
             Metric::WeightedNormalized,
             Metric::WeightedUnnormalized,
             Metric::Generalized(alpha),
+            Metric::Emd,
         ]
+    }
+
+    /// Validate the metric's parameters at the API boundary:
+    /// [`Metric::Generalized`] requires a finite, non-negative alpha
+    /// (alpha = 0 weighs every branch purely by co-presence, alpha = 1
+    /// is weighted-normalized; negative or NaN exponents produce
+    /// NaN/Inf terms on zero-mass branches). The fixed metrics always
+    /// validate. Called by the job/config lowering so a bad alpha
+    /// surfaces as a typed [`crate::Error::Invalid`] instead of a NaN
+    /// matrix.
+    pub fn validate(&self) -> crate::Result<()> {
+        if let Metric::Generalized(a) = self {
+            if !a.is_finite() || *a < 0.0 {
+                return Err(crate::Error::invalid(format!(
+                    "generalized UniFrac alpha must be finite and >= 0, got {a}"
+                )));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -188,6 +220,14 @@ macro_rules! with_metric_ops {
                 );
                 $body
             }
+            // EMD distances are definitionally the weighted-unnormalized
+            // distances (EMDUniFrac's exactness theorem) — binding the
+            // SAME ops ZST instantiates the SAME monomorphized kernel,
+            // so the two metrics bit-match by construction.
+            $crate::unifrac::Metric::Emd => {
+                let $ops = $crate::unifrac::metric::WeightedUnnormalizedOps;
+                $body
+            }
         }
     };
 }
@@ -262,6 +302,34 @@ mod tests {
             Metric::Generalized(0.5).embedding_kind(),
             EmbeddingKind::Proportion
         );
+    }
+
+    #[test]
+    fn emd_terms_and_finalize_match_weighted_unnormalized() {
+        for (u, v) in [(0.25f64, 0.75), (0.0, 0.5), (0.0, 0.0), (0.9, 0.1)] {
+            assert_eq!(Metric::Emd.terms(u, v), Metric::WeightedUnnormalized.terms(u, v));
+        }
+        // EMD accumulates only a numerator; finalize must return it
+        // verbatim (the `_` arm would divide by den = 0 and yield 0)
+        assert_eq!(Metric::Emd.finalize(1.25, 0.0), 1.25);
+        assert_eq!(Metric::Emd.embedding_kind(), EmbeddingKind::Proportion);
+        assert_eq!(Metric::parse("emd", 1.0), Some(Metric::Emd));
+    }
+
+    #[test]
+    fn validate_rejects_bad_alpha_only() {
+        assert!(Metric::Generalized(0.0).validate().is_ok());
+        assert!(Metric::Generalized(0.5).validate().is_ok());
+        assert!(Metric::Generalized(1.5).validate().is_ok());
+        for bad in [-0.5, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = Metric::Generalized(bad).validate().unwrap_err();
+            assert!(matches!(err, crate::Error::Invalid(_)), "{bad}: {err:?}");
+        }
+        for m in Metric::all(0.5) {
+            if !matches!(m, Metric::Generalized(_)) {
+                assert!(m.validate().is_ok());
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 #[allow(missing_docs)]
 pub mod bitpack;
 pub mod compute;
+pub mod emd;
 pub mod engines;
 pub mod metric;
 #[allow(missing_docs)]
@@ -18,6 +19,7 @@ pub mod sparse;
 
 pub use bitpack::{PackedBatch, PackedEngine};
 pub use compute::{compute_unifrac, compute_unifrac_report, ComputeOptions, ComputeReport};
+pub use emd::{emd_flows, DiffAbundance, FlowRow};
 pub use engines::{make_engine, make_engine_with, EngineKind, EngineStats, StripeEngine};
 pub use metric::Metric;
 pub use naive::compute_unifrac_naive;

@@ -425,7 +425,10 @@ fn tile_avx2<R: Real>(
             match metric {
                 Metric::Unweighted => x86::tile_unweighted_f64(uu, vv, l, an, ad),
                 Metric::WeightedNormalized => x86::tile_wnorm_f64(uu, vv, l, an, ad),
-                Metric::WeightedUnnormalized => x86::tile_wunnorm_f64(uu, vv, l, an, ad),
+                // EMD = weighted-unnormalized terms: same vector kernel
+                Metric::WeightedUnnormalized | Metric::Emd => {
+                    x86::tile_wunnorm_f64(uu, vv, l, an, ad)
+                }
                 Metric::Generalized(_) => return false,
             }
         }
@@ -440,7 +443,9 @@ fn tile_avx2<R: Real>(
             match metric {
                 Metric::Unweighted => x86::tile_unweighted_f32(uu, vv, l, an, ad),
                 Metric::WeightedNormalized => x86::tile_wnorm_f32(uu, vv, l, an, ad),
-                Metric::WeightedUnnormalized => x86::tile_wunnorm_f32(uu, vv, l, an, ad),
+                Metric::WeightedUnnormalized | Metric::Emd => {
+                    x86::tile_wunnorm_f32(uu, vv, l, an, ad)
+                }
                 Metric::Generalized(_) => return false,
             }
         }
@@ -469,7 +474,9 @@ fn tile_neon<R: Real>(
             match metric {
                 Metric::Unweighted => neon::tile_unweighted_f64(uu, vv, l, an, ad),
                 Metric::WeightedNormalized => neon::tile_wnorm_f64(uu, vv, l, an, ad),
-                Metric::WeightedUnnormalized => neon::tile_wunnorm_f64(uu, vv, l, an, ad),
+                Metric::WeightedUnnormalized | Metric::Emd => {
+                    neon::tile_wunnorm_f64(uu, vv, l, an, ad)
+                }
                 Metric::Generalized(_) => return false,
             }
         }
@@ -484,7 +491,9 @@ fn tile_neon<R: Real>(
             match metric {
                 Metric::Unweighted => neon::tile_unweighted_f32(uu, vv, l, an, ad),
                 Metric::WeightedNormalized => neon::tile_wnorm_f32(uu, vv, l, an, ad),
-                Metric::WeightedUnnormalized => neon::tile_wunnorm_f32(uu, vv, l, an, ad),
+                Metric::WeightedUnnormalized | Metric::Emd => {
+                    neon::tile_wunnorm_f32(uu, vv, l, an, ad)
+                }
                 Metric::Generalized(_) => return false,
             }
         }

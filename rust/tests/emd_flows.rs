@@ -1,0 +1,200 @@
+//! ISSUE 9 tentpole contracts for the EMDUniFrac metric family:
+//!
+//! * `Metric::Emd` distances equal `Metric::WeightedUnnormalized` —
+//!   bitwise at matching precision (same kernel by construction), and
+//!   < 1e-12 across engines and batch shapes against the naive oracle;
+//! * the per-pair flow decomposition satisfies the transport laws:
+//!   `Σ length·|flow| == distance` and the root's children conserve
+//!   mass (signed flows sum to zero);
+//! * a hand-checked frozen fixture pins the flows and distances so a
+//!   kernel regression cannot silently shift the artifact.
+
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::parse_newick;
+use unifrac::unifrac::{
+    compute_unifrac, compute_unifrac_naive, emd_flows, ComputeOptions, EngineKind,
+};
+use unifrac::Metric;
+
+fn problem() -> (unifrac::tree::Phylogeny, FeatureTable) {
+    SynthSpec { n_samples: 24, n_features: 128, density: 0.12, seed: 13, ..Default::default() }
+        .generate()
+}
+
+/// Every engine that supports Emd produces the weighted_unnormalized
+/// distances: bitwise at the same width, < 1e-12 against the oracle.
+#[test]
+fn emd_equals_weighted_unnormalized_across_engines() {
+    let (tree, table) = problem();
+    let oracle = compute_unifrac_naive(&tree, &table, Metric::WeightedUnnormalized).unwrap();
+    let oracle_emd = compute_unifrac_naive(&tree, &table, Metric::Emd).unwrap();
+    assert_eq!(
+        oracle_emd.max_abs_diff(&oracle),
+        0.0,
+        "naive emd must reuse the weighted_unnormalized kernel exactly"
+    );
+
+    for engine in EngineKind::all() {
+        if !engine.supports(Metric::Emd) {
+            continue;
+        }
+        let run_f64 = |metric: Metric| {
+            compute_unifrac::<f64>(
+                &tree,
+                &table,
+                &ComputeOptions { metric, engine: Some(engine), ..Default::default() },
+            )
+            .unwrap()
+        };
+        let emd = run_f64(Metric::Emd);
+        let wu = run_f64(Metric::WeightedUnnormalized);
+        assert_eq!(
+            emd.max_abs_diff(&wu),
+            0.0,
+            "{}: emd vs weighted_unnormalized must be bitwise identical",
+            engine.name()
+        );
+        let vs_oracle = emd.max_abs_diff(&oracle);
+        assert!(vs_oracle < 1e-12, "{}: emd drifts {vs_oracle:e} from oracle", engine.name());
+
+        // f32 width: the two metrics still share every operation
+        let run_f32 = |metric: Metric| {
+            compute_unifrac::<f32>(
+                &tree,
+                &table,
+                &ComputeOptions { metric, engine: Some(engine), ..Default::default() },
+            )
+            .unwrap()
+        };
+        assert_eq!(
+            run_f32(Metric::Emd).max_abs_diff(&run_f32(Metric::WeightedUnnormalized)),
+            0.0,
+            "{}: f32 emd vs f32 weighted_unnormalized",
+            engine.name()
+        );
+    }
+}
+
+/// Odd batch capacities exercise the multi-batch streaming path; the
+/// equality must not depend on how the embedding stream is chunked.
+#[test]
+fn emd_equality_holds_across_batch_shapes() {
+    let (tree, table) = problem();
+    let reference = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { metric: Metric::Emd, ..Default::default() },
+    )
+    .unwrap();
+    for batch_capacity in [1, 3, 5] {
+        let emd = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { metric: Metric::Emd, batch_capacity, ..Default::default() },
+        )
+        .unwrap();
+        let wu = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions {
+                metric: Metric::WeightedUnnormalized,
+                batch_capacity,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(emd.max_abs_diff(&wu), 0.0, "batch_capacity={batch_capacity}");
+        let drift = emd.max_abs_diff(&reference);
+        assert!(drift < 1e-12, "batch_capacity={batch_capacity}: drift {drift:e}");
+    }
+}
+
+/// Transport laws on a synthetic problem: the flow vector reconstructs
+/// the matrix distance and conserves mass at the root.
+#[test]
+fn flows_reconstruct_distance_and_conserve_mass() {
+    let (tree, table) = problem();
+    let dm = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { metric: Metric::Emd, ..Default::default() },
+    )
+    .unwrap();
+    let root_kids = tree.children(tree.root()).to_vec();
+    for (i, j) in [(0usize, 1usize), (0, 23), (7, 11), (12, 13), (5, 19)] {
+        let d = emd_flows(&tree, &table, i, j).unwrap();
+        assert_eq!(d.rows.len(), tree.n_nodes() - 1, "one row per non-root node");
+        let cost_gap = (d.transport_cost() - d.distance).abs();
+        assert!(cost_gap < 1e-12, "pair ({i},{j}): transport cost gap {cost_gap:e}");
+        let matrix_gap = (d.distance - dm.get(i, j)).abs();
+        assert!(matrix_gap < 1e-12, "pair ({i},{j}): flow-vs-matrix gap {matrix_gap:e}");
+        let conservation = d.flow_sum(&root_kids);
+        assert!(
+            conservation.abs() < 1e-12,
+            "pair ({i},{j}): root flows sum to {conservation:e}"
+        );
+    }
+}
+
+/// Frozen fixture: `((A:1,B:2):0.5,C:3);` with hand-derived flows.
+/// Pinned so the artifact format and the kernel cannot drift silently.
+#[test]
+fn frozen_fixture_pins_flows_and_distances() {
+    let tree = parse_newick("((A:1,B:2):0.5,C:3);").unwrap();
+    let table = FeatureTable::from_dense(
+        vec!["s0".into(), "s1".into(), "s2".into()],
+        vec!["A".into(), "B".into(), "C".into()],
+        &[vec![2.0, 0.0, 0.0], vec![1.0, 1.0, 0.0], vec![0.0, 0.0, 4.0]],
+    )
+    .unwrap();
+
+    // s0={A:1.0} vs s1={A:.5,B:.5}: A carries +0.5, B carries −0.5,
+    // shared AB clade and C are balanced → d = 1·0.5 + 2·0.5 = 1.5
+    let d01 = emd_flows(&tree, &table, 0, 1).unwrap();
+    assert!((d01.distance - 1.5).abs() < 1e-15, "d(s0,s1) = {}", d01.distance);
+    for r in &d01.rows {
+        let want = match r.name.as_deref() {
+            Some("A") => 0.5,
+            Some("B") => -0.5,
+            _ => 0.0,
+        };
+        assert!((r.flow - want).abs() < 1e-15, "{r:?}");
+    }
+    // the ranked view puts the two movers first, balanced branches drop
+    assert_eq!(d01.ranked().len(), 2);
+
+    // s0 vs s2: disjoint clades, all mass crosses the root
+    // d = 1·1 (A) + 0.5·1 (AB clade) + 3·1 (C) = 4.5
+    let d02 = emd_flows(&tree, &table, 0, 2).unwrap();
+    assert!((d02.distance - 4.5).abs() < 1e-15, "d(s0,s2) = {}", d02.distance);
+    assert_eq!(d02.ranked()[0].name.as_deref(), Some("C"));
+
+    // the matrix path agrees with both pinned values
+    let dm = compute_unifrac::<f64>(
+        &tree,
+        &table,
+        &ComputeOptions { metric: Metric::Emd, ..Default::default() },
+    )
+    .unwrap();
+    assert!((dm.get(0, 1) - 1.5).abs() < 1e-12);
+    assert!((dm.get(0, 2) - 4.5).abs() < 1e-12);
+}
+
+/// The metric registry round-trips the new family: name, parse, and
+/// engine support (everything except the presence-bit packed engine).
+#[test]
+fn metric_registry_includes_emd() {
+    assert_eq!(Metric::Emd.name(), "emd");
+    assert_eq!(Metric::parse("emd", 0.0), Some(Metric::Emd));
+    assert!(Metric::all(0.5).contains(&Metric::Emd));
+    for engine in EngineKind::all() {
+        let supported = engine.supports(Metric::Emd);
+        assert_eq!(
+            supported,
+            engine != EngineKind::Packed,
+            "{}: packed is presence-bit only",
+            engine.name()
+        );
+    }
+}

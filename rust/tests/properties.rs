@@ -34,7 +34,9 @@ fn prop_distances_bounded() {
             let dm = compute(&tree, &table, metric);
             for &d in dm.condensed() {
                 assert!(d >= 0.0, "{metric} seed {seed}: negative {d}");
-                if metric != Metric::WeightedUnnormalized {
+                // weighted_unnormalized and its EMD restatement are the
+                // two length-scaled (unbounded) metrics
+                if metric != Metric::WeightedUnnormalized && metric != Metric::Emd {
                     assert!(d <= 1.0 + 1e-9, "{metric} seed {seed}: {d} > 1");
                 }
             }
@@ -124,10 +126,12 @@ fn prop_branch_length_scaling() {
         let b = compute(&doubled, &table, metric);
         assert!(a.max_abs_diff(&b) < 1e-10, "{metric} not length-scale invariant");
     }
-    let a = compute(&tree, &table, Metric::WeightedUnnormalized);
-    let b = compute(&doubled, &table, Metric::WeightedUnnormalized);
-    for (x, y) in a.condensed().iter().zip(b.condensed()) {
-        assert!((y - 2.0 * x).abs() < 1e-9, "unnormalized should scale: {x} -> {y}");
+    for metric in [Metric::WeightedUnnormalized, Metric::Emd] {
+        let a = compute(&tree, &table, metric);
+        let b = compute(&doubled, &table, metric);
+        for (x, y) in a.condensed().iter().zip(b.condensed()) {
+            assert!((y - 2.0 * x).abs() < 1e-9, "{metric} should scale: {x} -> {y}");
+        }
     }
 }
 
@@ -161,7 +165,10 @@ fn prop_engine_consistency_sweep() {
     for round in 0..6 {
         let n = 8 + rng.below(40);
         let (tree, table) = workload(n, round as u64 + 50);
-        let metric = Metric::all(0.5)[rng.below(4)];
+        let metric = {
+            let all = Metric::all(0.5);
+            all[rng.below(all.len())]
+        };
         let base = compute(&tree, &table, metric);
         // draw an engine compatible with the metric (packed is
         // unweighted-only, sparse is weighted-only)
@@ -183,6 +190,63 @@ fn prop_engine_consistency_sweep() {
         let other = compute_unifrac::<f64>(&tree, &table, &opts).expect("variant");
         let diff = base.max_abs_diff(&other);
         assert!(diff < 1e-10, "round {round} ({metric}, {opts:?}): diff {diff}");
+    }
+}
+
+/// Generalized UniFrac at alpha = 1 degenerates to weighted_normalized
+/// (the VAW family's closed endpoint): < 1e-12 on random workloads.
+#[test]
+fn prop_generalized_alpha_one_is_weighted_normalized() {
+    for seed in 0..4u64 {
+        let (tree, table) = workload(12, seed + 200);
+        let gen1 = compute(&tree, &table, Metric::Generalized(1.0));
+        let wn = compute(&tree, &table, Metric::WeightedNormalized);
+        let diff = gen1.max_abs_diff(&wn);
+        assert!(diff < 1e-12, "seed {seed}: alpha=1 drifts {diff:e} from weighted_normalized");
+    }
+}
+
+/// Generalized UniFrac at alpha = 0 (the pure-proportion endpoint) is a
+/// valid bounded metric and every supporting engine agrees on it.
+#[test]
+fn prop_generalized_alpha_zero_engines_agree() {
+    let (tree, table) = workload(12, 77);
+    let metric = Metric::Generalized(0.0);
+    let base = compute(&tree, &table, metric);
+    for &d in base.condensed() {
+        assert!((0.0..=1.0 + 1e-9).contains(&d), "alpha=0 out of range: {d}");
+    }
+    for engine in EngineKind::all() {
+        if !engine.supports(metric) {
+            continue;
+        }
+        let dm = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { metric, engine: Some(engine), ..Default::default() },
+        )
+        .unwrap();
+        let diff = base.max_abs_diff(&dm);
+        assert!(diff < 1e-12, "{} disagrees at alpha=0 by {diff:e}", engine.name());
+    }
+}
+
+/// Non-finite or negative alpha is rejected as a typed `Invalid` error
+/// before any engine runs — at job resolution, for every engine choice.
+#[test]
+fn prop_generalized_bad_alpha_rejected() {
+    let (tree, table) = workload(8, 5);
+    for alpha in [-0.25, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let err = compute_unifrac::<f64>(
+            &tree,
+            &table,
+            &ComputeOptions { metric: Metric::Generalized(alpha), ..Default::default() },
+        )
+        .expect_err("bad alpha must not compute");
+        assert!(
+            matches!(err, unifrac::Error::Invalid(_)),
+            "alpha={alpha}: wrong error {err:?}"
+        );
     }
 }
 

@@ -150,6 +150,11 @@ const char *ssu_version(void);
  * "kernel=avx2 detected=avx2,fma,avx512f". Static storage, valid for
  * the process lifetime. Honors UNIFRAC_FORCE_SCALAR (read once). */
 const char *ssu_cpu_features(void);
+/* 1 when the GPU stripe engine can run here (a real adapter was
+ * detected, or UNIFRAC_GPU_VDEV forces the deterministic virtual
+ * device), else 0. Requesting the gpu engine on a 0 host fails with
+ * SSU_ERR_UNSUPPORTED unless the "vdev" adapter is selected. */
+int ssu_gpu_available(void);
 
 #ifdef __cplusplus
 } /* extern "C" */

@@ -102,6 +102,14 @@ pub struct JobSpec {
     /// Embedding-row density below which auto-selection picks the
     /// sparse CSR kernel for weighted metrics (`--sparse-threshold`).
     pub sparse_threshold: f64,
+    /// GPU adapter request for [`EngineKind::Gpu`] (`--gpu-adapter`).
+    /// `"auto"` (default) takes the detected adapter and fails with a
+    /// typed `Error::Unsupported` when none exists (unless
+    /// `UNIFRAC_GPU_VDEV` forces the virtual device); `"vdev"` always
+    /// runs the deterministic virtual device; any other value must
+    /// substring-match the detected adapter's name. Ignored by the CPU
+    /// engines.
+    pub gpu_adapter: String,
     /// SIMD kernel path for the CPU engines (`--cpu-features`). `Auto`
     /// (default) resolves by runtime CPU-feature detection (honoring
     /// the `UNIFRAC_FORCE_SCALAR` env override); `Scalar` pins the
@@ -166,6 +174,7 @@ impl Default for JobSpec {
             backend: Backend::Cpu,
             engine: None,
             sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
+            gpu_adapter: "auto".to_string(),
             cpu_features: CpuFeatures::Auto,
             block_k: 64,
             batch_capacity: 32,
@@ -219,6 +228,12 @@ impl JobSpec {
         self.metric.validate()?;
         let engine = match self.engine {
             Some(e) => e,
+            // auto promotes to the device engine only when a REAL
+            // adapter is present; otherwise it degrades to the CPU
+            // policy below and the compute report records the fallback
+            // (the virtual device is a conformance model, not a speedup,
+            // so it never wins auto-selection)
+            None if crate::unifrac::gpu::adapter_available() => EngineKind::Gpu,
             None => {
                 let density = if EngineKind::auto_needs_density(self.metric) {
                     Some(crate::embed::embedding_density(tree, table)?)
@@ -235,6 +250,13 @@ impl JobSpec {
                 engine.name(),
                 self.metric
             )));
+        }
+        if engine == EngineKind::Gpu {
+            // `--engine gpu` on an adapter-less host is the typed
+            // Unsupported error the acceptance criteria pin; the
+            // virtual device (`--gpu-adapter vdev` / UNIFRAC_GPU_VDEV)
+            // is the sanctioned offline escape hatch
+            crate::unifrac::gpu::resolve_adapter(&self.gpu_adapter)?;
         }
         Ok(engine)
     }
@@ -441,6 +463,13 @@ impl<'a> UniFracJob<'a> {
     /// Density cut below which auto-selection picks the sparse kernel.
     pub fn sparse_threshold(mut self, threshold: f64) -> Self {
         self.spec.sparse_threshold = threshold;
+        self
+    }
+
+    /// GPU adapter request for [`EngineKind::Gpu`] (`"auto"`, `"vdev"`,
+    /// or an adapter-name substring — see [`JobSpec::gpu_adapter`]).
+    pub fn gpu_adapter(mut self, adapter: impl Into<String>) -> Self {
+        self.spec.gpu_adapter = adapter.into();
         self
     }
 
@@ -863,7 +892,11 @@ pub struct SinkRunReport {
 /// [`RunMetrics`] so every facade run reports through one type.
 fn metrics_from_compute(rep: &ComputeReport, spec: &JobSpec) -> RunMetrics {
     RunMetrics {
-        backend: format!("cpu/{}", rep.engine),
+        backend: if rep.engine == "gpu" {
+            format!("gpu/{}", rep.gpu_adapter)
+        } else {
+            format!("cpu/{}", rep.engine)
+        },
         scheduler: spec.scheduler.name().to_string(),
         kernel_path: rep.kernel_path.clone(),
         artifact: None,
@@ -881,6 +914,10 @@ fn metrics_from_compute(rep: &ComputeReport, spec: &JobSpec) -> RunMetrics {
         rows_dense: rep.rows_dense,
         csr_density: rep.csr_density,
         embed_density: rep.embed_density,
+        gpu_adapter: rep.gpu_adapter.clone(),
+        gpu_fallback: rep.gpu_fallback.clone(),
+        gpu_dispatches: rep.gpu_dispatches,
+        gpu_bytes_staged: rep.gpu_bytes_staged,
         per_chip_seconds: vec![rep.seconds_stripes],
         seconds_embed: rep.seconds_embed,
         seconds_total: rep.seconds_total,
@@ -947,6 +984,7 @@ mod tests {
             .batch_capacity(9)
             .block_k(16)
             .sparse_threshold(0.5)
+            .gpu_adapter("vdev")
             .cpu_features(CpuFeatures::Scalar)
             .stripe_range(1, 2);
         let s = job.spec();
@@ -960,6 +998,7 @@ mod tests {
         assert_eq!(s.batch_capacity, 9);
         assert_eq!(s.block_k, 16);
         assert_eq!(s.sparse_threshold, 0.5);
+        assert_eq!(s.gpu_adapter, "vdev");
         assert_eq!(s.cpu_features, CpuFeatures::Scalar);
         assert_eq!(s.stripe_range, Some((1, 2)));
     }

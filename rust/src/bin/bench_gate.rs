@@ -1,6 +1,6 @@
 //! CI bench regression gate: compare the ratio metrics emitted by the
 //! bench sweeps (`BENCH_engines.json`, `BENCH_sparse.json`,
-//! `BENCH_stats.json`) against the committed floor file
+//! `BENCH_stats.json`, `BENCH_gpu.json`) against the committed floor file
 //! `BENCH_baseline.json` and fail (exit 1) when any cell regresses by
 //! more than the baseline's tolerance.
 //!
@@ -245,7 +245,7 @@ fn ratchet(baseline: &mut Baseline, docs: &BTreeMap<String, Json>) -> Result<usi
 
 fn usage() -> String {
     "usage: bench_gate --baseline FILE [--engines FILE] [--sparse FILE] \
-     [--stats FILE] [--record]"
+     [--stats FILE] [--gpu FILE] [--record]"
         .to_string()
 }
 
@@ -254,6 +254,7 @@ fn run(argv: &[String]) -> Result<ExitCode, String> {
     let mut engines_path = "BENCH_engines.json".to_string();
     let mut sparse_path = "BENCH_sparse.json".to_string();
     let mut stats_path = "BENCH_stats.json".to_string();
+    let mut gpu_path = "BENCH_gpu.json".to_string();
     let mut record = false;
     let mut it = argv.iter();
     while let Some(arg) = it.next() {
@@ -265,6 +266,7 @@ fn run(argv: &[String]) -> Result<ExitCode, String> {
             "--engines" => engines_path = val("--engines")?,
             "--sparse" => sparse_path = val("--sparse")?,
             "--stats" => stats_path = val("--stats")?,
+            "--gpu" => gpu_path = val("--gpu")?,
             "--record" => record = true,
             other => return Err(format!("unknown flag {other:?}\n{}", usage())),
         }
@@ -285,6 +287,7 @@ fn run(argv: &[String]) -> Result<ExitCode, String> {
             "engine_sweep" => &engines_path,
             "sparse_sweep" => &sparse_path,
             "stats_sweep" => &stats_path,
+            "gpu_sweep" => &gpu_path,
             other => return Err(format!("no file mapping for bench {other:?}")),
         };
         let text =

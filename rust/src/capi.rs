@@ -593,6 +593,17 @@ pub extern "C" fn ssu_version() -> *const c_char {
     b"unifrac 0.1.0\0".as_ptr() as *const c_char
 }
 
+/// Whether the GPU stripe engine can run on this host: `1` when a real
+/// adapter was detected or the deterministic virtual device is forced
+/// via `UNIFRAC_GPU_VDEV`, else `0`. `--engine gpu` (and the
+/// corresponding API request) on a `0` host fails with the
+/// `unsupported` status code (20) unless the `vdev` adapter is
+/// selected explicitly.
+#[no_mangle]
+pub extern "C" fn ssu_gpu_available() -> c_int {
+    c_int::from(crate::unifrac::gpu::available())
+}
+
 /// CPU capability diagnostics: the SIMD kernel path the auto dispatcher
 /// selects plus the detected CPU features, as a static string like
 /// `"kernel=avx2 detected=avx2,fma,avx512f"` (same text the CLI's
@@ -925,6 +936,7 @@ mod tests {
             "ssu_error_name",
             "ssu_version",
             "ssu_cpu_features",
+            "ssu_gpu_available",
         ];
         for name in exports {
             assert!(
@@ -1054,6 +1066,10 @@ mod tests {
             assert!(f.contains("detected="), "cpu features string: {f:?}");
             // stable pointer: repeated calls return the same allocation
             assert_eq!(ssu_cpu_features(), ssu_cpu_features());
+            // gpu availability is a strict boolean, stable per process
+            let g = ssu_gpu_available();
+            assert!(g == 0 || g == 1, "ssu_gpu_available returned {g}");
+            assert_eq!(g, ssu_gpu_available());
         }
     }
 }

@@ -46,6 +46,9 @@ fn resolve_config(args: &mut Args) -> Result<RunConfig> {
     if let Some(v) = args.opt("cpu-features") {
         cfg.cpu_features = v;
     }
+    if let Some(v) = args.opt("gpu-adapter") {
+        cfg.gpu_adapter = v;
+    }
     if let Some(v) = args.opt("scheduler") {
         cfg.scheduler = v;
     }
@@ -746,6 +749,10 @@ pub fn version(args: &mut Args) -> Result<()> {
     args.finish()?;
     println!("unifrac {}", env!("CARGO_PKG_VERSION"));
     println!("cpu: {}", crate::unifrac::simd::describe());
+    match crate::unifrac::gpu::host::probe() {
+        Some(a) => println!("gpu: {} ({}, f64 {})", a.name, a.backend, a.shader_f64),
+        None => println!("gpu: no adapter detected (--gpu-adapter vdev runs the virtual device)"),
+    }
     println!("engines: {}", EngineKind::names_list());
     Ok(())
 }
@@ -762,7 +769,14 @@ pub fn selftest(args: &mut Args) -> Result<()> {
             if !engine.supports(metric) {
                 continue;
             }
-            let opts = ComputeOptions { metric, engine: Some(engine), ..Default::default() };
+            let opts = ComputeOptions {
+                metric,
+                engine: Some(engine),
+                // the gpu engine self-tests on its deterministic
+                // virtual device so the check passes with no adapter
+                gpu_adapter: "vdev".to_string(),
+                ..Default::default()
+            };
             let dm = compute_unifrac::<f64>(&tree, &table, &opts)?;
             let diff = dm.max_abs_diff(&oracle);
             let ok = diff < 1e-10;

@@ -147,6 +147,12 @@ COMMON FLAGS
                       (default auto; explicit ISAs not available on this
                       host are rejected; UNIFRAC_FORCE_SCALAR=1 forces
                       the scalar reference path)
+  --gpu-adapter A     gpu engine adapter: auto (require a real adapter) |
+                      vdev (deterministic virtual device, runs anywhere) |
+                      a substring of the adapter name. --engine gpu with no
+                      adapter fails typed Unsupported unless vdev is chosen
+                      (or UNIFRAC_GPU_VDEV=1); --engine auto falls back to
+                      the cpu engines and records why (see docs/gpu.md)
   --scheduler S       stripe scheduling: static (contiguous ranges) |
                       dynamic (work-stealing of stripe chunks)
   --pool-depth N      recycled batch buffers in the exec pool (0 = off)

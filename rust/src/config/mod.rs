@@ -41,6 +41,10 @@ pub struct RunConfig {
     /// SIMD kernel path for the CPU engines: "auto" (runtime
     /// detection), "scalar", "avx2" or "neon".
     pub cpu_features: String,
+    /// GPU adapter request for `engine = "gpu"`: "auto" (require a real
+    /// adapter), "vdev" (the deterministic virtual device) or an
+    /// adapter-name substring.
+    pub gpu_adapter: String,
     pub queue_depth: usize,
     /// Stripe scheduling: "static" | "dynamic".
     pub scheduler: String,
@@ -97,6 +101,7 @@ impl Default for RunConfig {
             block_k: 64,
             sparse_threshold: crate::unifrac::DEFAULT_SPARSE_THRESHOLD,
             cpu_features: "auto".into(),
+            gpu_adapter: "auto".into(),
             queue_depth: 4,
             scheduler: "static".into(),
             pool_depth: 8,
@@ -168,6 +173,9 @@ impl RunConfig {
         }
         if let Some(v) = get("cpu_features") {
             self.cpu_features = v.as_str().ok_or_else(|| bad("cpu_features"))?.to_string();
+        }
+        if let Some(v) = get("gpu_adapter") {
+            self.gpu_adapter = v.as_str().ok_or_else(|| bad("gpu_adapter"))?.to_string();
         }
         if let Some(v) = get("queue_depth") {
             self.queue_depth = v.as_usize().ok_or_else(|| bad("queue_depth"))?;
@@ -271,10 +279,10 @@ impl RunConfig {
             "pjrt" => {
                 if matches!(
                     EngineKind::parse(&self.engine),
-                    Some(EngineKind::Packed | EngineKind::Sparse)
+                    Some(EngineKind::Packed | EngineKind::Sparse | EngineKind::Gpu)
                 ) {
                     return Err(Error::unsupported(format!(
-                        "engine {:?} is a CPU kernel; the pjrt backend has no such \
+                        "engine {:?} is a native kernel; the pjrt backend has no such \
                          artifact (use --backend cpu)",
                         self.engine
                     )));
@@ -315,6 +323,7 @@ impl RunConfig {
             backend,
             engine,
             sparse_threshold: self.sparse_threshold,
+            gpu_adapter: self.gpu_adapter.clone(),
             cpu_features,
             block_k: self.block_k,
             batch_capacity: self.batch.max(1),
@@ -480,6 +489,30 @@ pool_depth = 16
         assert_eq!(cfg.sparse_threshold, 0.4);
         let job = cfg.to_job().unwrap();
         assert_eq!(job.resolved_engine_for(Some(0.3)), EngineKind::Sparse);
+    }
+
+    #[test]
+    fn gpu_adapter_parses_from_doc() {
+        let doc = TomlDoc::parse("[run]\nengine = \"gpu\"\ngpu_adapter = \"vdev\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.gpu_adapter, "vdev");
+        let job = cfg.to_job().unwrap();
+        assert_eq!(job.engine, Some(EngineKind::Gpu));
+        assert_eq!(job.gpu_adapter, "vdev");
+        // adapter availability is checked at engine resolution, not at
+        // config lowering, so `to_job` succeeds even with no GPU
+        assert_eq!(RunConfig::default().to_job().unwrap().gpu_adapter, "auto");
+    }
+
+    #[test]
+    fn gpu_under_pjrt_backend_rejected() {
+        let cfg = RunConfig {
+            backend: "pjrt".into(),
+            engine: "gpu".into(),
+            ..Default::default()
+        };
+        assert!(matches!(cfg.to_job(), Err(Error::Unsupported(_))));
     }
 
     #[test]

@@ -44,6 +44,20 @@ pub struct RunMetrics {
     /// Mean embedding-row density measured by the producer stream over
     /// the real sample columns (the auto-selection domain).
     pub embed_density: f64,
+    /// GPU adapter name when the gpu engine ran ("vdev" for the
+    /// deterministic virtual device); empty for CPU engines.
+    pub gpu_adapter: String,
+    /// Human-readable note recorded when `engine = auto` wanted the GPU
+    /// but no adapter was present and a CPU engine ran instead; empty
+    /// when no fallback happened.
+    pub gpu_fallback: String,
+    /// Device dispatches issued by the gpu engine (one per embedding
+    /// batch per stripe block); 0 for CPU engines.
+    pub gpu_dispatches: u64,
+    /// Bytes staged host-to-device by the gpu engine (column-major
+    /// duplicated-sample embeddings + branch lengths); 0 for CPU
+    /// engines.
+    pub gpu_bytes_staged: u64,
     /// Wall time each chip spent in the stripe phase. In sequential mode
     /// these are true isolated per-chip measurements (the Table-2 "per
     /// chip" row); in parallel mode they overlap.
@@ -104,6 +118,10 @@ impl RunMetrics {
             ("rows_dense", Json::from(self.rows_dense as usize)),
             ("csr_density", Json::from(self.csr_density)),
             ("embed_density", Json::from(self.embed_density)),
+            ("gpu_adapter", Json::from(self.gpu_adapter.as_str())),
+            ("gpu_fallback", Json::from(self.gpu_fallback.as_str())),
+            ("gpu_dispatches", Json::from(self.gpu_dispatches as usize)),
+            ("gpu_bytes_staged", Json::from(self.gpu_bytes_staged as usize)),
             (
                 "per_chip_seconds",
                 Json::Arr(self.per_chip_seconds.iter().map(|&t| Json::Num(t)).collect()),

@@ -47,15 +47,33 @@ fn worker_spec(backend: &BackendSpec, opts: &JobSpec) -> Result<WorkerSpec> {
 }
 
 fn base_metrics(plan: &ChipPlan, opts: &JobSpec, n_samples: usize) -> RunMetrics {
+    // Best-effort adapter label for gpu runs: engine selection already
+    // validated the adapter request in `JobSpec::resolve_cpu_engine`,
+    // so a resolution failure cannot reach this point.
+    let gpu_adapter = match plan.chips.first().map(|c| &c.backend) {
+        Some(BackendSpec::Cpu { engine, .. }) if *engine == crate::unifrac::EngineKind::Gpu => {
+            crate::unifrac::gpu::resolve_adapter(&opts.gpu_adapter)
+                .map(|a| a.name)
+                .unwrap_or_default()
+        }
+        _ => String::new(),
+    };
     RunMetrics {
         // all chips share one lowered backend; label from the plan
         backend: match plan.chips.first().map(|c| &c.backend) {
-            Some(BackendSpec::Cpu { engine, .. }) => format!("cpu/{}", engine.name()),
+            Some(BackendSpec::Cpu { engine, .. }) => {
+                if *engine == crate::unifrac::EngineKind::Gpu {
+                    format!("gpu/{gpu_adapter}")
+                } else {
+                    format!("cpu/{}", engine.name())
+                }
+            }
             Some(BackendSpec::Pjrt { engine, resident }) => {
                 format!("pjrt/{engine}{}", if *resident { "+resident" } else { "" })
             }
             None => "cpu".to_string(),
         },
+        gpu_adapter,
         scheduler: opts.scheduler.name().to_string(),
         // overwritten by `absorb` with the path the engines actually
         // executed; PJRT-only runs keep the scalar label
@@ -103,6 +121,8 @@ fn absorb(metrics: &mut RunMetrics, rep: &ExecReport) {
     metrics.rows_dense = rep.engine_stats.rows_dense;
     metrics.csr_density = rep.engine_stats.csr_density();
     metrics.embed_density = rep.embed_density;
+    metrics.gpu_dispatches = rep.engine_stats.gpu_dispatches;
+    metrics.gpu_bytes_staged = rep.engine_stats.gpu_bytes_staged;
     metrics.kernel_path = rep.engine_stats.kernel_path.name().to_string();
 }
 

@@ -217,8 +217,10 @@ pub fn stage_workload(
         // its LUT reads are cache-resident, like the tiled accumulator).
         // the sparse CSR kernel is modeled at the tiled traffic level —
         // its nnz-proportional savings depend on workload density,
-        // which this density-blind stage model does not carry
-        EngineKind::Tiled | EngineKind::Packed | EngineKind::Sparse => 3,
+        // which this density-blind stage model does not carry.
+        // the gpu engine IS the paper's final device kernel — same
+        // one-flush-per-batch traffic shape as the tiled stage
+        EngineKind::Tiled | EngineKind::Packed | EngineKind::Sparse | EngineKind::Gpu => 3,
     };
     let bit_pack = if stage == EngineKind::Packed { 1.0 / 64.0 } else { 1.0 };
     let emb_traffic = EMB_TRAFFIC_FACTOR[stage_idx] * s * emb_stream * bit_pack;
@@ -226,15 +228,19 @@ pub fn stage_workload(
     // L2 at ~10% miss-to-HBM), once per batch after
     let acc_passes = match stage {
         EngineKind::Original | EngineKind::Unified => batches + 0.1 * (t - batches),
-        EngineKind::Batched | EngineKind::Tiled | EngineKind::Packed | EngineKind::Sparse => {
-            batches
-        }
+        EngineKind::Batched
+        | EngineKind::Tiled
+        | EngineKind::Packed
+        | EngineKind::Sparse
+        | EngineKind::Gpu => batches,
     };
     let launches = match stage {
         EngineKind::Original | EngineKind::Unified => t,
-        EngineKind::Batched | EngineKind::Tiled | EngineKind::Packed | EngineKind::Sparse => {
-            batches
-        }
+        EngineKind::Batched
+        | EngineKind::Tiled
+        | EngineKind::Packed
+        | EngineKind::Sparse
+        | EngineKind::Gpu => batches,
     };
     Workload {
         bytes_read: emb_traffic + acc_passes * acc,

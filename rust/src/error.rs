@@ -289,6 +289,21 @@ mod tests {
         assert!(e.to_string().contains("xla/pjrt error"));
     }
 
+    /// The offline PJRT stub's failure is pinned end-to-end: stable
+    /// exit code 17 ("xla"), and a message that routes users to the
+    /// portable GPU stripe engine instead of a dead end.
+    #[test]
+    fn pjrt_stub_failure_pins_code_and_routes_to_gpu_engine() {
+        let stub = xla::PjRtClient::cpu().expect_err("offline stub must not construct");
+        let e: Error = stub.into();
+        assert_eq!(e.code(), 17);
+        assert_eq!(Error::code_name(e.code()), "xla");
+        let msg = e.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("--engine gpu"), "{msg}");
+        assert!(msg.contains("docs/gpu.md"), "{msg}");
+    }
+
     #[test]
     fn merge_errors_convert_and_format() {
         let e: Error = MergeError::Gap { stripe: 7 }.into();

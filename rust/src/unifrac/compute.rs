@@ -68,6 +68,18 @@ pub struct ComputeReport {
     /// Mean row density measured by the embedding producer over the
     /// real sample columns (all runs; the auto-selection domain).
     pub embed_density: f64,
+    /// Resolved GPU adapter name when the device engine ran (`"vdev"`
+    /// for the virtual device; empty on CPU-engine runs).
+    pub gpu_adapter: String,
+    /// Why an auto-selected run did NOT take the device engine (empty
+    /// when an adapter was present, a specific engine was requested, or
+    /// the device engine ran) — the acceptance criteria's "fallback
+    /// recorded in `ComputeReport`".
+    pub gpu_fallback: String,
+    /// Device dispatches issued by the GPU engine (0 otherwise).
+    pub gpu_dispatches: u64,
+    /// Bytes staged host→device by the GPU engine (0 otherwise).
+    pub gpu_bytes_staged: u64,
     /// End-to-end wall time, seconds.
     pub seconds_total: f64,
     /// Producer (embedding generation) time, seconds.
@@ -148,6 +160,10 @@ pub fn compute_unifrac_report<R: XlaReal>(
         rows_dense: xrep.engine_stats.rows_dense,
         csr_density: xrep.engine_stats.csr_density(),
         embed_density: xrep.embed_density,
+        gpu_adapter: gpu_adapter_label(opts, engine)?,
+        gpu_fallback: gpu_fallback_note(opts, engine),
+        gpu_dispatches: xrep.engine_stats.gpu_dispatches,
+        gpu_bytes_staged: xrep.engine_stats.gpu_bytes_staged,
         seconds_embed: xrep.seconds_embed,
         ..Default::default()
     };
@@ -168,6 +184,34 @@ pub(crate) fn reject_stripe_range(opts: &ComputeOptions) -> crate::Result<()> {
         )));
     }
     Ok(())
+}
+
+/// Resolved adapter name for the report when the device engine ran
+/// (already validated by `resolve_cpu_engine`, so re-resolving cannot
+/// fail on a path that got this far).
+fn gpu_adapter_label(opts: &ComputeOptions, engine: EngineKind) -> crate::Result<String> {
+    if engine == EngineKind::Gpu {
+        Ok(crate::unifrac::gpu::resolve_adapter(&opts.gpu_adapter)?.name)
+    } else {
+        Ok(String::new())
+    }
+}
+
+/// The acceptance-criteria fallback record: when `--engine auto` could
+/// not take the device engine because no adapter exists, say so — in
+/// the report, not just a log line.
+fn gpu_fallback_note(opts: &ComputeOptions, engine: EngineKind) -> String {
+    if opts.engine.is_none()
+        && engine != EngineKind::Gpu
+        && !crate::unifrac::gpu::adapter_available()
+    {
+        format!(
+            "gpu unavailable (no adapter detected): auto selected the {} engine",
+            engine.name()
+        )
+    } else {
+        String::new()
+    }
 }
 
 /// Shared tail of both compute paths: condensed-matrix assembly plus the
@@ -275,6 +319,7 @@ fn compute_packed_direct<R: XlaReal>(
         lut_builds: stats.lut_builds,
         embeddings: stats.embeddings,
         embed_density: stats.embed_density,
+        gpu_fallback: gpu_fallback_note(opts, EngineKind::Packed),
         seconds_embed: stats.seconds_embed,
         ..Default::default()
     };
@@ -320,6 +365,9 @@ mod tests {
                     engine: Some(engine),
                     block_k: 8,
                     batch_capacity: 5,
+                    // the gpu engine runs its deterministic virtual
+                    // device offline; harmless for the CPU engines
+                    gpu_adapter: "vdev".to_string(),
                     ..Default::default()
                 };
                 let dm = compute_unifrac::<f64>(&tree, &table, &opts).unwrap();

@@ -17,11 +17,17 @@
 //! | `Sparse`   | arXiv:1611.04634 insight  | per-row CSR nonzeros, dense        |
 //! |            | (weighted only)           | single-sided fold + two-pointer    |
 //! |            |                           | intersection corrections           |
+//! | `Gpu`      | §3 device port            | workgroup tile grid, column-major  |
+//! |            | (wgpu/WGSL + virtual dev) | staging, one flush per batch,      |
+//! |            |                           | pinned reduction order             |
 //!
 //! The four scalar engines compute identical results on every metric;
 //! `Packed` matches them on the unweighted metric and `Sparse` on the
 //! weighted ones (their only metrics — the routing layers reject the
-//! rest with a typed error). Tests enforce agreement to <1e-12 in f64.
+//! rest with a typed error); `Gpu` executes the shared device kernel
+//! plan ([`super::gpu`]) on every metric — bit-identical to `Batched`
+//! in f64 via the deterministic virtual device. Tests enforce
+//! agreement to <1e-12 in f64.
 
 use super::bitpack::PackedEngine;
 use super::metric::{Metric, MetricOps};
@@ -59,6 +65,13 @@ pub struct EngineStats {
     /// since the last drain (`Scalar` when the engine ran the reference
     /// loops — or never ran).
     pub kernel_path: KernelPath,
+    /// Device dispatches issued by the GPU engine (one per embedding
+    /// batch per stripe block — each flushes the tile accumulators
+    /// exactly once).
+    pub gpu_dispatches: u64,
+    /// Bytes staged host→device by the GPU engine (column-major
+    /// embedding buffers + branch lengths, summed over dispatches).
+    pub gpu_bytes_staged: u64,
 }
 
 impl EngineStats {
@@ -71,6 +84,8 @@ impl EngineStats {
         self.csr_cells += other.csr_cells;
         self.rows_sparse += other.rows_sparse;
         self.rows_dense += other.rows_dense;
+        self.gpu_dispatches += other.gpu_dispatches;
+        self.gpu_bytes_staged += other.gpu_bytes_staged;
         // workers share one resolved path, so any non-scalar report is
         // *the* vector path of the run
         if other.kernel_path != KernelPath::Scalar {
@@ -138,6 +153,11 @@ pub enum EngineKind {
     /// Sparse CSR weighted kernel (single-sided fold + two-pointer
     /// intersection corrections). Weighted-only.
     Sparse,
+    /// Device stripe engine: the shared GPU kernel plan (workgroup tile
+    /// grid, column-major staging, one flush per batch, pinned
+    /// reduction order) executed by wgpu/WGSL on a real adapter or by
+    /// the deterministic virtual device ([`super::gpu`]). Every metric.
+    Gpu,
 }
 
 impl EngineKind {
@@ -145,13 +165,14 @@ impl EngineKind {
     /// help text, `FromStr` parsing, config validation and test sweeps
     /// all derive from this table — there is no second hand-maintained
     /// string list to drift out of sync (ISSUE 4 satellite).
-    pub const ALL: [EngineKind; 6] = [
+    pub const ALL: [EngineKind; 7] = [
         Self::Original,
         Self::Unified,
         Self::Batched,
         Self::Tiled,
         Self::Packed,
         Self::Sparse,
+        Self::Gpu,
     ];
 
     /// Canonical engine name (CLI `--engine` values, report labels).
@@ -163,6 +184,7 @@ impl EngineKind {
             EngineKind::Tiled => "tiled",
             EngineKind::Packed => "packed",
             EngineKind::Sparse => "sparse",
+            EngineKind::Gpu => "gpu",
         }
     }
 
@@ -172,15 +194,16 @@ impl EngineKind {
         Self::ALL.into_iter().find(|k| k.name() == s)
     }
 
-    /// `"original|unified|batched|tiled|packed|sparse"` — the accepted
-    /// values string for help text and error messages, derived from
-    /// [`Self::ALL`].
+    /// `"original|unified|batched|tiled|packed|sparse|gpu"` — the
+    /// accepted values string for help text and error messages, derived
+    /// from [`Self::ALL`].
     pub fn names_list() -> String {
         Self::ALL.map(|k| k.name()).join("|")
     }
 
-    /// Every engine, including the metric-restricted `Packed`/`Sparse`.
-    pub fn all() -> [EngineKind; 6] {
+    /// Every engine, including the metric-restricted `Packed`/`Sparse`
+    /// and the adapter-gated `Gpu`.
+    pub fn all() -> [EngineKind; 7] {
         Self::ALL
     }
 
@@ -192,7 +215,9 @@ impl EngineKind {
     /// Whether this engine can compute `metric`. `Packed` is
     /// presence-bit based and therefore unweighted-only; `Sparse` is
     /// built on the zero-annihilating weighted term decomposition and
-    /// therefore weighted-only.
+    /// therefore weighted-only. `Gpu` computes every metric (its
+    /// availability constraint is the *adapter*, not the metric —
+    /// enforced where the engine is selected, `JobSpec::resolve_cpu_engine`).
     pub fn supports(&self, metric: Metric) -> bool {
         match self {
             EngineKind::Packed => metric == Metric::Unweighted,
@@ -214,6 +239,10 @@ impl EngineKind {
     /// when the (estimated or observed) mean embedding-row density is
     /// known and falls below `threshold`, the tiled scalar stage
     /// otherwise (including when no density estimate is available).
+    /// Never selects `Gpu` — the adapter-aware layer above
+    /// (`JobSpec::resolve_cpu_engine`) promotes `auto` to the device
+    /// engine only when a real adapter is present, and records the
+    /// CPU fallback in the compute report otherwise.
     pub fn auto_for_density(metric: Metric, density: Option<f64>, threshold: f64) -> EngineKind {
         if metric == Metric::Unweighted {
             EngineKind::Packed
@@ -284,6 +313,10 @@ pub fn make_engine_with<R: Real>(
         EngineKind::Sparse => {
             Box::new(SparseEngine::<R>::with_threshold_path(sparse_threshold, path))
         }
+        // infallible by design: the GPU engine always has the
+        // deterministic virtual device to execute on; adapter policy is
+        // enforced at selection time (JobSpec::resolve_cpu_engine)
+        EngineKind::Gpu => Box::new(super::gpu::GpuEngine::<R>::new(block_k)),
     }
 }
 
@@ -848,8 +881,9 @@ mod tests {
         for k in EngineKind::all() {
             assert_eq!(EngineKind::parse(k.name()), Some(k));
         }
-        assert_eq!(EngineKind::parse("gpu"), None);
-        assert_eq!(EngineKind::all().len(), 6);
+        assert_eq!(EngineKind::parse("gpu"), Some(EngineKind::Gpu));
+        assert_eq!(EngineKind::parse("cuda"), None);
+        assert_eq!(EngineKind::all().len(), 7);
         assert_eq!(EngineKind::paper_stages().len(), 4);
     }
 
@@ -866,7 +900,7 @@ mod tests {
                 "{shown} missing from names_list()"
             );
         }
-        // six engines, six help-text entries, no drift
+        // seven engines, seven help-text entries, no drift
         assert_eq!(EngineKind::names_list().split('|').count(), EngineKind::ALL.len());
         let err = "warp".parse::<EngineKind>().expect_err("bogus engine must fail");
         assert!(err.to_string().contains("tiled"), "error should list accepted values");

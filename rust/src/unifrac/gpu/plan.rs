@@ -1,0 +1,179 @@
+//! The device-agnostic kernel plan: how a stripe-update dispatch is
+//! decomposed into workgroup tiles, and in what order their partial
+//! accumulators are folded back into the stripe block.
+//!
+//! The plan is the contract both executors share. The WGSL shaders
+//! ([`super::shaders`]) compile it into a real dispatch grid; the
+//! virtual device ([`super::vdev`]) interprets the identical grid on
+//! the CPU. Anything the plan pins down — tile sizes, remainder
+//! handling, the reduction order — is therefore testable offline and
+//! diffable against a real adapter run.
+
+/// Default workgroup tile width along the sample axis (threads per
+/// workgroup row; matches the WGSL `@workgroup_size` x-dimension).
+pub const DEFAULT_TILE_K: usize = 64;
+
+/// Default workgroup tile height along the stripe axis (matches the
+/// WGSL `@workgroup_size` y-dimension). `64 × 4 = 256` invocations per
+/// workgroup — the WebGPU baseline limit.
+pub const DEFAULT_TILE_S: usize = 4;
+
+/// One dispatch's geometry: a tile grid over `(stripes × samples)` with
+/// a pinned tile traversal order.
+///
+/// * the embedding batch is staged **column-major** (`[2N, E]`, sample
+///   index outer) so each (stripe, sample) cell folds a contiguous run
+///   of `E` values — the coalesced-load layout of the paper's §3;
+/// * every cell is owned by exactly one tile, each tile keeps its
+///   accumulators in registers and flushes **once per embedding batch**
+///   (the paper's Figure-2 access-pattern trick);
+/// * within a cell the fold runs over embeddings in ascending order,
+///   and tiles flush in ascending [`Tile::index`] order — the **pinned
+///   reduction order** that makes results bit-identical across thread
+///   counts and schedulers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelPlan {
+    /// Padded sample-chunk width `N` the stripes span.
+    pub n_samples: usize,
+    /// First global stripe of the block this plan updates.
+    pub stripe_start: usize,
+    /// Stripes covered by the dispatch.
+    pub n_stripes: usize,
+    /// Tile width along the sample axis (threads per workgroup row).
+    pub tile_k: usize,
+    /// Tile height along the stripe axis.
+    pub tile_s: usize,
+}
+
+/// One workgroup tile of a [`KernelPlan`]: local stripe rows
+/// `s0 .. s1` × sample columns `k0 .. k1` (remainder tiles at the grid
+/// edge are narrower/shorter — `k1 - k0 <= tile_k`, `s1 - s0 <= tile_s`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// Position in the pinned traversal order (row-major over the grid:
+    /// stripe-tiles outer, sample-tiles inner).
+    pub index: usize,
+    /// First local stripe row (inclusive).
+    pub s0: usize,
+    /// Last local stripe row (exclusive).
+    pub s1: usize,
+    /// First sample column (inclusive).
+    pub k0: usize,
+    /// Last sample column (exclusive).
+    pub k1: usize,
+}
+
+impl KernelPlan {
+    /// Plan a dispatch over stripes `stripe_start .. stripe_start +
+    /// n_stripes` of an `n_samples`-wide chunk. Zero tile dimensions
+    /// fall back to the defaults.
+    pub fn new(
+        n_samples: usize,
+        stripe_start: usize,
+        n_stripes: usize,
+        tile_k: usize,
+        tile_s: usize,
+    ) -> Self {
+        Self {
+            n_samples,
+            stripe_start,
+            n_stripes,
+            tile_k: if tile_k == 0 { DEFAULT_TILE_K } else { tile_k },
+            tile_s: if tile_s == 0 { DEFAULT_TILE_S } else { tile_s },
+        }
+    }
+
+    /// Dispatch grid `(gx, gy)`: workgroups along the sample and stripe
+    /// axes (ceiling division — edge tiles carry the remainders).
+    pub fn grid(&self) -> (usize, usize) {
+        (self.n_samples.div_ceil(self.tile_k), self.n_stripes.div_ceil(self.tile_s))
+    }
+
+    /// Workgroups one dispatch launches.
+    pub fn workgroups(&self) -> usize {
+        let (gx, gy) = self.grid();
+        gx * gy
+    }
+
+    /// Every tile of the grid, in the pinned traversal order (row-major:
+    /// stripe-tiles outer, sample-tiles inner). Both executors iterate
+    /// this exact sequence; the virtual device also *flushes* in this
+    /// order, which is what makes its output independent of how many
+    /// threads computed the tiles.
+    pub fn tiles(&self) -> Vec<Tile> {
+        let (gx, gy) = self.grid();
+        let mut out = Vec::with_capacity(gx * gy);
+        for ty in 0..gy {
+            let s0 = ty * self.tile_s;
+            let s1 = (s0 + self.tile_s).min(self.n_stripes);
+            for tx in 0..gx {
+                let k0 = tx * self.tile_k;
+                let k1 = (k0 + self.tile_k).min(self.n_samples);
+                out.push(Tile { index: out.len(), s0, s1, k0, k1 });
+            }
+        }
+        out
+    }
+
+    /// Bytes one dispatch stages to the device: the column-major
+    /// embedding buffer (`2N × E`) plus the branch lengths (`E`), at
+    /// `fp_bytes` per element.
+    pub fn staged_bytes(&self, filled: usize, fp_bytes: usize) -> u64 {
+        ((2 * self.n_samples * filled + filled) * fp_bytes) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_partition_the_cell_space() {
+        // every (stripe, sample) cell owned by exactly one tile, for
+        // shapes where neither axis divides its tile size
+        for (n, s, tk, ts) in [(33usize, 9usize, 13usize, 4usize), (1, 1, 64, 4), (64, 32, 64, 4)]
+        {
+            let plan = KernelPlan::new(n, 0, s, tk, ts);
+            let mut owned = vec![0u32; n * s];
+            for t in plan.tiles() {
+                assert!(t.k1 - t.k0 <= tk && t.s1 - t.s0 <= ts, "{t:?}");
+                for sl in t.s0..t.s1 {
+                    for k in t.k0..t.k1 {
+                        owned[sl * n + k] += 1;
+                    }
+                }
+            }
+            assert!(owned.iter().all(|&c| c == 1), "n={n} s={s} tk={tk} ts={ts}");
+            assert_eq!(plan.tiles().len(), plan.workgroups());
+        }
+    }
+
+    #[test]
+    fn tile_order_is_pinned_row_major() {
+        let plan = KernelPlan::new(20, 2, 6, 8, 4);
+        let tiles = plan.tiles();
+        assert_eq!(plan.grid(), (3, 2));
+        for (i, t) in tiles.iter().enumerate() {
+            assert_eq!(t.index, i);
+        }
+        // stripe-tiles outer: the first gx tiles cover stripe rows 0..4
+        assert_eq!((tiles[0].s0, tiles[0].s1, tiles[0].k0, tiles[0].k1), (0, 4, 0, 8));
+        assert_eq!((tiles[2].k0, tiles[2].k1), (16, 20));
+        assert_eq!((tiles[3].s0, tiles[3].s1), (4, 6));
+    }
+
+    #[test]
+    fn zero_tile_dims_fall_back_to_defaults() {
+        let plan = KernelPlan::new(100, 0, 10, 0, 0);
+        assert_eq!(plan.tile_k, DEFAULT_TILE_K);
+        assert_eq!(plan.tile_s, DEFAULT_TILE_S);
+        assert_eq!(DEFAULT_TILE_K * DEFAULT_TILE_S, 256, "WebGPU workgroup baseline");
+    }
+
+    #[test]
+    fn staged_bytes_counts_columns_and_lengths() {
+        let plan = KernelPlan::new(10, 0, 5, 8, 4);
+        assert_eq!(plan.staged_bytes(3, 8), ((2 * 10 * 3 + 3) * 8) as u64);
+        assert_eq!(plan.staged_bytes(0, 4), 0);
+    }
+}

@@ -1,0 +1,220 @@
+//! WGSL compute shaders for the stripe-update kernel.
+//!
+//! The shaders are the device-side rendering of [`super::plan`]: one
+//! invocation per (sample, stripe) cell, a `@workgroup_size` matching
+//! [`super::plan::DEFAULT_TILE_K`] × [`super::plan::DEFAULT_TILE_S`],
+//! column-major staged embeddings so consecutive invocations of a
+//! workgroup row read consecutive addresses (coalesced loads), register
+//! accumulators folded over embeddings in ascending index order (the
+//! pinned reduction order), and exactly one read-modify-write of the
+//! output block per cell per dispatch (the paper's §3 "flush once per
+//! batch" trick).
+//!
+//! They ship as source constants: the host executor ([`super::host`])
+//! compiles them with `wgpu`/naga when the `gpu` feature is enabled and
+//! an adapter is present; offline they are validated structurally by
+//! the tests below and semantically by the virtual device
+//! ([`super::vdev`]), which interprets the same grid and order.
+
+/// Uniform parameter block layout shared by both shaders (field order
+/// and 16-byte alignment must match the host-side staging struct):
+/// `n` (padded sample width), `stripe_start`, `n_stripes`, `filled`
+/// (embeddings this dispatch), `metric` (see [`METRIC_CODES`]),
+/// `alpha` (generalized exponent), and two pad words.
+pub const PARAMS_WGSL: &str = "struct Params {
+    n: u32,
+    stripe_start: u32,
+    n_stripes: u32,
+    filled: u32,
+    metric: u32,
+    alpha: f32,
+    _pad0: u32,
+    _pad1: u32,
+};
+";
+
+/// `Params.metric` codes: `(code, metric name)`. Weighted-unnormalized
+/// doubles as EMD (they are definitionally the same distance).
+pub const METRIC_CODES: [(u32, &str); 4] = [
+    (0, "unweighted"),
+    (1, "weighted_normalized"),
+    (2, "weighted_unnormalized/emd"),
+    (3, "generalized"),
+];
+
+/// f32 stripe-update kernel. Runs on every WebGPU adapter.
+pub const WGSL_STRIPE_F32: &str = "// UniFrac stripe update, f32.
+// One invocation per (sample k, local stripe s) cell.
+struct Params {
+    n: u32,
+    stripe_start: u32,
+    n_stripes: u32,
+    filled: u32,
+    metric: u32,
+    alpha: f32,
+    _pad0: u32,
+    _pad1: u32,
+};
+
+@group(0) @binding(0) var<uniform> params: Params;
+// column-major staged batch: emb_cols[k * filled + e], k in 0..2N
+@group(0) @binding(1) var<storage, read> emb_cols: array<f32>;
+@group(0) @binding(2) var<storage, read> lengths: array<f32>;
+// stripe block, row-major [n_stripes, n]
+@group(0) @binding(3) var<storage, read_write> num_acc: array<f32>;
+@group(0) @binding(4) var<storage, read_write> den_acc: array<f32>;
+
+fn metric_terms(u: f32, v: f32) -> vec2<f32> {
+    let d = abs(u - v);
+    switch params.metric {
+        case 0u: { return vec2<f32>(d, max(u, v)); }
+        case 1u: { return vec2<f32>(d, u + v); }
+        case 2u: { return vec2<f32>(d, 0.0); }
+        default: {
+            let s = u + v;
+            if (s > 0.0) {
+                let sa1 = pow(s, params.alpha - 1.0);
+                return vec2<f32>(sa1 * d, sa1 * s);
+            }
+            return vec2<f32>(0.0, 0.0);
+        }
+    }
+}
+
+@compute @workgroup_size(64, 4, 1)
+fn stripe_update(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let k = gid.x;
+    let s = gid.y;
+    if (k >= params.n || s >= params.n_stripes) { return; }
+    let e = params.filled;
+    // stripe s pairs sample k with k + start + s + 1 in the duplicated
+    // [mass|mass] row -- no modular wrap needed
+    let off = params.stripe_start + s + 1u;
+    var acc_n = 0.0;
+    var acc_d = 0.0;
+    // pinned reduction order: ascending embedding index
+    for (var i = 0u; i < e; i = i + 1u) {
+        let u = emb_cols[k * e + i];
+        let v = emb_cols[(k + off) * e + i];
+        let t = metric_terms(u, v);
+        let len = lengths[i];
+        acc_n = acc_n + t.x * len;
+        acc_d = acc_d + t.y * len;
+    }
+    // one flush per embedding batch (register accumulators)
+    let out = s * params.n + k;
+    num_acc[out] = num_acc[out] + acc_n;
+    den_acc[out] = den_acc[out] + acc_d;
+}
+";
+
+/// f64 stripe-update kernel. Requires the adapter feature `SHADER_F64`
+/// (`wgpu::Features::SHADER_F64`, naga's `f64` extension). The
+/// generalized-metric power is computed in f32 (`pow` has no f64
+/// overload in WGSL) — the f64 path is therefore exact only for the
+/// fixed metrics, which is what the conformance suite pins.
+pub const WGSL_STRIPE_F64: &str = "// UniFrac stripe update, f64 (requires SHADER_F64).
+struct Params {
+    n: u32,
+    stripe_start: u32,
+    n_stripes: u32,
+    filled: u32,
+    metric: u32,
+    alpha: f32,
+    _pad0: u32,
+    _pad1: u32,
+};
+
+@group(0) @binding(0) var<uniform> params: Params;
+@group(0) @binding(1) var<storage, read> emb_cols: array<f64>;
+@group(0) @binding(2) var<storage, read> lengths: array<f64>;
+@group(0) @binding(3) var<storage, read_write> num_acc: array<f64>;
+@group(0) @binding(4) var<storage, read_write> den_acc: array<f64>;
+
+fn metric_terms(u: f64, v: f64) -> vec2<f64> {
+    let d = abs(u - v);
+    switch params.metric {
+        case 0u: { return vec2<f64>(d, max(u, v)); }
+        case 1u: { return vec2<f64>(d, u + v); }
+        case 2u: { return vec2<f64>(d, f64(0.0)); }
+        default: {
+            let s = u + v;
+            if (s > 0.0) {
+                let sa1 = f64(pow(f32(s), params.alpha - 1.0));
+                return vec2<f64>(sa1 * d, sa1 * s);
+            }
+            return vec2<f64>(f64(0.0), f64(0.0));
+        }
+    }
+}
+
+@compute @workgroup_size(64, 4, 1)
+fn stripe_update(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let k = gid.x;
+    let s = gid.y;
+    if (k >= params.n || s >= params.n_stripes) { return; }
+    let e = params.filled;
+    let off = params.stripe_start + s + 1u;
+    var acc_n = f64(0.0);
+    var acc_d = f64(0.0);
+    for (var i = 0u; i < e; i = i + 1u) {
+        let u = emb_cols[k * e + i];
+        let v = emb_cols[(k + off) * e + i];
+        let t = metric_terms(u, v);
+        let len = lengths[i];
+        acc_n = acc_n + t.x * len;
+        acc_d = acc_d + t.y * len;
+    }
+    let out = s * params.n + k;
+    num_acc[out] = num_acc[out] + acc_n;
+    den_acc[out] = den_acc[out] + acc_d;
+}
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::unifrac::gpu::plan::{DEFAULT_TILE_K, DEFAULT_TILE_S};
+
+    #[test]
+    fn workgroup_size_matches_plan_defaults() {
+        let tag = format!("@workgroup_size({DEFAULT_TILE_K}, {DEFAULT_TILE_S}, 1)");
+        assert!(WGSL_STRIPE_F32.contains(&tag), "f32 shader must tile {tag}");
+        assert!(WGSL_STRIPE_F64.contains(&tag), "f64 shader must tile {tag}");
+    }
+
+    #[test]
+    fn shaders_declare_the_five_bindings_and_entry_point() {
+        for (name, src) in [("f32", WGSL_STRIPE_F32), ("f64", WGSL_STRIPE_F64)] {
+            for binding in 0..5 {
+                assert!(src.contains(&format!("@binding({binding})")), "{name}: binding {binding}");
+            }
+            assert!(src.contains("fn stripe_update"), "{name}: entry point");
+            assert!(src.contains("@compute"), "{name}: compute stage");
+            assert!(src.contains("var<uniform> params"), "{name}: params uniform");
+        }
+    }
+
+    #[test]
+    fn params_block_is_shared_verbatim() {
+        // both shaders embed the exact PARAMS_WGSL struct, so the host
+        // staging layout cannot drift per-precision
+        let body = PARAMS_WGSL.trim_end();
+        assert!(WGSL_STRIPE_F32.contains(body));
+        assert!(WGSL_STRIPE_F64.contains(body));
+    }
+
+    #[test]
+    fn f64_shader_uses_f64_storage() {
+        assert!(WGSL_STRIPE_F64.contains("array<f64>"));
+        assert!(!WGSL_STRIPE_F32.contains("f64"), "f32 shader must run without SHADER_F64");
+    }
+
+    #[test]
+    fn metric_codes_cover_the_switch() {
+        assert_eq!(METRIC_CODES.len(), 4);
+        for (code, _) in METRIC_CODES.iter().take(3) {
+            assert!(WGSL_STRIPE_F32.contains(&format!("case {code}u:")));
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! The deterministic virtual device: a CPU interpreter for the GPU
+//! [`KernelPlan`].
+//!
+//! The virtual device executes the *same* dispatch grid, tile sizes,
+//! remainder handling, and reduction order the WGSL shaders encode —
+//! it stages the embedding batch into the column-major device layout,
+//! runs one "thread" per (stripe, sample) cell with register
+//! accumulators, and flushes each tile once per batch. That makes every
+//! scheduling/tiling decision of the device path testable offline and
+//! in CI with no adapter present, and gives real-adapter runs a
+//! bit-exact (f64) / bounded (f32) reference to diff against.
+//!
+//! Determinism contract: the output is **bit-identical for any
+//! `threads` value**. Tiles own disjoint output cells, each cell folds
+//! its embeddings in ascending order (the pinned reduction order), and
+//! tile accumulators are flushed serially in ascending [`Tile::index`]
+//! order after all tiles of a dispatch complete.
+
+use super::plan::{KernelPlan, Tile};
+use super::StripeKernel;
+use crate::embed::EmbBatch;
+use crate::matrix::StripeBlock;
+use crate::unifrac::metric::MetricOps;
+use crate::unifrac::Metric;
+use crate::util::Real;
+
+/// Counters one [`StripeKernel::dispatch`] call reports back.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DispatchStats {
+    /// Workgroups the dispatch launched (grid cells, remainder tiles
+    /// included).
+    pub workgroups: u64,
+    /// Bytes staged host→device for the dispatch (column-major
+    /// embedding buffer + branch lengths).
+    pub bytes_staged: u64,
+}
+
+/// CPU interpreter for [`KernelPlan`] dispatches.
+///
+/// `threads > 1` computes tile accumulators on scoped worker threads
+/// (round-robin over the pinned tile order) purely to *prove* the
+/// determinism contract under concurrency; the flush stays serial and
+/// pinned, so any thread count produces bit-identical output.
+#[derive(Clone, Copy, Debug)]
+pub struct VirtualDevice {
+    threads: usize,
+}
+
+/// Per-tile register accumulators, flushed once per dispatch.
+struct TileAcc<R> {
+    num: Vec<R>,
+    den: Vec<R>,
+}
+
+impl VirtualDevice {
+    /// Single-threaded interpreter (the engine default).
+    pub fn new() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// Interpreter computing tiles on `threads` worker threads. Output
+    /// is bit-identical to [`VirtualDevice::new`] by the pinned flush
+    /// order.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    fn dispatch_ops<R: Real, M: MetricOps<R> + Send + Sync>(
+        &self,
+        plan: &KernelPlan,
+        ops: M,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) -> DispatchStats {
+        assert_eq!(plan.n_samples, block.n_samples(), "plan/block width mismatch");
+        assert_eq!(plan.stripe_start, block.start(), "plan/block stripe start mismatch");
+        assert_eq!(plan.n_stripes, block.n_stripes(), "plan/block stripe count mismatch");
+        assert_eq!(plan.n_samples, batch.n_samples, "plan/batch width mismatch");
+
+        let e = batch.filled;
+        let two_n = 2 * plan.n_samples;
+
+        // Stage host→device: transpose the batch's row-major [E, 2N]
+        // rows into the column-major [2N, E] device buffer, so each
+        // cell's fold reads a contiguous column (the coalesced layout).
+        let mut staged = vec![R::ZERO; two_n * e];
+        for (row_idx, (row, _len)) in batch.rows().enumerate() {
+            for (k, &x) in row.iter().enumerate() {
+                staged[k * e + row_idx] = x;
+            }
+        }
+        let lengths = &batch.lengths[..e];
+
+        let tiles = plan.tiles();
+        let mut slots: Vec<Option<TileAcc<R>>> = (0..tiles.len()).map(|_| None).collect();
+        let threads = self.threads.min(tiles.len().max(1));
+        if threads <= 1 {
+            for (slot, tile) in slots.iter_mut().zip(&tiles) {
+                *slot = Some(run_tile(ops, tile, plan, &staged, lengths, e));
+            }
+        } else {
+            let computed: Vec<Vec<(usize, TileAcc<R>)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|tid| {
+                        let tiles = &tiles;
+                        let staged = &staged;
+                        s.spawn(move || {
+                            tiles
+                                .iter()
+                                .enumerate()
+                                .skip(tid)
+                                .step_by(threads)
+                                .map(|(i, t)| (i, run_tile(ops, t, plan, staged, lengths, e)))
+                                .collect()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("vdev worker panicked")).collect()
+            });
+            for chunk in computed {
+                for (i, acc) in chunk {
+                    slots[i] = Some(acc);
+                }
+            }
+        }
+
+        // Serial flush in ascending tile order — the pinned reduction
+        // order. One read-modify-write of the block per tile per batch.
+        for (tile, slot) in tiles.iter().zip(slots) {
+            let acc = slot.expect("tile result missing");
+            let w = tile.k1 - tile.k0;
+            for sl in tile.s0..tile.s1 {
+                let (num_row, den_row) = block.rows_mut(sl);
+                let base = (sl - tile.s0) * w;
+                for (j, k) in (tile.k0..tile.k1).enumerate() {
+                    num_row[k] += acc.num[base + j];
+                    den_row[k] += acc.den[base + j];
+                }
+            }
+        }
+
+        DispatchStats {
+            workgroups: plan.workgroups() as u64,
+            bytes_staged: plan.staged_bytes(e, R::BYTES),
+        }
+    }
+}
+
+impl Default for VirtualDevice {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R: Real> StripeKernel<R> for VirtualDevice {
+    fn name(&self) -> &'static str {
+        "vdev"
+    }
+
+    fn supports_f64(&self) -> bool {
+        true
+    }
+
+    fn dispatch(
+        &self,
+        plan: &KernelPlan,
+        metric: Metric,
+        batch: &EmbBatch<R>,
+        block: &mut StripeBlock<R>,
+    ) -> DispatchStats {
+        crate::with_metric_ops!(metric, ops, self.dispatch_ops(plan, ops, batch, block))
+    }
+}
+
+/// Interpret one workgroup tile: per-cell register accumulators folding
+/// the staged columns over embeddings in ascending order — exactly the
+/// per-cell order the scalar batched/tiled engines use, which is why
+/// the f64 virtual device is bit-identical to them.
+fn run_tile<R: Real, M: MetricOps<R>>(
+    ops: M,
+    tile: &Tile,
+    plan: &KernelPlan,
+    staged: &[R],
+    lengths: &[R],
+    e: usize,
+) -> TileAcc<R> {
+    let w = tile.k1 - tile.k0;
+    let h = tile.s1 - tile.s0;
+    let mut num = vec![R::ZERO; h * w];
+    let mut den = vec![R::ZERO; h * w];
+    for sl in tile.s0..tile.s1 {
+        // stripe sl pairs sample k with k + start + sl + 1 in the
+        // duplicated [mass|mass] row — no modular arithmetic needed
+        let off = plan.stripe_start + sl + 1;
+        let base = (sl - tile.s0) * w;
+        for k in tile.k0..tile.k1 {
+            let u_col = &staged[k * e..(k + 1) * e];
+            let v_col = &staged[(k + off) * e..(k + off + 1) * e];
+            let mut acc_n = R::ZERO;
+            let mut acc_d = R::ZERO;
+            for ((&u, &v), &len) in u_col.iter().zip(v_col).zip(lengths) {
+                let (tn, td) = ops.terms(u, v);
+                acc_n += tn * len;
+                acc_d += td * len;
+            }
+            num[base + k - tile.k0] = acc_n;
+            den[base + k - tile.k0] = acc_d;
+        }
+    }
+    TileAcc { num, den }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_batch(n: usize, rows: usize, seed: u64) -> EmbBatch<f64> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut batch = EmbBatch {
+            n_samples: n,
+            filled: rows,
+            capacity: rows,
+            emb: vec![0.0; rows * 2 * n],
+            lengths: vec![0.0; rows],
+        };
+        for e in 0..rows {
+            for k in 0..n {
+                let x = if rng.f64() < 0.3 { 0.0 } else { rng.f64() };
+                batch.emb[e * 2 * n + k] = x;
+                batch.emb[e * 2 * n + n + k] = x;
+            }
+            batch.lengths[e] = 0.05 + rng.f64();
+        }
+        batch
+    }
+
+    fn dispatch_with(threads: usize, tile_k: usize, tile_s: usize) -> StripeBlock<f64> {
+        let n = 33;
+        let n_stripes = 9;
+        let mut block = StripeBlock::new(n, 2, n_stripes);
+        let dev = VirtualDevice::with_threads(threads);
+        for seed in [7, 8] {
+            let batch = random_batch(n, 11, seed);
+            let plan = KernelPlan::new(n, 2, n_stripes, tile_k, tile_s);
+            StripeKernel::<f64>::dispatch(
+                &dev,
+                &plan,
+                Metric::WeightedNormalized,
+                &batch,
+                &mut block,
+            );
+        }
+        block
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let base = dispatch_with(1, 13, 4);
+        for threads in [2, 3, 8, 64] {
+            let other = dispatch_with(threads, 13, 4);
+            assert_eq!(base.max_abs_diff(&other), 0.0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tile_shape_does_not_change_results() {
+        // different grids reorder tile ownership but never the per-cell
+        // fold, so any tiling agrees bit-for-bit
+        let base = dispatch_with(1, 13, 4);
+        for (tk, ts) in [(1, 1), (64, 4), (5, 2), (33, 9)] {
+            let other = dispatch_with(4, tk, ts);
+            assert_eq!(base.max_abs_diff(&other), 0.0, "tile=({tk},{ts})");
+        }
+    }
+
+    #[test]
+    fn dispatch_stats_count_workgroups_and_bytes() {
+        let n = 10;
+        let mut block = StripeBlock::new(n, 0, 5);
+        let batch = random_batch(n, 4, 1);
+        let plan = KernelPlan::new(n, 0, 5, 8, 4);
+        let stats = StripeKernel::<f64>::dispatch(
+            &VirtualDevice::new(),
+            &plan,
+            Metric::Unweighted,
+            &batch,
+            &mut block,
+        );
+        assert_eq!(stats.workgroups, 2 * 2);
+        assert_eq!(stats.bytes_staged, plan.staged_bytes(4, 8));
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let n = 6;
+        let mut block = StripeBlock::new(n, 0, 3);
+        let batch = EmbBatch::<f64>::new(n, 4);
+        let plan = KernelPlan::new(n, 0, 3, 64, 4);
+        let stats = StripeKernel::<f64>::dispatch(
+            &VirtualDevice::with_threads(4),
+            &plan,
+            Metric::WeightedUnnormalized,
+            &batch,
+            &mut block,
+        );
+        assert_eq!(stats.bytes_staged, 0);
+        let empty = StripeBlock::new(n, 0, 3);
+        assert_eq!(block.max_abs_diff(&empty), 0.0);
+    }
+}

@@ -1,15 +1,17 @@
-//! The UniFrac core: metrics, the six stripe compute engines (the
-//! paper's four optimization stages plus the bit-packed unweighted
-//! kernel and the sparse CSR weighted kernel), the naive oracle, and
-//! the high-level driver.
+//! The UniFrac core: metrics, the seven stripe compute engines (the
+//! paper's four optimization stages, the bit-packed unweighted kernel,
+//! the sparse CSR weighted kernel, and the GPU device engine with its
+//! deterministic virtual device), the naive oracle, and the high-level
+//! driver.
 
 // bitpack/naive/sparse predate the ISSUE-5 missing_docs gate (see
-// lib.rs ledger); engines/metric/compute are fully documented.
+// lib.rs ledger); engines/metric/compute/gpu are fully documented.
 #[allow(missing_docs)]
 pub mod bitpack;
 pub mod compute;
 pub mod emd;
 pub mod engines;
+pub mod gpu;
 pub mod metric;
 #[allow(missing_docs)]
 pub mod naive;
@@ -21,6 +23,7 @@ pub use bitpack::{PackedBatch, PackedEngine};
 pub use compute::{compute_unifrac, compute_unifrac_report, ComputeOptions, ComputeReport};
 pub use emd::{emd_flows, DiffAbundance, FlowRow};
 pub use engines::{make_engine, make_engine_with, EngineKind, EngineStats, StripeEngine};
+pub use gpu::{GpuEngine, GPU_F32_TOLERANCE, GPU_VDEV_ENV};
 pub use metric::Metric;
 pub use naive::compute_unifrac_naive;
 pub use simd::{CpuFeatures, KernelPath, FORCE_SCALAR_ENV};

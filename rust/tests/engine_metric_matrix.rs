@@ -1,0 +1,115 @@
+//! Engine × metric exhaustiveness matrix (ISSUE 10 satellite).
+//!
+//! Every `(EngineKind, Metric)` pair either computes correct distances
+//! (checked against the naive oracle) or fails with a *typed*
+//! `Error::Unsupported` — never a panic, never a silently wrong answer.
+//! The engine arm is an **exhaustive `match` with no wildcard**, so the
+//! compiler forces this suite to take a position on every engine added
+//! in the future; the metric list comes from `Metric::all`, the single
+//! source the CLI and config layers also derive from.
+
+use unifrac::synth::SynthSpec;
+use unifrac::table::FeatureTable;
+use unifrac::tree::Phylogeny;
+use unifrac::unifrac::{
+    compute_unifrac, compute_unifrac_naive, ComputeOptions, EngineKind, Metric,
+};
+use unifrac::Error;
+
+fn problem() -> (Phylogeny, FeatureTable) {
+    SynthSpec { n_samples: 20, n_features: 256, density: 0.25, seed: 404, ..Default::default() }
+        .generate()
+}
+
+/// What the matrix expects of one cell.
+enum Cell {
+    /// Engine computes the metric; output must match the oracle.
+    Computes,
+    /// Engine rejects the metric with `Error::Unsupported`.
+    Unsupported,
+}
+
+/// The support table, stated *independently* of `EngineKind::supports`
+/// so a regression in that method cannot hide from this suite. The
+/// match is exhaustive on purpose: adding an engine without extending
+/// this test is a compile error.
+fn expected(engine: EngineKind, metric: Metric) -> Cell {
+    match engine {
+        EngineKind::Original => Cell::Computes,
+        EngineKind::Unified => Cell::Computes,
+        EngineKind::Batched => Cell::Computes,
+        EngineKind::Tiled => Cell::Computes,
+        EngineKind::Packed => {
+            if metric == Metric::Unweighted {
+                Cell::Computes
+            } else {
+                Cell::Unsupported
+            }
+        }
+        EngineKind::Sparse => {
+            if metric == Metric::Unweighted {
+                Cell::Unsupported
+            } else {
+                Cell::Computes
+            }
+        }
+        // every metric; availability is the adapter's problem, and the
+        // vdev adapter below makes these cells runnable on any host
+        EngineKind::Gpu => Cell::Computes,
+    }
+}
+
+#[test]
+fn every_engine_metric_pair_computes_or_is_typed_unsupported() {
+    let (tree, table) = problem();
+    for metric in Metric::all(0.5) {
+        let oracle = compute_unifrac_naive(&tree, &table, metric).unwrap();
+        for engine in EngineKind::ALL {
+            let opts = ComputeOptions {
+                metric,
+                engine: Some(engine),
+                // always-accepted virtual device, so the gpu cells run
+                // (and the CPU cells ignore the field) on adapterless CI
+                gpu_adapter: "vdev".to_string(),
+                ..Default::default()
+            };
+            let label = format!("{} × {metric}", engine.name());
+            match (expected(engine, metric), compute_unifrac::<f64>(&tree, &table, &opts)) {
+                (Cell::Computes, Ok(dm)) => {
+                    let diff = dm.max_abs_diff(&oracle);
+                    assert!(diff < 1e-10, "{label}: oracle diff {diff:e}");
+                }
+                (Cell::Computes, Err(e)) => panic!("{label}: expected a result, got {e:?}"),
+                (Cell::Unsupported, Err(e)) => {
+                    assert!(
+                        matches!(e, Error::Unsupported(_)),
+                        "{label}: expected Error::Unsupported, got {e:?}"
+                    );
+                }
+                (Cell::Unsupported, Ok(_)) => {
+                    panic!("{label}: engine claims support it must not have")
+                }
+            }
+        }
+    }
+}
+
+/// The independently-stated table above and the production
+/// `EngineKind::supports` gate must agree cell-for-cell (the gpu rows
+/// agree because `supports` is metric-only; adapter gating happens at
+/// selection, which the matrix test exercises through the vdev adapter).
+#[test]
+fn support_table_matches_engine_declarations() {
+    for metric in Metric::all(0.5) {
+        for engine in EngineKind::ALL {
+            let declared = engine.supports(metric);
+            let tabled = matches!(expected(engine, metric), Cell::Computes);
+            assert_eq!(
+                declared,
+                tabled,
+                "{} × {metric}: supports() = {declared}, matrix table = {tabled}",
+                engine.name()
+            );
+        }
+    }
+}

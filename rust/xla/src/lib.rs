@@ -31,7 +31,10 @@ pub type Result<T> = std::result::Result<T, Error>;
 fn unavailable() -> Error {
     Error(
         "PJRT backend unavailable: this build uses the offline xla stub \
-         (vendor the real xla crate at rust/xla to execute AOT artifacts)"
+         (vendor the real xla crate at rust/xla to execute AOT artifacts). \
+         For device execution without PJRT, use the portable GPU stripe \
+         engine instead: --backend cpu --engine gpu (see docs/gpu.md; \
+         --gpu-adapter vdev runs its deterministic virtual device anywhere)"
             .to_string(),
     )
 }
@@ -170,7 +173,11 @@ mod tests {
     #[test]
     fn client_reports_unavailable() {
         let err = PjRtClient::cpu().err().expect("stub client must not construct");
-        assert!(err.to_string().contains("stub"));
+        let msg = err.to_string();
+        assert!(msg.contains("stub"));
+        // the message must route users to the portable device engine
+        assert!(msg.contains("--engine gpu"), "{msg:?}");
+        assert!(msg.contains("docs/gpu.md"), "{msg:?}");
     }
 
     #[test]
